@@ -1,0 +1,118 @@
+//! Near-duplicate document detection with w-shingles + OPH — the classic
+//! MinHash application (Broder '97; Manku et al. WWW'07 cited in §1).
+//!
+//! ```bash
+//! cargo run --release --example dedup
+//! ```
+//!
+//! Builds a small corpus with planted near-duplicates, shingles every
+//! document (w = 5 bytes), re-ranks shingle ids by frequency (the
+//! small-ids-for-frequent-shingles structure §4.1 argues breaks weak
+//! hashing), and finds duplicate clusters through the LSH index.
+
+use mixtab::data::shingle::{byte_shingles, frequency_rank_ids};
+use mixtab::hash::HashFamily;
+use mixtab::lsh::{LshIndex, LshParams};
+use mixtab::sketch::estimators::jaccard_sorted;
+use mixtab::util::rng::Xoshiro256;
+
+const TEMPLATES: &[&str] = &[
+    "the quick brown fox jumps over the lazy dog while the cat watches quietly from the fence",
+    "practical hash functions for similarity estimation and dimensionality reduction in machine learning",
+    "one permutation hashing with densification is the fast replacement for classic minwise hashing",
+    "locality sensitive hashing retrieves near neighbours in sublinear time given a good sketch",
+    "mixed tabulation hashing is almost as fast as multiply shift and provably strong in applications",
+];
+
+fn mutate(text: &str, edits: usize, rng: &mut Xoshiro256) -> String {
+    let mut words: Vec<String> = text.split_whitespace().map(str::to_string).collect();
+    for _ in 0..edits {
+        let i = rng.range(0, words.len());
+        match rng.below(3) {
+            0 => words[i] = format!("{}x", words[i]),          // typo
+            1 => words[i] = words[i].to_uppercase(),           // case change
+            _ => {
+                let j = rng.range(0, words.len());
+                words.swap(i, j); // transposition
+            }
+        }
+    }
+    words.join(" ")
+}
+
+fn main() {
+    let mut rng = Xoshiro256::new(2024);
+
+    // Corpus: per template, one original + several light edits (near-dups)
+    // + heavy edits (borderline) — plus unrelated noise documents.
+    let mut docs: Vec<(String, usize)> = Vec::new(); // (text, template id)
+    for (t, tpl) in TEMPLATES.iter().enumerate() {
+        docs.push((tpl.to_string(), t));
+        for _ in 0..4 {
+            docs.push((mutate(tpl, 2, &mut rng), t));
+        }
+        for _ in 0..2 {
+            docs.push((mutate(tpl, 8, &mut rng), t));
+        }
+    }
+    for n in 0..30u64 {
+        // Unique random tokens per document so noise docs share no shingles.
+        let mut noise_rng = Xoshiro256::new(0xBAD5EED ^ n);
+        let words: Vec<String> = (0..14)
+            .map(|_| format!("{:012x}", noise_rng.next_u64() & 0xFFFF_FFFF_FFFF))
+            .collect();
+        docs.push((words.join(" "), usize::MAX));
+    }
+    println!("corpus: {} documents ({} templates + noise)", docs.len(), TEMPLATES.len());
+
+    // Shingle + frequency-rank the ids (realistic id assignment).
+    let shingled: Vec<Vec<u32>> = docs.iter().map(|(d, _)| byte_shingles(d, 5)).collect();
+    let ranked = frequency_rank_ids(&shingled);
+
+    // Index every document.
+    let mut index = LshIndex::new(LshParams::new(6, 12), HashFamily::MixedTab, 7);
+    for (i, s) in ranked.iter().enumerate() {
+        index.insert(i as u32, s);
+    }
+
+    // Cluster: query each doc, keep candidates verified at J ≥ 0.5.
+    let mut reported = std::collections::HashSet::new();
+    let mut clusters = 0;
+    let mut pairs_found = 0;
+    let mut pairs_correct = 0;
+    for (i, s) in ranked.iter().enumerate() {
+        if reported.contains(&(i as u32)) {
+            continue;
+        }
+        let mut cluster: Vec<u32> = index
+            .query(s)
+            .into_iter()
+            .filter(|&c| c as usize != i)
+            .filter(|&c| jaccard_sorted(s, &ranked[c as usize]) >= 0.5)
+            .collect();
+        if cluster.is_empty() {
+            continue;
+        }
+        cluster.push(i as u32);
+        cluster.sort_unstable();
+        clusters += 1;
+        println!("\ncluster {clusters} (template {}):", docs[i].1);
+        for &c in &cluster {
+            reported.insert(c);
+            let j = jaccard_sorted(s, &ranked[c as usize]);
+            println!("  [{c:>3}] J={j:.2} {}", &docs[c as usize].0[..60.min(docs[c as usize].0.len())]);
+            if c as usize != i {
+                pairs_found += 1;
+                if docs[c as usize].1 == docs[i].1 {
+                    pairs_correct += 1;
+                }
+            }
+        }
+    }
+    println!(
+        "\nfound {clusters} clusters; {pairs_correct}/{pairs_found} verified links share a template"
+    );
+    assert!(clusters >= TEMPLATES.len(), "missed planted duplicate clusters");
+    assert_eq!(pairs_correct, pairs_found, "false-positive cluster link");
+    println!("dedup OK");
+}

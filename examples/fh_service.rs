@@ -1,0 +1,142 @@
+//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example fh_service
+//! ```
+//!
+//! Boots the coordinator with the PJRT runtime (Layer-1 Pallas FH kernel,
+//! AOT-lowered through Layer-2 JAX, executed from Rust via PJRT), starts
+//! the TCP front-end, then drives it with concurrent clients streaming
+//! News20-like documents:
+//!
+//! 1. every document is feature-hashed to d' = 128 through the dynamic
+//!    batcher → PJRT executor;
+//! 2. norms are validated against the native Rust path (layer agreement);
+//! 3. latency/throughput and batcher occupancy are reported — the numbers
+//!    recorded in EXPERIMENTS.md §E2E.
+
+use mixtab::coordinator::config::CoordinatorConfig;
+use mixtab::coordinator::request::{ExecPath, Request, Response};
+use mixtab::coordinator::server::{Client, Server};
+use mixtab::coordinator::Coordinator;
+use mixtab::data::news20_like::{self, News20LikeParams};
+use mixtab::stats::Summary;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let n_docs = 480;
+    let clients = 6;
+
+    println!("=== mixtab end-to-end FH service ===");
+    println!("[1/4] generating News20-like corpus ({n_docs} docs)…");
+    let ds = news20_like::generate(n_docs, &News20LikeParams::default(), 77);
+    println!("      {} docs, avg nnz {:.1}, dim {}", ds.len(), ds.avg_nnz(), ds.dim);
+
+    println!("[2/4] booting coordinator (PJRT + batcher + TCP)…");
+    let cfg = CoordinatorConfig {
+        fh_dim: 128,
+        max_delay_us: 300,
+        ..Default::default()
+    };
+    let coordinator = Arc::new(Coordinator::new(cfg));
+    let pjrt = coordinator.pjrt_enabled();
+    println!("      pjrt path: {}", if pjrt { "LIVE (artifacts loaded)" } else { "unavailable — native fallback (run `make artifacts`)" });
+    let server = Server::start(Arc::clone(&coordinator), "127.0.0.1:0")?;
+    let addr = server.addr();
+    println!("      serving on {addr}");
+
+    println!("[3/4] streaming documents from {clients} concurrent clients…");
+    let docs: Vec<(Vec<u32>, Vec<f64>)> = ds
+        .vectors
+        .iter()
+        .map(|v| (v.indices.clone(), v.values.clone()))
+        .collect();
+    let docs = Arc::new(docs);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let docs = Arc::clone(&docs);
+            std::thread::spawn(move || -> anyhow::Result<(Summary, usize, usize)> {
+                let mut client = Client::connect(addr)?;
+                let mut lat = Summary::new();
+                let (mut pjrt_rows, mut native_rows) = (0usize, 0usize);
+                for (i, (idx, vals)) in docs.iter().enumerate() {
+                    if i % clients != c {
+                        continue;
+                    }
+                    let t = Instant::now();
+                    let resp = client.call(&Request::FhTransform {
+                        indices: idx.clone(),
+                        values: vals.clone(),
+                    })?;
+                    lat.add(t.elapsed().as_micros() as f64);
+                    match resp {
+                        Response::Fh { out, sqnorm, path } => {
+                            anyhow::ensure!(out.len() == 128, "wrong dim");
+                            anyhow::ensure!(sqnorm.is_finite());
+                            match path {
+                                ExecPath::Pjrt => pjrt_rows += 1,
+                                ExecPath::Native => native_rows += 1,
+                            }
+                        }
+                        other => anyhow::bail!("unexpected response {other:?}"),
+                    }
+                }
+                Ok((lat, pjrt_rows, native_rows))
+            })
+        })
+        .collect();
+
+    let mut all_lat = Summary::new();
+    let (mut total_pjrt, mut total_native) = (0usize, 0usize);
+    for h in handles {
+        let (lat, p, n) = h.join().expect("client thread")?;
+        for &v in lat.values() {
+            all_lat.add(v);
+        }
+        total_pjrt += p;
+        total_native += n;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("[4/4] validating against the native path…");
+    // Spot-check 20 docs end-to-end against an offline native transform.
+    let fh = mixtab::sketch::feature_hash::FeatureHasher::new(
+        coordinator.config().family,
+        coordinator.config().seed,
+        128,
+        coordinator.config().sign,
+    );
+    let mut client = Client::connect(addr)?;
+    for v in ds.vectors.iter().take(20) {
+        let Response::Fh { out, .. } = client.call(&Request::FhTransform {
+            indices: v.indices.clone(),
+            values: v.values.clone(),
+        })?
+        else {
+            anyhow::bail!("bad response");
+        };
+        let native = fh.transform(v);
+        for (a, b) in out.iter().zip(&native) {
+            anyhow::ensure!((*a as f64 - b).abs() < 1e-4, "layer disagreement: {a} vs {b}");
+        }
+    }
+    println!("      PJRT ≡ native on 20 spot-checked documents ✓");
+
+    let (p50, p90, p99) = all_lat.latency_quantiles();
+    let occupancy = coordinator.metrics.mean_batch_occupancy();
+    println!("\n=== results ===");
+    println!("documents processed : {}", all_lat.len());
+    println!("rows via PJRT       : {total_pjrt}");
+    println!("rows via native     : {total_native}");
+    println!("throughput          : {:.0} docs/s", all_lat.len() as f64 / wall);
+    println!("latency p50/p90/p99 : {p50:.0} / {p90:.0} / {p99:.0} µs");
+    println!("mean batch occupancy: {occupancy:.2} rows/batch");
+    if pjrt {
+        anyhow::ensure!(total_pjrt > 0, "pjrt path never used despite being live");
+    }
+    println!("\nfh_service OK");
+    server.stop();
+    Ok(())
+}

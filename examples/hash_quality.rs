@@ -1,0 +1,73 @@
+//! Hash-quality diagnostics: avalanche matrices and dense-block bin
+//! occupancy for every family — a visual companion to §4.1's "why weak
+//! hashing fails on structured data".
+//!
+//! ```bash
+//! cargo run --release --example hash_quality
+//! ```
+
+use mixtab::hash::{HashFamily, Hasher32};
+use mixtab::util::rng::Xoshiro256;
+
+fn avalanche_score(h: &dyn Hasher32, trials: usize) -> f64 {
+    let mut rng = Xoshiro256::new(1);
+    let mut flips = 0u64;
+    for _ in 0..trials {
+        let x = rng.next_u32();
+        let bit = 1u32 << rng.below(32);
+        flips += (h.hash(x) ^ h.hash(x ^ bit)).count_ones() as u64;
+    }
+    flips as f64 / (trials as f64 * 32.0)
+}
+
+/// Variance of bin occupancy (mod 64) for the dense block [0, 2000) over
+/// seeds, relative to the binomial reference — the §4.1 mechanism: weak
+/// schemes map dense blocks *too evenly* (≪ 1) which biases OPH minima.
+fn occupancy_ratio(fam: HashFamily) -> f64 {
+    let k = 64usize;
+    let mut vars = Vec::new();
+    for seed in 0..30u64 {
+        let h = fam.build(seed);
+        let mut counts = vec![0f64; k];
+        for x in 0..2000u32 {
+            counts[(h.hash(x) as usize) % k] += 1.0;
+        }
+        let mean = 2000.0 / k as f64;
+        vars.push(counts.iter().map(|c| (c - mean).powi(2)).sum::<f64>() / k as f64);
+    }
+    vars.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = vars[vars.len() / 2];
+    let binomial = 2000.0 / k as f64 * (1.0 - 1.0 / k as f64);
+    median / binomial
+}
+
+fn main() {
+    println!(
+        "{:<20} {:>10} {:>22}",
+        "family", "avalanche", "occupancy var ratio"
+    );
+    println!("{:-<54}", "");
+    for &fam in HashFamily::TABLE1 {
+        let h = fam.build(42);
+        let trials = if fam == HashFamily::Blake2 { 500 } else { 5000 };
+        let av = avalanche_score(h.as_ref(), trials);
+        let occ = occupancy_ratio(fam);
+        println!(
+            "{:<20} {:>10.4} {:>22.3}  {}",
+            fam.id(),
+            av,
+            occ,
+            if av < 0.45 || !(0.5..2.0).contains(&occ) {
+                "← structured"
+            } else {
+                ""
+            }
+        );
+    }
+    println!(
+        "\navalanche: 0.5 = ideal bit diffusion; multiply-shift / polyhash are\n\
+         *not* designed to avalanche (low values expected).\n\
+         occupancy ratio: 1.0 = binomial (truly-random-like) bin counts on a\n\
+         dense id block; ≪1 means 'too even' — the §4.1 OPH bias mechanism."
+    );
+}

@@ -1,0 +1,73 @@
+//! Approximate near-neighbour search on MNIST-like data — the §4.2
+//! scenario as a standalone application.
+//!
+//! ```bash
+//! cargo run --release --example lsh_search [-- --family multiply_shift]
+//! ```
+//!
+//! Builds a (K=10, L=10) LSH index over OPH sketches, runs every query,
+//! and reports the Figure 5 metrics (recall@0.5, #retrieved/recall ratio)
+//! for the chosen basic hash function. Run once with `mixed_tab` (default)
+//! and once with `multiply_shift` to see the paper's contrast live.
+
+use mixtab::data::mnist_like;
+use mixtab::hash::HashFamily;
+use mixtab::lsh::metrics::{ground_truth_batch, BatchEval, QueryEval};
+use mixtab::lsh::{LshIndex, LshParams};
+use mixtab::util::threadpool::ThreadPool;
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let family = args
+        .iter()
+        .position(|a| a == "--family")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| HashFamily::parse(s))
+        .unwrap_or(HashFamily::MixedTab);
+
+    let (n_db, n_q) = (3000, 300);
+    println!("generating MNIST-like data: {n_db} database + {n_q} query points…");
+    let (db_ds, q_ds) = mnist_like::default_split(n_db, n_q, 42);
+    let db = db_ds.as_sets();
+    let queries = q_ds.as_sets();
+
+    println!("computing ground truth at T0 = 0.5…");
+    let pool = ThreadPool::new(mixtab::util::threadpool::default_parallelism());
+    let truth = ground_truth_batch(&pool, &db, &queries, 0.5);
+
+    println!("building LSH index (K=10, L=10) with {}…", family.label());
+    let t0 = Instant::now();
+    let mut index = LshIndex::new(LshParams::new(10, 10), family, 7);
+    for (i, s) in db.iter().enumerate() {
+        index.insert(i as u32, s);
+    }
+    println!(
+        "  built in {:.2?} — {} buckets, max bucket {}",
+        t0.elapsed(),
+        index.bucket_count(),
+        index.max_bucket()
+    );
+
+    let t1 = Instant::now();
+    let mut batch = BatchEval::default();
+    let mut answered = 0;
+    for (q, t) in queries.iter().zip(&truth) {
+        if t.is_empty() {
+            continue;
+        }
+        answered += 1;
+        let retrieved = index.query(q);
+        batch.push(QueryEval::evaluate(&retrieved, t, db.len()));
+    }
+    let q_time = t1.elapsed();
+
+    println!("\n=== results ({}) ===", family.label());
+    println!("queries with ≥1 true neighbour : {answered}");
+    println!("mean #retrieved per query      : {:.1}", batch.mean_retrieved());
+    println!("mean fraction of DB retrieved  : {:.4}", batch.mean_fraction_retrieved());
+    println!("mean recall@0.5                : {:.3}", batch.mean_recall());
+    println!("#retrieved / recall ratio      : {:.1}  (lower is better)", batch.ratio());
+    println!("query throughput               : {:.0}/s", answered as f64 / q_time.as_secs_f64());
+    println!("\n(try `--family multiply_shift` to reproduce the paper's Figure 5 contrast)");
+}

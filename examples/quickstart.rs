@@ -1,0 +1,59 @@
+//! Quickstart: the public API in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Covers the paper's three primitives — basic hashing, similarity
+//! estimation with OPH, and feature hashing — plus a micro LSH index.
+
+use mixtab::hash::HashFamily;
+use mixtab::lsh::{LshIndex, LshParams};
+use mixtab::sketch::feature_hash::{FeatureHasher, SignMode};
+use mixtab::sketch::jaccard_exact;
+use mixtab::sketch::oph::{BinLayout, OneHashSketcher};
+use mixtab::sketch::DensifyMode;
+
+fn main() {
+    // 1. Basic hash functions — the paper's variable. Mixed tabulation is
+    //    the recommended default: truly-random-like with proven guarantees.
+    let h = HashFamily::MixedTab.build(42);
+    println!("mixed_tab(1234567) = {:#010x}", h.hash(1_234_567));
+
+    // 2. Similarity estimation with OPH (one hash evaluation per element).
+    let a: Vec<u32> = (0..10_000).collect();
+    let b: Vec<u32> = (2_500..12_500).collect(); // J = 7500/12500 = 0.6
+    let sketcher = OneHashSketcher::new(
+        HashFamily::MixedTab.build(7),
+        256, // k bins → 256-coordinate sketch
+        BinLayout::Mod,
+        DensifyMode::Paper, // densification of Shrivastava & Li [33]
+    );
+    let (sa, sb) = (sketcher.sketch(&a), sketcher.sketch(&b));
+    println!(
+        "OPH estimate = {:.4}   (exact J = {:.4})",
+        sketcher.estimate(&sa, &sb),
+        jaccard_exact(&a, &b)
+    );
+
+    // 3. Feature hashing: 1M-dim sparse vector → 512 dims, norm preserved
+    //    (Theorem 1: concentration needs d' ≳ 16·ε⁻²·lg(1/δ)).
+    let v = mixtab::data::SparseVector::unit_indicator(
+        &(0..1000u32).map(|i| i * 997).collect::<Vec<_>>(),
+    );
+    let fh = FeatureHasher::new(HashFamily::MixedTab, 3, 512, SignMode::Paired);
+    let dense = fh.transform(&v);
+    let sq: f64 = dense.iter().map(|x| x * x).sum();
+    println!("FH: {} nnz -> {} dims, ‖v'‖² = {sq:.4} (target 1.0)", v.nnz(), dense.len());
+
+    // 4. LSH search over OPH sketches.
+    let mut index = LshIndex::new(LshParams::new(8, 10), HashFamily::MixedTab, 99);
+    for i in 0..100u32 {
+        let set: Vec<u32> = (i * 50..i * 50 + 500).collect(); // overlapping blocks
+        index.insert(i, &set);
+    }
+    let query: Vec<u32> = (20 * 50..20 * 50 + 500).collect();
+    let hits = index.query(&query);
+    println!("LSH query retrieved {} candidates (incl. exact match 20: {})",
+        hits.len(), hits.contains(&20));
+}

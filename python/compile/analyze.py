@@ -1,0 +1,96 @@
+"""L1/L2 structural performance analysis (the interpret-mode stand-in for
+TPU profiling — DESIGN.md §Perf).
+
+For each exportable model variant, reports:
+
+* HLO op histogram of the lowered module (fusion sanity: no stray
+  transposes/copies on the feed path);
+* VMEM footprint per Pallas grid step (must stay ≪ 16 MiB/core);
+* MXU work estimate for the FH one-hot contraction (128×128 passes) and
+  arithmetic intensity, giving the roofline-side argument that the kernel
+  is MXU-bound on real hardware.
+
+Usage: (cd python && python -m compile.analyze)
+"""
+
+import collections
+import re
+
+import jax
+import jax.numpy as jnp
+
+from compile.aot import FH_VARIANTS, OPH_VARIANTS, to_hlo_text
+from compile.model import fh_model, oph_model
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes per TPU core (v4/v5 order)
+MXU = 128  # systolic array edge
+
+
+def hlo_op_histogram(hlo: str) -> dict:
+    ops = collections.Counter()
+    for line in hlo.splitlines():
+        m = re.search(r"=\s+\S+\s+(\w+)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return dict(ops)
+
+
+def analyze_fh(batch, nnz, dim):
+    spec_i = jax.ShapeDtypeStruct((batch, nnz), jnp.int32)
+    spec_f = jax.ShapeDtypeStruct((batch, nnz), jnp.float32)
+    hlo = to_hlo_text(jax.jit(lambda b, v: fh_model(b, v, dim=dim)).lower(spec_i, spec_f))
+    ops = hlo_op_histogram(hlo)
+    # Per grid step (one batch row): one-hot [nnz, dim] f32 + operands + out.
+    vmem = nnz * dim * 4 + 2 * nnz * 4 + dim * 4
+    macs = nnz * dim  # (1 x nnz) @ (nnz x dim)
+    mxu_passes = -(-nnz // MXU) * -(-dim // MXU)
+    bytes_moved = 2 * nnz * 4 + dim * 4
+    intensity = macs / bytes_moved
+    return {
+        "name": f"fh_b{batch}_n{nnz}_d{dim}",
+        "vmem_step_kib": vmem / 1024,
+        "macs_per_row": macs,
+        "mxu_passes_per_row": mxu_passes,
+        "arith_intensity": intensity,
+        "transposes": ops.get("transpose", 0),
+        "custom_calls": ops.get("custom-call", 0),
+        "ops": sum(ops.values()),
+    }
+
+
+def analyze_oph(batch, nnz, k):
+    spec = jax.ShapeDtypeStruct((batch, nnz), jnp.int32)
+    hlo = to_hlo_text(jax.jit(lambda h, v: oph_model(h, v, k=k)).lower(spec, spec))
+    ops = hlo_op_histogram(hlo)
+    vmem = nnz * k * 4 + 2 * nnz * 4 + k * 4  # masked-min tile dominates
+    return {
+        "name": f"oph_b{batch}_n{nnz}_k{k}",
+        "vmem_step_kib": vmem / 1024,
+        "macs_per_row": 0,
+        "mxu_passes_per_row": 0,
+        "arith_intensity": 0.0,
+        "transposes": ops.get("transpose", 0),
+        "custom_calls": ops.get("custom-call", 0),
+        "ops": sum(ops.values()),
+    }
+
+
+def main() -> None:
+    rows = [analyze_fh(*v) for v in FH_VARIANTS] + [analyze_oph(*v) for v in OPH_VARIANTS]
+    hdr = f"{'variant':<22} {'VMEM/step':>10} {'%budget':>8} {'MACs/row':>10} {'MXU':>5} {'AI':>7} {'transp':>6} {'cc':>4}"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        pct = 100.0 * r["vmem_step_kib"] * 1024 / VMEM_BUDGET
+        print(
+            f"{r['name']:<22} {r['vmem_step_kib']:>8.0f}Ki {pct:>7.2f}% "
+            f"{r['macs_per_row']:>10} {r['mxu_passes_per_row']:>5} "
+            f"{r['arith_intensity']:>7.1f} {r['transposes']:>6} {r['custom_calls']:>4}"
+        )
+        assert r["vmem_step_kib"] * 1024 < VMEM_BUDGET, "VMEM budget exceeded"
+        assert r["custom_calls"] == 0, "Mosaic custom-call leaked (not interpretable)"
+    print("\nAll variants fit VMEM and lower to plain HLO (no custom-calls).")
+
+
+if __name__ == "__main__":
+    main()

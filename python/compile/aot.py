@@ -1,0 +1,118 @@
+"""AOT export: lower the Layer-2 models to HLO **text** + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids (see /opt/xla-example/README.md and gen_hlo.py there).
+
+Outputs, under --out-dir (default ../artifacts):
+
+    <name>.hlo.txt        one module per (model, shape) variant
+    manifest.json         name → {kind, shapes, dtypes, outputs, path}
+
+Run once via `make artifacts`; Python never runs on the request path.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile.model import fh_model, oph_model  # noqa: E402
+
+# Compiled shape variants. Batch is the coordinator's max batch; nnz bounds
+# per-vector non-zeros (News20-like ~500 → 512; MNIST-like ~150 → 256).
+FH_VARIANTS = [
+    # (batch, nnz, dim)
+    (16, 512, 64),
+    (16, 512, 128),
+    (16, 512, 256),
+    (16, 256, 128),
+]
+OPH_VARIANTS = [
+    # (batch, nnz, k)
+    (16, 512, 200),
+    (16, 512, 100),
+    (16, 512, 500),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_fh(batch, nnz, dim):
+    spec_i = jax.ShapeDtypeStruct((batch, nnz), jnp.int32)
+    spec_f = jax.ShapeDtypeStruct((batch, nnz), jnp.float32)
+    lowered = jax.jit(lambda b, v: fh_model(b, v, dim=dim)).lower(spec_i, spec_f)
+    name = f"fh_b{batch}_n{nnz}_d{dim}"
+    return name, to_hlo_text(lowered), {
+        "kind": "fh",
+        "batch": batch,
+        "nnz": nnz,
+        "dim": dim,
+        "inputs": [
+            {"name": "bins", "shape": [batch, nnz], "dtype": "i32"},
+            {"name": "vals", "shape": [batch, nnz], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "out", "shape": [batch, dim], "dtype": "f32"},
+            {"name": "sqnorm", "shape": [batch], "dtype": "f32"},
+        ],
+    }
+
+
+def export_oph(batch, nnz, k):
+    spec = jax.ShapeDtypeStruct((batch, nnz), jnp.int32)
+    lowered = jax.jit(lambda h, v: oph_model(h, v, k=k)).lower(spec, spec)
+    name = f"oph_b{batch}_n{nnz}_k{k}"
+    return name, to_hlo_text(lowered), {
+        "kind": "oph",
+        "batch": batch,
+        "nnz": nnz,
+        "k": k,
+        "inputs": [
+            {"name": "h", "shape": [batch, nnz], "dtype": "i32"},
+            {"name": "valid", "shape": [batch, nnz], "dtype": "i32"},
+        ],
+        "outputs": [{"name": "sketch", "shape": [batch, k], "dtype": "i32"}],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--quick", action="store_true", help="export one variant per kind")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    fh_variants = FH_VARIANTS[:1] if args.quick else FH_VARIANTS
+    oph_variants = OPH_VARIANTS[:1] if args.quick else OPH_VARIANTS
+
+    manifest = {"format": "hlo-text", "artifacts": []}
+    jobs = [export_fh(*v) for v in fh_variants] + [export_oph(*v) for v in oph_variants]
+    for name, text, meta in jobs:
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        meta.update({"name": name, "path": path})
+        manifest["artifacts"].append(meta)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Layer-1 Pallas kernel: batched feature-hashing scatter-add.
+
+Computes, for each batch row ``r``::
+
+    out[r, d] = sum_{i : bins[r, i] == d} vals[r, i]
+
+i.e. the feature-hashing projection of §2.2 *after* the Rust coordinator has
+hashed feature ids to (bin, signed value) pairs. The hashing itself is
+irregular integer work and stays in Rust (Layer 3); this kernel is the dense
+hot spot that benefits from batching.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): scatter is the wrong
+primitive on TPU — instead the kernel materialises a one-hot matrix
+``onehot[N, D] = (bins[:, None] == iota(D))`` in VMEM and contracts
+``vals[1, N] @ onehot[N, D]`` on the MXU. VMEM footprint per grid step is
+``N·D·4 + (N + D)·4`` bytes (N = 512, D = 256 → 527 KiB), comfortably inside
+the ~16 MiB VMEM budget; the MXU sees a (1×N)·(N×D) matmul per row and the
+grid runs over batch rows. ``interpret=True`` everywhere — the CPU PJRT
+plugin cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fh_kernel(bins_ref, vals_ref, o_ref, *, dim: int):
+    """One batch row: o[1, D] = vals[1, N] @ onehot(bins)[N, D]."""
+    bins = bins_ref[0, :]  # [N] int32
+    vals = vals_ref[0, :]  # [N] float32
+    n = bins.shape[0]
+    # One-hot via broadcasted iota — TPU-native (no gather/scatter).
+    iota = jax.lax.broadcasted_iota(jnp.int32, (n, dim), 1)
+    onehot = (bins[:, None] == iota).astype(jnp.float32)  # [N, D]
+    # (1, N) @ (N, D) — lands on the MXU on real hardware.
+    o_ref[0, :] = jnp.dot(vals[None, :], onehot, preferred_element_type=jnp.float32)[0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("dim",))
+def fh_scatter(bins: jax.Array, vals: jax.Array, *, dim: int) -> jax.Array:
+    """Batched FH scatter: bins/vals ``[B, N]`` → dense ``[B, dim]``.
+
+    ``bins`` entries must lie in ``[0, dim)``; padding slots use ``bin = 0,
+    val = 0.0`` (a no-op contribution).
+    """
+    b, n = bins.shape
+    assert vals.shape == (b, n), (bins.shape, vals.shape)
+    kernel = functools.partial(_fh_kernel, dim=dim)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda r: (r, 0)),
+            pl.BlockSpec((1, n), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dim), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, dim), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(bins.astype(jnp.int32), vals.astype(jnp.float32))

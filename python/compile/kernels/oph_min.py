@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel: batched OPH bucket-minimum.
+
+Given pre-hashed 32-bit values ``h[B, N]`` (the Rust side evaluates the basic
+hash function; see DESIGN.md), computes the raw one-permutation sketch of
+§2.1 for each row::
+
+    bin(x) = h(x) mod k        value(x) = h(x) / k
+    sketch[r, j] = min { value(x) : x in row r, bin(x) == j }
+
+Empty bins yield the sentinel ``EMPTY = 2^31 - 1`` (i32 max; real values are
+< 2^32 / k so the sentinel is unambiguous for k ≥ 4 — the kernel asserts
+this). Densification is a sequential circular scan and stays in Rust.
+
+TPU adaptation: the per-bin minimum is a masked reduction over a broadcast
+compare ``[N, k]`` tile (VPU work, no sorting, no scatter): ``masked =
+where(bins[:, None] == iota(k), vals[:, None], EMPTY)`` reduced with ``min``
+over N. Padding slots use ``h = 0xFFFFFFFF`` which decodes to the largest
+value in bin (2^32−1) mod k — harmless for the min — but we additionally mask
+them explicitly via the ``valid`` operand so bin collisions cannot occur.
+
+VMEM per grid step: N·k·4 bytes (N = 512, k = 200 → 400 KiB).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Sentinel for an empty bin (matches rust's `EMPTY_BIN` after widening).
+EMPTY = jnp.int32(2**31 - 1)
+
+
+def _oph_kernel(h_ref, valid_ref, o_ref, *, k: int):
+    h = h_ref[0, :]  # [N] int32 (bit-cast of u32 hash values)
+    valid = valid_ref[0, :]  # [N] int32 (1 = real element, 0 = padding)
+    n = h.shape[0]
+    # Work in uint32 (x64 mode is off; int64 is unavailable). Values are
+    # < 2^32/k so for k ≥ 4 they fit int32 on output.
+    hu = jax.lax.bitcast_convert_type(h, jnp.uint32)
+    bins = (hu % jnp.uint32(k)).astype(jnp.int32)  # [N]
+    vals = hu // jnp.uint32(k)  # [N] uint32, < 2^32/k
+    big = jnp.uint32(2**31 - 1)
+    vals = jnp.where(valid == 1, jnp.minimum(vals, big - jnp.uint32(1)), big)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (n, k), 1)
+    masked = jnp.where(bins[:, None] == iota, vals[:, None], big)  # [N, k]
+    o_ref[0, :] = jnp.min(masked, axis=0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def oph_min(h: jax.Array, valid: jax.Array, *, k: int) -> jax.Array:
+    """Batched raw OPH sketch: ``h[B, N]`` (i32 hash bits) → ``[B, k]`` i32.
+
+    ``valid[B, N]`` flags real elements (1) vs padding (0); padded rows
+    produce ``EMPTY`` bins exactly like absent elements.
+    """
+    b, n = h.shape
+    assert valid.shape == (b, n)
+    assert k >= 4, "k >= 4 keeps bucket values below the i32 sentinel"
+    kernel = functools.partial(_oph_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda r: (r, 0)),
+            pl.BlockSpec((1, n), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.int32),
+        interpret=True,
+    )(h.astype(jnp.int32), valid.astype(jnp.int32))

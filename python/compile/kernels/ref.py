@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Deliberately written with different primitives (segment_sum / segment_min)
+than the kernels (one-hot matmul / masked min) so agreement is meaningful.
+"""
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(2**31 - 1)
+
+
+def fh_ref(bins: jax.Array, vals: jax.Array, *, dim: int) -> jax.Array:
+    """Reference FH scatter via jax.ops.segment_sum, row by row."""
+    bins = bins.astype(jnp.int32)
+    vals = vals.astype(jnp.float32)
+
+    def one_row(b, v):
+        return jax.ops.segment_sum(v, b, num_segments=dim)
+
+    return jax.vmap(one_row)(bins, vals)
+
+
+def oph_ref(h: jax.Array, valid: jax.Array, *, k: int) -> jax.Array:
+    """Reference OPH bucket-min via jax.ops.segment_min (uint32 domain)."""
+    hu = jax.lax.bitcast_convert_type(h.astype(jnp.int32), jnp.uint32)
+    bins = (hu % jnp.uint32(k)).astype(jnp.int32)
+    big = jnp.uint32(2**31 - 1)
+    vals = jnp.where(
+        valid == 1, jnp.minimum(hu // jnp.uint32(k), big - jnp.uint32(1)), big
+    )
+
+    def one_row(b, v):
+        return jax.ops.segment_min(v, b, num_segments=k)
+
+    out = jax.vmap(one_row)(bins, vals)
+    # segment_min yields uint32 max for empty segments; clamp to sentinel.
+    return jnp.minimum(out, big).astype(jnp.int32)
+
+
+def fh_sqnorm_ref(out: jax.Array) -> jax.Array:
+    """‖v′‖² per row."""
+    return jnp.sum(out.astype(jnp.float32) ** 2, axis=-1)

@@ -1,0 +1,33 @@
+"""Layer-2 JAX model: the batched transforms the Rust coordinator executes.
+
+Two compute graphs, both calling the Layer-1 Pallas kernels:
+
+* ``fh_model``  — batched feature hashing: (bins, signed vals) → (v', ‖v'‖²).
+  The squared norm rides along so the service answers the paper's §4
+  concentration statistic without a second pass over the output.
+* ``oph_model`` — batched raw OPH sketches from pre-hashed values.
+
+Only shapes are baked at AOT time; see aot.py for the exported variants.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.fh_scatter import fh_scatter
+from compile.kernels.oph_min import oph_min
+
+
+@functools.partial(jax.jit, static_argnames=("dim",))
+def fh_model(bins: jax.Array, vals: jax.Array, *, dim: int):
+    """bins/vals ``[B, N]`` → ``(out [B, dim] f32, sqnorm [B] f32)``."""
+    out = fh_scatter(bins, vals, dim=dim)
+    sqnorm = jnp.sum(out * out, axis=-1)
+    return out, sqnorm
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def oph_model(h: jax.Array, valid: jax.Array, *, k: int):
+    """h/valid ``[B, N]`` → raw sketch ``[B, k]`` i32 (EMPTY sentinel)."""
+    return (oph_min(h, valid, k=k),)

@@ -1,0 +1,28 @@
+"""Structural performance gates (the L1/L2 side of DESIGN.md §Perf)."""
+
+from compile.analyze import analyze_fh, analyze_oph, VMEM_BUDGET
+from compile.aot import FH_VARIANTS, OPH_VARIANTS
+
+
+def test_all_variants_fit_vmem():
+    for v in FH_VARIANTS:
+        r = analyze_fh(*v)
+        assert r["vmem_step_kib"] * 1024 < VMEM_BUDGET, r
+    for v in OPH_VARIANTS:
+        r = analyze_oph(*v)
+        assert r["vmem_step_kib"] * 1024 < VMEM_BUDGET, r
+
+
+def test_no_mosaic_custom_calls_or_transposes_on_feed_path():
+    r = analyze_fh(*FH_VARIANTS[0])
+    assert r["custom_calls"] == 0
+    assert r["transposes"] == 0
+    r = analyze_oph(*OPH_VARIANTS[0])
+    assert r["custom_calls"] == 0
+
+
+def test_fh_mxu_work_scales_with_dim():
+    small = analyze_fh(16, 512, 64)
+    big = analyze_fh(16, 512, 256)
+    assert big["macs_per_row"] == 4 * small["macs_per_row"]
+    assert big["arith_intensity"] > small["arith_intensity"]

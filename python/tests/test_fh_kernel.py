@@ -1,0 +1,78 @@
+"""Pallas fh_scatter vs pure-jnp oracle — hypothesis sweeps shapes/values."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.fh_scatter import fh_scatter
+from compile.kernels.ref import fh_ref, fh_sqnorm_ref
+
+
+def _rand_case(rng, b, n, d):
+    bins = rng.integers(0, d, size=(b, n), dtype=np.int32)
+    vals = rng.standard_normal((b, n)).astype(np.float32)
+    return bins, vals
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    n=st.integers(1, 64),
+    d=st.sampled_from([8, 17, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_random(b, n, d, seed):
+    rng = np.random.default_rng(seed)
+    bins, vals = _rand_case(rng, b, n, d)
+    got = np.asarray(fh_scatter(jnp.asarray(bins), jnp.asarray(vals), dim=d))
+    want = np.asarray(fh_ref(jnp.asarray(bins), jnp.asarray(vals), dim=d))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_all_same_bin_accumulates():
+    bins = np.full((2, 16), 3, dtype=np.int32)
+    vals = np.ones((2, 16), dtype=np.float32)
+    out = np.asarray(fh_scatter(jnp.asarray(bins), jnp.asarray(vals), dim=8))
+    assert out.shape == (2, 8)
+    np.testing.assert_allclose(out[:, 3], 16.0)
+    assert np.abs(out).sum() == pytest.approx(32.0)
+
+
+def test_zero_padding_is_noop():
+    # Padding convention: bin 0, val 0.0.
+    bins = np.array([[1, 2, 0, 0]], dtype=np.int32)
+    vals = np.array([[1.0, -2.0, 0.0, 0.0]], dtype=np.float32)
+    out = np.asarray(fh_scatter(jnp.asarray(bins), jnp.asarray(vals), dim=4))
+    np.testing.assert_allclose(out, [[0.0, 1.0, -2.0, 0.0]])
+
+
+def test_signed_values_cancel():
+    bins = np.array([[5, 5]], dtype=np.int32)
+    vals = np.array([[2.5, -2.5]], dtype=np.float32)
+    out = np.asarray(fh_scatter(jnp.asarray(bins), jnp.asarray(vals), dim=8))
+    np.testing.assert_allclose(out, np.zeros((1, 8)), atol=1e-7)
+
+
+def test_norm_preserved_when_no_collisions():
+    # Distinct bins ⇒ ‖v'‖² == ‖v‖² exactly.
+    bins = np.arange(32, dtype=np.int32)[None, :]
+    rng = np.random.default_rng(7)
+    vals = rng.standard_normal((1, 32)).astype(np.float32)
+    out = fh_scatter(jnp.asarray(bins), jnp.asarray(vals), dim=64)
+    sq = float(fh_sqnorm_ref(out)[0])
+    assert sq == pytest.approx(float((vals**2).sum()), rel=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_f64_inputs_coerced(seed):
+    rng = np.random.default_rng(seed)
+    bins = rng.integers(0, 16, size=(2, 8)).astype(np.int64)
+    vals = rng.standard_normal((2, 8))  # f64
+    got = np.asarray(fh_scatter(jnp.asarray(bins), jnp.asarray(vals), dim=16))
+    want = np.asarray(
+        fh_ref(jnp.asarray(bins.astype(np.int32)), jnp.asarray(vals.astype(np.float32)), dim=16)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

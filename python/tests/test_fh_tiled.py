@@ -1,0 +1,51 @@
+"""Tiled FH kernel vs the untiled kernel and the pure-jnp oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.fh_scatter import fh_scatter
+from compile.kernels.fh_scatter_tiled import fh_scatter_tiled
+from compile.kernels.ref import fh_ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    n_tiles=st.integers(1, 4),
+    tile_n=st.sampled_from([8, 32]),
+    d=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_and_untiled(b, n_tiles, tile_n, d, seed):
+    rng = np.random.default_rng(seed)
+    n = n_tiles * tile_n
+    bins = rng.integers(0, d, size=(b, n), dtype=np.int32)
+    vals = rng.standard_normal((b, n)).astype(np.float32)
+    tiled = np.asarray(
+        fh_scatter_tiled(jnp.asarray(bins), jnp.asarray(vals), dim=d, tile_n=tile_n)
+    )
+    ref = np.asarray(fh_ref(jnp.asarray(bins), jnp.asarray(vals), dim=d))
+    flat = np.asarray(fh_scatter(jnp.asarray(bins), jnp.asarray(vals), dim=d))
+    np.testing.assert_allclose(tiled, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(tiled, flat, rtol=1e-5, atol=1e-5)
+
+
+def test_accumulation_across_tiles():
+    # Same bin in different tiles must accumulate.
+    bins = np.zeros((1, 16), dtype=np.int32)
+    vals = np.ones((1, 16), dtype=np.float32)
+    out = np.asarray(fh_scatter_tiled(jnp.asarray(bins), jnp.asarray(vals), dim=4, tile_n=4))
+    assert out[0, 0] == 16.0
+    assert np.abs(out).sum() == 16.0
+
+
+def test_rejects_misaligned_n():
+    bins = np.zeros((1, 10), dtype=np.int32)
+    vals = np.zeros((1, 10), dtype=np.float32)
+    try:
+        fh_scatter_tiled(jnp.asarray(bins), jnp.asarray(vals), dim=4, tile_n=4)
+        raise SystemExit("expected assertion")
+    except AssertionError:
+        pass

@@ -1,0 +1,68 @@
+"""Layer-2 model shape/semantics checks + AOT lowering smoke test."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.model import fh_model, oph_model
+from compile.kernels.ref import fh_ref
+
+
+def test_fh_model_outputs():
+    rng = np.random.default_rng(0)
+    bins = rng.integers(0, 32, size=(4, 16), dtype=np.int32)
+    vals = rng.standard_normal((4, 16)).astype(np.float32)
+    out, sq = fh_model(jnp.asarray(bins), jnp.asarray(vals), dim=32)
+    assert out.shape == (4, 32)
+    assert sq.shape == (4,)
+    want = np.asarray(fh_ref(jnp.asarray(bins), jnp.asarray(vals), dim=32))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sq), (want**2).sum(-1), rtol=1e-4)
+
+
+def test_oph_model_outputs():
+    rng = np.random.default_rng(1)
+    h = rng.integers(0, 2**32, size=(2, 32), dtype=np.uint32).view(np.int32)
+    valid = np.ones((2, 32), dtype=np.int32)
+    (sk,) = oph_model(jnp.asarray(h), jnp.asarray(valid), k=50)
+    assert sk.shape == (2, 50)
+    assert sk.dtype == jnp.int32
+
+
+def test_aot_lowering_produces_hlo_text(tmp_path):
+    """Export the quick variant set and validate the manifest + HLO text."""
+    env = dict(os.environ)
+    compile_dir = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path), "--quick"],
+        cwd=compile_dir,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    assert len(manifest["artifacts"]) == 2  # one fh + one oph
+    for art in manifest["artifacts"]:
+        text = (tmp_path / art["path"]).read_text()
+        assert text.startswith("HloModule"), text[:80]
+        # No Mosaic custom-calls — interpret mode must lower to plain HLO.
+        assert "tpu_custom_call" not in text
+        assert "mosaic" not in text.lower()
+
+
+@pytest.mark.parametrize("dim", [64, 128])
+def test_fh_model_padding_convention(dim):
+    bins = np.zeros((1, 8), dtype=np.int32)
+    vals = np.zeros((1, 8), dtype=np.float32)
+    out, sq = fh_model(jnp.asarray(bins), jnp.asarray(vals), dim=dim)
+    assert float(np.abs(np.asarray(out)).sum()) == 0.0
+    assert float(np.asarray(sq)[0]) == 0.0

@@ -1,0 +1,80 @@
+"""Pallas oph_min vs pure-jnp oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.oph_min import oph_min, EMPTY
+from compile.kernels.ref import oph_ref
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    n=st.integers(1, 64),
+    k=st.sampled_from([4, 10, 100, 200]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_random(b, n, k, seed):
+    rng = np.random.default_rng(seed)
+    # Full 32-bit hash values, bit-cast into int32 like the Rust feeder does.
+    h = rng.integers(0, 2**32, size=(b, n), dtype=np.uint32).view(np.int32)
+    valid = (rng.random((b, n)) < 0.8).astype(np.int32)
+    got = np.asarray(oph_min(jnp.asarray(h), jnp.asarray(valid), k=k))
+    want = np.asarray(oph_ref(jnp.asarray(h), jnp.asarray(valid), k=k))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_empty_bins_sentinel():
+    # One element in bin (7 mod 4)=3, value 7//4=1; all else empty.
+    h = np.array([[7]], dtype=np.int32)
+    valid = np.ones((1, 1), dtype=np.int32)
+    out = np.asarray(oph_min(jnp.asarray(h), jnp.asarray(valid), k=4))
+    assert out[0, 3] == 1
+    assert (out[0, [0, 1, 2]] == int(EMPTY)).all()
+
+
+def test_all_padding_all_empty():
+    h = np.zeros((2, 8), dtype=np.int32)
+    valid = np.zeros((2, 8), dtype=np.int32)
+    out = np.asarray(oph_min(jnp.asarray(h), jnp.asarray(valid), k=10))
+    assert (out == int(EMPTY)).all()
+
+
+def test_min_within_bin():
+    k = 4
+    # Values 8 and 16 both land in bin 0 with values 2 and 4 → min 2;
+    # value 13 lands in bin 1 with value 3.
+    h = np.array([[8, 16, 13]], dtype=np.int32)
+    valid = np.ones((1, 3), dtype=np.int32)
+    out = np.asarray(oph_min(jnp.asarray(h), jnp.asarray(valid), k=k))
+    assert out[0, 0] == 2
+    assert out[0, 1] == 3
+
+
+def test_uint32_range_hash_values():
+    # Hash values ≥ 2^31 (negative as int32) must decode as unsigned.
+    x = np.uint32(0xFFFFFFFF)
+    h = np.array([[x]], dtype=np.uint32).view(np.int32)
+    valid = np.ones((1, 1), dtype=np.int32)
+    k = 5
+    out = np.asarray(oph_min(jnp.asarray(h), jnp.asarray(valid), k=k))
+    bin_ = int(x) % k
+    val = int(x) // k
+    assert out[0, bin_] == min(val, 2**31 - 2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_per_row_independence(seed):
+    # Batched result equals row-by-row results.
+    rng = np.random.default_rng(seed)
+    h = rng.integers(0, 2**32, size=(3, 32), dtype=np.uint32).view(np.int32)
+    valid = np.ones((3, 32), dtype=np.int32)
+    full = np.asarray(oph_min(jnp.asarray(h), jnp.asarray(valid), k=16))
+    for r in range(3):
+        row = np.asarray(
+            oph_min(jnp.asarray(h[r : r + 1]), jnp.asarray(valid[r : r + 1]), k=16)
+        )
+        np.testing.assert_array_equal(full[r], row[0])

@@ -1,0 +1,233 @@
+//! Dynamic batcher for FH transforms.
+//!
+//! The PJRT artifacts are compiled for a fixed `[batch, nnz]` shape, so the
+//! batcher's job is classic serving-systems work: accumulate single-row
+//! requests into a full batch, dispatch when the batch fills **or** the
+//! oldest request has waited `max_delay_us` (bounded tail latency), pad the
+//! remainder, and scatter per-row results back to the waiting callers.
+//!
+//! Backpressure: the submit queue is bounded (`queue_cap`); when PJRT falls
+//! behind, `submit` fails fast and the caller runs the bit-compatible
+//! native path instead — load shedding rather than queue collapse.
+
+use crate::coordinator::metrics::Metrics;
+use crate::runtime::artifact::ArtifactKind;
+use crate::runtime::executor::ExecutorHandle;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One row's result: the dense output and its squared norm.
+pub type RowResult = Result<(Vec<f32>, f64)>;
+
+struct RowJob {
+    /// Padded to exactly `nnz` by `submit`.
+    bins: Vec<i32>,
+    vals: Vec<f32>,
+    reply: Sender<RowResult>,
+}
+
+/// Handle to the batcher thread.
+pub struct FhBatcher {
+    tx: SyncSender<RowJob>,
+    batch: usize,
+    nnz: usize,
+    dim: usize,
+}
+
+impl FhBatcher {
+    /// Spawn the batcher for one FH artifact.
+    pub fn spawn(
+        executor: Arc<ExecutorHandle>,
+        artifact_name: &str,
+        kind: ArtifactKind,
+        max_delay_us: u64,
+        queue_cap: usize,
+        metrics: Arc<Metrics>,
+    ) -> Result<Self> {
+        let ArtifactKind::Fh { batch, nnz, dim } = kind else {
+            return Err(anyhow!("batcher needs an fh artifact"));
+        };
+        let (tx, rx) = std::sync::mpsc::sync_channel::<RowJob>(queue_cap);
+        let name = artifact_name.to_string();
+        std::thread::Builder::new()
+            .name("mixtab-batcher".into())
+            .spawn(move || {
+                batcher_loop(executor, name, batch, nnz, dim, max_delay_us, rx, metrics)
+            })
+            .expect("spawn batcher");
+        Ok(Self {
+            tx,
+            batch,
+            nnz,
+            dim,
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn max_nnz(&self) -> usize {
+        self.nnz
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Submit one row (already hashed to (bin, signed-value) pairs).
+    /// Returns a receiver for the row result, or `None` when the queue is
+    /// full or the row exceeds the compiled nnz bound — callers then take
+    /// the native path.
+    pub fn submit(&self, mut bins: Vec<i32>, mut vals: Vec<f32>) -> Option<Receiver<RowResult>> {
+        if bins.len() > self.nnz || bins.len() != vals.len() {
+            return None;
+        }
+        bins.resize(self.nnz, 0);
+        vals.resize(self.nnz, 0.0);
+        let (reply, rx) = channel();
+        match self.tx.try_send(RowJob { bins, vals, reply }) {
+            Ok(()) => Some(rx),
+            Err(TrySendError::Full(_) | TrySendError::Disconnected(_)) => None,
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn batcher_loop(
+    executor: Arc<ExecutorHandle>,
+    name: String,
+    batch: usize,
+    nnz: usize,
+    dim: usize,
+    max_delay_us: u64,
+    rx: Receiver<RowJob>,
+    metrics: Arc<Metrics>,
+) {
+    let max_delay = Duration::from_micros(max_delay_us);
+    loop {
+        // Block for the first row of the next batch.
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return, // all senders dropped — shut down
+        };
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + max_delay;
+        while jobs.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Assemble the padded batch.
+        let rows = jobs.len();
+        let mut bins = Vec::with_capacity(batch * nnz);
+        let mut vals = Vec::with_capacity(batch * nnz);
+        for j in &jobs {
+            bins.extend_from_slice(&j.bins);
+            vals.extend_from_slice(&j.vals);
+        }
+        bins.resize(batch * nnz, 0);
+        vals.resize(batch * nnz, 0.0);
+
+        Metrics::inc(&metrics.pjrt_batches);
+        Metrics::add(&metrics.pjrt_batch_rows, rows as u64);
+
+        match executor.run_fh(&name, bins, vals) {
+            Ok(out) => {
+                for (r, job) in jobs.into_iter().enumerate() {
+                    let row = out.out[r * dim..(r + 1) * dim].to_vec();
+                    let sq = out.sqnorm[r] as f64;
+                    let _ = job.reply.send(Ok((row, sq)));
+                }
+            }
+            Err(e) => {
+                let msg = format!("pjrt batch failed: {e}");
+                for job in jobs {
+                    let _ = job.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+
+    fn artifacts_available() -> Option<Manifest> {
+        Manifest::load("artifacts").ok()
+    }
+
+    #[test]
+    fn batches_and_scatters() {
+        let Some(manifest) = artifacts_available() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let Some(meta) = manifest.find_fh(128, 512) else {
+            eprintln!("skipping: no fh d'=128 artifact");
+            return;
+        };
+        let sub = Manifest {
+            artifacts: vec![meta.clone()],
+        };
+        let exec = Arc::new(ExecutorHandle::spawn(sub).expect("executor"));
+        let metrics = Arc::new(Metrics::new());
+        let b = FhBatcher::spawn(exec, &meta.name, meta.kind, 500, 64, Arc::clone(&metrics))
+            .expect("batcher");
+        // Submit several rows concurrently; each puts value v into bin r.
+        let mut rxs = Vec::new();
+        for r in 0..5 {
+            let rx = b
+                .submit(vec![r as i32], vec![(r + 1) as f32])
+                .expect("submit");
+            rxs.push((r, rx));
+        }
+        for (r, rx) in rxs {
+            let (row, sq) = rx.recv().unwrap().unwrap();
+            assert_eq!(row.len(), 128);
+            assert_eq!(row[r], (r + 1) as f32, "row {r}");
+            let expect_sq = ((r + 1) * (r + 1)) as f64;
+            assert!((sq - expect_sq).abs() < 1e-4);
+        }
+        assert!(metrics.pjrt_batches.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn oversized_row_rejected() {
+        let Some(manifest) = artifacts_available() else {
+            return;
+        };
+        let Some(meta) = manifest.find_fh(128, 512) else {
+            return;
+        };
+        let sub = Manifest {
+            artifacts: vec![meta.clone()],
+        };
+        let exec = Arc::new(ExecutorHandle::spawn(sub).expect("executor"));
+        let b = FhBatcher::spawn(
+            exec,
+            &meta.name,
+            meta.kind,
+            100,
+            4,
+            Arc::new(Metrics::new()),
+        )
+        .unwrap();
+        let big = vec![0i32; 100_000];
+        let vals = vec![0f32; 100_000];
+        assert!(b.submit(big, vals).is_none());
+        // Mismatched lengths rejected too.
+        assert!(b.submit(vec![1, 2], vec![0.5]).is_none());
+    }
+}

@@ -1,0 +1,157 @@
+//! Coordinator configuration.
+//!
+//! Loaded from a TOML-subset file (see [`crate::util::config`]); every field
+//! has a default so `CoordinatorConfig::default()` runs out of the box.
+//!
+//! ```toml
+//! [service]
+//! listen = "127.0.0.1:7878"
+//! workers = 2
+//!
+//! [fh]
+//! dim = 128
+//! hash = "mixed_tab"
+//! sign = "paired"
+//! seed = 42
+//!
+//! [oph]
+//! k = 200
+//!
+//! [lsh]
+//! k = 10
+//! l = 10
+//!
+//! [batcher]
+//! enable_pjrt = true
+//! max_delay_us = 200
+//! queue_cap = 256
+//! artifacts_dir = "artifacts"
+//! ```
+
+use crate::hash::HashFamily;
+use crate::sketch::feature_hash::SignMode;
+use crate::util::config::Config;
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// TCP listen address for the server front-end.
+    pub listen: String,
+    /// Sketch worker threads.
+    pub workers: usize,
+    /// FH output dimension d'.
+    pub fh_dim: usize,
+    /// Basic hash family for every sketch (the paper's variable).
+    pub family: HashFamily,
+    /// FH sign derivation.
+    pub sign: SignMode,
+    /// Root seed.
+    pub seed: u64,
+    /// OPH sketch size.
+    pub oph_k: usize,
+    /// LSH parameters.
+    pub lsh_k: usize,
+    pub lsh_l: usize,
+    /// Use the PJRT runtime when artifacts are present.
+    pub enable_pjrt: bool,
+    /// Batch window: how long the batcher waits to fill a batch.
+    pub max_delay_us: u64,
+    /// Bounded batcher queue; overflow sheds to the native path.
+    pub queue_cap: usize,
+    /// Where `manifest.json` lives.
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:7878".into(),
+            workers: 2,
+            fh_dim: 128,
+            family: HashFamily::MixedTab,
+            sign: SignMode::Paired,
+            seed: 42,
+            oph_k: 200,
+            lsh_k: 10,
+            lsh_l: 10,
+            enable_pjrt: true,
+            max_delay_us: 200,
+            queue_cap: 256,
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Parse from config text.
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let d = Self::default();
+        let family_id = cfg.str_or("fh", "hash", HashFamily::MixedTab.id());
+        let Some(family) = HashFamily::parse(&family_id) else {
+            bail!("unknown hash family '{family_id}'");
+        };
+        let sign = match cfg.str_or("fh", "sign", "paired").as_str() {
+            "paired" => SignMode::Paired,
+            "separate" => SignMode::Separate,
+            other => bail!("unknown sign mode '{other}'"),
+        };
+        Ok(Self {
+            listen: cfg.str_or("service", "listen", &d.listen),
+            workers: cfg.usize_or("service", "workers", d.workers),
+            fh_dim: cfg.usize_or("fh", "dim", d.fh_dim),
+            family,
+            sign,
+            seed: cfg.i64_or("fh", "seed", d.seed as i64) as u64,
+            oph_k: cfg.usize_or("oph", "k", d.oph_k),
+            lsh_k: cfg.usize_or("lsh", "k", d.lsh_k),
+            lsh_l: cfg.usize_or("lsh", "l", d.lsh_l),
+            enable_pjrt: cfg.bool_or("batcher", "enable_pjrt", d.enable_pjrt),
+            max_delay_us: cfg.i64_or("batcher", "max_delay_us", d.max_delay_us as i64) as u64,
+            queue_cap: cfg.usize_or("batcher", "queue_cap", d.queue_cap),
+            artifacts_dir: PathBuf::from(cfg.str_or(
+                "batcher",
+                "artifacts_dir",
+                d.artifacts_dir.to_str().unwrap(),
+            )),
+        })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_config(&Config::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = CoordinatorConfig::default();
+        assert_eq!(c.fh_dim, 128);
+        assert_eq!(c.family, HashFamily::MixedTab);
+        assert!(c.enable_pjrt);
+    }
+
+    #[test]
+    fn parses_overrides() {
+        let cfg = Config::parse(
+            "[fh]\ndim = 64\nhash = \"murmur3\"\nsign = \"separate\"\n[batcher]\nenable_pjrt = false\n[lsh]\nk = 8\nl = 12\n",
+        )
+        .unwrap();
+        let c = CoordinatorConfig::from_config(&cfg).unwrap();
+        assert_eq!(c.fh_dim, 64);
+        assert_eq!(c.family, HashFamily::Murmur3);
+        assert_eq!(c.sign, SignMode::Separate);
+        assert!(!c.enable_pjrt);
+        assert_eq!((c.lsh_k, c.lsh_l), (8, 12));
+    }
+
+    #[test]
+    fn rejects_bad_family() {
+        let cfg = Config::parse("[fh]\nhash = \"md5\"\n").unwrap();
+        assert!(CoordinatorConfig::from_config(&cfg).is_err());
+    }
+}

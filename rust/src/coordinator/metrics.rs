@@ -1,0 +1,111 @@
+//! Service metrics: lock-free counters + latency quantiles.
+
+use crate::stats::Summary;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Counters and latency tracking for the coordinator.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub fh_requests: AtomicU64,
+    pub fh_pjrt_rows: AtomicU64,
+    pub fh_native_rows: AtomicU64,
+    pub fh_shed: AtomicU64,
+    pub pjrt_batches: AtomicU64,
+    pub pjrt_batch_rows: AtomicU64,
+    pub oph_requests: AtomicU64,
+    pub lsh_inserts: AtomicU64,
+    pub lsh_queries: AtomicU64,
+    pub estimates: AtomicU64,
+    pub errors: AtomicU64,
+    /// FH request latency samples (µs). Bounded reservoir: first 100k.
+    lat_us: Mutex<Summary>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record an FH request latency.
+    pub fn observe_latency(&self, start: Instant) {
+        let us = start.elapsed().as_micros() as f64;
+        let mut s = self.lat_us.lock().unwrap();
+        if s.len() < 100_000 {
+            s.add(us);
+        }
+    }
+
+    /// Mean rows per PJRT batch (batch occupancy — the batcher's health).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        let b = self.pjrt_batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.pjrt_batch_rows.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Snapshot as JSON (served by the `stats` op).
+    pub fn snapshot(&self) -> Json {
+        let lat = self.lat_us.lock().unwrap();
+        let (p50, p90, p99) = if lat.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            lat.latency_quantiles()
+        };
+        Json::obj()
+            .set("fh_requests", self.fh_requests.load(Ordering::Relaxed) as usize)
+            .set("fh_pjrt_rows", self.fh_pjrt_rows.load(Ordering::Relaxed) as usize)
+            .set(
+                "fh_native_rows",
+                self.fh_native_rows.load(Ordering::Relaxed) as usize,
+            )
+            .set("fh_shed", self.fh_shed.load(Ordering::Relaxed) as usize)
+            .set("pjrt_batches", self.pjrt_batches.load(Ordering::Relaxed) as usize)
+            .set("mean_batch_occupancy", self.mean_batch_occupancy())
+            .set("oph_requests", self.oph_requests.load(Ordering::Relaxed) as usize)
+            .set("lsh_inserts", self.lsh_inserts.load(Ordering::Relaxed) as usize)
+            .set("lsh_queries", self.lsh_queries.load(Ordering::Relaxed) as usize)
+            .set("estimates", self.estimates.load(Ordering::Relaxed) as usize)
+            .set("errors", self.errors.load(Ordering::Relaxed) as usize)
+            .set("fh_latency_p50_us", p50)
+            .set("fh_latency_p90_us", p90)
+            .set("fh_latency_p99_us", p99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_snapshot() {
+        let m = Metrics::new();
+        Metrics::inc(&m.fh_requests);
+        Metrics::add(&m.pjrt_batch_rows, 12);
+        Metrics::inc(&m.pjrt_batches);
+        m.observe_latency(Instant::now());
+        let s = m.snapshot();
+        assert_eq!(s.get("fh_requests").unwrap().as_i64(), Some(1));
+        assert!((m.mean_batch_occupancy() - 12.0).abs() < 1e-9);
+        assert!(s.get("fh_latency_p50_us").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn occupancy_zero_when_no_batches() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_batch_occupancy(), 0.0);
+    }
+}

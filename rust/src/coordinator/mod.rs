@@ -1,0 +1,26 @@
+//! The coordination layer: a sketching/similarity service in the deployment
+//! shape the paper's applications live in (LSH ingest + query serving, SVM
+//! featurisation).
+//!
+//! Rust owns the event loop, batching, worker topology and metrics; the
+//! dense batched math executes through the PJRT runtime when artifacts are
+//! available, with a bit-compatible native fallback.
+//!
+//! * [`config`] — service configuration (TOML-subset files + defaults).
+//! * [`request`] — typed requests/responses + JSON wire codec.
+//! * [`batcher`] — dynamic batcher for FH transforms (max-batch/max-delay,
+//!   bounded queue, shed-to-native backpressure).
+//! * [`service`] — the coordinator proper: routing, LSH shards, set store.
+//! * [`server`] — newline-delimited-JSON TCP front-end.
+//! * [`metrics`] — counters and latency quantiles.
+
+pub mod config;
+pub mod request;
+pub mod batcher;
+pub mod service;
+pub mod server;
+pub mod metrics;
+
+pub use config::CoordinatorConfig;
+pub use request::{Request, Response};
+pub use service::Coordinator;

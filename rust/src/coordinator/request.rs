@@ -1,0 +1,392 @@
+//! Typed requests/responses + the newline-delimited JSON wire codec used by
+//! the TCP front-end and the examples.
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+
+/// A client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Feature-hash a sparse vector; returns the dense d'-vector + ‖v′‖².
+    FhTransform { indices: Vec<u32>, values: Vec<f64> },
+    /// OPH-sketch a set; returns the densified bins.
+    OphSketch { set: Vec<u32> },
+    /// Insert a set into the LSH index (also stores it for `Estimate`).
+    LshInsert { id: u32, set: Vec<u32> },
+    /// Query the LSH index; returns candidate ids.
+    LshQuery { set: Vec<u32> },
+    /// Estimate J between two stored ids from their sketches.
+    Estimate { a: u32, b: u32 },
+    /// Shingle a raw document (w = 5 bytes) and insert it into the LSH
+    /// index — the ingest path of a dedup/search service.
+    IndexDoc { id: u32, text: String },
+    /// Shingle a raw document and query the LSH index.
+    QueryDoc { text: String },
+    /// Snapshot the LSH index to a server-side path.
+    SaveIndex { path: String },
+    /// Service statistics snapshot.
+    Stats,
+}
+
+/// Which execution path served an FH request (observable for tests/metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecPath {
+    Pjrt,
+    Native,
+}
+
+/// A service response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Fh {
+        out: Vec<f32>,
+        sqnorm: f64,
+        path: ExecPath,
+    },
+    Sketch {
+        bins: Vec<u64>,
+    },
+    Inserted {
+        id: u32,
+    },
+    Candidates {
+        ids: Vec<u32>,
+    },
+    Estimate {
+        jaccard: f64,
+    },
+    Saved {
+        path: String,
+        entries: usize,
+    },
+    Stats {
+        json: Json,
+    },
+    Error {
+        message: String,
+    },
+}
+
+fn arr_u32(j: &Json, key: &str) -> Result<Vec<u32>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("missing array '{key}'"))?
+        .iter()
+        .map(|v| {
+            v.as_i64()
+                .and_then(|x| u32::try_from(x).ok())
+                .with_context(|| format!("bad u32 in '{key}'"))
+        })
+        .collect()
+}
+
+fn arr_f64(j: &Json, key: &str) -> Result<Vec<f64>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("missing array '{key}'"))?
+        .iter()
+        .map(|v| v.as_f64().with_context(|| format!("bad number in '{key}'")))
+        .collect()
+}
+
+impl Request {
+    /// Decode one wire line.
+    pub fn from_json_line(line: &str) -> Result<Request> {
+        let j = Json::parse(line).context("parse request json")?;
+        let op = j
+            .get("op")
+            .and_then(Json::as_str)
+            .context("missing 'op'")?;
+        Ok(match op {
+            "fh" => Request::FhTransform {
+                indices: arr_u32(&j, "indices")?,
+                values: arr_f64(&j, "values")?,
+            },
+            "oph" => Request::OphSketch {
+                set: arr_u32(&j, "set")?,
+            },
+            "insert" => Request::LshInsert {
+                id: j
+                    .get("id")
+                    .and_then(Json::as_i64)
+                    .and_then(|x| u32::try_from(x).ok())
+                    .context("missing 'id'")?,
+                set: arr_u32(&j, "set")?,
+            },
+            "query" => Request::LshQuery {
+                set: arr_u32(&j, "set")?,
+            },
+            "estimate" => Request::Estimate {
+                a: j.get("a")
+                    .and_then(Json::as_i64)
+                    .and_then(|x| u32::try_from(x).ok())
+                    .context("missing 'a'")?,
+                b: j.get("b")
+                    .and_then(Json::as_i64)
+                    .and_then(|x| u32::try_from(x).ok())
+                    .context("missing 'b'")?,
+            },
+            "index_doc" => Request::IndexDoc {
+                id: j
+                    .get("id")
+                    .and_then(Json::as_i64)
+                    .and_then(|x| u32::try_from(x).ok())
+                    .context("missing 'id'")?,
+                text: j
+                    .get("text")
+                    .and_then(Json::as_str)
+                    .context("missing 'text'")?
+                    .to_string(),
+            },
+            "query_doc" => Request::QueryDoc {
+                text: j
+                    .get("text")
+                    .and_then(Json::as_str)
+                    .context("missing 'text'")?
+                    .to_string(),
+            },
+            "save_index" => Request::SaveIndex {
+                path: j
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .context("missing 'path'")?
+                    .to_string(),
+            },
+            "stats" => Request::Stats,
+            other => bail!("unknown op '{other}'"),
+        })
+    }
+
+    /// Encode for the wire.
+    pub fn to_json_line(&self) -> String {
+        let j = match self {
+            Request::FhTransform { indices, values } => Json::obj()
+                .set("op", "fh")
+                .set("indices", indices.iter().map(|&x| x as usize).collect::<Vec<_>>())
+                .set("values", Json::Arr(values.iter().map(|&v| Json::Num(v)).collect())),
+            Request::OphSketch { set } => Json::obj()
+                .set("op", "oph")
+                .set("set", set.iter().map(|&x| x as usize).collect::<Vec<_>>()),
+            Request::LshInsert { id, set } => Json::obj()
+                .set("op", "insert")
+                .set("id", *id as usize)
+                .set("set", set.iter().map(|&x| x as usize).collect::<Vec<_>>()),
+            Request::LshQuery { set } => Json::obj()
+                .set("op", "query")
+                .set("set", set.iter().map(|&x| x as usize).collect::<Vec<_>>()),
+            Request::Estimate { a, b } => Json::obj()
+                .set("op", "estimate")
+                .set("a", *a as usize)
+                .set("b", *b as usize),
+            Request::IndexDoc { id, text } => Json::obj()
+                .set("op", "index_doc")
+                .set("id", *id as usize)
+                .set("text", text.as_str()),
+            Request::QueryDoc { text } => {
+                Json::obj().set("op", "query_doc").set("text", text.as_str())
+            }
+            Request::SaveIndex { path } => {
+                Json::obj().set("op", "save_index").set("path", path.as_str())
+            }
+            Request::Stats => Json::obj().set("op", "stats"),
+        };
+        json::to_string(&j)
+    }
+}
+
+impl Response {
+    pub fn to_json_line(&self) -> String {
+        let j = match self {
+            Response::Fh { out, sqnorm, path } => Json::obj()
+                .set("ok", true)
+                .set("type", "fh")
+                .set(
+                    "out",
+                    Json::Arr(out.iter().map(|&v| Json::Num(v as f64)).collect()),
+                )
+                .set("sqnorm", *sqnorm)
+                .set(
+                    "path",
+                    match path {
+                        ExecPath::Pjrt => "pjrt",
+                        ExecPath::Native => "native",
+                    },
+                ),
+            Response::Sketch { bins } => Json::obj().set("ok", true).set("type", "sketch").set(
+                "bins",
+                Json::Arr(bins.iter().map(|&v| Json::Num(v as f64)).collect()),
+            ),
+            Response::Inserted { id } => Json::obj()
+                .set("ok", true)
+                .set("type", "inserted")
+                .set("id", *id as usize),
+            Response::Candidates { ids } => Json::obj()
+                .set("ok", true)
+                .set("type", "candidates")
+                .set("ids", ids.iter().map(|&x| x as usize).collect::<Vec<_>>()),
+            Response::Estimate { jaccard } => Json::obj()
+                .set("ok", true)
+                .set("type", "estimate")
+                .set("jaccard", *jaccard),
+            Response::Saved { path, entries } => Json::obj()
+                .set("ok", true)
+                .set("type", "saved")
+                .set("path", path.as_str())
+                .set("entries", *entries),
+            Response::Stats { json } => Json::obj()
+                .set("ok", true)
+                .set("type", "stats")
+                .set("stats", json.clone()),
+            Response::Error { message } => {
+                Json::obj().set("ok", false).set("error", message.as_str())
+            }
+        };
+        json::to_string(&j)
+    }
+
+    /// Decode one wire line (client side).
+    pub fn from_json_line(line: &str) -> Result<Response> {
+        let j = Json::parse(line).context("parse response json")?;
+        if j.get("ok").and_then(Json::as_bool) != Some(true) {
+            let msg = j
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown error")
+                .to_string();
+            return Ok(Response::Error { message: msg });
+        }
+        let ty = j
+            .get("type")
+            .and_then(Json::as_str)
+            .context("missing 'type'")?;
+        Ok(match ty {
+            "fh" => Response::Fh {
+                out: j
+                    .get("out")
+                    .and_then(Json::as_arr)
+                    .context("missing out")?
+                    .iter()
+                    .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+                    .collect(),
+                sqnorm: j.get("sqnorm").and_then(Json::as_f64).context("sqnorm")?,
+                path: match j.get("path").and_then(Json::as_str) {
+                    Some("pjrt") => ExecPath::Pjrt,
+                    _ => ExecPath::Native,
+                },
+            },
+            "sketch" => Response::Sketch {
+                bins: j
+                    .get("bins")
+                    .and_then(Json::as_arr)
+                    .context("missing bins")?
+                    .iter()
+                    .map(|v| v.as_f64().unwrap_or(0.0) as u64)
+                    .collect(),
+            },
+            "inserted" => Response::Inserted {
+                id: j
+                    .get("id")
+                    .and_then(Json::as_i64)
+                    .and_then(|x| u32::try_from(x).ok())
+                    .context("id")?,
+            },
+            "candidates" => Response::Candidates {
+                ids: arr_u32(&j, "ids")?,
+            },
+            "estimate" => Response::Estimate {
+                jaccard: j.get("jaccard").and_then(Json::as_f64).context("jaccard")?,
+            },
+            "saved" => Response::Saved {
+                path: j
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .context("path")?
+                    .to_string(),
+                entries: j
+                    .get("entries")
+                    .and_then(Json::as_usize)
+                    .context("entries")?,
+            },
+            "stats" => Response::Stats {
+                json: j.get("stats").cloned().unwrap_or(Json::Null),
+            },
+            other => bail!("unknown response type '{other}'"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = vec![
+            Request::FhTransform {
+                indices: vec![1, 5, 9],
+                values: vec![0.5, -1.0, 2.0],
+            },
+            Request::OphSketch { set: vec![7, 8, 9] },
+            Request::LshInsert {
+                id: 3,
+                set: vec![1, 2],
+            },
+            Request::LshQuery { set: vec![4] },
+            Request::Estimate { a: 1, b: 2 },
+            Request::IndexDoc {
+                id: 7,
+                text: "the quick brown fox".into(),
+            },
+            Request::QueryDoc {
+                text: "lazy dog".into(),
+            },
+            Request::SaveIndex {
+                path: "/tmp/x.mxls".into(),
+            },
+            Request::Stats,
+        ];
+        for r in reqs {
+            let line = r.to_json_line();
+            assert!(!line.contains('\n'));
+            let back = Request::from_json_line(&line).unwrap();
+            assert_eq!(back, r, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resps = vec![
+            Response::Fh {
+                out: vec![1.0, -0.5],
+                sqnorm: 1.25,
+                path: ExecPath::Pjrt,
+            },
+            Response::Sketch { bins: vec![5, 1 << 40] },
+            Response::Inserted { id: 9 },
+            Response::Candidates { ids: vec![1, 2, 3] },
+            Response::Estimate { jaccard: 0.75 },
+            Response::Saved {
+                path: "/tmp/x.mxls".into(),
+                entries: 12,
+            },
+            Response::Error {
+                message: "nope".into(),
+            },
+        ];
+        for r in resps {
+            let line = r.to_json_line();
+            let back = Response::from_json_line(&line).unwrap();
+            assert_eq!(back, r, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_malformed() {
+        assert!(Request::from_json_line("{}").is_err());
+        assert!(Request::from_json_line("{\"op\":\"zzz\"}").is_err());
+        assert!(Request::from_json_line("{\"op\":\"fh\"}").is_err());
+        assert!(Request::from_json_line("not json").is_err());
+        // Negative ids rejected.
+        assert!(Request::from_json_line("{\"op\":\"insert\",\"id\":-1,\"set\":[]}").is_err());
+    }
+}

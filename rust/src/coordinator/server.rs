@@ -1,0 +1,221 @@
+//! TCP front-end: newline-delimited JSON over a plain socket.
+//!
+//! One request per line, one response per line, connection-per-thread
+//! (bounded by a worker pool). This is deliberately simple — the protocol
+//! exists so the examples and benches can exercise the full service stack
+//! end-to-end, not to compete with gRPC.
+
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::service::Coordinator;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// A running server (owns the listener thread).
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    connections: Arc<AtomicUsize>,
+}
+
+impl Server {
+    /// Bind and serve `coordinator` on `cfg.listen` (use port 0 for an
+    /// ephemeral port; the bound address is available via [`Server::addr`]).
+    pub fn start(coordinator: Arc<Coordinator>, listen: &str) -> Result<Server> {
+        let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let connections = Arc::new(AtomicUsize::new(0));
+        let stop2 = Arc::clone(&stop);
+        let conns2 = Arc::clone(&connections);
+        let join = std::thread::Builder::new()
+            .name("mixtab-server".into())
+            .spawn(move || accept_loop(listener, coordinator, stop2, conns2))
+            .expect("spawn server");
+        Ok(Server {
+            addr,
+            stop,
+            join: Some(join),
+            connections,
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn connection_count(&self) -> usize {
+        self.connections.load(Ordering::Relaxed)
+    }
+
+    /// Request shutdown and join the accept thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coordinator: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    connections: Arc<AtomicUsize>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                connections.fetch_add(1, Ordering::Relaxed);
+                let c = Arc::clone(&coordinator);
+                let _ = std::thread::Builder::new()
+                    .name("mixtab-conn".into())
+                    .spawn(move || {
+                        let _ = serve_connection(stream, &c);
+                    });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn serve_connection(stream: TcpStream, coordinator: &Coordinator) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Request::from_json_line(&line) {
+            Ok(req) => coordinator.handle(req),
+            Err(e) => Response::Error {
+                message: format!("bad request: {e}"),
+            },
+        };
+        writer.write_all(resp.to_json_line().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for tests, benches and examples.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    /// Send one request, wait for its response.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        self.writer.write_all(req.to_json_line().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Response::from_json_line(line.trim_end())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::CoordinatorConfig;
+    use crate::coordinator::request::ExecPath;
+
+    fn native_coordinator() -> Arc<Coordinator> {
+        Arc::new(Coordinator::new(CoordinatorConfig {
+            enable_pjrt: false,
+            fh_dim: 16,
+            oph_k: 20,
+            ..Default::default()
+        }))
+    }
+
+    #[test]
+    fn serves_requests_over_tcp() {
+        let server = Server::start(native_coordinator(), "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let resp = client
+            .call(&Request::FhTransform {
+                indices: vec![1, 2],
+                values: vec![1.0, -1.0],
+            })
+            .unwrap();
+        let Response::Fh { out, path, .. } = resp else {
+            panic!("wrong response");
+        };
+        assert_eq!(out.len(), 16);
+        assert_eq!(path, ExecPath::Native);
+        // Second request on the same connection.
+        let resp = client.call(&Request::Stats).unwrap();
+        assert!(matches!(resp, Response::Stats { .. }));
+        assert_eq!(server.connection_count(), 1);
+        server.stop();
+    }
+
+    #[test]
+    fn bad_line_yields_error_response() {
+        let server = Server::start(native_coordinator(), "127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        let mut r = BufReader::new(stream);
+        w.write_all(b"this is not json\n").unwrap();
+        w.flush().unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let resp = Response::from_json_line(line.trim_end()).unwrap();
+        assert!(matches!(resp, Response::Error { .. }));
+        server.stop();
+    }
+
+    #[test]
+    fn multiple_clients() {
+        let server = Server::start(native_coordinator(), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    let resp = c
+                        .call(&Request::OphSketch {
+                            set: (i * 10..i * 10 + 50).collect(),
+                        })
+                        .unwrap();
+                    matches!(resp, Response::Sketch { .. })
+                })
+            })
+            .collect();
+        for h in handles {
+            assert!(h.join().unwrap());
+        }
+        server.stop();
+    }
+}

@@ -1,0 +1,448 @@
+//! The coordinator: routes typed requests to the right backend.
+//!
+//! * FH transforms — hashed in Rust (`FeatureHasher::plan`), then either the
+//!   PJRT batcher (when artifacts are loaded and the row fits the compiled
+//!   shape) or the bit-compatible native path. The two paths agree to f32
+//!   rounding; `rust/tests/runtime_artifacts.rs` enforces it.
+//! * OPH sketches — native sketcher (hashing dominates; batching buys
+//!   nothing for single sets) shared with the LSH index.
+//! * LSH insert/query — a mutexed index plus a set store for estimates.
+//!
+//! The service object is `Send + Sync`; the TCP front-end and the examples
+//! call it from many threads.
+
+use crate::coordinator::batcher::FhBatcher;
+use crate::coordinator::config::CoordinatorConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{ExecPath, Request, Response};
+use crate::data::sparse::SparseVector;
+use crate::lsh::{LshIndex, LshParams};
+use crate::runtime::artifact::Manifest;
+use crate::runtime::executor::ExecutorHandle;
+use crate::sketch::feature_hash::FeatureHasher;
+use crate::sketch::oph::{BinLayout, OneHashSketcher};
+use crate::sketch::DensifyMode;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// The coordinator service.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    fh: FeatureHasher,
+    oph: OneHashSketcher,
+    batcher: Option<FhBatcher>,
+    /// OPH artifact matching `cfg.oph_k`, when loaded: `(name, batch, nnz)`.
+    oph_artifact: Option<(String, usize, usize)>,
+    /// The basic hasher used to pre-hash elements for the PJRT OPH path —
+    /// must be the *same* function the native sketcher uses.
+    oph_hasher: Box<dyn crate::hash::Hasher32>,
+    lsh: Mutex<LshIndex>,
+    store: Mutex<HashMap<u32, Vec<u32>>>,
+    pub metrics: Arc<Metrics>,
+    /// Kept alive for the batcher thread; also used by benches directly.
+    executor: Option<Arc<ExecutorHandle>>,
+}
+
+impl Coordinator {
+    /// Construct from config. PJRT is optional: if artifacts are missing or
+    /// fail to load, the service runs native-only (logged, not fatal).
+    pub fn new(cfg: CoordinatorConfig) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let fh = FeatureHasher::new(cfg.family, cfg.seed, cfg.fh_dim, cfg.sign);
+        let oph = OneHashSketcher::new(
+            cfg.family.build(cfg.seed ^ 0x09EB_57A1),
+            cfg.oph_k,
+            BinLayout::Mod,
+            DensifyMode::Paper,
+        );
+        let lsh = Mutex::new(LshIndex::new(
+            LshParams::new(cfg.lsh_k, cfg.lsh_l),
+            cfg.family,
+            cfg.seed ^ 0x154A_11CE,
+        ));
+
+        let (batcher, executor, oph_artifact) = if cfg.enable_pjrt {
+            match Self::start_pjrt(&cfg, &metrics) {
+                Ok(triple) => triple,
+                Err(e) => {
+                    log::warn!("PJRT unavailable, running native-only: {e}");
+                    (None, None, None)
+                }
+            }
+        } else {
+            (None, None, None)
+        };
+
+        Self {
+            oph_hasher: cfg.family.build(cfg.seed ^ 0x09EB_57A1),
+            cfg,
+            fh,
+            oph,
+            batcher,
+            oph_artifact,
+            lsh,
+            store: Mutex::new(HashMap::new()),
+            metrics,
+            executor,
+        }
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn start_pjrt(
+        cfg: &CoordinatorConfig,
+        metrics: &Arc<Metrics>,
+    ) -> anyhow::Result<(
+        Option<FhBatcher>,
+        Option<Arc<ExecutorHandle>>,
+        Option<(String, usize, usize)>,
+    )> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let Some(meta) = manifest.find_fh_largest(cfg.fh_dim).cloned() else {
+            anyhow::bail!("no FH artifact for d'={}", cfg.fh_dim);
+        };
+        // OPH artifact is optional — only variants matching cfg.oph_k help.
+        let oph_artifact = manifest
+            .find_oph(cfg.oph_k, 1)
+            .map(|a| (a.name.clone(), a.kind.batch(), a.kind.nnz()));
+        // Load every artifact (OPH modules serve benches/examples too).
+        let executor = Arc::new(ExecutorHandle::spawn(manifest)?);
+        let batcher = FhBatcher::spawn(
+            Arc::clone(&executor),
+            &meta.name,
+            meta.kind,
+            cfg.max_delay_us,
+            cfg.queue_cap,
+            Arc::clone(metrics),
+        )?;
+        Ok((Some(batcher), Some(executor), oph_artifact))
+    }
+
+    /// Sketch many sets at once through the PJRT OPH artifact (pre-hash in
+    /// Rust → batched bucket-min on the runtime → densify in Rust). Falls
+    /// back to the native sketcher for oversized sets or when PJRT is off.
+    /// The result is identical to `OphSketch` from the native path — both
+    /// use `b = h mod k` with the same hasher — so sketches from the two
+    /// paths are mutually comparable.
+    pub fn oph_sketch_batch(&self, sets: &[Vec<u32>]) -> Vec<crate::sketch::oph::OphSketch> {
+        if let (Some((name, batch, nnz)), Some(exec)) = (&self.oph_artifact, &self.executor) {
+            if sets.iter().all(|s| s.len() <= *nnz) {
+                let k = self.cfg.oph_k;
+                let mut out = Vec::with_capacity(sets.len());
+                for chunk in sets.chunks(*batch) {
+                    let mut h = vec![0i32; batch * nnz];
+                    let mut valid = vec![0i32; batch * nnz];
+                    for (r, set) in chunk.iter().enumerate() {
+                        for (i, &x) in set.iter().enumerate() {
+                            h[r * nnz + i] = self.oph_hasher.hash(x) as i32;
+                            valid[r * nnz + i] = 1;
+                        }
+                    }
+                    match exec.run_oph(name, h, valid) {
+                        Ok(raw) => {
+                            for (r, _set) in chunk.iter().enumerate() {
+                                let bins: Vec<u64> = raw[r * k..(r + 1) * k]
+                                    .iter()
+                                    .map(|&v| {
+                                        if v == i32::MAX {
+                                            crate::sketch::oph::EMPTY_BIN
+                                        } else {
+                                            v as u64
+                                        }
+                                    })
+                                    .collect();
+                                let mut sketch = crate::sketch::oph::OphSketch { bins };
+                                self.oph.densify_in_place(&mut sketch);
+                                out.push(sketch);
+                            }
+                        }
+                        Err(e) => {
+                            log::warn!("pjrt oph batch failed, native fallback: {e}");
+                            out.extend(chunk.iter().map(|s| self.oph.sketch(s)));
+                        }
+                    }
+                }
+                return out;
+            }
+        }
+        sets.iter().map(|s| self.oph.sketch(s)).collect()
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    /// Whether the PJRT path is live.
+    pub fn pjrt_enabled(&self) -> bool {
+        self.batcher.is_some()
+    }
+
+    /// Direct executor access (benches).
+    pub fn executor(&self) -> Option<&Arc<ExecutorHandle>> {
+        self.executor.as_ref()
+    }
+
+    /// Handle one request.
+    pub fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::FhTransform { indices, values } => self.handle_fh(indices, values),
+            Request::OphSketch { set } => {
+                Metrics::inc(&self.metrics.oph_requests);
+                let s = self.oph.sketch(&set);
+                Response::Sketch { bins: s.bins }
+            }
+            Request::LshInsert { id, set } => {
+                Metrics::inc(&self.metrics.lsh_inserts);
+                self.lsh.lock().unwrap().insert(id, &set);
+                self.store.lock().unwrap().insert(id, set);
+                Response::Inserted { id }
+            }
+            Request::LshQuery { set } => {
+                Metrics::inc(&self.metrics.lsh_queries);
+                let ids = self.lsh.lock().unwrap().query(&set);
+                Response::Candidates { ids }
+            }
+            Request::Estimate { a, b } => {
+                Metrics::inc(&self.metrics.estimates);
+                let store = self.store.lock().unwrap();
+                match (store.get(&a), store.get(&b)) {
+                    (Some(sa), Some(sb)) => {
+                        let ja = self.oph.sketch(sa);
+                        let jb = self.oph.sketch(sb);
+                        Response::Estimate {
+                            jaccard: self.oph.estimate(&ja, &jb),
+                        }
+                    }
+                    _ => {
+                        Metrics::inc(&self.metrics.errors);
+                        Response::Error {
+                            message: format!("unknown id(s): {a}, {b}"),
+                        }
+                    }
+                }
+            }
+            Request::IndexDoc { id, text } => {
+                Metrics::inc(&self.metrics.lsh_inserts);
+                let set = crate::data::shingle::byte_shingles(&text, 5);
+                self.lsh.lock().unwrap().insert(id, &set);
+                self.store.lock().unwrap().insert(id, set);
+                Response::Inserted { id }
+            }
+            Request::QueryDoc { text } => {
+                Metrics::inc(&self.metrics.lsh_queries);
+                let set = crate::data::shingle::byte_shingles(&text, 5);
+                let ids = self.lsh.lock().unwrap().query(&set);
+                Response::Candidates { ids }
+            }
+            Request::SaveIndex { path } => {
+                let lsh = self.lsh.lock().unwrap();
+                match crate::lsh::persist::save(
+                    &lsh,
+                    self.cfg.family,
+                    self.cfg.seed ^ 0x154A_11CE,
+                    &path,
+                ) {
+                    Ok(()) => Response::Saved {
+                        path,
+                        entries: lsh.len(),
+                    },
+                    Err(e) => {
+                        Metrics::inc(&self.metrics.errors);
+                        Response::Error {
+                            message: format!("save failed: {e}"),
+                        }
+                    }
+                }
+            }
+            Request::Stats => Response::Stats {
+                json: self.metrics.snapshot(),
+            },
+        }
+    }
+
+    fn handle_fh(&self, indices: Vec<u32>, values: Vec<f64>) -> Response {
+        let start = Instant::now();
+        Metrics::inc(&self.metrics.fh_requests);
+        if indices.len() != values.len() {
+            Metrics::inc(&self.metrics.errors);
+            return Response::Error {
+                message: "indices/values length mismatch".into(),
+            };
+        }
+        let v = SparseVector::new(indices, values);
+
+        // Try the PJRT batch path first.
+        if let Some(b) = &self.batcher {
+            if v.nnz() <= b.max_nnz() {
+                let (bins, vals) = self.fh.plan(&v, v.nnz());
+                if let Some(rx) = b.submit(bins, vals) {
+                    match rx.recv() {
+                        Ok(Ok((row, sq))) => {
+                            Metrics::inc(&self.metrics.fh_pjrt_rows);
+                            self.metrics.observe_latency(start);
+                            return Response::Fh {
+                                out: row,
+                                sqnorm: sq,
+                                path: ExecPath::Pjrt,
+                            };
+                        }
+                        Ok(Err(e)) => {
+                            log::warn!("pjrt row failed, falling back: {e}");
+                        }
+                        Err(_) => {}
+                    }
+                } else {
+                    Metrics::inc(&self.metrics.fh_shed);
+                }
+            }
+        }
+
+        // Native path.
+        let out = self.fh.transform(&v);
+        let sq: f64 = out.iter().map(|x| x * x).sum();
+        Metrics::inc(&self.metrics.fh_native_rows);
+        self.metrics.observe_latency(start);
+        Response::Fh {
+            out: out.into_iter().map(|x| x as f32).collect(),
+            sqnorm: sq,
+            path: ExecPath::Native,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native_cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            enable_pjrt: false,
+            fh_dim: 32,
+            oph_k: 50,
+            lsh_k: 4,
+            lsh_l: 6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fh_native_roundtrip() {
+        let c = Coordinator::new(native_cfg());
+        assert!(!c.pjrt_enabled());
+        let resp = c.handle(Request::FhTransform {
+            indices: vec![1, 2, 3],
+            values: vec![0.5, 0.5, 0.5],
+        });
+        let Response::Fh { out, sqnorm, path } = resp else {
+            panic!("wrong response type");
+        };
+        assert_eq!(path, ExecPath::Native);
+        assert_eq!(out.len(), 32);
+        let manual: f64 = out.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        assert!((sqnorm - manual).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lsh_insert_query_estimate() {
+        let c = Coordinator::new(native_cfg());
+        let set_a: Vec<u32> = (0..300).collect();
+        let set_b: Vec<u32> = (30..330).collect(); // J = 270/330 ≈ 0.82
+        c.handle(Request::LshInsert {
+            id: 1,
+            set: set_a.clone(),
+        });
+        c.handle(Request::LshInsert {
+            id: 2,
+            set: set_b.clone(),
+        });
+        let Response::Candidates { ids } = c.handle(Request::LshQuery { set: set_a }) else {
+            panic!()
+        };
+        assert!(ids.contains(&1));
+        let Response::Estimate { jaccard } = c.handle(Request::Estimate { a: 1, b: 2 }) else {
+            panic!()
+        };
+        assert!((jaccard - 0.82).abs() < 0.2, "jaccard {jaccard}");
+        let Response::Error { .. } = c.handle(Request::Estimate { a: 1, b: 99 }) else {
+            panic!("expected error for unknown id")
+        };
+    }
+
+    #[test]
+    fn oph_sketch_has_no_empty_bins() {
+        let c = Coordinator::new(native_cfg());
+        let Response::Sketch { bins } = c.handle(Request::OphSketch {
+            set: (0..500).collect(),
+        }) else {
+            panic!()
+        };
+        assert_eq!(bins.len(), 50);
+        assert!(bins.iter().all(|&b| b != crate::sketch::EMPTY_BIN));
+    }
+
+    #[test]
+    fn stats_reflect_traffic() {
+        let c = Coordinator::new(native_cfg());
+        c.handle(Request::FhTransform {
+            indices: vec![1],
+            values: vec![1.0],
+        });
+        c.handle(Request::OphSketch { set: vec![1, 2] });
+        let Response::Stats { json } = c.handle(Request::Stats) else {
+            panic!()
+        };
+        assert_eq!(json.get("fh_requests").unwrap().as_i64(), Some(1));
+        assert_eq!(json.get("oph_requests").unwrap().as_i64(), Some(1));
+        assert_eq!(json.get("fh_native_rows").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn doc_ingest_and_query() {
+        // Low K / high L so a J ≈ 0.7 near-duplicate is retrieved whp.
+        let c = Coordinator::new(CoordinatorConfig {
+            lsh_k: 2,
+            lsh_l: 10,
+            ..native_cfg()
+        });
+        let doc = "the quick brown fox jumps over the lazy dog repeatedly";
+        c.handle(Request::IndexDoc {
+            id: 5,
+            text: doc.into(),
+        });
+        // Exact duplicate always collides.
+        let Response::Candidates { ids } = c.handle(Request::QueryDoc { text: doc.into() })
+        else {
+            panic!()
+        };
+        assert!(ids.contains(&5), "exact duplicate not found");
+        let Response::Candidates { ids } = c.handle(Request::QueryDoc {
+            text: doc.replace("lazy", "sleepy"),
+        }) else {
+            panic!()
+        };
+        assert!(ids.contains(&5), "near-duplicate doc not found");
+        // Save the index and reload it.
+        let path = std::env::temp_dir().join("mixtab_svc_snap.mxls");
+        let Response::Saved { entries, .. } = c.handle(Request::SaveIndex {
+            path: path.to_str().unwrap().into(),
+        }) else {
+            panic!()
+        };
+        assert_eq!(entries, 1);
+        let (loaded, fam, _) = crate::lsh::persist::load(&path).unwrap();
+        assert_eq!(fam, c.config().family);
+        assert_eq!(loaded.len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mismatched_fh_input_is_error() {
+        let c = Coordinator::new(native_cfg());
+        let Response::Error { .. } = c.handle(Request::FhTransform {
+            indices: vec![1, 2],
+            values: vec![1.0],
+        }) else {
+            panic!()
+        };
+    }
+}

@@ -1,0 +1,148 @@
+//! libsvm sparse-format IO.
+//!
+//! The paper's real datasets (MNIST, News20) are distributed in this format
+//! by the LIBSVM project [11]. Drop the files into `data/real/` and the
+//! experiment drivers use them instead of the generators:
+//!
+//! ```text
+//! <label> <index>:<value> <index>:<value> ...
+//! ```
+//!
+//! Indices are 1-based in the wild; we convert to 0-based on read and back
+//! on write. Lines starting with `#` and blank lines are skipped.
+
+use crate::data::sparse::{Dataset, SparseVector};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Parse a dataset from a reader.
+pub fn read(reader: impl BufRead) -> Result<Dataset> {
+    let mut vectors = Vec::new();
+    let mut labels = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.context("read line")?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label_tok = parts.next().unwrap();
+        let label: i32 = label_tok
+            .parse::<f64>()
+            .map(|f| f as i32)
+            .with_context(|| format!("line {}: bad label '{label_tok}'", lineno + 1))?;
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for tok in parts {
+            let (i, v) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: bad pair '{tok}'", lineno + 1))?;
+            let i: u32 = i
+                .parse()
+                .with_context(|| format!("line {}: bad index '{i}'", lineno + 1))?;
+            if i == 0 {
+                bail!("line {}: libsvm indices are 1-based, got 0", lineno + 1);
+            }
+            let v: f64 = v
+                .parse()
+                .with_context(|| format!("line {}: bad value '{v}'", lineno + 1))?;
+            idx.push(i - 1);
+            val.push(v);
+        }
+        vectors.push(SparseVector::new(idx, val));
+        labels.push(label);
+    }
+    Ok(Dataset::new(vectors, labels))
+}
+
+/// Load a dataset from a file path.
+pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    read(std::io::BufReader::new(f))
+}
+
+/// Write a dataset to a file (1-based indices).
+pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    for (i, v) in ds.vectors.iter().enumerate() {
+        let label = ds.labels.get(i).copied().unwrap_or(0);
+        write!(w, "{label}")?;
+        for (&j, &x) in v.indices.iter().zip(&v.values) {
+            write!(w, " {}:{}", j + 1, x)?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Look for `<name>` (and `<name>.t` query split) under `dir`; returns
+/// `(database, queries)` when both exist.
+pub fn load_split(dir: impl AsRef<Path>, name: &str) -> Option<(Dataset, Dataset)> {
+    let dir = dir.as_ref();
+    let db_path = dir.join(name);
+    let q_path = dir.join(format!("{name}.t"));
+    if db_path.exists() && q_path.exists() {
+        match (load(&db_path), load(&q_path)) {
+            (Ok(db), Ok(q)) => Some((db, q)),
+            _ => None,
+        }
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_basic() {
+        let text = "1 3:0.5 7:1.25\n-1 1:2\n\n# comment\n0 2:1 2:1\n";
+        let ds = read(Cursor::new(text)).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.labels, vec![1, -1, 0]);
+        assert_eq!(ds.vectors[0].indices, vec![2, 6]); // 0-based
+        assert_eq!(ds.vectors[0].values, vec![0.5, 1.25]);
+        // Duplicate indices merged by SparseVector::new.
+        assert_eq!(ds.vectors[2].values, vec![2.0]);
+    }
+
+    #[test]
+    fn float_labels_truncate() {
+        let ds = read(Cursor::new("2.0 1:1\n")).unwrap();
+        assert_eq!(ds.labels, vec![2]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read(Cursor::new("1 nocolon\n")).is_err());
+        assert!(read(Cursor::new("notanumber 1:1\n")).is_err());
+        assert!(read(Cursor::new("1 0:5\n")).is_err()); // 0 index
+    }
+
+    #[test]
+    fn roundtrip() {
+        let text = "1 1:0.5 9:2\n3 4:1\n";
+        let ds = read(Cursor::new(text)).unwrap();
+        let dir = std::env::temp_dir().join("mixtab_libsvm_test");
+        let path = dir.join("data.svm");
+        save(&ds, &path).unwrap();
+        let ds2 = load(&path).unwrap();
+        assert_eq!(ds.labels, ds2.labels);
+        assert_eq!(ds.vectors[0], ds2.vectors[0]);
+        assert_eq!(ds.vectors[1], ds2.vectors[1]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_split_absent_is_none() {
+        assert!(load_split("/nonexistent-dir-xyz", "mnist").is_none());
+    }
+}

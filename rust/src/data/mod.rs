@@ -1,0 +1,21 @@
+//! Dataset substrate.
+//!
+//! * [`sparse`] — sparse vector / dataset types shared by every layer.
+//! * [`synthetic`] — the paper's §4.1 synthetic generators (both datasets).
+//! * [`mnist_like`] — statistically-matched stand-in for MNIST (see
+//!   DESIGN.md §4 for the substitution argument), plus a loader for the
+//!   real data when available.
+//! * [`news20_like`] — statistically-matched stand-in for News20.
+//! * [`libsvm`] — reader/writer for the libsvm sparse format, so the real
+//!   MNIST/News20 files can be dropped in.
+//! * [`shingle`] — w-shingling of documents into 32-bit ids (§1: "data
+//!   points are often stored as w-shingles").
+
+pub mod sparse;
+pub mod synthetic;
+pub mod mnist_like;
+pub mod news20_like;
+pub mod libsvm;
+pub mod shingle;
+
+pub use sparse::{Dataset, SparseVector};

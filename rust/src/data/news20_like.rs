@@ -1,0 +1,224 @@
+//! News20 stand-in generator.
+//!
+//! Matches the statistics the paper reports for the News20 bag-of-words
+//! data (§4.2): ≈ 1.3·10⁶ features, ≈ 500 non-zeros per document, and very
+//! few similar pairs (≈ 0.2 neighbours per point above J = 1/2).
+//!
+//! Crucially it reproduces the *structural* property §4.1 argues makes weak
+//! hash functions fail on text: token ids are assigned by frequency rank
+//! ("it is quite common to let frequent words/shingles have the lowest
+//! identifier"), so every document's support contains a dense block of
+//! small ids. Token frequencies are Zipf-distributed; values are TF-style
+//! counts normalised to unit length.
+
+use crate::data::sparse::{Dataset, SparseVector};
+use crate::util::rng::Xoshiro256;
+
+/// Vocabulary size (≈ News20's 1.3M feature space).
+pub const DIM: usize = 1_300_000;
+
+/// Generation parameters.
+#[derive(Debug, Clone)]
+pub struct News20LikeParams {
+    /// Zipf exponent for token frequencies.
+    pub zipf_s: f64,
+    /// Tokens drawn per document (with repetition → TF counts).
+    pub tokens_per_doc: usize,
+    /// Number of topics; each topic boosts a band of mid-frequency ids so
+    /// documents cluster mildly without creating near-duplicates.
+    pub topics: usize,
+    /// Probability a token is drawn from the topic band instead of the
+    /// global Zipf distribution.
+    pub topic_mix: f64,
+    /// Probability a document is a light mutation of an earlier one —
+    /// matching the real News20's sparse near-duplicate structure (paper:
+    /// ≈ 0.2 neighbours per point above J = 1/2, i.e. a small but non-zero
+    /// duplicate population from cross-posts/quotes).
+    pub near_dup_rate: f64,
+}
+
+impl Default for News20LikeParams {
+    fn default() -> Self {
+        Self {
+            zipf_s: 1.05,
+            tokens_per_doc: 800, // ≈ 500 distinct after TF-merging
+            topics: 20,
+            topic_mix: 0.25,
+            near_dup_rate: 0.05,
+        }
+    }
+}
+
+/// Generate `n` documents.
+pub fn generate(n: usize, params: &News20LikeParams, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256::stream(seed, 0x4E45_5753_3230); // "NEWS20"
+    let harmonic = Xoshiro256::zipf_harmonic(DIM, params.zipf_s);
+    // Topic bands: contiguous id ranges in the mid-frequency zone.
+    let band_width = 3_000usize;
+    let bands: Vec<usize> = (0..params.topics)
+        .map(|t| 10_000 + t * band_width * 2)
+        .collect();
+    let mut vectors: Vec<SparseVector> = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for doc_i in 0..n {
+        // Near-duplicate: copy an earlier document and drop ~10% of its
+        // support (a quoted/cross-posted message).
+        if doc_i > 0 && rng.bernoulli(params.near_dup_rate) {
+            let src = rng.range(0, vectors.len());
+            let (idx, vals): (Vec<u32>, Vec<f64>) = vectors[src]
+                .indices
+                .iter()
+                .zip(&vectors[src].values)
+                .filter(|_| !rng.bernoulli(0.1))
+                .map(|(&i, &v)| (i, v))
+                .unzip();
+            let mut v = SparseVector { indices: idx, values: vals };
+            v.normalize();
+            vectors.push(v);
+            labels.push(labels[src]);
+            continue;
+        }
+        let topic = rng.range(0, params.topics);
+        let band_lo = bands[topic];
+        let mut counts: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+        for _ in 0..params.tokens_per_doc {
+            let id = if rng.bernoulli(params.topic_mix) {
+                // Zipf *within* the topic band, keeping rank structure.
+                let off = rng.zipf(band_width, 1.2, Xoshiro256::zipf_harmonic(band_width, 1.2));
+                (band_lo + off) as u32
+            } else {
+                rng.zipf(DIM, params.zipf_s, harmonic) as u32
+            };
+            *counts.entry(id).or_insert(0.0) += 1.0;
+        }
+        let (idx, vals): (Vec<u32>, Vec<f64>) = {
+            let mut pairs: Vec<(u32, f64)> = counts.into_iter().collect();
+            pairs.sort_by_key(|p| p.0);
+            pairs.into_iter().unzip()
+        };
+        let mut v = SparseVector {
+            indices: idx,
+            values: vals,
+        };
+        v.normalize();
+        vectors.push(v);
+        labels.push(topic as i32);
+    }
+    let mut ds = Dataset::new(vectors, labels);
+    ds.dim = DIM;
+    ds
+}
+
+/// Default database/query split (scaled-down from the paper's ~10k/10k).
+pub fn default_split(n_db: usize, n_query: usize, seed: u64) -> (Dataset, Dataset) {
+    let ds = generate(n_db + n_query, &News20LikeParams::default(), seed);
+    ds.split(n_db)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::estimators::jaccard_sorted;
+
+    #[test]
+    fn statistics_match_news20() {
+        let ds = generate(100, &News20LikeParams::default(), 3);
+        assert_eq!(ds.dim, DIM);
+        let avg = ds.avg_nnz();
+        assert!(
+            (350.0..650.0).contains(&avg),
+            "avg nnz {avg} should be ~500"
+        );
+        for v in &ds.vectors {
+            assert!((v.norm2() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn frequent_words_have_small_ids() {
+        // The head of the id space must be much denser than the tail.
+        let ds = generate(60, &News20LikeParams::default(), 5);
+        let mut head = 0usize;
+        let mut tail = 0usize;
+        for v in &ds.vectors {
+            for &i in &v.indices {
+                if (i as usize) < 1000 {
+                    head += 1;
+                } else if (i as usize) > 500_000 {
+                    tail += 1;
+                }
+            }
+        }
+        assert!(
+            head > tail * 3,
+            "head {head} should dominate tail {tail} (ids = frequency ranks)"
+        );
+    }
+
+    #[test]
+    fn few_similar_pairs_without_dups() {
+        // Independent documents essentially never exceed J = 1/2.
+        let params = News20LikeParams {
+            near_dup_rate: 0.0,
+            ..Default::default()
+        };
+        let ds = generate(80, &params, 7);
+        let sets = ds.as_sets();
+        let mut similar = 0usize;
+        for i in 0..sets.len() {
+            for j in (i + 1)..sets.len() {
+                if jaccard_sorted(&sets[i], &sets[j]) > 0.5 {
+                    similar += 1;
+                }
+            }
+        }
+        assert!(similar <= 2, "similar pairs {similar} (should be ~0)");
+    }
+
+    #[test]
+    fn sparse_near_dup_population_at_default_rate() {
+        // The default 5% near-dup rate yields a small but non-zero set of
+        // J > 0.5 pairs (News20's ≈0.2-neighbours-per-point statistic).
+        let ds = generate(120, &News20LikeParams::default(), 13);
+        let sets = ds.as_sets();
+        let mut similar = 0usize;
+        for i in 0..sets.len() {
+            for j in (i + 1)..sets.len() {
+                if jaccard_sorted(&sets[i], &sets[j]) > 0.5 {
+                    similar += 1;
+                }
+            }
+        }
+        assert!(
+            (1..=30).contains(&similar),
+            "similar pairs {similar} (want a small non-zero count)"
+        );
+    }
+
+    #[test]
+    fn topical_overlap_above_random() {
+        // Same-topic documents should share more ids than cross-topic ones
+        // (mild clustering, not near-duplication).
+        let ds = generate(120, &News20LikeParams::default(), 9);
+        let sets = ds.as_sets();
+        let (mut same, mut same_n, mut cross, mut cross_n) = (0.0, 0, 0.0, 0);
+        for i in 0..sets.len() {
+            for j in (i + 1)..sets.len() {
+                let jac = jaccard_sorted(&sets[i], &sets[j]);
+                if ds.labels[i] == ds.labels[j] {
+                    same += jac;
+                    same_n += 1;
+                } else {
+                    cross += jac;
+                    cross_n += 1;
+                }
+            }
+        }
+        let same_avg = same / same_n.max(1) as f64;
+        let cross_avg = cross / cross_n.max(1) as f64;
+        assert!(
+            same_avg > cross_avg * 1.3,
+            "same {same_avg} cross {cross_avg}"
+        );
+    }
+}

@@ -1,0 +1,250 @@
+//! Sparse vectors and datasets.
+
+/// A sparse vector: parallel `(indices, values)` with indices strictly
+/// increasing. Feature ids are `u32` — the paper's universe is `[2^32]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseVector {
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl SparseVector {
+    /// Construct, sorting by index and combining duplicates.
+    pub fn new(indices: Vec<u32>, values: Vec<f64>) -> Self {
+        assert_eq!(indices.len(), values.len());
+        let mut pairs: Vec<(u32, f64)> = indices.into_iter().zip(values).collect();
+        pairs.sort_by_key(|p| p.0);
+        let mut out_i = Vec::with_capacity(pairs.len());
+        let mut out_v: Vec<f64> = Vec::with_capacity(pairs.len());
+        for (i, v) in pairs {
+            if out_i.last() == Some(&i) {
+                *out_v.last_mut().unwrap() += v;
+            } else {
+                out_i.push(i);
+                out_v.push(v);
+            }
+        }
+        Self {
+            indices: out_i,
+            values: out_v,
+        }
+    }
+
+    /// Indicator vector of a set, normalised to unit 2-norm — the FH input
+    /// construction of §4.1 ("taking the indicator vector of a set A … and
+    /// normalizing the length").
+    pub fn unit_indicator(set: &[u32]) -> Self {
+        let mut idx: Vec<u32> = set.to_vec();
+        idx.sort_unstable();
+        idx.dedup();
+        let val = 1.0 / (idx.len().max(1) as f64).sqrt();
+        let n = idx.len();
+        Self {
+            indices: idx,
+            values: vec![val; n],
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn norm2_sq(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+
+    pub fn norm2(&self) -> f64 {
+        self.norm2_sq().sqrt()
+    }
+
+    pub fn linf(&self) -> f64 {
+        self.values.iter().fold(0.0, |m, v| m.max(v.abs()))
+    }
+
+    /// Scale to unit 2-norm (no-op for the zero vector).
+    pub fn normalize(&mut self) {
+        let n = self.norm2();
+        if n > 0.0 {
+            for v in &mut self.values {
+                *v /= n;
+            }
+        }
+    }
+
+    /// Sparse addition.
+    pub fn add(&self, other: &SparseVector) -> SparseVector {
+        let mut idx = Vec::with_capacity(self.nnz() + other.nnz());
+        let mut val = Vec::with_capacity(self.nnz() + other.nnz());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.nnz() || j < other.nnz() {
+            let take_self = j >= other.nnz()
+                || (i < self.nnz() && self.indices[i] <= other.indices[j]);
+            let take_other = i >= self.nnz()
+                || (j < other.nnz() && other.indices[j] <= self.indices[i]);
+            if take_self && take_other {
+                idx.push(self.indices[i]);
+                val.push(self.values[i] + other.values[j]);
+                i += 1;
+                j += 1;
+            } else if take_self {
+                idx.push(self.indices[i]);
+                val.push(self.values[i]);
+                i += 1;
+            } else {
+                idx.push(other.indices[j]);
+                val.push(other.values[j]);
+                j += 1;
+            }
+        }
+        SparseVector {
+            indices: idx,
+            values: val,
+        }
+    }
+
+    /// Dot product.
+    pub fn dot(&self, other: &SparseVector) -> f64 {
+        let (mut i, mut j, mut acc) = (0usize, 0usize, 0.0);
+        while i < self.nnz() && j < other.nnz() {
+            match self.indices[i].cmp(&other.indices[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    acc += self.values[i] * other.values[j];
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        acc
+    }
+}
+
+/// A labelled sparse dataset.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub vectors: Vec<SparseVector>,
+    pub labels: Vec<i32>,
+    /// Total feature dimension (max index + 1 unless set explicitly).
+    pub dim: usize,
+}
+
+impl Dataset {
+    pub fn new(vectors: Vec<SparseVector>, labels: Vec<i32>) -> Self {
+        assert!(labels.is_empty() || labels.len() == vectors.len());
+        let dim = vectors
+            .iter()
+            .flat_map(|v| v.indices.last().copied())
+            .max()
+            .map(|m| m as usize + 1)
+            .unwrap_or(0);
+        Self {
+            vectors,
+            labels,
+            dim,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.vectors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vectors.is_empty()
+    }
+
+    pub fn avg_nnz(&self) -> f64 {
+        if self.vectors.is_empty() {
+            return 0.0;
+        }
+        self.vectors.iter().map(|v| v.nnz()).sum::<usize>() as f64 / self.vectors.len() as f64
+    }
+
+    /// The vectors' support sets (for set-similarity experiments).
+    pub fn as_sets(&self) -> Vec<Vec<u32>> {
+        self.vectors.iter().map(|v| v.indices.clone()).collect()
+    }
+
+    /// Split into (database, queries) at `n_db`.
+    pub fn split(mut self, n_db: usize) -> (Dataset, Dataset) {
+        let n_db = n_db.min(self.vectors.len());
+        let q_vecs = self.vectors.split_off(n_db);
+        let q_labels = if self.labels.is_empty() {
+            Vec::new()
+        } else {
+            self.labels.split_off(n_db)
+        };
+        let dim = self.dim;
+        (
+            Dataset {
+                vectors: self.vectors,
+                labels: self.labels,
+                dim,
+            },
+            Dataset {
+                vectors: q_vecs,
+                labels: q_labels,
+                dim,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_sorts_and_merges() {
+        let v = SparseVector::new(vec![5, 1, 5, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(v.indices, vec![1, 2, 5]);
+        assert_eq!(v.values, vec![2.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn unit_indicator_norm() {
+        let v = SparseVector::unit_indicator(&[9, 3, 3, 7]);
+        assert_eq!(v.nnz(), 3);
+        assert!((v.norm2() - 1.0).abs() < 1e-12);
+        assert_eq!(v.indices, vec![3, 7, 9]);
+    }
+
+    #[test]
+    fn add_and_dot() {
+        let a = SparseVector::new(vec![1, 3], vec![1.0, 2.0]);
+        let b = SparseVector::new(vec![3, 4], vec![5.0, 7.0]);
+        let s = a.add(&b);
+        assert_eq!(s.indices, vec![1, 3, 4]);
+        assert_eq!(s.values, vec![1.0, 7.0, 7.0]);
+        assert!((a.dot(&b) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_zero_safe() {
+        let mut z = SparseVector::new(vec![], vec![]);
+        z.normalize();
+        assert_eq!(z.nnz(), 0);
+        let mut v = SparseVector::new(vec![1, 2], vec![3.0, 4.0]);
+        v.normalize();
+        assert!((v.norm2() - 1.0).abs() < 1e-12);
+        assert!((v.linf() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dataset_stats_and_split() {
+        let ds = Dataset::new(
+            vec![
+                SparseVector::new(vec![0, 9], vec![1.0, 1.0]),
+                SparseVector::new(vec![5], vec![1.0]),
+                SparseVector::new(vec![2, 3, 4], vec![1.0, 1.0, 1.0]),
+            ],
+            vec![0, 1, 0],
+        );
+        assert_eq!(ds.dim, 10);
+        assert!((ds.avg_nnz() - 2.0).abs() < 1e-12);
+        let (db, q) = ds.split(2);
+        assert_eq!(db.len(), 2);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.labels, vec![0]);
+    }
+}

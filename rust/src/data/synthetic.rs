@@ -1,0 +1,178 @@
+//! The paper's synthetic datasets (§4.1).
+//!
+//! **Dataset 1** (Figures 2, 3, 6, 7, 9): for a parameter `n`, the
+//! intersection `A ∩ B` samples each integer in `[2n]` independently with
+//! probability 1/2; the symmetric difference adds `n` numbers greater than
+//! `2n`, split evenly between A and B. The dense `[2n]` block is exactly the
+//! structure that defeats `(ax+b) mod p`-style hashing: the intersection is
+//! spread too *evenly*, so its elements win the per-bin minima too often and
+//! J(A, B) is over-estimated.
+//!
+//! **Dataset 2** (Figure 8, §4.1 "additional synthetic"): elements from
+//! `[4n]`; the symmetric difference samples `{0..n−1} ∪ {3n..4n−1}` w.p. 1/2
+//! and the intersection samples `{n..3n−1}` w.p. 1/2.
+//!
+//! **FH inputs**: indicator vectors of such sets, length-normalised (§4.1),
+//! and for dataset 2 the variant sampling `[3n]` w.p. 1/2.
+//!
+//! Both generators take `sample = false` to produce the deterministic
+//! no-sampling variants the paper says "showed an even wider gap".
+
+use crate::data::sparse::SparseVector;
+use crate::util::rng::Xoshiro256;
+
+/// A generated set pair with known ground truth.
+#[derive(Debug, Clone)]
+pub struct SetPair {
+    pub a: Vec<u32>,
+    pub b: Vec<u32>,
+    /// Exact Jaccard similarity.
+    pub jaccard: f64,
+}
+
+/// §4.1 dataset 1. `n` controls both the dense block `[2n]` and the
+/// symmetric-difference size `n`.
+pub fn dataset1(n: usize, sample: bool, rng: &mut Xoshiro256) -> SetPair {
+    let mut inter: Vec<u32> = Vec::with_capacity(n);
+    for x in 0..(2 * n) as u32 {
+        if !sample || rng.bernoulli(0.5) {
+            inter.push(x);
+        }
+    }
+    // n numbers greater than 2n, distributed evenly to A and B.
+    // Use consecutive ids above 2n (the structure, not the identity, of the
+    // difference matters; consecutive keeps them "structured" too).
+    let mut a = inter.clone();
+    let mut b = inter.clone();
+    let base = (2 * n) as u32;
+    for i in 0..n as u32 {
+        if i % 2 == 0 {
+            a.push(base + i);
+        } else {
+            b.push(base + i);
+        }
+    }
+    let jaccard = inter.len() as f64 / (inter.len() + n) as f64;
+    SetPair { a, b, jaccard }
+}
+
+/// §4.1 dataset 2 ("additional synthetic"): universe `[4n]`; symmetric
+/// difference ⊂ `{0..n} ∪ {3n..4n}`, intersection ⊂ `{n..3n}`.
+pub fn dataset2(n: usize, sample: bool, rng: &mut Xoshiro256) -> SetPair {
+    let n32 = n as u32;
+    let mut inter = Vec::new();
+    for x in n32..3 * n32 {
+        if !sample || rng.bernoulli(0.5) {
+            inter.push(x);
+        }
+    }
+    let mut diff = Vec::new();
+    for x in (0..n32).chain(3 * n32..4 * n32) {
+        if !sample || rng.bernoulli(0.5) {
+            diff.push(x);
+        }
+    }
+    let mut a = inter.clone();
+    let mut b = inter.clone();
+    for (i, &x) in diff.iter().enumerate() {
+        if i % 2 == 0 {
+            a.push(x);
+        } else {
+            b.push(x);
+        }
+    }
+    let jaccard = inter.len() as f64 / (inter.len() + diff.len()) as f64;
+    SetPair { a, b, jaccard }
+}
+
+/// FH input for dataset 1 (§4.1): unit-normalised indicator of a set `A`
+/// generated as in [`dataset1`] — i.e. the dense half `[2n]` sampled w.p.
+/// 1/2 plus `n/2` structured ids above `2n` (A's half of the difference).
+pub fn fh_vector1(n: usize, sample: bool, rng: &mut Xoshiro256) -> SparseVector {
+    let pair = dataset1(n, sample, rng);
+    SparseVector::unit_indicator(&pair.a)
+}
+
+/// FH input for dataset 2 (§4.1 additional): ids sampled from `[3n]` w.p.
+/// 1/2 (or all of `[3n]` when `sample = false`).
+pub fn fh_vector2(n: usize, sample: bool, rng: &mut Xoshiro256) -> SparseVector {
+    let mut ids = Vec::new();
+    for x in 0..(3 * n) as u32 {
+        if !sample || rng.bernoulli(0.5) {
+            ids.push(x);
+        }
+    }
+    SparseVector::unit_indicator(&ids)
+}
+
+/// Sparse variant used by Figure 9: a set of ~`size` elements drawn from the
+/// same dense-block structure, scaled so OPH at k = 200 sees many empty bins
+/// (`n = k/2` regime in the paper).
+pub fn sparse_pair(size: usize, rng: &mut Xoshiro256) -> SetPair {
+    dataset1(size, true, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::estimators::jaccard_exact;
+
+    #[test]
+    fn dataset1_structure() {
+        let mut rng = Xoshiro256::new(1);
+        let p = dataset1(2000, true, &mut rng);
+        // Intersection ≈ half of [4000]: expect near 2000 shared elements.
+        let inter: Vec<u32> = p.a.iter().filter(|x| p.b.contains(x)).copied().collect();
+        assert!((inter.len() as f64 - 2000.0).abs() < 200.0);
+        // All intersection elements lie in the dense block [2n].
+        assert!(inter.iter().all(|&x| x < 4000));
+        // Ground truth matches exact recomputation.
+        assert!((p.jaccard - jaccard_exact(&p.a, &p.b)).abs() < 1e-12);
+        // |A∩B| ≈ n (half of [2n]); |A∪B| ≈ n + n ⇒ J ≈ 1/2.
+        assert!((p.jaccard - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn dataset1_no_sampling_exact() {
+        let mut rng = Xoshiro256::new(1);
+        let p = dataset1(100, false, &mut rng);
+        assert!((p.jaccard - 200.0 / 300.0).abs() < 1e-12);
+        assert_eq!(p.a.len(), 250); // 200 + 50
+        assert_eq!(p.b.len(), 250);
+    }
+
+    #[test]
+    fn dataset2_structure() {
+        let mut rng = Xoshiro256::new(3);
+        let p = dataset2(2000, true, &mut rng);
+        assert!((p.jaccard - jaccard_exact(&p.a, &p.b)).abs() < 1e-12);
+        // Intersection in the middle band, difference in outer bands.
+        for x in &p.a {
+            assert!(*x < 8000);
+        }
+        // J ≈ 2n / 4n = 0.5.
+        assert!((p.jaccard - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn fh_vectors_unit_norm() {
+        let mut rng = Xoshiro256::new(9);
+        let v1 = fh_vector1(2000, true, &mut rng);
+        assert!((v1.norm2() - 1.0).abs() < 1e-12);
+        assert!(v1.nnz() > 1500);
+        let v2 = fh_vector2(2000, true, &mut rng);
+        assert!((v2.norm2() - 1.0).abs() < 1e-12);
+        // ≈ 3n/2 non-zeros.
+        assert!((v2.nnz() as f64 - 3000.0).abs() < 300.0);
+    }
+
+    #[test]
+    fn deterministic_given_rng_state() {
+        let mut r1 = Xoshiro256::new(42);
+        let mut r2 = Xoshiro256::new(42);
+        let p1 = dataset1(500, true, &mut r1);
+        let p2 = dataset1(500, true, &mut r2);
+        assert_eq!(p1.a, p2.a);
+        assert_eq!(p1.b, p2.b);
+    }
+}

@@ -1,0 +1,270 @@
+//! Shared experiment machinery: context, estimator-distribution harness,
+//! CSV/console output.
+
+use crate::hash::HashFamily;
+use crate::stats::{Histogram, Summary};
+use crate::util::csv::{self, CsvWriter};
+use crate::util::threadpool::ThreadPool;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Shared experiment settings (from the CLI).
+#[derive(Debug, Clone)]
+pub struct ExpContext {
+    /// Root seed; every (experiment, family, repetition) derives from it.
+    pub seed: u64,
+    /// Output directory for CSVs (`results/` by default).
+    pub out_dir: PathBuf,
+    /// Scale factor in (0, 1]: shrinks repetition counts / dataset sizes
+    /// for smoke runs. 1.0 = paper scale.
+    pub scale: f64,
+    /// Optional directory with real MNIST/News20 libsvm files.
+    pub data_dir: Option<PathBuf>,
+    /// Worker threads for parallel repetitions.
+    pub threads: usize,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        Self {
+            seed: 0xC0FFEE,
+            out_dir: PathBuf::from("results"),
+            scale: 1.0,
+            data_dir: None,
+            threads: crate::util::threadpool::default_parallelism(),
+        }
+    }
+}
+
+impl ExpContext {
+    /// Scale a repetition/size count (at least 1, at least `min`).
+    pub fn scaled(&self, full: usize, min: usize) -> usize {
+        ((full as f64 * self.scale).round() as usize).max(min)
+    }
+
+    pub fn pool(&self) -> ThreadPool {
+        ThreadPool::new(self.threads.max(1))
+    }
+}
+
+/// One (experiment, family) result row — what the smoke tests and
+/// EXPERIMENTS.md consume.
+#[derive(Debug, Clone)]
+pub struct ExpSummary {
+    pub experiment: String,
+    pub family: HashFamily,
+    /// Ground truth value of the estimated quantity (J or 1.0 for FH norms).
+    pub truth: f64,
+    pub mean: f64,
+    pub mse: f64,
+    pub bias: f64,
+    pub max: f64,
+    pub n: usize,
+    /// Free-form extra metric (e.g. LSH ratio).
+    pub extra: Option<(String, f64)>,
+}
+
+impl ExpSummary {
+    pub fn from_summary(
+        experiment: &str,
+        family: HashFamily,
+        truth: f64,
+        s: &Summary,
+    ) -> ExpSummary {
+        ExpSummary {
+            experiment: experiment.to_string(),
+            family,
+            truth,
+            mean: s.mean(),
+            mse: s.mse(truth),
+            bias: s.bias(truth),
+            max: s.max(),
+            n: s.len(),
+            extra: None,
+        }
+    }
+}
+
+/// Estimator-distribution harness: runs `reps` independent repetitions of
+/// `estimate(family_seed) -> value` for each hash family, producing the
+/// histogram + MSE panel that every figure in the paper shows.
+///
+/// `estimate` receives `(family, rep_seed)` and must build its own seeded
+/// hasher — exactly like the paper's "2000 independent repetitions for each
+/// different hash function".
+pub struct DistributionPanel {
+    pub experiment: String,
+    pub truth: f64,
+    pub hist_lo: f64,
+    pub hist_hi: f64,
+    pub hist_bins: usize,
+    pub families: Vec<HashFamily>,
+}
+
+impl DistributionPanel {
+    pub fn run(
+        &self,
+        ctx: &ExpContext,
+        reps: usize,
+        estimate: impl Fn(HashFamily, u64) -> f64 + Send + Sync,
+    ) -> Result<Vec<ExpSummary>> {
+        let pool = ctx.pool();
+        let mut summaries = Vec::new();
+        let mut hist_csv = CsvWriter::new(["family", "bin_center", "count"]);
+        let mut raw_csv = CsvWriter::new(["family", "rep", "estimate"]);
+        let mut summary_csv = CsvWriter::new([
+            "family", "truth", "mean", "bias", "mse", "max", "n",
+        ]);
+
+        for &family in &self.families {
+            // Parallelise repetitions across the pool in chunks.
+            let est = &estimate;
+            let exp_tag = fxhash(&self.experiment);
+            let tasks: Vec<_> = (0..reps)
+                .map(|rep| {
+                    let fam = family;
+                    move || {
+                        let rep_seed = ctx
+                            .seed
+                            .wrapping_add(exp_tag)
+                            .wrapping_add((rep as u64) << 20)
+                            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                            ^ fxhash(fam.id());
+                        est(fam, rep_seed)
+                    }
+                })
+                .collect();
+            let values = pool.scope(tasks);
+
+            let mut hist = Histogram::new(self.hist_lo, self.hist_hi, self.hist_bins);
+            let mut summary = Summary::new();
+            for (rep, v) in values.iter().enumerate() {
+                hist.add(*v);
+                summary.add(*v);
+                raw_csv.row([family.id().to_string(), rep.to_string(), csv::f(*v)]);
+            }
+            hist.to_csv_rows(family.id(), &mut hist_csv);
+            let s = ExpSummary::from_summary(&self.experiment, family, self.truth, &summary);
+            summary_csv.row([
+                family.id().to_string(),
+                csv::f(self.truth),
+                csv::f(s.mean),
+                csv::f(s.bias),
+                csv::f(s.mse),
+                csv::f(s.max),
+                s.n.to_string(),
+            ]);
+
+            println!(
+                "\n[{}] {}  (truth={:.4})",
+                self.experiment,
+                family.label(),
+                self.truth
+            );
+            println!(
+                "  mean={:.5}  bias={:+.5}  MSE={:.3e}  max={:.4}  n={}",
+                s.mean, s.bias, s.mse, s.max, s.n
+            );
+            print!("{}", hist.render_ascii(40));
+            summaries.push(s);
+        }
+
+        let dir = ctx.out_dir.join(&self.experiment);
+        hist_csv.save(dir.join("histogram.csv"))?;
+        raw_csv.save(dir.join("raw.csv"))?;
+        summary_csv.save(dir.join("summary.csv"))?;
+        println!(
+            "\n[{}] wrote {}/{{histogram,raw,summary}}.csv",
+            self.experiment,
+            dir.display()
+        );
+        Ok(summaries)
+    }
+}
+
+pub(crate) fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Print the cross-family comparison the paper's figure captions make:
+/// weak families (multiply-shift, 2-wise) vs strong (mixed tab, murmur,
+/// 20-wise "truly random").
+pub fn print_verdict(summaries: &[ExpSummary]) {
+    let mse_of = |fam: HashFamily| {
+        summaries
+            .iter()
+            .find(|s| s.family == fam)
+            .map(|s| s.mse)
+            .unwrap_or(f64::NAN)
+    };
+    let weak = [HashFamily::MultiplyShift, HashFamily::Poly2];
+    let strong = [HashFamily::MixedTab, HashFamily::Murmur3, HashFamily::Poly20];
+    let weak_max = weak.iter().map(|&f| mse_of(f)).fold(0.0f64, f64::max);
+    let strong_max = strong.iter().map(|&f| mse_of(f)).fold(0.0f64, f64::max);
+    if weak_max.is_nan() || strong_max.is_nan() {
+        return;
+    }
+    println!(
+        "\n  verdict: weak-family max MSE = {weak_max:.3e}, strong-family max MSE = {strong_max:.3e} ({}× )",
+        if strong_max > 0.0 { (weak_max / strong_max).round() } else { f64::INFINITY }
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_floors() {
+        let ctx = ExpContext {
+            scale: 0.01,
+            ..Default::default()
+        };
+        assert_eq!(ctx.scaled(2000, 50), 50);
+        assert_eq!(ctx.scaled(2000, 10), 20);
+        let full = ExpContext::default();
+        assert_eq!(full.scaled(2000, 50), 2000);
+    }
+
+    #[test]
+    fn panel_runs_and_writes() {
+        let dir = std::env::temp_dir().join("mixtab_panel_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = ExpContext {
+            out_dir: dir.clone(),
+            threads: 2,
+            ..Default::default()
+        };
+        let panel = DistributionPanel {
+            experiment: "unittest".into(),
+            truth: 0.5,
+            hist_lo: 0.0,
+            hist_hi: 1.0,
+            hist_bins: 20,
+            families: vec![HashFamily::MixedTab, HashFamily::MultiplyShift],
+        };
+        let out = panel
+            .run(&ctx, 32, |_fam, seed| {
+                // Deterministic pseudo-estimates around 0.5.
+                0.5 + ((seed % 100) as f64 - 50.0) / 1000.0
+            })
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out[0].mse < 0.01);
+        assert!(dir.join("unittest/histogram.csv").exists());
+        assert!(dir.join("unittest/summary.csv").exists());
+        // Determinism: same ctx → same summaries.
+        let out2 = panel
+            .run(&ctx, 32, |_fam, seed| {
+                0.5 + ((seed % 100) as f64 - 50.0) / 1000.0
+            })
+            .unwrap();
+        assert_eq!(out[0].mean, out2[0].mean);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,187 @@
+//! Extension experiment `ext2`: design-choice ablations DESIGN.md calls out.
+//!
+//! 1. **Tabulation progression** — simple → twisted → mixed tabulation on
+//!    the dataset-2 OPH task: does the derived-character layer (the paper's
+//!    [14] contribution over [36]) actually buy concentration on the
+//!    adversarial input?
+//! 2. **Densification scheme** — [32] rotation vs [33] directional (the
+//!    paper's choice) across sparsity regimes (n/k ∈ {0.25, 0.75, 2}):
+//!    the regime where the improved scheme matters is exactly many-empty-
+//!    bins.
+//! 3. **Bin layout** — `mod k` (§2.1 text) vs contiguous ranges (Figure 1):
+//!    statistically equivalent, worth demonstrating.
+
+use super::common::{ExpContext, ExpSummary};
+use crate::data::synthetic::{dataset1, dataset2};
+use crate::hash::HashFamily;
+use crate::sketch::oph::{BinLayout, OneHashSketcher};
+use crate::sketch::DensifyMode;
+use crate::stats::Summary;
+use crate::util::csv::{self, CsvWriter};
+use crate::util::rng::Xoshiro256;
+use anyhow::Result;
+
+fn mse_for(
+    ctx: &ExpContext,
+    family: HashFamily,
+    pair: &crate::data::synthetic::SetPair,
+    k: usize,
+    layout: BinLayout,
+    mode: DensifyMode,
+    reps: usize,
+    salt: u64,
+) -> Summary {
+    let mut s = Summary::new();
+    for rep in 0..reps {
+        let seed = ctx.seed ^ salt ^ ((rep as u64) << 18) ^ super::common::fxhash(family.id());
+        let sk = OneHashSketcher::new(family.build(seed), k, layout, mode);
+        s.add(sk.estimate(&sk.sketch(&pair.a), &sk.sketch(&pair.b)));
+    }
+    s
+}
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<ExpSummary>> {
+    let reps = ctx.scaled(800, 40);
+    let k = 200;
+    let mut out = Vec::new();
+    let mut table = CsvWriter::new(["ablation", "config", "mse", "bias", "n"]);
+
+    // 1. Tabulation progression on dataset 2.
+    let mut rng = Xoshiro256::stream(ctx.seed, 0xAB1A);
+    let pair = dataset2(ctx.scaled(2000, 200), true, &mut rng);
+    println!("[ext2] tabulation progression (dataset2, J={:.4}):", pair.jaccard);
+    for &family in HashFamily::TABULATIONS {
+        let s = mse_for(ctx, family, &pair, k, BinLayout::Mod, DensifyMode::Paper, reps, 1);
+        println!(
+            "  {:<14} MSE {:.3e}  bias {:+.4}",
+            family.id(),
+            s.mse(pair.jaccard),
+            s.bias(pair.jaccard)
+        );
+        table.row([
+            "tabulation".to_string(),
+            family.id().to_string(),
+            csv::f(s.mse(pair.jaccard)),
+            csv::f(s.bias(pair.jaccard)),
+            s.len().to_string(),
+        ]);
+        out.push(ExpSummary::from_summary(
+            "ext2_tabulation",
+            family,
+            pair.jaccard,
+            &s,
+        ));
+    }
+
+    // 2. Densification schemes across sparsity.
+    println!("[ext2] densification scheme × sparsity (k = {k}):");
+    for (label, n) in [("n=k/4", k / 4), ("n=3k/4", 3 * k / 4), ("n=2k", 2 * k)] {
+        let mut rng = Xoshiro256::stream(ctx.seed, 0xDE5A ^ n as u64);
+        let pair = dataset1(n, true, &mut rng);
+        for (mode_label, mode) in [("rotation[32]", DensifyMode::Rotation), ("paper[33]", DensifyMode::Paper)] {
+            let s = mse_for(
+                ctx,
+                HashFamily::MixedTab,
+                &pair,
+                k,
+                BinLayout::Mod,
+                mode,
+                reps,
+                2 ^ n as u64,
+            );
+            println!(
+                "  {label:<8} {mode_label:<13} MSE {:.3e}  bias {:+.4}",
+                s.mse(pair.jaccard),
+                s.bias(pair.jaccard)
+            );
+            table.row([
+                "densify".to_string(),
+                format!("{label}/{mode_label}"),
+                csv::f(s.mse(pair.jaccard)),
+                csv::f(s.bias(pair.jaccard)),
+                s.len().to_string(),
+            ]);
+            out.push(ExpSummary {
+                experiment: format!("ext2_densify_{label}_{mode_label}"),
+                family: HashFamily::MixedTab,
+                truth: pair.jaccard,
+                mean: s.mean(),
+                mse: s.mse(pair.jaccard),
+                bias: s.bias(pair.jaccard),
+                max: s.max(),
+                n: s.len(),
+                extra: None,
+            });
+        }
+    }
+
+    // 3. Bin layout equivalence.
+    let mut rng = Xoshiro256::stream(ctx.seed, 0x1A70);
+    let pair = dataset1(ctx.scaled(2000, 200), true, &mut rng);
+    println!("[ext2] bin layout (dataset1, J={:.4}):", pair.jaccard);
+    for (label, layout) in [("mod", BinLayout::Mod), ("range", BinLayout::Range)] {
+        let s = mse_for(
+            ctx,
+            HashFamily::MixedTab,
+            &pair,
+            k,
+            layout,
+            DensifyMode::Paper,
+            reps,
+            3,
+        );
+        println!(
+            "  {label:<8} MSE {:.3e}  bias {:+.4}",
+            s.mse(pair.jaccard),
+            s.bias(pair.jaccard)
+        );
+        table.row([
+            "layout".to_string(),
+            label.to_string(),
+            csv::f(s.mse(pair.jaccard)),
+            csv::f(s.bias(pair.jaccard)),
+            s.len().to_string(),
+        ]);
+        out.push(ExpSummary {
+            experiment: format!("ext2_layout_{label}"),
+            family: HashFamily::MixedTab,
+            truth: pair.jaccard,
+            mean: s.mean(),
+            mse: s.mse(pair.jaccard),
+            bias: s.bias(pair.jaccard),
+            max: s.max(),
+            n: s.len(),
+            extra: None,
+        });
+    }
+
+    let path = ctx.out_dir.join("ext2/ablations.csv");
+    table.save(&path)?;
+    println!("[ext2] wrote {}", path.display());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ext2_smoke() {
+        let dir = std::env::temp_dir().join("mixtab_ext2_smoke");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = ExpContext {
+            out_dir: dir.clone(),
+            scale: 0.05,
+            threads: 1,
+            ..Default::default()
+        };
+        let out = run(&ctx).unwrap();
+        // 3 tabulations + 6 densify combos + 2 layouts.
+        assert_eq!(out.len(), 11);
+        // Layout equivalence: both MSEs in the same ballpark.
+        let m = |e: &str| out.iter().find(|s| s.experiment == e).unwrap().mse;
+        let (a, b) = (m("ext2_layout_mod"), m("ext2_layout_range"));
+        assert!(a / b < 5.0 && b / a < 5.0, "layouts diverged: {a} vs {b}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

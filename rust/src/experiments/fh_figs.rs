@@ -1,0 +1,105 @@
+//! FH norm-concentration figures on synthetic data (3, 6, 7 top, 8 top).
+//!
+//! Protocol (§4.1): take the indicator vector of a set A generated as for
+//! the OPH experiments, normalise; for each family run 2000 repetitions of
+//! "feature-hash v, record ‖v′‖²". Good hashing concentrates around 1
+//! (Theorem 1). Expectation: multiply-shift and 2-wise PolyHash show poor
+//! concentration — unbiased "only because of a very heavy tail of large
+//! values" — mixed tabulation ≈ truly random.
+
+use super::common::{print_verdict, DistributionPanel, ExpContext, ExpSummary};
+use crate::data::sparse::SparseVector;
+use crate::data::synthetic::{fh_vector1, fh_vector2};
+use crate::hash::HashFamily;
+use crate::sketch::feature_hash::{FeatureHasher, SignMode};
+use crate::util::rng::Xoshiro256;
+use anyhow::Result;
+
+fn run_vector(
+    ctx: &ExpContext,
+    v: &SparseVector,
+    dim: usize,
+    experiment: &str,
+) -> Result<Vec<ExpSummary>> {
+    let reps = ctx.scaled(2000, 50);
+    let panel = DistributionPanel {
+        experiment: experiment.to_string(),
+        truth: 1.0,
+        hist_lo: 0.0,
+        hist_hi: 3.0, // heavy tails overflow; tracked by Histogram::overflow
+        hist_bins: 90,
+        families: HashFamily::FIGURES.to_vec(),
+    };
+    let out = panel.run(ctx, reps, move |family, rep_seed| {
+        let fh = FeatureHasher::new(family, rep_seed, dim, SignMode::Separate);
+        let mut scratch = Vec::new();
+        fh.squared_norm(v, &mut scratch)
+    })?;
+    print_verdict(&out);
+    Ok(out)
+}
+
+/// Figure 3: dataset 1 vector, d' = 200.
+pub fn run_fig3(ctx: &ExpContext) -> Result<Vec<ExpSummary>> {
+    run_d(ctx, 200, "fig3")
+}
+
+/// Figures 3/6/7 parameterised by d' (n = 2000).
+pub fn run_d(ctx: &ExpContext, dim: usize, experiment: &str) -> Result<Vec<ExpSummary>> {
+    let n = ctx.scaled(2000, 200);
+    let mut rng = Xoshiro256::stream(ctx.seed, super::common::fxhash(experiment) ^ FH_SALT);
+    let v = fh_vector1(n, true, &mut rng);
+    println!(
+        "[{experiment}] FH dataset1 vector: nnz={} ‖v‖={:.4} d'={dim}",
+        v.nnz(),
+        v.norm2()
+    );
+    run_vector(ctx, &v, dim, &format!("{experiment}_fh"))
+}
+
+/// Figure 8 (top): second synthetic dataset FH vector ([3n] sampled).
+pub fn run_dataset2(ctx: &ExpContext, dim: usize, experiment: &str) -> Result<Vec<ExpSummary>> {
+    let n = ctx.scaled(2000, 200);
+    let mut rng = Xoshiro256::stream(ctx.seed, super::common::fxhash(experiment) ^ FH_SALT);
+    let v = fh_vector2(n, true, &mut rng);
+    println!(
+        "[{experiment}] FH dataset2 vector: nnz={} d'={dim}",
+        v.nnz()
+    );
+    run_vector(ctx, &v, dim, &format!("{experiment}_fh"))
+}
+
+/// Stream salt separating FH-experiment randomness from the OPH streams.
+const FH_SALT: u64 = 0xF4_5A17;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_smoke_shapes_hold() {
+        let dir = std::env::temp_dir().join("mixtab_fig3_smoke");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = ExpContext {
+            out_dir: dir.clone(),
+            scale: 0.05,
+            threads: 2,
+            ..Default::default()
+        };
+        let out = run_fig3(&ctx).unwrap();
+        assert_eq!(out.len(), HashFamily::FIGURES.len());
+        for s in &out {
+            // Norms concentrate near 1 in mean for all families (FH is
+            // unbiased); the difference is in MSE / tails.
+            assert!((s.mean - 1.0).abs() < 0.5, "{s:?}");
+        }
+        let mse = |fam: HashFamily| out.iter().find(|s| s.family == fam).unwrap().mse;
+        assert!(
+            mse(HashFamily::MixedTab) < mse(HashFamily::MultiplyShift),
+            "mixed {:.3e} vs ms {:.3e}",
+            mse(HashFamily::MixedTab),
+            mse(HashFamily::MultiplyShift)
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

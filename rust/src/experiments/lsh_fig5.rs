@@ -1,0 +1,226 @@
+//! Figure 5: LSH + OPH similarity search — multiply-shift vs mixed
+//! tabulation (§4.2), sweeping K, L ∈ {8, 10, 12} with the K = L = 10 panel
+//! as the headline.
+//!
+//! Per (dataset, family, K, L): build the index over the database sets,
+//! query every query set, and report the #retrieved/recall ratio at
+//! T₀ = 0.5 (lower is better). Expectation: multiply-shift retrieves more
+//! points (over-estimated similarities → heavier buckets) and achieves a
+//! systematically worse ratio; mixed tabulation ≈ MurmurHash3.
+
+use super::common::{ExpContext, ExpSummary};
+use super::realworld::load_dataset;
+use crate::hash::HashFamily;
+use crate::lsh::metrics::{ground_truth_batch, BatchEval, QueryEval};
+use crate::lsh::{LshIndex, LshParams};
+use crate::util::csv::{self, CsvWriter};
+use anyhow::Result;
+
+/// Hash families compared in Figure 5 (the paper plots ms vs mixed and notes
+/// poly2 ≈ ms, murmur ≈ mixed; we run all four).
+const FIG5_FAMILIES: &[HashFamily] = &[
+    HashFamily::MultiplyShift,
+    HashFamily::Poly2,
+    HashFamily::MixedTab,
+    HashFamily::Murmur3,
+];
+
+const T0: f64 = 0.5;
+
+struct DatasetEval {
+    name: &'static str,
+    db: Vec<Vec<u32>>,
+    queries: Vec<Vec<u32>>,
+    truth: Vec<Vec<u32>>,
+}
+
+fn prepare(ctx: &ExpContext, name: &'static str, n_db: usize, n_q: usize) -> DatasetEval {
+    let (ds, src) = load_dataset(ctx, name, n_db + n_q);
+    let (db_ds, q_ds) = ds.split(n_db);
+    let db = db_ds.as_sets();
+    let queries = q_ds.as_sets();
+    println!(
+        "[fig5] {name} ({src}): db={} queries={} — computing ground truth (T0={T0})…",
+        db.len(),
+        queries.len()
+    );
+    let pool = ctx.pool();
+    let truth = ground_truth_batch(&pool, &db, &queries, T0);
+    let with_neighbours = truth.iter().filter(|t| !t.is_empty()).count();
+    let avg_nb = truth.iter().map(Vec::len).sum::<usize>() as f64 / truth.len().max(1) as f64;
+    println!(
+        "[fig5] {name}: {} / {} queries have ≥1 neighbour (avg {avg_nb:.1})",
+        with_neighbours,
+        queries.len()
+    );
+    DatasetEval {
+        name,
+        db,
+        queries,
+        truth,
+    }
+}
+
+fn eval_one(
+    ctx: &ExpContext,
+    data: &DatasetEval,
+    family: HashFamily,
+    params: LshParams,
+    seed: u64,
+) -> BatchEval {
+    let mut index = LshIndex::new(params, family, ctx.seed ^ 0xF165 ^ seed.wrapping_mul(0x9E37));
+    for (i, s) in data.db.iter().enumerate() {
+        index.insert(i as u32, s);
+    }
+    let mut batch = BatchEval::default();
+    for (q, truth) in data.queries.iter().zip(&data.truth) {
+        if truth.is_empty() {
+            continue; // recall undefined; paper's metric skips these
+        }
+        let retrieved = index.query(q);
+        batch.push(QueryEval::evaluate(&retrieved, truth, data.db.len()));
+    }
+    batch
+}
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<ExpSummary>> {
+    let n_db_mnist = ctx.scaled(4000, 150);
+    let n_q_mnist = ctx.scaled(400, 30);
+    let n_db_news = ctx.scaled(2000, 100);
+    let n_q_news = ctx.scaled(200, 20);
+
+    let datasets = vec![
+        prepare(ctx, "mnist", n_db_mnist, n_q_mnist),
+        prepare(ctx, "news20", n_db_news, n_q_news),
+    ];
+
+    let sweep: Vec<usize> = vec![8, 10, 12];
+    // Index-construction randomness matters at this scale: aggregate the
+    // headline K = L = 10 panel over several index seeds (the paper plots
+    // per-query distributions; our seed-mean plays the same role).
+    let seeds = ctx.scaled(5, 2) as u64;
+    let mut table = CsvWriter::new([
+        "dataset",
+        "family",
+        "K",
+        "L",
+        "seed",
+        "mean_retrieved",
+        "mean_recall",
+        "ratio",
+        "frac_retrieved",
+    ]);
+    let mut out = Vec::new();
+
+    for data in &datasets {
+        println!("\n[fig5] === {} ===", data.name);
+        println!(
+            "{:<18} {:>3} {:>3} {:>12} {:>10} {:>14} {:>10}",
+            "family", "K", "L", "#retrieved", "recall", "ratio(±sd)", "frac"
+        );
+        for &k in &sweep {
+            for &l in &sweep {
+                for &family in FIG5_FAMILIES {
+                    let n_seeds = if k == 10 && l == 10 { seeds } else { 1 };
+                    let mut ratios = crate::stats::Summary::new();
+                    let mut recalls = crate::stats::Summary::new();
+                    let mut retrieved = crate::stats::Summary::new();
+                    let mut fracs = crate::stats::Summary::new();
+                    let mut n_queries = 0;
+                    for seed in 0..n_seeds {
+                        let batch = eval_one(ctx, data, family, LshParams::new(k, l), seed);
+                        let ratio = batch.ratio();
+                        table.row([
+                            data.name.to_string(),
+                            family.id().to_string(),
+                            k.to_string(),
+                            l.to_string(),
+                            seed.to_string(),
+                            csv::f(batch.mean_retrieved()),
+                            csv::f(batch.mean_recall()),
+                            csv::f(ratio),
+                            csv::f(batch.mean_fraction_retrieved()),
+                        ]);
+                        ratios.add(ratio);
+                        recalls.add(batch.mean_recall());
+                        retrieved.add(batch.mean_retrieved());
+                        fracs.add(batch.mean_fraction_retrieved());
+                        n_queries = batch.evals.len();
+                    }
+                    if k == 10 && l == 10 {
+                        println!(
+                            "{:<18} {:>3} {:>3} {:>12.1} {:>10.3} {:>8.1}±{:<5.1} {:>10.4}",
+                            family.id(),
+                            k,
+                            l,
+                            retrieved.mean(),
+                            recalls.mean(),
+                            ratios.mean(),
+                            ratios.stddev(),
+                            fracs.mean()
+                        );
+                        out.push(ExpSummary {
+                            experiment: format!("fig5_{}", data.name),
+                            family,
+                            truth: 0.0,
+                            mean: recalls.mean(),
+                            mse: 0.0,
+                            bias: 0.0,
+                            max: retrieved.mean(),
+                            n: n_queries,
+                            extra: Some(("ratio".to_string(), ratios.mean())),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    let path = ctx.out_dir.join("fig5/sweep.csv");
+    table.save(&path)?;
+    println!("\n[fig5] wrote {}", path.display());
+
+    // Verdict: paper expects ms ratio systematically worse (higher).
+    for data_name in ["mnist", "news20"] {
+        let ratio = |fam: HashFamily| {
+            out.iter()
+                .find(|s| s.experiment == format!("fig5_{data_name}") && s.family == fam)
+                .and_then(|s| s.extra.as_ref().map(|(_, r)| *r))
+        };
+        if let (Some(ms), Some(mt)) = (ratio(HashFamily::MultiplyShift), ratio(HashFamily::MixedTab))
+        {
+            println!(
+                "[fig5] {data_name}: K=L=10 ratio — multiply_shift {ms:.1} vs mixed_tab {mt:.1} ({})",
+                if ms > mt { "paper shape holds" } else { "UNEXPECTED" }
+            );
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_smoke() {
+        let dir = std::env::temp_dir().join("mixtab_fig5_smoke");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = ExpContext {
+            out_dir: dir.clone(),
+            scale: 0.05,
+            threads: 2,
+            ..Default::default()
+        };
+        let out = run(&ctx).unwrap();
+        // 2 datasets × 4 families at K=L=10.
+        assert_eq!(out.len(), 8);
+        for s in &out {
+            let (_, ratio) = s.extra.as_ref().unwrap();
+            // NaN allowed when the tiny smoke-scale dataset yields no
+            // queries with true neighbours.
+            assert!(ratio.is_nan() || *ratio >= 0.0);
+        }
+        assert!(dir.join("fig5/sweep.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,87 @@
+//! Experiment drivers — one per table/figure in the paper's evaluation
+//! (§4 + Appendix B). Each driver regenerates its result as CSV under
+//! `results/<id>/` plus a console summary (histogram + MSE per hash family,
+//! mirroring what the paper plots), and returns a structured summary the
+//! smoke tests assert on.
+//!
+//! | id | paper result |
+//! |----|--------------|
+//! | `table1` | Table 1 — hash-function timing (10⁷ keys; FH over News20) |
+//! | `fig2`   | OPH J-estimates, synthetic dataset 1, k = 200 |
+//! | `fig3`   | FH ‖v′‖², synthetic dataset 1, d' = 200 |
+//! | `fig4`   | FH ‖v′‖² on MNIST/News20, d' = 128 |
+//! | `fig5`   | LSH retrieved/recall, K = L = 10 (+ full K, L sweep) |
+//! | `fig6`   | fig2+fig3 at k = d' = 100 |
+//! | `fig7`   | fig2+fig3 at k = d' = 500 |
+//! | `fig8`   | OPH + FH on synthetic dataset 2, k = d' = 200 |
+//! | `fig9`   | OPH with sparse inputs (n = k/2), k = 200 |
+//! | `fig10`  | fig4 at d' = 64 |
+//! | `fig11`  | fig4 at d' = 256 |
+//! | `synth2` | §4.1 "additional synthetic" MSE-ratio table |
+//!
+//! Real MNIST/News20 (libsvm format) are used when present under
+//! `--data-dir`; otherwise the statistically-matched generators stand in
+//! (DESIGN.md §4).
+
+pub mod common;
+pub mod table1;
+pub mod oph_figs;
+pub mod fh_figs;
+pub mod realworld;
+pub mod lsh_fig5;
+pub mod synth2;
+pub mod ext_classify;
+pub mod ext_ablation;
+
+use anyhow::{bail, Result};
+pub use common::{ExpContext, ExpSummary};
+
+/// All experiment ids in paper order, plus the extension experiments
+/// (`ext1` classification, `ext2` design ablations).
+pub const ALL: &[&str] = &[
+    "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
+    "synth2", "ext1", "ext2",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &ExpContext) -> Result<Vec<ExpSummary>> {
+    match id {
+        "table1" => table1::run(ctx),
+        "fig2" => oph_figs::run_fig2(ctx),
+        "fig3" => fh_figs::run_fig3(ctx),
+        "fig4" => realworld::run_fh(ctx, 128, "fig4"),
+        "fig5" => lsh_fig5::run(ctx),
+        "fig6" => {
+            let mut out = oph_figs::run_k(ctx, 100, "fig6")?;
+            out.extend(fh_figs::run_d(ctx, 100, "fig6")?);
+            Ok(out)
+        }
+        "fig7" => {
+            let mut out = oph_figs::run_k(ctx, 500, "fig7")?;
+            out.extend(fh_figs::run_d(ctx, 500, "fig7")?);
+            Ok(out)
+        }
+        "fig8" => {
+            let mut out = oph_figs::run_dataset2(ctx, 200, "fig8")?;
+            out.extend(fh_figs::run_dataset2(ctx, 200, "fig8")?);
+            Ok(out)
+        }
+        "fig9" => oph_figs::run_sparse(ctx, 200, "fig9"),
+        "fig10" => realworld::run_fh(ctx, 64, "fig10"),
+        "fig11" => realworld::run_fh(ctx, 256, "fig11"),
+        "synth2" => synth2::run(ctx),
+        "ext1" => ext_classify::run(ctx),
+        "ext2" => ext_ablation::run(ctx),
+        other => bail!("unknown experiment '{other}' (known: {ALL:?})"),
+    }
+}
+
+/// Run every experiment.
+pub fn run_all(ctx: &ExpContext) -> Result<Vec<ExpSummary>> {
+    let mut out = Vec::new();
+    for id in ALL {
+        println!("\n================ {id} ================");
+        out.extend(run(id, ctx)?);
+    }
+    Ok(out)
+}

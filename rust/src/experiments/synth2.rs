@@ -1,0 +1,173 @@
+//! §4.1 "Additional synthetic results": the second dataset's MSE-ratio
+//! table, plus the no-sampling variants and the b-bit ablation.
+//!
+//! Paper's claims to reproduce (shape, not exact constants):
+//! * OPH on dataset 2: multiply-shift MSE ≈ 6× the strong families';
+//!   2-wise PolyHash ≈ 4×.
+//! * FH on the `[3n]` vector: multiply-shift ≈ 20×; 2-wise ≈ 10×.
+//! * Without sampling, the gap widens further.
+//! * b-bit truncation adds the same false-positive bias to *every* family
+//!   and leaves the conclusion unchanged (§1.2 note).
+
+use super::common::{ExpContext, ExpSummary};
+use crate::data::synthetic::{dataset2, fh_vector2};
+use crate::hash::HashFamily;
+use crate::sketch::bbit::BbitSketch;
+use crate::sketch::feature_hash::{FeatureHasher, SignMode};
+use crate::sketch::oph::{BinLayout, OneHashSketcher};
+use crate::sketch::DensifyMode;
+use crate::util::csv::{self, CsvWriter};
+use crate::util::rng::Xoshiro256;
+use anyhow::Result;
+
+fn strong_baseline_mse(rows: &[ExpSummary]) -> f64 {
+    let strong = [HashFamily::MixedTab, HashFamily::Murmur3, HashFamily::Poly20];
+    let mses: Vec<f64> = rows
+        .iter()
+        .filter(|s| strong.contains(&s.family))
+        .map(|s| s.mse)
+        .collect();
+    mses.iter().sum::<f64>() / mses.len().max(1) as f64
+}
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<ExpSummary>> {
+    let n = ctx.scaled(2000, 200);
+    let k = 200;
+    let dim = 200;
+    let reps = ctx.scaled(2000, 50);
+    let mut all = Vec::new();
+    let mut table = CsvWriter::new([
+        "variant", "family", "mse", "ratio_vs_strong", "bbit_b", "n",
+    ]);
+
+    for sampled in [true, false] {
+        let tag = if sampled { "sampled" } else { "nosample" };
+        let mut rng = Xoshiro256::stream(ctx.seed, 0x5352 ^ sampled as u64);
+        let pair = dataset2(n, sampled, &mut rng);
+        let vec2 = fh_vector2(n, sampled, &mut rng);
+        println!(
+            "\n[synth2/{tag}] dataset2 J={:.4}, FH vector nnz={}",
+            pair.jaccard,
+            vec2.nnz()
+        );
+
+        // --- OPH MSE per family (plain + b-bit b = 2) ---
+        for bbit in [None, Some(2u32)] {
+            let mut rows = Vec::new();
+            for &family in HashFamily::FIGURES {
+                let mut summary = crate::stats::Summary::new();
+                for rep in 0..reps {
+                    let seed = ctx.seed ^ (rep as u64) << 16 ^ super::common::fxhash(family.id());
+                    let sk = OneHashSketcher::new(
+                        family.build(seed),
+                        k,
+                        BinLayout::Mod,
+                        DensifyMode::Paper,
+                    );
+                    let (sa, sb) = (sk.sketch(&pair.a), sk.sketch(&pair.b));
+                    let est = match bbit {
+                        None => sk.estimate(&sa, &sb),
+                        Some(b) => BbitSketch::from_oph(&sa, b)
+                            .estimate(&BbitSketch::from_oph(&sb, b)),
+                    };
+                    summary.add(est);
+                }
+                rows.push(ExpSummary::from_summary(
+                    &format!("synth2_oph_{tag}{}", bbit.map(|b| format!("_b{b}")).unwrap_or_default()),
+                    family,
+                    pair.jaccard,
+                    &summary,
+                ));
+            }
+            let base = strong_baseline_mse(&rows);
+            let label = match bbit {
+                None => format!("oph_{tag}"),
+                Some(b) => format!("oph_{tag}_b{b}"),
+            };
+            println!("  [{label}] strong-family baseline MSE = {base:.3e}");
+            for s in &rows {
+                let ratio = if base > 0.0 { s.mse / base } else { f64::NAN };
+                println!(
+                    "    {:<18} MSE {:.3e}  ratio {:>6.1}×",
+                    s.family.id(),
+                    s.mse,
+                    ratio
+                );
+                table.row([
+                    label.clone(),
+                    s.family.id().to_string(),
+                    csv::f(s.mse),
+                    csv::f(ratio),
+                    bbit.map(|b| b.to_string()).unwrap_or_default(),
+                    s.n.to_string(),
+                ]);
+            }
+            all.extend(rows);
+        }
+
+        // --- FH MSE per family ---
+        let mut rows = Vec::new();
+        for &family in HashFamily::FIGURES {
+            let mut summary = crate::stats::Summary::new();
+            for rep in 0..reps {
+                let seed = ctx.seed ^ (rep as u64) << 16 ^ super::common::fxhash(family.id());
+                let fh = FeatureHasher::new(family, seed, dim, SignMode::Separate);
+                let mut scratch = Vec::new();
+                summary.add(fh.squared_norm(&vec2, &mut scratch));
+            }
+            rows.push(ExpSummary::from_summary(
+                &format!("synth2_fh_{tag}"),
+                family,
+                1.0,
+                &summary,
+            ));
+        }
+        let base = strong_baseline_mse(&rows);
+        println!("  [fh_{tag}] strong-family baseline MSE = {base:.3e}");
+        for s in &rows {
+            let ratio = if base > 0.0 { s.mse / base } else { f64::NAN };
+            println!(
+                "    {:<18} MSE {:.3e}  ratio {:>6.1}×",
+                s.family.id(),
+                s.mse,
+                ratio
+            );
+            table.row([
+                format!("fh_{tag}"),
+                s.family.id().to_string(),
+                csv::f(s.mse),
+                csv::f(ratio),
+                String::new(),
+                s.n.to_string(),
+            ]);
+        }
+        all.extend(rows);
+    }
+
+    let path = ctx.out_dir.join("synth2/ratios.csv");
+    table.save(&path)?;
+    println!("\n[synth2] wrote {}", path.display());
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth2_smoke() {
+        let dir = std::env::temp_dir().join("mixtab_synth2_smoke");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ctx = ExpContext {
+            out_dir: dir.clone(),
+            scale: 0.02,
+            threads: 2,
+            ..Default::default()
+        };
+        let out = run(&ctx).unwrap();
+        // 2 sampling variants × (2 OPH variants + 1 FH) × 5 families.
+        assert_eq!(out.len(), 2 * 3 * HashFamily::FIGURES.len());
+        assert!(dir.join("synth2/ratios.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,181 @@
+//! Table 1: hash-function evaluation time.
+//!
+//! 1. Hash the same 10⁷ random 32-bit keys with every family.
+//! 2. Feature-hash the entire News20 dataset at d' = 128 with every family.
+//!
+//! Expectation (paper, C++ on their testbed): multiply-shift < 2-wise
+//! PolyHash < mixed tabulation ≈ 3-wise PolyHash < MurmurHash3 ≈ CityHash ≪
+//! Blake2, with mixed tabulation ~40% faster than MurmurHash3. Absolute
+//! numbers differ on this machine; the *ordering* is the reproduction
+//! target. Also exposed as `cargo bench --bench table1_hash_speed`.
+
+use super::common::{ExpContext, ExpSummary};
+use crate::data::news20_like::{self, News20LikeParams};
+use crate::hash::HashFamily;
+use crate::sketch::feature_hash::{FeatureHasher, SignMode};
+use crate::util::bench::{fmt_ns, Bench};
+use crate::util::csv::{self, CsvWriter};
+use crate::util::rng::Xoshiro256;
+use anyhow::Result;
+use std::hint::black_box;
+
+pub fn run(ctx: &ExpContext) -> Result<Vec<ExpSummary>> {
+    let n_keys = ctx.scaled(10_000_000, 100_000);
+    let n_docs = ctx.scaled(10_000, 100);
+    println!("[table1] hashing {n_keys} random u32 keys per family…");
+    let mut rng = Xoshiro256::stream(ctx.seed, 0x7AB1E1);
+    let keys: Vec<u32> = (0..n_keys).map(|_| rng.next_u32()).collect();
+    let mut out_buf = vec![0u32; keys.len()];
+
+    println!("[table1] generating News20-like corpus ({n_docs} docs)…");
+    let news = news20_like::generate(n_docs, &News20LikeParams::default(), ctx.seed ^ 0x4E57);
+
+    let bench = Bench::new();
+    let mut table = CsvWriter::new(["family", "keys_ns", "keys_ms", "fh_news20_ns", "fh_news20_ms"]);
+    let mut rows = Vec::new();
+
+    println!(
+        "\n{:<20} {:>14} {:>16}",
+        "Hash function",
+        format!("time ({n_keys} keys)"),
+        "time (FH News20)"
+    );
+    for &family in HashFamily::TABLE1 {
+        let hasher = family.build(ctx.seed);
+        // Blake2 is ~3 orders slower; shrink its key count to keep the run
+        // interactive, then scale the reported time back up.
+        let (keys_slice, factor): (&[u32], f64) = if family == HashFamily::Blake2 {
+            (&keys[..keys.len() / 100], 100.0)
+        } else {
+            (&keys[..], 1.0)
+        };
+        let m_keys = bench.measure(family.id(), keys_slice.len() as u64, || {
+            hasher.hash_slice(keys_slice, &mut out_buf[..keys_slice.len()]);
+            black_box(out_buf[0])
+        });
+        let keys_ns = (m_keys.median_ns() as f64 * factor) as u64;
+
+        let fh = FeatureHasher::new(family, ctx.seed, 128, SignMode::Separate);
+        let (docs, f2): (&[_], f64) = if family == HashFamily::Blake2 {
+            (&news.vectors[..news.len() / 20], 20.0)
+        } else {
+            (&news.vectors[..], 1.0)
+        };
+        let mut scratch = Vec::new();
+        let m_fh = bench.measure(&format!("{}_fh", family.id()), docs.len() as u64, || {
+            let mut acc = 0.0;
+            for v in docs {
+                acc += fh.squared_norm(v, &mut scratch);
+            }
+            black_box(acc)
+        });
+        let fh_ns = (m_fh.median_ns() as f64 * f2) as u64;
+
+        println!(
+            "{:<20} {:>14} {:>16}",
+            family.label(),
+            fmt_ns(keys_ns),
+            fmt_ns(fh_ns)
+        );
+        table.row([
+            family.id().to_string(),
+            keys_ns.to_string(),
+            csv::f(keys_ns as f64 / 1e6),
+            fh_ns.to_string(),
+            csv::f(fh_ns as f64 / 1e6),
+        ]);
+        rows.push(ExpSummary {
+            experiment: "table1".into(),
+            family,
+            truth: 0.0,
+            mean: keys_ns as f64,
+            mse: 0.0,
+            bias: 0.0,
+            max: fh_ns as f64,
+            n: keys_slice.len(),
+            extra: Some(("keys_ns".into(), keys_ns as f64)),
+        });
+    }
+
+    // Comparability row: the paper benchmarked the *official* MurmurHash3
+    // (separate translation unit, byte-oriented, not inlined into the
+    // loop). Our `Murmur3::hash` is a register-level specialisation the
+    // optimiser inlines; measuring the official call shape shows how much
+    // of murmur's speed here is that inlining (EXPERIMENTS.md discusses).
+    #[inline(never)]
+    fn murmur_official_style(data: &[u8], seed: u32) -> u32 {
+        crate::hash::murmur3::murmur3_x86_32(std::hint::black_box(data), seed)
+    }
+    let m_official = bench.measure("murmur3_official_style", keys.len() as u64, || {
+        let mut acc = 0u32;
+        for &k in &keys {
+            acc ^= murmur_official_style(&k.to_le_bytes(), 0x9747_B28C);
+        }
+        black_box(acc)
+    });
+    println!(
+        "{:<20} {:>14} {:>16}",
+        "Murmur3 (official-style call)",
+        fmt_ns(m_official.median_ns()),
+        "-"
+    );
+    table.row([
+        "murmur3_official_style".to_string(),
+        m_official.median_ns().to_string(),
+        csv::f(m_official.median_ns() as f64 / 1e6),
+        "0".to_string(),
+        "0".to_string(),
+    ]);
+
+    let path = ctx.out_dir.join("table1/timing.csv");
+    table.save(&path)?;
+    println!("\n[table1] wrote {}", path.display());
+
+    // Paper-shape verdict.
+    let t = |fam: HashFamily| {
+        rows.iter()
+            .find(|s| s.family == fam)
+            .map(|s| s.mean)
+            .unwrap_or(f64::NAN)
+    };
+    let mixed = t(HashFamily::MixedTab);
+    let murmur = t(HashFamily::Murmur3);
+    let ms = t(HashFamily::MultiplyShift);
+    let blake = t(HashFamily::Blake2);
+    println!(
+        "[table1] verdict: ms={} mixed={} murmur={} blake={} — mixed/murmur = {:.2} (paper ≈ 0.72), ms fastest: {}, blake slowest: {}",
+        fmt_ns(ms as u64),
+        fmt_ns(mixed as u64),
+        fmt_ns(murmur as u64),
+        fmt_ns(blake as u64),
+        mixed / murmur,
+        ms <= mixed,
+        blake >= murmur
+    );
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_smoke() {
+        let dir = std::env::temp_dir().join("mixtab_table1_smoke");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::env::set_var("MIXTAB_BENCH_QUICK", "1");
+        let ctx = ExpContext {
+            out_dir: dir.clone(),
+            scale: 0.01,
+            threads: 1,
+            ..Default::default()
+        };
+        let rows = run(&ctx).unwrap();
+        assert_eq!(rows.len(), HashFamily::TABLE1.len());
+        for r in &rows {
+            assert!(r.mean > 0.0, "{:?}", r.family);
+        }
+        assert!(dir.join("table1/timing.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,262 @@
+//! BLAKE2b — RFC 7693. The paper's cryptographic baseline.
+//!
+//! Table 1 includes BLAKE2 to show the cost of cryptographic guarantees:
+//! "orders of magnitude slower" than the combinatorial schemes. We implement
+//! the full RFC 7693 BLAKE2b (any digest size 1–64, optional key) and wrap
+//! it as a [`Hasher32`] by hashing the 4 little-endian key bytes with an
+//! 8-byte seed key.
+
+use super::Hasher32;
+use crate::util::rng::SplitMix64;
+
+/// BLAKE2b initialisation vector (RFC 7693 §2.6).
+const IV: [u64; 8] = [
+    0x6A09_E667_F3BC_C908,
+    0xBB67_AE85_84CA_A73B,
+    0x3C6E_F372_FE94_F82B,
+    0xA54F_F53A_5F1D_36F1,
+    0x510E_527F_ADE6_82D1,
+    0x9B05_688C_2B3E_6C1F,
+    0x1F83_D9AB_FB41_BD6B,
+    0x5BE0_CD19_137E_2179,
+];
+
+/// Message schedule (RFC 7693 §2.7).
+const SIGMA: [[usize; 16]; 12] = [
+    [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15],
+    [14, 10, 4, 8, 9, 15, 13, 6, 1, 12, 0, 2, 11, 7, 5, 3],
+    [11, 8, 12, 0, 5, 2, 15, 13, 10, 14, 3, 6, 7, 1, 9, 4],
+    [7, 9, 3, 1, 13, 12, 11, 14, 2, 6, 5, 10, 4, 0, 15, 8],
+    [9, 0, 5, 7, 2, 4, 10, 15, 14, 1, 11, 12, 6, 8, 3, 13],
+    [2, 12, 6, 10, 0, 11, 8, 3, 4, 13, 7, 5, 15, 14, 1, 9],
+    [12, 5, 1, 15, 14, 13, 4, 10, 0, 7, 6, 3, 9, 2, 8, 11],
+    [13, 11, 7, 14, 12, 1, 3, 9, 5, 0, 15, 4, 8, 6, 2, 10],
+    [6, 15, 14, 9, 11, 3, 0, 8, 12, 2, 13, 7, 1, 4, 10, 5],
+    [10, 2, 8, 4, 7, 6, 1, 5, 15, 11, 9, 14, 3, 12, 13, 0],
+    [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15],
+    [14, 10, 4, 8, 9, 15, 13, 6, 1, 12, 0, 2, 11, 7, 5, 3],
+];
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn g(v: &mut [u64; 16], a: usize, b: usize, c: usize, d: usize, x: u64, y: u64) {
+    v[a] = v[a].wrapping_add(v[b]).wrapping_add(x);
+    v[d] = (v[d] ^ v[a]).rotate_right(32);
+    v[c] = v[c].wrapping_add(v[d]);
+    v[b] = (v[b] ^ v[c]).rotate_right(24);
+    v[a] = v[a].wrapping_add(v[b]).wrapping_add(y);
+    v[d] = (v[d] ^ v[a]).rotate_right(16);
+    v[c] = v[c].wrapping_add(v[d]);
+    v[b] = (v[b] ^ v[c]).rotate_right(63);
+}
+
+/// Compression function F (RFC 7693 §3.2).
+fn compress(h: &mut [u64; 8], block: &[u8; 128], t: u128, last: bool) {
+    let mut m = [0u64; 16];
+    for (i, chunk) in block.chunks_exact(8).enumerate() {
+        m[i] = u64::from_le_bytes(chunk.try_into().unwrap());
+    }
+    let mut v = [0u64; 16];
+    v[..8].copy_from_slice(h);
+    v[8..].copy_from_slice(&IV);
+    v[12] ^= t as u64;
+    v[13] ^= (t >> 64) as u64;
+    if last {
+        v[14] = !v[14];
+    }
+    for s in &SIGMA {
+        g(&mut v, 0, 4, 8, 12, m[s[0]], m[s[1]]);
+        g(&mut v, 1, 5, 9, 13, m[s[2]], m[s[3]]);
+        g(&mut v, 2, 6, 10, 14, m[s[4]], m[s[5]]);
+        g(&mut v, 3, 7, 11, 15, m[s[6]], m[s[7]]);
+        g(&mut v, 0, 5, 10, 15, m[s[8]], m[s[9]]);
+        g(&mut v, 1, 6, 11, 12, m[s[10]], m[s[11]]);
+        g(&mut v, 2, 7, 8, 13, m[s[12]], m[s[13]]);
+        g(&mut v, 3, 4, 9, 14, m[s[14]], m[s[15]]);
+    }
+    for i in 0..8 {
+        h[i] ^= v[i] ^ v[i + 8];
+    }
+}
+
+/// BLAKE2b with digest length `out_len` (1..=64) and optional key (≤ 64
+/// bytes). Returns `out_len` bytes.
+pub fn blake2b(out_len: usize, key: &[u8], data: &[u8]) -> Vec<u8> {
+    assert!((1..=64).contains(&out_len), "digest length 1..=64");
+    assert!(key.len() <= 64, "key length <= 64");
+    let mut h = IV;
+    // Parameter block: digest length, key length, fanout = depth = 1.
+    h[0] ^= 0x0101_0000 ^ ((key.len() as u64) << 8) ^ out_len as u64;
+
+    let mut t: u128 = 0;
+    let process = |h: &mut [u64; 8], chunk: &[u8], last: bool, t: &mut u128| {
+        let mut block = [0u8; 128];
+        block[..chunk.len()].copy_from_slice(chunk);
+        *t += chunk.len() as u128;
+        compress(h, &block, *t, last);
+    };
+
+    if !key.is_empty() {
+        // Keyed mode: the key, zero-padded to a full block, is block 0.
+        let mut kb = [0u8; 128];
+        kb[..key.len()].copy_from_slice(key);
+        if data.is_empty() {
+            t += 128;
+            compress(&mut h, &kb, t, true);
+            return digest_bytes(&h, out_len);
+        }
+        t += 128;
+        compress(&mut h, &kb, t, false);
+    } else if data.is_empty() {
+        // Empty unkeyed message: a single all-zero final block with t = 0.
+        process(&mut h, &[], true, &mut t);
+        return digest_bytes(&h, out_len);
+    }
+
+    let nblocks = data.len().div_ceil(128);
+    for i in 0..nblocks {
+        let chunk = &data[i * 128..(data.len().min((i + 1) * 128))];
+        if i + 1 == nblocks {
+            process(&mut h, chunk, true, &mut t);
+        } else {
+            // Full non-final block.
+            let mut block = [0u8; 128];
+            block.copy_from_slice(chunk);
+            t += 128;
+            compress(&mut h, &block, t, false);
+        }
+    }
+    digest_bytes(&h, out_len)
+}
+
+fn digest_bytes(h: &[u64; 8], out_len: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    for w in h {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out.truncate(out_len);
+    out
+}
+
+/// BLAKE2b-based [`Hasher32`]: keyed BLAKE2b-64bit over the 4 key bytes.
+#[derive(Debug, Clone)]
+pub struct Blake2b {
+    key: [u8; 8],
+}
+
+impl Blake2b {
+    /// Construct the seeded hasher (named `hasher` to keep `Blake2b` free
+    /// for the raw function namespace).
+    pub fn hasher(seed: &mut SplitMix64) -> Self {
+        Self {
+            key: seed.next_u64().to_le_bytes(),
+        }
+    }
+
+    pub fn with_key(key: [u8; 8]) -> Self {
+        Self { key }
+    }
+}
+
+impl Hasher32 for Blake2b {
+    fn hash(&self, x: u32) -> u32 {
+        let d = blake2b(8, &self.key, &x.to_le_bytes());
+        u32::from_le_bytes(d[..4].try_into().unwrap())
+    }
+
+    fn name(&self) -> &'static str {
+        "blake2b"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    /// RFC 7693 Appendix A: BLAKE2b-512("abc").
+    #[test]
+    fn rfc7693_abc() {
+        let d = blake2b(64, &[], b"abc");
+        assert_eq!(
+            hex(&d),
+            "ba80a53f981c4d0d6a2797b69f12f6e94c212f14685ac4b74b12bb6fdbffa2d1\
+             7d87c5392aab792dc252d5de4533cc9518d38aa8dbf1925ab92386edd4009923"
+        );
+    }
+
+    /// Well-known BLAKE2b-512 of the empty string.
+    #[test]
+    fn empty_string() {
+        let d = blake2b(64, &[], b"");
+        assert_eq!(
+            hex(&d),
+            "786a02f742015903c6c6fd852552d272912f4740e15847618a86e217f71f5419\
+             d25e1031afee585313896444934eb04b903a685b1448b755d56f701afe9be2ce"
+        );
+    }
+
+    #[test]
+    fn multiblock_messages() {
+        // Exactly one block, one block + 1 byte, several blocks.
+        let long = vec![0xABu8; 300];
+        let d128 = blake2b(64, &[], &long[..128]);
+        let d129 = blake2b(64, &[], &long[..129]);
+        let d300 = blake2b(64, &[], &long);
+        assert_ne!(d128, d129);
+        assert_ne!(d129, d300);
+        // Determinism.
+        assert_eq!(d300, blake2b(64, &[], &long));
+    }
+
+    #[test]
+    fn keyed_mode_differs_and_is_deterministic() {
+        let a = blake2b(32, b"key-one!", b"message");
+        let b = blake2b(32, b"key-two!", b"message");
+        let c = blake2b(32, b"key-one!", b"message");
+        assert_ne!(a, b);
+        assert_eq!(a, c);
+        // Keyed empty message path.
+        let d = blake2b(16, b"k", b"");
+        assert_eq!(d.len(), 16);
+    }
+
+    #[test]
+    fn digest_lengths() {
+        for n in [1usize, 4, 8, 20, 32, 48, 64] {
+            assert_eq!(blake2b(n, &[], b"x").len(), n);
+        }
+        // Different output lengths give unrelated digests (length is in the
+        // parameter block), not truncations of each other.
+        let d32 = blake2b(32, &[], b"x");
+        let d64 = blake2b(64, &[], b"x");
+        assert_ne!(&d64[..32], &d32[..]);
+    }
+
+    #[test]
+    fn hasher32_wrapper() {
+        let h = Blake2b::with_key(*b"seedseed");
+        let a = h.hash(1);
+        let b = h.hash(2);
+        assert_ne!(a, b);
+        assert_eq!(a, Blake2b::with_key(*b"seedseed").hash(1));
+    }
+
+    #[test]
+    fn avalanche() {
+        let h = Blake2b::with_key(*b"\x01\x02\x03\x04\x05\x06\x07\x08");
+        let mut total = 0u32;
+        let trials = 300; // blake2 is slow; fewer trials
+        let mut g = SplitMix64::new(5);
+        for _ in 0..trials {
+            let x = g.next_u32();
+            let bit = 1u32 << (g.next_u32() % 32);
+            total += (h.hash(x) ^ h.hash(x ^ bit)).count_ones();
+        }
+        let avg = total as f64 / trials as f64;
+        assert!((avg - 16.0).abs() < 1.5, "avalanche avg {avg}");
+    }
+}

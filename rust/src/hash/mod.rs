@@ -1,0 +1,305 @@
+//! The basic hash function zoo evaluated by the paper.
+//!
+//! The paper's central question is *which concrete hash function should
+//! implement OPH / FH / LSH*. This module provides every family from the
+//! paper's Table 1 behind one object-safe trait, so that sketches and the
+//! coordinator treat the hash function as a swappable configuration knob:
+//!
+//! | Family | Paper row | Guarantee |
+//! |---|---|---|
+//! | [`MultiplyShift`] | multiply-shift | 2-independent (Dietzfelbinger) |
+//! | [`MultiplyModPrime`] | `(ax+b) mod p` | 2-independent |
+//! | [`PolyHash`] (k=2,3,…,20) | k-wise PolyHash | k-independent |
+//! | [`Murmur3`] | MurmurHash3 (x86_32) | none (broken by [1]) |
+//! | [`City64`] | CityHash64 | none (broken by [1]) |
+//! | [`Blake2b`] | Blake2 | cryptographic |
+//! | [`SimpleTab32`] | — (ablation) | 3-independent |
+//! | [`TwistedTab32`] | — (ablation, SODA'13) | beyond 3-independent, short of mixed |
+//! | [`MixedTab32`] / [`MixedTab64`] | mixed tabulation | truly-random-like for OPH/FH [14] |
+//!
+//! All hashers map 32-bit keys to 32-bit (or 64-bit) values, matching the
+//! paper's experimental setup ("All keys and hash outputs were 32-bit
+//! integers").
+
+pub mod multiply_shift;
+pub mod polyhash;
+pub mod murmur3;
+pub mod city;
+pub mod blake2;
+pub mod tabulation;
+pub mod twisted;
+pub mod quality;
+
+pub use blake2::Blake2b;
+pub use city::City64;
+pub use multiply_shift::{MultiplyModPrime, MultiplyShift};
+pub use murmur3::Murmur3;
+pub use polyhash::PolyHash;
+pub use tabulation::{MixedTab32, MixedTab64, SimpleTab32};
+pub use twisted::TwistedTab32;
+
+use crate::util::rng::SplitMix64;
+
+/// A basic hash function over 32-bit keys, as used throughout the paper.
+///
+/// Implementations must be deterministic for a fixed seed and cheap to call
+/// in a tight loop. `hash_slice` exists so the hot loop monomorphises inside
+/// each implementation (one dynamic dispatch per *batch*, not per key).
+pub trait Hasher32: Send + Sync {
+    /// Hash one 32-bit key to a 32-bit value.
+    fn hash(&self, x: u32) -> u32;
+
+    /// Hash a batch; override for a monomorphic inner loop.
+    fn hash_slice(&self, keys: &[u32], out: &mut [u32]) {
+        assert_eq!(keys.len(), out.len());
+        for (k, o) in keys.iter().zip(out.iter_mut()) {
+            *o = self.hash(*k);
+        }
+    }
+
+    /// Family name (used in experiment outputs).
+    fn name(&self) -> &'static str;
+}
+
+/// A hash function producing 64 output bits per 32-bit key.
+///
+/// Mixed tabulation gets this essentially for free by widening its tables
+/// (§2.4: the two 32-bit halves are independent whp.), which is one of its
+/// practical advantages; other families must evaluate twice.
+pub trait Hasher64: Send + Sync {
+    fn hash64(&self, x: u32) -> u64;
+    fn name64(&self) -> &'static str;
+}
+
+/// The hash families of the paper's evaluation (Table 1 ordering), plus the
+/// tabulation extensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HashFamily {
+    MultiplyShift,
+    MultiplyModPrime,
+    Poly2,
+    Poly3,
+    /// 20-wise PolyHash — the paper's "(cheating) way to simulate truly
+    /// random hashing".
+    Poly20,
+    Murmur3,
+    City,
+    Blake2,
+    SimpleTab,
+    /// Twisted tabulation (Pătrașcu–Thorup SODA'13) — tabulation ablation
+    /// between simple and mixed.
+    TwistedTab,
+    MixedTab,
+}
+
+impl HashFamily {
+    /// All families benchmarked in Table 1.
+    pub const TABLE1: &'static [HashFamily] = &[
+        HashFamily::MultiplyShift,
+        HashFamily::Poly2,
+        HashFamily::Poly3,
+        HashFamily::Murmur3,
+        HashFamily::City,
+        HashFamily::Blake2,
+        HashFamily::MixedTab,
+    ];
+
+    /// The five families compared in Figures 2–4 (chosen in §4 based on
+    /// Table 1): multiply-shift, 2-wise PolyHash, MurmurHash3, mixed
+    /// tabulation, and 20-wise PolyHash as the truly-random stand-in.
+    pub const FIGURES: &'static [HashFamily] = &[
+        HashFamily::MultiplyShift,
+        HashFamily::Poly2,
+        HashFamily::MixedTab,
+        HashFamily::Murmur3,
+        HashFamily::Poly20,
+    ];
+
+    /// The tabulation progression for the densification/tabulation ablation
+    /// (simple → twisted → mixed).
+    pub const TABULATIONS: &'static [HashFamily] = &[
+        HashFamily::SimpleTab,
+        HashFamily::TwistedTab,
+        HashFamily::MixedTab,
+    ];
+
+    /// Stable identifier used in CSV outputs and CLI arguments.
+    pub fn id(&self) -> &'static str {
+        match self {
+            HashFamily::MultiplyShift => "multiply_shift",
+            HashFamily::MultiplyModPrime => "multiply_mod_prime",
+            HashFamily::Poly2 => "polyhash2",
+            HashFamily::Poly3 => "polyhash3",
+            HashFamily::Poly20 => "polyhash20",
+            HashFamily::Murmur3 => "murmur3",
+            HashFamily::City => "cityhash",
+            HashFamily::Blake2 => "blake2b",
+            HashFamily::SimpleTab => "simple_tab",
+            HashFamily::TwistedTab => "twisted_tab",
+            HashFamily::MixedTab => "mixed_tab",
+        }
+    }
+
+    /// Human label as used in the paper's figures.
+    pub fn label(&self) -> &'static str {
+        match self {
+            HashFamily::MultiplyShift => "Multiply-shift",
+            HashFamily::MultiplyModPrime => "Multiply-mod-prime",
+            HashFamily::Poly2 => "2-wise PolyHash",
+            HashFamily::Poly3 => "3-wise PolyHash",
+            HashFamily::Poly20 => "20-wise PolyHash",
+            HashFamily::Murmur3 => "MurmurHash3",
+            HashFamily::City => "CityHash",
+            HashFamily::Blake2 => "Blake2",
+            HashFamily::SimpleTab => "Simple tabulation",
+            HashFamily::TwistedTab => "Twisted tabulation",
+            HashFamily::MixedTab => "Mixed tabulation",
+        }
+    }
+
+    /// Parse from the CLI/CSV identifier.
+    pub fn parse(s: &str) -> Option<HashFamily> {
+        Some(match s {
+            "multiply_shift" | "ms" => HashFamily::MultiplyShift,
+            "multiply_mod_prime" | "mmp" => HashFamily::MultiplyModPrime,
+            "polyhash2" | "poly2" => HashFamily::Poly2,
+            "polyhash3" | "poly3" => HashFamily::Poly3,
+            "polyhash20" | "poly20" | "random" => HashFamily::Poly20,
+            "murmur3" | "murmur" => HashFamily::Murmur3,
+            "cityhash" | "city" => HashFamily::City,
+            "blake2b" | "blake2" => HashFamily::Blake2,
+            "simple_tab" => HashFamily::SimpleTab,
+            "twisted_tab" => HashFamily::TwistedTab,
+            "mixed_tab" | "mixedtab" | "mt" => HashFamily::MixedTab,
+            _ => return None,
+        })
+    }
+
+    /// Instantiate a boxed hasher with an independent seed stream.
+    pub fn build(&self, seed: u64) -> Box<dyn Hasher32> {
+        let mut sm = SplitMix64::new(seed);
+        match self {
+            HashFamily::MultiplyShift => Box::new(MultiplyShift::new(&mut sm)),
+            HashFamily::MultiplyModPrime => Box::new(MultiplyModPrime::new(&mut sm)),
+            HashFamily::Poly2 => Box::new(PolyHash::new(2, &mut sm)),
+            HashFamily::Poly3 => Box::new(PolyHash::new(3, &mut sm)),
+            HashFamily::Poly20 => Box::new(PolyHash::new(20, &mut sm)),
+            HashFamily::Murmur3 => Box::new(Murmur3::new(&mut sm)),
+            HashFamily::City => Box::new(City64::new(&mut sm)),
+            HashFamily::Blake2 => Box::new(Blake2b::hasher(&mut sm)),
+            HashFamily::SimpleTab => Box::new(SimpleTab32::new(&mut sm)),
+            HashFamily::TwistedTab => Box::new(TwistedTab32::new(&mut sm)),
+            HashFamily::MixedTab => Box::new(MixedTab32::new(&mut sm)),
+        }
+    }
+
+    /// Instantiate a 64-bit-output hasher (two evaluations for families
+    /// without a native wide output; native wide path for mixed tabulation).
+    pub fn build64(&self, seed: u64) -> Box<dyn Hasher64> {
+        let mut sm = SplitMix64::new(seed);
+        match self {
+            HashFamily::MixedTab => Box::new(MixedTab64::new(&mut sm)),
+            _ => {
+                let a = self.build(seed);
+                let b = self.build(SplitMix64::new(seed ^ 0x9E3779B97F4A7C15).next_u64());
+                Box::new(PairHasher64 { a, b })
+            }
+        }
+    }
+}
+
+/// 64-bit output from two independent 32-bit hashers (the "evaluate twice"
+/// fallback the paper contrasts against mixed tabulation's widened tables).
+pub struct PairHasher64 {
+    a: Box<dyn Hasher32>,
+    b: Box<dyn Hasher32>,
+}
+
+impl Hasher64 for PairHasher64 {
+    fn hash64(&self, x: u32) -> u64 {
+        ((self.a.hash(x) as u64) << 32) | self.b.hash(x) as u64
+    }
+    fn name64(&self) -> &'static str {
+        self.a.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_roundtrip() {
+        for fam in [
+            HashFamily::MultiplyShift,
+            HashFamily::MultiplyModPrime,
+            HashFamily::Poly2,
+            HashFamily::Poly3,
+            HashFamily::Poly20,
+            HashFamily::Murmur3,
+            HashFamily::City,
+            HashFamily::Blake2,
+            HashFamily::SimpleTab,
+            HashFamily::MixedTab,
+        ] {
+            assert_eq!(HashFamily::parse(fam.id()), Some(fam), "{}", fam.id());
+        }
+        assert_eq!(HashFamily::parse("nope"), None);
+    }
+
+    #[test]
+    fn build_all_and_hash() {
+        for fam in HashFamily::TABLE1 {
+            let h = fam.build(42);
+            let a = h.hash(1);
+            let b = h.hash(2);
+            // Deterministic given seed:
+            let h2 = fam.build(42);
+            assert_eq!(h2.hash(1), a, "{}", fam.id());
+            assert_eq!(h2.hash(2), b, "{}", fam.id());
+        }
+    }
+
+    #[test]
+    fn seed_changes_function() {
+        for fam in HashFamily::TABLE1 {
+            let h1 = fam.build(1);
+            let h2 = fam.build(2);
+            let diff = (0u32..64).filter(|&x| h1.hash(x) != h2.hash(x)).count();
+            assert!(diff > 32, "{} seed insensitivity: {diff}", fam.id());
+        }
+    }
+
+    #[test]
+    fn hash_slice_matches_scalar() {
+        for fam in HashFamily::TABLE1 {
+            let h = fam.build(7);
+            let keys: Vec<u32> = (0u32..257).map(|i| i.wrapping_mul(2654435761)).collect();
+            let mut out = vec![0u32; keys.len()];
+            h.hash_slice(&keys, &mut out);
+            for (k, o) in keys.iter().zip(&out) {
+                assert_eq!(h.hash(*k), *o, "{}", fam.id());
+            }
+        }
+    }
+
+    #[test]
+    fn pair_hasher64_combines_halves() {
+        let h = HashFamily::Murmur3.build64(3);
+        let v = h.hash64(123);
+        assert_ne!(v >> 32, v & 0xFFFF_FFFF);
+        let h2 = HashFamily::Murmur3.build64(3);
+        assert_eq!(h2.hash64(123), v);
+    }
+
+    #[test]
+    fn mixedtab64_is_native() {
+        let h = HashFamily::MixedTab.build64(9);
+        assert_eq!(h.name64(), "mixed_tab");
+        // determinism
+        let h2 = HashFamily::MixedTab.build64(9);
+        for x in [0u32, 1, 0xFFFF_FFFF, 12345] {
+            assert_eq!(h.hash64(x), h2.hash64(x));
+        }
+    }
+}

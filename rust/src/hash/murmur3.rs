@@ -1,0 +1,195 @@
+//! MurmurHash3 (x86_32 variant) — Austin Appleby, public domain.
+//!
+//! The paper's "very popular hash function with no proven guarantees"; it
+//! performs like truly-random hashing in all of the paper's experiments but
+//! is ~40% slower than mixed tabulation and is known to be breakable by
+//! adversarial input construction ([1] in the paper).
+//!
+//! This is a faithful port of the reference `MurmurHash3_x86_32`, validated
+//! against the reference implementation's published test vectors. Keys on
+//! the paper's hot path are 32-bit integers, so [`Murmur3::hash`] uses a
+//! specialised single-block evaluation (identical output to hashing the
+//! 4 little-endian bytes).
+
+use super::Hasher32;
+use crate::util::rng::SplitMix64;
+
+#[inline(always)]
+fn fmix32(mut h: u32) -> u32 {
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85EB_CA6B);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xC2B2_AE35);
+    h ^= h >> 16;
+    h
+}
+
+const C1: u32 = 0xCC9E_2D51;
+const C2: u32 = 0x1B87_3593;
+
+/// MurmurHash3_x86_32 over an arbitrary byte slice with the given seed.
+pub fn murmur3_x86_32(data: &[u8], seed: u32) -> u32 {
+    let nblocks = data.len() / 4;
+    let mut h1 = seed;
+
+    // Body: 4-byte little-endian blocks.
+    for i in 0..nblocks {
+        let b = &data[i * 4..i * 4 + 4];
+        let mut k1 = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        k1 = k1.wrapping_mul(C1);
+        k1 = k1.rotate_left(15);
+        k1 = k1.wrapping_mul(C2);
+        h1 ^= k1;
+        h1 = h1.rotate_left(13);
+        h1 = h1.wrapping_mul(5).wrapping_add(0xE654_6B64);
+    }
+
+    // Tail.
+    let tail = &data[nblocks * 4..];
+    let mut k1: u32 = 0;
+    if tail.len() >= 3 {
+        k1 ^= (tail[2] as u32) << 16;
+    }
+    if tail.len() >= 2 {
+        k1 ^= (tail[1] as u32) << 8;
+    }
+    if !tail.is_empty() {
+        k1 ^= tail[0] as u32;
+        k1 = k1.wrapping_mul(C1);
+        k1 = k1.rotate_left(15);
+        k1 = k1.wrapping_mul(C2);
+        h1 ^= k1;
+    }
+
+    // Finalisation.
+    h1 ^= data.len() as u32;
+    fmix32(h1)
+}
+
+/// Seeded MurmurHash3 over 32-bit keys (single-block fast path).
+#[derive(Debug, Clone)]
+pub struct Murmur3 {
+    seed: u32,
+}
+
+impl Murmur3 {
+    pub fn new(seed: &mut SplitMix64) -> Self {
+        Self {
+            seed: seed.next_u32(),
+        }
+    }
+
+    pub fn with_seed(seed: u32) -> Self {
+        Self { seed }
+    }
+
+    /// One-block specialisation of `murmur3_x86_32` for a 4-byte key.
+    #[inline(always)]
+    fn eval(&self, x: u32) -> u32 {
+        let mut k1 = x; // little-endian bytes of x form the block
+        k1 = k1.wrapping_mul(C1);
+        k1 = k1.rotate_left(15);
+        k1 = k1.wrapping_mul(C2);
+        let mut h1 = self.seed ^ k1;
+        h1 = h1.rotate_left(13);
+        h1 = h1.wrapping_mul(5).wrapping_add(0xE654_6B64);
+        h1 ^= 4; // len
+        fmix32(h1)
+    }
+}
+
+impl Hasher32 for Murmur3 {
+    #[inline]
+    fn hash(&self, x: u32) -> u32 {
+        self.eval(x)
+    }
+
+    fn hash_slice(&self, keys: &[u32], out: &mut [u32]) {
+        assert_eq!(keys.len(), out.len());
+        for (k, o) in keys.iter().zip(out.iter_mut()) {
+            *o = self.eval(*k);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "murmur3"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference test vectors for MurmurHash3_x86_32 (from the SMHasher
+    /// verification corpus; widely cross-checked).
+    #[test]
+    fn reference_vectors() {
+        let cases: &[(&[u8], u32, u32)] = &[
+            (b"", 0, 0),
+            (b"", 1, 0x514E_28B7),
+            (b"", 0xFFFF_FFFF, 0x81F1_6F39),
+            (&[0xFF, 0xFF, 0xFF, 0xFF], 0, 0x7629_3B50),
+            (&[0x21, 0x43, 0x65, 0x87], 0, 0xF55B_516B),
+            (&[0x21, 0x43, 0x65, 0x87], 0x5082_EDEE, 0x2362_F9DE),
+            (&[0x21, 0x43, 0x65], 0, 0x7E4A_8634),
+            (&[0x21, 0x43], 0, 0xA0F7_B07A),
+            (&[0x21], 0, 0x7266_1CF4),
+            (&[0x00, 0x00, 0x00, 0x00], 0, 0x2362_F9DE),
+            (&[0x00, 0x00, 0x00], 0, 0x85F0_B427),
+            (&[0x00, 0x00], 0, 0x30F4_C306),
+            (&[0x00], 0, 0x514E_28B7),
+        ];
+        for (data, seed, expect) in cases {
+            assert_eq!(
+                murmur3_x86_32(data, *seed),
+                *expect,
+                "data={data:02x?} seed={seed:#x}"
+            );
+        }
+    }
+
+    #[test]
+    fn u32_fast_path_matches_bytes() {
+        let h = Murmur3::with_seed(0xDEAD_BEEF);
+        for x in [0u32, 1, 0x8721_4365, u32::MAX, 42] {
+            assert_eq!(h.hash(x), murmur3_x86_32(&x.to_le_bytes(), 0xDEAD_BEEF));
+        }
+        // And across many random keys.
+        let mut g = SplitMix64::new(1);
+        for _ in 0..1000 {
+            let x = g.next_u32();
+            assert_eq!(h.hash(x), murmur3_x86_32(&x.to_le_bytes(), 0xDEAD_BEEF));
+        }
+    }
+
+    #[test]
+    fn longer_inputs_exercise_tail_paths() {
+        // Every tail length 0..4 over a fixed pattern; check determinism and
+        // distinctness (these are regression pins computed from this port,
+        // guarding against accidental edits).
+        let data = b"The quick brown fox jumps over the lazy dog";
+        let full = murmur3_x86_32(data, 0x9747_B28C);
+        assert_eq!(full, murmur3_x86_32(data, 0x9747_B28C));
+        let mut outs = std::collections::HashSet::new();
+        for l in 0..data.len() {
+            outs.insert(murmur3_x86_32(&data[..l], 7));
+        }
+        assert_eq!(outs.len(), data.len());
+    }
+
+    #[test]
+    fn avalanche_smoke() {
+        // Flipping one input bit should flip ~16 of 32 output bits on average.
+        let h = Murmur3::with_seed(123);
+        let mut total = 0u32;
+        let trials = 2000;
+        let mut g = SplitMix64::new(5);
+        for _ in 0..trials {
+            let x = g.next_u32();
+            let bit = 1u32 << (g.next_u32() % 32);
+            total += (h.hash(x) ^ h.hash(x ^ bit)).count_ones();
+        }
+        let avg = total as f64 / trials as f64;
+        assert!((avg - 16.0).abs() < 1.0, "avalanche avg {avg}");
+    }
+}

@@ -1,0 +1,156 @@
+//! Statistical quality diagnostics for basic hash functions.
+//!
+//! The machinery behind the `hash_quality` example and several test gates:
+//! avalanche matrices, chi-squared bucket uniformity, and the dense-block
+//! occupancy ratio that makes §4.1's failure mechanism *measurable*: weak
+//! multiplicative schemes map a dense id block `[0, n)` across `k` bins
+//! "too evenly" (sub-binomial occupancy variance), which systematically
+//! favours intersection elements in per-bin minima and biases OPH.
+
+use super::Hasher32;
+use crate::util::rng::Xoshiro256;
+
+/// Avalanche statistics of a 32→32-bit function.
+#[derive(Debug, Clone)]
+pub struct Avalanche {
+    /// Mean fraction of output bits flipped per single-bit input flip
+    /// (ideal: 0.5).
+    pub mean_flip_rate: f64,
+    /// Worst |p − 0.5| over the 32×32 (input bit, output bit) matrix.
+    pub worst_bias: f64,
+}
+
+/// Estimate the avalanche matrix with `trials` random keys per input bit.
+pub fn avalanche(h: &dyn Hasher32, trials: usize, seed: u64) -> Avalanche {
+    let mut rng = Xoshiro256::new(seed);
+    let mut flip_counts = [[0u32; 32]; 32];
+    for _ in 0..trials {
+        let x = rng.next_u32();
+        let base = h.hash(x);
+        for in_bit in 0..32 {
+            let diff = base ^ h.hash(x ^ (1u32 << in_bit));
+            for out_bit in 0..32 {
+                flip_counts[in_bit][out_bit] += (diff >> out_bit) & 1;
+            }
+        }
+    }
+    let mut total = 0f64;
+    let mut worst = 0f64;
+    for row in &flip_counts {
+        for &c in row {
+            let p = c as f64 / trials as f64;
+            total += p;
+            worst = worst.max((p - 0.5).abs());
+        }
+    }
+    Avalanche {
+        mean_flip_rate: total / (32.0 * 32.0),
+        worst_bias: worst,
+    }
+}
+
+/// Chi-squared statistic of the low-byte distribution over `n` sequential
+/// keys (dense block — the structured input of §4.1). 255 degrees of
+/// freedom; values ≫ 255 + 6·√510 ≈ 391 indicate non-uniformity.
+pub fn chi_squared_low_byte(h: &dyn Hasher32, n: u32) -> f64 {
+    let mut counts = [0f64; 256];
+    for x in 0..n {
+        counts[(h.hash(x) & 0xFF) as usize] += 1.0;
+    }
+    let expect = n as f64 / 256.0;
+    counts.iter().map(|c| (c - expect).powi(2) / expect).sum()
+}
+
+/// Median (over seeds) of the per-bin occupancy variance of the dense block
+/// `[0, n)` mapped to `k` bins via `hash(x) mod k`, normalised by the
+/// binomial reference `n/k·(1 − 1/k)`.
+///
+/// ≈ 1.0: truly-random-like. ≪ 1.0: "too even" — the OPH bias mechanism.
+/// ≫ 1.0: clustered (also bad, different failure).
+pub fn occupancy_ratio(
+    build: impl Fn(u64) -> Box<dyn Hasher32>,
+    n: u32,
+    k: usize,
+    seeds: u64,
+) -> f64 {
+    let mut vars: Vec<f64> = (0..seeds)
+        .map(|seed| {
+            let h = build(seed);
+            let mut counts = vec![0f64; k];
+            for x in 0..n {
+                counts[(h.hash(x) as usize) % k] += 1.0;
+            }
+            let mean = n as f64 / k as f64;
+            counts.iter().map(|c| (c - mean).powi(2)).sum::<f64>() / k as f64
+        })
+        .collect();
+    vars.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = vars[vars.len() / 2];
+    let binomial = n as f64 / k as f64 * (1.0 - 1.0 / k as f64);
+    median / binomial
+}
+
+/// Serial correlation of consecutive outputs over sequential keys, in
+/// [-1, 1] (ideal ≈ 0). Multiplicative schemes on sequential keys produce
+/// strongly structured (lattice) output sequences.
+pub fn serial_correlation(h: &dyn Hasher32, n: u32) -> f64 {
+    let xs: Vec<f64> = (0..n).map(|x| h.hash(x) as f64).collect();
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let mut cov = 0.0;
+    let mut var = 0.0;
+    for i in 0..xs.len() {
+        var += (xs[i] - mean).powi(2);
+        if i + 1 < xs.len() {
+            cov += (xs[i] - mean) * (xs[i + 1] - mean);
+        }
+    }
+    if var == 0.0 {
+        return 0.0;
+    }
+    cov / var
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::HashFamily;
+
+    #[test]
+    fn mixed_tab_near_ideal_avalanche() {
+        let h = HashFamily::MixedTab.build(1);
+        let a = avalanche(h.as_ref(), 800, 42);
+        assert!((a.mean_flip_rate - 0.5).abs() < 0.01, "{a:?}");
+        assert!(a.worst_bias < 0.12, "{a:?}");
+    }
+
+    #[test]
+    fn multiply_shift_poor_avalanche() {
+        // Low input bits barely influence high output bits in (ax+b)>>32.
+        let h = HashFamily::MultiplyShift.build(1);
+        let a = avalanche(h.as_ref(), 800, 42);
+        assert!(a.worst_bias > 0.3, "expected structured matrix: {a:?}");
+    }
+
+    #[test]
+    fn chi_squared_separates() {
+        let strong = HashFamily::MixedTab.build(3);
+        assert!(chi_squared_low_byte(strong.as_ref(), 100_000) < 391.0);
+    }
+
+    #[test]
+    fn occupancy_contrast() {
+        let mt = occupancy_ratio(|s| HashFamily::MixedTab.build(s), 2000, 64, 21);
+        let ms = occupancy_ratio(|s| HashFamily::MultiplyShift.build(s), 2000, 64, 21);
+        assert!((0.5..2.0).contains(&mt), "mixed_tab ratio {mt}");
+        assert!(ms < mt, "ms {ms} should be below mt {mt} (too even)");
+    }
+
+    #[test]
+    fn serial_correlation_bounds() {
+        for fam in [HashFamily::MixedTab, HashFamily::Murmur3] {
+            let h = fam.build(5);
+            let c = serial_correlation(h.as_ref(), 20_000);
+            assert!(c.abs() < 0.05, "{}: corr {c}", fam.id());
+        }
+    }
+}

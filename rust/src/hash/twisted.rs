@@ -1,0 +1,127 @@
+//! Twisted tabulation (Pătrașcu & Thorup, SODA'13) — the intermediate point
+//! between simple and mixed tabulation, included as an ablation.
+//!
+//! Like simple tabulation, but the first character's table additionally
+//! yields a "twist": a random value XORed into the *key's remaining
+//! characters* before they index their tables. Twisted tabulation fixes
+//! several of simple tabulation's failure modes (e.g. min-wise bias on
+//! structured sets) at one extra lookup, but does not reach mixed
+//! tabulation's Chernoff-style guarantees for statistics over k-partitions
+//! — which is exactly the gap the paper's [14] closed. Having all three in
+//! the zoo lets `exp synth2 --ablate-tabulation` show the progression.
+
+use super::polyhash::PolyHash;
+use super::Hasher32;
+use crate::util::rng::SplitMix64;
+
+/// Twisted tabulation over 32-bit keys, c = 4 characters of 8 bits.
+///
+/// `t0[b]` returns 64 bits: low 32 = output contribution, high 24 used to
+/// twist the remaining three characters.
+pub struct TwistedTab32 {
+    /// Twist table for character 0: `[256]` entries of (out32 | twist<<32).
+    t0: Vec<u64>,
+    /// Plain tables for characters 1..4: `t[pos-1][byte]` flattened.
+    t: Vec<u32>,
+}
+
+impl TwistedTab32 {
+    pub fn new(seed: &mut SplitMix64) -> Self {
+        let seeder = PolyHash::new(20, &mut SplitMix64::new(seed.next_u64()));
+        let mut counter = 0u32;
+        let next64 = |c: &mut u32| {
+            let lo = seeder.eval61(*c);
+            *c += 1;
+            let hi = seeder.eval61(*c);
+            *c += 1;
+            lo | (hi << 61)
+        };
+        let t0: Vec<u64> = (0..256).map(|_| next64(&mut counter)).collect();
+        // Three plain tables of 256 u32 entries (positions 1..4).
+        let t: Vec<u32> = (0..768)
+            .map(|_| next64(&mut counter) as u32)
+            .collect();
+        Self { t0, t }
+    }
+
+    #[inline(always)]
+    fn eval(&self, x: u32) -> u32 {
+        let e0 = self.t0[(x & 0xFF) as usize];
+        // Twist the upper 24 bits of the key.
+        let rest = (x >> 8) ^ ((e0 >> 32) as u32 & 0x00FF_FFFF);
+        let b1 = (rest & 0xFF) as usize;
+        let b2 = ((rest >> 8) & 0xFF) as usize;
+        let b3 = ((rest >> 16) & 0xFF) as usize;
+        (e0 as u32) ^ self.t[b1] ^ self.t[256 + b2] ^ self.t[512 + b3]
+    }
+}
+
+impl Hasher32 for TwistedTab32 {
+    #[inline]
+    fn hash(&self, x: u32) -> u32 {
+        self.eval(x)
+    }
+
+    fn hash_slice(&self, keys: &[u32], out: &mut [u32]) {
+        assert_eq!(keys.len(), out.len());
+        for (k, o) in keys.iter().zip(out.iter_mut()) {
+            *o = self.eval(*k);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "twisted_tab"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tt(seed: u64) -> TwistedTab32 {
+        TwistedTab32::new(&mut SplitMix64::new(seed))
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a = tt(1);
+        let b = tt(1);
+        let c = tt(2);
+        let mut diff = 0;
+        for x in 0..512u32 {
+            assert_eq!(a.hash(x), b.hash(x));
+            diff += (a.hash(x) != c.hash(x)) as u32;
+        }
+        assert!(diff > 500);
+    }
+
+    #[test]
+    fn twist_breaks_char_linearity() {
+        // Simple tabulation satisfies h(x)^h(y)^h(x^y)^h(0) == 0 for keys in
+        // disjoint character positions; the twist must break this for most
+        // seeds when character 0 participates.
+        let mut broken = 0;
+        for seed in 0..8u64 {
+            let h = tt(seed);
+            let x = 0x0000_00ABu32; // char 0
+            let y = 0x00CD_0000u32; // char 2
+            if h.hash(x) ^ h.hash(y) ^ h.hash(x ^ y) != h.hash(0) {
+                broken += 1;
+            }
+        }
+        assert!(broken >= 7, "twist ineffective in {}/8 seeds", 8 - broken);
+    }
+
+    #[test]
+    fn uniform_buckets() {
+        let h = tt(7);
+        let mut buckets = [0u32; 64];
+        for x in 0..100_000u32 {
+            buckets[(h.hash(x) % 64) as usize] += 1;
+        }
+        let expect = 100_000.0 / 64.0;
+        for &c in &buckets {
+            assert!((c as f64 - expect).abs() < expect * 0.25);
+        }
+    }
+}

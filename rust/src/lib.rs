@@ -1,0 +1,43 @@
+//! # mixtab
+//!
+//! Production-grade reproduction of **"Practical Hash Functions for Similarity
+//! Estimation and Dimensionality Reduction"** (Dahlgaard, Knudsen, Thorup —
+//! NIPS 2017).
+//!
+//! The crate is organised as the Layer-3 (coordination) half of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * [`hash`] — the basic hash function zoo the paper evaluates: mixed
+//!   tabulation, multiply-shift, k-wise PolyHash, MurmurHash3, CityHash64,
+//!   BLAKE2b, plus seeding infrastructure.
+//! * [`sketch`] — similarity-estimation and dimensionality-reduction sketches
+//!   built on those hash functions: MinHash, One-Permutation Hashing with
+//!   densification, Feature Hashing, SimHash, b-bit minwise.
+//! * [`lsh`] — the (K, L) locality-sensitive hashing index used in §4.2.
+//! * [`data`] — dataset substrate: the paper's synthetic generators and
+//!   statistically-matched stand-ins for MNIST / News20 (see DESIGN.md for
+//!   the substitution rationale), libsvm IO, shingling.
+//! * [`stats`] — histograms, MSE, summary statistics used by every figure.
+//! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust.
+//! * [`coordinator`] — the serving layer: dynamic batcher, request router,
+//!   worker pool and TCP front-end for the sketching service.
+//! * [`experiments`] — one driver per paper table/figure (Table 1, Figures
+//!   2–11) regenerating the evaluation.
+//! * [`util`] — self-contained substrate (JSON, config, CSV, RNG, thread
+//!   pool, CLI parsing, property-testing, bench harness) — the offline
+//!   registry ships none of the usual crates, so these are first-party.
+
+pub mod util;
+pub mod hash;
+pub mod sketch;
+pub mod data;
+pub mod stats;
+pub mod lsh;
+pub mod ml;
+pub mod runtime;
+pub mod coordinator;
+pub mod experiments;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

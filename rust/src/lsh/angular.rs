@@ -1,0 +1,148 @@
+//! Angular LSH over SimHash bits — the "FH [12, 2]" branch of §2.3.
+//!
+//! For cosine/angular similarity the practical LSH family is sign-random-
+//! projection (SimHash, Charikar [12]); Andoni et al. [2] compose it with
+//! feature hashing for dimensionality reduction first. This index mirrors
+//! [`super::index::LshIndex`] but keys buckets on K SimHash bits per table,
+//! L tables — and, like everything else in this crate, is parameterised by
+//! the basic hash family that generates the ±1 projections.
+
+use crate::data::sparse::SparseVector;
+use crate::hash::HashFamily;
+use crate::sketch::simhash::SimHash;
+use std::collections::HashMap;
+
+/// Angular LSH parameters: K bits per table, L tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AngularParams {
+    pub k: usize,
+    pub l: usize,
+}
+
+/// SimHash-based LSH index over sparse vectors.
+pub struct AngularIndex {
+    params: AngularParams,
+    sketcher: SimHash,
+    tables: Vec<HashMap<u64, Vec<u32>>>,
+    len: usize,
+}
+
+impl AngularIndex {
+    pub fn new(params: AngularParams, family: HashFamily, seed: u64) -> Self {
+        assert!(params.k >= 1 && params.k <= 64 && params.l >= 1);
+        let sketcher = SimHash::new(family, seed, params.k * params.l);
+        Self {
+            params,
+            sketcher,
+            tables: vec![HashMap::new(); params.l],
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn keys(&self, v: &SparseVector) -> Vec<u64> {
+        let bits = self.sketcher.sketch(v);
+        (0..self.params.l)
+            .map(|l| {
+                let mut key = 0u64;
+                for i in 0..self.params.k {
+                    key = (key << 1) | bits[l * self.params.k + i] as u64;
+                }
+                key
+            })
+            .collect()
+    }
+
+    pub fn insert(&mut self, id: u32, v: &SparseVector) {
+        let keys = self.keys(v);
+        for (table, key) in self.tables.iter_mut().zip(keys) {
+            table.entry(key).or_default().push(id);
+        }
+        self.len += 1;
+    }
+
+    /// Candidates colliding in ≥ 1 table (sorted, deduplicated).
+    pub fn query(&self, v: &SparseVector) -> Vec<u32> {
+        let mut out = Vec::new();
+        for (table, key) in self.tables.iter().zip(self.keys(v)) {
+            if let Some(ids) = table.get(&key) {
+                out.extend_from_slice(ids);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn randvec(rng: &mut Xoshiro256, dim: u32, nnz: usize) -> SparseVector {
+        SparseVector::new(
+            (0..nnz).map(|_| rng.next_u32() % dim).collect(),
+            (0..nnz).map(|_| rng.normal()).collect(),
+        )
+    }
+
+    #[test]
+    fn self_retrieval() {
+        let mut rng = Xoshiro256::new(1);
+        let mut idx = AngularIndex::new(AngularParams { k: 8, l: 8 }, HashFamily::MixedTab, 3);
+        let vs: Vec<SparseVector> = (0..25).map(|_| randvec(&mut rng, 5000, 60)).collect();
+        for (i, v) in vs.iter().enumerate() {
+            idx.insert(i as u32, v);
+        }
+        for (i, v) in vs.iter().enumerate() {
+            assert!(idx.query(v).contains(&(i as u32)), "vector {i} missed itself");
+        }
+    }
+
+    #[test]
+    fn correlated_vectors_collide_more() {
+        let mut rng = Xoshiro256::new(5);
+        let base = randvec(&mut rng, 2000, 200);
+        // Near-duplicate: small perturbation.
+        let near = SparseVector::new(
+            base.indices.clone(),
+            base.values.iter().map(|x| x + rng.normal() * 0.1).collect(),
+        );
+        let mut near_hits = 0;
+        let mut far_hits = 0;
+        for seed in 0..20u64 {
+            let mut idx =
+                AngularIndex::new(AngularParams { k: 10, l: 6 }, HashFamily::MixedTab, seed);
+            idx.insert(0, &near);
+            let far = randvec(&mut rng, 2000, 200);
+            idx.insert(1, &far);
+            let got = idx.query(&base);
+            near_hits += got.contains(&0) as u32;
+            far_hits += got.contains(&1) as u32;
+        }
+        assert!(
+            near_hits > far_hits + 5,
+            "near {near_hits} vs far {far_hits}"
+        );
+    }
+
+    #[test]
+    fn opposite_vector_never_collides_fully() {
+        let mut rng = Xoshiro256::new(9);
+        let v = randvec(&mut rng, 1000, 100);
+        let neg = SparseVector::new(v.indices.clone(), v.values.iter().map(|x| -x).collect());
+        let mut idx = AngularIndex::new(AngularParams { k: 12, l: 4 }, HashFamily::MixedTab, 1);
+        idx.insert(0, &neg);
+        // With 12 bits per key, an antipodal vector collides with
+        // probability ~0 (every bit flips).
+        assert!(idx.query(&v).is_empty());
+    }
+}

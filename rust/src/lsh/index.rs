@@ -1,0 +1,267 @@
+//! The (K, L) LSH index over OPH sketches.
+//!
+//! Each stored set gets **one** OPH sketch with `k = K·L` densified bins
+//! (one hash evaluation per element — the whole point of OPH, [32]); table
+//! `l` keys on bins `[lK, (l+1)K)`. A query retrieves the union of its L
+//! buckets. Larger K → fewer false positives per table; larger L → more
+//! chances for a true near neighbour to collide (§2.3).
+
+use crate::hash::HashFamily;
+use crate::sketch::densify::DensifyMode;
+use crate::sketch::oph::{BinLayout, OneHashSketcher, OphSketch};
+use std::collections::HashMap;
+
+/// LSH structural parameters (paper sweeps K, L ∈ {8, 10, 12}).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LshParams {
+    pub k: usize,
+    pub l: usize,
+}
+
+impl LshParams {
+    pub fn new(k: usize, l: usize) -> Self {
+        assert!(k >= 1 && l >= 1);
+        Self { k, l }
+    }
+
+    /// Total OPH bins needed.
+    pub fn sketch_bins(&self) -> usize {
+        self.k * self.l
+    }
+}
+
+/// Combine K bin values into one 64-bit bucket key (FNV-1a over the bytes;
+/// keys only need to separate distinct K-tuples).
+fn bucket_key(bins: &[u64]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &v in bins {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// An LSH index over sets of `u32` ids.
+pub struct LshIndex {
+    params: LshParams,
+    sketcher: OneHashSketcher,
+    /// `tables[l]: bucket key → ids`.
+    tables: Vec<HashMap<u64, Vec<u32>>>,
+    /// Number of indexed sets.
+    len: usize,
+}
+
+impl LshIndex {
+    /// Build an empty index whose sketches use `family(seed)` as the basic
+    /// hash function — the paper's experimental variable.
+    pub fn new(params: LshParams, family: HashFamily, seed: u64) -> Self {
+        let sketcher = OneHashSketcher::new(
+            family.build(seed),
+            params.sketch_bins(),
+            BinLayout::Mod,
+            DensifyMode::Paper,
+        );
+        Self {
+            params,
+            sketcher,
+            tables: vec![HashMap::new(); params.l],
+            len: 0,
+        }
+    }
+
+    pub fn params(&self) -> LshParams {
+        self.params
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Sketch a set with this index's sketcher.
+    pub fn sketch(&self, set: &[u32]) -> OphSketch {
+        self.sketcher.sketch(set)
+    }
+
+    /// Insert a set under `id`.
+    pub fn insert(&mut self, id: u32, set: &[u32]) {
+        let s = self.sketch(set);
+        self.insert_sketch(id, &s);
+    }
+
+    /// Insert a pre-computed sketch (the coordinator's worker pool sketches
+    /// off-thread and inserts here).
+    pub fn insert_sketch(&mut self, id: u32, s: &OphSketch) {
+        assert_eq!(s.k(), self.params.sketch_bins());
+        for (l, table) in self.tables.iter_mut().enumerate() {
+            let key = bucket_key(&s.bins[l * self.params.k..(l + 1) * self.params.k]);
+            table.entry(key).or_default().push(id);
+        }
+        self.len += 1;
+    }
+
+    /// Query: ids colliding with `set` in ≥ 1 table (deduplicated, sorted).
+    pub fn query(&self, set: &[u32]) -> Vec<u32> {
+        self.query_sketch(&self.sketch(set))
+    }
+
+    /// Query with a pre-computed sketch.
+    pub fn query_sketch(&self, s: &OphSketch) -> Vec<u32> {
+        assert_eq!(s.k(), self.params.sketch_bins());
+        let mut out: Vec<u32> = Vec::new();
+        for (l, table) in self.tables.iter().enumerate() {
+            let key = bucket_key(&s.bins[l * self.params.k..(l + 1) * self.params.k]);
+            if let Some(ids) = table.get(&key) {
+                out.extend_from_slice(ids);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Total buckets across tables (diagnostics).
+    pub fn bucket_count(&self) -> usize {
+        self.tables.iter().map(|t| t.len()).sum()
+    }
+
+    /// Raw table access for snapshotting ([`super::persist`]).
+    pub fn tables_raw(&self) -> &[HashMap<u64, Vec<u32>>] {
+        &self.tables
+    }
+
+    /// Replace table contents from a snapshot ([`super::persist`]). The
+    /// caller guarantees the tables were produced by an identically-seeded
+    /// index (same family, seed, K, L) — enforced by the snapshot header.
+    pub fn restore_raw(&mut self, tables: Vec<HashMap<u64, Vec<u32>>>, len: usize) {
+        assert_eq!(tables.len(), self.params.l);
+        self.tables = tables;
+        self.len = len;
+    }
+
+    /// Size of the largest bucket (diagnostics; weak hash functions produce
+    /// heavy buckets on structured data — the Figure 5 failure mode).
+    pub fn max_bucket(&self) -> usize {
+        self.tables
+            .iter()
+            .flat_map(|t| t.values().map(Vec::len))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::dataset1;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn self_query_hits() {
+        let mut idx = LshIndex::new(LshParams::new(4, 4), HashFamily::MixedTab, 1);
+        let sets: Vec<Vec<u32>> = (0..20u32)
+            .map(|i| (i * 50..i * 50 + 40).collect())
+            .collect();
+        for (i, s) in sets.iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        assert_eq!(idx.len(), 20);
+        // A stored set always retrieves itself (identical sketch).
+        for (i, s) in sets.iter().enumerate() {
+            let got = idx.query(s);
+            assert!(got.contains(&(i as u32)), "set {i} missed itself");
+        }
+    }
+
+    #[test]
+    fn near_duplicates_retrieved_distant_sets_mostly_not() {
+        let mut rng = Xoshiro256::new(3);
+        let mut idx = LshIndex::new(LshParams::new(8, 10), HashFamily::MixedTab, 7);
+        // Database: 50 random sets + one near-duplicate of the query.
+        let query: Vec<u32> = (0..400u32).collect();
+        let mut near = query.clone();
+        for i in 0..20 {
+            near[i as usize] = 100_000 + i; // J ≈ 0.905
+        }
+        idx.insert(0, &near);
+        for i in 1..51u32 {
+            let set: Vec<u32> = (0..400).map(|_| rng.next_u32() % 1_000_000).collect();
+            idx.insert(i, &set);
+        }
+        let got = idx.query(&query);
+        assert!(got.contains(&0), "near-duplicate not retrieved");
+        // Unrelated sets: tolerate a few accidental collisions.
+        assert!(got.len() <= 5, "retrieved too many: {}", got.len());
+    }
+
+    #[test]
+    fn more_tables_more_recall() {
+        // Recall of a moderately-similar pair increases with L.
+        let mut rng = Xoshiro256::new(9);
+        let pairs: Vec<_> = (0..40).map(|_| dataset1(300, true, &mut rng)).collect();
+        let mut hits_l2 = 0;
+        let mut hits_l16 = 0;
+        for (i, p) in pairs.iter().enumerate() {
+            let seed = 1000 + i as u64;
+            let mut small = LshIndex::new(LshParams::new(6, 2), HashFamily::MixedTab, seed);
+            small.insert(1, &p.a);
+            hits_l2 += small.query(&p.b).contains(&1) as u32;
+            let mut big = LshIndex::new(LshParams::new(6, 16), HashFamily::MixedTab, seed);
+            big.insert(1, &p.a);
+            hits_l16 += big.query(&p.b).contains(&1) as u32;
+        }
+        assert!(
+            hits_l16 > hits_l2,
+            "L=16 hits {hits_l16} should beat L=2 hits {hits_l2}"
+        );
+    }
+
+    #[test]
+    fn larger_k_fewer_false_positives() {
+        let mut rng = Xoshiro256::new(21);
+        // Moderate similarity (J ≈ 0.6): K = 1 collides per-table w.p. ≈ J,
+        // K = 8 w.p. ≈ J^8 — the selectivity the test asserts.
+        let core: Vec<u32> = (0..150u32).collect();
+        let db: Vec<Vec<u32>> = (0..100)
+            .map(|_| {
+                let mut s = core.clone();
+                s.extend((0..50).map(|_| 1000 + rng.next_u32() % 100_000));
+                s
+            })
+            .collect();
+        let mut query: Vec<u32> = core.clone();
+        query.extend((0..50).map(|_| 1000 + rng.next_u32() % 100_000));
+        let mut retrieved_k1 = 0usize;
+        let mut retrieved_k8 = 0usize;
+        for seed in 0..5 {
+            let mut k1 = LshIndex::new(LshParams::new(1, 4), HashFamily::MixedTab, seed);
+            let mut k8 = LshIndex::new(LshParams::new(8, 4), HashFamily::MixedTab, seed);
+            for (i, s) in db.iter().enumerate() {
+                k1.insert(i as u32, s);
+                k8.insert(i as u32, s);
+            }
+            retrieved_k1 += k1.query(&query).len();
+            retrieved_k8 += k8.query(&query).len();
+        }
+        assert!(
+            retrieved_k8 < retrieved_k1,
+            "K=8 retrieved {retrieved_k8} should be < K=1 retrieved {retrieved_k1}"
+        );
+    }
+
+    #[test]
+    fn sketch_insert_query_roundtrip() {
+        let mut idx = LshIndex::new(LshParams::new(3, 3), HashFamily::MixedTab, 2);
+        let set: Vec<u32> = (100..200).collect();
+        let sk = idx.sketch(&set);
+        idx.insert_sketch(42, &sk);
+        assert_eq!(idx.query_sketch(&sk), vec![42]);
+        assert!(idx.bucket_count() >= 1);
+        assert!(idx.max_bucket() >= 1);
+    }
+}

@@ -1,0 +1,227 @@
+//! LSH evaluation metrics (§4.2, following the setup of [32]).
+//!
+//! 1. the fraction of total data points retrieved per query,
+//! 2. recall at threshold T₀ — retrieved points with `J ≥ T₀` over all
+//!    points with `J ≥ T₀`,
+//! 3. the **#retrieved / recall ratio** (lower is better) — Figure 5's
+//!    y-axis, chosen because recall alone "may be inflated by poor hash
+//!    functions that just retrieve many data points".
+
+use crate::sketch::estimators::jaccard_sorted;
+use crate::util::threadpool::ThreadPool;
+
+/// Per-query ground truth: ids of database sets with `J(q, x) ≥ t0`.
+pub fn ground_truth(db: &[Vec<u32>], query: &[u32], t0: f64) -> Vec<u32> {
+    db.iter()
+        .enumerate()
+        .filter(|(_, x)| jaccard_sorted(query, x) >= t0)
+        .map(|(i, _)| i as u32)
+        .collect()
+}
+
+/// Ground truth for many queries, parallelised over a pool.
+pub fn ground_truth_batch(
+    pool: &ThreadPool,
+    db: &[Vec<u32>],
+    queries: &[Vec<u32>],
+    t0: f64,
+) -> Vec<Vec<u32>> {
+    let tasks: Vec<_> = queries
+        .iter()
+        .map(|q| {
+            let db = &db;
+            let q = &q[..];
+            move || ground_truth(db, q, t0)
+        })
+        .collect();
+    pool.scope(tasks)
+}
+
+/// Evaluation of one query's retrieved set.
+#[derive(Debug, Clone)]
+pub struct QueryEval {
+    /// Number of candidates the index returned.
+    pub retrieved: usize,
+    /// Number of true near neighbours (J ≥ T₀).
+    pub relevant: usize,
+    /// Retrieved ∩ relevant.
+    pub hits: usize,
+    /// Database size.
+    pub db_size: usize,
+}
+
+impl QueryEval {
+    /// Compare a retrieved id list against ground truth (both sorted).
+    pub fn evaluate(retrieved: &[u32], truth: &[u32], db_size: usize) -> Self {
+        debug_assert!(retrieved.windows(2).all(|w| w[0] < w[1]));
+        let truth_sorted: Vec<u32> = {
+            let mut t = truth.to_vec();
+            t.sort_unstable();
+            t
+        };
+        let mut hits = 0usize;
+        let mut j = 0usize;
+        for &r in retrieved {
+            while j < truth_sorted.len() && truth_sorted[j] < r {
+                j += 1;
+            }
+            if j < truth_sorted.len() && truth_sorted[j] == r {
+                hits += 1;
+                j += 1;
+            }
+        }
+        Self {
+            retrieved: retrieved.len(),
+            relevant: truth.len(),
+            hits,
+            db_size,
+        }
+    }
+
+    /// Metric 1: fraction of the database retrieved.
+    pub fn fraction_retrieved(&self) -> f64 {
+        if self.db_size == 0 {
+            return 0.0;
+        }
+        self.retrieved as f64 / self.db_size as f64
+    }
+
+    /// Metric 2: recall@T₀. Queries with no relevant neighbours are skipped
+    /// upstream (paper follows [32]); we return `None` for them.
+    pub fn recall(&self) -> Option<f64> {
+        if self.relevant == 0 {
+            return None;
+        }
+        Some(self.hits as f64 / self.relevant as f64)
+    }
+
+    /// Metric 3: #retrieved / recall ratio (lower is better). `None` when
+    /// recall is undefined or zero (the paper's plots aggregate over many
+    /// queries so zero-recall single queries fold into the mean upstream).
+    pub fn retrieved_recall_ratio(&self) -> Option<f64> {
+        match self.recall() {
+            Some(r) if r > 0.0 => Some(self.retrieved as f64 / r),
+            _ => None,
+        }
+    }
+}
+
+/// Aggregate evaluation across queries: mean fraction retrieved, mean
+/// recall, and the ratio of *totals* (Σ retrieved / mean recall) which is
+/// how a batch of queries experiences the trade-off.
+#[derive(Debug, Clone, Default)]
+pub struct BatchEval {
+    pub evals: Vec<QueryEval>,
+}
+
+impl BatchEval {
+    pub fn push(&mut self, e: QueryEval) {
+        self.evals.push(e);
+    }
+
+    pub fn mean_fraction_retrieved(&self) -> f64 {
+        mean(self.evals.iter().map(|e| e.fraction_retrieved()))
+    }
+
+    /// Mean recall over queries that have ≥ 1 relevant neighbour.
+    pub fn mean_recall(&self) -> f64 {
+        mean(self.evals.iter().filter_map(|e| e.recall()))
+    }
+
+    /// Mean retrieved count per query.
+    pub fn mean_retrieved(&self) -> f64 {
+        mean(self.evals.iter().map(|e| e.retrieved as f64))
+    }
+
+    /// The Figure 5 statistic aggregated batch-level: mean #retrieved
+    /// divided by mean recall (in percent recalled, as the paper divides by
+    /// "the percentage of recalled data points").
+    pub fn ratio(&self) -> f64 {
+        let r = self.mean_recall();
+        if r <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.mean_retrieved() / r
+    }
+}
+
+fn mean(it: impl Iterator<Item = f64>) -> f64 {
+    let (mut s, mut n) = (0.0, 0usize);
+    for x in it {
+        s += x;
+        n += 1;
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        s / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ground_truth_thresholding() {
+        let db = vec![
+            (0..100u32).collect::<Vec<_>>(),          // J = 1.0
+            (50..150u32).collect::<Vec<_>>(),         // J = 50/150 = 1/3
+            (1000..1100u32).collect::<Vec<_>>(),      // J = 0
+        ];
+        let q: Vec<u32> = (0..100).collect();
+        assert_eq!(ground_truth(&db, &q, 0.5), vec![0]);
+        assert_eq!(ground_truth(&db, &q, 0.3), vec![0, 1]);
+        assert_eq!(ground_truth(&db, &q, 0.0).len(), 3);
+    }
+
+    #[test]
+    fn query_eval_counts() {
+        let e = QueryEval::evaluate(&[1, 3, 5, 7], &[3, 7, 9], 100);
+        assert_eq!(e.hits, 2);
+        assert_eq!(e.relevant, 3);
+        assert_eq!(e.retrieved, 4);
+        assert!((e.recall().unwrap() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((e.fraction_retrieved() - 0.04).abs() < 1e-12);
+        let ratio = e.retrieved_recall_ratio().unwrap();
+        assert!((ratio - 4.0 / (2.0 / 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_relevant_is_none() {
+        let e = QueryEval::evaluate(&[1, 2], &[], 10);
+        assert!(e.recall().is_none());
+        assert!(e.retrieved_recall_ratio().is_none());
+    }
+
+    #[test]
+    fn zero_recall_ratio_none() {
+        let e = QueryEval::evaluate(&[1, 2], &[9], 10);
+        assert_eq!(e.recall(), Some(0.0));
+        assert!(e.retrieved_recall_ratio().is_none());
+    }
+
+    #[test]
+    fn batch_aggregation() {
+        let mut b = BatchEval::default();
+        b.push(QueryEval::evaluate(&[0, 1], &[0], 10)); // recall 1, retrieved 2
+        b.push(QueryEval::evaluate(&[2, 3, 4, 5], &[2, 9], 10)); // recall .5, retrieved 4
+        assert!((b.mean_recall() - 0.75).abs() < 1e-12);
+        assert!((b.mean_retrieved() - 3.0).abs() < 1e-12);
+        assert!((b.ratio() - 4.0).abs() < 1e-12);
+        assert!((b.mean_fraction_retrieved() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_ground_truth_matches_serial() {
+        let db: Vec<Vec<u32>> = (0..30)
+            .map(|i| (i * 10..i * 10 + 50).collect())
+            .collect();
+        let queries: Vec<Vec<u32>> = (0..7).map(|i| (i * 20..i * 20 + 50).collect()).collect();
+        let pool = ThreadPool::new(3);
+        let par = ground_truth_batch(&pool, &db, &queries, 0.3);
+        for (q, expect) in queries.iter().zip(&par) {
+            assert_eq!(&ground_truth(&db, q, 0.3), expect);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Locality-sensitive hashing for approximate near-neighbour search (§2.3),
+//! built on OPH sketches — the §4.2 "Similarity search with LSH" setup.
+//!
+//! * [`index`] — the (K, L) table structure: one OPH sketch of `K·L` bins
+//!   per set, partitioned into L bucket keys of K bins each (the
+//!   one-permutation construction of Shrivastava & Li [32]).
+//! * [`metrics`] — brute-force ground truth, recall@T₀ and the
+//!   #retrieved/recall ratio reported in Figure 5.
+
+pub mod index;
+pub mod metrics;
+pub mod persist;
+pub mod angular;
+
+pub use index::{LshIndex, LshParams};
+pub use metrics::{ground_truth, QueryEval};

@@ -1,0 +1,146 @@
+//! LSH index snapshots: save a built index to disk and reload it without
+//! re-sketching the corpus — what a serving deployment does on restart.
+//!
+//! The snapshot stores the structural parameters, the hash-family id + seed
+//! (so the reloaded index re-derives the *same* sketcher — sketches are
+//! only comparable under the same hash function), and every table's
+//! buckets.
+
+use crate::hash::HashFamily;
+use crate::lsh::index::{LshIndex, LshParams};
+use crate::util::binio::{BinReader, BinWriter};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: u32 = 0x4D58_4C53; // "MXLS"
+const VERSION: u8 = 1;
+
+/// Serialize an index (with its provenance) to a writer.
+pub fn save_to(index: &LshIndex, family: HashFamily, seed: u64, w: impl Write) -> Result<()> {
+    let mut w = BinWriter::new(w);
+    w.u32(MAGIC)?;
+    w.u8(VERSION)?;
+    w.str(family.id())?;
+    w.u64(seed)?;
+    let p = index.params();
+    w.u64(p.k as u64)?;
+    w.u64(p.l as u64)?;
+    w.u64(index.len() as u64)?;
+    let tables = index.tables_raw();
+    w.u64(tables.len() as u64)?;
+    for table in tables {
+        w.u64(table.len() as u64)?;
+        for (key, ids) in table {
+            w.u64(*key)?;
+            w.u32s(ids)?;
+        }
+    }
+    Ok(())
+}
+
+/// Save to a file path.
+pub fn save(index: &LshIndex, family: HashFamily, seed: u64, path: impl AsRef<Path>) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let f = std::fs::File::create(path.as_ref())?;
+    save_to(index, family, seed, BufWriter::new(f))
+}
+
+/// Reload an index from a reader. Returns `(index, family, seed)`.
+pub fn load_from(r: impl Read) -> Result<(LshIndex, HashFamily, u64)> {
+    let mut r = BinReader::new(r);
+    if r.u32()? != MAGIC {
+        bail!("not an LSH snapshot (bad magic)");
+    }
+    let version = r.u8()?;
+    if version != VERSION {
+        bail!("unsupported snapshot version {version}");
+    }
+    let fam_id = r.str()?;
+    let family = HashFamily::parse(&fam_id)
+        .with_context(|| format!("unknown hash family '{fam_id}' in snapshot"))?;
+    let seed = r.u64()?;
+    let k = r.u64()? as usize;
+    let l = r.u64()? as usize;
+    let len = r.u64()? as usize;
+    let n_tables = r.u64()? as usize;
+    if n_tables != l {
+        bail!("snapshot table count {n_tables} != L {l}");
+    }
+    let mut index = LshIndex::new(LshParams::new(k, l), family, seed);
+    let mut tables = Vec::with_capacity(n_tables);
+    for _ in 0..n_tables {
+        let buckets = r.u64()? as usize;
+        let mut table = std::collections::HashMap::with_capacity(buckets);
+        for _ in 0..buckets {
+            let key = r.u64()?;
+            let ids = r.u32s()?;
+            table.insert(key, ids);
+        }
+        tables.push(table);
+    }
+    index.restore_raw(tables, len);
+    Ok((index, family, seed))
+}
+
+/// Load from a file path.
+pub fn load(path: impl AsRef<Path>) -> Result<(LshIndex, HashFamily, u64)> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    load_from(BufReader::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_queries() {
+        let mut index = LshIndex::new(LshParams::new(4, 6), HashFamily::MixedTab, 77);
+        let sets: Vec<Vec<u32>> = (0..30u32).map(|i| (i * 40..i * 40 + 120).collect()).collect();
+        for (i, s) in sets.iter().enumerate() {
+            index.insert(i as u32, s);
+        }
+        let mut buf = Vec::new();
+        save_to(&index, HashFamily::MixedTab, 77, &mut buf).unwrap();
+        let (loaded, fam, seed) = load_from(&buf[..]).unwrap();
+        assert_eq!(fam, HashFamily::MixedTab);
+        assert_eq!(seed, 77);
+        assert_eq!(loaded.len(), index.len());
+        assert_eq!(loaded.params(), index.params());
+        // Every query returns identical candidates.
+        for s in &sets {
+            assert_eq!(loaded.query(s), index.query(s));
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("mixtab_lsh_persist");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut index = LshIndex::new(LshParams::new(3, 3), HashFamily::Murmur3, 5);
+        index.insert(1, &(0..50).collect::<Vec<_>>());
+        let path = dir.join("snap.mxls");
+        save(&index, HashFamily::Murmur3, 5, &path).unwrap();
+        let (loaded, _, _) = load(&path).unwrap();
+        assert_eq!(loaded.query(&(0..50).collect::<Vec<_>>()), vec![1]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(load_from(&b"garbage!"[..]).is_err());
+        let mut buf = Vec::new();
+        let idx = LshIndex::new(LshParams::new(2, 2), HashFamily::MixedTab, 1);
+        save_to(&idx, HashFamily::MixedTab, 1, &mut buf).unwrap();
+        buf[4] = 99; // bad version
+        assert!(load_from(&buf[..]).is_err());
+        // Truncated.
+        let mut buf2 = Vec::new();
+        save_to(&idx, HashFamily::MixedTab, 1, &mut buf2).unwrap();
+        buf2.truncate(buf2.len() / 2);
+        assert!(load_from(&buf2[..]).is_err());
+    }
+}

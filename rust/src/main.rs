@@ -1,0 +1,180 @@
+//! `mixtab` — CLI for the paper-reproduction framework.
+//!
+//! ```text
+//! mixtab exp <id|all> [--seed N] [--scale F] [--out DIR] [--data-dir DIR]
+//! mixtab serve [--config FILE] [--listen ADDR]
+//! mixtab info
+//! ```
+
+use mixtab::coordinator::config::CoordinatorConfig;
+use mixtab::coordinator::server::Server;
+use mixtab::coordinator::Coordinator;
+use mixtab::experiments::{self, ExpContext};
+use mixtab::util::cli::Command;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn cli() -> Command {
+    Command::new("mixtab", "practical hash functions for similarity estimation (NIPS'17) — reproduction framework")
+        .subcommand(
+            Command::new("exp", "run a paper experiment (table1, fig2..fig11, synth2, all)")
+                .positional("id", "experiment id or 'all'", true)
+                .opt("seed", 's', "N", "root RNG seed", Some("12648430"))
+                .opt("scale", '\0', "F", "scale factor (1.0 = paper scale)", Some("1.0"))
+                .opt("out", 'o', "DIR", "output directory", Some("results"))
+                .opt("data-dir", '\0', "DIR", "directory with real libsvm datasets", None)
+                .opt("threads", 'j', "N", "worker threads (0 = all cores)", Some("0")),
+        )
+        .subcommand(
+            Command::new("serve", "run the sketching service")
+                .opt("config", 'c', "FILE", "config file (TOML subset)", None)
+                .opt("listen", '\0', "ADDR", "listen address override", None),
+        )
+        .subcommand(Command::new("info", "print build/artifact information"))
+}
+
+fn main() {
+    env_logger_lite();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = cli();
+    let parsed = match cmd.parse(&args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cmd.help_text());
+            std::process::exit(2);
+        }
+    };
+    if parsed.help_requested() && parsed.subcommand().is_none() {
+        println!("{}", cmd.help_text());
+        return;
+    }
+    let result = match parsed.subcommand() {
+        Some(("exp", sub)) => run_exp(sub),
+        Some(("serve", sub)) => run_serve(sub),
+        Some(("info", _)) => run_info(),
+        _ => {
+            println!("{}", cmd.help_text());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run_exp(sub: &mixtab::util::cli::Parsed) -> anyhow::Result<()> {
+    if sub.help_requested() {
+        println!("{}", cli().help_text());
+        return Ok(());
+    }
+    let id = sub
+        .positionals()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let threads = sub.get_usize("threads")?;
+    let ctx = ExpContext {
+        seed: sub.get_u64("seed")?,
+        scale: sub.get_f64("scale")?,
+        out_dir: PathBuf::from(sub.get("out").unwrap_or("results")),
+        data_dir: sub.get("data-dir").map(PathBuf::from),
+        threads: if threads == 0 {
+            mixtab::util::threadpool::default_parallelism()
+        } else {
+            threads
+        },
+    };
+    let summaries = if id == "all" {
+        experiments::run_all(&ctx)?
+    } else {
+        experiments::run(&id, &ctx)?
+    };
+    println!("\n==== summary ({} rows) ====", summaries.len());
+    for s in &summaries {
+        println!(
+            "{:<22} {:<18} mean={:<9.4} mse={:<11.3e} {}",
+            s.experiment,
+            s.family.id(),
+            s.mean,
+            s.mse,
+            s.extra
+                .as_ref()
+                .map(|(k, v)| format!("{k}={v:.2}"))
+                .unwrap_or_default()
+        );
+    }
+    Ok(())
+}
+
+fn run_serve(sub: &mixtab::util::cli::Parsed) -> anyhow::Result<()> {
+    let mut cfg = match sub.get("config") {
+        Some(path) => CoordinatorConfig::load(path)?,
+        None => CoordinatorConfig::default(),
+    };
+    if let Some(listen) = sub.get("listen") {
+        cfg.listen = listen.to_string();
+    }
+    println!(
+        "mixtab serve: listen={} d'={} hash={} pjrt={}",
+        cfg.listen,
+        cfg.fh_dim,
+        cfg.family.id(),
+        cfg.enable_pjrt
+    );
+    let listen = cfg.listen.clone();
+    let coordinator = Arc::new(Coordinator::new(cfg));
+    println!("pjrt path live: {}", coordinator.pjrt_enabled());
+    let server = Server::start(coordinator, &listen)?;
+    println!("serving on {} — Ctrl-C to stop", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn run_info() -> anyhow::Result<()> {
+    println!(
+        "mixtab {} — three-layer Rust + JAX/Pallas reproduction",
+        env!("CARGO_PKG_VERSION")
+    );
+    println!("hash families:");
+    for f in mixtab::hash::HashFamily::TABLE1 {
+        println!("  {:<20} {}", f.id(), f.label());
+    }
+    match mixtab::runtime::Manifest::load("artifacts") {
+        Ok(m) => {
+            println!("artifacts ({}):", m.artifacts.len());
+            for a in &m.artifacts {
+                println!("  {:<24} {:?}", a.name, a.kind);
+            }
+        }
+        Err(e) => println!("artifacts: not built ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+/// Minimal env_logger stand-in: honours MIXTAB_LOG=debug|info|warn.
+/// (The vendored `log` crate is built without the `std` feature, so we use
+/// a static logger with `set_logger` rather than `set_boxed_logger`.)
+fn env_logger_lite() {
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: L = L;
+    let level = match std::env::var("MIXTAB_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("info") => log::LevelFilter::Info,
+        _ => log::LevelFilter::Warn,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}

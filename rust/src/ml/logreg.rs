@@ -1,0 +1,183 @@
+//! Multiclass logistic regression via one-vs-rest SGD.
+//!
+//! Deliberately simple and dependency-free: dense inputs (the FH outputs
+//! are dense d'-vectors — that is the point of feature hashing), softmax
+//! readout, mini-batch-free SGD with inverse-scaling learning rate and L2
+//! regularisation. Good enough to measure *relative* accuracy across hash
+//! families, which is all the extension experiment needs.
+
+use crate::util::rng::Xoshiro256;
+
+/// Multiclass logistic regression over dense vectors.
+#[derive(Debug, Clone)]
+pub struct LogReg {
+    /// `w[c * (dim + 1) .. (c+1) * (dim + 1)]` — per-class weights + bias.
+    w: Vec<f64>,
+    dim: usize,
+    classes: usize,
+}
+
+/// Training hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct TrainParams {
+    pub epochs: usize,
+    pub lr0: f64,
+    pub l2: f64,
+    pub seed: u64,
+}
+
+impl Default for TrainParams {
+    fn default() -> Self {
+        Self {
+            epochs: 12,
+            lr0: 0.5,
+            l2: 1e-5,
+            seed: 1,
+        }
+    }
+}
+
+impl LogReg {
+    pub fn new(dim: usize, classes: usize) -> Self {
+        assert!(dim >= 1 && classes >= 2);
+        Self {
+            w: vec![0.0; classes * (dim + 1)],
+            dim,
+            classes,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Per-class logits.
+    pub fn logits(&self, x: &[f64], out: &mut Vec<f64>) {
+        assert_eq!(x.len(), self.dim);
+        out.clear();
+        for c in 0..self.classes {
+            let row = &self.w[c * (self.dim + 1)..(c + 1) * (self.dim + 1)];
+            let mut z = row[self.dim]; // bias
+            for (wi, xi) in row[..self.dim].iter().zip(x) {
+                z += wi * xi;
+            }
+            out.push(z);
+        }
+    }
+
+    /// Predicted class.
+    pub fn predict(&self, x: &[f64]) -> usize {
+        let mut logits = Vec::with_capacity(self.classes);
+        self.logits(x, &mut logits);
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// SGD training with softmax cross-entropy. `data` is `(x, label)`.
+    pub fn train(&mut self, data: &[(Vec<f64>, usize)], params: &TrainParams) {
+        assert!(!data.is_empty());
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        let mut rng = Xoshiro256::new(params.seed);
+        let mut probs = Vec::with_capacity(self.classes);
+        let mut step = 0usize;
+        for _epoch in 0..params.epochs {
+            rng.shuffle(&mut order);
+            for &i in &order {
+                let (x, y) = &data[i];
+                step += 1;
+                let lr = params.lr0 / (1.0 + step as f64 * 1e-3);
+                self.logits(x, &mut probs);
+                // Stable softmax.
+                let m = probs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let mut z = 0.0;
+                for p in probs.iter_mut() {
+                    *p = (*p - m).exp();
+                    z += *p;
+                }
+                for p in probs.iter_mut() {
+                    *p /= z;
+                }
+                for c in 0..self.classes {
+                    let grad = probs[c] - if c == *y { 1.0 } else { 0.0 };
+                    let row =
+                        &mut self.w[c * (self.dim + 1)..(c + 1) * (self.dim + 1)];
+                    for (wi, xi) in row[..x.len()].iter_mut().zip(x) {
+                        *wi -= lr * (grad * xi + params.l2 * *wi);
+                    }
+                    row[self.dim] -= lr * grad;
+                }
+            }
+        }
+    }
+
+    /// Accuracy over a labelled set.
+    pub fn accuracy(&self, data: &[(Vec<f64>, usize)]) -> f64 {
+        if data.is_empty() {
+            return f64::NAN;
+        }
+        let correct = data
+            .iter()
+            .filter(|(x, y)| self.predict(x) == *y)
+            .count();
+        correct as f64 / data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two well-separated Gaussian blobs must be almost perfectly learned.
+    #[test]
+    fn separable_blobs() {
+        let mut rng = Xoshiro256::new(3);
+        let mut data = Vec::new();
+        for _ in 0..300 {
+            let y = rng.bernoulli(0.5) as usize;
+            let centre = if y == 0 { -2.0 } else { 2.0 };
+            let x: Vec<f64> = (0..8).map(|_| centre + rng.normal() * 0.5).collect();
+            data.push((x, y));
+        }
+        let mut m = LogReg::new(8, 2);
+        m.train(&data[..250], &TrainParams::default());
+        assert!(m.accuracy(&data[250..]) > 0.95);
+    }
+
+    #[test]
+    fn three_class_axes() {
+        // Class c has mass on coordinate c.
+        let mut rng = Xoshiro256::new(7);
+        let mut data = Vec::new();
+        for _ in 0..600 {
+            let y = rng.below(3) as usize;
+            let mut x = vec![0.0; 6];
+            for (j, xi) in x.iter_mut().enumerate() {
+                *xi = rng.normal() * 0.3 + if j == y { 2.0 } else { 0.0 };
+            }
+            data.push((x, y));
+        }
+        let mut m = LogReg::new(6, 3);
+        m.train(&data[..500], &TrainParams::default());
+        assert!(m.accuracy(&data[500..]) > 0.9);
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let data: Vec<(Vec<f64>, usize)> = (0..50)
+            .map(|i| (vec![(i % 7) as f64, (i % 3) as f64], (i % 2) as usize))
+            .collect();
+        let mut a = LogReg::new(2, 2);
+        let mut b = LogReg::new(2, 2);
+        a.train(&data, &TrainParams::default());
+        b.train(&data, &TrainParams::default());
+        assert_eq!(a.w, b.w);
+    }
+}

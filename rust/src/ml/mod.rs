@@ -1,0 +1,17 @@
+//! Large-scale classification on hashed features — the application the
+//! paper defers ("Due to space restrictions, we do not consider
+//! classification in this paper") but motivates throughout via [24, 25]:
+//! b-bit minwise / feature hashing as the featurizer for linear models.
+//!
+//! * [`logreg`] — multiclass logistic regression (one-vs-rest, SGD with
+//!   averaged updates) over dense feature vectors.
+//! * [`pipeline`] — FH featurisation + training + evaluation, parameterised
+//!   by the basic hash family so the paper's question ("can you trust the
+//!   hash function?") extends to end-task accuracy (`mixtab exp ext1`-style
+//!   driver in `experiments::ext_classify`).
+
+pub mod logreg;
+pub mod pipeline;
+
+pub use logreg::LogReg;
+pub use pipeline::{ClassifyReport, FhClassifier};

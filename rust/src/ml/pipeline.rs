@@ -1,0 +1,158 @@
+//! FH featurisation + classification pipeline.
+//!
+//! `sparse document → FeatureHasher(d', family) → LogReg` — the large-scale
+//! classification deployment of [24, 25], where the hash function choice
+//! propagates into end-task accuracy through the quality of the sketch.
+
+use crate::data::sparse::Dataset;
+use crate::hash::HashFamily;
+use crate::ml::logreg::{LogReg, TrainParams};
+use crate::sketch::feature_hash::{FeatureHasher, SignMode};
+use std::collections::BTreeMap;
+
+/// Result of one train/eval run.
+#[derive(Debug, Clone)]
+pub struct ClassifyReport {
+    pub family: HashFamily,
+    pub dim: usize,
+    pub train_acc: f64,
+    pub test_acc: f64,
+    pub classes: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+}
+
+/// An FH-featurised classifier.
+pub struct FhClassifier {
+    fh: FeatureHasher,
+    model: LogReg,
+    label_map: BTreeMap<i32, usize>,
+}
+
+impl FhClassifier {
+    /// Featurise `ds` with `(family, seed, dim)`, split at `n_train`, train
+    /// and evaluate.
+    pub fn train_eval(
+        family: HashFamily,
+        seed: u64,
+        dim: usize,
+        ds: &Dataset,
+        n_train: usize,
+        params: &TrainParams,
+    ) -> (FhClassifier, ClassifyReport) {
+        assert!(n_train < ds.len(), "need held-out data");
+        // Stable label → class index mapping.
+        let mut label_map = BTreeMap::new();
+        for &l in &ds.labels {
+            let next = label_map.len();
+            label_map.entry(l).or_insert(next);
+        }
+        let classes = label_map.len().max(2);
+        let fh = FeatureHasher::new(family, seed, dim, SignMode::Paired);
+
+        let featurise = |r: std::ops::Range<usize>| -> Vec<(Vec<f64>, usize)> {
+            r.map(|i| {
+                let mut v = ds.vectors[i].clone();
+                v.normalize();
+                (fh.transform(&v), label_map[&ds.labels[i]])
+            })
+            .collect()
+        };
+        let train = featurise(0..n_train);
+        let test = featurise(n_train..ds.len());
+
+        let mut model = LogReg::new(dim, classes);
+        model.train(&train, params);
+        let report = ClassifyReport {
+            family,
+            dim,
+            train_acc: model.accuracy(&train),
+            test_acc: model.accuracy(&test),
+            classes,
+            n_train: train.len(),
+            n_test: test.len(),
+        };
+        (
+            FhClassifier {
+                fh,
+                model,
+                label_map,
+            },
+            report,
+        )
+    }
+
+    /// Predict the original label of a sparse vector.
+    pub fn predict(&self, v: &crate::data::sparse::SparseVector) -> i32 {
+        let mut vv = v.clone();
+        vv.normalize();
+        let class = self.model.predict(&self.fh.transform(&vv));
+        self.label_map
+            .iter()
+            .find(|(_, &c)| c == class)
+            .map(|(&l, _)| l)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::news20_like::{self, News20LikeParams};
+    use crate::ml::logreg::TrainParams;
+
+    #[test]
+    fn topical_corpus_is_learnable_through_fh() {
+        // Strong topic signal so the miniature test is stable.
+        let params = News20LikeParams {
+            topics: 4,
+            topic_mix: 0.6,
+            near_dup_rate: 0.0,
+            ..Default::default()
+        };
+        let ds = news20_like::generate(360, &params, 11);
+        let (clf, report) = FhClassifier::train_eval(
+            HashFamily::MixedTab,
+            5,
+            256,
+            &ds,
+            300,
+            &TrainParams::default(),
+        );
+        assert_eq!(report.classes, 4);
+        assert!(
+            report.test_acc > 0.7,
+            "test accuracy {:.3} too low",
+            report.test_acc
+        );
+        // Predict API round-trips a training vector's label space.
+        let pred = clf.predict(&ds.vectors[0]);
+        assert!(ds.labels.contains(&pred));
+    }
+
+    #[test]
+    fn accuracy_degrades_gracefully_with_tiny_dim() {
+        let params = News20LikeParams {
+            topics: 4,
+            topic_mix: 0.6,
+            near_dup_rate: 0.0,
+            ..Default::default()
+        };
+        let ds = news20_like::generate(300, &params, 13);
+        let acc_at = |dim: usize| {
+            FhClassifier::train_eval(
+                HashFamily::MixedTab,
+                5,
+                dim,
+                &ds,
+                240,
+                &TrainParams::default(),
+            )
+            .1
+            .test_acc
+        };
+        let small = acc_at(8);
+        let big = acc_at(256);
+        assert!(big >= small, "dim 256 acc {big} < dim 8 acc {small}");
+    }
+}

@@ -1,0 +1,189 @@
+//! Artifact manifest: what `python/compile/aot.py` exported.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Model kind + compiled shape parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Feature hashing: `(bins[b,n] i32, vals[b,n] f32) → (out[b,dim] f32,
+    /// sqnorm[b] f32)`.
+    Fh { batch: usize, nnz: usize, dim: usize },
+    /// OPH bucket-min: `(h[b,n] i32, valid[b,n] i32) → sketch[b,k] i32`.
+    Oph { batch: usize, nnz: usize, k: usize },
+}
+
+impl ArtifactKind {
+    pub fn batch(&self) -> usize {
+        match self {
+            ArtifactKind::Fh { batch, .. } | ArtifactKind::Oph { batch, .. } => *batch,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            ArtifactKind::Fh { nnz, .. } | ArtifactKind::Oph { nnz, .. } => *nnz,
+        }
+    }
+}
+
+/// One exported module.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Absolute path of the `.hlo.txt` file.
+    pub path: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read {}/manifest.json", dir.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; paths resolve relative to `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let doc = Json::parse(text).context("parse manifest.json")?;
+        if doc.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("unsupported artifact format (want hlo-text)");
+        }
+        let arts = doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'artifacts'")?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .context("artifact missing name")?
+                .to_string();
+            let path = dir.join(
+                a.get("path")
+                    .and_then(Json::as_str)
+                    .context("artifact missing path")?,
+            );
+            let get = |k: &str| -> Result<usize> {
+                a.get(k)
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("artifact {name}: missing {k}"))
+            };
+            let kind = match a.get("kind").and_then(Json::as_str) {
+                Some("fh") => ArtifactKind::Fh {
+                    batch: get("batch")?,
+                    nnz: get("nnz")?,
+                    dim: get("dim")?,
+                },
+                Some("oph") => ArtifactKind::Oph {
+                    batch: get("batch")?,
+                    nnz: get("nnz")?,
+                    k: get("k")?,
+                },
+                other => bail!("artifact {name}: unknown kind {other:?}"),
+            };
+            artifacts.push(ArtifactMeta { name, kind, path });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Find an FH artifact for the given output dimension with capacity for
+    /// `nnz` non-zeros (smallest adequate `nnz` bound wins).
+    pub fn find_fh(&self, dim: usize, nnz: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| match a.kind {
+                ArtifactKind::Fh { dim: d, nnz: n, .. } => d == dim && n >= nnz,
+                _ => false,
+            })
+            .min_by_key(|a| a.kind.nnz())
+    }
+
+    /// Find the FH artifact with the *largest* nnz capacity for a given
+    /// output dimension — what a serving coordinator wants (fewest sheds).
+    pub fn find_fh_largest(&self, dim: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| matches!(a.kind, ArtifactKind::Fh { dim: d, .. } if d == dim))
+            .max_by_key(|a| a.kind.nnz())
+    }
+
+    /// Find an OPH artifact for sketch size `k` with capacity for `nnz`.
+    pub fn find_oph(&self, k: usize, nnz: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| match a.kind {
+                ArtifactKind::Oph { k: kk, nnz: n, .. } => kk == k && n >= nnz,
+                _ => false,
+            })
+            .min_by_key(|a| a.kind.nnz())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "artifacts": [
+        {"kind":"fh","batch":16,"nnz":512,"dim":128,"name":"fh_a","path":"fh_a.hlo.txt"},
+        {"kind":"fh","batch":16,"nnz":256,"dim":128,"name":"fh_b","path":"fh_b.hlo.txt"},
+        {"kind":"oph","batch":16,"nnz":512,"k":200,"name":"oph_a","path":"oph_a.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE, Path::new("/arts")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.get("oph_a").unwrap().kind.batch(), 16);
+        // Smallest adequate nnz wins.
+        let f = m.find_fh(128, 200).unwrap();
+        assert_eq!(f.name, "fh_b");
+        let f = m.find_fh(128, 400).unwrap();
+        assert_eq!(f.name, "fh_a");
+        assert!(m.find_fh(128, 1000).is_none());
+        assert!(m.find_fh(64, 10).is_none());
+        assert!(m.find_oph(200, 512).is_some());
+        assert!(m.find_oph(100, 10).is_none());
+        assert_eq!(
+            m.get("fh_a").unwrap().path,
+            PathBuf::from("/arts/fh_a.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format":"protobuf","artifacts":[]}"#, Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"format":"hlo-text"}"#, Path::new(".")).is_err());
+        assert!(Manifest::parse(
+            r#"{"format":"hlo-text","artifacts":[{"kind":"zzz","name":"x","path":"p"}]}"#,
+            Path::new(".")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        // The repo's own artifacts (built by `make artifacts`).
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.find_fh(128, 512).is_some());
+            assert!(m.find_oph(200, 512).is_some());
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Thread-confined PJRT executor.
+//!
+//! `PjRtClient` wraps raw pointers and is not `Send`; the engine therefore
+//! lives on one dedicated thread. [`ExecutorHandle`] is the cloneable,
+//! `Send` front door: callers submit full batches and block on a reply
+//! channel (the coordinator's batcher is the only caller on the hot path,
+//! so a simple rendezvous is the right amount of machinery).
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::pjrt::{FhBatchOut, PjrtEngine};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+/// FH batch result delivered to the batcher.
+pub type FhResult = Result<FhBatchOut>;
+
+enum Job {
+    Fh {
+        name: String,
+        bins: Vec<i32>,
+        vals: Vec<f32>,
+        reply: Sender<FhResult>,
+    },
+    Oph {
+        name: String,
+        h: Vec<i32>,
+        valid: Vec<i32>,
+        reply: Sender<Result<Vec<i32>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the executor thread.
+pub struct ExecutorHandle {
+    tx: Sender<Job>,
+    /// Names of the loaded artifacts (cached; engine is on its thread).
+    names: Vec<String>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ExecutorHandle {
+    /// Spawn the executor thread, loading + compiling all artifacts there.
+    /// Fails fast if the manifest cannot be compiled.
+    pub fn spawn(manifest: Manifest) -> Result<Self> {
+        let names: Vec<String> = manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        let (tx, rx) = channel::<Job>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("mixtab-pjrt".into())
+            .spawn(move || executor_loop(manifest, rx, ready_tx))
+            .expect("spawn pjrt executor");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during startup"))??;
+        Ok(Self {
+            tx,
+            names,
+            join: Mutex::new(Some(join)),
+        })
+    }
+
+    pub fn artifact_names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Execute an FH artifact; blocks until the batch completes.
+    pub fn run_fh(&self, name: &str, bins: Vec<i32>, vals: Vec<f32>) -> FhResult {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::Fh {
+                name: name.to_string(),
+                bins,
+                vals,
+                reply,
+            })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    /// Execute an OPH artifact; blocks until the batch completes.
+    pub fn run_oph(&self, name: &str, h: Vec<i32>, valid: Vec<i32>) -> Result<Vec<i32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::Oph {
+                name: name.to_string(),
+                h,
+                valid,
+                reply,
+            })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+}
+
+impl Drop for ExecutorHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn executor_loop(manifest: Manifest, rx: Receiver<Job>, ready: Sender<Result<()>>) {
+    let engine = match PjrtEngine::load(&manifest) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Fh {
+                name,
+                bins,
+                vals,
+                reply,
+            } => {
+                let _ = reply.send(engine.run_fh(&name, &bins, &vals));
+            }
+            Job::Oph {
+                name,
+                h,
+                valid,
+                reply,
+            } => {
+                let _ = reply.send(engine.run_oph(&name, &h, &valid));
+            }
+            Job::Shutdown => break,
+        }
+    }
+}

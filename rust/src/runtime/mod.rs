@@ -1,0 +1,17 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from Rust. Python never runs at request time.
+//!
+//! * [`artifact`] — `artifacts/manifest.json` parsing and variant lookup.
+//! * [`pjrt`] — thin wrapper over the `xla` crate: HLO text →
+//!   `HloModuleProto` → compile on the CPU PJRT client → execute.
+//! * [`executor`] — the PJRT client is not `Send`; this wraps it on a
+//!   dedicated thread behind an mpsc channel interface usable from the
+//!   coordinator's batcher.
+
+pub mod artifact;
+pub mod pjrt;
+pub mod executor;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, Manifest};
+pub use executor::{ExecutorHandle, FhResult};
+pub use pjrt::PjrtEngine;

@@ -1,0 +1,170 @@
+//! PJRT engine: compile and execute the HLO-text artifacts.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. The jax side lowered with
+//! `return_tuple=True`, so every module returns a tuple.
+//!
+//! NOT `Send` (wraps raw PJRT pointers) — see [`super::executor`] for the
+//! thread-confined handle the coordinator uses.
+
+use crate::runtime::artifact::{ArtifactKind, ArtifactMeta, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// A compiled artifact plus its metadata.
+struct Compiled {
+    kind: ArtifactKind,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The engine: one PJRT CPU client with every artifact compiled.
+pub struct PjrtEngine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    modules: HashMap<String, Compiled>,
+}
+
+/// FH batch output: dense rows + squared norms.
+#[derive(Debug, Clone)]
+pub struct FhBatchOut {
+    /// `[batch * dim]`, row-major.
+    pub out: Vec<f32>,
+    /// `[batch]`.
+    pub sqnorm: Vec<f32>,
+    pub batch: usize,
+    pub dim: usize,
+}
+
+impl PjrtEngine {
+    /// Load and compile every artifact in the manifest.
+    pub fn load(manifest: &Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut modules = HashMap::new();
+        for meta in &manifest.artifacts {
+            let compiled = Self::compile_one(&client, meta)?;
+            modules.insert(meta.name.clone(), compiled);
+        }
+        Ok(Self { client, modules })
+    }
+
+    /// Load a single artifact (tests / benches).
+    pub fn load_one(meta: &ArtifactMeta) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let compiled = Self::compile_one(&client, meta)?;
+        let mut modules = HashMap::new();
+        modules.insert(meta.name.clone(), compiled);
+        Ok(Self { client, modules })
+    }
+
+    fn compile_one(client: &xla::PjRtClient, meta: &ArtifactMeta) -> Result<Compiled> {
+        let path = meta
+            .path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {:?}", meta.path))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse HLO text {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", meta.name))?;
+        Ok(Compiled {
+            kind: meta.kind,
+            exe,
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.modules.keys().map(String::as_str).collect()
+    }
+
+    pub fn kind(&self, name: &str) -> Option<ArtifactKind> {
+        self.modules.get(name).map(|c| c.kind)
+    }
+
+    /// Execute an FH artifact on a full batch. `bins`/`vals` are row-major
+    /// `[batch, nnz]` matching the compiled shape exactly (the batcher pads).
+    pub fn run_fh(&self, name: &str, bins: &[i32], vals: &[f32]) -> Result<FhBatchOut> {
+        let c = self
+            .modules
+            .get(name)
+            .with_context(|| format!("unknown artifact {name}"))?;
+        let ArtifactKind::Fh { batch, nnz, dim } = c.kind else {
+            bail!("{name} is not an fh artifact");
+        };
+        if bins.len() != batch * nnz || vals.len() != batch * nnz {
+            bail!(
+                "{name}: input length {} / {} != {}x{}",
+                bins.len(),
+                vals.len(),
+                batch,
+                nnz
+            );
+        }
+        let lb = xla::Literal::vec1(bins)
+            .reshape(&[batch as i64, nnz as i64])
+            .map_err(|e| anyhow!("reshape bins: {e:?}"))?;
+        let lv = xla::Literal::vec1(vals)
+            .reshape(&[batch as i64, nnz as i64])
+            .map_err(|e| anyhow!("reshape vals: {e:?}"))?;
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&[lb, lv])
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let (out_l, sq_l) = result
+            .to_tuple2()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let out = out_l
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("out to_vec: {e:?}"))?;
+        let sqnorm = sq_l
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("sqnorm to_vec: {e:?}"))?;
+        if out.len() != batch * dim || sqnorm.len() != batch {
+            bail!("{name}: unexpected output arity {} / {}", out.len(), sqnorm.len());
+        }
+        Ok(FhBatchOut {
+            out,
+            sqnorm,
+            batch,
+            dim,
+        })
+    }
+
+    /// Execute an OPH artifact. Returns the raw sketch rows `[batch * k]`
+    /// with the kernel's `i32::MAX` empty sentinel.
+    pub fn run_oph(&self, name: &str, h: &[i32], valid: &[i32]) -> Result<Vec<i32>> {
+        let c = self
+            .modules
+            .get(name)
+            .with_context(|| format!("unknown artifact {name}"))?;
+        let ArtifactKind::Oph { batch, nnz, k } = c.kind else {
+            bail!("{name} is not an oph artifact");
+        };
+        if h.len() != batch * nnz || valid.len() != batch * nnz {
+            bail!("{name}: input length mismatch");
+        }
+        let lh = xla::Literal::vec1(h)
+            .reshape(&[batch as i64, nnz as i64])
+            .map_err(|e| anyhow!("reshape h: {e:?}"))?;
+        let lv = xla::Literal::vec1(valid)
+            .reshape(&[batch as i64, nnz as i64])
+            .map_err(|e| anyhow!("reshape valid: {e:?}"))?;
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&[lh, lv])
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let sk_l = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let sketch = sk_l
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("sketch to_vec: {e:?}"))?;
+        if sketch.len() != batch * k {
+            bail!("{name}: unexpected sketch arity {}", sketch.len());
+        }
+        Ok(sketch)
+    }
+}

@@ -1,0 +1,182 @@
+//! Densification of one-permutation sketches — empty-bin handling.
+//!
+//! The paper uses the scheme of Shrivastava & Li (UAI'14; [33]) described in
+//! §2.1 and illustrated in Figure 1 (right): for each bin `i` a random
+//! direction bit `b_i`; an empty bin copies the value of the closest
+//! non-empty bin going left (circularly) if `b_i = 0`, going right if
+//! `b_i = 1`, and adds `j·C` where `j` is the copy distance and `C` a large
+//! offset — so two sketches only agree on a filled bin when they copied the
+//! same value from the same distance.
+//!
+//! [`DensifyMode::Rotation`] additionally provides the one-directional
+//! rotation scheme of the earlier ICML'14 paper ([32]) as an ablation, and
+//! [`DensifyMode::None`] leaves empty bins in place (used for the raw
+//! sketch experiments).
+
+use super::oph::EMPTY_BIN;
+
+/// The offset constant C (§2.1: "some sufficiently large offset parameter").
+/// Raw values are `< 2^32`, so `2^33` keeps `v + j·C` collision-free for
+/// distinct `(v, j)` pairs up to `j < 2^30`.
+pub const OFFSET_C: u64 = 1 << 33;
+
+/// Densification scheme selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DensifyMode {
+    /// No densification: empty bins stay [`EMPTY_BIN`].
+    None,
+    /// Improved densification of [33] (UAI'14): random direction per bin +
+    /// `j·C` offset. This is what the paper's experiments use.
+    Paper,
+    /// One-directional rotation of [32] (ICML'14): always borrow from the
+    /// right (circularly), with the same `j·C` offset. Kept as an ablation;
+    /// has provably worse variance than [`DensifyMode::Paper`].
+    Rotation,
+}
+
+/// Densify `bins` in place. `directions[i]` is the random bit `b_i`
+/// (`false` = left, `true` = right); it must be shared by every sketch that
+/// will be compared (it lives in the sketcher, not the sketch).
+///
+/// If *all* bins are empty (empty input set) the sketch is left untouched.
+pub fn densify(bins: &mut [u64], directions: &[bool], mode: DensifyMode) {
+    if mode == DensifyMode::None {
+        return;
+    }
+    let k = bins.len();
+    assert_eq!(directions.len(), k, "direction bits must match bin count");
+    if bins.iter().all(|&b| b == EMPTY_BIN) {
+        return;
+    }
+    // Work from a snapshot so copies always come from *originally* filled
+    // bins (copying from a copy would double-apply offsets).
+    let snapshot: Vec<u64> = bins.to_vec();
+    for i in 0..k {
+        if snapshot[i] != EMPTY_BIN {
+            continue;
+        }
+        let go_right = match mode {
+            DensifyMode::Paper => directions[i],
+            DensifyMode::Rotation => true,
+            DensifyMode::None => unreachable!(),
+        };
+        let mut j = 1u64;
+        loop {
+            let src = if go_right {
+                (i + j as usize) % k
+            } else {
+                (i + k - (j as usize % k)) % k
+            };
+            if snapshot[src] != EMPTY_BIN {
+                bins[i] = snapshot[src] + j * OFFSET_C;
+                break;
+            }
+            j += 1;
+            debug_assert!(j <= k as u64, "no non-empty bin found");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const E: u64 = EMPTY_BIN;
+    const C: u64 = OFFSET_C;
+
+    /// Figure 1 (right) worked example: k = 6, non-empty bins
+    /// {1: 2, 4: 1, 5: 3}, directions [0,1,1,0,0,1] →
+    /// [3+C, 2, 1+2C, 2+2C, 1, 3].
+    #[test]
+    fn figure1_right_worked_example() {
+        let mut bins = vec![E, 2, E, E, 1, 3];
+        let dirs = vec![false, true, true, false, false, true];
+        densify(&mut bins, &dirs, DensifyMode::Paper);
+        assert_eq!(bins, vec![3 + C, 2, 1 + 2 * C, 2 + 2 * C, 1, 3]);
+    }
+
+    #[test]
+    fn no_empty_bins_after_densify() {
+        let mut bins = vec![E, E, 7, E, E, E, E, 9];
+        let dirs = vec![true; 8];
+        densify(&mut bins, &dirs, DensifyMode::Paper);
+        assert!(bins.iter().all(|&b| b != E));
+    }
+
+    #[test]
+    fn filled_bins_untouched() {
+        let mut bins = vec![5, E, 7];
+        let dirs = vec![false, false, false];
+        densify(&mut bins, &dirs, DensifyMode::Paper);
+        assert_eq!(bins[0], 5);
+        assert_eq!(bins[2], 7);
+        // bin 1 copies left (bin 0) at distance 1.
+        assert_eq!(bins[1], 5 + C);
+    }
+
+    #[test]
+    fn circular_wraparound_left_and_right() {
+        // Only bin 2 filled in k = 4.
+        let mut left = vec![E, E, 9, E];
+        densify(&mut left, &[false, false, false, false], DensifyMode::Paper);
+        // bin 0 going left: bin 3 (empty in snapshot!) → bin 2 at distance 2.
+        assert_eq!(left[0], 9 + 2 * C);
+        // bin 1 going left: bin 0 empty, ... distance 3.
+        assert_eq!(left[1], 9 + 3 * C);
+        // bin 3 going left: bin 2 at distance 1.
+        assert_eq!(left[3], 9 + C);
+
+        let mut right = vec![E, E, 9, E];
+        densify(&mut right, &[true, true, true, true], DensifyMode::Paper);
+        assert_eq!(right[0], 9 + 2 * C);
+        assert_eq!(right[1], 9 + C);
+        assert_eq!(right[3], 9 + 3 * C); // wraps 3→0→1→2
+    }
+
+    #[test]
+    fn copies_only_from_original_bins() {
+        // bins: [E, E, 4]; dirs all right. Bin 0 must copy 4 at distance 2,
+        // NOT bin 1's densified value at distance 1.
+        let mut bins = vec![E, E, 4];
+        densify(&mut bins, &[true, true, true], DensifyMode::Paper);
+        assert_eq!(bins[1], 4 + C);
+        assert_eq!(bins[0], 4 + 2 * C);
+    }
+
+    #[test]
+    fn rotation_mode_always_right() {
+        let mut bins = vec![E, 2, E];
+        densify(&mut bins, &[false, false, false], DensifyMode::Rotation);
+        // Direction bits ignored: bin 0 borrows right (bin 1, distance 1);
+        // bin 2 borrows right wrapping to bin 1 at distance 2.
+        assert_eq!(bins, vec![2 + C, 2, 2 + 2 * C]);
+    }
+
+    #[test]
+    fn none_mode_leaves_empties() {
+        let mut bins = vec![E, 2, E];
+        densify(&mut bins, &[true, true, true], DensifyMode::None);
+        assert_eq!(bins, vec![E, 2, E]);
+    }
+
+    #[test]
+    fn all_empty_left_alone() {
+        let mut bins = vec![E, E, E];
+        densify(&mut bins, &[true, false, true], DensifyMode::Paper);
+        assert_eq!(bins, vec![E, E, E]);
+    }
+
+    /// The offset makes "same source, different distance" never collide:
+    /// two sketches agreeing on a densified bin implies same value AND same
+    /// distance.
+    #[test]
+    fn offset_disambiguates_distance() {
+        // Sketch A: value 9 at bin 2 → bin 0 copies at distance 2.
+        let mut a = vec![E, E, 9, E];
+        densify(&mut a, &[false, false, false, false], DensifyMode::Paper);
+        // Sketch B: value 9 at bin 3 → bin 0 copies at distance 1 (left).
+        let mut b = vec![E, E, E, 9];
+        densify(&mut b, &[false, false, false, false], DensifyMode::Paper);
+        assert_ne!(a[0], b[0], "distance must disambiguate copies");
+    }
+}

@@ -1,0 +1,117 @@
+//! Ground truth and estimator utilities shared by the experiments.
+
+use std::collections::HashSet;
+
+/// Exact Jaccard similarity `|A ∩ B| / |A ∪ B|` (sets given as unsorted
+/// slices possibly with duplicates — deduplicated internally).
+pub fn jaccard_exact(a: &[u32], b: &[u32]) -> f64 {
+    let sa: HashSet<u32> = a.iter().copied().collect();
+    let sb: HashSet<u32> = b.iter().copied().collect();
+    if sa.is_empty() && sb.is_empty() {
+        return 1.0;
+    }
+    let inter = sa.intersection(&sb).count();
+    let union = sa.len() + sb.len() - inter;
+    inter as f64 / union as f64
+}
+
+/// Exact Jaccard over *sorted deduplicated* slices — `O(|A| + |B|)`; used by
+/// the LSH ground-truth scan where the quadratic pair count dominates.
+pub fn jaccard_sorted(a: &[u32], b: &[u32]) -> f64 {
+    debug_assert!(a.windows(2).all(|w| w[0] < w[1]));
+    debug_assert!(b.windows(2).all(|w| w[0] < w[1]));
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let (mut i, mut j, mut inter) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    let union = a.len() + b.len() - inter;
+    inter as f64 / union as f64
+}
+
+/// Cosine similarity between sparse vectors given as parallel (sorted
+/// indices, values) — used by the SimHash tests and MNIST-like ground truth.
+pub fn cosine_sorted(ai: &[u32], av: &[f64], bi: &[u32], bv: &[f64]) -> f64 {
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut dot = 0.0;
+    while i < ai.len() && j < bi.len() {
+        match ai[i].cmp(&bi[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                dot += av[i] * bv[j];
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    let na: f64 = av.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let nb: f64 = bv.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na * nb)
+}
+
+/// Unbiased Jaccard estimate from a b-bit collision fraction: with b bits,
+/// unrelated coordinates still collide with probability `2^-b`, so
+/// `E[frac] = J + (1 − J)·2^{−b}` and the corrected estimator is
+/// `(frac − 2^{−b}) / (1 − 2^{−b})` (Li–König).
+pub fn bbit_correct(collision_fraction: f64, b: u32) -> f64 {
+    let fp = (0.5f64).powi(b as i32); // 2^{-b}
+    ((collision_fraction - fp) / (1.0 - fp)).clamp(-1.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jaccard_basics() {
+        assert_eq!(jaccard_exact(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(jaccard_exact(&[1, 2], &[3, 4]), 0.0);
+        assert!((jaccard_exact(&[1, 2, 3], &[2, 3, 4]) - 0.5).abs() < 1e-12);
+        assert_eq!(jaccard_exact(&[], &[]), 1.0);
+        assert_eq!(jaccard_exact(&[1], &[]), 0.0);
+        // Duplicates ignored.
+        assert_eq!(jaccard_exact(&[1, 1, 2], &[1, 2, 2]), 1.0);
+    }
+
+    #[test]
+    fn sorted_matches_exact() {
+        let a: Vec<u32> = (0..100).filter(|x| x % 2 == 0).collect();
+        let b: Vec<u32> = (0..100).filter(|x| x % 3 == 0).collect();
+        assert!((jaccard_sorted(&a, &b) - jaccard_exact(&a, &b)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_identical_and_orthogonal() {
+        let i1 = [0u32, 1, 2];
+        let v1 = [1.0, 2.0, 3.0];
+        assert!((cosine_sorted(&i1, &v1, &i1, &v1) - 1.0).abs() < 1e-12);
+        let i2 = [5u32, 6];
+        let v2 = [1.0, 1.0];
+        assert_eq!(cosine_sorted(&i1, &v1, &i2, &v2), 0.0);
+    }
+
+    #[test]
+    fn bbit_correction() {
+        // Perfect similarity: frac = 1 → J = 1.
+        assert!((bbit_correct(1.0, 1) - 1.0).abs() < 1e-12);
+        // Independent sketches: frac = 2^-b → J = 0.
+        assert!(bbit_correct(0.5, 1).abs() < 1e-12);
+        assert!(bbit_correct(0.25, 2).abs() < 1e-12);
+        // Midpoint with b = 1: frac = 0.75 → J = 0.5.
+        assert!((bbit_correct(0.75, 1) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,282 @@
+//! Feature Hashing (§2.2) — Weinberger et al., ICML'09.
+//!
+//! Maps a sparse d-dimensional vector `v` to a dense d'-dimensional vector
+//! `v'` with `v'_i = Σ_{j : h(j) = i} sgn(j)·v_j`. Theorem 1 (this paper)
+//! shows `‖v′‖₂² ∈ 1 ± ε` whp. for unit `v` under truly random hashing, and
+//! Corollary 1 transfers the bound to mixed tabulation for sparse vectors —
+//! *including* the variant where bin and sign come from a **single** hash
+//! evaluation `h*: [d] → {±1} × [d']` ([`SignMode::Paired`]).
+//!
+//! The hot loop is one hash + one fused multiply-add per non-zero; this is
+//! the Rust-native path. The batched PJRT path (Layer 1/2) lives in
+//! `python/compile/` and is fed by [`FeatureHasher::plan`], which exposes
+//! the (bin, signed value) pairs for a batch without materialising `v'`.
+
+use crate::data::sparse::SparseVector;
+use crate::hash::{HashFamily, Hasher32};
+
+/// Where the sign bit comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SignMode {
+    /// Independent second hash function for `sgn` (the classic setup of
+    /// Weinberger et al.).
+    Separate,
+    /// Bin and sign extracted from one hash value (`h*` of Corollary 1):
+    /// bit 31 is the sign, the low bits give the bin. One evaluation per
+    /// non-zero — the speed trick mixed tabulation makes safe.
+    Paired,
+}
+
+/// A seeded feature-hashing transform `R^d → R^{d'}`.
+pub struct FeatureHasher {
+    hasher: Box<dyn Hasher32>,
+    sign_hasher: Option<Box<dyn Hasher32>>,
+    output_dim: usize,
+    mode: SignMode,
+    /// Loop-invariant `mod d'` without hardware division (§Perf).
+    fm: crate::util::fastmod::FastMod32,
+}
+
+impl FeatureHasher {
+    /// Build from a hash family and seed. `output_dim` is d'.
+    pub fn new(family: HashFamily, seed: u64, output_dim: usize, mode: SignMode) -> Self {
+        assert!(output_dim >= 1);
+        let hasher = family.build(seed);
+        let sign_hasher = match mode {
+            SignMode::Separate => Some(family.build(seed ^ 0x5157_9AC3_11F0_77D2)),
+            SignMode::Paired => None,
+        };
+        Self {
+            hasher,
+            sign_hasher,
+            output_dim,
+            mode,
+            fm: crate::util::fastmod::FastMod32::new(output_dim as u32),
+        }
+    }
+
+    /// Build from explicit hashers (used by tests with stub hashers).
+    pub fn from_hashers(
+        hasher: Box<dyn Hasher32>,
+        sign_hasher: Option<Box<dyn Hasher32>>,
+        output_dim: usize,
+    ) -> Self {
+        let mode = if sign_hasher.is_some() {
+            SignMode::Separate
+        } else {
+            SignMode::Paired
+        };
+        Self {
+            hasher,
+            sign_hasher,
+            output_dim,
+            mode,
+            fm: crate::util::fastmod::FastMod32::new(output_dim as u32),
+        }
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.output_dim
+    }
+
+    pub fn mode(&self) -> SignMode {
+        self.mode
+    }
+
+    pub fn hasher_name(&self) -> &'static str {
+        self.hasher.name()
+    }
+
+    /// Bin index and sign for feature id `j`.
+    #[inline]
+    pub fn slot(&self, j: u32) -> (usize, f64) {
+        let h = self.hasher.hash(j);
+        match self.mode {
+            SignMode::Paired => {
+                let bin = self.fm.rem(h & 0x7FFF_FFFF) as usize;
+                let sign = if h & 0x8000_0000 != 0 { -1.0 } else { 1.0 };
+                (bin, sign)
+            }
+            SignMode::Separate => {
+                let bin = self.fm.rem(h) as usize;
+                let s = self.sign_hasher.as_ref().unwrap().hash(j);
+                let sign = if s & 1 == 1 { -1.0 } else { 1.0 };
+                (bin, sign)
+            }
+        }
+    }
+
+    /// Transform a sparse vector into the dense d'-dim output.
+    pub fn transform(&self, v: &SparseVector) -> Vec<f64> {
+        let mut out = vec![0.0; self.output_dim];
+        self.transform_into(v, &mut out);
+        out
+    }
+
+    /// Transform into a caller-provided buffer (hot path).
+    ///
+    /// Hashing goes through [`Hasher32::hash_slice`] so the per-key loop is
+    /// monomorphic inside the hasher (one dynamic dispatch per vector, not
+    /// per non-zero) — worth ~25% on News20-sized documents (§Perf).
+    pub fn transform_into(&self, v: &SparseVector, out: &mut [f64]) {
+        assert_eq!(out.len(), self.output_dim);
+        out.fill(0.0);
+        let n = v.indices.len();
+        let mut hbuf = vec![0u32; n];
+        self.hasher.hash_slice(&v.indices, &mut hbuf);
+        match self.mode {
+            SignMode::Paired => {
+                for (&h, &val) in hbuf.iter().zip(&v.values) {
+                    let bin = self.fm.rem(h & 0x7FFF_FFFF) as usize;
+                    let sign = if h & 0x8000_0000 != 0 { -1.0 } else { 1.0 };
+                    out[bin] += sign * val;
+                }
+            }
+            SignMode::Separate => {
+                let mut sbuf = vec![0u32; n];
+                self.sign_hasher
+                    .as_ref()
+                    .unwrap()
+                    .hash_slice(&v.indices, &mut sbuf);
+                for ((&h, &s), &val) in hbuf.iter().zip(&sbuf).zip(&v.values) {
+                    let bin = self.fm.rem(h) as usize;
+                    let sign = if s & 1 == 1 { -1.0 } else { 1.0 };
+                    out[bin] += sign * val;
+                }
+            }
+        }
+    }
+
+    /// ‖v′‖₂² without materialising `v'` twice — the §4.1/§4.2 statistic.
+    pub fn squared_norm(&self, v: &SparseVector, scratch: &mut Vec<f64>) -> f64 {
+        scratch.resize(self.output_dim, 0.0);
+        self.transform_into(v, &mut scratch[..]);
+        scratch.iter().map(|x| x * x).sum()
+    }
+
+    /// Lowered form for the PJRT batch path: `(bins, signed_values)` for one
+    /// vector, padded to `max_nnz` with (0, 0.0) no-ops.
+    pub fn plan(&self, v: &SparseVector, max_nnz: usize) -> (Vec<i32>, Vec<f32>) {
+        assert!(v.nnz() <= max_nnz, "vector nnz exceeds compiled bound");
+        let mut bins = Vec::with_capacity(max_nnz);
+        let mut vals = Vec::with_capacity(max_nnz);
+        for (&j, &val) in v.indices.iter().zip(&v.values) {
+            let (bin, sign) = self.slot(j);
+            bins.push(bin as i32);
+            vals.push((sign * val) as f32);
+        }
+        bins.resize(max_nnz, 0);
+        vals.resize(max_nnz, 0.0);
+        (bins, vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse::SparseVector;
+    use crate::util::rng::Xoshiro256;
+
+    fn unit_indicator(ids: &[u32]) -> SparseVector {
+        let val = 1.0 / (ids.len() as f64).sqrt();
+        SparseVector::new(ids.to_vec(), vec![val; ids.len()])
+    }
+
+    #[test]
+    fn preserves_norm_in_expectation() {
+        // E[‖v'‖²] = ‖v‖² for any hash function that is 2-independent-ish;
+        // average over seeds with mixed tabulation.
+        let v = unit_indicator(&(0..300u32).map(|i| i * 7 + 3).collect::<Vec<_>>());
+        let mut sum = 0.0;
+        let reps = 80;
+        let mut scratch = Vec::new();
+        for seed in 0..reps {
+            let fh = FeatureHasher::new(HashFamily::MixedTab, seed, 128, SignMode::Separate);
+            sum += fh.squared_norm(&v, &mut scratch);
+        }
+        let mean = sum / reps as f64;
+        assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn paired_mode_preserves_norm_too() {
+        let v = unit_indicator(&(0..300u32).collect::<Vec<_>>());
+        let mut sum = 0.0;
+        let reps = 80;
+        let mut scratch = Vec::new();
+        for seed in 0..reps {
+            let fh = FeatureHasher::new(HashFamily::MixedTab, seed, 128, SignMode::Paired);
+            sum += fh.squared_norm(&v, &mut scratch);
+        }
+        let mean = sum / reps as f64;
+        assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn linearity() {
+        // FH is a linear map: T(a + b) = T(a) + T(b).
+        let mut rng = Xoshiro256::new(4);
+        let a = SparseVector::new(
+            (0..50u32).collect(),
+            (0..50).map(|_| rng.next_f64() - 0.5).collect(),
+        );
+        let b = SparseVector::new(
+            (25..75u32).collect(),
+            (0..50).map(|_| rng.next_f64() - 0.5).collect(),
+        );
+        let fh = FeatureHasher::new(HashFamily::MixedTab, 7, 64, SignMode::Separate);
+        let ta = fh.transform(&a);
+        let tb = fh.transform(&b);
+        let sum_vec = a.add(&b);
+        let tsum = fh.transform(&sum_vec);
+        for i in 0..64 {
+            assert!((tsum[i] - (ta[i] + tb[i])).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let v = unit_indicator(&[1, 5, 99, 1000]);
+        let f1 = FeatureHasher::new(HashFamily::Murmur3, 42, 32, SignMode::Separate);
+        let f2 = FeatureHasher::new(HashFamily::Murmur3, 42, 32, SignMode::Separate);
+        assert_eq!(f1.transform(&v), f2.transform(&v));
+    }
+
+    #[test]
+    fn plan_matches_transform() {
+        let v = unit_indicator(&[3, 17, 256, 70000]);
+        let fh = FeatureHasher::new(HashFamily::MixedTab, 11, 64, SignMode::Paired);
+        let (bins, vals) = fh.plan(&v, 8);
+        assert_eq!(bins.len(), 8);
+        // Reconstruct dense output from the plan (f32 precision).
+        let mut dense = vec![0.0f32; 64];
+        for (b, x) in bins.iter().zip(&vals) {
+            dense[*b as usize] += *x;
+        }
+        let direct = fh.transform(&v);
+        for i in 0..64 {
+            assert!((dense[i] as f64 - direct[i]).abs() < 1e-6, "bin {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn plan_rejects_oversized() {
+        let v = unit_indicator(&[1, 2, 3, 4, 5]);
+        let fh = FeatureHasher::new(HashFamily::MixedTab, 1, 16, SignMode::Paired);
+        let _ = fh.plan(&v, 4);
+    }
+
+    #[test]
+    fn single_feature_lands_in_one_bin() {
+        let v = SparseVector::new(vec![42], vec![1.0]);
+        let fh = FeatureHasher::new(HashFamily::Poly20, 5, 100, SignMode::Separate);
+        let out = fh.transform(&v);
+        let nonzero: Vec<usize> = (0..100).filter(|&i| out[i] != 0.0).collect();
+        assert_eq!(nonzero.len(), 1);
+        assert!((out[nonzero[0]].abs() - 1.0).abs() < 1e-12);
+        // And ‖v'‖² is exactly 1 regardless of hash function.
+        let mut scratch = Vec::new();
+        assert!((fh.squared_norm(&v, &mut scratch) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,91 @@
+//! Classic k×MinHash (Broder '97) — the `O(k·|A|)` baseline OPH replaces.
+//!
+//! Kept as (a) a correctness oracle for the OPH estimator on random data and
+//! (b) the ablation point motivating OPH: `sketch()` here costs k hash
+//! evaluations per element versus OPH's one.
+
+use crate::hash::{HashFamily, Hasher32};
+
+/// k independent MinHash repetitions.
+pub struct MinHash {
+    hashers: Vec<Box<dyn Hasher32>>,
+}
+
+impl MinHash {
+    pub fn new(family: HashFamily, seed: u64, k: usize) -> Self {
+        assert!(k >= 1);
+        let hashers = (0..k)
+            .map(|i| family.build(seed.wrapping_add((i as u64) << 32 | 0x9E37)))
+            .collect();
+        Self { hashers }
+    }
+
+    pub fn k(&self) -> usize {
+        self.hashers.len()
+    }
+
+    /// Sketch: `S[i] = min_{a ∈ A} h_i(a)`. Empty sets get all-`u32::MAX`.
+    pub fn sketch(&self, set: &[u32]) -> Vec<u32> {
+        let mut out = vec![u32::MAX; self.hashers.len()];
+        for (i, h) in self.hashers.iter().enumerate() {
+            let mut m = u32::MAX;
+            for &x in set {
+                m = m.min(h.hash(x));
+            }
+            out[i] = m;
+        }
+        out
+    }
+
+    /// Estimate Jaccard similarity as the fraction of agreeing coordinates.
+    pub fn estimate(&self, a: &[u32], b: &[u32]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.len(), self.hashers.len());
+        let m = a.iter().zip(b).filter(|(x, y)| x == y).count();
+        m as f64 / a.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::estimators::jaccard_exact;
+
+    #[test]
+    fn identical_sets() {
+        let mh = MinHash::new(HashFamily::MixedTab, 1, 32);
+        let s: Vec<u32> = (0..100).collect();
+        let a = mh.sketch(&s);
+        assert_eq!(mh.estimate(&a, &a), 1.0);
+    }
+
+    #[test]
+    fn disjoint_sets_near_zero() {
+        let mh = MinHash::new(HashFamily::MixedTab, 2, 128);
+        let a: Vec<u32> = (0..1000).collect();
+        let b: Vec<u32> = (100_000..101_000).collect();
+        let est = mh.estimate(&mh.sketch(&a), &mh.sketch(&b));
+        assert!(est < 0.05, "est {est}");
+    }
+
+    #[test]
+    fn tracks_true_jaccard_on_random_data() {
+        let a: Vec<u32> = (0..1500).collect();
+        let b: Vec<u32> = (500..2000).collect(); // J = 1000/2000 = 0.5
+        let truth = jaccard_exact(&a, &b);
+        let mut sum = 0.0;
+        let reps = 30;
+        for seed in 0..reps {
+            let mh = MinHash::new(HashFamily::MixedTab, seed, 100);
+            sum += mh.estimate(&mh.sketch(&a), &mh.sketch(&b));
+        }
+        let mean = sum / reps as f64;
+        assert!((mean - truth).abs() < 0.03, "mean {mean} truth {truth}");
+    }
+
+    #[test]
+    fn empty_set_sketch_is_max() {
+        let mh = MinHash::new(HashFamily::Murmur3, 3, 8);
+        assert!(mh.sketch(&[]).iter().all(|&v| v == u32::MAX));
+    }
+}

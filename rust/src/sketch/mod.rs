@@ -1,0 +1,31 @@
+//! Similarity-estimation and dimensionality-reduction sketches (§2).
+//!
+//! Everything here is parameterised by a basic [`crate::hash::Hasher32`] —
+//! the paper's experimental variable:
+//!
+//! * [`minhash`] — classic k×MinHash (Broder) baseline; `O(k·|A|)`.
+//! * [`oph`] — One Permutation Hashing (Li, Owen, Zhang — NIPS'12); `O(|A|)`
+//!   for a k-bin sketch, with the empty-bin problem solved by
+//! * [`densify`] — the densification of Shrivastava & Li (UAI'14, [33] in
+//!   the paper): directional circular copying with a `j·C` offset.
+//! * [`feature_hash`] — Feature Hashing (Weinberger et al., ICML'09): sparse
+//!   d-dim vector → dense d'-dim vector preserving ‖v‖₂ (§2.2, Theorem 1).
+//! * [`simhash`] — SimHash (Charikar) for angular similarity (extension; the
+//!   paper cites it as an LSH alternative).
+//! * [`bbit`] — b-bit truncation of minwise sketches (Li–Shrivastava–König),
+//!   discussed in §1.2.
+//! * [`estimators`] — exact Jaccard ground truth and sketch estimators.
+
+pub mod minhash;
+pub mod oph;
+pub mod densify;
+pub mod feature_hash;
+pub mod simhash;
+pub mod bbit;
+pub mod estimators;
+
+pub use densify::{densify, DensifyMode};
+pub use estimators::jaccard_exact;
+pub use feature_hash::{FeatureHasher, SignMode};
+pub use minhash::MinHash;
+pub use oph::{OneHashSketcher, OphSketch, EMPTY_BIN};

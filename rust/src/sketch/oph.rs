@@ -1,0 +1,297 @@
+//! One Permutation Hashing (§2.1).
+//!
+//! One hash evaluation per element: `h(x)` is split into a bin index
+//! `b(x) = h(x) mod k` and a value `v(x) = ⌊h(x)/k⌋`; the sketch keeps the
+//! minimum value per bin. Empty bins are handled by [`super::densify`].
+//!
+//! The paper's Figure 1 uses the equivalent contiguous-range layout
+//! (`b(x) = ⌊h(x)/(m/k)⌋`, `v(x) = h(x) mod (m/k)`); both layouts are
+//! provided ([`BinLayout`]) and the Figure 1 worked example is reproduced in
+//! the tests with [`BinLayout::Range`]. Experiments use the text's
+//! [`BinLayout::Mod`].
+
+use super::densify::{densify, DensifyMode};
+use crate::hash::Hasher32;
+
+/// Sentinel for an empty bin (no element hashed into it). All real values
+/// are `< 2^32` so `u64::MAX` is unambiguous.
+pub const EMPTY_BIN: u64 = u64::MAX;
+
+/// How `h(x)` is split into (bin, value).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinLayout {
+    /// `b = h mod k`, `v = h / k` (paper §2.1 text).
+    Mod,
+    /// `b = h / (m/k)`, `v = h mod (m/k)` with `m = 2^32` (paper Figure 1).
+    Range,
+}
+
+/// A raw (pre-densification) OPH sketch: one `u64` per bin, either the
+/// minimal value or [`EMPTY_BIN`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OphSketch {
+    pub bins: Vec<u64>,
+}
+
+impl OphSketch {
+    pub fn k(&self) -> usize {
+        self.bins.len()
+    }
+
+    pub fn empty_bins(&self) -> usize {
+        self.bins.iter().filter(|&&b| b == EMPTY_BIN).count()
+    }
+}
+
+/// OPH sketcher: a basic hash function + parameters. The densification
+/// direction bits are derived from the sketcher's own seed so that two sets
+/// sketched by the *same* sketcher share them (required for the estimator).
+pub struct OneHashSketcher {
+    hasher: Box<dyn Hasher32>,
+    k: usize,
+    layout: BinLayout,
+    mode: DensifyMode,
+    /// Direction bits b_i for densification (§2.1 / Figure 1 right).
+    directions: Vec<bool>,
+}
+
+impl OneHashSketcher {
+    /// `k` bins over the given hasher. Direction bits come from the hasher
+    /// itself evaluated on bin indices (any fixed derivation shared between
+    /// sketches works; the paper just needs "for each index a random bit").
+    pub fn new(hasher: Box<dyn Hasher32>, k: usize, layout: BinLayout, mode: DensifyMode) -> Self {
+        assert!(k >= 1);
+        let directions = (0..k)
+            .map(|i| hasher.hash(0xD1B5_4A32u32.wrapping_add(i as u32)) & 1 == 1)
+            .collect();
+        Self {
+            hasher,
+            k,
+            layout,
+            mode,
+            directions,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn hasher_name(&self) -> &'static str {
+        self.hasher.name()
+    }
+
+    /// Raw sketch (may contain empty bins).
+    pub fn sketch_raw(&self, set: &[u32]) -> OphSketch {
+        let mut bins = vec![EMPTY_BIN; self.k];
+        let k = self.k as u64;
+        match self.layout {
+            BinLayout::Mod => {
+                for &x in set {
+                    let h = self.hasher.hash(x) as u64;
+                    let b = (h % k) as usize;
+                    let v = h / k;
+                    if v < bins[b] {
+                        bins[b] = v;
+                    }
+                }
+            }
+            BinLayout::Range => {
+                let hashes: Vec<u64> =
+                    set.iter().map(|&x| self.hasher.hash(x) as u64).collect();
+                bins = range_sketch(&hashes, 1u64 << 32, self.k);
+            }
+        }
+        OphSketch { bins }
+    }
+
+    /// Densified sketch: no empty bins (unless the set itself is empty).
+    pub fn sketch(&self, set: &[u32]) -> OphSketch {
+        let mut s = self.sketch_raw(set);
+        densify(&mut s.bins, &self.directions, self.mode);
+        s
+    }
+
+    /// Densify a raw sketch produced elsewhere (e.g. the PJRT OPH kernel)
+    /// with *this* sketcher's direction bits — required for the result to
+    /// be comparable with natively-produced sketches.
+    pub fn densify_in_place(&self, s: &mut OphSketch) {
+        assert_eq!(s.k(), self.k);
+        densify(&mut s.bins, &self.directions, self.mode);
+    }
+
+    /// Estimate `J(A, B)` from two densified sketches produced by *this*
+    /// sketcher: the fraction of agreeing bins (§2.1).
+    pub fn estimate(&self, a: &OphSketch, b: &OphSketch) -> f64 {
+        estimate_collision(a, b)
+    }
+}
+
+/// Contiguous-range OPH (Figure 1 layout) over explicit hash values in
+/// `[m]`: `b = ⌊h/(m/k)⌋`, `v = h mod (m/k)` — exposed separately so the
+/// figure's worked example is testable at |U| = 20 and so the PJRT path can
+/// reuse the exact same bin arithmetic. When k does not divide m the last
+/// range absorbs the remainder.
+pub fn range_sketch(hashes: &[u64], m: u64, k: usize) -> Vec<u64> {
+    assert!(k >= 1 && m >= k as u64);
+    let range = m / k as u64;
+    let mut bins = vec![EMPTY_BIN; k];
+    for &h in hashes {
+        debug_assert!(h < m);
+        let b = ((h / range) as usize).min(k - 1);
+        let v = h % range;
+        if v < bins[b] {
+            bins[b] = v;
+        }
+    }
+    bins
+}
+
+/// Fraction of agreeing bins between two equally-sized sketches.
+pub fn estimate_collision(a: &OphSketch, b: &OphSketch) -> f64 {
+    assert_eq!(a.k(), b.k(), "sketch sizes differ");
+    assert!(a.k() > 0);
+    let matches = a
+        .bins
+        .iter()
+        .zip(&b.bins)
+        .filter(|(x, y)| x == y && **x != EMPTY_BIN)
+        .count();
+    matches as f64 / a.k() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::{HashFamily, Hasher32};
+    use crate::sketch::estimators::jaccard_exact;
+    use crate::util::rng::Xoshiro256;
+
+    /// A stub hasher with a fixed lookup — lets us drive the exact Figure 1
+    /// scenario (|U| = 20, k = 5).
+    struct TableHasher {
+        map: std::collections::HashMap<u32, u32>,
+    }
+    impl Hasher32 for TableHasher {
+        fn hash(&self, x: u32) -> u32 {
+            *self.map.get(&x).unwrap_or(&x)
+        }
+        fn name(&self) -> &'static str {
+            "table"
+        }
+    }
+
+    /// Figure 1 (left): hash values of A as an indicator over [20]:
+    /// 0011 0100 0000 1010 0010 → minima per 4-wide bin: [2, 1, -, 0, 2].
+    #[test]
+    fn figure1_left_worked_example() {
+        let hashes = [2u64, 3, 5, 12, 14, 18]; // h(A) positions set to 1
+        let s = super::range_sketch(&hashes, 20, 5);
+        assert_eq!(s, vec![2, 1, EMPTY_BIN, 0, 2]);
+    }
+
+    #[test]
+    fn range_sketch_on_32bit_universe_matches_layout() {
+        // Sanity for the production m = 2^32 path: bins partition the hash
+        // space and the per-bin value is the offset within the range.
+        let m = 1u64 << 32;
+        let k = 5usize;
+        let range = m / k as u64;
+        let hashes = [0u64, range - 1, range, 3 * range + 7, m - 1];
+        let s = super::range_sketch(&hashes, m, k);
+        assert_eq!(s[0], 0);
+        assert_eq!(s[1], 0); // `range` lands at bin 1 offset 0
+        assert_eq!(s[3], 7);
+        // m-1 lands in the last bin (clamped) with offset m-1 - 4*range.
+        assert_eq!(s[4], (m - 1) % range);
+        assert_eq!(s[2], EMPTY_BIN);
+    }
+
+    #[test]
+    fn mod_layout_definition() {
+        // With the Mod layout, bins/values follow b = h mod k, v = h / k.
+        let map: std::collections::HashMap<u32, u32> =
+            [(1u32, 13u32), (2, 27), (3, 8)].into_iter().collect();
+        let sketcher = OneHashSketcher::new(
+            Box::new(TableHasher { map }),
+            5,
+            BinLayout::Mod,
+            DensifyMode::None,
+        );
+        let s = sketcher.sketch_raw(&[1, 2, 3]);
+        // 13 → bin 3, v 2; 27 → bin 2, v 5; 8 → bin 3, v 1 (min with 13's 2 → 1).
+        assert_eq!(s.bins[3], 1);
+        assert_eq!(s.bins[2], 5);
+        assert_eq!(s.bins[0], EMPTY_BIN);
+        assert_eq!(s.empty_bins(), 3);
+    }
+
+    #[test]
+    fn identical_sets_estimate_one() {
+        let sketcher = OneHashSketcher::new(
+            HashFamily::MixedTab.build(3),
+            64,
+            BinLayout::Mod,
+            DensifyMode::Paper,
+        );
+        let set: Vec<u32> = (0..500u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        let s1 = sketcher.sketch(&set);
+        let s2 = sketcher.sketch(&set);
+        assert_eq!(sketcher.estimate(&s1, &s2), 1.0);
+    }
+
+    #[test]
+    fn disjoint_sets_estimate_near_zero() {
+        let sketcher = OneHashSketcher::new(
+            HashFamily::MixedTab.build(4),
+            128,
+            BinLayout::Mod,
+            DensifyMode::Paper,
+        );
+        let a: Vec<u32> = (0..2000u32).collect();
+        let b: Vec<u32> = (1_000_000..1_002_000u32).collect();
+        let est = sketcher.estimate(&sketcher.sketch(&a), &sketcher.sketch(&b));
+        assert!(est < 0.06, "est {est}");
+    }
+
+    #[test]
+    fn estimator_tracks_true_jaccard() {
+        // Average over independent sketcher seeds ≈ J (unbiasedness of the
+        // densified estimator, [33]).
+        let mut rng = Xoshiro256::new(5);
+        let a: Vec<u32> = (0..3000u32).map(|_| rng.next_u32() % 10_000).collect();
+        let b: Vec<u32> = a.iter().map(|&x| if x % 3 == 0 { x } else { x + 10_000 }).collect();
+        let truth = jaccard_exact(&a, &b);
+        let mut sum = 0.0;
+        let reps = 60;
+        for seed in 0..reps {
+            let sk = OneHashSketcher::new(
+                HashFamily::MixedTab.build(seed),
+                200,
+                BinLayout::Mod,
+                DensifyMode::Paper,
+            );
+            sum += sk.estimate(&sk.sketch(&a), &sk.sketch(&b));
+        }
+        let mean = sum / reps as f64;
+        assert!(
+            (mean - truth).abs() < 0.03,
+            "mean {mean} vs truth {truth}"
+        );
+    }
+
+    #[test]
+    fn sparse_sets_have_empty_bins_before_densification() {
+        let sketcher = OneHashSketcher::new(
+            HashFamily::MixedTab.build(9),
+            200,
+            BinLayout::Mod,
+            DensifyMode::Paper,
+        );
+        let small: Vec<u32> = (0..100u32).collect(); // n = k/2 regime (Fig 9)
+        let raw = sketcher.sketch_raw(&small);
+        assert!(raw.empty_bins() > 50, "{} empty", raw.empty_bins());
+        let dense = sketcher.sketch(&small);
+        assert_eq!(dense.empty_bins(), 0);
+    }
+}

@@ -1,0 +1,100 @@
+//! SimHash (Charikar, STOC'02; [12] in the paper) — sign-random-projection
+//! LSH for angular similarity.
+//!
+//! Included because the paper positions SimHash alongside OPH as the other
+//! practical LSH family ("relying either on OPH [32, 33] or FH [12, 2]"):
+//! SimHash applied to a feature-hashed vector is exactly the "FH + sign
+//! projection" pipeline of Andoni et al. Each output bit is
+//! `sign(Σ_j r_{i,j} v_j)` with `r_{i,j} ∈ {±1}` derived from a basic hash
+//! function of `(i, j)` — so SimHash quality also reduces to basic-hash
+//! quality, the paper's theme.
+
+use crate::data::sparse::SparseVector;
+use crate::hash::{HashFamily, Hasher32};
+
+/// k-bit SimHash sketcher.
+pub struct SimHash {
+    hashers: Vec<Box<dyn Hasher32>>,
+}
+
+impl SimHash {
+    pub fn new(family: HashFamily, seed: u64, bits: usize) -> Self {
+        assert!(bits >= 1);
+        let hashers = (0..bits)
+            .map(|i| family.build(seed.wrapping_add(0xABCD_0000 + i as u64)))
+            .collect();
+        Self { hashers }
+    }
+
+    pub fn bits(&self) -> usize {
+        self.hashers.len()
+    }
+
+    /// Sketch: bit i = sign of the ±1 projection by hasher i.
+    pub fn sketch(&self, v: &SparseVector) -> Vec<bool> {
+        self.hashers
+            .iter()
+            .map(|h| {
+                let mut acc = 0.0;
+                for (&j, &val) in v.indices.iter().zip(&v.values) {
+                    let r = if h.hash(j) & 1 == 1 { 1.0 } else { -1.0 };
+                    acc += r * val;
+                }
+                acc >= 0.0
+            })
+            .collect()
+    }
+
+    /// Estimate the angle between the vectors:
+    /// `P[bit match] = 1 − θ/π  ⇒  θ̂ = π · (1 − frac)`; returns the cosine
+    /// similarity estimate `cos(θ̂)`.
+    pub fn estimate_cosine(&self, a: &[bool], b: &[bool]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        let frac = a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len() as f64;
+        (std::f64::consts::PI * (1.0 - frac)).cos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::estimators::cosine_sorted;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn identical_vectors_full_match() {
+        let sh = SimHash::new(HashFamily::MixedTab, 1, 64);
+        let v = SparseVector::new(vec![1, 2, 3], vec![0.5, -0.25, 1.0]);
+        let s = sh.sketch(&v);
+        assert!((sh.estimate_cosine(&s, &s) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn opposite_vectors_no_match() {
+        let sh = SimHash::new(HashFamily::MixedTab, 2, 256);
+        let v = SparseVector::new(vec![1, 2, 3], vec![0.5, -0.25, 1.0]);
+        let neg = SparseVector::new(vec![1, 2, 3], vec![-0.5, 0.25, -1.0]);
+        let est = sh.estimate_cosine(&sh.sketch(&v), &sh.sketch(&neg));
+        assert!(est < -0.9, "est {est}");
+    }
+
+    #[test]
+    fn tracks_cosine_on_random_vectors() {
+        let mut rng = Xoshiro256::new(7);
+        let idx: Vec<u32> = (0..400).collect();
+        let v1: Vec<f64> = (0..400).map(|_| rng.normal()).collect();
+        // Correlated vector: v2 = v1 + noise.
+        let v2: Vec<f64> = v1.iter().map(|x| x + rng.normal() * 0.7).collect();
+        let truth = cosine_sorted(&idx, &v1, &idx, &v2);
+        let a = SparseVector::new(idx.clone(), v1);
+        let b = SparseVector::new(idx, v2);
+        let mut sum = 0.0;
+        let reps = 20;
+        for seed in 0..reps {
+            let sh = SimHash::new(HashFamily::MixedTab, seed, 256);
+            sum += sh.estimate_cosine(&sh.sketch(&a), &sh.sketch(&b));
+        }
+        let mean = sum / reps as f64;
+        assert!((mean - truth).abs() < 0.1, "mean {mean} truth {truth}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Fixed-bin histograms with CSV export and terminal rendering.
+//!
+//! Every figure in the paper is a histogram of an estimator's outputs
+//! (Jaccard estimates for OPH, ‖v′‖² for FH). Experiment drivers build a
+//! [`Histogram`] per hash family, render it for the console, and save the
+//! raw bin counts as CSV for replotting.
+
+use crate::util::csv::CsvWriter;
+
+/// Equal-width histogram over `[lo, hi)` with overflow/underflow tracking.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    count: u64,
+}
+
+impl Histogram {
+    /// Create with `nbins` equal-width bins spanning `[lo, hi)`.
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Self {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            underflow: 0,
+            overflow: 0,
+            count: 0,
+        }
+    }
+
+    /// Record one observation.
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let width = (self.hi - self.lo) / self.bins.len() as f64;
+            let idx = ((x - self.lo) / width) as usize;
+            let idx = idx.min(self.bins.len() - 1);
+            self.bins[idx] += 1;
+        }
+    }
+
+    /// Record many observations.
+    pub fn extend(&mut self, xs: impl IntoIterator<Item = f64>) {
+        for x in xs {
+            self.add(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    /// Center of bin `i`.
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let width = (self.hi - self.lo) / self.bins.len() as f64;
+        self.lo + width * (i as f64 + 0.5)
+    }
+
+    /// Append this histogram's bins to a CSV table with columns
+    /// `(series, bin_center, count)`.
+    pub fn to_csv_rows(&self, series: &str, out: &mut CsvWriter) {
+        for (i, &c) in self.bins.iter().enumerate() {
+            out.row([
+                series.to_string(),
+                format!("{:.6}", self.bin_center(i)),
+                c.to_string(),
+            ]);
+        }
+    }
+
+    /// Compact ASCII rendering: one row per non-empty region, `#` bars
+    /// normalised to the peak bin. `width` is the maximal bar width.
+    pub fn render_ascii(&self, width: usize) -> String {
+        let peak = self.bins.iter().copied().max().unwrap_or(0).max(1);
+        let mut s = String::new();
+        // Trim leading/trailing all-zero stretches for readability.
+        let first = self.bins.iter().position(|&c| c > 0).unwrap_or(0);
+        let last = self
+            .bins
+            .iter()
+            .rposition(|&c| c > 0)
+            .unwrap_or(self.bins.len() - 1);
+        if self.underflow > 0 {
+            s.push_str(&format!("  < {:<8.4} {:>7}\n", self.lo, self.underflow));
+        }
+        for i in first..=last {
+            let bar = "#".repeat(((self.bins[i] as f64 / peak as f64) * width as f64).round() as usize);
+            s.push_str(&format!(
+                "  {:<10.4} {:>7} {}\n",
+                self.bin_center(i),
+                self.bins[i],
+                bar
+            ));
+        }
+        if self.overflow > 0 {
+            s.push_str(&format!("  >={:<8.4} {:>7}\n", self.hi, self.overflow));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_correctly() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.add(0.05); // bin 0
+        h.add(0.15); // bin 1
+        h.add(0.95); // bin 9
+        h.add(-0.1); // underflow
+        h.add(1.0); // overflow (hi is exclusive)
+        assert_eq!(h.bins()[0], 1);
+        assert_eq!(h.bins()[1], 1);
+        assert_eq!(h.bins()[9], 1);
+        assert_eq!(h.underflow(), 1);
+        assert_eq!(h.overflow(), 1);
+        assert_eq!(h.count(), 5);
+    }
+
+    #[test]
+    fn bin_centers() {
+        let h = Histogram::new(0.0, 1.0, 4);
+        assert!((h.bin_center(0) - 0.125).abs() < 1e-12);
+        assert!((h.bin_center(3) - 0.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_rows_match_bins() {
+        let mut h = Histogram::new(0.0, 2.0, 4);
+        h.extend([0.1, 0.1, 1.9]);
+        let mut csv = CsvWriter::new(["series", "bin_center", "count"]);
+        h.to_csv_rows("mixed", &mut csv);
+        let text = csv.to_string();
+        assert!(text.contains("mixed,0.250000,2"));
+        assert!(text.contains("mixed,1.750000,1"));
+    }
+
+    #[test]
+    fn ascii_render_is_nonempty_and_peaked() {
+        let mut h = Histogram::new(0.0, 1.0, 20);
+        for i in 0..1000 {
+            h.add((i % 20) as f64 / 20.0 * 0.5 + 0.25);
+        }
+        let art = h.render_ascii(30);
+        assert!(art.contains('#'));
+    }
+}

@@ -1,0 +1,9 @@
+//! Statistics used by every experiment: histograms (the paper's figures are
+//! all histograms), summary statistics (mean/variance/quantiles), and the
+//! bias / mean-squared-error measures reported in Figures 2–4.
+
+pub mod histogram;
+pub mod summary;
+
+pub use histogram::Histogram;
+pub use summary::Summary;

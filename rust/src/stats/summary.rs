@@ -1,0 +1,147 @@
+//! Summary statistics: mean, variance, quantiles, bias and MSE against a
+//! known ground truth — the numbers printed in the corner of every figure
+//! in the paper.
+
+/// Running summary over a sample of f64 observations.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    xs: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_iter(xs: impl IntoIterator<Item = f64>) -> Self {
+        Self {
+            xs: xs.into_iter().collect(),
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let m = self.mean();
+        self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Estimator bias against ground truth `truth`: `mean(x) - truth`.
+    pub fn bias(&self, truth: f64) -> f64 {
+        self.mean() - truth
+    }
+
+    /// Mean squared error against ground truth — the statistic displayed in
+    /// the corner of Figures 2–4 and 6–11.
+    pub fn mse(&self, truth: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().map(|x| (x - truth) * (x - truth)).sum::<f64>() / self.xs.len() as f64
+    }
+
+    /// Quantile by linear interpolation (`q` in [0, 1]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let frac = pos - lo as f64;
+            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        }
+    }
+
+    /// `(p50, p90, p99)` convenience for latency reporting.
+    pub fn latency_quantiles(&self) -> (f64, f64, f64) {
+        (self.quantile(0.5), self.quantile(0.9), self.quantile(0.99))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        let s = Summary::from_iter([1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.variance() - 1.25).abs() < 1e-12);
+        assert!((s.stddev() - 1.25f64.sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn mse_and_bias() {
+        let s = Summary::from_iter([0.9, 1.1]);
+        assert!((s.mse(1.0) - 0.01).abs() < 1e-12);
+        assert!(s.bias(1.0).abs() < 1e-12);
+        let biased = Summary::from_iter([1.2, 1.4]);
+        assert!((biased.bias(1.0) - 0.3).abs() < 1e-12);
+        // MSE = bias^2 + variance
+        let b = biased.bias(1.0);
+        assert!((biased.mse(1.0) - (b * b + biased.variance())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles() {
+        let s = Summary::from_iter((1..=100).map(|i| i as f64));
+        assert!((s.quantile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.quantile(1.0) - 100.0).abs() < 1e-12);
+        assert!((s.quantile(0.5) - 50.5).abs() < 1e-9);
+        let (p50, p90, p99) = s.latency_quantiles();
+        assert!(p50 < p90 && p90 < p99);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.mse(0.0).is_nan());
+        assert!(s.quantile(0.5).is_nan());
+    }
+}

@@ -1,0 +1,224 @@
+//! Measurement harness for `cargo bench` targets.
+//!
+//! Criterion is not available offline, so the bench binaries (declared with
+//! `harness = false`) use this module: warmup, repeated timed runs, robust
+//! statistics (median / MAD / min), throughput derivation, and an aligned
+//! table printer whose rows mirror the paper's Table 1.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-run wall time, sorted ascending.
+    pub runs_ns: Vec<u64>,
+    /// Work items per run (for throughput; 0 = unspecified).
+    pub items_per_run: u64,
+}
+
+impl Measurement {
+    pub fn median_ns(&self) -> u64 {
+        percentile(&self.runs_ns, 50.0)
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        self.runs_ns.first().copied().unwrap_or(0)
+    }
+
+    pub fn p90_ns(&self) -> u64 {
+        percentile(&self.runs_ns, 90.0)
+    }
+
+    /// Median absolute deviation — robust spread estimate.
+    pub fn mad_ns(&self) -> u64 {
+        let med = self.median_ns() as i64;
+        let mut devs: Vec<u64> = self
+            .runs_ns
+            .iter()
+            .map(|&r| (r as i64 - med).unsigned_abs())
+            .collect();
+        devs.sort_unstable();
+        percentile(&devs, 50.0)
+    }
+
+    /// Items/second at the median run time.
+    pub fn throughput(&self) -> Option<f64> {
+        if self.items_per_run == 0 || self.median_ns() == 0 {
+            return None;
+        }
+        Some(self.items_per_run as f64 / (self.median_ns() as f64 * 1e-9))
+    }
+
+    /// Nanoseconds per item at the median.
+    pub fn ns_per_item(&self) -> Option<f64> {
+        if self.items_per_run == 0 {
+            return None;
+        }
+        Some(self.median_ns() as f64 / self.items_per_run as f64)
+    }
+}
+
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p / 100.0).round() as usize;
+    sorted[idx]
+}
+
+/// Bench configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup_runs: usize,
+    pub runs: usize,
+    pub min_total: Duration,
+    quick: bool,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // MIXTAB_BENCH_QUICK=1 shrinks benches for CI/smoke use.
+        let quick = std::env::var("MIXTAB_BENCH_QUICK").ok().as_deref() == Some("1");
+        Self {
+            warmup_runs: if quick { 1 } else { 3 },
+            runs: if quick { 3 } else { 15 },
+            min_total: Duration::from_millis(if quick { 1 } else { 50 }),
+            quick,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when running in quick/smoke mode.
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Measure `f`, which performs `items` units of work per call.
+    /// The closure's return value is black-boxed to defeat DCE.
+    pub fn measure<T>(&self, name: &str, items: u64, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup_runs {
+            black_box(f());
+        }
+        let mut runs_ns = Vec::with_capacity(self.runs);
+        let total_start = Instant::now();
+        for i in 0..self.runs.max(1) {
+            let t = Instant::now();
+            black_box(f());
+            runs_ns.push(t.elapsed().as_nanos() as u64);
+            // Keep going past `runs` only if we haven't hit min_total yet.
+            if i + 1 >= self.runs && total_start.elapsed() >= self.min_total {
+                break;
+            }
+        }
+        runs_ns.sort_unstable();
+        Measurement {
+            name: name.to_string(),
+            runs_ns,
+            items_per_run: items,
+        }
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Human-readable rate.
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2}G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2}M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2}K/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.2}/s")
+    }
+}
+
+/// Print a set of measurements as an aligned table.
+pub fn print_table(title: &str, rows: &[Measurement]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<26} {:>12} {:>12} {:>12} {:>14} {:>12}",
+        "name", "median", "min", "p90", "throughput", "ns/item"
+    );
+    for m in rows {
+        println!(
+            "{:<26} {:>12} {:>12} {:>12} {:>14} {:>12}",
+            m.name,
+            fmt_ns(m.median_ns()),
+            fmt_ns(m.min_ns()),
+            fmt_ns(m.p90_ns()),
+            m.throughput().map(fmt_rate).unwrap_or_else(|| "-".into()),
+            m.ns_per_item()
+                .map(|v| format!("{v:.2}"))
+                .unwrap_or_else(|| "-".into()),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_produces_sorted_runs() {
+        let b = Bench {
+            warmup_runs: 1,
+            runs: 5,
+            min_total: Duration::from_millis(0),
+            quick: true,
+        };
+        let m = b.measure("spin", 1000, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            s
+        });
+        assert!(!m.runs_ns.is_empty());
+        assert!(m.runs_ns.windows(2).all(|w| w[0] <= w[1]));
+        assert!(m.throughput().unwrap() > 0.0);
+        assert!(m.ns_per_item().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn percentile_and_mad() {
+        let m = Measurement {
+            name: "x".into(),
+            runs_ns: vec![10, 20, 30, 40, 100],
+            items_per_run: 0,
+        };
+        assert_eq!(m.median_ns(), 30);
+        assert_eq!(m.min_ns(), 10);
+        assert_eq!(m.p90_ns(), 100);
+        assert_eq!(m.mad_ns(), 10);
+        assert!(m.throughput().is_none());
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(500), "500ns");
+        assert_eq!(fmt_ns(1_500), "1.50µs");
+        assert_eq!(fmt_ns(2_500_000), "2.50ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.00s");
+        assert_eq!(fmt_rate(2.5e6), "2.50M/s");
+    }
+}

@@ -1,0 +1,190 @@
+//! Minimal length-prefixed binary serialization.
+//!
+//! Used for LSH index snapshots (`lsh::persist`) so a built index can be
+//! saved and reloaded without re-sketching the corpus. Format: explicit
+//! little-endian primitives with length-prefixed containers and a
+//! magic/version header per document — no schema evolution machinery, just
+//! enough to persist our own structures safely.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Writer over any `Write`.
+pub struct BinWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> BinWriter<W> {
+    pub fn new(w: W) -> Self {
+        Self { w }
+    }
+
+    pub fn u8(&mut self, v: u8) -> Result<()> {
+        self.w.write_all(&[v]).context("write u8")
+    }
+
+    pub fn u32(&mut self, v: u32) -> Result<()> {
+        self.w.write_all(&v.to_le_bytes()).context("write u32")
+    }
+
+    pub fn u64(&mut self, v: u64) -> Result<()> {
+        self.w.write_all(&v.to_le_bytes()).context("write u64")
+    }
+
+    pub fn f64(&mut self, v: f64) -> Result<()> {
+        self.w.write_all(&v.to_le_bytes()).context("write f64")
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        self.w.write_all(v).context("write bytes")
+    }
+
+    pub fn str(&mut self, v: &str) -> Result<()> {
+        self.bytes(v.as_bytes())
+    }
+
+    pub fn u32s(&mut self, v: &[u32]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        for &x in v {
+            self.u32(x)?;
+        }
+        Ok(())
+    }
+
+    pub fn u64s(&mut self, v: &[u64]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        for &x in v {
+            self.u64(x)?;
+        }
+        Ok(())
+    }
+
+    pub fn finish(self) -> W {
+        self.w
+    }
+}
+
+/// Reader over any `Read`.
+pub struct BinReader<R: Read> {
+    r: R,
+    /// Guard against hostile/corrupt length prefixes.
+    max_len: u64,
+}
+
+impl<R: Read> BinReader<R> {
+    pub fn new(r: R) -> Self {
+        Self {
+            r,
+            max_len: 1 << 32,
+        }
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.r.read_exact(&mut b).context("read u8")?;
+        Ok(b[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b).context("read u32")?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b).context("read u64")?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b).context("read f64")?;
+        Ok(f64::from_le_bytes(b))
+    }
+
+    fn len(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        if n > self.max_len {
+            bail!("length prefix {n} exceeds cap");
+        }
+        Ok(n as usize)
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.len()?;
+        let mut v = vec![0u8; n];
+        self.r.read_exact(&mut v).context("read bytes")?;
+        Ok(v)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?).context("utf8")
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.len()?;
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.len()?;
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(self.u64()?);
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = BinWriter::new(Vec::new());
+        w.u8(7).unwrap();
+        w.u32(0xDEAD_BEEF).unwrap();
+        w.u64(u64::MAX).unwrap();
+        w.f64(-1.5).unwrap();
+        w.str("héllo").unwrap();
+        w.u32s(&[1, 2, 3]).unwrap();
+        w.u64s(&[]).unwrap();
+        let buf = w.finish();
+        let mut r = BinReader::new(&buf[..]);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.f64().unwrap(), -1.5);
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.u32s().unwrap(), vec![1, 2, 3]);
+        assert!(r.u64s().unwrap().is_empty());
+        // EOF afterwards.
+        assert!(r.u8().is_err());
+    }
+
+    #[test]
+    fn corrupt_length_rejected() {
+        let mut w = BinWriter::new(Vec::new());
+        w.u64(u64::MAX).unwrap(); // absurd length prefix
+        let buf = w.finish();
+        let mut r = BinReader::new(&buf[..]);
+        assert!(r.bytes().is_err());
+    }
+
+    #[test]
+    fn truncated_stream_rejected() {
+        let mut w = BinWriter::new(Vec::new());
+        w.u32s(&[1, 2, 3, 4]).unwrap();
+        let mut buf = w.finish();
+        buf.truncate(buf.len() - 2);
+        let mut r = BinReader::new(&buf[..]);
+        assert!(r.u32s().is_err());
+    }
+}

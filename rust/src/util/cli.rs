@@ -1,0 +1,417 @@
+//! Declarative command-line parsing.
+//!
+//! A small, dependency-free replacement for `clap`, covering what the
+//! `mixtab` binary needs: subcommands, long/short flags, valued options with
+//! defaults, positional arguments, `--help` generation, and typed accessors.
+//!
+//! ```
+//! use mixtab::util::cli::{Command, Parsed};
+//! let cmd = Command::new("demo", "demo tool")
+//!     .flag("verbose", 'v', "enable verbose output")
+//!     .opt("seed", 's', "SEED", "random seed", Some("42"))
+//!     .positional("input", "input file", false);
+//! let parsed = cmd.parse(&["--seed".into(), "7".into(), "data.txt".into()]).unwrap();
+//! assert_eq!(parsed.get_u64("seed").unwrap(), 7);
+//! assert_eq!(parsed.positionals()[0], "data.txt");
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Specification error or user input error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    long: String,
+    short: Option<char>,
+    value_name: Option<String>, // None => boolean flag
+    help: String,
+    default: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+struct PosSpec {
+    name: String,
+    help: String,
+    required: bool,
+}
+
+/// A command (or subcommand) specification.
+#[derive(Debug, Clone)]
+pub struct Command {
+    name: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<PosSpec>,
+    subcommands: Vec<Command>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            positionals: Vec::new(),
+            subcommands: Vec::new(),
+        }
+    }
+
+    /// Add a boolean flag (`--long` / `-s`). Pass `'\0'` for no short form.
+    pub fn flag(mut self, long: &str, short: char, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            long: long.to_string(),
+            short: (short != '\0').then_some(short),
+            value_name: None,
+            help: help.to_string(),
+            default: None,
+        });
+        self
+    }
+
+    /// Add a valued option with an optional default.
+    pub fn opt(
+        mut self,
+        long: &str,
+        short: char,
+        value_name: &str,
+        help: &str,
+        default: Option<&str>,
+    ) -> Self {
+        self.opts.push(OptSpec {
+            long: long.to_string(),
+            short: (short != '\0').then_some(short),
+            value_name: Some(value_name.to_string()),
+            help: help.to_string(),
+            default: default.map(str::to_string),
+        });
+        self
+    }
+
+    /// Add a positional argument.
+    pub fn positional(mut self, name: &str, help: &str, required: bool) -> Self {
+        self.positionals.push(PosSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            required,
+        });
+        self
+    }
+
+    /// Add a subcommand.
+    pub fn subcommand(mut self, sub: Command) -> Self {
+        self.subcommands.push(sub);
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.subcommands.is_empty() {
+            s.push_str(" <SUBCOMMAND>");
+        }
+        if !self.opts.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        for p in &self.positionals {
+            if p.required {
+                s.push_str(&format!(" <{}>", p.name));
+            } else {
+                s.push_str(&format!(" [{}]", p.name));
+            }
+        }
+        s.push('\n');
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for p in &self.positionals {
+                s.push_str(&format!("  {:<18} {}\n", p.name, p.help));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let short = o.short.map(|c| format!("-{c}, ")).unwrap_or_default();
+                let val = o
+                    .value_name
+                    .as_ref()
+                    .map(|v| format!(" <{v}>"))
+                    .unwrap_or_default();
+                let mut left = format!("  {short}--{}{val}", o.long);
+                if let Some(d) = &o.default {
+                    left.push_str(&format!(" [default: {d}]"));
+                }
+                s.push_str(&format!("{left:<44} {}\n", o.help));
+            }
+        }
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for sub in &self.subcommands {
+                s.push_str(&format!("  {:<18} {}\n", sub.name, sub.about));
+            }
+        }
+        s
+    }
+
+    /// Parse an argument vector (excluding argv[0]).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        let mut positionals: Vec<String> = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                values.insert(o.long.clone(), d.clone());
+            }
+            if o.value_name.is_none() {
+                flags.insert(o.long.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if arg == "--help" || arg == "-h" {
+                return Ok(Parsed {
+                    command: self.name.clone(),
+                    help_requested: true,
+                    values,
+                    flags,
+                    positionals,
+                    subcommand: None,
+                });
+            }
+            if !self.subcommands.is_empty() && !arg.starts_with('-') && positionals.is_empty() {
+                let sub = self
+                    .subcommands
+                    .iter()
+                    .find(|s| s.name == *arg)
+                    .ok_or_else(|| CliError(format!("unknown subcommand '{arg}'")))?;
+                let rest = sub.parse(&args[i + 1..])?;
+                return Ok(Parsed {
+                    command: self.name.clone(),
+                    help_requested: rest.help_requested,
+                    values,
+                    flags,
+                    positionals,
+                    subcommand: Some((sub.name.clone(), Box::new(rest))),
+                });
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.long == name)
+                    .ok_or_else(|| CliError(format!("unknown option '--{name}'")))?;
+                if spec.value_name.is_some() {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("option '--{name}' needs a value")))?
+                        }
+                    };
+                    values.insert(name, val);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError(format!("flag '--{name}' takes no value")));
+                    }
+                    flags.insert(name, true);
+                }
+            } else if let Some(stripped) = arg.strip_prefix('-') {
+                if stripped.is_empty() {
+                    positionals.push(arg.clone());
+                } else {
+                    for (ci, c) in stripped.chars().enumerate() {
+                        let spec = self
+                            .opts
+                            .iter()
+                            .find(|o| o.short == Some(c))
+                            .ok_or_else(|| CliError(format!("unknown option '-{c}'")))?;
+                        if spec.value_name.is_some() {
+                            // -s VALUE or -sVALUE
+                            let rest: String = stripped.chars().skip(ci + 1).collect();
+                            let val = if !rest.is_empty() {
+                                rest
+                            } else {
+                                i += 1;
+                                args.get(i).cloned().ok_or_else(|| {
+                                    CliError(format!("option '-{c}' needs a value"))
+                                })?
+                            };
+                            values.insert(spec.long.clone(), val);
+                            break;
+                        } else {
+                            flags.insert(spec.long.clone(), true);
+                        }
+                    }
+                }
+            } else {
+                positionals.push(arg.clone());
+            }
+            i += 1;
+        }
+        let required = self.positionals.iter().filter(|p| p.required).count();
+        if positionals.len() < required {
+            return Err(CliError(format!(
+                "missing required argument <{}>",
+                self.positionals[positionals.len()].name
+            )));
+        }
+        Ok(Parsed {
+            command: self.name.clone(),
+            help_requested: false,
+            values,
+            flags,
+            positionals,
+            subcommand: None,
+        })
+    }
+}
+
+/// The result of parsing.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    command: String,
+    help_requested: bool,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+    subcommand: Option<(String, Box<Parsed>)>,
+}
+
+impl Parsed {
+    pub fn command(&self) -> &str {
+        &self.command
+    }
+
+    pub fn help_requested(&self) -> bool {
+        self.help_requested
+    }
+
+    /// `(name, parsed)` of the chosen subcommand, if any.
+    pub fn subcommand(&self) -> Option<(&str, &Parsed)> {
+        self.subcommand.as_ref().map(|(n, p)| (n.as_str(), &**p))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.parse_with(name, |s| s.parse::<u64>().ok())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.parse_with(name, |s| s.parse::<usize>().ok())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.parse_with(name, |s| s.parse::<f64>().ok())
+    }
+
+    fn parse_with<T>(&self, name: &str, f: impl Fn(&str) -> Option<T>) -> Result<T, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError(format!("missing option '--{name}'")))?;
+        f(raw).ok_or_else(|| CliError(format!("invalid value '{raw}' for '--{name}'")))
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn demo() -> Command {
+        Command::new("demo", "test tool")
+            .flag("verbose", 'v', "verbose")
+            .opt("seed", 's', "SEED", "seed", Some("42"))
+            .opt("out", '\0', "PATH", "output", None)
+            .positional("input", "input file", false)
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = demo().parse(&[]).unwrap();
+        assert_eq!(p.get_u64("seed").unwrap(), 42);
+        assert!(!p.flag("verbose"));
+        assert!(p.get("out").is_none());
+    }
+
+    #[test]
+    fn long_and_short_forms() {
+        let p = demo().parse(&strs(&["--seed", "7", "-v", "file.txt"])).unwrap();
+        assert_eq!(p.get_u64("seed").unwrap(), 7);
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positionals(), &["file.txt".to_string()]);
+        let p = demo().parse(&strs(&["--seed=9"])).unwrap();
+        assert_eq!(p.get_u64("seed").unwrap(), 9);
+        let p = demo().parse(&strs(&["-s", "11"])).unwrap();
+        assert_eq!(p.get_u64("seed").unwrap(), 11);
+        let p = demo().parse(&strs(&["-s11"])).unwrap();
+        assert_eq!(p.get_u64("seed").unwrap(), 11);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(demo().parse(&strs(&["--nope"])).is_err());
+        assert!(demo().parse(&strs(&["-z"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(demo().parse(&strs(&["--seed"])).is_err());
+    }
+
+    #[test]
+    fn subcommands() {
+        let cmd = Command::new("mixtab", "root")
+            .subcommand(demo())
+            .subcommand(Command::new("other", "other sub"));
+        let p = cmd.parse(&strs(&["demo", "--seed", "3"])).unwrap();
+        let (name, sub) = p.subcommand().unwrap();
+        assert_eq!(name, "demo");
+        assert_eq!(sub.get_u64("seed").unwrap(), 3);
+        assert!(cmd.parse(&strs(&["bogus"])).is_err());
+    }
+
+    #[test]
+    fn help_flag() {
+        let p = demo().parse(&strs(&["--help"])).unwrap();
+        assert!(p.help_requested());
+        let text = demo().help_text();
+        assert!(text.contains("--seed"));
+        assert!(text.contains("default: 42"));
+    }
+
+    #[test]
+    fn required_positional() {
+        let cmd = Command::new("x", "x").positional("file", "f", true);
+        assert!(cmd.parse(&[]).is_err());
+        assert!(cmd.parse(&strs(&["a.txt"])).is_ok());
+    }
+}

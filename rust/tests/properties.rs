@@ -1,0 +1,203 @@
+//! Property-based tests over the whole stack (first-party `util::prop`
+//! framework with shrinking).
+
+use mixtab::hash::HashFamily;
+use mixtab::sketch::densify::{densify, DensifyMode, OFFSET_C};
+use mixtab::sketch::estimators::{bbit_correct, jaccard_exact, jaccard_sorted};
+use mixtab::sketch::feature_hash::{FeatureHasher, SignMode};
+use mixtab::sketch::oph::{BinLayout, OneHashSketcher, EMPTY_BIN};
+use mixtab::util::prop::{pair, Gen, Runner};
+use mixtab::util::rng::Xoshiro256;
+
+fn set_gen(max_len: usize) -> Gen<Vec<u32>> {
+    Gen::vec_of(Gen::u32_any(), 1, max_len)
+}
+
+#[test]
+fn prop_hash_deterministic_all_families() {
+    for fam in HashFamily::TABLE1 {
+        let h1 = fam.build(123);
+        let h2 = fam.build(123);
+        let cases = if *fam == HashFamily::Blake2 { 32 } else { 256 };
+        Runner::new(cases).run(&format!("determinism {}", fam.id()), Gen::u32_any(), |&x| {
+            h1.hash(x) == h2.hash(x)
+        });
+    }
+}
+
+#[test]
+fn prop_oph_estimate_in_unit_interval() {
+    let sk = OneHashSketcher::new(
+        HashFamily::MixedTab.build(5),
+        64,
+        BinLayout::Mod,
+        DensifyMode::Paper,
+    );
+    Runner::new(64).run(
+        "estimate ∈ [0,1]",
+        pair(set_gen(200), set_gen(200)),
+        |(a, b)| {
+            let e = sk.estimate(&sk.sketch(a), &sk.sketch(b));
+            (0.0..=1.0).contains(&e)
+        },
+    );
+}
+
+#[test]
+fn prop_oph_self_similarity_is_one() {
+    let sk = OneHashSketcher::new(
+        HashFamily::MixedTab.build(9),
+        128,
+        BinLayout::Mod,
+        DensifyMode::Paper,
+    );
+    Runner::new(64).run("J(A,A) = 1", set_gen(300), |a| {
+        sk.estimate(&sk.sketch(a), &sk.sketch(a)) == 1.0
+    });
+}
+
+#[test]
+fn prop_densified_sketch_never_empty() {
+    let sk = OneHashSketcher::new(
+        HashFamily::MixedTab.build(13),
+        200,
+        BinLayout::Mod,
+        DensifyMode::Paper,
+    );
+    Runner::new(96).run("no empty bins", set_gen(50), |a| {
+        sk.sketch(a).bins.iter().all(|&b| b != EMPTY_BIN)
+    });
+}
+
+#[test]
+fn prop_densify_preserves_filled_bins() {
+    // For arbitrary fill patterns, original values survive densification
+    // and copies always carry a positive multiple of OFFSET_C.
+    let patt = Gen::vec_of(Gen::u64_below(1 << 20), 2, 24);
+    Runner::new(128).run("densify preserves", patt, |vals| {
+        // Mark ~half empty deterministically from values.
+        let mut bins: Vec<u64> = vals
+            .iter()
+            .map(|&v| if v % 3 == 0 { EMPTY_BIN } else { v })
+            .collect();
+        let dirs: Vec<bool> = vals.iter().map(|&v| v % 2 == 0).collect();
+        let before = bins.clone();
+        densify(&mut bins, &dirs, DensifyMode::Paper);
+        before.iter().zip(&bins).all(|(&b, &a)| {
+            if b != EMPTY_BIN {
+                a == b
+            } else if before.iter().all(|&x| x == EMPTY_BIN) {
+                a == EMPTY_BIN
+            } else {
+                // copied: a = source + j*C with source < 2^20 << C
+                a == EMPTY_BIN || (a % OFFSET_C) < (1 << 20) && a / OFFSET_C >= 1
+            }
+        })
+    });
+}
+
+#[test]
+fn prop_fh_linearity() {
+    let fh = FeatureHasher::new(HashFamily::MixedTab, 3, 64, SignMode::Paired);
+    Runner::new(48).run("FH additive", pair(set_gen(60), set_gen(60)), |(a, b)| {
+        let va = mixtab::data::SparseVector::unit_indicator(a);
+        let vb = mixtab::data::SparseVector::unit_indicator(b);
+        let sum = va.add(&vb);
+        let ta = fh.transform(&va);
+        let tb = fh.transform(&vb);
+        let ts = fh.transform(&sum);
+        (0..64).all(|i| (ts[i] - (ta[i] + tb[i])).abs() < 1e-9)
+    });
+}
+
+#[test]
+fn prop_fh_scaling() {
+    let fh = FeatureHasher::new(HashFamily::Murmur3, 7, 32, SignMode::Separate);
+    Runner::new(48).run("FH homogeneous", pair(set_gen(40), Gen::u64_below(1000)), |(a, c)| {
+        let scale = *c as f64 / 100.0 + 0.1;
+        let v = mixtab::data::SparseVector::unit_indicator(a);
+        let scaled = mixtab::data::SparseVector::new(
+            v.indices.clone(),
+            v.values.iter().map(|x| x * scale).collect(),
+        );
+        let tv = fh.transform(&v);
+        let ts = fh.transform(&scaled);
+        (0..32).all(|i| (ts[i] - scale * tv[i]).abs() < 1e-9)
+    });
+}
+
+#[test]
+fn prop_jaccard_symmetry_and_bounds() {
+    Runner::new(128).run("J symmetric ∈ [0,1]", pair(set_gen(100), set_gen(100)), |(a, b)| {
+        let j1 = jaccard_exact(a, b);
+        let j2 = jaccard_exact(b, a);
+        j1 == j2 && (0.0..=1.0).contains(&j1)
+    });
+}
+
+#[test]
+fn prop_jaccard_sorted_matches_exact() {
+    Runner::new(128).run("sorted == exact", pair(set_gen(80), set_gen(80)), |(a, b)| {
+        let mut sa = a.clone();
+        sa.sort_unstable();
+        sa.dedup();
+        let mut sb = b.clone();
+        sb.sort_unstable();
+        sb.dedup();
+        (jaccard_sorted(&sa, &sb) - jaccard_exact(a, b)).abs() < 1e-12
+    });
+}
+
+#[test]
+fn prop_bbit_correction_bounds() {
+    Runner::new(256).run(
+        "bbit correction clamps to [-1,1]",
+        pair(Gen::u64_below(1001), Gen::u64_below(8)),
+        |(f, b)| {
+            let frac = *f as f64 / 1000.0;
+            let est = bbit_correct(frac, *b as u32 + 1);
+            (-1.0..=1.0).contains(&est)
+        },
+    );
+}
+
+#[test]
+fn prop_mixed_tab_64_halves_deterministic() {
+    let h = HashFamily::MixedTab.build64(21);
+    Runner::new(128).run("hash64 deterministic", Gen::u32_any(), |&x| {
+        h.hash64(x) == h.hash64(x)
+    });
+}
+
+#[test]
+fn prop_hash_slice_consistency() {
+    for fam in [HashFamily::MixedTab, HashFamily::MultiplyShift, HashFamily::Poly2] {
+        let h = fam.build(31);
+        Runner::new(32).run(
+            &format!("slice == scalar {}", fam.id()),
+            Gen::vec_of(Gen::u32_any(), 1, 64),
+            |keys| {
+                let mut out = vec![0u32; keys.len()];
+                h.hash_slice(keys, &mut out);
+                keys.iter().zip(&out).all(|(&k, &o)| h.hash(k) == o)
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_sparse_vector_invariants() {
+    Runner::new(128).run("SparseVector sorted+dedup", set_gen(100), |ids| {
+        let v = mixtab::data::SparseVector::unit_indicator(ids);
+        v.indices.windows(2).all(|w| w[0] < w[1]) && (v.norm2() - 1.0).abs() < 1e-9
+    });
+}
+
+#[test]
+fn prop_rng_below_bound() {
+    Runner::new(256).run("below() respects bound", Gen::u64_below(1 << 40), |&b| {
+        let bound = b + 1;
+        let mut rng = Xoshiro256::new(b);
+        (0..16).all(|_| rng.below(bound) < bound)
+    });
+}

@@ -1,0 +1,174 @@
+//! Runtime integration: every AOT artifact loads, compiles and executes on
+//! the PJRT CPU client, and the PJRT FH path agrees with the native Rust
+//! path to f32 rounding. Skips (with a notice) when `artifacts/` is absent —
+//! run `make artifacts` first.
+
+use mixtab::data::SparseVector;
+use mixtab::hash::HashFamily;
+use mixtab::runtime::artifact::{ArtifactKind, Manifest};
+use mixtab::runtime::executor::ExecutorHandle;
+use mixtab::runtime::pjrt::PjrtEngine;
+use mixtab::sketch::feature_hash::{FeatureHasher, SignMode};
+use mixtab::sketch::oph::{BinLayout, OneHashSketcher};
+use mixtab::sketch::DensifyMode;
+use mixtab::util::rng::Xoshiro256;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn every_artifact_compiles_and_runs() {
+    let Some(m) = manifest() else { return };
+    let engine = PjrtEngine::load(&m).expect("engine");
+    assert_eq!(engine.names().len(), m.artifacts.len());
+    for meta in &m.artifacts {
+        match meta.kind {
+            ArtifactKind::Fh { batch, nnz, dim } => {
+                let bins = vec![0i32; batch * nnz];
+                let vals = vec![0f32; batch * nnz];
+                let out = engine.run_fh(&meta.name, &bins, &vals).expect("run fh");
+                assert_eq!(out.out.len(), batch * dim);
+                assert!(out.out.iter().all(|&x| x == 0.0));
+                assert!(out.sqnorm.iter().all(|&x| x == 0.0));
+            }
+            ArtifactKind::Oph { batch, nnz, k } => {
+                let h = vec![0i32; batch * nnz];
+                let valid = vec![0i32; batch * nnz];
+                let sk = engine.run_oph(&meta.name, &h, &valid).expect("run oph");
+                assert_eq!(sk.len(), batch * k);
+                assert!(sk.iter().all(|&x| x == i32::MAX), "padding ⇒ all empty");
+            }
+        }
+    }
+}
+
+/// PJRT FH output ≡ native Rust FH output (f32 tolerance) across random
+/// sparse vectors — the bit-compatibility contract the coordinator's
+/// fallback relies on.
+#[test]
+fn pjrt_fh_matches_native_path() {
+    let Some(m) = manifest() else { return };
+    let Some(meta) = m.find_fh(128, 512).cloned() else {
+        eprintln!("SKIP: no fh d'=128 artifact");
+        return;
+    };
+    let ArtifactKind::Fh { batch, nnz, dim } = meta.kind else {
+        unreachable!()
+    };
+    let engine = PjrtEngine::load(&Manifest {
+        artifacts: vec![meta.clone()],
+    })
+    .expect("engine");
+
+    let fh = FeatureHasher::new(HashFamily::MixedTab, 42, dim, SignMode::Paired);
+    let mut rng = Xoshiro256::new(17);
+    // Build a batch of random sparse vectors.
+    let mut vectors = Vec::new();
+    for _ in 0..batch {
+        let nnz_v = rng.range(1, 400);
+        let idx: Vec<u32> = (0..nnz_v).map(|_| rng.next_u32() % 1_000_000).collect();
+        let val: Vec<f64> = (0..nnz_v).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+        vectors.push(SparseVector::new(idx, val));
+    }
+    let mut bins_flat = Vec::with_capacity(batch * nnz);
+    let mut vals_flat = Vec::with_capacity(batch * nnz);
+    for v in &vectors {
+        let (mut b, mut x) = fh.plan(v, nnz);
+        bins_flat.append(&mut b);
+        vals_flat.append(&mut x);
+    }
+    let out = engine
+        .run_fh(&meta.name, &bins_flat, &vals_flat)
+        .expect("run");
+    for (r, v) in vectors.iter().enumerate() {
+        let native = fh.transform(v);
+        let row = &out.out[r * dim..(r + 1) * dim];
+        for d in 0..dim {
+            assert!(
+                (row[d] as f64 - native[d]).abs() < 1e-4,
+                "row {r} dim {d}: pjrt {} native {}",
+                row[d],
+                native[d]
+            );
+        }
+        let native_sq: f64 = native.iter().map(|x| x * x).sum();
+        assert!(
+            (out.sqnorm[r] as f64 - native_sq).abs() < 1e-3,
+            "row {r} sqnorm"
+        );
+    }
+}
+
+/// PJRT OPH raw sketch ≡ native raw sketch (same mod-layout arithmetic).
+#[test]
+fn pjrt_oph_matches_native_sketch() {
+    let Some(m) = manifest() else { return };
+    let Some(meta) = m.find_oph(200, 512).cloned() else {
+        eprintln!("SKIP: no oph k=200 artifact");
+        return;
+    };
+    let ArtifactKind::Oph { batch, nnz, k } = meta.kind else {
+        unreachable!()
+    };
+    let engine = PjrtEngine::load(&Manifest {
+        artifacts: vec![meta.clone()],
+    })
+    .expect("engine");
+
+    let hasher = HashFamily::MixedTab.build(7);
+    let sketcher = OneHashSketcher::new(
+        HashFamily::MixedTab.build(7),
+        k,
+        BinLayout::Mod,
+        DensifyMode::None,
+    );
+    let mut rng = Xoshiro256::new(23);
+    let mut h_flat = vec![0i32; batch * nnz];
+    let mut valid_flat = vec![0i32; batch * nnz];
+    let mut sets = Vec::new();
+    for r in 0..batch {
+        let n = rng.range(10, nnz.min(400));
+        let set: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        for (i, &x) in set.iter().enumerate() {
+            h_flat[r * nnz + i] = hasher.hash(x) as i32;
+            valid_flat[r * nnz + i] = 1;
+        }
+        sets.push(set);
+    }
+    let sk = engine
+        .run_oph(&meta.name, &h_flat, &valid_flat)
+        .expect("run");
+    for (r, set) in sets.iter().enumerate() {
+        let native = sketcher.sketch_raw(set);
+        for j in 0..k {
+            let pjrt_v = sk[r * k + j];
+            let native_v = native.bins[j];
+            if native_v == mixtab::sketch::EMPTY_BIN {
+                assert_eq!(pjrt_v, i32::MAX, "row {r} bin {j} should be empty");
+            } else {
+                assert_eq!(pjrt_v as u64, native_v, "row {r} bin {j}");
+            }
+        }
+    }
+}
+
+#[test]
+fn executor_handle_roundtrip_and_errors() {
+    let Some(m) = manifest() else { return };
+    let exec = ExecutorHandle::spawn(m.clone()).expect("spawn");
+    assert_eq!(exec.artifact_names().len(), m.artifacts.len());
+    // Unknown artifact name errors cleanly.
+    assert!(exec.run_fh("nope", vec![], vec![]).is_err());
+    // Wrong input size errors cleanly.
+    let fh_name = m.find_fh(128, 512).map(|a| a.name.clone());
+    if let Some(name) = fh_name {
+        assert!(exec.run_fh(&name, vec![0; 3], vec![0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! Cross-module sketch integration: OPH vs MinHash agreement, estimator
+//! quality on the paper's data shapes, FH vs the theory bounds.
+
+use mixtab::data::synthetic::{dataset1, dataset2};
+use mixtab::data::SparseVector;
+use mixtab::hash::HashFamily;
+use mixtab::sketch::feature_hash::{FeatureHasher, SignMode};
+use mixtab::sketch::minhash::MinHash;
+use mixtab::sketch::oph::{BinLayout, OneHashSketcher};
+use mixtab::sketch::{jaccard_exact, DensifyMode};
+use mixtab::stats::Summary;
+use mixtab::util::rng::Xoshiro256;
+
+fn oph(seed: u64, k: usize) -> OneHashSketcher {
+    OneHashSketcher::new(
+        HashFamily::MixedTab.build(seed),
+        k,
+        BinLayout::Mod,
+        DensifyMode::Paper,
+    )
+}
+
+/// OPH (densified) and k×MinHash estimate the same quantity: their means
+/// over seeds agree with each other and the truth.
+#[test]
+fn oph_and_minhash_agree_on_random_sets() {
+    let mut rng = Xoshiro256::new(11);
+    let a: Vec<u32> = (0..2000).map(|_| rng.next_u32() % 50_000).collect();
+    let b: Vec<u32> = a
+        .iter()
+        .map(|&x| if x % 2 == 0 { x } else { x.wrapping_add(60_000) })
+        .collect();
+    let truth = jaccard_exact(&a, &b);
+    let reps = 40;
+    let (mut s_oph, mut s_mh) = (Summary::new(), Summary::new());
+    for seed in 0..reps {
+        let sk = oph(seed, 128);
+        s_oph.add(sk.estimate(&sk.sketch(&a), &sk.sketch(&b)));
+        let mh = MinHash::new(HashFamily::MixedTab, seed, 128);
+        s_mh.add(mh.estimate(&mh.sketch(&a), &mh.sketch(&b)));
+    }
+    assert!((s_oph.mean() - truth).abs() < 0.04, "oph {} truth {truth}", s_oph.mean());
+    assert!((s_mh.mean() - truth).abs() < 0.04, "mh {} truth {truth}", s_mh.mean());
+    assert!((s_oph.mean() - s_mh.mean()).abs() < 0.05);
+}
+
+/// Reproduces the §4.1 mechanism end-to-end at miniature scale: on the
+/// dense-intersection dataset, multiply-shift OPH over-estimates J while
+/// mixed tabulation stays centred (the Figure 2 shape).
+#[test]
+fn structured_data_bias_contrast() {
+    let mut rng = Xoshiro256::new(3);
+    let pair = dataset1(1000, true, &mut rng);
+    let reps = 150;
+    let estimate_with = |fam: HashFamily| {
+        let mut s = Summary::new();
+        for seed in 0..reps {
+            let sk = OneHashSketcher::new(
+                fam.build(seed * 7 + 1),
+                200,
+                BinLayout::Mod,
+                DensifyMode::Paper,
+            );
+            s.add(sk.estimate(&sk.sketch(&pair.a), &sk.sketch(&pair.b)));
+        }
+        s
+    };
+    let ms = estimate_with(HashFamily::MultiplyShift);
+    let mt = estimate_with(HashFamily::MixedTab);
+    // Mixed tabulation: small MSE, centred.
+    assert!(
+        (mt.mean() - pair.jaccard).abs() < 0.03,
+        "mixed mean {} truth {}",
+        mt.mean(),
+        pair.jaccard
+    );
+    // Multiply-shift: higher MSE on this structured input (paper Figure 2).
+    assert!(
+        ms.mse(pair.jaccard) > mt.mse(pair.jaccard),
+        "ms mse {:.2e} vs mt mse {:.2e}",
+        ms.mse(pair.jaccard),
+        mt.mse(pair.jaccard)
+    );
+}
+
+/// Dataset 2 shows the same contrast (Figure 8's stronger version).
+#[test]
+fn dataset2_bias_contrast() {
+    let mut rng = Xoshiro256::new(5);
+    let pair = dataset2(1000, true, &mut rng);
+    let reps = 120;
+    let mse_with = |fam: HashFamily| {
+        let mut s = Summary::new();
+        for seed in 0..reps {
+            let sk = OneHashSketcher::new(
+                fam.build(seed * 13 + 5),
+                200,
+                BinLayout::Mod,
+                DensifyMode::Paper,
+            );
+            s.add(sk.estimate(&sk.sketch(&pair.a), &sk.sketch(&pair.b)));
+        }
+        s.mse(pair.jaccard)
+    };
+    let ms = mse_with(HashFamily::MultiplyShift);
+    let mt = mse_with(HashFamily::MixedTab);
+    assert!(ms > mt, "dataset2: ms {ms:.2e} should exceed mt {mt:.2e}");
+}
+
+/// Theorem 1 sanity: with mixed tabulation and d' = 16·ε⁻²·lg(1/δ), the
+/// norm concentrates within 1±ε for ≫ 1−4δ of seeds on a sparse unit
+/// vector respecting the ‖v‖∞ bound.
+#[test]
+fn theorem1_concentration_gate() {
+    let eps = 0.5;
+    let delta = 0.05f64;
+    let dprime = (16.0 / (eps * eps) * (1.0 / delta).log2()).ceil() as usize; // 277
+    let v = SparseVector::unit_indicator(&(0..4000u32).collect::<Vec<_>>());
+    // ‖v‖∞ = 1/63 — comfortably under the Theorem 1 bound for these params.
+    let reps = 200;
+    let mut within = 0;
+    let mut scratch = Vec::new();
+    for seed in 0..reps {
+        let fh = FeatureHasher::new(HashFamily::MixedTab, seed, dprime, SignMode::Paired);
+        let sq = fh.squared_norm(&v, &mut scratch);
+        if (sq - 1.0).abs() < eps {
+            within += 1;
+        }
+    }
+    let frac = within as f64 / reps as f64;
+    assert!(
+        frac > 1.0 - 4.0 * delta,
+        "concentration {frac} < {}",
+        1.0 - 4.0 * delta
+    );
+}
+
+/// The h* single-hash variant (Corollary 1) agrees with the two-hash
+/// variant in distribution: means and MSEs within noise of each other.
+#[test]
+fn paired_vs_separate_sign_equivalent_quality() {
+    let v = SparseVector::unit_indicator(&(0..1500u32).map(|i| i * 3).collect::<Vec<_>>());
+    let reps = 120;
+    let run = |mode: SignMode| {
+        let mut s = Summary::new();
+        let mut scratch = Vec::new();
+        for seed in 0..reps {
+            let fh = FeatureHasher::new(HashFamily::MixedTab, seed, 128, mode);
+            s.add(fh.squared_norm(&v, &mut scratch));
+        }
+        s
+    };
+    let sep = run(SignMode::Separate);
+    let pair = run(SignMode::Paired);
+    assert!((sep.mean() - 1.0).abs() < 0.05);
+    assert!((pair.mean() - 1.0).abs() < 0.05);
+    let ratio = sep.mse(1.0) / pair.mse(1.0);
+    assert!(
+        (0.3..3.0).contains(&ratio),
+        "sign-mode MSE ratio {ratio} out of family"
+    );
+}
+
+/// Densification modes: [33] (Paper) has no worse MSE than [32] (Rotation)
+/// in the sparse regime it was designed for.
+#[test]
+fn paper_densification_not_worse_than_rotation() {
+    let mut rng = Xoshiro256::new(9);
+    let pair = dataset1(100, true, &mut rng); // sparse: ~150 elements, k=200
+    let reps = 250;
+    let mse_with = |mode: DensifyMode| {
+        let mut s = Summary::new();
+        for seed in 0..reps {
+            let sk = OneHashSketcher::new(
+                HashFamily::MixedTab.build(seed * 3 + 11),
+                200,
+                BinLayout::Mod,
+                mode,
+            );
+            s.add(sk.estimate(&sk.sketch(&pair.a), &sk.sketch(&pair.b)));
+        }
+        s.mse(pair.jaccard)
+    };
+    let paper = mse_with(DensifyMode::Paper);
+    let rotation = mse_with(DensifyMode::Rotation);
+    assert!(
+        paper <= rotation * 1.25,
+        "paper densification {paper:.2e} vs rotation {rotation:.2e}"
+    );
+}
