@@ -21,10 +21,11 @@ use mixtab::coordinator::server::{Client, Server};
 use mixtab::coordinator::Coordinator;
 use mixtab::data::news20_like::{self, News20LikeParams};
 use mixtab::stats::Summary;
+use mixtab::{bail, ensure};
 use std::sync::Arc;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mixtab::Result<()> {
     let n_docs = 480;
     let clients = 6;
 
@@ -57,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     let handles: Vec<_> = (0..clients)
         .map(|c| {
             let docs = Arc::clone(&docs);
-            std::thread::spawn(move || -> anyhow::Result<(Summary, usize, usize)> {
+            std::thread::spawn(move || -> mixtab::Result<(Summary, usize, usize)> {
                 let mut client = Client::connect(addr)?;
                 let mut lat = Summary::new();
                 let (mut pjrt_rows, mut native_rows) = (0usize, 0usize);
@@ -73,14 +74,14 @@ fn main() -> anyhow::Result<()> {
                     lat.add(t.elapsed().as_micros() as f64);
                     match resp {
                         Response::Fh { out, sqnorm, path } => {
-                            anyhow::ensure!(out.len() == 128, "wrong dim");
-                            anyhow::ensure!(sqnorm.is_finite());
+                            ensure!(out.len() == 128, "wrong dim");
+                            ensure!(sqnorm.is_finite());
                             match path {
                                 ExecPath::Pjrt => pjrt_rows += 1,
                                 ExecPath::Native => native_rows += 1,
                             }
                         }
-                        other => anyhow::bail!("unexpected response {other:?}"),
+                        other => bail!("unexpected response {other:?}"),
                     }
                 }
                 Ok((lat, pjrt_rows, native_rows))
@@ -115,11 +116,11 @@ fn main() -> anyhow::Result<()> {
             values: v.values.clone(),
         })?
         else {
-            anyhow::bail!("bad response");
+            bail!("bad response");
         };
         let native = fh.transform(v);
         for (a, b) in out.iter().zip(&native) {
-            anyhow::ensure!((*a as f64 - b).abs() < 1e-4, "layer disagreement: {a} vs {b}");
+            ensure!((*a as f64 - b).abs() < 1e-4, "layer disagreement: {a} vs {b}");
         }
     }
     println!("      PJRT ≡ native on 20 spot-checked documents ✓");
@@ -134,7 +135,7 @@ fn main() -> anyhow::Result<()> {
     println!("latency p50/p90/p99 : {p50:.0} / {p90:.0} / {p99:.0} µs");
     println!("mean batch occupancy: {occupancy:.2} rows/batch");
     if pjrt {
-        anyhow::ensure!(total_pjrt > 0, "pjrt path never used despite being live");
+        ensure!(total_pjrt > 0, "pjrt path never used despite being live");
     }
     println!("\nfh_service OK");
     server.stop();

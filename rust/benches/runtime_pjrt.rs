@@ -13,6 +13,10 @@ use mixtab::util::rng::Xoshiro256;
 use std::hint::black_box;
 
 fn main() {
+    if cfg!(not(feature = "xla")) {
+        println!("runtime_pjrt: built without the `xla` feature (stub engine); skipping");
+        return;
+    }
     let bench = Bench::new();
     let Ok(manifest) = Manifest::load("artifacts") else {
         println!("runtime_pjrt: artifacts/ not built — run `make artifacts`; skipping");

@@ -13,7 +13,7 @@
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::artifact::ArtifactKind;
 use crate::runtime::executor::ExecutorHandle;
-use anyhow::{anyhow, Result};
+use crate::util::error::{format_err, Result};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -47,7 +47,7 @@ impl FhBatcher {
         metrics: Arc<Metrics>,
     ) -> Result<Self> {
         let ArtifactKind::Fh { batch, nnz, dim } = kind else {
-            return Err(anyhow!("batcher needs an fh artifact"));
+            return Err(format_err!("batcher needs an fh artifact"));
         };
         let (tx, rx) = std::sync::mpsc::sync_channel::<RowJob>(queue_cap);
         let name = artifact_name.to_string();
@@ -152,7 +152,7 @@ fn batcher_loop(
             Err(e) => {
                 let msg = format!("pjrt batch failed: {e}");
                 for job in jobs {
-                    let _ = job.reply.send(Err(anyhow!("{msg}")));
+                    let _ = job.reply.send(Err(format_err!("{msg}")));
                 }
             }
         }
@@ -165,6 +165,9 @@ mod tests {
     use crate::runtime::artifact::Manifest;
 
     fn artifacts_available() -> Option<Manifest> {
+        if cfg!(not(feature = "xla")) {
+            return None; // PJRT engine is a stub; ExecutorHandle::spawn would fail
+        }
         Manifest::load("artifacts").ok()
     }
 

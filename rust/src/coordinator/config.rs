@@ -31,7 +31,7 @@
 use crate::hash::HashFamily;
 use crate::sketch::feature_hash::SignMode;
 use crate::util::config::Config;
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 use std::path::{Path, PathBuf};
 
 #[derive(Debug, Clone)]

@@ -2,7 +2,7 @@
 //! the TCP front-end and the examples.
 
 use crate::util::json::{self, Json};
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 /// A client request.
 #[derive(Debug, Clone, PartialEq)]

@@ -7,7 +7,7 @@
 
 use crate::coordinator::request::{Request, Response};
 use crate::coordinator::service::Coordinator;
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};

@@ -66,7 +66,7 @@ impl Coordinator {
             match Self::start_pjrt(&cfg, &metrics) {
                 Ok(triple) => triple,
                 Err(e) => {
-                    log::warn!("PJRT unavailable, running native-only: {e}");
+                    crate::util::logging::warn!("PJRT unavailable, running native-only: {e}");
                     (None, None, None)
                 }
             }
@@ -92,14 +92,14 @@ impl Coordinator {
     fn start_pjrt(
         cfg: &CoordinatorConfig,
         metrics: &Arc<Metrics>,
-    ) -> anyhow::Result<(
+    ) -> crate::Result<(
         Option<FhBatcher>,
         Option<Arc<ExecutorHandle>>,
         Option<(String, usize, usize)>,
     )> {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         let Some(meta) = manifest.find_fh_largest(cfg.fh_dim).cloned() else {
-            anyhow::bail!("no FH artifact for d'={}", cfg.fh_dim);
+            crate::bail!("no FH artifact for d'={}", cfg.fh_dim);
         };
         // OPH artifact is optional — only variants matching cfg.oph_k help.
         let oph_artifact = manifest
@@ -157,7 +157,7 @@ impl Coordinator {
                             }
                         }
                         Err(e) => {
-                            log::warn!("pjrt oph batch failed, native fallback: {e}");
+                            crate::util::logging::warn!("pjrt oph batch failed, native fallback: {e}");
                             out.extend(chunk.iter().map(|s| self.oph.sketch(s)));
                         }
                     }
@@ -287,7 +287,7 @@ impl Coordinator {
                             };
                         }
                         Ok(Err(e)) => {
-                            log::warn!("pjrt row failed, falling back: {e}");
+                            crate::util::logging::warn!("pjrt row failed, falling back: {e}");
                         }
                         Err(_) => {}
                     }

@@ -12,7 +12,7 @@
 //! on write. Lines starting with `#` and blank lines are skipped.
 
 use crate::data::sparse::{Dataset, SparseVector};
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 

@@ -5,7 +5,7 @@ use crate::hash::HashFamily;
 use crate::stats::{Histogram, Summary};
 use crate::util::csv::{self, CsvWriter};
 use crate::util::threadpool::ThreadPool;
-use anyhow::Result;
+use crate::util::error::Result;
 use std::path::PathBuf;
 
 /// Shared experiment settings (from the CLI).

@@ -19,7 +19,7 @@ use crate::sketch::DensifyMode;
 use crate::stats::Summary;
 use crate::util::csv::{self, CsvWriter};
 use crate::util::rng::Xoshiro256;
-use anyhow::Result;
+use crate::util::error::Result;
 
 fn mse_for(
     ctx: &ExpContext,

@@ -15,7 +15,7 @@ use crate::hash::HashFamily;
 use crate::ml::logreg::TrainParams;
 use crate::ml::pipeline::FhClassifier;
 use crate::util::csv::{self, CsvWriter};
-use anyhow::Result;
+use crate::util::error::Result;
 
 pub fn run(ctx: &ExpContext) -> Result<Vec<ExpSummary>> {
     let n_docs = ctx.scaled(1200, 240);

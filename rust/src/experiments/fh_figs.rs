@@ -13,7 +13,7 @@ use crate::data::synthetic::{fh_vector1, fh_vector2};
 use crate::hash::HashFamily;
 use crate::sketch::feature_hash::{FeatureHasher, SignMode};
 use crate::util::rng::Xoshiro256;
-use anyhow::Result;
+use crate::util::error::Result;
 
 fn run_vector(
     ctx: &ExpContext,

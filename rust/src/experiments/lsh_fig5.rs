@@ -14,7 +14,7 @@ use crate::hash::HashFamily;
 use crate::lsh::metrics::{ground_truth_batch, BatchEval, QueryEval};
 use crate::lsh::{LshIndex, LshParams};
 use crate::util::csv::{self, CsvWriter};
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Hash families compared in Figure 5 (the paper plots ms vs mixed and notes
 /// poly2 ≈ ms, murmur ≈ mixed; we run all four).

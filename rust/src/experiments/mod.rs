@@ -33,7 +33,7 @@ pub mod synth2;
 pub mod ext_classify;
 pub mod ext_ablation;
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 pub use common::{ExpContext, ExpSummary};
 
 /// All experiment ids in paper order, plus the extension experiments

@@ -13,7 +13,7 @@ use crate::hash::HashFamily;
 use crate::sketch::oph::{BinLayout, OneHashSketcher};
 use crate::sketch::DensifyMode;
 use crate::util::rng::Xoshiro256;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Core: estimator distribution for one set pair at sketch size k.
 fn run_pair(

@@ -17,7 +17,7 @@ use crate::data::sparse::Dataset;
 use crate::data::{libsvm, mnist_like, news20_like};
 use crate::hash::HashFamily;
 use crate::sketch::feature_hash::{FeatureHasher, SignMode};
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Load (or synthesise) a dataset by name.
 pub fn load_dataset(ctx: &ExpContext, name: &str, n_points: usize) -> (Dataset, &'static str) {

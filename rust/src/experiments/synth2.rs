@@ -18,7 +18,7 @@ use crate::sketch::oph::{BinLayout, OneHashSketcher};
 use crate::sketch::DensifyMode;
 use crate::util::csv::{self, CsvWriter};
 use crate::util::rng::Xoshiro256;
-use anyhow::Result;
+use crate::util::error::Result;
 
 fn strong_baseline_mse(rows: &[ExpSummary]) -> f64 {
     let strong = [HashFamily::MixedTab, HashFamily::Murmur3, HashFamily::Poly20];

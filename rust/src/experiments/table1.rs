@@ -16,7 +16,7 @@ use crate::sketch::feature_hash::{FeatureHasher, SignMode};
 use crate::util::bench::{fmt_ns, Bench};
 use crate::util::csv::{self, CsvWriter};
 use crate::util::rng::Xoshiro256;
-use anyhow::Result;
+use crate::util::error::Result;
 use std::hint::black_box;
 
 pub fn run(ctx: &ExpContext) -> Result<Vec<ExpSummary>> {

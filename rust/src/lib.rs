@@ -24,9 +24,11 @@
 //!   worker pool and TCP front-end for the sketching service.
 //! * [`experiments`] — one driver per paper table/figure (Table 1, Figures
 //!   2–11) regenerating the evaluation.
-//! * [`util`] — self-contained substrate (JSON, config, CSV, RNG, thread
-//!   pool, CLI parsing, property-testing, bench harness) — the offline
-//!   registry ships none of the usual crates, so these are first-party.
+//! * [`util`] — self-contained substrate (error handling, logging, JSON,
+//!   config, CSV, RNG, thread pool, CLI parsing, property-testing, bench
+//!   harness) — the offline registry ships none of the usual crates, so
+//!   everything here is first-party, including the [`util::error`] module
+//!   behind the crate-wide [`Result`] alias.
 
 pub mod util;
 pub mod hash;
@@ -39,5 +41,8 @@ pub mod runtime;
 pub mod coordinator;
 pub mod experiments;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result type (first-party; see [`util::error`]).
+pub type Result<T> = util::error::Result<T>;
+
+/// Crate-wide error type (first-party; see [`util::error`]).
+pub use util::error::Error;

@@ -9,7 +9,7 @@
 use crate::hash::HashFamily;
 use crate::lsh::index::{LshIndex, LshParams};
 use crate::util::binio::{BinReader, BinWriter};
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 

@@ -34,7 +34,7 @@ fn cli() -> Command {
 }
 
 fn main() {
-    env_logger_lite();
+    mixtab::util::logging::init_from_env();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = cli();
     let parsed = match cmd.parse(&args) {
@@ -63,7 +63,7 @@ fn main() {
     }
 }
 
-fn run_exp(sub: &mixtab::util::cli::Parsed) -> anyhow::Result<()> {
+fn run_exp(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
     if sub.help_requested() {
         println!("{}", cli().help_text());
         return Ok(());
@@ -107,7 +107,7 @@ fn run_exp(sub: &mixtab::util::cli::Parsed) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn run_serve(sub: &mixtab::util::cli::Parsed) -> anyhow::Result<()> {
+fn run_serve(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
     let mut cfg = match sub.get("config") {
         Some(path) => CoordinatorConfig::load(path)?,
         None => CoordinatorConfig::default(),
@@ -132,7 +132,7 @@ fn run_serve(sub: &mixtab::util::cli::Parsed) -> anyhow::Result<()> {
     }
 }
 
-fn run_info() -> anyhow::Result<()> {
+fn run_info() -> mixtab::Result<()> {
     println!(
         "mixtab {} — three-layer Rust + JAX/Pallas reproduction",
         env!("CARGO_PKG_VERSION")
@@ -151,30 +151,4 @@ fn run_info() -> anyhow::Result<()> {
         Err(e) => println!("artifacts: not built ({e}) — run `make artifacts`"),
     }
     Ok(())
-}
-
-/// Minimal env_logger stand-in: honours MIXTAB_LOG=debug|info|warn.
-/// (The vendored `log` crate is built without the `std` feature, so we use
-/// a static logger with `set_logger` rather than `set_boxed_logger`.)
-fn env_logger_lite() {
-    struct L;
-    impl log::Log for L {
-        fn enabled(&self, m: &log::Metadata) -> bool {
-            m.level() <= log::max_level()
-        }
-        fn log(&self, r: &log::Record) {
-            if self.enabled(r.metadata()) {
-                eprintln!("[{}] {}", r.level(), r.args());
-            }
-        }
-        fn flush(&self) {}
-    }
-    static LOGGER: L = L;
-    let level = match std::env::var("MIXTAB_LOG").as_deref() {
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("info") => log::LevelFilter::Info,
-        _ => log::LevelFilter::Warn,
-    };
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
 }

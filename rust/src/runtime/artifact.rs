@@ -1,7 +1,7 @@
 //! Artifact manifest: what `python/compile/aot.py` exported.
 
 use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Model kind + compiled shape parameters.

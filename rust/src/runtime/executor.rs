@@ -8,7 +8,7 @@
 
 use crate::runtime::artifact::Manifest;
 use crate::runtime::pjrt::{FhBatchOut, PjrtEngine};
-use anyhow::{anyhow, Result};
+use crate::util::error::{format_err, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
 
@@ -52,7 +52,7 @@ impl ExecutorHandle {
             .expect("spawn pjrt executor");
         ready_rx
             .recv()
-            .map_err(|_| anyhow!("executor thread died during startup"))??;
+            .map_err(|_| format_err!("executor thread died during startup"))??;
         Ok(Self {
             tx,
             names,
@@ -74,8 +74,8 @@ impl ExecutorHandle {
                 vals,
                 reply,
             })
-            .map_err(|_| anyhow!("executor gone"))?;
-        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+            .map_err(|_| format_err!("executor gone"))?;
+        rx.recv().map_err(|_| format_err!("executor dropped reply"))?
     }
 
     /// Execute an OPH artifact; blocks until the batch completes.
@@ -88,8 +88,8 @@ impl ExecutorHandle {
                 valid,
                 reply,
             })
-            .map_err(|_| anyhow!("executor gone"))?;
-        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+            .map_err(|_| format_err!("executor gone"))?;
+        rx.recv().map_err(|_| format_err!("executor dropped reply"))?
     }
 }
 

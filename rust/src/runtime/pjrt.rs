@@ -7,23 +7,15 @@
 //!
 //! NOT `Send` (wraps raw PJRT pointers) — see [`super::executor`] for the
 //! thread-confined handle the coordinator uses.
+//!
+//! The engine binds to the `xla` crate, which the default offline build
+//! does not ship. It is therefore gated behind the `xla` cargo feature:
+//! without it, [`PjrtEngine::load`] fails with a clear message and every
+//! caller takes its native fallback path (the coordinator, examples and
+//! tests are all written to degrade this way). Enabling `--features xla`
+//! requires vendoring the `xla` crate — see README.md.
 
-use crate::runtime::artifact::{ArtifactKind, ArtifactMeta, Manifest};
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
-
-/// A compiled artifact plus its metadata.
-struct Compiled {
-    kind: ArtifactKind,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The engine: one PJRT CPU client with every artifact compiled.
-pub struct PjrtEngine {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    modules: HashMap<String, Compiled>,
-}
+use crate::runtime::artifact::ArtifactKind;
 
 /// FH batch output: dense rows + squared norms.
 #[derive(Debug, Clone)]
@@ -36,135 +28,227 @@ pub struct FhBatchOut {
     pub dim: usize,
 }
 
-impl PjrtEngine {
-    /// Load and compile every artifact in the manifest.
-    pub fn load(manifest: &Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let mut modules = HashMap::new();
-        for meta in &manifest.artifacts {
+#[cfg(feature = "xla")]
+mod engine {
+    use super::{ArtifactKind, FhBatchOut};
+    use crate::runtime::artifact::{ArtifactMeta, Manifest};
+    use crate::util::error::{bail, format_err, Context, Result};
+    use std::collections::HashMap;
+
+    /// A compiled artifact plus its metadata.
+    struct Compiled {
+        kind: ArtifactKind,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// The engine: one PJRT CPU client with every artifact compiled.
+    pub struct PjrtEngine {
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        modules: HashMap<String, Compiled>,
+    }
+
+    impl PjrtEngine {
+        /// Load and compile every artifact in the manifest.
+        pub fn load(manifest: &Manifest) -> Result<Self> {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| format_err!("pjrt cpu client: {e:?}"))?;
+            let mut modules = HashMap::new();
+            for meta in &manifest.artifacts {
+                let compiled = Self::compile_one(&client, meta)?;
+                modules.insert(meta.name.clone(), compiled);
+            }
+            Ok(Self { client, modules })
+        }
+
+        /// Load a single artifact (tests / benches).
+        pub fn load_one(meta: &ArtifactMeta) -> Result<Self> {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| format_err!("pjrt cpu client: {e:?}"))?;
             let compiled = Self::compile_one(&client, meta)?;
+            let mut modules = HashMap::new();
             modules.insert(meta.name.clone(), compiled);
+            Ok(Self { client, modules })
         }
-        Ok(Self { client, modules })
-    }
 
-    /// Load a single artifact (tests / benches).
-    pub fn load_one(meta: &ArtifactMeta) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let compiled = Self::compile_one(&client, meta)?;
-        let mut modules = HashMap::new();
-        modules.insert(meta.name.clone(), compiled);
-        Ok(Self { client, modules })
-    }
+        fn compile_one(client: &xla::PjRtClient, meta: &ArtifactMeta) -> Result<Compiled> {
+            let path = meta
+                .path
+                .to_str()
+                .with_context(|| format!("non-utf8 path {:?}", meta.path))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| format_err!("parse HLO text {path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| format_err!("compile {}: {e:?}", meta.name))?;
+            Ok(Compiled {
+                kind: meta.kind,
+                exe,
+            })
+        }
 
-    fn compile_one(client: &xla::PjRtClient, meta: &ArtifactMeta) -> Result<Compiled> {
-        let path = meta
-            .path
-            .to_str()
-            .with_context(|| format!("non-utf8 path {:?}", meta.path))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parse HLO text {path}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e:?}", meta.name))?;
-        Ok(Compiled {
-            kind: meta.kind,
-            exe,
-        })
-    }
+        pub fn names(&self) -> Vec<&str> {
+            self.modules.keys().map(String::as_str).collect()
+        }
 
-    pub fn names(&self) -> Vec<&str> {
-        self.modules.keys().map(String::as_str).collect()
-    }
+        pub fn kind(&self, name: &str) -> Option<ArtifactKind> {
+            self.modules.get(name).map(|c| c.kind)
+        }
 
-    pub fn kind(&self, name: &str) -> Option<ArtifactKind> {
-        self.modules.get(name).map(|c| c.kind)
-    }
-
-    /// Execute an FH artifact on a full batch. `bins`/`vals` are row-major
-    /// `[batch, nnz]` matching the compiled shape exactly (the batcher pads).
-    pub fn run_fh(&self, name: &str, bins: &[i32], vals: &[f32]) -> Result<FhBatchOut> {
-        let c = self
-            .modules
-            .get(name)
-            .with_context(|| format!("unknown artifact {name}"))?;
-        let ArtifactKind::Fh { batch, nnz, dim } = c.kind else {
-            bail!("{name} is not an fh artifact");
-        };
-        if bins.len() != batch * nnz || vals.len() != batch * nnz {
-            bail!(
-                "{name}: input length {} / {} != {}x{}",
-                bins.len(),
-                vals.len(),
+        /// Execute an FH artifact on a full batch. `bins`/`vals` are
+        /// row-major `[batch, nnz]` matching the compiled shape exactly
+        /// (the batcher pads).
+        pub fn run_fh(&self, name: &str, bins: &[i32], vals: &[f32]) -> Result<FhBatchOut> {
+            let c = self
+                .modules
+                .get(name)
+                .with_context(|| format!("unknown artifact {name}"))?;
+            let ArtifactKind::Fh { batch, nnz, dim } = c.kind else {
+                bail!("{name} is not an fh artifact");
+            };
+            if bins.len() != batch * nnz || vals.len() != batch * nnz {
+                bail!(
+                    "{name}: input length {} / {} != {}x{}",
+                    bins.len(),
+                    vals.len(),
+                    batch,
+                    nnz
+                );
+            }
+            let lb = xla::Literal::vec1(bins)
+                .reshape(&[batch as i64, nnz as i64])
+                .map_err(|e| format_err!("reshape bins: {e:?}"))?;
+            let lv = xla::Literal::vec1(vals)
+                .reshape(&[batch as i64, nnz as i64])
+                .map_err(|e| format_err!("reshape vals: {e:?}"))?;
+            let result = c
+                .exe
+                .execute::<xla::Literal>(&[lb, lv])
+                .map_err(|e| format_err!("execute {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| format_err!("fetch result: {e:?}"))?;
+            let (out_l, sq_l) = result
+                .to_tuple2()
+                .map_err(|e| format_err!("untuple: {e:?}"))?;
+            let out = out_l
+                .to_vec::<f32>()
+                .map_err(|e| format_err!("out to_vec: {e:?}"))?;
+            let sqnorm = sq_l
+                .to_vec::<f32>()
+                .map_err(|e| format_err!("sqnorm to_vec: {e:?}"))?;
+            if out.len() != batch * dim || sqnorm.len() != batch {
+                bail!(
+                    "{name}: unexpected output arity {} / {}",
+                    out.len(),
+                    sqnorm.len()
+                );
+            }
+            Ok(FhBatchOut {
+                out,
+                sqnorm,
                 batch,
-                nnz
-            );
+                dim,
+            })
         }
-        let lb = xla::Literal::vec1(bins)
-            .reshape(&[batch as i64, nnz as i64])
-            .map_err(|e| anyhow!("reshape bins: {e:?}"))?;
-        let lv = xla::Literal::vec1(vals)
-            .reshape(&[batch as i64, nnz as i64])
-            .map_err(|e| anyhow!("reshape vals: {e:?}"))?;
-        let result = c
-            .exe
-            .execute::<xla::Literal>(&[lb, lv])
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let (out_l, sq_l) = result
-            .to_tuple2()
-            .map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let out = out_l
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("out to_vec: {e:?}"))?;
-        let sqnorm = sq_l
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("sqnorm to_vec: {e:?}"))?;
-        if out.len() != batch * dim || sqnorm.len() != batch {
-            bail!("{name}: unexpected output arity {} / {}", out.len(), sqnorm.len());
+
+        /// Execute an OPH artifact. Returns the raw sketch rows
+        /// `[batch * k]` with the kernel's `i32::MAX` empty sentinel.
+        pub fn run_oph(&self, name: &str, h: &[i32], valid: &[i32]) -> Result<Vec<i32>> {
+            let c = self
+                .modules
+                .get(name)
+                .with_context(|| format!("unknown artifact {name}"))?;
+            let ArtifactKind::Oph { batch, nnz, k } = c.kind else {
+                bail!("{name} is not an oph artifact");
+            };
+            if h.len() != batch * nnz || valid.len() != batch * nnz {
+                bail!("{name}: input length mismatch");
+            }
+            let lh = xla::Literal::vec1(h)
+                .reshape(&[batch as i64, nnz as i64])
+                .map_err(|e| format_err!("reshape h: {e:?}"))?;
+            let lv = xla::Literal::vec1(valid)
+                .reshape(&[batch as i64, nnz as i64])
+                .map_err(|e| format_err!("reshape valid: {e:?}"))?;
+            let result = c
+                .exe
+                .execute::<xla::Literal>(&[lh, lv])
+                .map_err(|e| format_err!("execute {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| format_err!("fetch result: {e:?}"))?;
+            let sk_l = result
+                .to_tuple1()
+                .map_err(|e| format_err!("untuple: {e:?}"))?;
+            let sketch = sk_l
+                .to_vec::<i32>()
+                .map_err(|e| format_err!("sketch to_vec: {e:?}"))?;
+            if sketch.len() != batch * k {
+                bail!("{name}: unexpected sketch arity {}", sketch.len());
+            }
+            Ok(sketch)
         }
-        Ok(FhBatchOut {
-            out,
-            sqnorm,
-            batch,
-            dim,
-        })
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+mod engine {
+    use super::{ArtifactKind, FhBatchOut};
+    use crate::runtime::artifact::{ArtifactMeta, Manifest};
+    use crate::util::error::{bail, Result};
+
+    const DISABLED: &str =
+        "PJRT runtime unavailable: built without the `xla` feature (native path serves instead)";
+
+    /// Stub engine for builds without the `xla` feature: loading always
+    /// fails with a clear message, so every caller degrades to its native
+    /// path exactly as it would when artifacts are missing.
+    pub struct PjrtEngine {
+        /// Uninhabited: a stub engine can never actually be constructed.
+        never: std::convert::Infallible,
     }
 
-    /// Execute an OPH artifact. Returns the raw sketch rows `[batch * k]`
-    /// with the kernel's `i32::MAX` empty sentinel.
-    pub fn run_oph(&self, name: &str, h: &[i32], valid: &[i32]) -> Result<Vec<i32>> {
-        let c = self
-            .modules
-            .get(name)
-            .with_context(|| format!("unknown artifact {name}"))?;
-        let ArtifactKind::Oph { batch, nnz, k } = c.kind else {
-            bail!("{name} is not an oph artifact");
-        };
-        if h.len() != batch * nnz || valid.len() != batch * nnz {
-            bail!("{name}: input length mismatch");
+    impl PjrtEngine {
+        /// Always fails: the runtime is compiled out.
+        pub fn load(_manifest: &Manifest) -> Result<Self> {
+            bail!("{DISABLED}");
         }
-        let lh = xla::Literal::vec1(h)
-            .reshape(&[batch as i64, nnz as i64])
-            .map_err(|e| anyhow!("reshape h: {e:?}"))?;
-        let lv = xla::Literal::vec1(valid)
-            .reshape(&[batch as i64, nnz as i64])
-            .map_err(|e| anyhow!("reshape valid: {e:?}"))?;
-        let result = c
-            .exe
-            .execute::<xla::Literal>(&[lh, lv])
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let sk_l = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let sketch = sk_l
-            .to_vec::<i32>()
-            .map_err(|e| anyhow!("sketch to_vec: {e:?}"))?;
-        if sketch.len() != batch * k {
-            bail!("{name}: unexpected sketch arity {}", sketch.len());
+
+        /// Always fails: the runtime is compiled out.
+        pub fn load_one(_meta: &ArtifactMeta) -> Result<Self> {
+            bail!("{DISABLED}");
         }
-        Ok(sketch)
+
+        pub fn names(&self) -> Vec<&str> {
+            match self.never {}
+        }
+
+        pub fn kind(&self, _name: &str) -> Option<ArtifactKind> {
+            match self.never {}
+        }
+
+        /// Unreachable (the stub cannot be constructed).
+        pub fn run_fh(&self, _name: &str, _bins: &[i32], _vals: &[f32]) -> Result<FhBatchOut> {
+            match self.never {}
+        }
+
+        /// Unreachable (the stub cannot be constructed).
+        pub fn run_oph(&self, _name: &str, _h: &[i32], _valid: &[i32]) -> Result<Vec<i32>> {
+            match self.never {}
+        }
+    }
+}
+
+pub use engine::PjrtEngine;
+
+#[cfg(all(test, not(feature = "xla")))]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        let err = PjrtEngine::load(&Manifest::default()).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
     }
 }

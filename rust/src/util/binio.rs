@@ -6,7 +6,7 @@
 //! magic/version header per document — no schema evolution machinery, just
 //! enough to persist our own structures safely.
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::io::{Read, Write};
 
 /// Writer over any `Write`.

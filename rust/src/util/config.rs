@@ -141,7 +141,7 @@ impl Config {
     }
 
     /// Load from a file path.
-    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Config> {
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Config> {
         let text = std::fs::read_to_string(path.as_ref())?;
         Ok(Self::parse(&text)?)
     }

@@ -1,0 +1,439 @@
+//! First-party error handling: message + source chaining, `Result`, the
+//! [`Context`] extension trait, and the [`bail!`](crate::bail) /
+//! [`ensure!`](crate::ensure) / [`format_err!`](crate::format_err) macros.
+//!
+//! The offline build resolves no external crates, so this module provides
+//! exactly the error-handling surface the rest of the crate uses: an opaque
+//! [`Error`] that can wrap any `std::error::Error`, contextual wrapping via
+//! `.context(...)` / `.with_context(|| ...)` on both `Result` and `Option`,
+//! and early-return macros.
+//!
+//! ```
+//! use mixtab::util::error::{Context, Result};
+//! use mixtab::{bail, ensure};
+//!
+//! fn parse_port(s: &str) -> Result<u16> {
+//!     ensure!(!s.is_empty(), "empty port string");
+//!     if s == "default" {
+//!         bail!("'default' is not a concrete port");
+//!     }
+//!     let port: u16 = s.parse().context("parse port number")?;
+//!     Ok(port)
+//! }
+//!
+//! assert_eq!(parse_port("7878").unwrap(), 7878);
+//! assert!(parse_port("").is_err());
+//! assert!(parse_port("default").is_err());
+//! let err = parse_port("not-a-number").unwrap_err();
+//! // The context message is the top of the chain…
+//! assert_eq!(err.to_string(), "parse port number");
+//! // …and the original `ParseIntError` survives underneath it.
+//! assert!(err.source().is_some());
+//! ```
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Crate-wide result type (re-exported as [`crate::Result`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a display message at the top of a chain of causes.
+///
+/// Construct one with [`Error::msg`], the [`format_err!`](crate::format_err)
+/// macro, a `?` conversion from any `std::error::Error + Send + Sync`
+/// type, or by attaching context to an existing error via [`Context`].
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// Leaf error carrying only a message.
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// A context message wrapped around an underlying cause.
+struct ContextError {
+    msg: String,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl fmt::Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.msg, self.source)
+    }
+}
+
+impl StdError for ContextError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        Some(self.source.as_ref())
+    }
+}
+
+impl Error {
+    /// Create an error from a display message (no underlying cause).
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Error {
+            inner: Box::new(MessageError(message.to_string())),
+        }
+    }
+
+    /// Wrap any standard error.
+    pub fn new<E>(error: E) -> Self
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error {
+            inner: Box::new(error),
+        }
+    }
+
+    /// Wrap this error under a new context message. The previous error
+    /// becomes the [`source`](Error::source) of the returned one.
+    pub fn context(self, context: impl fmt::Display) -> Self {
+        Error {
+            inner: Box::new(ContextError {
+                msg: context.to_string(),
+                source: self.inner,
+            }),
+        }
+    }
+
+    /// The underlying cause, one level down the chain.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.inner.source()
+    }
+
+    /// Iterator over the whole chain, starting with this error itself.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain {
+            next: Some(self.inner.as_ref() as &(dyn StdError + 'static)),
+        }
+    }
+
+    /// The lowest error in the chain — where the failure originated.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        self.chain().last().expect("chain is never empty")
+    }
+
+    /// Downcast the *top* of the chain to a concrete error type.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        (self.inner.as_ref() as &(dyn StdError + 'static)).downcast_ref::<E>()
+    }
+}
+
+/// Iterator over an error chain (see [`Error::chain`]).
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let current = self.next?;
+        self.next = current.source();
+        Some(current)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)?;
+        // `{:#}` prints the full chain inline: "top: cause: root".
+        if f.alternate() {
+            for cause in self.chain().skip(1) {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut causes = self.chain().skip(1).peekable();
+        if causes.peek().is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in causes {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Any standard error converts via `?`. `Error` itself deliberately does
+// NOT implement `std::error::Error`: that is what keeps this blanket impl
+// coherent alongside `impl From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Attach context to failure values: implemented for `Result` over any
+/// standard error, for `Result` over
+/// [`Error`] itself (stacked contexts), and for `Option` (where `None`
+/// becomes an error carrying the context message).
+pub trait Context<T> {
+    /// Wrap the error value with a fixed context message.
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error value with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+mod internal {
+    /// Conversion into [`super::Error`] shared by the [`super::Context`]
+    /// impls. The two impls do not overlap because `Error` does not
+    /// implement `std::error::Error`.
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> super::Error {
+            super::Error::new(self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: internal::IntoError,
+{
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(internal::IntoError::into_error(e).context(context)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(internal::IntoError::into_error(e).context(f())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+// Macro re-exports so call sites can `use crate::util::error::{bail, ...}`.
+pub use crate::{bail, ensure, format_err};
+
+/// Construct an [`Error`](crate::util::error::Error) from format
+/// arguments without returning.
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`](crate::util::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::format_err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds. With a single
+/// argument the message names the failed condition; extra arguments format
+/// the message.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::util::error::Error::msg(
+                ::std::concat!("condition failed: `", ::std::stringify!($cond), "`"),
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::format_err!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io;
+
+    #[test]
+    fn message_error_displays() {
+        let e = Error::msg("plain message");
+        assert_eq!(e.to_string(), "plain message");
+        assert!(e.source().is_none());
+        assert_eq!(e.chain().count(), 1);
+    }
+
+    #[test]
+    fn format_err_formats() {
+        let port = 80;
+        let e = format_err!("bad port {port} ({})", "reserved");
+        assert_eq!(e.to_string(), "bad port 80 (reserved)");
+    }
+
+    #[test]
+    fn io_error_converts_via_question_mark() {
+        fn read_missing() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+            Ok(s)
+        }
+        let e = read_missing().unwrap_err();
+        // The io::Error is the top of the chain and remains downcastable.
+        let io = e.downcast_ref::<io::Error>().expect("io error at top");
+        assert_eq!(io.kind(), io::ErrorKind::NotFound);
+    }
+
+    #[test]
+    fn context_chains_sources() {
+        fn inner() -> Result<()> {
+            Err(io::Error::new(io::ErrorKind::PermissionDenied, "locked"))?;
+            Ok(())
+        }
+        fn outer() -> Result<()> {
+            inner().context("open config")?;
+            Ok(())
+        }
+        let e = outer().unwrap_err();
+        assert_eq!(e.to_string(), "open config");
+        let chain: Vec<String> = e.chain().map(|c| c.to_string()).collect();
+        assert_eq!(chain.len(), 2);
+        assert_eq!(chain[0], "open config");
+        assert_eq!(chain[1], "locked");
+        assert_eq!(e.root_cause().to_string(), "locked");
+    }
+
+    #[test]
+    fn with_context_is_lazy_and_stacks() {
+        fn fail() -> Result<()> {
+            Err(Error::msg("root"))
+        }
+        let layered = fail()
+            .with_context(|| format!("layer {}", 1))
+            .with_context(|| "layer 2")
+            .unwrap_err();
+        let chain: Vec<String> = layered.chain().map(|c| c.to_string()).collect();
+        assert_eq!(chain, vec!["layer 2", "layer 1", "root"]);
+        // Alternate Display prints the chain inline.
+        assert_eq!(format!("{layered:#}"), "layer 2: layer 1: root");
+        // Debug shows a Caused by block.
+        let dbg = format!("{layered:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("root"), "{dbg}");
+        // And the success path never evaluates the closure.
+        let base: Result<u8, io::Error> = Ok(7);
+        let ok = base.with_context(|| -> String { panic!("must not run") });
+        assert_eq!(ok.unwrap(), 7);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.with_context(|| "nothing here").unwrap_err();
+        assert_eq!(e.to_string(), "nothing here");
+        let some = Some(3u32).context("unused").unwrap();
+        assert_eq!(some, 3);
+    }
+
+    #[test]
+    fn ensure_failure_paths() {
+        fn check(n: usize) -> Result<usize> {
+            ensure!(n > 0);
+            ensure!(n < 10, "n too large: {n}");
+            Ok(n)
+        }
+        assert_eq!(check(5).unwrap(), 5);
+        let bare = check(0).unwrap_err();
+        assert_eq!(bare.to_string(), "condition failed: `n > 0`");
+        let formatted = check(12).unwrap_err();
+        assert_eq!(formatted.to_string(), "n too large: 12");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn go(flag: bool) -> Result<&'static str> {
+            if flag {
+                bail!("bailed with flag={flag}");
+            }
+            Ok("ran")
+        }
+        assert_eq!(go(false).unwrap(), "ran");
+        assert_eq!(go(true).unwrap_err().to_string(), "bailed with flag=true");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

@@ -1,0 +1,177 @@
+//! Minimal leveled logging to stderr — the first-party stand-in for the
+//! `log` + `env_logger` pair.
+//!
+//! The maximum level is a process-wide atomic, defaulting to [`Level::Warn`]
+//! so library warnings surface even when the binary never calls
+//! [`init_from_env`]. The `mixtab` binary initialises it from the
+//! `MIXTAB_LOG` environment variable (`off|error|warn|info|debug`).
+//!
+//! Call sites use the path-invocable macros:
+//!
+//! ```
+//! mixtab::util::logging::warn!("falling back to native path: {}", "no artifacts");
+//! mixtab::util::logging::debug!("not printed at the default level");
+//! ```
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// 0 = off; otherwise the numeric value of the maximum enabled [`Level`].
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+
+/// Set the maximum enabled level (`None` silences all logging).
+pub fn set_max_level(level: Option<Level>) {
+    MAX_LEVEL.store(level.map_or(0, |l| l as u8), Ordering::Relaxed);
+}
+
+/// Whether a message at `level` would currently be printed.
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Initialise the level from `MIXTAB_LOG` (`off|error|warn|info|debug`);
+/// unset or unrecognised values keep the default ([`Level::Warn`]).
+pub fn init_from_env() {
+    let level = match std::env::var("MIXTAB_LOG").as_deref() {
+        Ok("off") => None,
+        Ok("error") => Some(Level::Error),
+        Ok("info") => Some(Level::Info),
+        Ok("debug") => Some(Level::Debug),
+        _ => Some(Level::Warn),
+    };
+    set_max_level(level);
+}
+
+/// Backend for the logging macros; not intended to be called directly.
+#[doc(hidden)]
+pub fn write(level: Level, args: fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{level}] {args}");
+    }
+}
+
+// The macros live at the crate root (`#[macro_export]`); re-export them
+// here so `crate::util::logging::warn!(...)` is the canonical spelling.
+pub use crate::{__mixtab_log_debug as debug, __mixtab_log_error as error};
+pub use crate::{__mixtab_log_info as info, __mixtab_log_warn as warn};
+
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __mixtab_log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::write(
+            $crate::util::logging::Level::Error,
+            ::std::format_args!($($arg)*),
+        )
+    };
+}
+
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __mixtab_log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::write(
+            $crate::util::logging::Level::Warn,
+            ::std::format_args!($($arg)*),
+        )
+    };
+}
+
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __mixtab_log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::write(
+            $crate::util::logging::Level::Info,
+            ::std::format_args!($($arg)*),
+        )
+    };
+}
+
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __mixtab_log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::write(
+            $crate::util::logging::Level::Debug,
+            ::std::format_args!($($arg)*),
+        )
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Mutex, MutexGuard};
+
+    /// `MAX_LEVEL` is process-global and the test harness is concurrent:
+    /// every test that touches it takes this lock first.
+    fn level_lock() -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    #[test]
+    fn warn_gates_by_severity() {
+        let _g = level_lock();
+        set_max_level(Some(Level::Warn));
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn off_disables_everything() {
+        let _g = level_lock();
+        set_max_level(None);
+        assert!(!enabled(Level::Error));
+        set_max_level(Some(Level::Warn));
+    }
+
+    #[test]
+    fn ordering_is_by_severity() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert_eq!(Level::Warn.to_string(), "WARN");
+    }
+
+    #[test]
+    fn macros_expand_and_run() {
+        let _g = level_lock();
+        set_max_level(Some(Level::Debug));
+        crate::util::logging::warn!("warn test {}", 1);
+        crate::util::logging::info!("info test");
+        crate::util::logging::debug!("debug test {n}", n = 2);
+        crate::util::logging::error!("error test");
+        set_max_level(Some(Level::Warn));
+    }
+}

@@ -1,11 +1,14 @@
 //! First-party substrate modules.
 //!
-//! The build environment resolves crates fully offline from a vendored set
-//! that contains only the `xla` crate's dependency closure — no `serde`,
-//! `clap`, `criterion`, `proptest`, `tokio` or `rand`. Everything those
+//! The build environment resolves crates fully offline and the crate
+//! declares no external dependencies — no error-handling, `serde`, `clap`,
+//! `criterion`, `proptest`, `tokio`, `log` or `rand` crates. Everything those
 //! would normally provide is implemented here, scoped to exactly what the
 //! rest of the crate needs:
 //!
+//! * [`error`] — error type with source chaining, `Result`, `Context`
+//!   extension trait, `bail!` / `ensure!` / `format_err!` macros.
+//! * [`logging`] — leveled stderr logging gated by `MIXTAB_LOG`.
 //! * [`rng`] — splitmix64 / xoshiro256** deterministic PRNGs.
 //! * [`json`] — minimal JSON parser + writer (artifact manifests, metrics).
 //! * [`csv`] — CSV writer for experiment outputs.
@@ -16,6 +19,8 @@
 //! * [`bench`] — measurement harness used by `cargo bench` targets
 //!   (warmup + repeated timed runs + robust summary statistics).
 
+pub mod error;
+pub mod logging;
 pub mod rng;
 pub mod json;
 pub mod csv;

@@ -183,7 +183,10 @@ impl Runner {
         Self {
             cases,
             seed: 0x6d69_7874_6162_u64, // "mixtab"
-            max_shrink_steps: 500,
+            // Worst case for the u64 shrinker is ~3 candidate evaluations
+            // per unit decrement after the halving phase; 5000 lets a
+            // counterexample ~1000 above the threshold reach the minimum.
+            max_shrink_steps: 5000,
         }
     }
 

@@ -14,6 +14,10 @@ use mixtab::sketch::DensifyMode;
 use mixtab::util::rng::Xoshiro256;
 
 fn manifest() -> Option<Manifest> {
+    if cfg!(not(feature = "xla")) {
+        eprintln!("SKIP: built without the `xla` feature (PJRT engine is a stub)");
+        return None;
+    }
     match Manifest::load("artifacts") {
         Ok(m) => Some(m),
         Err(e) => {
