@@ -1,105 +1,11 @@
-//! Bench: coordinator end-to-end — FH request latency/throughput through
-//! the full service (router → batcher → PJRT executor → scatter) under
-//! closed-loop concurrent clients, vs the native path. This is the
-//! "serving" headline for EXPERIMENTS.md §Perf.
+//! Bench target wrapper: coordinator end-to-end FH request throughput under
+//! closed-loop concurrent clients. The workload lives in
+//! [`mixtab::benchsuite`] so the `mixtab bench` CLI can run it in-process
+//! and gate the JSON records.
 
-use mixtab::coordinator::config::CoordinatorConfig;
-use mixtab::coordinator::request::{ExecPath, Request, Response};
-use mixtab::coordinator::Coordinator;
-use mixtab::stats::Summary;
-use mixtab::util::bench::{fmt_rate, Bench};
-use mixtab::util::rng::Xoshiro256;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
-
-fn workload(n: usize, seed: u64) -> Vec<(Vec<u32>, Vec<f64>)> {
-    let mut rng = Xoshiro256::new(seed);
-    (0..n)
-        .map(|_| {
-            let nnz = rng.range(50, 450);
-            (
-                (0..nnz).map(|_| rng.next_u32() % 1_000_000).collect(),
-                (0..nnz).map(|_| rng.next_f64() - 0.5).collect(),
-            )
-        })
-        .collect()
-}
-
-fn drive(c: &Arc<Coordinator>, clients: usize, per_client: usize, seed: u64) -> (f64, Summary, u64) {
-    let done = Arc::new(AtomicU64::new(0));
-    let lat_all = Arc::new(std::sync::Mutex::new(Summary::new()));
-    let t0 = Instant::now();
-    let handles: Vec<_> = (0..clients)
-        .map(|cl| {
-            let c = Arc::clone(c);
-            let done = Arc::clone(&done);
-            let lat_all = Arc::clone(&lat_all);
-            std::thread::spawn(move || {
-                let work = workload(per_client, seed + cl as u64);
-                let mut lat = Summary::new();
-                for (idx, vals) in work {
-                    let t = Instant::now();
-                    let resp = c.handle(Request::FhTransform {
-                        indices: idx,
-                        values: vals,
-                    });
-                    lat.add(t.elapsed().as_micros() as f64);
-                    if matches!(resp, Response::Fh { .. }) {
-                        done.fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-                lat_all.lock().unwrap().values().len(); // touch
-                let mut g = lat_all.lock().unwrap();
-                for &v in lat.values() {
-                    g.add(v);
-                }
-            })
-        })
-        .collect();
-    for h in handles {
-        h.join().unwrap();
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    let total = done.load(Ordering::Relaxed);
-    let lat = Arc::try_unwrap(lat_all).unwrap().into_inner().unwrap();
-    (wall, lat, total)
-}
+use mixtab::util::bench::Bench;
 
 fn main() {
-    let bench = Bench::new();
-    let (clients, per_client) = if bench.is_quick() { (4, 25) } else { (8, 250) };
-    println!("coordinator_service: {clients} closed-loop clients × {per_client} FH requests");
-
-    for (label, enable_pjrt) in [("pjrt+batcher", true), ("native-only", false)] {
-        let c = Arc::new(Coordinator::new(CoordinatorConfig {
-            enable_pjrt,
-            fh_dim: 128,
-            max_delay_us: 200,
-            ..Default::default()
-        }));
-        if enable_pjrt && !c.pjrt_enabled() {
-            println!("  {label}: pjrt unavailable (run `make artifacts`), skipping");
-            continue;
-        }
-        let (wall, lat, total) = drive(&c, clients, per_client, 99);
-        let (p50, p90, p99) = lat.latency_quantiles();
-        let snap = c.metrics.snapshot();
-        let path_note = match (
-            snap.get("fh_pjrt_rows").and_then(|j| j.as_i64()),
-            snap.get("fh_native_rows").and_then(|j| j.as_i64()),
-        ) {
-            (Some(p), Some(n)) => format!("rows pjrt={p} native={n}"),
-            _ => String::new(),
-        };
-        println!(
-            "  {label:<14} {} req/s  lat p50={p50:.0}µs p90={p90:.0}µs p99={p99:.0}µs  occupancy={:.2}  {}",
-            fmt_rate(total as f64 / wall),
-            c.metrics.mean_batch_occupancy(),
-            path_note
-        );
-        // Smoke assertion: everything completed.
-        assert_eq!(total as usize, clients * per_client);
-        let _ = ExecPath::Pjrt;
-    }
+    let mut bench = Bench::new();
+    mixtab::benchsuite::coordinator_service(&mut bench);
 }

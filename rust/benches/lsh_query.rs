@@ -1,45 +1,11 @@
-//! Bench: LSH build + query latency on MNIST-like data, multiply-shift vs
-//! mixed tabulation (the Figure 5 operating point K = L = 10). Weak hashing
-//! inflates buckets on structured data, which shows up here as *slower
-//! queries*, not just worse quality.
+//! Bench target wrapper: LSH build + query latency on MNIST-like data
+//! (Figure 5 operating point K = L = 10). The workload lives in
+//! [`mixtab::benchsuite`] so the `mixtab bench` CLI can run it in-process
+//! and gate the JSON records.
 
-use mixtab::data::mnist_like;
-use mixtab::hash::HashFamily;
-use mixtab::lsh::{LshIndex, LshParams};
-use mixtab::util::bench::{print_table, Bench};
-use std::hint::black_box;
+use mixtab::util::bench::Bench;
 
 fn main() {
-    let bench = Bench::new();
-    let (n_db, n_q) = if bench.is_quick() { (400, 40) } else { (4000, 400) };
-    let (db_ds, q_ds) = mnist_like::default_split(n_db, n_q, 42);
-    let db = db_ds.as_sets();
-    let queries = q_ds.as_sets();
-    println!("lsh_query: db={} queries={} K=L=10", db.len(), queries.len());
-
-    for fam in [HashFamily::MixedTab, HashFamily::MultiplyShift, HashFamily::Murmur3] {
-        let mut rows = Vec::new();
-        let mut index = LshIndex::new(LshParams::new(10, 10), fam, 7);
-        rows.push(bench.measure("build", db.len() as u64, || {
-            index = LshIndex::new(LshParams::new(10, 10), fam, 7);
-            for (i, s) in db.iter().enumerate() {
-                index.insert(i as u32, s);
-            }
-            index.len()
-        }));
-        let mut retrieved_total = 0usize;
-        rows.push(bench.measure("query", queries.len() as u64, || {
-            retrieved_total = 0;
-            for q in &queries {
-                retrieved_total += black_box(index.query(q)).len();
-            }
-            retrieved_total
-        }));
-        print_table(&format!("LSH {} (per item)", fam.id()), &rows);
-        println!(
-            "  retrieved/query = {:.1}, max bucket = {}",
-            retrieved_total as f64 / queries.len() as f64,
-            index.max_bucket()
-        );
-    }
+    let mut bench = Bench::new();
+    mixtab::benchsuite::lsh_query(&mut bench);
 }

@@ -1,111 +1,11 @@
-//! Bench: PJRT artifact execution — FH and OPH batch latency/throughput vs
-//! the native Rust path for the same work. Quantifies what the batcher buys
-//! (and costs) on this CPU; on a real TPU the PJRT side is the accelerated
-//! one, here it bounds the overhead story in EXPERIMENTS.md §Perf.
+//! Bench target wrapper: PJRT artifact execution vs the native path (skips
+//! without the `xla` feature or built artifacts). The workload lives in
+//! [`mixtab::benchsuite`] so the `mixtab bench` CLI can run it in-process
+//! and gate the JSON records.
 
-use mixtab::data::SparseVector;
-use mixtab::hash::HashFamily;
-use mixtab::runtime::artifact::{ArtifactKind, Manifest};
-use mixtab::runtime::pjrt::PjrtEngine;
-use mixtab::sketch::feature_hash::{FeatureHasher, SignMode};
-use mixtab::util::bench::{print_table, Bench};
-use mixtab::util::rng::Xoshiro256;
-use std::hint::black_box;
+use mixtab::util::bench::Bench;
 
 fn main() {
-    if cfg!(not(feature = "xla")) {
-        println!("runtime_pjrt: built without the `xla` feature (stub engine); skipping");
-        return;
-    }
-    let bench = Bench::new();
-    let Ok(manifest) = Manifest::load("artifacts") else {
-        println!("runtime_pjrt: artifacts/ not built — run `make artifacts`; skipping");
-        return;
-    };
-    let Some(meta) = manifest.find_fh(128, 512).cloned() else {
-        println!("runtime_pjrt: no fh d'=128 artifact; skipping");
-        return;
-    };
-    let ArtifactKind::Fh { batch, nnz, dim } = meta.kind else {
-        unreachable!()
-    };
-    println!("runtime_pjrt: artifact {} [{batch}x{nnz}] -> d'={dim}", meta.name);
-    let engine = PjrtEngine::load(&Manifest {
-        artifacts: vec![meta.clone()],
-    })
-    .expect("engine");
-
-    // Batch of realistic sparse vectors.
-    let fh = FeatureHasher::new(HashFamily::MixedTab, 42, dim, SignMode::Paired);
-    let mut rng = Xoshiro256::new(3);
-    let vectors: Vec<SparseVector> = (0..batch)
-        .map(|_| {
-            let n = rng.range(100, 500);
-            SparseVector::new(
-                (0..n).map(|_| rng.next_u32() % 1_000_000).collect(),
-                (0..n).map(|_| rng.next_f64() - 0.5).collect(),
-            )
-        })
-        .collect();
-    let mut bins = Vec::with_capacity(batch * nnz);
-    let mut vals = Vec::with_capacity(batch * nnz);
-    for v in &vectors {
-        let (mut b, mut x) = fh.plan(v, nnz);
-        bins.append(&mut b);
-        vals.append(&mut x);
-    }
-
-    let mut rows = Vec::new();
-    rows.push(bench.measure("pjrt_fh_batch", batch as u64, || {
-        black_box(engine.run_fh(&meta.name, &bins, &vals).unwrap().sqnorm[0])
-    }));
-    let mut scratch = Vec::new();
-    rows.push(bench.measure("native_fh_batch", batch as u64, || {
-        let mut acc = 0.0;
-        for v in &vectors {
-            acc += fh.squared_norm(v, &mut scratch);
-        }
-        black_box(acc)
-    }));
-    print_table("FH batch of 16 vectors (per vector)", &rows);
-
-    if let Some(oph_meta) = manifest.find_oph(200, 512).cloned() {
-        let ArtifactKind::Oph { batch, nnz, k } = oph_meta.kind else {
-            unreachable!()
-        };
-        let engine = PjrtEngine::load(&Manifest {
-            artifacts: vec![oph_meta.clone()],
-        })
-        .expect("engine");
-        let hasher = HashFamily::MixedTab.build(7);
-        let mut h = vec![0i32; batch * nnz];
-        let mut valid = vec![0i32; batch * nnz];
-        let sets: Vec<Vec<u32>> = (0..batch)
-            .map(|_| (0..400).map(|_| rng.next_u32()).collect())
-            .collect();
-        for (r, set) in sets.iter().enumerate() {
-            for (i, &x) in set.iter().enumerate() {
-                h[r * nnz + i] = hasher.hash(x) as i32;
-                valid[r * nnz + i] = 1;
-            }
-        }
-        let sketcher = mixtab::sketch::oph::OneHashSketcher::new(
-            HashFamily::MixedTab.build(7),
-            k,
-            mixtab::sketch::oph::BinLayout::Mod,
-            mixtab::sketch::DensifyMode::None,
-        );
-        let mut rows = Vec::new();
-        rows.push(bench.measure("pjrt_oph_batch", batch as u64, || {
-            black_box(engine.run_oph(&oph_meta.name, &h, &valid).unwrap()[0])
-        }));
-        rows.push(bench.measure("native_oph_batch", batch as u64, || {
-            let mut acc = 0u64;
-            for s in &sets {
-                acc ^= sketcher.sketch_raw(s).bins[0];
-            }
-            black_box(acc)
-        }));
-        print_table("OPH batch of 16 sets (per set)", &rows);
-    }
+    let mut bench = Bench::new();
+    mixtab::benchsuite::runtime_pjrt(&mut bench);
 }

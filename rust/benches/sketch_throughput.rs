@@ -1,78 +1,11 @@
-//! Bench: sketching throughput — OPH vs k×MinHash (the paper's motivating
-//! `O(|A|)` vs `O(k·|A|)` gap), densification cost, and FH sign-mode cost
-//! (Corollary 1's single-hash trick vs two hashes).
+//! Bench target wrapper: sketching throughput — OPH vs k×MinHash, the
+//! batched-vs-per-key Scratch contrast, and FH sign-mode cost. The workload
+//! lives in [`mixtab::benchsuite`] so the `mixtab bench` CLI can run it
+//! in-process and gate the JSON records.
 
-use mixtab::data::synthetic::dataset1;
-use mixtab::hash::HashFamily;
-use mixtab::sketch::feature_hash::{FeatureHasher, SignMode};
-use mixtab::sketch::minhash::MinHash;
-use mixtab::sketch::oph::{BinLayout, OneHashSketcher};
-use mixtab::sketch::DensifyMode;
-use mixtab::util::bench::{print_table, Bench};
-use mixtab::util::rng::Xoshiro256;
-use std::hint::black_box;
+use mixtab::util::bench::Bench;
 
 fn main() {
-    let bench = Bench::new();
-    let reps: usize = if bench.is_quick() { 20 } else { 500 };
-    let mut rng = Xoshiro256::new(5);
-    let pair = dataset1(2000, true, &mut rng);
-    let set = &pair.a;
-    let k = 200;
-
-    println!("sketch_throughput: |A|={} k={k} reps={reps}", set.len());
-
-    let mut rows = Vec::new();
-    let oph = OneHashSketcher::new(
-        HashFamily::MixedTab.build(1),
-        k,
-        BinLayout::Mod,
-        DensifyMode::Paper,
-    );
-    rows.push(bench.measure("oph_densified", (reps * set.len()) as u64, || {
-        let mut acc = 0u64;
-        for _ in 0..reps {
-            acc ^= black_box(oph.sketch(set)).bins[0];
-        }
-        acc
-    }));
-    let oph_raw = OneHashSketcher::new(
-        HashFamily::MixedTab.build(1),
-        k,
-        BinLayout::Mod,
-        DensifyMode::None,
-    );
-    rows.push(bench.measure("oph_raw", (reps * set.len()) as u64, || {
-        let mut acc = 0u64;
-        for _ in 0..reps {
-            acc ^= black_box(oph_raw.sketch_raw(set)).bins[0];
-        }
-        acc
-    }));
-    let mh = MinHash::new(HashFamily::MixedTab, 1, k);
-    let mh_reps = (reps / 50).max(1); // k× slower by construction
-    rows.push(bench.measure("minhash_k200", (mh_reps * set.len()) as u64, || {
-        let mut acc = 0u32;
-        for _ in 0..mh_reps {
-            acc ^= black_box(mh.sketch(set))[0];
-        }
-        acc
-    }));
-    print_table("set sketching (per element)", &rows);
-
-    // FH sign modes.
-    let v = mixtab::data::SparseVector::unit_indicator(set);
-    let mut rows = Vec::new();
-    for (name, mode) in [("fh_separate", SignMode::Separate), ("fh_paired", SignMode::Paired)] {
-        let fh = FeatureHasher::new(HashFamily::MixedTab, 3, 128, mode);
-        let mut scratch = Vec::new();
-        rows.push(bench.measure(name, (reps * v.nnz()) as u64, || {
-            let mut acc = 0.0;
-            for _ in 0..reps {
-                acc += fh.squared_norm(&v, &mut scratch);
-            }
-            black_box(acc)
-        }));
-    }
-    print_table("feature hashing sign modes (per non-zero)", &rows);
+    let mut bench = Bench::new();
+    mixtab::benchsuite::sketch_throughput(&mut bench);
 }

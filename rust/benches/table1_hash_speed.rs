@@ -1,61 +1,11 @@
-//! Bench: Table 1 — raw hash throughput (10⁷ keys) and FH-over-News20
-//! timing for every family. `MIXTAB_BENCH_QUICK=1` shrinks the workload.
-//!
-//! Paper shape to verify: multiply-shift < poly2 < {mixed_tab, poly3} <
-//! {murmur3, cityhash} ≪ blake2b; mixed_tab ≈ 0.7× murmur3.
+//! Bench target wrapper: Table 1 — raw hash throughput and FH-over-News20
+//! timing for every family. The workload lives in [`mixtab::benchsuite`] so
+//! the `mixtab bench` CLI can run it in-process and gate the JSON records.
+//! `MIXTAB_BENCH_QUICK=1` shrinks the workload.
 
-use mixtab::data::news20_like::{self, News20LikeParams};
-use mixtab::hash::HashFamily;
-use mixtab::sketch::feature_hash::{FeatureHasher, SignMode};
-use mixtab::util::bench::{print_table, Bench};
-use mixtab::util::rng::Xoshiro256;
-use std::hint::black_box;
+use mixtab::util::bench::Bench;
 
 fn main() {
-    let bench = Bench::new();
-    let n_keys: usize = if bench.is_quick() { 200_000 } else { 10_000_000 };
-    let n_docs: usize = if bench.is_quick() { 200 } else { 5_000 };
-
-    let mut rng = Xoshiro256::new(0x7AB1E);
-    let keys: Vec<u32> = (0..n_keys).map(|_| rng.next_u32()).collect();
-    let mut out = vec![0u32; n_keys];
-
-    println!("table1_hash_speed: {n_keys} keys / {n_docs} News20-like docs");
-    let mut rows = Vec::new();
-    for &fam in HashFamily::TABLE1 {
-        let h = fam.build(42);
-        // Blake2 at 1/100 scale to stay interactive.
-        let slice = if fam == HashFamily::Blake2 {
-            &keys[..n_keys / 100]
-        } else {
-            &keys[..]
-        };
-        let m = bench.measure(fam.id(), slice.len() as u64, || {
-            h.hash_slice(slice, &mut out[..slice.len()]);
-            black_box(out[0])
-        });
-        rows.push(m);
-    }
-    print_table("hash 32-bit keys", &rows);
-
-    let news = news20_like::generate(n_docs, &News20LikeParams::default(), 99);
-    let mut rows = Vec::new();
-    for &fam in HashFamily::TABLE1 {
-        let fh = FeatureHasher::new(fam, 42, 128, SignMode::Separate);
-        let docs = if fam == HashFamily::Blake2 {
-            &news.vectors[..n_docs / 20]
-        } else {
-            &news.vectors[..]
-        };
-        let mut scratch = Vec::new();
-        let m = bench.measure(fam.id(), docs.len() as u64, || {
-            let mut acc = 0.0;
-            for v in docs {
-                acc += fh.squared_norm(v, &mut scratch);
-            }
-            black_box(acc)
-        });
-        rows.push(m);
-    }
-    print_table("feature hashing News20-like (d'=128, per doc)", &rows);
+    let mut bench = Bench::new();
+    mixtab::benchsuite::table1_hash_speed(&mut bench);
 }

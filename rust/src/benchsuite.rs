@@ -1,0 +1,445 @@
+//! The five `cargo bench` workloads as in-process library functions.
+//!
+//! Each `rust/benches/*.rs` target is a thin `fn main` wrapper around one
+//! function here, and the `mixtab bench` CLI subcommand runs any subset of
+//! them in one process — printing the usual human-readable tables *and*
+//! accumulating machine-readable [`CaseRecord`](crate::util::bench::CaseRecord)s
+//! on the shared [`Bench`], which the CLI then writes as `BENCH_<name>.json`
+//! and gates against a committed baseline (see `util::bench` and CI's
+//! `bench-smoke` job).
+//!
+//! Workloads honour quick mode ([`Bench::is_quick`]): CI smoke runs shrink
+//! key counts and repetitions, full runs reproduce the paper-scale numbers.
+
+use crate::coordinator::config::CoordinatorConfig;
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::Coordinator;
+use crate::data::news20_like::{self, News20LikeParams};
+use crate::data::synthetic::dataset1;
+use crate::data::SparseVector;
+use crate::hash::HashFamily;
+use crate::lsh::{LshIndex, LshParams};
+use crate::sketch::feature_hash::{FeatureHasher, SignMode};
+use crate::sketch::minhash::MinHash;
+use crate::sketch::oph::{BinLayout, OneHashSketcher};
+use crate::sketch::{DensifyMode, Scratch};
+use crate::stats::Summary;
+use crate::util::bench::{fmt_rate, print_table, Bench};
+use crate::util::rng::Xoshiro256;
+use std::hint::black_box;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// All workloads in execution order: `(name, entry point)`. The names are
+/// the bench-target names and the `--only` values of `mixtab bench`.
+pub const ALL: &[(&str, fn(&mut Bench))] = &[
+    ("table1_hash_speed", table1_hash_speed),
+    ("sketch_throughput", sketch_throughput),
+    ("lsh_query", lsh_query),
+    ("coordinator_service", coordinator_service),
+    ("runtime_pjrt", runtime_pjrt),
+];
+
+/// Run every workload, accumulating records on `bench`.
+pub fn run_all(bench: &mut Bench) {
+    for (_, f) in ALL {
+        f(bench);
+    }
+}
+
+/// Table 1 — raw hash throughput and FH-over-News20 timing for every
+/// family. Paper shape to verify: multiply-shift < poly2 < {mixed_tab,
+/// poly3} < {murmur3, cityhash} ≪ blake2b; mixed_tab ≈ 0.7× murmur3.
+pub fn table1_hash_speed(bench: &mut Bench) {
+    let n_keys: usize = if bench.is_quick() { 200_000 } else { 10_000_000 };
+    let n_docs: usize = if bench.is_quick() { 200 } else { 5_000 };
+
+    let mut rng = Xoshiro256::new(0x7AB1E);
+    let keys: Vec<u32> = (0..n_keys).map(|_| rng.next_u32()).collect();
+    let mut out = vec![0u32; n_keys];
+
+    println!("table1_hash_speed: {n_keys} keys / {n_docs} News20-like docs");
+    let mut rows = Vec::new();
+    for &fam in HashFamily::TABLE1 {
+        let h = fam.build(42);
+        // Blake2 at 1/100 scale to stay interactive.
+        let slice = if fam == HashFamily::Blake2 {
+            &keys[..n_keys / 100]
+        } else {
+            &keys[..]
+        };
+        let m = bench.measure(&format!("hash32/{}", fam.id()), slice.len() as u64, || {
+            h.hash_slice(slice, &mut out[..slice.len()]);
+            black_box(out[0])
+        });
+        bench.record("table1_hash_speed", &m);
+        rows.push(m);
+    }
+    print_table("hash 32-bit keys", &rows);
+
+    let news = news20_like::generate(n_docs, &News20LikeParams::default(), 99);
+    let mut rows = Vec::new();
+    for &fam in HashFamily::TABLE1 {
+        let fh = FeatureHasher::new(fam, 42, 128, SignMode::Separate);
+        let docs = if fam == HashFamily::Blake2 {
+            &news.vectors[..n_docs / 20]
+        } else {
+            &news.vectors[..]
+        };
+        let mut scratch = Scratch::new();
+        let m = bench.measure(&format!("fh_news20/{}", fam.id()), docs.len() as u64, || {
+            let mut acc = 0.0;
+            for v in docs {
+                acc += fh.squared_norm(v, &mut scratch);
+            }
+            black_box(acc)
+        });
+        bench.record("table1_hash_speed", &m);
+        rows.push(m);
+    }
+    print_table("feature hashing News20-like (d'=128, per doc)", &rows);
+}
+
+/// Sketching throughput — OPH vs k×MinHash (the paper's motivating
+/// `O(|A|)` vs `O(k·|A|)` gap), the batched-vs-per-key contrast the
+/// `Scratch` hot paths buy, densification cost, and FH sign-mode cost
+/// (Corollary 1's single-hash trick vs two hashes).
+pub fn sketch_throughput(bench: &mut Bench) {
+    let reps: usize = if bench.is_quick() { 20 } else { 500 };
+    let mut rng = Xoshiro256::new(5);
+    let pair = dataset1(2000, true, &mut rng);
+    let set = &pair.a;
+    let k = 200;
+
+    println!("sketch_throughput: |A|={} k={k} reps={reps}", set.len());
+
+    let mut rows = Vec::new();
+    let oph = OneHashSketcher::new(
+        HashFamily::MixedTab.build(1),
+        k,
+        BinLayout::Mod,
+        DensifyMode::Paper,
+    );
+    let mut scratch = Scratch::new();
+    let m = bench.measure("oph_densified", (reps * set.len()) as u64, || {
+        let mut acc = 0u64;
+        for _ in 0..reps {
+            acc ^= black_box(oph.sketch_with(set, &mut scratch)).bins[0];
+        }
+        acc
+    });
+    bench.record("sketch_throughput", &m);
+    rows.push(m);
+    let oph_raw = OneHashSketcher::new(
+        HashFamily::MixedTab.build(1),
+        k,
+        BinLayout::Mod,
+        DensifyMode::None,
+    );
+    // Batched (hash_slice + reused scratch) vs per-key reference: the
+    // dispatch-per-batch win in isolation. Acceptance: batched ≥ 1.2× on
+    // the tabulation family.
+    let m = bench.measure("oph_raw_batched", (reps * set.len()) as u64, || {
+        let mut acc = 0u64;
+        for _ in 0..reps {
+            acc ^= black_box(oph_raw.sketch_raw_with(set, &mut scratch)).bins[0];
+        }
+        acc
+    });
+    bench.record("sketch_throughput", &m);
+    rows.push(m);
+    let m = bench.measure("oph_raw_per_key", (reps * set.len()) as u64, || {
+        let mut acc = 0u64;
+        for _ in 0..reps {
+            acc ^= black_box(oph_raw.sketch_raw_per_key(set)).bins[0];
+        }
+        acc
+    });
+    bench.record("sketch_throughput", &m);
+    rows.push(m);
+    let mh = MinHash::new(HashFamily::MixedTab, 1, k);
+    let mh_reps = (reps / 50).max(1); // k× slower by construction
+    let m = bench.measure("minhash_k200", (mh_reps * set.len()) as u64, || {
+        let mut acc = 0u32;
+        for _ in 0..mh_reps {
+            acc ^= black_box(mh.sketch_with(set, &mut scratch))[0];
+        }
+        acc
+    });
+    bench.record("sketch_throughput", &m);
+    rows.push(m);
+    print_table("set sketching (per element)", &rows);
+
+    // FH sign modes.
+    let v = SparseVector::unit_indicator(set);
+    let mut rows = Vec::new();
+    for (name, mode) in [("fh_separate", SignMode::Separate), ("fh_paired", SignMode::Paired)] {
+        let fh = FeatureHasher::new(HashFamily::MixedTab, 3, 128, mode);
+        let mut scratch = Scratch::new();
+        let m = bench.measure(name, (reps * v.nnz()) as u64, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                acc += fh.squared_norm(&v, &mut scratch);
+            }
+            black_box(acc)
+        });
+        bench.record("sketch_throughput", &m);
+        rows.push(m);
+    }
+    print_table("feature hashing sign modes (per non-zero)", &rows);
+}
+
+/// LSH build + query latency on MNIST-like data (the Figure 5 operating
+/// point K = L = 10). Weak hashing inflates buckets on structured data,
+/// which shows up here as *slower queries*, not just worse quality.
+pub fn lsh_query(bench: &mut Bench) {
+    let (n_db, n_q) = if bench.is_quick() { (400, 40) } else { (4000, 400) };
+    let (db_ds, q_ds) = crate::data::mnist_like::default_split(n_db, n_q, 42);
+    let db = db_ds.as_sets();
+    let queries = q_ds.as_sets();
+    println!("lsh_query: db={} queries={} K=L=10", db.len(), queries.len());
+
+    for fam in [HashFamily::MixedTab, HashFamily::MultiplyShift, HashFamily::Murmur3] {
+        let mut rows = Vec::new();
+        let mut index = LshIndex::new(LshParams::new(10, 10), fam, 7);
+        let m = bench.measure(&format!("build/{}", fam.id()), db.len() as u64, || {
+            index = LshIndex::new(LshParams::new(10, 10), fam, 7);
+            for (i, s) in db.iter().enumerate() {
+                index.insert(i as u32, s);
+            }
+            index.len()
+        });
+        bench.record("lsh_query", &m);
+        rows.push(m);
+        let mut retrieved_total = 0usize;
+        let m = bench.measure(&format!("query/{}", fam.id()), queries.len() as u64, || {
+            retrieved_total = 0;
+            for q in &queries {
+                retrieved_total += black_box(index.query(q)).len();
+            }
+            retrieved_total
+        });
+        bench.record("lsh_query", &m);
+        rows.push(m);
+        print_table(&format!("LSH {} (per item)", fam.id()), &rows);
+        println!(
+            "  retrieved/query = {:.1}, max bucket = {}",
+            retrieved_total as f64 / queries.len() as f64,
+            index.max_bucket()
+        );
+    }
+}
+
+fn coordinator_workload(n: usize, seed: u64) -> Vec<(Vec<u32>, Vec<f64>)> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n)
+        .map(|_| {
+            let nnz = rng.range(50, 450);
+            (
+                (0..nnz).map(|_| rng.next_u32() % 1_000_000).collect(),
+                (0..nnz).map(|_| rng.next_f64() - 0.5).collect(),
+            )
+        })
+        .collect()
+}
+
+fn coordinator_drive(
+    c: &Arc<Coordinator>,
+    clients: usize,
+    per_client: usize,
+    seed: u64,
+) -> (f64, Summary, u64) {
+    let done = Arc::new(AtomicU64::new(0));
+    let lat_all = Arc::new(std::sync::Mutex::new(Summary::new()));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|cl| {
+            let c = Arc::clone(c);
+            let done = Arc::clone(&done);
+            let lat_all = Arc::clone(&lat_all);
+            std::thread::spawn(move || {
+                let work = coordinator_workload(per_client, seed + cl as u64);
+                let mut lat = Summary::new();
+                for (idx, vals) in work {
+                    let t = Instant::now();
+                    let resp = c.handle(Request::FhTransform {
+                        indices: idx,
+                        values: vals,
+                    });
+                    lat.add(t.elapsed().as_micros() as f64);
+                    if matches!(resp, Response::Fh { .. }) {
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let mut g = lat_all.lock().unwrap();
+                for &v in lat.values() {
+                    g.add(v);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = done.load(Ordering::Relaxed);
+    let lat = Arc::try_unwrap(lat_all).unwrap().into_inner().unwrap();
+    (wall, lat, total)
+}
+
+/// Coordinator end-to-end — FH request latency/throughput through the full
+/// service (router → batcher → PJRT executor → scatter) under closed-loop
+/// concurrent clients, vs the native path.
+pub fn coordinator_service(bench: &mut Bench) {
+    let (clients, per_client) = if bench.is_quick() { (4, 25) } else { (8, 250) };
+    println!("coordinator_service: {clients} closed-loop clients × {per_client} FH requests");
+
+    for (label, enable_pjrt) in [("pjrt+batcher", true), ("native-only", false)] {
+        let c = Arc::new(Coordinator::new(CoordinatorConfig {
+            enable_pjrt,
+            fh_dim: 128,
+            max_delay_us: 200,
+            ..Default::default()
+        }));
+        if enable_pjrt && !c.pjrt_enabled() {
+            println!("  {label}: pjrt unavailable (run `make artifacts`), skipping");
+            continue;
+        }
+        let (wall, lat, total) = coordinator_drive(&c, clients, per_client, 99);
+        let (p50, p90, p99) = lat.latency_quantiles();
+        let snap = c.metrics.snapshot();
+        let path_note = match (
+            snap.get("fh_pjrt_rows").and_then(|j| j.as_i64()),
+            snap.get("fh_native_rows").and_then(|j| j.as_i64()),
+        ) {
+            (Some(p), Some(n)) => format!("rows pjrt={p} native={n}"),
+            _ => String::new(),
+        };
+        let rps = total as f64 / wall;
+        println!(
+            "  {label:<14} {} req/s  lat p50={p50:.0}µs p90={p90:.0}µs p99={p99:.0}µs  occupancy={:.2}  {}",
+            fmt_rate(rps),
+            c.metrics.mean_batch_occupancy(),
+            path_note
+        );
+        bench.record_rate(
+            "coordinator_service",
+            &format!("{label}/req_rate"),
+            rps,
+            if rps > 0.0 { 1e9 / rps } else { 0.0 },
+        );
+        // Smoke assertion: everything completed.
+        assert_eq!(total as usize, clients * per_client);
+    }
+}
+
+/// PJRT artifact execution — FH and OPH batch latency/throughput vs the
+/// native Rust path for the same work. Skips (recording nothing) without
+/// the `xla` feature or built artifacts.
+pub fn runtime_pjrt(bench: &mut Bench) {
+    if cfg!(not(feature = "xla")) {
+        println!("runtime_pjrt: built without the `xla` feature (stub engine); skipping");
+        return;
+    }
+    use crate::runtime::artifact::{ArtifactKind, Manifest};
+    use crate::runtime::pjrt::PjrtEngine;
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        println!("runtime_pjrt: artifacts/ not built — run `make artifacts`; skipping");
+        return;
+    };
+    let Some(meta) = manifest.find_fh(128, 512).cloned() else {
+        println!("runtime_pjrt: no fh d'=128 artifact; skipping");
+        return;
+    };
+    let ArtifactKind::Fh { batch, nnz, dim } = meta.kind else {
+        unreachable!()
+    };
+    println!("runtime_pjrt: artifact {} [{batch}x{nnz}] -> d'={dim}", meta.name);
+    let engine = PjrtEngine::load(&Manifest {
+        artifacts: vec![meta.clone()],
+    })
+    .expect("engine");
+
+    // Batch of realistic sparse vectors.
+    let fh = FeatureHasher::new(HashFamily::MixedTab, 42, dim, SignMode::Paired);
+    let mut rng = Xoshiro256::new(3);
+    let vectors: Vec<SparseVector> = (0..batch)
+        .map(|_| {
+            let n = rng.range(100, 500);
+            SparseVector::new(
+                (0..n).map(|_| rng.next_u32() % 1_000_000).collect(),
+                (0..n).map(|_| rng.next_f64() - 0.5).collect(),
+            )
+        })
+        .collect();
+    let mut bins = Vec::with_capacity(batch * nnz);
+    let mut vals = Vec::with_capacity(batch * nnz);
+    for v in &vectors {
+        let (mut b, mut x) = fh.plan(v, nnz);
+        bins.append(&mut b);
+        vals.append(&mut x);
+    }
+
+    let mut rows = Vec::new();
+    let m = bench.measure("pjrt_fh_batch", batch as u64, || {
+        black_box(engine.run_fh(&meta.name, &bins, &vals).unwrap().sqnorm[0])
+    });
+    bench.record("runtime_pjrt", &m);
+    rows.push(m);
+    let mut scratch = Scratch::new();
+    let m = bench.measure("native_fh_batch", batch as u64, || {
+        let mut acc = 0.0;
+        for v in &vectors {
+            acc += fh.squared_norm(v, &mut scratch);
+        }
+        black_box(acc)
+    });
+    bench.record("runtime_pjrt", &m);
+    rows.push(m);
+    print_table("FH batch of 16 vectors (per vector)", &rows);
+
+    if let Some(oph_meta) = manifest.find_oph(200, 512).cloned() {
+        let ArtifactKind::Oph { batch, nnz, k } = oph_meta.kind else {
+            unreachable!()
+        };
+        let engine = PjrtEngine::load(&Manifest {
+            artifacts: vec![oph_meta.clone()],
+        })
+        .expect("engine");
+        let hasher = HashFamily::MixedTab.build(7);
+        let mut h = vec![0i32; batch * nnz];
+        let mut valid = vec![0i32; batch * nnz];
+        let sets: Vec<Vec<u32>> = (0..batch)
+            .map(|_| (0..400).map(|_| rng.next_u32()).collect())
+            .collect();
+        for (r, set) in sets.iter().enumerate() {
+            for (i, &x) in set.iter().enumerate() {
+                h[r * nnz + i] = hasher.hash(x) as i32;
+                valid[r * nnz + i] = 1;
+            }
+        }
+        let sketcher = OneHashSketcher::new(
+            HashFamily::MixedTab.build(7),
+            k,
+            BinLayout::Mod,
+            DensifyMode::None,
+        );
+        let mut rows = Vec::new();
+        let m = bench.measure("pjrt_oph_batch", batch as u64, || {
+            black_box(engine.run_oph(&oph_meta.name, &h, &valid).unwrap()[0])
+        });
+        bench.record("runtime_pjrt", &m);
+        rows.push(m);
+        let m = bench.measure("native_oph_batch", batch as u64, || {
+            let mut acc = 0u64;
+            for s in &sets {
+                acc ^= sketcher.sketch_raw_with(s, &mut scratch).bins[0];
+            }
+            black_box(acc)
+        });
+        bench.record("runtime_pjrt", &m);
+        rows.push(m);
+        print_table("OPH batch of 16 sets (per set)", &rows);
+    }
+}

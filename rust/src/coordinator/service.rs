@@ -158,14 +158,22 @@ impl Coordinator {
                         }
                         Err(e) => {
                             crate::util::logging::warn!("pjrt oph batch failed, native fallback: {e}");
-                            out.extend(chunk.iter().map(|s| self.oph.sketch(s)));
+                            let mut scratch = crate::sketch::Scratch::new();
+                            out.extend(
+                                chunk.iter().map(|s| self.oph.sketch_with(s, &mut scratch)),
+                            );
                         }
                     }
                 }
                 return out;
             }
         }
-        sets.iter().map(|s| self.oph.sketch(s)).collect()
+        // Native batch: one reused scratch across the whole batch, so the
+        // hash buffer is allocated once, not per set.
+        let mut scratch = crate::sketch::Scratch::new();
+        sets.iter()
+            .map(|s| self.oph.sketch_with(s, &mut scratch))
+            .collect()
     }
 
     pub fn config(&self) -> &CoordinatorConfig {

@@ -12,8 +12,9 @@ use crate::data::sparse::SparseVector;
 use crate::data::synthetic::{fh_vector1, fh_vector2};
 use crate::hash::HashFamily;
 use crate::sketch::feature_hash::{FeatureHasher, SignMode};
-use crate::util::rng::Xoshiro256;
+use crate::sketch::Scratch;
 use crate::util::error::Result;
+use crate::util::rng::Xoshiro256;
 
 fn run_vector(
     ctx: &ExpContext,
@@ -32,7 +33,7 @@ fn run_vector(
     };
     let out = panel.run(ctx, reps, move |family, rep_seed| {
         let fh = FeatureHasher::new(family, rep_seed, dim, SignMode::Separate);
-        let mut scratch = Vec::new();
+        let mut scratch = Scratch::new();
         fh.squared_norm(v, &mut scratch)
     })?;
     print_verdict(&out);

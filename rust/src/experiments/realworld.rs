@@ -17,6 +17,7 @@ use crate::data::sparse::Dataset;
 use crate::data::{libsvm, mnist_like, news20_like};
 use crate::hash::HashFamily;
 use crate::sketch::feature_hash::{FeatureHasher, SignMode};
+use crate::sketch::Scratch;
 use crate::util::error::Result;
 
 /// Load (or synthesise) a dataset by name.
@@ -86,7 +87,7 @@ fn run_dataset(
                         .wrapping_add((rep as u64) << 20)
                         ^ super::common::fxhash(family.id());
                     let fh = FeatureHasher::new(family, seed, dim, SignMode::Separate);
-                    let mut scratch = Vec::new();
+                    let mut scratch = Scratch::new();
                     let mut vals = Vec::with_capacity(vs.len());
                     for v in vs.iter() {
                         vals.push(fh.squared_norm(v, &mut scratch));

@@ -15,10 +15,10 @@ use crate::hash::HashFamily;
 use crate::sketch::bbit::BbitSketch;
 use crate::sketch::feature_hash::{FeatureHasher, SignMode};
 use crate::sketch::oph::{BinLayout, OneHashSketcher};
-use crate::sketch::DensifyMode;
+use crate::sketch::{DensifyMode, Scratch};
 use crate::util::csv::{self, CsvWriter};
-use crate::util::rng::Xoshiro256;
 use crate::util::error::Result;
+use crate::util::rng::Xoshiro256;
 
 fn strong_baseline_mse(rows: &[ExpSummary]) -> f64 {
     let strong = [HashFamily::MixedTab, HashFamily::Murmur3, HashFamily::Poly20];
@@ -112,7 +112,7 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<ExpSummary>> {
             for rep in 0..reps {
                 let seed = ctx.seed ^ (rep as u64) << 16 ^ super::common::fxhash(family.id());
                 let fh = FeatureHasher::new(family, seed, dim, SignMode::Separate);
-                let mut scratch = Vec::new();
+                let mut scratch = Scratch::new();
                 summary.add(fh.squared_norm(&vec2, &mut scratch));
             }
             rows.push(ExpSummary::from_summary(

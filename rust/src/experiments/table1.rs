@@ -13,6 +13,7 @@ use super::common::{ExpContext, ExpSummary};
 use crate::data::news20_like::{self, News20LikeParams};
 use crate::hash::HashFamily;
 use crate::sketch::feature_hash::{FeatureHasher, SignMode};
+use crate::sketch::Scratch;
 use crate::util::bench::{fmt_ns, Bench};
 use crate::util::csv::{self, CsvWriter};
 use crate::util::rng::Xoshiro256;
@@ -61,7 +62,7 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<ExpSummary>> {
         } else {
             (&news.vectors[..], 1.0)
         };
-        let mut scratch = Vec::new();
+        let mut scratch = Scratch::new();
         let m_fh = bench.measure(&format!("{}_fh", family.id()), docs.len() as u64, || {
             let mut acc = 0.0;
             for v in docs {

@@ -66,6 +66,16 @@ use crate::util::rng::SplitMix64;
 /// Implementations must be deterministic for a fixed seed and cheap to call
 /// in a tight loop. `hash_slice` exists so the hot loop monomorphises inside
 /// each implementation (one dynamic dispatch per *batch*, not per key).
+///
+/// Every family in [`HashFamily::TABLE1`] overrides `hash_slice`; the
+/// sketches (`sketch::oph`, `sketch::minhash`, `sketch::simhash`,
+/// `sketch::feature_hash`) route whole sets/documents through it via a
+/// reusable `sketch::Scratch` buffer, which is what makes the measured
+/// Table 1 throughput (`mixtab bench`, `benches/table1_hash_speed.rs`)
+/// reflect the hash function rather than virtual-call overhead.
+/// `hash_slice(keys, out)` must be observably equivalent to calling `hash`
+/// per key — the batched/per-key sketch equivalence property tests rely on
+/// it.
 pub trait Hasher32: Send + Sync {
     /// Hash one 32-bit key to a 32-bit value.
     fn hash(&self, x: u32) -> u32;

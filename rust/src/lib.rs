@@ -24,6 +24,10 @@
 //!   worker pool and TCP front-end for the sketching service.
 //! * [`experiments`] — one driver per paper table/figure (Table 1, Figures
 //!   2–11) regenerating the evaluation.
+//! * [`benchsuite`] — the five bench workloads as in-process functions,
+//!   shared by the `cargo bench` targets and the `mixtab bench` CLI, which
+//!   writes machine-readable `BENCH_*.json` reports and gates them against
+//!   a committed baseline (see `util::bench`).
 //! * [`util`] — self-contained substrate (error handling, logging, JSON,
 //!   config, CSV, RNG, thread pool, CLI parsing, property-testing, bench
 //!   harness) — the offline registry ships none of the usual crates, so
@@ -40,6 +44,7 @@ pub mod ml;
 pub mod runtime;
 pub mod coordinator;
 pub mod experiments;
+pub mod benchsuite;
 
 /// Crate-wide result type (first-party; see [`util::error`]).
 pub type Result<T> = util::error::Result<T>;

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! mixtab exp <id|all> [--seed N] [--scale F] [--out DIR] [--data-dir DIR]
+//! mixtab bench [--quick] [--only NAME] [--json PATH] [--baseline PATH] [--tolerance F]
 //! mixtab serve [--config FILE] [--listen ADDR]
 //! mixtab info
 //! ```
@@ -10,6 +11,7 @@ use mixtab::coordinator::config::CoordinatorConfig;
 use mixtab::coordinator::server::Server;
 use mixtab::coordinator::Coordinator;
 use mixtab::experiments::{self, ExpContext};
+use mixtab::util::bench::Bench;
 use mixtab::util::cli::Command;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -24,6 +26,26 @@ fn cli() -> Command {
                 .opt("out", 'o', "DIR", "output directory", Some("results"))
                 .opt("data-dir", '\0', "DIR", "directory with real libsvm datasets", None)
                 .opt("threads", 'j', "N", "worker threads (0 = all cores)", Some("0")),
+        )
+        .subcommand(
+            Command::new("bench", "run the in-process bench suite; write/compare BENCH_*.json")
+                .flag("quick", 'q', "quick/smoke workloads (also via MIXTAB_BENCH_QUICK=1)")
+                .opt("only", '\0', "NAME", "run a single workload (listed by --help)", None)
+                .opt("json", '\0', "PATH", "write the machine-readable report here", None)
+                .opt(
+                    "baseline",
+                    '\0',
+                    "PATH",
+                    "compare against this BENCH_*.json; exit non-zero on regression",
+                    None,
+                )
+                .opt(
+                    "tolerance",
+                    '\0',
+                    "F",
+                    "allowed fractional slowdown per case before it regresses",
+                    Some("0.25"),
+                ),
         )
         .subcommand(
             Command::new("serve", "run the sketching service")
@@ -50,6 +72,7 @@ fn main() {
     }
     let result = match parsed.subcommand() {
         Some(("exp", sub)) => run_exp(sub),
+        Some(("bench", sub)) => run_bench(sub),
         Some(("serve", sub)) => run_serve(sub),
         Some(("info", _)) => run_info(),
         _ => {
@@ -103,6 +126,83 @@ fn run_exp(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
                 .map(|(k, v)| format!("{k}={v:.2}"))
                 .unwrap_or_default()
         );
+    }
+    Ok(())
+}
+
+fn run_bench(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
+    if sub.help_requested() {
+        let names: Vec<&str> = mixtab::benchsuite::ALL.iter().map(|(n, _)| *n).collect();
+        println!("{}\nWORKLOADS:\n  {}", cli().help_text(), names.join("\n  "));
+        return Ok(());
+    }
+    let quick = sub.flag("quick")
+        || std::env::var("MIXTAB_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut bench = Bench::with_quick(quick);
+    let only = sub.get("only");
+    let mut ran = 0usize;
+    for (name, workload) in mixtab::benchsuite::ALL {
+        if only.is_none() || only == Some(*name) {
+            workload(&mut bench);
+            ran += 1;
+        }
+    }
+    mixtab::ensure!(
+        ran > 0,
+        "unknown workload '{}' (expected one of: {})",
+        only.unwrap_or_default(),
+        mixtab::benchsuite::ALL
+            .iter()
+            .map(|(n, _)| *n)
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    if let Some(path) = sub.get("json") {
+        bench.write_json(path)?;
+        println!(
+            "\nwrote {path}: {} case(s), quick={quick}",
+            bench.records().len()
+        );
+    }
+    if let Some(baseline) = sub.get("baseline") {
+        let tolerance = sub.get_f64("tolerance")?;
+        let mut regressions = bench.compare(baseline, tolerance)?;
+        // With --only, skipped workloads are legitimately absent from the
+        // current run — gate only the workload that ran.
+        if let Some(o) = only {
+            regressions.retain(|r| r.bench == o);
+            println!("bench compare: --only {o} set, gating only that workload's cases");
+        }
+        if regressions.is_empty() {
+            println!(
+                "bench compare vs {baseline}: no case more than {:.0}% slower",
+                tolerance * 100.0
+            );
+        } else {
+            eprintln!(
+                "bench compare vs {baseline} (tolerance {:.0}%):",
+                tolerance * 100.0
+            );
+            for r in &regressions {
+                if r.current_keys_per_sec == 0.0 {
+                    eprintln!("  {}/{}: case missing from current run", r.bench, r.case);
+                } else {
+                    eprintln!(
+                        "  {}/{}: {} -> {} keys/s ({:.1}% slower)",
+                        r.bench,
+                        r.case,
+                        mixtab::util::bench::fmt_rate(r.baseline_keys_per_sec),
+                        mixtab::util::bench::fmt_rate(r.current_keys_per_sec),
+                        r.loss * 100.0
+                    );
+                }
+            }
+            mixtab::bail!(
+                "{} bench case(s) regressed beyond {:.0}% vs {baseline}",
+                regressions.len(),
+                tolerance * 100.0
+            );
+        }
     }
     Ok(())
 }

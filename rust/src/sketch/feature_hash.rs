@@ -11,7 +11,12 @@
 //! the Rust-native path. The batched PJRT path (Layer 1/2) lives in
 //! `python/compile/` and is fed by [`FeatureHasher::plan`], which exposes
 //! the (bin, signed value) pairs for a batch without materialising `v'`.
+//!
+//! Per-document hash batches go through a caller-provided
+//! [`Scratch`] buffer, so a transform stream performs zero hash-buffer
+//! allocations after warm-up (the buffers settle at the largest document).
 
+use super::scratch::Scratch;
 use crate::data::sparse::SparseVector;
 use crate::hash::{HashFamily, Hasher32};
 
@@ -106,10 +111,11 @@ impl FeatureHasher {
         }
     }
 
-    /// Transform a sparse vector into the dense d'-dim output.
+    /// Transform a sparse vector into the dense d'-dim output. Convenience
+    /// wrapper around [`Self::transform_into`] with a one-shot [`Scratch`].
     pub fn transform(&self, v: &SparseVector) -> Vec<f64> {
         let mut out = vec![0.0; self.output_dim];
-        self.transform_into(v, &mut out);
+        self.transform_into(v, &mut out, &mut Scratch::with_capacity(v.nnz()));
         out
     }
 
@@ -117,15 +123,17 @@ impl FeatureHasher {
     ///
     /// Hashing goes through [`Hasher32::hash_slice`] so the per-key loop is
     /// monomorphic inside the hasher (one dynamic dispatch per vector, not
-    /// per non-zero) — worth ~25% on News20-sized documents (§Perf).
-    pub fn transform_into(&self, v: &SparseVector, out: &mut [f64]) {
+    /// per non-zero) — worth ~25% on News20-sized documents (§Perf). The
+    /// hash batches land in `scratch`, so a loop reusing one [`Scratch`]
+    /// allocates nothing per document.
+    pub fn transform_into(&self, v: &SparseVector, out: &mut [f64], scratch: &mut Scratch) {
         assert_eq!(out.len(), self.output_dim);
         out.fill(0.0);
         let n = v.indices.len();
-        let mut hbuf = vec![0u32; n];
-        self.hasher.hash_slice(&v.indices, &mut hbuf);
         match self.mode {
             SignMode::Paired => {
+                let hbuf = scratch.hashes_mut(n);
+                self.hasher.hash_slice(&v.indices, hbuf);
                 for (&h, &val) in hbuf.iter().zip(&v.values) {
                     let bin = self.fm.rem(h & 0x7FFF_FFFF) as usize;
                     let sign = if h & 0x8000_0000 != 0 { -1.0 } else { 1.0 };
@@ -133,12 +141,13 @@ impl FeatureHasher {
                 }
             }
             SignMode::Separate => {
-                let mut sbuf = vec![0u32; n];
+                let (hbuf, sbuf) = scratch.hash_pair_mut(n);
+                self.hasher.hash_slice(&v.indices, hbuf);
                 self.sign_hasher
                     .as_ref()
                     .unwrap()
-                    .hash_slice(&v.indices, &mut sbuf);
-                for ((&h, &s), &val) in hbuf.iter().zip(&sbuf).zip(&v.values) {
+                    .hash_slice(&v.indices, sbuf);
+                for ((&h, &s), &val) in hbuf.iter().zip(sbuf.iter()).zip(&v.values) {
                     let bin = self.fm.rem(h) as usize;
                     let sign = if s & 1 == 1 { -1.0 } else { 1.0 };
                     out[bin] += sign * val;
@@ -148,10 +157,17 @@ impl FeatureHasher {
     }
 
     /// ‖v′‖₂² without materialising `v'` twice — the §4.1/§4.2 statistic.
-    pub fn squared_norm(&self, v: &SparseVector, scratch: &mut Vec<f64>) -> f64 {
-        scratch.resize(self.output_dim, 0.0);
-        self.transform_into(v, &mut scratch[..]);
-        scratch.iter().map(|x| x * x).sum()
+    /// The dense output lives in `scratch` too, so repeated calls are
+    /// allocation-free.
+    pub fn squared_norm(&self, v: &SparseVector, scratch: &mut Scratch) -> f64 {
+        // Take the dense buffer out so `scratch` stays available for the
+        // hash batches inside `transform_into`.
+        let mut dense = std::mem::take(&mut scratch.dense);
+        dense.resize(self.output_dim, 0.0);
+        self.transform_into(v, &mut dense, scratch);
+        let sq = dense.iter().map(|x| x * x).sum();
+        scratch.dense = dense;
+        sq
     }
 
     /// Lowered form for the PJRT batch path: `(bins, signed_values)` for one
@@ -189,7 +205,7 @@ mod tests {
         let v = unit_indicator(&(0..300u32).map(|i| i * 7 + 3).collect::<Vec<_>>());
         let mut sum = 0.0;
         let reps = 80;
-        let mut scratch = Vec::new();
+        let mut scratch = Scratch::new();
         for seed in 0..reps {
             let fh = FeatureHasher::new(HashFamily::MixedTab, seed, 128, SignMode::Separate);
             sum += fh.squared_norm(&v, &mut scratch);
@@ -203,7 +219,7 @@ mod tests {
         let v = unit_indicator(&(0..300u32).collect::<Vec<_>>());
         let mut sum = 0.0;
         let reps = 80;
-        let mut scratch = Vec::new();
+        let mut scratch = Scratch::new();
         for seed in 0..reps {
             let fh = FeatureHasher::new(HashFamily::MixedTab, seed, 128, SignMode::Paired);
             sum += fh.squared_norm(&v, &mut scratch);
@@ -276,7 +292,7 @@ mod tests {
         assert_eq!(nonzero.len(), 1);
         assert!((out[nonzero[0]].abs() - 1.0).abs() < 1e-12);
         // And ‖v'‖² is exactly 1 regardless of hash function.
-        let mut scratch = Vec::new();
+        let mut scratch = Scratch::new();
         assert!((fh.squared_norm(&v, &mut scratch) - 1.0).abs() < 1e-12);
     }
 }

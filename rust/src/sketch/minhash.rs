@@ -3,7 +3,13 @@
 //! Kept as (a) a correctness oracle for the OPH estimator on random data and
 //! (b) the ablation point motivating OPH: `sketch()` here costs k hash
 //! evaluations per element versus OPH's one.
+//!
+//! Each of the k repetitions hashes the whole set through
+//! [`Hasher32::hash_slice`] into a [`Scratch`] buffer, so the cost is k
+//! dynamic dispatches per set (not `k·|A|`); the per-key reference survives
+//! as [`MinHash::sketch_per_key`] for equivalence testing.
 
+use super::scratch::Scratch;
 use crate::hash::{HashFamily, Hasher32};
 
 /// k independent MinHash repetitions.
@@ -25,7 +31,34 @@ impl MinHash {
     }
 
     /// Sketch: `S[i] = min_{a ∈ A} h_i(a)`. Empty sets get all-`u32::MAX`.
+    /// Convenience wrapper around [`Self::sketch_with`] with a one-shot
+    /// [`Scratch`].
     pub fn sketch(&self, set: &[u32]) -> Vec<u32> {
+        self.sketch_with(set, &mut Scratch::with_capacity(set.len()))
+    }
+
+    /// Sketch using a caller-provided [`Scratch`] (hot path): one
+    /// [`Hasher32::hash_slice`] batch per repetition, then a monomorphic
+    /// min-reduction over the buffer. Bit-identical to
+    /// [`Self::sketch_per_key`].
+    pub fn sketch_with(&self, set: &[u32], scratch: &mut Scratch) -> Vec<u32> {
+        let mut out = vec![u32::MAX; self.hashers.len()];
+        let hashes = scratch.hashes_mut(set.len());
+        for (o, h) in out.iter_mut().zip(&self.hashers) {
+            h.hash_slice(set, &mut hashes[..]);
+            let mut m = u32::MAX;
+            for &v in hashes.iter() {
+                m = m.min(v);
+            }
+            *o = m;
+        }
+        out
+    }
+
+    /// Per-key reference for [`Self::sketch_with`] (one dynamic dispatch per
+    /// element per repetition). Correctness oracle for the batched path; not
+    /// for production use.
+    pub fn sketch_per_key(&self, set: &[u32]) -> Vec<u32> {
         let mut out = vec![u32::MAX; self.hashers.len()];
         for (i, h) in self.hashers.iter().enumerate() {
             let mut m = u32::MAX;
@@ -87,5 +120,14 @@ mod tests {
     fn empty_set_sketch_is_max() {
         let mh = MinHash::new(HashFamily::Murmur3, 3, 8);
         assert!(mh.sketch(&[]).iter().all(|&v| v == u32::MAX));
+    }
+
+    #[test]
+    fn batched_matches_per_key() {
+        let mh = MinHash::new(HashFamily::MixedTab, 11, 64);
+        let set: Vec<u32> = (0..500u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        let mut scratch = crate::sketch::scratch::Scratch::new();
+        assert_eq!(mh.sketch_with(&set, &mut scratch), mh.sketch_per_key(&set));
+        assert_eq!(mh.sketch_with(&[], &mut scratch), mh.sketch_per_key(&[]));
     }
 }

@@ -15,6 +15,11 @@
 //! * [`bbit`] — b-bit truncation of minwise sketches (Li–Shrivastava–König),
 //!   discussed in §1.2.
 //! * [`estimators`] — exact Jaccard ground truth and sketch estimators.
+//! * [`scratch`] — reusable [`Scratch`] buffers backing the batched hot
+//!   paths: every sketch hashes whole sets/documents through
+//!   [`crate::hash::Hasher32::hash_slice`] (one dynamic dispatch per batch),
+//!   and the `*_with` method variants reuse caller-owned buffers so steady
+//!   streams allocate nothing per document.
 
 pub mod minhash;
 pub mod oph;
@@ -23,9 +28,11 @@ pub mod feature_hash;
 pub mod simhash;
 pub mod bbit;
 pub mod estimators;
+pub mod scratch;
 
 pub use densify::{densify, DensifyMode};
 pub use estimators::jaccard_exact;
 pub use feature_hash::{FeatureHasher, SignMode};
 pub use minhash::MinHash;
 pub use oph::{OneHashSketcher, OphSketch, EMPTY_BIN};
+pub use scratch::Scratch;

@@ -9,8 +9,16 @@
 //! provided ([`BinLayout`]) and the Figure 1 worked example is reproduced in
 //! the tests with [`BinLayout::Range`]. Experiments use the text's
 //! [`BinLayout::Mod`].
+//!
+//! Sketching is batched: the whole set is hashed through
+//! [`Hasher32::hash_slice`] into a [`Scratch`] buffer before the bin loop,
+//! so the hot path pays one dynamic dispatch per set instead of per
+//! element. The per-key reference path survives as
+//! [`OneHashSketcher::sketch_raw_per_key`] and is property-tested
+//! bit-identical to the batched path for every Table 1 family.
 
 use super::densify::{densify, DensifyMode};
+use super::scratch::Scratch;
 use crate::hash::Hasher32;
 
 /// Sentinel for an empty bin (no element hashed into it). All real values
@@ -60,7 +68,7 @@ impl OneHashSketcher {
     /// itself evaluated on bin indices (any fixed derivation shared between
     /// sketches works; the paper just needs "for each index a random bit").
     pub fn new(hasher: Box<dyn Hasher32>, k: usize, layout: BinLayout, mode: DensifyMode) -> Self {
-        assert!(k >= 1);
+        assert!(k >= 1 && (k as u64) <= (1u64 << 32), "k must fit the hash range");
         let directions = (0..k)
             .map(|i| hasher.hash(0xD1B5_4A32u32.wrapping_add(i as u32)) & 1 == 1)
             .collect();
@@ -81,8 +89,56 @@ impl OneHashSketcher {
         self.hasher.name()
     }
 
-    /// Raw sketch (may contain empty bins).
+    /// Raw sketch (may contain empty bins). Convenience wrapper around
+    /// [`Self::sketch_raw_with`] with a one-shot [`Scratch`].
     pub fn sketch_raw(&self, set: &[u32]) -> OphSketch {
+        self.sketch_raw_with(set, &mut Scratch::with_capacity(set.len()))
+    }
+
+    /// Raw sketch using a caller-provided [`Scratch`] (hot path).
+    ///
+    /// The set is hashed in one [`Hasher32::hash_slice`] call — one dynamic
+    /// dispatch per set, with the per-key loop monomorphised inside the
+    /// hash implementation — then split into (bin, value) pairs.
+    /// Bit-identical to [`Self::sketch_raw_per_key`].
+    pub fn sketch_raw_with(&self, set: &[u32], scratch: &mut Scratch) -> OphSketch {
+        let hashes = scratch.hashes_mut(set.len());
+        self.hasher.hash_slice(set, hashes);
+        let mut bins = vec![EMPTY_BIN; self.k];
+        match self.layout {
+            BinLayout::Mod => {
+                let k = self.k as u64;
+                for &h in hashes.iter() {
+                    let h = h as u64;
+                    let b = (h % k) as usize;
+                    let v = h / k;
+                    if v < bins[b] {
+                        bins[b] = v;
+                    }
+                }
+            }
+            BinLayout::Range => {
+                // Same arithmetic as `range_sketch` with m = 2^32 inlined
+                // over the u32 hash buffer (no u64 widening pass).
+                let range = (1u64 << 32) / self.k as u64;
+                for &h in hashes.iter() {
+                    let h = h as u64;
+                    let b = ((h / range) as usize).min(self.k - 1);
+                    let v = h % range;
+                    if v < bins[b] {
+                        bins[b] = v;
+                    }
+                }
+            }
+        }
+        OphSketch { bins }
+    }
+
+    /// Per-key reference for [`Self::sketch_raw_with`]: one dynamic dispatch
+    /// per element. Kept as the correctness oracle for the batched path
+    /// (`rust/tests/properties.rs` asserts bit-identical output); not for
+    /// production use.
+    pub fn sketch_raw_per_key(&self, set: &[u32]) -> OphSketch {
         let mut bins = vec![EMPTY_BIN; self.k];
         let k = self.k as u64;
         match self.layout {
@@ -107,7 +163,20 @@ impl OneHashSketcher {
 
     /// Densified sketch: no empty bins (unless the set itself is empty).
     pub fn sketch(&self, set: &[u32]) -> OphSketch {
-        let mut s = self.sketch_raw(set);
+        self.sketch_with(set, &mut Scratch::with_capacity(set.len()))
+    }
+
+    /// Densified sketch using a caller-provided [`Scratch`] (hot path).
+    pub fn sketch_with(&self, set: &[u32], scratch: &mut Scratch) -> OphSketch {
+        let mut s = self.sketch_raw_with(set, scratch);
+        densify(&mut s.bins, &self.directions, self.mode);
+        s
+    }
+
+    /// Per-key reference for [`Self::sketch_with`] (reference path +
+    /// densification); see [`Self::sketch_raw_per_key`].
+    pub fn sketch_per_key(&self, set: &[u32]) -> OphSketch {
+        let mut s = self.sketch_raw_per_key(set);
         densify(&mut s.bins, &self.directions, self.mode);
         s
     }
@@ -278,6 +347,25 @@ mod tests {
             (mean - truth).abs() < 0.03,
             "mean {mean} vs truth {truth}"
         );
+    }
+
+    #[test]
+    fn batched_path_matches_per_key_reference() {
+        use crate::sketch::scratch::Scratch;
+        let set: Vec<u32> = (0..777u32).map(|i| i.wrapping_mul(0x9E3779B9)).collect();
+        let mut scratch = Scratch::new();
+        for layout in [BinLayout::Mod, BinLayout::Range] {
+            let sk = OneHashSketcher::new(
+                HashFamily::MixedTab.build(6),
+                100,
+                layout,
+                DensifyMode::Paper,
+            );
+            assert_eq!(sk.sketch_raw_with(&set, &mut scratch), sk.sketch_raw_per_key(&set));
+            assert_eq!(sk.sketch_with(&set, &mut scratch), sk.sketch_per_key(&set));
+            // Empty set: both paths agree on all-empty bins.
+            assert_eq!(sk.sketch_raw_with(&[], &mut scratch), sk.sketch_raw_per_key(&[]));
+        }
     }
 
     #[test]

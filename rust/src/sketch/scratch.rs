@@ -1,0 +1,101 @@
+//! Reusable scratch buffers for the batched sketch hot paths.
+//!
+//! Every sketch in this module hashes a batch of keys through
+//! [`crate::hash::Hasher32::hash_slice`] so the per-key loop monomorphises
+//! inside the hash implementation — one dynamic dispatch per *batch* instead
+//! of per key. The batch buffer itself must live somewhere; allocating it per
+//! document re-introduces a malloc on every sketch call, which dominates for
+//! short sets. [`Scratch`] is that buffer, owned by the caller and reused
+//! across documents:
+//!
+//! ```
+//! use mixtab::hash::HashFamily;
+//! use mixtab::sketch::oph::{BinLayout, OneHashSketcher};
+//! use mixtab::sketch::{DensifyMode, Scratch};
+//!
+//! let sk = OneHashSketcher::new(
+//!     HashFamily::MixedTab.build(1), 64, BinLayout::Mod, DensifyMode::Paper,
+//! );
+//! let mut scratch = Scratch::new();
+//! for doc in [&[1u32, 2, 3][..], &[4, 5][..]] {
+//!     let s = sk.sketch_with(doc, &mut scratch); // zero hash-buffer allocs
+//!     assert_eq!(s.k(), 64);
+//! }
+//! ```
+//!
+//! The convenience entry points (`sketch`, `transform`, …) still exist and
+//! allocate a fresh `Scratch` internally, so one-shot callers keep the
+//! simple API while loops thread a `Scratch` through `*_with` variants.
+
+/// Reusable scratch space for batched sketching.
+///
+/// Holds the per-batch hash output buffers ([`crate::sketch::oph`],
+/// [`crate::sketch::minhash`], [`crate::sketch::simhash`],
+/// [`crate::sketch::feature_hash`]) plus the dense output vector used by
+/// [`crate::sketch::FeatureHasher::squared_norm`]. Buffers only ever grow;
+/// a `Scratch` reused across a stream of documents settles at the largest
+/// document size and stops allocating.
+#[derive(Debug, Clone, Default)]
+pub struct Scratch {
+    /// Primary hash output buffer (bin hashes).
+    pub(crate) hashes: Vec<u32>,
+    /// Secondary hash output buffer (sign hashes in
+    /// [`crate::sketch::SignMode::Separate`] feature hashing).
+    pub(crate) signs: Vec<u32>,
+    /// Dense d'-dimensional output reused by `squared_norm`.
+    pub(crate) dense: Vec<f64>,
+}
+
+impl Scratch {
+    /// Empty scratch; buffers grow on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Scratch pre-sized for batches of up to `keys` keys.
+    pub fn with_capacity(keys: usize) -> Self {
+        Self {
+            hashes: Vec::with_capacity(keys),
+            signs: Vec::new(),
+            dense: Vec::new(),
+        }
+    }
+
+    /// The primary hash buffer resized to `n` entries (contents
+    /// unspecified — callers overwrite via `hash_slice`).
+    pub(crate) fn hashes_mut(&mut self, n: usize) -> &mut [u32] {
+        self.hashes.resize(n, 0);
+        &mut self.hashes[..n]
+    }
+
+    /// Two independent `n`-entry hash buffers (bin hashes, sign hashes).
+    pub(crate) fn hash_pair_mut(&mut self, n: usize) -> (&mut [u32], &mut [u32]) {
+        self.hashes.resize(n, 0);
+        self.signs.resize(n, 0);
+        (&mut self.hashes[..n], &mut self.signs[..n])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_resize_and_reuse() {
+        let mut s = Scratch::new();
+        assert_eq!(s.hashes_mut(10).len(), 10);
+        let cap = s.hashes.capacity();
+        // Shrinking the logical size keeps the allocation.
+        assert_eq!(s.hashes_mut(3).len(), 3);
+        assert_eq!(s.hashes.capacity(), cap);
+        let (h, g) = s.hash_pair_mut(7);
+        assert_eq!((h.len(), g.len()), (7, 7));
+    }
+
+    #[test]
+    fn with_capacity_starts_empty() {
+        let s = Scratch::with_capacity(64);
+        assert!(s.hashes.is_empty());
+        assert!(s.hashes.capacity() >= 64);
+    }
+}

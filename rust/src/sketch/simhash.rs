@@ -9,6 +9,7 @@
 //! function of `(i, j)` — so SimHash quality also reduces to basic-hash
 //! quality, the paper's theme.
 
+use super::scratch::Scratch;
 use crate::data::sparse::SparseVector;
 use crate::hash::{HashFamily, Hasher32};
 
@@ -30,8 +31,35 @@ impl SimHash {
         self.hashers.len()
     }
 
-    /// Sketch: bit i = sign of the ±1 projection by hasher i.
+    /// Sketch: bit i = sign of the ±1 projection by hasher i. Convenience
+    /// wrapper around [`Self::sketch_with`] with a one-shot [`Scratch`].
     pub fn sketch(&self, v: &SparseVector) -> Vec<bool> {
+        self.sketch_with(v, &mut Scratch::with_capacity(v.indices.len()))
+    }
+
+    /// Sketch using a caller-provided [`Scratch`] (hot path): per output
+    /// bit, one [`crate::hash::Hasher32::hash_slice`] batch over the
+    /// non-zero indices, then a monomorphic ±1 accumulation. Bit-identical
+    /// to [`Self::sketch_per_key`].
+    pub fn sketch_with(&self, v: &SparseVector, scratch: &mut Scratch) -> Vec<bool> {
+        let hashes = scratch.hashes_mut(v.indices.len());
+        let mut out = Vec::with_capacity(self.hashers.len());
+        for h in &self.hashers {
+            h.hash_slice(&v.indices, &mut hashes[..]);
+            let mut acc = 0.0;
+            for (&hv, &val) in hashes.iter().zip(&v.values) {
+                let r = if hv & 1 == 1 { 1.0 } else { -1.0 };
+                acc += r * val;
+            }
+            out.push(acc >= 0.0);
+        }
+        out
+    }
+
+    /// Per-key reference for [`Self::sketch_with`] (one dynamic dispatch per
+    /// non-zero per bit). Correctness oracle for the batched path; not for
+    /// production use.
+    pub fn sketch_per_key(&self, v: &SparseVector) -> Vec<bool> {
         self.hashers
             .iter()
             .map(|h| {
@@ -76,6 +104,18 @@ mod tests {
         let neg = SparseVector::new(vec![1, 2, 3], vec![-0.5, 0.25, -1.0]);
         let est = sh.estimate_cosine(&sh.sketch(&v), &sh.sketch(&neg));
         assert!(est < -0.9, "est {est}");
+    }
+
+    #[test]
+    fn batched_matches_per_key() {
+        let mut rng = Xoshiro256::new(3);
+        let v = SparseVector::new(
+            (0..300u32).map(|i| i * 5 + 1).collect(),
+            (0..300).map(|_| rng.normal()).collect(),
+        );
+        let sh = SimHash::new(HashFamily::MixedTab, 8, 128);
+        let mut scratch = crate::sketch::scratch::Scratch::new();
+        assert_eq!(sh.sketch_with(&v, &mut scratch), sh.sketch_per_key(&v));
     }
 
     #[test]

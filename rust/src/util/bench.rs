@@ -1,11 +1,26 @@
-//! Measurement harness for `cargo bench` targets.
+//! Measurement harness for `cargo bench` targets and the `mixtab bench`
+//! perf-regression gate.
 //!
 //! Criterion is not available offline, so the bench binaries (declared with
 //! `harness = false`) use this module: warmup, repeated timed runs, robust
 //! statistics (median / MAD / min), throughput derivation, and an aligned
 //! table printer whose rows mirror the paper's Table 1.
+//!
+//! On top of the human-readable tables, [`Bench`] accumulates
+//! machine-readable [`CaseRecord`]s: [`Bench::record`] captures a
+//! [`Measurement`], [`Bench::write_json`] dumps them as a `BENCH_<name>.json`
+//! report (schema [`BENCH_SCHEMA`], via [`crate::util::json`]), and
+//! [`Bench::compare`] diffs the current records against a committed baseline
+//! report, returning the per-case [`Regression`]s beyond a tolerance. CI's
+//! `bench-smoke` job is built on exactly this: run `mixtab bench --quick
+//! --json …`, upload the report, fail on regressions vs
+//! `BENCH_baseline_quick.json`.
 
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+use crate::{ensure, format_err};
 use std::hint::black_box;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// One benchmark measurement summary.
@@ -68,31 +83,40 @@ fn percentile(sorted: &[u64], p: f64) -> u64 {
     sorted[idx]
 }
 
-/// Bench configuration.
+/// Bench configuration plus the machine-readable records accumulated so
+/// far (see [`Bench::record`] / [`Bench::write_json`] / [`Bench::compare`]).
 #[derive(Debug, Clone)]
 pub struct Bench {
     pub warmup_runs: usize,
     pub runs: usize,
     pub min_total: Duration,
     quick: bool,
+    records: Vec<CaseRecord>,
 }
 
 impl Default for Bench {
     fn default() -> Self {
         // MIXTAB_BENCH_QUICK=1 shrinks benches for CI/smoke use.
         let quick = std::env::var("MIXTAB_BENCH_QUICK").ok().as_deref() == Some("1");
-        Self {
-            warmup_runs: if quick { 1 } else { 3 },
-            runs: if quick { 3 } else { 15 },
-            min_total: Duration::from_millis(if quick { 1 } else { 50 }),
-            quick,
-        }
+        Self::with_quick(quick)
     }
 }
 
 impl Bench {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Explicit quick/full selection (the `mixtab bench` CLI flag; the env
+    /// default of [`Bench::new`] only covers the `cargo bench` targets).
+    pub fn with_quick(quick: bool) -> Self {
+        Self {
+            warmup_runs: if quick { 1 } else { 3 },
+            runs: if quick { 3 } else { 15 },
+            min_total: Duration::from_millis(if quick { 1 } else { 50 }),
+            quick,
+            records: Vec::new(),
+        }
     }
 
     /// True when running in quick/smoke mode.
@@ -124,6 +148,242 @@ impl Bench {
             items_per_run: items,
         }
     }
+
+    /// Capture a measurement as a machine-readable case record under the
+    /// given bench (workload) name. The measurement's own name is the case
+    /// name; throughput-less measurements record 0 keys/sec.
+    pub fn record(&mut self, bench: &str, m: &Measurement) {
+        let keys_per_sec = m.throughput().unwrap_or(0.0);
+        let ns_per_key = m.ns_per_item().unwrap_or(0.0);
+        self.record_rate(bench, &m.name, keys_per_sec, ns_per_key);
+    }
+
+    /// Capture a rate measured outside [`Bench::measure`] (e.g. the
+    /// coordinator's closed-loop request rate).
+    pub fn record_rate(&mut self, bench: &str, case: &str, keys_per_sec: f64, ns_per_key: f64) {
+        self.records.push(CaseRecord {
+            bench: bench.to_string(),
+            case: case.to_string(),
+            keys_per_sec,
+            ns_per_key,
+            quick: self.quick,
+            git_sha: git_sha(),
+        });
+    }
+
+    /// Records accumulated so far.
+    pub fn records(&self) -> &[CaseRecord] {
+        &self.records
+    }
+
+    /// The accumulated records as a `BENCH_*.json` document
+    /// (schema [`BENCH_SCHEMA`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj().set("schema", BENCH_SCHEMA).set(
+            "records",
+            Json::Arr(self.records.iter().map(CaseRecord::to_json).collect()),
+        )
+    }
+
+    /// Write the accumulated records as a pretty-printed `BENCH_*.json`.
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let text = json::to_string_pretty(&self.to_json());
+        std::fs::write(path, text + "\n")
+            .with_context(|| format!("write bench report {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Diff the accumulated records against a baseline `BENCH_*.json`.
+    ///
+    /// `tolerance` is the allowed fractional throughput loss per case (0.25
+    /// = a case may be up to 25% slower than the baseline before it counts
+    /// as a regression). Returns one [`Regression`] per offending case —
+    /// including baseline cases missing from the current run — ordered as
+    /// in the baseline; empty means the gate passes. Errors if the baseline
+    /// was recorded in the other quick/full mode: the two workload sizes
+    /// produce systematically different numbers and must not be diffed.
+    pub fn compare(
+        &self,
+        baseline_path: impl AsRef<Path>,
+        tolerance: f64,
+    ) -> Result<Vec<Regression>> {
+        ensure!(
+            tolerance >= 0.0 && tolerance.is_finite(),
+            "tolerance must be a non-negative number (got {tolerance})"
+        );
+        let path = baseline_path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read bench baseline {}", path.display()))?;
+        let baseline = parse_report(&text)
+            .with_context(|| format!("parse bench baseline {}", path.display()))?;
+        if let Some(b) = baseline.iter().find(|b| b.quick != self.quick) {
+            crate::bail!(
+                "bench mode mismatch: this run has quick={} but baseline case {}/{} \
+                 was recorded with quick={} — regenerate the baseline in the matching mode",
+                self.quick,
+                b.bench,
+                b.case,
+                b.quick
+            );
+        }
+        Ok(compare_records(&self.records, &baseline, tolerance))
+    }
+}
+
+/// Schema tag of `BENCH_*.json` reports.
+pub const BENCH_SCHEMA: &str = "mixtab-bench-v1";
+
+/// One machine-readable bench result (a row of a `BENCH_*.json` report).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaseRecord {
+    /// Workload name (one of the five bench targets / `benchsuite` entries).
+    pub bench: String,
+    /// Case name within the workload (e.g. `hash32/mixed_tab`).
+    pub case: String,
+    /// Work items per second at the median run (0 when unmeasurable).
+    pub keys_per_sec: f64,
+    /// Nanoseconds per work item at the median run.
+    pub ns_per_key: f64,
+    /// Whether the workload ran in quick/smoke mode.
+    pub quick: bool,
+    /// Commit the numbers were measured at (`GITHUB_SHA`, `git rev-parse`,
+    /// or `"unknown"`).
+    pub git_sha: String,
+}
+
+impl CaseRecord {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("bench", self.bench.as_str())
+            .set("case", self.case.as_str())
+            .set("keys_per_sec", self.keys_per_sec)
+            .set("ns_per_key", self.ns_per_key)
+            .set("quick", self.quick)
+            .set("git_sha", self.git_sha.as_str())
+    }
+
+    fn from_json(j: &Json) -> Result<CaseRecord> {
+        let field = |k: &str| {
+            j.get(k)
+                .ok_or_else(|| format_err!("bench record missing field '{k}'"))
+        };
+        Ok(CaseRecord {
+            bench: field("bench")?
+                .as_str()
+                .ok_or_else(|| format_err!("bench record field 'bench' not a string"))?
+                .to_string(),
+            case: field("case")?
+                .as_str()
+                .ok_or_else(|| format_err!("bench record field 'case' not a string"))?
+                .to_string(),
+            keys_per_sec: field("keys_per_sec")?
+                .as_f64()
+                .ok_or_else(|| format_err!("bench record field 'keys_per_sec' not a number"))?,
+            ns_per_key: field("ns_per_key")?
+                .as_f64()
+                .ok_or_else(|| format_err!("bench record field 'ns_per_key' not a number"))?,
+            quick: field("quick")?
+                .as_bool()
+                .ok_or_else(|| format_err!("bench record field 'quick' not a bool"))?,
+            git_sha: field("git_sha")?
+                .as_str()
+                .ok_or_else(|| format_err!("bench record field 'git_sha' not a string"))?
+                .to_string(),
+        })
+    }
+}
+
+/// Parse a `BENCH_*.json` report produced by [`Bench::write_json`].
+pub fn parse_report(text: &str) -> Result<Vec<CaseRecord>> {
+    let doc = Json::parse(text).context("parse bench report JSON")?;
+    ensure!(
+        doc.get("schema").and_then(Json::as_str) == Some(BENCH_SCHEMA),
+        "bench report schema is not '{}'",
+        BENCH_SCHEMA
+    );
+    let records = doc
+        .get("records")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format_err!("bench report missing 'records' array"))?;
+    records.iter().map(CaseRecord::from_json).collect()
+}
+
+/// A per-case throughput regression found by [`Bench::compare`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Regression {
+    pub bench: String,
+    pub case: String,
+    /// Baseline throughput (keys/sec).
+    pub baseline_keys_per_sec: f64,
+    /// Current throughput (keys/sec); 0.0 when the case is missing from the
+    /// current run.
+    pub current_keys_per_sec: f64,
+    /// Fractional slowdown: `1 − current/baseline` (1.0 for a missing case).
+    pub loss: f64,
+}
+
+/// Pure comparison behind [`Bench::compare`], exposed for tests and tools.
+///
+/// The baseline defines the gated set: every baseline case must exist in
+/// `current` (else it regresses with `loss = 1.0`) and be no more than
+/// `tolerance` slower. A loss of exactly `tolerance` passes; baseline cases
+/// with non-positive throughput are unguardable and skipped; cases that only
+/// exist in `current` are new and never flagged.
+pub fn compare_records(
+    current: &[CaseRecord],
+    baseline: &[CaseRecord],
+    tolerance: f64,
+) -> Vec<Regression> {
+    assert!(tolerance >= 0.0, "tolerance must be non-negative");
+    let mut out = Vec::new();
+    for b in baseline {
+        if b.keys_per_sec <= 0.0 {
+            continue;
+        }
+        let cur = current
+            .iter()
+            .find(|c| c.bench == b.bench && c.case == b.case);
+        let (current_keys_per_sec, loss) = match cur {
+            None => (0.0, 1.0),
+            Some(c) => (c.keys_per_sec, 1.0 - c.keys_per_sec / b.keys_per_sec),
+        };
+        if loss > tolerance {
+            out.push(Regression {
+                bench: b.bench.clone(),
+                case: b.case.clone(),
+                baseline_keys_per_sec: b.keys_per_sec,
+                current_keys_per_sec,
+                loss,
+            });
+        }
+    }
+    out
+}
+
+/// Commit id for bench records: `GITHUB_SHA` when set (CI), else
+/// `git rev-parse --short=12 HEAD`, else `"unknown"`. Resolved lazily on
+/// the first recorded case (constructing a [`Bench`] must not fork a
+/// subprocess) and cached for the process lifetime.
+pub fn git_sha() -> String {
+    static GIT_SHA: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+    GIT_SHA.get_or_init(resolve_git_sha).clone()
+}
+
+fn resolve_git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
 }
 
 /// Human-readable duration.
@@ -184,7 +444,7 @@ mod tests {
             warmup_runs: 1,
             runs: 5,
             min_total: Duration::from_millis(0),
-            quick: true,
+            ..Bench::with_quick(true)
         };
         let m = b.measure("spin", 1000, || {
             let mut s = 0u64;
@@ -220,5 +480,87 @@ mod tests {
         assert_eq!(fmt_ns(2_500_000), "2.50ms");
         assert_eq!(fmt_ns(3_000_000_000), "3.00s");
         assert_eq!(fmt_rate(2.5e6), "2.50M/s");
+    }
+
+    #[test]
+    fn record_derives_rates_from_measurement() {
+        let mut b = Bench::with_quick(true);
+        let m = Measurement {
+            name: "case_a".into(),
+            runs_ns: vec![1_000],
+            items_per_run: 1_000,
+        };
+        b.record("bench_x", &m);
+        // 1000 items in 1µs → 1G keys/sec, 1 ns/key.
+        let r = &b.records()[0];
+        assert_eq!(r.bench, "bench_x");
+        assert_eq!(r.case, "case_a");
+        assert!((r.keys_per_sec - 1e9).abs() < 1e-3, "{}", r.keys_per_sec);
+        assert!((r.ns_per_key - 1.0).abs() < 1e-12);
+        assert!(r.quick);
+    }
+
+    #[test]
+    fn json_document_roundtrips() {
+        let mut b = Bench::with_quick(true);
+        b.record_rate("w", "c1", 123_456.75, 8100.25);
+        b.record_rate("w", "c2", 0.0, 0.0);
+        let text = json::to_string_pretty(&b.to_json());
+        let parsed = parse_report(&text).unwrap();
+        assert_eq!(parsed, b.records());
+    }
+
+    fn rec(bench: &str, case: &str, kps: f64) -> CaseRecord {
+        CaseRecord {
+            bench: bench.into(),
+            case: case.into(),
+            keys_per_sec: kps,
+            ns_per_key: if kps > 0.0 { 1e9 / kps } else { 0.0 },
+            quick: true,
+            git_sha: "test".into(),
+        }
+    }
+
+    #[test]
+    fn compare_flags_slowdowns_and_missing_cases() {
+        let baseline = vec![rec("w", "ok", 100.0), rec("w", "slow", 100.0), rec("w", "gone", 50.0)];
+        let current = vec![rec("w", "ok", 95.0), rec("w", "slow", 60.0), rec("w", "new", 1.0)];
+        let regs = compare_records(&current, &baseline, 0.25);
+        assert_eq!(regs.len(), 2);
+        assert_eq!(regs[0].case, "slow");
+        assert!((regs[0].loss - 0.4).abs() < 1e-12);
+        assert_eq!(regs[1].case, "gone");
+        assert_eq!(regs[1].current_keys_per_sec, 0.0);
+        assert_eq!(regs[1].loss, 1.0);
+    }
+
+    #[test]
+    fn compare_edge_cases() {
+        // Zero/absent baseline throughput cannot be gated.
+        let regs = compare_records(&[], &[rec("w", "zero", 0.0)], 0.0);
+        assert!(regs.is_empty());
+        // A loss of exactly the tolerance passes; just beyond fails.
+        let baseline = vec![rec("w", "edge", 100.0)];
+        assert!(compare_records(&[rec("w", "edge", 75.0)], &baseline, 0.25).is_empty());
+        assert_eq!(compare_records(&[rec("w", "edge", 74.0)], &baseline, 0.25).len(), 1);
+        // Improvements never regress.
+        assert!(compare_records(&[rec("w", "edge", 200.0)], &baseline, 0.0).is_empty());
+        // Self-comparison is always clean, even at zero tolerance.
+        assert!(compare_records(&baseline, &baseline, 0.0).is_empty());
+    }
+
+    #[test]
+    fn parse_report_rejects_bad_documents() {
+        assert!(parse_report("not json").is_err());
+        assert!(parse_report(r#"{"schema":"other","records":[]}"#).is_err());
+        assert!(parse_report(r#"{"schema":"mixtab-bench-v1"}"#).is_err());
+        assert!(parse_report(
+            r#"{"schema":"mixtab-bench-v1","records":[{"bench":"w"}]}"#
+        )
+        .is_err());
+        assert_eq!(
+            parse_report(r#"{"schema":"mixtab-bench-v1","records":[]}"#).unwrap(),
+            Vec::<CaseRecord>::new()
+        );
     }
 }

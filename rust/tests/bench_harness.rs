@@ -1,0 +1,131 @@
+//! Perf-regression harness integration: `BENCH_*.json` schema round-trip
+//! through the filesystem, `Bench::compare` against real files, and the
+//! self-compare invariant the CI `bench-smoke` gate relies on.
+
+use mixtab::util::bench::{
+    compare_records, parse_report, Bench, CaseRecord, BENCH_SCHEMA,
+};
+use std::path::PathBuf;
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mixtab_bench_{}_{name}.json", std::process::id()))
+}
+
+fn sample_bench() -> Bench {
+    let mut b = Bench::with_quick(true);
+    b.record_rate("table1_hash_speed", "hash32/mixed_tab", 2.5e8, 4.0);
+    b.record_rate("table1_hash_speed", "hash32/murmur3", 1.75e8, 5.714285714285714);
+    b.record_rate("sketch_throughput", "oph_raw_batched", 9.125e7, 10.958904109589041);
+    b
+}
+
+#[test]
+fn write_then_parse_roundtrips_all_fields() {
+    let b = sample_bench();
+    let path = tmp_path("roundtrip");
+    b.write_json(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    // Schema tag present, and every record field survives exactly.
+    assert!(text.contains(BENCH_SCHEMA));
+    let parsed = parse_report(&text).unwrap();
+    assert_eq!(parsed, b.records());
+    // Field spot-check: the schema names the ISSUE-specified keys.
+    for key in ["bench", "case", "keys_per_sec", "ns_per_key", "quick", "git_sha"] {
+        assert!(text.contains(&format!("\"{key}\"")), "missing key {key}");
+    }
+}
+
+#[test]
+fn self_compare_has_zero_regressions() {
+    // The acceptance invariant: a report diffed against itself is clean,
+    // even at zero tolerance.
+    let b = sample_bench();
+    let path = tmp_path("self");
+    b.write_json(&path).unwrap();
+    let regs = b.compare(&path, 0.0).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(regs.is_empty(), "{regs:?}");
+}
+
+#[test]
+fn compare_reports_missing_zero_and_tolerance_edges() {
+    let rec = |case: &str, kps: f64| CaseRecord {
+        bench: "w".into(),
+        case: case.into(),
+        keys_per_sec: kps,
+        ns_per_key: if kps > 0.0 { 1e9 / kps } else { 0.0 },
+        quick: true,
+        git_sha: "baseline".into(),
+    };
+    let baseline = vec![
+        rec("missing", 100.0),
+        rec("zero_baseline", 0.0),
+        rec("at_tolerance", 100.0),
+        rec("past_tolerance", 100.0),
+    ];
+    let current = vec![
+        // "missing" intentionally absent from the current run.
+        rec("zero_baseline", 0.0),
+        rec("at_tolerance", 75.0),   // loss = 0.25 exactly → passes
+        rec("past_tolerance", 74.0), // loss = 0.26 → regression
+    ];
+    let regs = compare_records(&current, &baseline, 0.25);
+    let names: Vec<&str> = regs.iter().map(|r| r.case.as_str()).collect();
+    assert_eq!(names, ["missing", "past_tolerance"], "{regs:?}");
+    assert_eq!(regs[0].current_keys_per_sec, 0.0);
+    assert_eq!(regs[0].loss, 1.0);
+    assert!((regs[1].loss - 0.26).abs() < 1e-12);
+}
+
+#[test]
+fn compare_rejects_mode_mismatched_baseline() {
+    // A quick-mode baseline must not gate a full-mode run (and vice
+    // versa): the workload sizes differ, so the numbers are incomparable.
+    let quick = sample_bench();
+    let path = tmp_path("mode");
+    quick.write_json(&path).unwrap();
+    let full = Bench::with_quick(false);
+    let err = full.compare(&path, 0.25).unwrap_err();
+    std::fs::remove_file(&path).ok();
+    assert!(err.to_string().contains("mode mismatch"), "{err}");
+}
+
+#[test]
+fn compare_rejects_negative_tolerance() {
+    let b = sample_bench();
+    let path = tmp_path("negtol");
+    b.write_json(&path).unwrap();
+    let err = b.compare(&path, -0.1).unwrap_err();
+    std::fs::remove_file(&path).ok();
+    assert!(err.to_string().contains("non-negative"), "{err}");
+}
+
+#[test]
+fn compare_against_corrupt_baseline_errors() {
+    let b = sample_bench();
+    let path = tmp_path("corrupt");
+    std::fs::write(&path, "{ not json").unwrap();
+    assert!(b.compare(&path, 0.25).is_err());
+    std::fs::write(&path, r#"{"schema":"something-else","records":[]}"#).unwrap();
+    assert!(b.compare(&path, 0.25).is_err());
+    std::fs::remove_file(&path).ok();
+    // Nonexistent path errors rather than silently passing the gate.
+    assert!(b.compare(&path, 0.25).is_err());
+}
+
+#[test]
+fn committed_quick_baseline_parses_and_matches_suite_names() {
+    // The repo-root baseline CI gates against must always be loadable and
+    // only name workloads that exist in the suite.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_baseline_quick.json");
+    let text = std::fs::read_to_string(path).expect("committed BENCH_baseline_quick.json");
+    let records = parse_report(&text).unwrap();
+    assert!(!records.is_empty());
+    let known: Vec<&str> = mixtab::benchsuite::ALL.iter().map(|(n, _)| *n).collect();
+    for r in &records {
+        assert!(known.contains(&r.bench.as_str()), "unknown bench {}", r.bench);
+        assert!(r.quick, "baseline must be quick-mode: {}", r.case);
+        assert!(r.keys_per_sec > 0.0, "ungated baseline case {}", r.case);
+    }
+}

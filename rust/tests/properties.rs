@@ -201,3 +201,44 @@ fn prop_rng_below_bound() {
         (0..16).all(|_| rng.below(bound) < bound)
     });
 }
+
+/// Acceptance property for the batched hot paths: the batched
+/// (hash_slice + Scratch) OPH / MinHash / SimHash paths are bit-identical
+/// to the per-key reference paths for every `HashFamily::TABLE1` family,
+/// both bin layouts, and arbitrary (duplicate-containing, unsorted) sets.
+#[test]
+fn prop_batched_sketches_bit_identical_to_per_key() {
+    use mixtab::data::SparseVector;
+    use mixtab::sketch::minhash::MinHash;
+    use mixtab::sketch::simhash::SimHash;
+    use mixtab::sketch::Scratch;
+
+    for fam in HashFamily::TABLE1 {
+        // Blake2 hashes ~1000× slower; fewer cases keep the test quick.
+        let cases = if *fam == HashFamily::Blake2 { 4 } else { 24 };
+        let oph_mod = OneHashSketcher::new(fam.build(7), 64, BinLayout::Mod, DensifyMode::Paper);
+        let oph_range =
+            OneHashSketcher::new(fam.build(8), 64, BinLayout::Range, DensifyMode::None);
+        let mh = MinHash::new(*fam, 9, 16);
+        let sh = SimHash::new(*fam, 10, 32);
+        Runner::new(cases).run(
+            &format!("batched == per-key {}", fam.id()),
+            set_gen(300),
+            |set| {
+                let mut scratch = Scratch::new();
+                // Deterministic weights so SimHash sees mixed signs.
+                let v = SparseVector::new(
+                    set.clone(),
+                    set.iter().map(|&x| (x % 17) as f64 - 8.0).collect(),
+                );
+                oph_mod.sketch_with(set, &mut scratch) == oph_mod.sketch_per_key(set)
+                    && oph_mod.sketch_raw_with(set, &mut scratch)
+                        == oph_mod.sketch_raw_per_key(set)
+                    && oph_range.sketch_raw_with(set, &mut scratch)
+                        == oph_range.sketch_raw_per_key(set)
+                    && mh.sketch_with(set, &mut scratch) == mh.sketch_per_key(set)
+                    && sh.sketch_with(&v, &mut scratch) == sh.sketch_per_key(&v)
+            },
+        );
+    }
+}

@@ -7,7 +7,7 @@ use mixtab::hash::HashFamily;
 use mixtab::sketch::feature_hash::{FeatureHasher, SignMode};
 use mixtab::sketch::minhash::MinHash;
 use mixtab::sketch::oph::{BinLayout, OneHashSketcher};
-use mixtab::sketch::{jaccard_exact, DensifyMode};
+use mixtab::sketch::{jaccard_exact, DensifyMode, Scratch};
 use mixtab::stats::Summary;
 use mixtab::util::rng::Xoshiro256;
 
@@ -119,7 +119,7 @@ fn theorem1_concentration_gate() {
     // ‖v‖∞ = 1/63 — comfortably under the Theorem 1 bound for these params.
     let reps = 200;
     let mut within = 0;
-    let mut scratch = Vec::new();
+    let mut scratch = Scratch::new();
     for seed in 0..reps {
         let fh = FeatureHasher::new(HashFamily::MixedTab, seed, dprime, SignMode::Paired);
         let sq = fh.squared_norm(&v, &mut scratch);
@@ -143,7 +143,7 @@ fn paired_vs_separate_sign_equivalent_quality() {
     let reps = 120;
     let run = |mode: SignMode| {
         let mut s = Summary::new();
-        let mut scratch = Vec::new();
+        let mut scratch = Scratch::new();
         for seed in 0..reps {
             let fh = FeatureHasher::new(HashFamily::MixedTab, seed, 128, mode);
             s.add(fh.squared_norm(&v, &mut scratch));
