@@ -13,6 +13,7 @@
 use mixtab::data::shingle::{byte_shingles, frequency_rank_ids};
 use mixtab::hash::HashFamily;
 use mixtab::lsh::{LshIndex, LshParams};
+use mixtab::sketch::SketchSpec;
 use mixtab::sketch::estimators::jaccard_sorted;
 use mixtab::util::rng::Xoshiro256;
 
@@ -70,7 +71,10 @@ fn main() {
     let ranked = frequency_rank_ids(&shingled);
 
     // Index every document.
-    let mut index = LshIndex::new(LshParams::new(6, 12), HashFamily::MixedTab, 7);
+    let mut index = LshIndex::new(
+        LshParams::new(6, 12),
+        &SketchSpec::oph(HashFamily::MixedTab, 7, 72),
+    );
     for (i, s) in ranked.iter().enumerate() {
         index.insert(i as u32, s);
     }

@@ -103,12 +103,11 @@ fn main() -> mixtab::Result<()> {
 
     println!("[4/4] validating against the native path…");
     // Spot-check 20 docs end-to-end against an offline native transform.
-    let fh = mixtab::sketch::feature_hash::FeatureHasher::new(
-        coordinator.config().family,
-        coordinator.config().seed,
-        128,
-        coordinator.config().sign,
-    );
+    let fh = coordinator
+        .config()
+        .fh_spec()
+        .build_feature_hasher()
+        .expect("fh spec");
     let mut client = Client::connect(addr)?;
     for v in ds.vectors.iter().take(20) {
         let Response::Fh { out, .. } = client.call(&Request::FhTransform {

@@ -14,6 +14,7 @@ use mixtab::data::mnist_like;
 use mixtab::hash::HashFamily;
 use mixtab::lsh::metrics::{ground_truth_batch, BatchEval, QueryEval};
 use mixtab::lsh::{LshIndex, LshParams};
+use mixtab::sketch::SketchSpec;
 use mixtab::util::threadpool::ThreadPool;
 use std::time::Instant;
 
@@ -38,7 +39,7 @@ fn main() {
 
     println!("building LSH index (K=10, L=10) with {}…", family.label());
     let t0 = Instant::now();
-    let mut index = LshIndex::new(LshParams::new(10, 10), family, 7);
+    let mut index = LshIndex::new(LshParams::new(10, 10), &SketchSpec::oph(family, 7, 100));
     for (i, s) in db.iter().enumerate() {
         index.insert(i as u32, s);
     }

@@ -9,10 +9,8 @@
 
 use mixtab::hash::HashFamily;
 use mixtab::lsh::{LshIndex, LshParams};
-use mixtab::sketch::feature_hash::{FeatureHasher, SignMode};
 use mixtab::sketch::jaccard_exact;
-use mixtab::sketch::oph::{BinLayout, OneHashSketcher};
-use mixtab::sketch::DensifyMode;
+use mixtab::sketch::{SignMode, SketchSpec};
 
 fn main() {
     // 1. Basic hash functions — the paper's variable. Mixed tabulation is
@@ -23,12 +21,13 @@ fn main() {
     // 2. Similarity estimation with OPH (one hash evaluation per element).
     let a: Vec<u32> = (0..10_000).collect();
     let b: Vec<u32> = (2_500..12_500).collect(); // J = 7500/12500 = 0.6
-    let sketcher = OneHashSketcher::new(
-        HashFamily::MixedTab.build(7),
-        256, // k bins → 256-coordinate sketch
-        BinLayout::Mod,
-        DensifyMode::Paper, // densification of Shrivastava & Li [33]
-    );
+    // Sketches are configuration: a declarative spec names the scheme,
+    // parameters, hash family, and seed, and `build_oph` constructs it.
+    // The same string works in `mixtab sketch --spec` and the coordinator's
+    // `[sketch]` config section.
+    let spec = SketchSpec::parse("oph(k=256,layout=mod,densify=paper,hash=mixed_tab,seed=7)")
+        .expect("literal spec");
+    let sketcher = spec.build_oph().expect("oph spec");
     let (sa, sb) = (sketcher.sketch(&a), sketcher.sketch(&b));
     println!(
         "OPH estimate = {:.4}   (exact J = {:.4})",
@@ -41,13 +40,18 @@ fn main() {
     let v = mixtab::data::SparseVector::unit_indicator(
         &(0..1000u32).map(|i| i * 997).collect::<Vec<_>>(),
     );
-    let fh = FeatureHasher::new(HashFamily::MixedTab, 3, 512, SignMode::Paired);
+    let fh = SketchSpec::feature_hash(HashFamily::MixedTab, 3, 512, SignMode::Paired)
+        .build_feature_hasher()
+        .expect("fh spec");
     let dense = fh.transform(&v);
     let sq: f64 = dense.iter().map(|x| x * x).sum();
     println!("FH: {} nnz -> {} dims, ‖v'‖² = {sq:.4} (target 1.0)", v.nnz(), dense.len());
 
     // 4. LSH search over OPH sketches.
-    let mut index = LshIndex::new(LshParams::new(8, 10), HashFamily::MixedTab, 99);
+    let mut index = LshIndex::new(
+        LshParams::new(8, 10),
+        &SketchSpec::oph(HashFamily::MixedTab, 99, 80),
+    );
     for i in 0..100u32 {
         let set: Vec<u32> = (i * 50..i * 50 + 500).collect(); // overlapping blocks
         index.insert(i, &set);

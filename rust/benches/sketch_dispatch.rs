@@ -1,0 +1,11 @@
+//! Bench target wrapper: erased `DynSketcher` dispatch overhead vs direct
+//! typed calls for spec-built sketchers. The workload lives in
+//! [`mixtab::benchsuite`] so the `mixtab bench` CLI can run it in-process
+//! and gate the JSON records.
+
+use mixtab::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new();
+    mixtab::benchsuite::sketch_dispatch(&mut bench);
+}

@@ -1,4 +1,4 @@
-//! The five `cargo bench` workloads as in-process library functions.
+//! The six `cargo bench` workloads as in-process library functions.
 //!
 //! Each `rust/benches/*.rs` target is a thin `fn main` wrapper around one
 //! function here, and the `mixtab bench` CLI subcommand runs any subset of
@@ -19,10 +19,9 @@ use crate::data::synthetic::dataset1;
 use crate::data::SparseVector;
 use crate::hash::HashFamily;
 use crate::lsh::{LshIndex, LshParams};
-use crate::sketch::feature_hash::{FeatureHasher, SignMode};
-use crate::sketch::minhash::MinHash;
-use crate::sketch::oph::{BinLayout, OneHashSketcher};
-use crate::sketch::{DensifyMode, Scratch};
+use crate::sketch::feature_hash::SignMode;
+use crate::sketch::sketcher::{DynSketcher, SketchValue};
+use crate::sketch::{BinLayout, DensifyMode, OphParams, Scratch, SketchSpec};
 use crate::stats::Summary;
 use crate::util::bench::{fmt_rate, print_table, Bench};
 use crate::util::rng::Xoshiro256;
@@ -36,6 +35,7 @@ use std::time::Instant;
 pub const ALL: &[(&str, fn(&mut Bench))] = &[
     ("table1_hash_speed", table1_hash_speed),
     ("sketch_throughput", sketch_throughput),
+    ("sketch_dispatch", sketch_dispatch),
     ("lsh_query", lsh_query),
     ("coordinator_service", coordinator_service),
     ("runtime_pjrt", runtime_pjrt),
@@ -81,7 +81,9 @@ pub fn table1_hash_speed(bench: &mut Bench) {
     let news = news20_like::generate(n_docs, &News20LikeParams::default(), 99);
     let mut rows = Vec::new();
     for &fam in HashFamily::TABLE1 {
-        let fh = FeatureHasher::new(fam, 42, 128, SignMode::Separate);
+        let fh = SketchSpec::feature_hash(fam, 42, 128, SignMode::Separate)
+            .build_feature_hasher()
+            .expect("fh spec");
         let docs = if fam == HashFamily::Blake2 {
             &news.vectors[..n_docs / 20]
         } else {
@@ -115,12 +117,9 @@ pub fn sketch_throughput(bench: &mut Bench) {
     println!("sketch_throughput: |A|={} k={k} reps={reps}", set.len());
 
     let mut rows = Vec::new();
-    let oph = OneHashSketcher::new(
-        HashFamily::MixedTab.build(1),
-        k,
-        BinLayout::Mod,
-        DensifyMode::Paper,
-    );
+    let oph = SketchSpec::oph(HashFamily::MixedTab, 1, k)
+        .build_oph()
+        .expect("oph spec");
     let mut scratch = Scratch::new();
     let m = bench.measure("oph_densified", (reps * set.len()) as u64, || {
         let mut acc = 0u64;
@@ -131,12 +130,17 @@ pub fn sketch_throughput(bench: &mut Bench) {
     });
     bench.record("sketch_throughput", &m);
     rows.push(m);
-    let oph_raw = OneHashSketcher::new(
-        HashFamily::MixedTab.build(1),
-        k,
-        BinLayout::Mod,
-        DensifyMode::None,
-    );
+    let oph_raw = SketchSpec::oph_with(
+        HashFamily::MixedTab,
+        1,
+        OphParams {
+            k,
+            layout: BinLayout::Mod,
+            densify: DensifyMode::None,
+        },
+    )
+    .build_oph()
+    .expect("oph spec");
     // Batched (hash_slice + reused scratch) vs per-key reference: the
     // dispatch-per-batch win in isolation. Acceptance: batched ≥ 1.2× on
     // the tabulation family.
@@ -158,7 +162,9 @@ pub fn sketch_throughput(bench: &mut Bench) {
     });
     bench.record("sketch_throughput", &m);
     rows.push(m);
-    let mh = MinHash::new(HashFamily::MixedTab, 1, k);
+    let mh = SketchSpec::minhash(HashFamily::MixedTab, 1, k)
+        .build_minhash()
+        .expect("minhash spec");
     let mh_reps = (reps / 50).max(1); // k× slower by construction
     let m = bench.measure("minhash_k200", (mh_reps * set.len()) as u64, || {
         let mut acc = 0u32;
@@ -175,7 +181,9 @@ pub fn sketch_throughput(bench: &mut Bench) {
     let v = SparseVector::unit_indicator(set);
     let mut rows = Vec::new();
     for (name, mode) in [("fh_separate", SignMode::Separate), ("fh_paired", SignMode::Paired)] {
-        let fh = FeatureHasher::new(HashFamily::MixedTab, 3, 128, mode);
+        let fh = SketchSpec::feature_hash(HashFamily::MixedTab, 3, 128, mode)
+            .build_feature_hasher()
+            .expect("fh spec");
         let mut scratch = Scratch::new();
         let m = bench.measure(name, (reps * v.nnz()) as u64, || {
             let mut acc = 0.0;
@@ -190,6 +198,74 @@ pub fn sketch_throughput(bench: &mut Bench) {
     print_table("feature hashing sign modes (per non-zero)", &rows);
 }
 
+/// Erased-dispatch overhead — the same spec-built sketchers driven through
+/// the typed [`crate::sketch::Sketcher`] path vs the erased
+/// [`crate::sketch::DynSketcher`] path (`SketchSpec::build`), which is what
+/// the coordinator's scheme-aware `sketch` endpoint and the `mixtab sketch`
+/// CLI use. Acceptance: the erased path stays within a few percent of the
+/// direct calls — the per-set work (hashing + bin loop) dominates the one
+/// extra virtual call and enum wrap.
+pub fn sketch_dispatch(bench: &mut Bench) {
+    let reps: usize = if bench.is_quick() { 20 } else { 500 };
+    let mut rng = Xoshiro256::new(0xD15);
+    let set: Vec<u32> = (0..2000).map(|_| rng.next_u32()).collect();
+    println!("sketch_dispatch: |A|={} reps={reps}", set.len());
+    let mut scratch = Scratch::new();
+    let mut rows = Vec::new();
+
+    let oph_spec = SketchSpec::oph(HashFamily::MixedTab, 7, 200);
+    let oph = oph_spec.build_oph().expect("oph spec");
+    let oph_erased = oph_spec.build();
+    let m = bench.measure("direct/oph", (reps * set.len()) as u64, || {
+        let mut acc = 0u64;
+        for _ in 0..reps {
+            acc ^= black_box(oph.sketch_with(&set, &mut scratch)).bins[0];
+        }
+        acc
+    });
+    bench.record("sketch_dispatch", &m);
+    rows.push(m);
+    let m = bench.measure("erased/oph", (reps * set.len()) as u64, || {
+        let mut acc = 0u64;
+        for _ in 0..reps {
+            let SketchValue::Oph(s) = oph_erased.sketch_dyn(&set, &mut scratch) else {
+                unreachable!()
+            };
+            acc ^= black_box(s.bins[0]);
+        }
+        acc
+    });
+    bench.record("sketch_dispatch", &m);
+    rows.push(m);
+
+    let mh_spec = SketchSpec::minhash(HashFamily::MixedTab, 7, 16);
+    let mh = mh_spec.build_minhash().expect("minhash spec");
+    let mh_erased = mh_spec.build();
+    let mh_reps = (reps / 8).max(1); // 16 hash passes per set
+    let m = bench.measure("direct/minhash", (mh_reps * set.len()) as u64, || {
+        let mut acc = 0u32;
+        for _ in 0..mh_reps {
+            acc ^= black_box(mh.sketch_with(&set, &mut scratch))[0];
+        }
+        acc
+    });
+    bench.record("sketch_dispatch", &m);
+    rows.push(m);
+    let m = bench.measure("erased/minhash", (mh_reps * set.len()) as u64, || {
+        let mut acc = 0u32;
+        for _ in 0..mh_reps {
+            let SketchValue::MinHash(v) = mh_erased.sketch_dyn(&set, &mut scratch) else {
+                unreachable!()
+            };
+            acc ^= black_box(v[0]);
+        }
+        acc
+    });
+    bench.record("sketch_dispatch", &m);
+    rows.push(m);
+    print_table("spec-registry dispatch (per element)", &rows);
+}
+
 /// LSH build + query latency on MNIST-like data (the Figure 5 operating
 /// point K = L = 10). Weak hashing inflates buckets on structured data,
 /// which shows up here as *slower queries*, not just worse quality.
@@ -202,9 +278,10 @@ pub fn lsh_query(bench: &mut Bench) {
 
     for fam in [HashFamily::MixedTab, HashFamily::MultiplyShift, HashFamily::Murmur3] {
         let mut rows = Vec::new();
-        let mut index = LshIndex::new(LshParams::new(10, 10), fam, 7);
+        let spec = SketchSpec::oph(fam, 7, 100);
+        let mut index = LshIndex::new(LshParams::new(10, 10), &spec);
         let m = bench.measure(&format!("build/{}", fam.id()), db.len() as u64, || {
-            index = LshIndex::new(LshParams::new(10, 10), fam, 7);
+            index = LshIndex::new(LshParams::new(10, 10), &spec);
             for (i, s) in db.iter().enumerate() {
                 index.insert(i as u32, s);
             }
@@ -362,7 +439,9 @@ pub fn runtime_pjrt(bench: &mut Bench) {
     .expect("engine");
 
     // Batch of realistic sparse vectors.
-    let fh = FeatureHasher::new(HashFamily::MixedTab, 42, dim, SignMode::Paired);
+    let fh = SketchSpec::feature_hash(HashFamily::MixedTab, 42, dim, SignMode::Paired)
+        .build_feature_hasher()
+        .expect("fh spec");
     let mut rng = Xoshiro256::new(3);
     let vectors: Vec<SparseVector> = (0..batch)
         .map(|_| {
@@ -419,12 +498,17 @@ pub fn runtime_pjrt(bench: &mut Bench) {
                 valid[r * nnz + i] = 1;
             }
         }
-        let sketcher = OneHashSketcher::new(
-            HashFamily::MixedTab.build(7),
-            k,
-            BinLayout::Mod,
-            DensifyMode::None,
-        );
+        let sketcher = SketchSpec::oph_with(
+            HashFamily::MixedTab,
+            7,
+            OphParams {
+                k,
+                layout: BinLayout::Mod,
+                densify: DensifyMode::None,
+            },
+        )
+        .build_oph()
+        .expect("oph spec");
         let mut rows = Vec::new();
         let m = bench.measure("pjrt_oph_batch", batch as u64, || {
             black_box(engine.run_oph(&oph_meta.name, &h, &valid).unwrap()[0])

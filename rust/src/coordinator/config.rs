@@ -17,6 +17,14 @@
 //! [oph]
 //! k = 200
 //!
+//! # Default sketch spec for the scheme-aware `sketch` endpoint. When the
+//! # section is omitted, an OPH spec is derived from [fh]/[oph] above
+//! # (hasher seed `[fh] seed ^ OPH_SEED_SALT`), so existing configs keep
+//! # their exact pre-spec behaviour; setting a spec replaces that
+//! # derivation, and stored sketches only stay comparable if it matches.
+//! [sketch]
+//! spec = "minhash(k=128,hash=mixed_tab,seed=7)"
+//!
 //! [lsh]
 //! k = 10
 //! l = 10
@@ -30,9 +38,17 @@
 
 use crate::hash::HashFamily;
 use crate::sketch::feature_hash::SignMode;
+use crate::sketch::spec::{SketchScheme, SketchSpec};
 use crate::util::config::Config;
-use crate::util::error::{bail, Result};
+use crate::util::error::{bail, Context, Result};
 use std::path::{Path, PathBuf};
+
+/// Seed salt separating the OPH sketcher's hash stream from the FH stream
+/// (pre-spec behaviour, kept bit-identical).
+pub const OPH_SEED_SALT: u64 = 0x09EB_57A1;
+
+/// Seed salt for the LSH index's sketcher.
+pub const LSH_SEED_SALT: u64 = 0x154A_11CE;
 
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -50,6 +66,9 @@ pub struct CoordinatorConfig {
     pub seed: u64,
     /// OPH sketch size.
     pub oph_k: usize,
+    /// Default spec for the scheme-aware `sketch` endpoint. `None` derives
+    /// an OPH spec from `(family, seed, oph_k)` — see [`Self::sketch_spec`].
+    pub sketch: Option<SketchSpec>,
     /// LSH parameters.
     pub lsh_k: usize,
     pub lsh_l: usize,
@@ -73,6 +92,7 @@ impl Default for CoordinatorConfig {
             sign: SignMode::Paired,
             seed: 42,
             oph_k: 200,
+            sketch: None,
             lsh_k: 10,
             lsh_l: 10,
             enable_pjrt: true,
@@ -91,10 +111,26 @@ impl CoordinatorConfig {
         let Some(family) = HashFamily::parse(&family_id) else {
             bail!("unknown hash family '{family_id}'");
         };
-        let sign = match cfg.str_or("fh", "sign", "paired").as_str() {
-            "paired" => SignMode::Paired,
-            "separate" => SignMode::Separate,
-            other => bail!("unknown sign mode '{other}'"),
+        let Some(sign) = SignMode::parse(&cfg.str_or("fh", "sign", "paired")) else {
+            bail!("unknown sign mode '{}'", cfg.str_or("fh", "sign", "paired"));
+        };
+        let mut oph_k = cfg.usize_or("oph", "k", d.oph_k);
+        let sketch = match cfg.get("sketch", "spec") {
+            Some(value) => {
+                // A mistyped value must not silently fall back to the
+                // derived OPH default.
+                let Some(text) = value.as_str() else {
+                    bail!("[sketch] spec must be a string, got {value:?}");
+                };
+                let spec = SketchSpec::parse(text).context("[sketch] spec")?;
+                // Keep the OPH-dependent paths (PJRT artifact lookup,
+                // estimate endpoint) aligned with an OPH default spec.
+                if let SketchScheme::Oph(p) = spec.scheme {
+                    oph_k = p.k;
+                }
+                Some(spec)
+            }
+            None => None,
         };
         Ok(Self {
             listen: cfg.str_or("service", "listen", &d.listen),
@@ -103,7 +139,8 @@ impl CoordinatorConfig {
             family,
             sign,
             seed: cfg.i64_or("fh", "seed", d.seed as i64) as u64,
-            oph_k: cfg.usize_or("oph", "k", d.oph_k),
+            oph_k,
+            sketch,
             lsh_k: cfg.usize_or("lsh", "k", d.lsh_k),
             lsh_l: cfg.usize_or("lsh", "l", d.lsh_l),
             enable_pjrt: cfg.bool_or("batcher", "enable_pjrt", d.enable_pjrt),
@@ -121,6 +158,42 @@ impl CoordinatorConfig {
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         Self::from_config(&Config::load(path)?)
     }
+
+    /// The spec served by the scheme-aware `sketch` endpoint: the `[sketch]`
+    /// section when present, else the derived OPH default (bit-identical to
+    /// the pre-spec coordinator's OPH sketcher).
+    pub fn sketch_spec(&self) -> SketchSpec {
+        self.sketch
+            .unwrap_or_else(|| SketchSpec::oph(self.family, self.seed ^ OPH_SEED_SALT, self.oph_k))
+    }
+
+    /// The OPH spec backing the `oph` compatibility endpoint, the
+    /// `estimate` endpoint, and the PJRT OPH batch path. Equals
+    /// [`Self::sketch_spec`] when that is an OPH spec, else the derived
+    /// default.
+    pub fn oph_spec(&self) -> SketchSpec {
+        let spec = self.sketch_spec();
+        if matches!(spec.scheme, SketchScheme::Oph(_)) {
+            spec
+        } else {
+            SketchSpec::oph(self.family, self.seed ^ OPH_SEED_SALT, self.oph_k)
+        }
+    }
+
+    /// The FH transform spec (the `fh` endpoint and the PJRT plan path).
+    pub fn fh_spec(&self) -> SketchSpec {
+        SketchSpec::feature_hash(self.family, self.seed, self.fh_dim, self.sign)
+    }
+
+    /// The LSH index's sketch spec (bin count is overridden by the index's
+    /// structural parameters).
+    pub fn lsh_spec(&self) -> SketchSpec {
+        SketchSpec::oph(
+            self.family,
+            self.seed ^ LSH_SEED_SALT,
+            self.lsh_k * self.lsh_l,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +206,16 @@ mod tests {
         assert_eq!(c.fh_dim, 128);
         assert_eq!(c.family, HashFamily::MixedTab);
         assert!(c.enable_pjrt);
+        // Derived specs track the scalar fields.
+        assert_eq!(
+            c.sketch_spec(),
+            SketchSpec::oph(HashFamily::MixedTab, 42 ^ OPH_SEED_SALT, 200)
+        );
+        assert_eq!(c.oph_spec(), c.sketch_spec());
+        assert_eq!(
+            c.fh_spec(),
+            SketchSpec::feature_hash(HashFamily::MixedTab, 42, 128, SignMode::Paired)
+        );
     }
 
     #[test]
@@ -147,11 +230,44 @@ mod tests {
         assert_eq!(c.sign, SignMode::Separate);
         assert!(!c.enable_pjrt);
         assert_eq!((c.lsh_k, c.lsh_l), (8, 12));
+        // No [sketch] section: the derived spec follows the [fh] family.
+        assert_eq!(c.sketch_spec().family, HashFamily::Murmur3);
+    }
+
+    #[test]
+    fn parses_sketch_spec_section() {
+        let cfg = Config::parse(
+            "[sketch]\nspec = \"minhash(k=32,hash=murmur3,seed=5)\"\n",
+        )
+        .unwrap();
+        let c = CoordinatorConfig::from_config(&cfg).unwrap();
+        assert_eq!(
+            c.sketch_spec(),
+            SketchSpec::minhash(HashFamily::Murmur3, 5, 32)
+        );
+        // Non-OPH default spec: the OPH paths fall back to the derived spec.
+        assert_eq!(c.oph_spec().scheme_id(), "oph");
+
+        // An OPH spec keeps oph_k (and thus PJRT artifact lookup) in sync.
+        let cfg = Config::parse("[sketch]\nspec = \"oph(k=64,seed=9)\"\n").unwrap();
+        let c = CoordinatorConfig::from_config(&cfg).unwrap();
+        assert_eq!(c.oph_k, 64);
+        assert_eq!(c.oph_spec(), SketchSpec::oph(HashFamily::MixedTab, 9, 64));
     }
 
     #[test]
     fn rejects_bad_family() {
         let cfg = Config::parse("[fh]\nhash = \"md5\"\n").unwrap();
+        assert!(CoordinatorConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_sketch_spec() {
+        let cfg = Config::parse("[sketch]\nspec = \"oph(k=nope)\"\n").unwrap();
+        assert!(CoordinatorConfig::from_config(&cfg).is_err());
+        // Mistyped (non-string) spec errors instead of silently serving
+        // the derived default.
+        let cfg = Config::parse("[sketch]\nspec = 42\n").unwrap();
         assert!(CoordinatorConfig::from_config(&cfg).is_err());
     }
 }

@@ -16,6 +16,8 @@ pub struct Metrics {
     pub pjrt_batches: AtomicU64,
     pub pjrt_batch_rows: AtomicU64,
     pub oph_requests: AtomicU64,
+    /// Scheme-aware `Sketch` requests (the spec-driven endpoint).
+    pub sketch_requests: AtomicU64,
     pub lsh_inserts: AtomicU64,
     pub lsh_queries: AtomicU64,
     pub estimates: AtomicU64,
@@ -76,6 +78,10 @@ impl Metrics {
             .set("pjrt_batches", self.pjrt_batches.load(Ordering::Relaxed) as usize)
             .set("mean_batch_occupancy", self.mean_batch_occupancy())
             .set("oph_requests", self.oph_requests.load(Ordering::Relaxed) as usize)
+            .set(
+                "sketch_requests",
+                self.sketch_requests.load(Ordering::Relaxed) as usize,
+            )
             .set("lsh_inserts", self.lsh_inserts.load(Ordering::Relaxed) as usize)
             .set("lsh_queries", self.lsh_queries.load(Ordering::Relaxed) as usize)
             .set("estimates", self.estimates.load(Ordering::Relaxed) as usize)

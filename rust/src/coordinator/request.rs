@@ -1,6 +1,14 @@
 //! Typed requests/responses + the newline-delimited JSON wire codec used by
 //! the TCP front-end and the examples.
+//!
+//! Numeric wire caveat: sketch coordinates travel as JSON numbers (f64), so
+//! values round-trip exactly only below 2^53. Densified OPH bins stay far
+//! under that for realistic copy distances (`v + j·C` with `v < 2^32`,
+//! `C = 2^33`), matching the pre-existing `sketch` response encoding.
 
+use crate::sketch::bbit::BbitSketch;
+use crate::sketch::oph::OphSketch;
+use crate::sketch::sketcher::SketchValue;
 use crate::util::json::{self, Json};
 use crate::util::error::{bail, Context, Result};
 
@@ -9,8 +17,16 @@ use crate::util::error::{bail, Context, Result};
 pub enum Request {
     /// Feature-hash a sparse vector; returns the dense d'-vector + ‖v′‖².
     FhTransform { indices: Vec<u32>, values: Vec<f64> },
-    /// OPH-sketch a set; returns the densified bins.
+    /// OPH-sketch a set with the service's OPH sketcher; returns the
+    /// densified bins. Compatibility alias for the scheme-aware
+    /// [`Request::Sketch`] — kept wire-stable for existing clients.
     OphSketch { set: Vec<u32> },
+    /// Sketch a set with the service's configured default sketch spec, or
+    /// with an explicit per-request [`crate::sketch::SketchSpec`] string.
+    Sketch {
+        set: Vec<u32>,
+        spec: Option<String>,
+    },
     /// Insert a set into the LSH index (also stores it for `Estimate`).
     LshInsert { id: u32, set: Vec<u32> },
     /// Query the LSH index; returns candidate ids.
@@ -45,6 +61,10 @@ pub enum Response {
     },
     Sketch {
         bins: Vec<u64>,
+    },
+    /// Scheme-tagged sketch from the spec-driven `sketch` endpoint.
+    SketchValue {
+        value: SketchValue,
     },
     Inserted {
         id: u32,
@@ -89,6 +109,62 @@ fn arr_f64(j: &Json, key: &str) -> Result<Vec<f64>> {
         .collect()
 }
 
+/// Encode a [`SketchValue`] into a JSON object (`scheme` + payload). Used
+/// by the `sketch_value` response and the `mixtab sketch` CLI.
+pub fn sketch_value_to_json(value: &SketchValue) -> Json {
+    let j = Json::obj().set("scheme", value.scheme_id());
+    match value {
+        SketchValue::Oph(s) => j.set(
+            "bins",
+            Json::Arr(s.bins.iter().map(|&v| Json::Num(v as f64)).collect()),
+        ),
+        SketchValue::MinHash(vals) => {
+            j.set("vals", vals.iter().map(|&v| v as usize).collect::<Vec<_>>())
+        }
+        SketchValue::SimHash(bits) => j.set(
+            "bits",
+            bits.iter().map(|&b| b as usize).collect::<Vec<_>>(),
+        ),
+        SketchValue::FeatureHash(out) => j.set(
+            "out",
+            Json::Arr(out.iter().map(|&v| Json::Num(v)).collect()),
+        ),
+        SketchValue::BBit(s) => j.set("b", s.b as usize).set(
+            "vals",
+            s.vals.iter().map(|&v| v as usize).collect::<Vec<_>>(),
+        ),
+    }
+}
+
+/// Decode the [`sketch_value_to_json`] form.
+pub fn sketch_value_from_json(j: &Json) -> Result<SketchValue> {
+    let scheme = j
+        .get("scheme")
+        .and_then(Json::as_str)
+        .context("missing 'scheme'")?;
+    Ok(match scheme {
+        "oph" => SketchValue::Oph(OphSketch {
+            bins: arr_f64(j, "bins")?.iter().map(|&v| v as u64).collect(),
+        }),
+        "minhash" => SketchValue::MinHash(arr_u32(j, "vals")?),
+        "simhash" => SketchValue::SimHash(
+            arr_f64(j, "bits")?.iter().map(|&v| v != 0.0).collect(),
+        ),
+        "featurehash" => SketchValue::FeatureHash(arr_f64(j, "out")?),
+        "bbit" => SketchValue::BBit(BbitSketch {
+            b: j.get("b")
+                .and_then(Json::as_i64)
+                .and_then(|x| u32::try_from(x).ok())
+                .context("missing 'b'")?,
+            vals: arr_f64(j, "vals")?
+                .iter()
+                .map(|&v| v as u16)
+                .collect(),
+        }),
+        other => bail!("unknown sketch scheme '{other}' in response"),
+    })
+}
+
 impl Request {
     /// Decode one wire line.
     pub fn from_json_line(line: &str) -> Result<Request> {
@@ -104,6 +180,16 @@ impl Request {
             },
             "oph" => Request::OphSketch {
                 set: arr_u32(&j, "set")?,
+            },
+            "sketch" => Request::Sketch {
+                set: arr_u32(&j, "set")?,
+                // Absent/null means "use the configured default"; any other
+                // non-string is a client bug and must not be masked as the
+                // default scheme.
+                spec: match j.get("spec") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(v.as_str().context("'spec' must be a string")?.to_string()),
+                },
             },
             "insert" => Request::LshInsert {
                 id: j
@@ -167,6 +253,15 @@ impl Request {
             Request::OphSketch { set } => Json::obj()
                 .set("op", "oph")
                 .set("set", set.iter().map(|&x| x as usize).collect::<Vec<_>>()),
+            Request::Sketch { set, spec } => {
+                let j = Json::obj()
+                    .set("op", "sketch")
+                    .set("set", set.iter().map(|&x| x as usize).collect::<Vec<_>>());
+                match spec {
+                    Some(s) => j.set("spec", s.as_str()),
+                    None => j,
+                }
+            }
             Request::LshInsert { id, set } => Json::obj()
                 .set("op", "insert")
                 .set("id", *id as usize)
@@ -216,6 +311,9 @@ impl Response {
                 "bins",
                 Json::Arr(bins.iter().map(|&v| Json::Num(v as f64)).collect()),
             ),
+            Response::SketchValue { value } => sketch_value_to_json(value)
+                .set("ok", true)
+                .set("type", "sketch_value"),
             Response::Inserted { id } => Json::obj()
                 .set("ok", true)
                 .set("type", "inserted")
@@ -283,6 +381,9 @@ impl Response {
                     .map(|v| v.as_f64().unwrap_or(0.0) as u64)
                     .collect(),
             },
+            "sketch_value" => Response::SketchValue {
+                value: sketch_value_from_json(&j)?,
+            },
             "inserted" => Response::Inserted {
                 id: j
                     .get("id")
@@ -327,6 +428,14 @@ mod tests {
                 values: vec![0.5, -1.0, 2.0],
             },
             Request::OphSketch { set: vec![7, 8, 9] },
+            Request::Sketch {
+                set: vec![1, 2, 3],
+                spec: None,
+            },
+            Request::Sketch {
+                set: vec![4, 5],
+                spec: Some("minhash(k=16,hash=murmur3,seed=7)".into()),
+            },
             Request::LshInsert {
                 id: 3,
                 set: vec![1, 2],
@@ -362,6 +471,26 @@ mod tests {
                 path: ExecPath::Pjrt,
             },
             Response::Sketch { bins: vec![5, 1 << 40] },
+            Response::SketchValue {
+                value: SketchValue::Oph(OphSketch {
+                    bins: vec![5, 1 << 40],
+                }),
+            },
+            Response::SketchValue {
+                value: SketchValue::MinHash(vec![1, u32::MAX, 42]),
+            },
+            Response::SketchValue {
+                value: SketchValue::SimHash(vec![true, false, true]),
+            },
+            Response::SketchValue {
+                value: SketchValue::FeatureHash(vec![1.5, -0.25, 0.0]),
+            },
+            Response::SketchValue {
+                value: SketchValue::BBit(BbitSketch {
+                    b: 2,
+                    vals: vec![0, 3, 1 << 2],
+                }),
+            },
             Response::Inserted { id: 9 },
             Response::Candidates { ids: vec![1, 2, 3] },
             Response::Estimate { jaccard: 0.75 },
@@ -388,5 +517,46 @@ mod tests {
         assert!(Request::from_json_line("not json").is_err());
         // Negative ids rejected.
         assert!(Request::from_json_line("{\"op\":\"insert\",\"id\":-1,\"set\":[]}").is_err());
+        // Scheme-aware sketch: missing set / unknown scheme rejected.
+        assert!(Request::from_json_line("{\"op\":\"sketch\"}").is_err());
+        // A non-string spec is an error, not a fallback to the default.
+        assert!(Request::from_json_line("{\"op\":\"sketch\",\"set\":[1],\"spec\":42}").is_err());
+        // An explicit null spec means "use the default".
+        let r = Request::from_json_line("{\"op\":\"sketch\",\"set\":[1],\"spec\":null}").unwrap();
+        assert_eq!(
+            r,
+            Request::Sketch {
+                set: vec![1],
+                spec: None
+            }
+        );
+        assert!(
+            Response::from_json_line("{\"ok\":true,\"type\":\"sketch_value\",\"scheme\":\"zzz\"}")
+                .is_err()
+        );
+    }
+
+    /// The pre-spec `oph` op and `sketch` response type stay wire-stable —
+    /// the compatibility-alias contract for existing clients.
+    #[test]
+    fn oph_compatibility_alias_wire_format() {
+        let req = Request::OphSketch { set: vec![1, 2, 3] };
+        let line = req.to_json_line();
+        assert!(line.contains("\"op\":\"oph\""), "line: {line}");
+        assert_eq!(Request::from_json_line(&line).unwrap(), req);
+
+        let resp = Response::Sketch { bins: vec![4, 5] };
+        let line = resp.to_json_line();
+        assert!(line.contains("\"type\":\"sketch\""), "line: {line}");
+        assert_eq!(Response::from_json_line(&line).unwrap(), resp);
+
+        // And the new endpoint round-trips a spec string untouched.
+        let spec = "oph(k=200,layout=mod,densify=paper,hash=mixed_tab,seed=42)";
+        let req = Request::Sketch {
+            set: vec![9],
+            spec: Some(spec.into()),
+        };
+        let back = Request::from_json_line(&req.to_json_line()).unwrap();
+        assert_eq!(back, req);
     }
 }

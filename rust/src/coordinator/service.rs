@@ -21,18 +21,34 @@ use crate::runtime::artifact::Manifest;
 use crate::runtime::executor::ExecutorHandle;
 use crate::sketch::feature_hash::FeatureHasher;
 use crate::sketch::oph::{BinLayout, OneHashSketcher};
-use crate::sketch::DensifyMode;
+use crate::sketch::sketcher::DynSketcher;
+use crate::sketch::spec::{SketchScheme, SketchSpec};
+use crate::sketch::Scratch;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// The coordinator service.
+///
+/// Every sketcher in here is built through the [`SketchSpec`] registry
+/// (`cfg.fh_spec()`, `cfg.oph_spec()`, `cfg.sketch_spec()`, `cfg.lsh_spec()`)
+/// — the sketch scheme is configuration, not code.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     fh: FeatureHasher,
     oph: OneHashSketcher,
+    /// The erased default sketcher serving the scheme-aware `sketch`
+    /// endpoint (built from `cfg.sketch_spec()`).
+    default_sketcher: Box<dyn DynSketcher>,
+    /// Per-request spec sketchers, keyed by the canonical spec string
+    /// (specs round-trip through `Display`, so the key is exact).
+    /// Construction can dwarf sketching — mixed tabulation fills multi-KB
+    /// tables per hasher — so repeated specs must not rebuild. Bounded:
+    /// cleared wholesale at [`Self::SPEC_CACHE_CAP`] entries.
+    spec_cache: Mutex<HashMap<String, Arc<dyn DynSketcher>>>,
     batcher: Option<FhBatcher>,
-    /// OPH artifact matching `cfg.oph_k`, when loaded: `(name, batch, nnz)`.
+    /// OPH artifact matching the OPH spec's k, when loaded:
+    /// `(name, batch, nnz)`.
     oph_artifact: Option<(String, usize, usize)>,
     /// The basic hasher used to pre-hash elements for the PJRT OPH path —
     /// must be the *same* function the native sketcher uses.
@@ -49,21 +65,17 @@ impl Coordinator {
     /// fail to load, the service runs native-only (logged, not fatal).
     pub fn new(cfg: CoordinatorConfig) -> Self {
         let metrics = Arc::new(Metrics::new());
-        let fh = FeatureHasher::new(cfg.family, cfg.seed, cfg.fh_dim, cfg.sign);
-        let oph = OneHashSketcher::new(
-            cfg.family.build(cfg.seed ^ 0x09EB_57A1),
-            cfg.oph_k,
-            BinLayout::Mod,
-            DensifyMode::Paper,
-        );
+        let fh = cfg.fh_spec().build_feature_hasher().expect("fh spec");
+        let oph_spec = cfg.oph_spec();
+        let oph = oph_spec.build_oph().expect("oph spec");
+        let default_sketcher = cfg.sketch_spec().build();
         let lsh = Mutex::new(LshIndex::new(
             LshParams::new(cfg.lsh_k, cfg.lsh_l),
-            cfg.family,
-            cfg.seed ^ 0x154A_11CE,
+            &cfg.lsh_spec(),
         ));
 
         let (batcher, executor, oph_artifact) = if cfg.enable_pjrt {
-            match Self::start_pjrt(&cfg, &metrics) {
+            match Self::start_pjrt(&cfg, oph.k(), &metrics) {
                 Ok(triple) => triple,
                 Err(e) => {
                     crate::util::logging::warn!("PJRT unavailable, running native-only: {e}");
@@ -73,12 +85,21 @@ impl Coordinator {
         } else {
             (None, None, None)
         };
+        // The PJRT OPH kernel computes the `mod` bin layout only; any other
+        // configured layout must take the native sketcher on the batch path
+        // too, or the two paths would produce incomparable sketches.
+        let oph_artifact = match oph_spec.scheme {
+            SketchScheme::Oph(p) if p.layout == BinLayout::Mod => oph_artifact,
+            _ => None,
+        };
 
         Self {
-            oph_hasher: cfg.family.build(cfg.seed ^ 0x09EB_57A1),
+            oph_hasher: oph_spec.family.build(oph_spec.seed),
             cfg,
             fh,
             oph,
+            default_sketcher,
+            spec_cache: Mutex::new(HashMap::new()),
             batcher,
             oph_artifact,
             lsh,
@@ -91,6 +112,7 @@ impl Coordinator {
     #[allow(clippy::type_complexity)]
     fn start_pjrt(
         cfg: &CoordinatorConfig,
+        oph_k: usize,
         metrics: &Arc<Metrics>,
     ) -> crate::Result<(
         Option<FhBatcher>,
@@ -101,9 +123,10 @@ impl Coordinator {
         let Some(meta) = manifest.find_fh_largest(cfg.fh_dim).cloned() else {
             crate::bail!("no FH artifact for d'={}", cfg.fh_dim);
         };
-        // OPH artifact is optional — only variants matching cfg.oph_k help.
+        // OPH artifact is optional — only variants matching the OPH spec's
+        // bin count help.
         let oph_artifact = manifest
-            .find_oph(cfg.oph_k, 1)
+            .find_oph(oph_k, 1)
             .map(|a| (a.name.clone(), a.kind.batch(), a.kind.nnz()));
         // Load every artifact (OPH modules serve benches/examples too).
         let executor = Arc::new(ExecutorHandle::spawn(manifest)?);
@@ -127,7 +150,7 @@ impl Coordinator {
     pub fn oph_sketch_batch(&self, sets: &[Vec<u32>]) -> Vec<crate::sketch::oph::OphSketch> {
         if let (Some((name, batch, nnz)), Some(exec)) = (&self.oph_artifact, &self.executor) {
             if sets.iter().all(|s| s.len() <= *nnz) {
-                let k = self.cfg.oph_k;
+                let k = self.oph.k();
                 let mut out = Vec::with_capacity(sets.len());
                 for chunk in sets.chunks(*batch) {
                     let mut h = vec![0i32; batch * nnz];
@@ -199,6 +222,7 @@ impl Coordinator {
                 let s = self.oph.sketch(&set);
                 Response::Sketch { bins: s.bins }
             }
+            Request::Sketch { set, spec } => self.handle_sketch(set, spec),
             Request::LshInsert { id, set } => {
                 Metrics::inc(&self.metrics.lsh_inserts);
                 self.lsh.lock().unwrap().insert(id, &set);
@@ -243,13 +267,9 @@ impl Coordinator {
                 Response::Candidates { ids }
             }
             Request::SaveIndex { path } => {
+                let lsh_spec = self.cfg.lsh_spec();
                 let lsh = self.lsh.lock().unwrap();
-                match crate::lsh::persist::save(
-                    &lsh,
-                    self.cfg.family,
-                    self.cfg.seed ^ 0x154A_11CE,
-                    &path,
-                ) {
+                match crate::lsh::persist::save(&lsh, lsh_spec.family, lsh_spec.seed, &path) {
                     Ok(()) => Response::Saved {
                         path,
                         entries: lsh.len(),
@@ -266,6 +286,56 @@ impl Coordinator {
                 json: self.metrics.snapshot(),
             },
         }
+    }
+
+    /// Bound on [`Self::spec_cache`]; once full, later distinct specs are
+    /// served uncached. With `SketchSpec::MAX_HASHERS = 1024` and ~8 KB
+    /// of tabulation tables per hasher, the worst case the cache can pin
+    /// is ~8 × 1024 × 8 KB ≈ 64 MB — bounded, and realistic deployments
+    /// rotate far fewer than eight specs.
+    const SPEC_CACHE_CAP: usize = 8;
+
+    /// Sketcher for a per-request spec, cached by canonical spec string so
+    /// repeated requests pay construction (table fills, k seeded hashers)
+    /// once, not per request.
+    fn cached_sketcher(&self, spec: &SketchSpec) -> Arc<dyn DynSketcher> {
+        let key = spec.to_string();
+        {
+            let cache = self.spec_cache.lock().unwrap();
+            if let Some(sketcher) = cache.get(&key) {
+                return Arc::clone(sketcher);
+            }
+        }
+        // Build outside the lock; a racing duplicate build is harmless.
+        let built: Arc<dyn DynSketcher> = Arc::from(spec.build());
+        let mut cache = self.spec_cache.lock().unwrap();
+        // Insert-if-room rather than evict: a stream of distinct hostile
+        // specs must not flush the legitimate hot entries (overflow specs
+        // still work, they just rebuild per request).
+        if cache.len() < Self::SPEC_CACHE_CAP {
+            cache.insert(key, Arc::clone(&built));
+        }
+        built
+    }
+
+    /// The scheme-aware sketch endpoint: the config's default spec, or a
+    /// per-request spec string parsed and built through the registry.
+    fn handle_sketch(&self, set: Vec<u32>, spec: Option<String>) -> Response {
+        Metrics::inc(&self.metrics.sketch_requests);
+        let mut scratch = Scratch::with_capacity(set.len());
+        let value = match spec {
+            None => self.default_sketcher.sketch_dyn(&set, &mut scratch),
+            Some(text) => match SketchSpec::parse(&text) {
+                Ok(spec) => self.cached_sketcher(&spec).sketch_dyn(&set, &mut scratch),
+                Err(e) => {
+                    Metrics::inc(&self.metrics.errors);
+                    return Response::Error {
+                        message: format!("bad sketch spec: {e}"),
+                    };
+                }
+            },
+        };
+        Response::SketchValue { value }
     }
 
     fn handle_fh(&self, indices: Vec<u32>, values: Vec<f64>) -> Response {
@@ -386,6 +456,68 @@ mod tests {
         };
         assert_eq!(bins.len(), 50);
         assert!(bins.iter().all(|&b| b != crate::sketch::EMPTY_BIN));
+    }
+
+    #[test]
+    fn scheme_aware_sketch_endpoint() {
+        use crate::sketch::SketchValue;
+        let c = Coordinator::new(native_cfg());
+        let set: Vec<u32> = (0..500).collect();
+        // Default spec: identical to the OPH compatibility endpoint.
+        let Response::SketchValue { value } = c.handle(Request::Sketch {
+            set: set.clone(),
+            spec: None,
+        }) else {
+            panic!()
+        };
+        let Response::Sketch { bins } = c.handle(Request::OphSketch { set: set.clone() }) else {
+            panic!()
+        };
+        let SketchValue::Oph(s) = value else {
+            panic!("expected an OPH value from the default spec")
+        };
+        assert_eq!(s.bins, bins);
+        // A per-request spec switches the scheme.
+        let Response::SketchValue { value } = c.handle(Request::Sketch {
+            set: set.clone(),
+            spec: Some("minhash(k=16,seed=3)".into()),
+        }) else {
+            panic!()
+        };
+        assert_eq!(value.scheme_id(), "minhash");
+        assert_eq!(value.len(), 16);
+        // Bad specs are wire errors, not panics.
+        let Response::Error { .. } = c.handle(Request::Sketch {
+            set,
+            spec: Some("oph(k=zero)".into()),
+        }) else {
+            panic!()
+        };
+    }
+
+    #[test]
+    fn configured_default_sketch_scheme() {
+        use crate::hash::HashFamily;
+        use crate::sketch::SketchSpec;
+        let c = Coordinator::new(CoordinatorConfig {
+            sketch: Some(SketchSpec::simhash(HashFamily::MixedTab, 4, 32)),
+            ..native_cfg()
+        });
+        let Response::SketchValue { value } = c.handle(Request::Sketch {
+            set: (0..100).collect(),
+            spec: None,
+        }) else {
+            panic!()
+        };
+        assert_eq!(value.scheme_id(), "simhash");
+        assert_eq!(value.len(), 32);
+        // The OPH compatibility alias still serves OPH bins.
+        let Response::Sketch { bins } = c.handle(Request::OphSketch {
+            set: (0..100).collect(),
+        }) else {
+            panic!()
+        };
+        assert_eq!(bins.len(), 50);
     }
 
     #[test]

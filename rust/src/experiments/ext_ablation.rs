@@ -14,8 +14,8 @@
 use super::common::{ExpContext, ExpSummary};
 use crate::data::synthetic::{dataset1, dataset2};
 use crate::hash::HashFamily;
-use crate::sketch::oph::{BinLayout, OneHashSketcher};
-use crate::sketch::DensifyMode;
+use crate::sketch::oph::BinLayout;
+use crate::sketch::{DensifyMode, OphParams, SketchSpec};
 use crate::stats::Summary;
 use crate::util::csv::{self, CsvWriter};
 use crate::util::rng::Xoshiro256;
@@ -34,7 +34,17 @@ fn mse_for(
     let mut s = Summary::new();
     for rep in 0..reps {
         let seed = ctx.seed ^ salt ^ ((rep as u64) << 18) ^ super::common::fxhash(family.id());
-        let sk = OneHashSketcher::new(family.build(seed), k, layout, mode);
+        let sk = SketchSpec::oph_with(
+            family,
+            seed,
+            OphParams {
+                k,
+                layout,
+                densify: mode,
+            },
+        )
+        .build_oph()
+        .expect("oph spec");
         s.add(sk.estimate(&sk.sketch(&pair.a), &sk.sketch(&pair.b)));
     }
     s

@@ -11,8 +11,8 @@ use super::common::{print_verdict, DistributionPanel, ExpContext, ExpSummary};
 use crate::data::sparse::SparseVector;
 use crate::data::synthetic::{fh_vector1, fh_vector2};
 use crate::hash::HashFamily;
-use crate::sketch::feature_hash::{FeatureHasher, SignMode};
-use crate::sketch::Scratch;
+use crate::sketch::feature_hash::SignMode;
+use crate::sketch::{Scratch, SketchSpec};
 use crate::util::error::Result;
 use crate::util::rng::Xoshiro256;
 
@@ -32,7 +32,9 @@ fn run_vector(
         families: HashFamily::FIGURES.to_vec(),
     };
     let out = panel.run(ctx, reps, move |family, rep_seed| {
-        let fh = FeatureHasher::new(family, rep_seed, dim, SignMode::Separate);
+        let fh = SketchSpec::feature_hash(family, rep_seed, dim, SignMode::Separate)
+            .build_feature_hasher()
+            .expect("fh spec");
         let mut scratch = Scratch::new();
         fh.squared_norm(v, &mut scratch)
     })?;

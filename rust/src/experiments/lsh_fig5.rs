@@ -13,6 +13,7 @@ use super::realworld::load_dataset;
 use crate::hash::HashFamily;
 use crate::lsh::metrics::{ground_truth_batch, BatchEval, QueryEval};
 use crate::lsh::{LshIndex, LshParams};
+use crate::sketch::SketchSpec;
 use crate::util::csv::{self, CsvWriter};
 use crate::util::error::Result;
 
@@ -68,7 +69,12 @@ fn eval_one(
     params: LshParams,
     seed: u64,
 ) -> BatchEval {
-    let mut index = LshIndex::new(params, family, ctx.seed ^ 0xF165 ^ seed.wrapping_mul(0x9E37));
+    let spec = SketchSpec::oph(
+        family,
+        ctx.seed ^ 0xF165 ^ seed.wrapping_mul(0x9E37),
+        params.sketch_bins(),
+    );
+    let mut index = LshIndex::new(params, &spec);
     for (i, s) in data.db.iter().enumerate() {
         index.insert(i as u32, s);
     }

@@ -10,8 +10,7 @@
 use super::common::{print_verdict, DistributionPanel, ExpContext, ExpSummary};
 use crate::data::synthetic::{dataset1, dataset2, SetPair};
 use crate::hash::HashFamily;
-use crate::sketch::oph::{BinLayout, OneHashSketcher};
-use crate::sketch::DensifyMode;
+use crate::sketch::SketchSpec;
 use crate::util::rng::Xoshiro256;
 use crate::util::error::Result;
 
@@ -36,12 +35,9 @@ fn run_pair(
     let a = &pair.a;
     let b = &pair.b;
     let out = panel.run(ctx, reps, move |family, rep_seed| {
-        let sk = OneHashSketcher::new(
-            family.build(rep_seed),
-            k,
-            BinLayout::Mod,
-            DensifyMode::Paper,
-        );
+        let sk = SketchSpec::oph(family, rep_seed, k)
+            .build_oph()
+            .expect("oph spec");
         sk.estimate(&sk.sketch(a), &sk.sketch(b))
     })?;
     print_verdict(&out);

@@ -16,8 +16,8 @@ use super::common::{print_verdict, ExpContext, ExpSummary};
 use crate::data::sparse::Dataset;
 use crate::data::{libsvm, mnist_like, news20_like};
 use crate::hash::HashFamily;
-use crate::sketch::feature_hash::{FeatureHasher, SignMode};
-use crate::sketch::Scratch;
+use crate::sketch::feature_hash::SignMode;
+use crate::sketch::{Scratch, SketchSpec};
 use crate::util::error::Result;
 
 /// Load (or synthesise) a dataset by name.
@@ -86,7 +86,9 @@ fn run_dataset(
                         .wrapping_add(exp_tag)
                         .wrapping_add((rep as u64) << 20)
                         ^ super::common::fxhash(family.id());
-                    let fh = FeatureHasher::new(family, seed, dim, SignMode::Separate);
+                    let fh = SketchSpec::feature_hash(family, seed, dim, SignMode::Separate)
+                        .build_feature_hasher()
+                        .expect("fh spec");
                     let mut scratch = Scratch::new();
                     let mut vals = Vec::with_capacity(vs.len());
                     for v in vs.iter() {

@@ -13,9 +13,8 @@ use super::common::{ExpContext, ExpSummary};
 use crate::data::synthetic::{dataset2, fh_vector2};
 use crate::hash::HashFamily;
 use crate::sketch::bbit::BbitSketch;
-use crate::sketch::feature_hash::{FeatureHasher, SignMode};
-use crate::sketch::oph::{BinLayout, OneHashSketcher};
-use crate::sketch::{DensifyMode, Scratch};
+use crate::sketch::feature_hash::SignMode;
+use crate::sketch::{Scratch, SketchSpec};
 use crate::util::csv::{self, CsvWriter};
 use crate::util::error::Result;
 use crate::util::rng::Xoshiro256;
@@ -58,12 +57,9 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<ExpSummary>> {
                 let mut summary = crate::stats::Summary::new();
                 for rep in 0..reps {
                     let seed = ctx.seed ^ (rep as u64) << 16 ^ super::common::fxhash(family.id());
-                    let sk = OneHashSketcher::new(
-                        family.build(seed),
-                        k,
-                        BinLayout::Mod,
-                        DensifyMode::Paper,
-                    );
+                    let sk = SketchSpec::oph(family, seed, k)
+                        .build_oph()
+                        .expect("oph spec");
                     let (sa, sb) = (sk.sketch(&pair.a), sk.sketch(&pair.b));
                     let est = match bbit {
                         None => sk.estimate(&sa, &sb),
@@ -111,7 +107,9 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<ExpSummary>> {
             let mut summary = crate::stats::Summary::new();
             for rep in 0..reps {
                 let seed = ctx.seed ^ (rep as u64) << 16 ^ super::common::fxhash(family.id());
-                let fh = FeatureHasher::new(family, seed, dim, SignMode::Separate);
+                let fh = SketchSpec::feature_hash(family, seed, dim, SignMode::Separate)
+                    .build_feature_hasher()
+                    .expect("fh spec");
                 let mut scratch = Scratch::new();
                 summary.add(fh.squared_norm(&vec2, &mut scratch));
             }

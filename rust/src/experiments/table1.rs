@@ -12,8 +12,8 @@
 use super::common::{ExpContext, ExpSummary};
 use crate::data::news20_like::{self, News20LikeParams};
 use crate::hash::HashFamily;
-use crate::sketch::feature_hash::{FeatureHasher, SignMode};
-use crate::sketch::Scratch;
+use crate::sketch::feature_hash::SignMode;
+use crate::sketch::{Scratch, SketchSpec};
 use crate::util::bench::{fmt_ns, Bench};
 use crate::util::csv::{self, CsvWriter};
 use crate::util::rng::Xoshiro256;
@@ -56,7 +56,9 @@ pub fn run(ctx: &ExpContext) -> Result<Vec<ExpSummary>> {
         });
         let keys_ns = (m_keys.median_ns() as f64 * factor) as u64;
 
-        let fh = FeatureHasher::new(family, ctx.seed, 128, SignMode::Separate);
+        let fh = SketchSpec::feature_hash(family, ctx.seed, 128, SignMode::Separate)
+            .build_feature_hasher()
+            .expect("fh spec");
         let (docs, f2): (&[_], f64) = if family == HashFamily::Blake2 {
             (&news.vectors[..news.len() / 20], 20.0)
         } else {

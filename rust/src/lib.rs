@@ -24,7 +24,7 @@
 //!   worker pool and TCP front-end for the sketching service.
 //! * [`experiments`] — one driver per paper table/figure (Table 1, Figures
 //!   2–11) regenerating the evaluation.
-//! * [`benchsuite`] — the five bench workloads as in-process functions,
+//! * [`benchsuite`] — the six bench workloads as in-process functions,
 //!   shared by the `cargo bench` targets and the `mixtab bench` CLI, which
 //!   writes machine-readable `BENCH_*.json` reports and gates them against
 //!   a committed baseline (see `util::bench`).

@@ -10,6 +10,7 @@
 use crate::data::sparse::SparseVector;
 use crate::hash::HashFamily;
 use crate::sketch::simhash::SimHash;
+use crate::sketch::spec::SketchSpec;
 use std::collections::HashMap;
 
 /// Angular LSH parameters: K bits per table, L tables.
@@ -30,7 +31,9 @@ pub struct AngularIndex {
 impl AngularIndex {
     pub fn new(params: AngularParams, family: HashFamily, seed: u64) -> Self {
         assert!(params.k >= 1 && params.k <= 64 && params.l >= 1);
-        let sketcher = SimHash::new(family, seed, params.k * params.l);
+        let sketcher = SketchSpec::simhash(family, seed, params.k * params.l)
+            .build_simhash()
+            .expect("simhash spec");
         Self {
             params,
             sketcher,

@@ -6,9 +6,8 @@
 //! buckets. Larger K → fewer false positives per table; larger L → more
 //! chances for a true near neighbour to collide (§2.3).
 
-use crate::hash::HashFamily;
-use crate::sketch::densify::DensifyMode;
-use crate::sketch::oph::{BinLayout, OneHashSketcher, OphSketch};
+use crate::sketch::oph::{OneHashSketcher, OphSketch};
+use crate::sketch::spec::{SketchScheme, SketchSpec};
 use std::collections::HashMap;
 
 /// LSH structural parameters (paper sweeps K, L ∈ {8, 10, 12}).
@@ -54,15 +53,20 @@ pub struct LshIndex {
 }
 
 impl LshIndex {
-    /// Build an empty index whose sketches use `family(seed)` as the basic
-    /// hash function — the paper's experimental variable.
-    pub fn new(params: LshParams, family: HashFamily, seed: u64) -> Self {
-        let sketcher = OneHashSketcher::new(
-            family.build(seed),
-            params.sketch_bins(),
-            BinLayout::Mod,
-            DensifyMode::Paper,
+    /// Build an empty index from an OPH [`SketchSpec`] — the hash family
+    /// and seed are the paper's experimental variable; the spec's bin
+    /// count is overridden to `params.sketch_bins()` (the structural
+    /// (K, L) parameters dictate it). Panics if the spec's scheme is not
+    /// OPH — the (K, L) bucket construction is defined over OPH bins.
+    pub fn new(params: LshParams, spec: &SketchSpec) -> Self {
+        assert!(
+            matches!(spec.scheme, SketchScheme::Oph(_)),
+            "LshIndex needs an OPH sketch spec, got '{spec}'"
         );
+        let sketcher = spec
+            .with_oph_k(params.sketch_bins())
+            .build_oph()
+            .expect("scheme checked above");
         Self {
             params,
             sketcher,
@@ -159,11 +163,17 @@ impl LshIndex {
 mod tests {
     use super::*;
     use crate::data::synthetic::dataset1;
+    use crate::hash::HashFamily;
     use crate::util::rng::Xoshiro256;
+
+    /// Bin count is overridden by the index, so any positive k works here.
+    fn oph_spec(seed: u64) -> SketchSpec {
+        SketchSpec::oph(HashFamily::MixedTab, seed, 1)
+    }
 
     #[test]
     fn self_query_hits() {
-        let mut idx = LshIndex::new(LshParams::new(4, 4), HashFamily::MixedTab, 1);
+        let mut idx = LshIndex::new(LshParams::new(4, 4), &oph_spec(1));
         let sets: Vec<Vec<u32>> = (0..20u32)
             .map(|i| (i * 50..i * 50 + 40).collect())
             .collect();
@@ -181,7 +191,7 @@ mod tests {
     #[test]
     fn near_duplicates_retrieved_distant_sets_mostly_not() {
         let mut rng = Xoshiro256::new(3);
-        let mut idx = LshIndex::new(LshParams::new(8, 10), HashFamily::MixedTab, 7);
+        let mut idx = LshIndex::new(LshParams::new(8, 10), &oph_spec(7));
         // Database: 50 random sets + one near-duplicate of the query.
         let query: Vec<u32> = (0..400u32).collect();
         let mut near = query.clone();
@@ -208,10 +218,10 @@ mod tests {
         let mut hits_l16 = 0;
         for (i, p) in pairs.iter().enumerate() {
             let seed = 1000 + i as u64;
-            let mut small = LshIndex::new(LshParams::new(6, 2), HashFamily::MixedTab, seed);
+            let mut small = LshIndex::new(LshParams::new(6, 2), &oph_spec(seed));
             small.insert(1, &p.a);
             hits_l2 += small.query(&p.b).contains(&1) as u32;
-            let mut big = LshIndex::new(LshParams::new(6, 16), HashFamily::MixedTab, seed);
+            let mut big = LshIndex::new(LshParams::new(6, 16), &oph_spec(seed));
             big.insert(1, &p.a);
             hits_l16 += big.query(&p.b).contains(&1) as u32;
         }
@@ -239,8 +249,8 @@ mod tests {
         let mut retrieved_k1 = 0usize;
         let mut retrieved_k8 = 0usize;
         for seed in 0..5 {
-            let mut k1 = LshIndex::new(LshParams::new(1, 4), HashFamily::MixedTab, seed);
-            let mut k8 = LshIndex::new(LshParams::new(8, 4), HashFamily::MixedTab, seed);
+            let mut k1 = LshIndex::new(LshParams::new(1, 4), &oph_spec(seed));
+            let mut k8 = LshIndex::new(LshParams::new(8, 4), &oph_spec(seed));
             for (i, s) in db.iter().enumerate() {
                 k1.insert(i as u32, s);
                 k8.insert(i as u32, s);
@@ -256,7 +266,7 @@ mod tests {
 
     #[test]
     fn sketch_insert_query_roundtrip() {
-        let mut idx = LshIndex::new(LshParams::new(3, 3), HashFamily::MixedTab, 2);
+        let mut idx = LshIndex::new(LshParams::new(3, 3), &oph_spec(2));
         let set: Vec<u32> = (100..200).collect();
         let sk = idx.sketch(&set);
         idx.insert_sketch(42, &sk);

@@ -69,7 +69,10 @@ pub fn load_from(r: impl Read) -> Result<(LshIndex, HashFamily, u64)> {
     if n_tables != l {
         bail!("snapshot table count {n_tables} != L {l}");
     }
-    let mut index = LshIndex::new(LshParams::new(k, l), family, seed);
+    let mut index = LshIndex::new(
+        LshParams::new(k, l),
+        &crate::sketch::SketchSpec::oph(family, seed, k * l),
+    );
     let mut tables = Vec::with_capacity(n_tables);
     for _ in 0..n_tables {
         let buckets = r.u64()? as usize;
@@ -95,10 +98,14 @@ pub fn load(path: impl AsRef<Path>) -> Result<(LshIndex, HashFamily, u64)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sketch::SketchSpec;
 
     #[test]
     fn roundtrip_preserves_queries() {
-        let mut index = LshIndex::new(LshParams::new(4, 6), HashFamily::MixedTab, 77);
+        let mut index = LshIndex::new(
+            LshParams::new(4, 6),
+            &SketchSpec::oph(HashFamily::MixedTab, 77, 24),
+        );
         let sets: Vec<Vec<u32>> = (0..30u32).map(|i| (i * 40..i * 40 + 120).collect()).collect();
         for (i, s) in sets.iter().enumerate() {
             index.insert(i as u32, s);
@@ -120,7 +127,8 @@ mod tests {
     fn file_roundtrip() {
         let dir = std::env::temp_dir().join("mixtab_lsh_persist");
         let _ = std::fs::remove_dir_all(&dir);
-        let mut index = LshIndex::new(LshParams::new(3, 3), HashFamily::Murmur3, 5);
+        let mut index =
+            LshIndex::new(LshParams::new(3, 3), &SketchSpec::oph(HashFamily::Murmur3, 5, 9));
         index.insert(1, &(0..50).collect::<Vec<_>>());
         let path = dir.join("snap.mxls");
         save(&index, HashFamily::Murmur3, 5, &path).unwrap();
@@ -133,7 +141,7 @@ mod tests {
     fn rejects_garbage() {
         assert!(load_from(&b"garbage!"[..]).is_err());
         let mut buf = Vec::new();
-        let idx = LshIndex::new(LshParams::new(2, 2), HashFamily::MixedTab, 1);
+        let idx = LshIndex::new(LshParams::new(2, 2), &SketchSpec::oph(HashFamily::MixedTab, 1, 4));
         save_to(&idx, HashFamily::MixedTab, 1, &mut buf).unwrap();
         buf[4] = 99; // bad version
         assert!(load_from(&buf[..]).is_err());

@@ -3,6 +3,7 @@
 //! ```text
 //! mixtab exp <id|all> [--seed N] [--scale F] [--out DIR] [--data-dir DIR]
 //! mixtab bench [--quick] [--only NAME] [--json PATH] [--baseline PATH] [--tolerance F]
+//! mixtab sketch --spec SPEC [--set N,N,...|--text STR]
 //! mixtab serve [--config FILE] [--listen ADDR]
 //! mixtab info
 //! ```
@@ -48,6 +49,18 @@ fn cli() -> Command {
                 ),
         )
         .subcommand(
+            Command::new("sketch", "sketch a key set (or shingled document) with a declarative sketch spec")
+                .opt(
+                    "spec",
+                    's',
+                    "SPEC",
+                    "sketch spec, e.g. oph(k=200,hash=mixed_tab,seed=42) — schemes: oph, minhash, simhash, featurehash, bbit",
+                    Some("oph(k=200,layout=mod,densify=paper,hash=mixed_tab,seed=42)"),
+                )
+                .opt("set", '\0', "N,N,...", "comma-separated u32 keys to sketch", None)
+                .opt("text", '\0', "STR", "UTF-8 document; its 5-byte shingles are sketched", None),
+        )
+        .subcommand(
             Command::new("serve", "run the sketching service")
                 .opt("config", 'c', "FILE", "config file (TOML subset)", None)
                 .opt("listen", '\0', "ADDR", "listen address override", None),
@@ -73,6 +86,7 @@ fn main() {
     let result = match parsed.subcommand() {
         Some(("exp", sub)) => run_exp(sub),
         Some(("bench", sub)) => run_bench(sub),
+        Some(("sketch", sub)) => run_sketch(sub),
         Some(("serve", sub)) => run_serve(sub),
         Some(("info", _)) => run_info(),
         _ => {
@@ -204,6 +218,43 @@ fn run_bench(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+fn run_sketch(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
+    use mixtab::sketch::{DynSketcher as _, SketchSpec};
+    if sub.help_requested() {
+        println!("{}", cli().help_text());
+        return Ok(());
+    }
+    let spec = SketchSpec::parse(sub.get("spec").unwrap_or_default())?;
+    let set: Vec<u32> = match (sub.get("set"), sub.get("text")) {
+        (Some(_), Some(_)) => mixtab::bail!("--set and --text are mutually exclusive"),
+        (Some(list), None) => list
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim().parse::<u32>().map_err(|_| {
+                    mixtab::util::error::Error::msg(format!("bad u32 '{s}' in --set"))
+                })
+            })
+            .collect::<mixtab::Result<_>>()?,
+        (None, Some(text)) => mixtab::data::shingle::byte_shingles(text, 5),
+        (None, None) => mixtab::bail!("pass --set N,N,... or --text STR"),
+    };
+    mixtab::ensure!(!set.is_empty(), "nothing to sketch (empty input)");
+    let sketcher = spec.build();
+    let value = sketcher.sketch_dyn(&set, &mut mixtab::sketch::Scratch::new());
+    eprintln!(
+        "spec   : {spec}\nscheme : {}\nkeys   : {}\ncoords : {}",
+        value.scheme_id(),
+        set.len(),
+        value.len()
+    );
+    println!(
+        "{}",
+        mixtab::util::json::to_string(&mixtab::coordinator::request::sketch_value_to_json(&value))
+    );
     Ok(())
 }
 

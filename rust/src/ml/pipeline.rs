@@ -8,6 +8,7 @@ use crate::data::sparse::Dataset;
 use crate::hash::HashFamily;
 use crate::ml::logreg::{LogReg, TrainParams};
 use crate::sketch::feature_hash::{FeatureHasher, SignMode};
+use crate::sketch::SketchSpec;
 use std::collections::BTreeMap;
 
 /// Result of one train/eval run.
@@ -48,7 +49,9 @@ impl FhClassifier {
             label_map.entry(l).or_insert(next);
         }
         let classes = label_map.len().max(2);
-        let fh = FeatureHasher::new(family, seed, dim, SignMode::Paired);
+        let fh = SketchSpec::feature_hash(family, seed, dim, SignMode::Paired)
+            .build_feature_hasher()
+            .expect("fh spec");
 
         let featurise = |r: std::ops::Range<usize>| -> Vec<(Vec<f64>, usize)> {
             r.map(|i| {

@@ -8,7 +8,8 @@
 //! ablation experiment `mixtab exp synth2 --bbit` verifies exactly that.
 
 use super::estimators::bbit_correct;
-use super::oph::{OphSketch, EMPTY_BIN};
+use super::oph::{OneHashSketcher, OphSketch, EMPTY_BIN};
+use super::scratch::Scratch;
 
 /// A b-bit-truncated sketch. Coordinates are the low `b` bits of the source
 /// sketch's values, stored one-per-u16 (b ≤ 8 is where the technique makes
@@ -65,6 +66,56 @@ impl BbitSketch {
     }
 }
 
+/// End-to-end b-bit sketcher: an inner OPH sketcher whose densified output
+/// is truncated to b bits per bin.
+///
+/// This is the `bbit(b=…, k=…)` scheme of
+/// [`crate::sketch::SketchSpec`]; ad-hoc truncation of an existing
+/// [`OphSketch`] stays available via [`BbitSketch::from_oph`].
+pub struct BbitSketcher {
+    oph: OneHashSketcher,
+    b: u32,
+}
+
+impl BbitSketcher {
+    /// Wrap an OPH sketcher; `b` must be in `1..=8`.
+    pub fn new(oph: OneHashSketcher, b: u32) -> Self {
+        assert!((1..=8).contains(&b), "b in 1..=8");
+        Self { oph, b }
+    }
+
+    pub fn b(&self) -> u32 {
+        self.b
+    }
+
+    /// The inner OPH sketcher (its `k` is the b-bit sketch length).
+    pub fn inner(&self) -> &OneHashSketcher {
+        &self.oph
+    }
+
+    /// Sketch using a caller-provided [`Scratch`] (hot path): densified
+    /// OPH sketch, truncated to b bits per bin.
+    pub fn sketch_with(&self, set: &[u32], scratch: &mut Scratch) -> BbitSketch {
+        BbitSketch::from_oph(&self.oph.sketch_with(set, scratch), self.b)
+    }
+
+    /// Convenience wrapper around [`Self::sketch_with`] with a one-shot
+    /// [`Scratch`].
+    pub fn sketch(&self, set: &[u32]) -> BbitSketch {
+        self.sketch_with(set, &mut Scratch::with_capacity(set.len()))
+    }
+
+    /// Bias-corrected Jaccard estimate between two sketches produced by
+    /// *this* sketcher (shape-checked; `BbitSketch::estimate` additionally
+    /// checks the two sketches against each other).
+    pub fn estimate(&self, a: &BbitSketch, b: &BbitSketch) -> f64 {
+        assert_eq!(a.b, self.b, "sketch b-width differs from this sketcher");
+        assert_eq!(b.b, self.b, "sketch b-width differs from this sketcher");
+        assert_eq!(a.vals.len(), self.oph.k(), "sketch length differs from k");
+        a.estimate(b)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,12 +124,25 @@ mod tests {
     use crate::sketch::DensifyMode;
 
     fn sketcher(seed: u64, k: usize) -> OneHashSketcher {
-        OneHashSketcher::new(
+        OneHashSketcher::from_hasher(
             HashFamily::MixedTab.build(seed),
             k,
             BinLayout::Mod,
             DensifyMode::Paper,
         )
+    }
+
+    #[test]
+    fn bbit_sketcher_matches_manual_truncation() {
+        let bs = BbitSketcher::new(sketcher(4, 128), 2);
+        assert_eq!(bs.b(), 2);
+        assert_eq!(bs.inner().k(), 128);
+        let set: Vec<u32> = (0..400).collect();
+        let manual = BbitSketch::from_oph(&sketcher(4, 128).sketch(&set), 2);
+        assert_eq!(bs.sketch(&set), manual);
+        let other = bs.sketch(&(200..600).collect::<Vec<_>>());
+        let est = bs.estimate(&bs.sketch(&set), &other);
+        assert!((-1.0..=1.0).contains(&est));
     }
 
     #[test]

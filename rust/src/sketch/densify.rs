@@ -34,6 +34,27 @@ pub enum DensifyMode {
     Rotation,
 }
 
+impl DensifyMode {
+    /// Stable identifier used by [`crate::sketch::SketchSpec`] strings.
+    pub fn id(&self) -> &'static str {
+        match self {
+            DensifyMode::None => "none",
+            DensifyMode::Paper => "paper",
+            DensifyMode::Rotation => "rotation",
+        }
+    }
+
+    /// Parse the [`Self::id`] form.
+    pub fn parse(s: &str) -> Option<DensifyMode> {
+        match s {
+            "none" => Some(DensifyMode::None),
+            "paper" => Some(DensifyMode::Paper),
+            "rotation" => Some(DensifyMode::Rotation),
+            _ => None,
+        }
+    }
+}
+
 /// Densify `bins` in place. `directions[i]` is the random bit `b_i`
 /// (`false` = left, `true` = right); it must be shared by every sketch that
 /// will be compared (it lives in the sketcher, not the sketch).

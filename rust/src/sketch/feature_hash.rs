@@ -32,7 +32,32 @@ pub enum SignMode {
     Paired,
 }
 
+impl SignMode {
+    /// Stable identifier used by [`crate::sketch::SketchSpec`] strings and
+    /// the coordinator config.
+    pub fn id(&self) -> &'static str {
+        match self {
+            SignMode::Separate => "separate",
+            SignMode::Paired => "paired",
+        }
+    }
+
+    /// Parse the [`Self::id`] form.
+    pub fn parse(s: &str) -> Option<SignMode> {
+        match s {
+            "separate" => Some(SignMode::Separate),
+            "paired" => Some(SignMode::Paired),
+            _ => None,
+        }
+    }
+}
+
 /// A seeded feature-hashing transform `R^d → R^{d'}`.
+///
+/// Constructed either from explicit hashers ([`Self::from_hashers`], used
+/// by tests with stub hashers) or — the configuration path — from a parsed
+/// [`crate::sketch::SketchSpec`] via its `build`/`build_feature_hasher`
+/// registry, which delegates to [`Self::new`].
 pub struct FeatureHasher {
     hasher: Box<dyn Hasher32>,
     sign_hasher: Option<Box<dyn Hasher32>>,

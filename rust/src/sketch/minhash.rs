@@ -13,6 +13,11 @@ use super::scratch::Scratch;
 use crate::hash::{HashFamily, Hasher32};
 
 /// k independent MinHash repetitions.
+///
+/// Constructed either from injected hashers ([`Self::from_hashers`], used
+/// by tests with stub hashers) or — the configuration path — from a parsed
+/// [`crate::sketch::SketchSpec`] via its `build`/`build_minhash` registry,
+/// which delegates to [`Self::new`].
 pub struct MinHash {
     hashers: Vec<Box<dyn Hasher32>>,
 }
@@ -23,6 +28,12 @@ impl MinHash {
         let hashers = (0..k)
             .map(|i| family.build(seed.wrapping_add((i as u64) << 32 | 0x9E37)))
             .collect();
+        Self::from_hashers(hashers)
+    }
+
+    /// Build from k explicit hashers (one per repetition).
+    pub fn from_hashers(hashers: Vec<Box<dyn Hasher32>>) -> Self {
+        assert!(!hashers.is_empty());
         Self { hashers }
     }
 

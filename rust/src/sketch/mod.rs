@@ -20,6 +20,14 @@
 //!   [`crate::hash::Hasher32::hash_slice`] (one dynamic dispatch per batch),
 //!   and the `*_with` method variants reuse caller-owned buffers so steady
 //!   streams allocate nothing per document.
+//! * [`sketcher`] — the unified [`Sketcher`] trait implemented by every
+//!   family, with the object-safe erased [`DynSketcher`] form producing a
+//!   scheme-tagged [`SketchValue`].
+//! * [`spec`] — declarative [`SketchSpec`] descriptions
+//!   (`oph(k=200,hash=mixed_tab,seed=42)`, …) with `parse`/`Display`
+//!   round-tripping, and the single `build()` registry through which every
+//!   sketcher in the coordinator, LSH index, experiments, benchsuite, and
+//!   CLI is constructed.
 
 pub mod minhash;
 pub mod oph;
@@ -29,10 +37,15 @@ pub mod simhash;
 pub mod bbit;
 pub mod estimators;
 pub mod scratch;
+pub mod sketcher;
+pub mod spec;
 
+pub use bbit::{BbitSketch, BbitSketcher};
 pub use densify::{densify, DensifyMode};
 pub use estimators::jaccard_exact;
 pub use feature_hash::{FeatureHasher, SignMode};
 pub use minhash::MinHash;
-pub use oph::{OneHashSketcher, OphSketch, EMPTY_BIN};
+pub use oph::{BinLayout, OneHashSketcher, OphSketch, EMPTY_BIN};
 pub use scratch::Scratch;
+pub use sketcher::{DynSketcher, SketchValue, Sketcher};
+pub use spec::{OphParams, SketchScheme, SketchSpec};

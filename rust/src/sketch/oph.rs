@@ -34,6 +34,25 @@ pub enum BinLayout {
     Range,
 }
 
+impl BinLayout {
+    /// Stable identifier used by [`crate::sketch::SketchSpec`] strings.
+    pub fn id(&self) -> &'static str {
+        match self {
+            BinLayout::Mod => "mod",
+            BinLayout::Range => "range",
+        }
+    }
+
+    /// Parse the [`Self::id`] form.
+    pub fn parse(s: &str) -> Option<BinLayout> {
+        match s {
+            "mod" => Some(BinLayout::Mod),
+            "range" => Some(BinLayout::Range),
+            _ => None,
+        }
+    }
+}
+
 /// A raw (pre-densification) OPH sketch: one `u64` per bin, either the
 /// minimal value or [`EMPTY_BIN`].
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -54,6 +73,10 @@ impl OphSketch {
 /// OPH sketcher: a basic hash function + parameters. The densification
 /// direction bits are derived from the sketcher's own seed so that two sets
 /// sketched by the *same* sketcher share them (required for the estimator).
+///
+/// Constructed either from an injected hasher ([`Self::from_hasher`], used
+/// by tests with stub hashers) or — the configuration path — from a parsed
+/// [`crate::sketch::SketchSpec`] via its `build`/`build_oph` registry.
 pub struct OneHashSketcher {
     hasher: Box<dyn Hasher32>,
     k: usize,
@@ -67,7 +90,12 @@ impl OneHashSketcher {
     /// `k` bins over the given hasher. Direction bits come from the hasher
     /// itself evaluated on bin indices (any fixed derivation shared between
     /// sketches works; the paper just needs "for each index a random bit").
-    pub fn new(hasher: Box<dyn Hasher32>, k: usize, layout: BinLayout, mode: DensifyMode) -> Self {
+    pub fn from_hasher(
+        hasher: Box<dyn Hasher32>,
+        k: usize,
+        layout: BinLayout,
+        mode: DensifyMode,
+    ) -> Self {
         assert!(k >= 1 && (k as u64) <= (1u64 << 32), "k must fit the hash range");
         let directions = (0..k)
             .map(|i| hasher.hash(0xD1B5_4A32u32.wrapping_add(i as u32)) & 1 == 1)
@@ -281,7 +309,7 @@ mod tests {
         // With the Mod layout, bins/values follow b = h mod k, v = h / k.
         let map: std::collections::HashMap<u32, u32> =
             [(1u32, 13u32), (2, 27), (3, 8)].into_iter().collect();
-        let sketcher = OneHashSketcher::new(
+        let sketcher = OneHashSketcher::from_hasher(
             Box::new(TableHasher { map }),
             5,
             BinLayout::Mod,
@@ -297,7 +325,7 @@ mod tests {
 
     #[test]
     fn identical_sets_estimate_one() {
-        let sketcher = OneHashSketcher::new(
+        let sketcher = OneHashSketcher::from_hasher(
             HashFamily::MixedTab.build(3),
             64,
             BinLayout::Mod,
@@ -311,7 +339,7 @@ mod tests {
 
     #[test]
     fn disjoint_sets_estimate_near_zero() {
-        let sketcher = OneHashSketcher::new(
+        let sketcher = OneHashSketcher::from_hasher(
             HashFamily::MixedTab.build(4),
             128,
             BinLayout::Mod,
@@ -334,7 +362,7 @@ mod tests {
         let mut sum = 0.0;
         let reps = 60;
         for seed in 0..reps {
-            let sk = OneHashSketcher::new(
+            let sk = OneHashSketcher::from_hasher(
                 HashFamily::MixedTab.build(seed),
                 200,
                 BinLayout::Mod,
@@ -355,7 +383,7 @@ mod tests {
         let set: Vec<u32> = (0..777u32).map(|i| i.wrapping_mul(0x9E3779B9)).collect();
         let mut scratch = Scratch::new();
         for layout in [BinLayout::Mod, BinLayout::Range] {
-            let sk = OneHashSketcher::new(
+            let sk = OneHashSketcher::from_hasher(
                 HashFamily::MixedTab.build(6),
                 100,
                 layout,
@@ -370,7 +398,7 @@ mod tests {
 
     #[test]
     fn sparse_sets_have_empty_bins_before_densification() {
-        let sketcher = OneHashSketcher::new(
+        let sketcher = OneHashSketcher::from_hasher(
             HashFamily::MixedTab.build(9),
             200,
             BinLayout::Mod,

@@ -10,12 +10,9 @@
 //!
 //! ```
 //! use mixtab::hash::HashFamily;
-//! use mixtab::sketch::oph::{BinLayout, OneHashSketcher};
-//! use mixtab::sketch::{DensifyMode, Scratch};
+//! use mixtab::sketch::{Scratch, SketchSpec};
 //!
-//! let sk = OneHashSketcher::new(
-//!     HashFamily::MixedTab.build(1), 64, BinLayout::Mod, DensifyMode::Paper,
-//! );
+//! let sk = SketchSpec::oph(HashFamily::MixedTab, 1, 64).build_oph().unwrap();
 //! let mut scratch = Scratch::new();
 //! for doc in [&[1u32, 2, 3][..], &[4, 5][..]] {
 //!     let s = sk.sketch_with(doc, &mut scratch); // zero hash-buffer allocs

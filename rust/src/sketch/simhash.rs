@@ -14,6 +14,11 @@ use crate::data::sparse::SparseVector;
 use crate::hash::{HashFamily, Hasher32};
 
 /// k-bit SimHash sketcher.
+///
+/// Constructed either from injected hashers ([`Self::from_hashers`], used
+/// by tests with stub hashers) or — the configuration path — from a parsed
+/// [`crate::sketch::SketchSpec`] via its `build`/`build_simhash` registry,
+/// which delegates to [`Self::new`].
 pub struct SimHash {
     hashers: Vec<Box<dyn Hasher32>>,
 }
@@ -24,6 +29,12 @@ impl SimHash {
         let hashers = (0..bits)
             .map(|i| family.build(seed.wrapping_add(0xABCD_0000 + i as u64)))
             .collect();
+        Self::from_hashers(hashers)
+    }
+
+    /// Build from explicit hashers (one per output bit).
+    pub fn from_hashers(hashers: Vec<Box<dyn Hasher32>>) -> Self {
+        assert!(!hashers.is_empty());
         Self { hashers }
     }
 

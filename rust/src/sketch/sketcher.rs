@@ -1,0 +1,282 @@
+//! The unified [`Sketcher`] trait — one sketching API for every family.
+//!
+//! The paper's hash layer already has a single abstraction
+//! ([`crate::hash::Hasher32`] behind [`crate::hash::HashFamily`]); this
+//! module gives the sketch layer its equivalent. Every sketch family
+//! (OPH, MinHash, SimHash, feature hashing, b-bit) implements [`Sketcher`]
+//! over sets of `u32` keys — the service domain — so generic code can be
+//! written once, and implements the object-safe erased form
+//! [`DynSketcher`] (producing a [`SketchValue`]) so runtime-selected paths
+//! (the coordinator's scheme-aware `Sketch` endpoint, the `mixtab sketch`
+//! CLI) can hold `Box<dyn DynSketcher>` built from a parsed
+//! [`crate::sketch::SketchSpec`].
+//!
+//! Set semantics for the vector-valued families: SimHash and feature
+//! hashing natively sketch a [`SparseVector`]; their [`Sketcher`] impls
+//! treat the input set as its unit-norm indicator vector
+//! ([`SparseVector::unit_indicator`]), which is exactly how the paper's
+//! synthetic experiments feed sets to FH. The typed inherent APIs
+//! (`SimHash::sketch_with(&SparseVector, …)`,
+//! `FeatureHasher::transform_into`) remain the hot paths for real vector
+//! workloads.
+
+use super::bbit::{BbitSketch, BbitSketcher};
+use super::feature_hash::FeatureHasher;
+use super::minhash::MinHash;
+use super::oph::{OneHashSketcher, OphSketch};
+use super::scratch::Scratch;
+use super::simhash::SimHash;
+use crate::data::sparse::SparseVector;
+
+/// A sketch produced by an erased [`DynSketcher`] — one variant per family.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SketchValue {
+    /// Densified (per the sketcher's mode) One Permutation Hashing bins.
+    Oph(OphSketch),
+    /// k×MinHash coordinates.
+    MinHash(Vec<u32>),
+    /// SimHash sign bits.
+    SimHash(Vec<bool>),
+    /// Feature-hashed dense vector.
+    FeatureHash(Vec<f64>),
+    /// b-bit-truncated minwise sketch.
+    BBit(BbitSketch),
+}
+
+impl SketchValue {
+    /// Scheme identifier (matches [`crate::sketch::SketchSpec`] ids).
+    pub fn scheme_id(&self) -> &'static str {
+        match self {
+            SketchValue::Oph(_) => "oph",
+            SketchValue::MinHash(_) => "minhash",
+            SketchValue::SimHash(_) => "simhash",
+            SketchValue::FeatureHash(_) => "featurehash",
+            SketchValue::BBit(_) => "bbit",
+        }
+    }
+
+    /// Number of coordinates in the sketch.
+    pub fn len(&self) -> usize {
+        match self {
+            SketchValue::Oph(s) => s.k(),
+            SketchValue::MinHash(v) => v.len(),
+            SketchValue::SimHash(v) => v.len(),
+            SketchValue::FeatureHash(v) => v.len(),
+            SketchValue::BBit(s) => s.vals.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The unified sketching API over sets of `u32` keys.
+///
+/// Implementations must be deterministic for a fixed construction seed and
+/// must route batch hashing through [`crate::hash::Hasher32::hash_slice`]
+/// with the caller's [`Scratch`] (the PR-2 hot-path contract). The
+/// convenience methods mirror the inherent per-family APIs: `sketch`
+/// allocates a one-shot scratch, `sketch_batch` reuses one scratch across
+/// a whole batch.
+pub trait Sketcher {
+    /// The family's native sketch type.
+    type Sketch;
+
+    /// Sketch one set using a caller-provided [`Scratch`] (hot path).
+    fn sketch_with(&self, set: &[u32], scratch: &mut Scratch) -> Self::Sketch;
+
+    /// Convenience: sketch with a one-shot [`Scratch`].
+    fn sketch(&self, set: &[u32]) -> Self::Sketch {
+        self.sketch_with(set, &mut Scratch::with_capacity(set.len()))
+    }
+
+    /// Sketch a batch of sets, reusing one [`Scratch`] across the batch so
+    /// steady streams allocate no hash buffers per set.
+    fn sketch_batch(&self, sets: &[Vec<u32>], scratch: &mut Scratch) -> Vec<Self::Sketch> {
+        sets.iter().map(|s| self.sketch_with(s, scratch)).collect()
+    }
+}
+
+/// Object-safe erased form of [`Sketcher`] for runtime-selected schemes.
+///
+/// Built by [`crate::sketch::SketchSpec::build`]; the output is wrapped in
+/// the scheme-tagged [`SketchValue`] so wire codecs and CLIs can dispatch
+/// without knowing the concrete type.
+pub trait DynSketcher: Send + Sync {
+    /// Sketch one set into the scheme-tagged value.
+    fn sketch_dyn(&self, set: &[u32], scratch: &mut Scratch) -> SketchValue;
+
+    /// Batch variant (one reused scratch).
+    fn sketch_batch_dyn(&self, sets: &[Vec<u32>], scratch: &mut Scratch) -> Vec<SketchValue> {
+        sets.iter().map(|s| self.sketch_dyn(s, scratch)).collect()
+    }
+
+    /// Scheme identifier (matches [`SketchValue::scheme_id`]).
+    fn scheme_id(&self) -> &'static str;
+}
+
+impl Sketcher for OneHashSketcher {
+    type Sketch = OphSketch;
+
+    fn sketch_with(&self, set: &[u32], scratch: &mut Scratch) -> OphSketch {
+        OneHashSketcher::sketch_with(self, set, scratch)
+    }
+}
+
+impl DynSketcher for OneHashSketcher {
+    fn sketch_dyn(&self, set: &[u32], scratch: &mut Scratch) -> SketchValue {
+        SketchValue::Oph(OneHashSketcher::sketch_with(self, set, scratch))
+    }
+
+    fn scheme_id(&self) -> &'static str {
+        "oph"
+    }
+}
+
+impl Sketcher for MinHash {
+    type Sketch = Vec<u32>;
+
+    fn sketch_with(&self, set: &[u32], scratch: &mut Scratch) -> Vec<u32> {
+        MinHash::sketch_with(self, set, scratch)
+    }
+}
+
+impl DynSketcher for MinHash {
+    fn sketch_dyn(&self, set: &[u32], scratch: &mut Scratch) -> SketchValue {
+        SketchValue::MinHash(MinHash::sketch_with(self, set, scratch))
+    }
+
+    fn scheme_id(&self) -> &'static str {
+        "minhash"
+    }
+}
+
+impl Sketcher for SimHash {
+    type Sketch = Vec<bool>;
+
+    /// Sketches the set's unit-norm indicator vector (module docs).
+    fn sketch_with(&self, set: &[u32], scratch: &mut Scratch) -> Vec<bool> {
+        let v = SparseVector::unit_indicator(set);
+        SimHash::sketch_with(self, &v, scratch)
+    }
+}
+
+impl DynSketcher for SimHash {
+    fn sketch_dyn(&self, set: &[u32], scratch: &mut Scratch) -> SketchValue {
+        SketchValue::SimHash(Sketcher::sketch_with(self, set, scratch))
+    }
+
+    fn scheme_id(&self) -> &'static str {
+        "simhash"
+    }
+}
+
+impl Sketcher for FeatureHasher {
+    type Sketch = Vec<f64>;
+
+    /// Transforms the set's unit-norm indicator vector (module docs).
+    fn sketch_with(&self, set: &[u32], scratch: &mut Scratch) -> Vec<f64> {
+        let v = SparseVector::unit_indicator(set);
+        let mut out = vec![0.0; self.output_dim()];
+        self.transform_into(&v, &mut out, scratch);
+        out
+    }
+}
+
+impl DynSketcher for FeatureHasher {
+    fn sketch_dyn(&self, set: &[u32], scratch: &mut Scratch) -> SketchValue {
+        SketchValue::FeatureHash(Sketcher::sketch_with(self, set, scratch))
+    }
+
+    fn scheme_id(&self) -> &'static str {
+        "featurehash"
+    }
+}
+
+impl Sketcher for BbitSketcher {
+    type Sketch = BbitSketch;
+
+    fn sketch_with(&self, set: &[u32], scratch: &mut Scratch) -> BbitSketch {
+        BbitSketcher::sketch_with(self, set, scratch)
+    }
+}
+
+impl DynSketcher for BbitSketcher {
+    fn sketch_dyn(&self, set: &[u32], scratch: &mut Scratch) -> SketchValue {
+        SketchValue::BBit(BbitSketcher::sketch_with(self, set, scratch))
+    }
+
+    fn scheme_id(&self) -> &'static str {
+        "bbit"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::HashFamily;
+    use crate::sketch::spec::SketchSpec;
+
+    #[test]
+    fn erased_matches_typed_for_every_scheme() {
+        let set: Vec<u32> = (0..400u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        let mut scratch = Scratch::new();
+        for spec in [
+            SketchSpec::oph(HashFamily::MixedTab, 3, 64),
+            SketchSpec::minhash(HashFamily::MixedTab, 4, 16),
+            SketchSpec::simhash(HashFamily::MixedTab, 5, 32),
+            SketchSpec::feature_hash(
+                HashFamily::MixedTab,
+                6,
+                64,
+                crate::sketch::SignMode::Paired,
+            ),
+            SketchSpec::bbit(HashFamily::MixedTab, 7, 2, 64),
+        ] {
+            let erased = spec.build();
+            assert_eq!(erased.scheme_id(), spec.scheme_id());
+            let value = erased.sketch_dyn(&set, &mut scratch);
+            assert_eq!(value.scheme_id(), spec.scheme_id());
+            assert!(!value.is_empty());
+            match &value {
+                SketchValue::Oph(s) => {
+                    assert_eq!(s, &spec.build_oph().unwrap().sketch(&set));
+                }
+                SketchValue::MinHash(v) => {
+                    assert_eq!(v, &spec.build_minhash().unwrap().sketch(&set));
+                }
+                SketchValue::SimHash(v) => {
+                    let sh = spec.build_simhash().unwrap();
+                    assert_eq!(v, &Sketcher::sketch(&sh, &set));
+                }
+                SketchValue::FeatureHash(v) => {
+                    let fh = spec.build_feature_hasher().unwrap();
+                    assert_eq!(v, &Sketcher::sketch(&fh, &set));
+                }
+                SketchValue::BBit(s) => {
+                    assert_eq!(s, &spec.build_bbit().unwrap().sketch(&set));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_per_set() {
+        let sets: Vec<Vec<u32>> = (0..5u32).map(|i| (i * 100..i * 100 + 80).collect()).collect();
+        let mut scratch = Scratch::new();
+        let erased = SketchSpec::oph(HashFamily::MixedTab, 9, 32).build();
+        let batch = erased.sketch_batch_dyn(&sets, &mut scratch);
+        assert_eq!(batch.len(), sets.len());
+        for (s, v) in sets.iter().zip(&batch) {
+            assert_eq!(v, &erased.sketch_dyn(s, &mut scratch));
+        }
+    }
+
+    #[test]
+    fn sketch_value_len_reports_coordinates() {
+        assert_eq!(SketchValue::MinHash(vec![1, 2, 3]).len(), 3);
+        assert_eq!(SketchValue::SimHash(vec![true; 8]).len(), 8);
+        assert!(SketchValue::FeatureHash(Vec::new()).is_empty());
+    }
+}

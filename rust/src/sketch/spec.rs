@@ -1,0 +1,536 @@
+//! Declarative sketch specifications — sketches as configuration.
+//!
+//! [`SketchSpec`] is the sketch layer's counterpart to
+//! [`HashFamily::parse`]/[`HashFamily::build`]: a value describing *which*
+//! sketch to build (scheme + parameters + basic hash family + seed) that
+//! round-trips through a canonical string form and is constructed in
+//! exactly one place — the [`SketchSpec::build`] registry. Everything that
+//! used to call the per-family constructors with a `HashFamily` + seed
+//! (the coordinator, [`crate::lsh::LshIndex`], every `experiments/*`
+//! module, `benchsuite`, the CLI) now goes through a spec, so the sketch
+//! in use is a configuration knob rather than code.
+//!
+//! # Grammar
+//!
+//! `scheme(key=value,key=value,…)`, e.g.
+//!
+//! ```text
+//! oph(k=200,layout=mod,densify=paper,hash=mixed_tab,seed=42)
+//! minhash(k=128,hash=mixed_tab,seed=7)
+//! simhash(bits=64,hash=murmur3,seed=1)
+//! featurehash(dim=128,sign=paired,hash=mixed_tab,seed=42)
+//! bbit(b=2,k=200,layout=mod,densify=paper,hash=mixed_tab,seed=3)
+//! ```
+//!
+//! `hash` (default `mixed_tab`) and `seed` (default `0`) are common to all
+//! schemes; `layout`/`densify`/`sign` are optional with the paper's
+//! defaults; the size parameters (`k`, `bits`, `dim`, `b`) are required.
+//! [`std::fmt::Display`] emits the canonical fully-keyed form and
+//! `parse(display(spec)) == spec` for every spec.
+//!
+//! # Equivalence guarantee
+//!
+//! `build_*` must construct sketchers bit-identical to the direct
+//! constructors they replaced (`OneHashSketcher::from_hasher(family.build(seed), …)`,
+//! `MinHash::new(family, seed, k)`, …) — pinned by the spec-equivalence
+//! property tests in `rust/tests/properties.rs`.
+
+use super::bbit::BbitSketcher;
+use super::densify::DensifyMode;
+use super::feature_hash::{FeatureHasher, SignMode};
+use super::minhash::MinHash;
+use super::oph::{BinLayout, OneHashSketcher};
+use super::simhash::SimHash;
+use super::sketcher::DynSketcher;
+use crate::hash::HashFamily;
+use crate::util::error::{bail, format_err, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// OPH structural parameters (shared by the plain and b-bit schemes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OphParams {
+    /// Number of bins k.
+    pub k: usize,
+    /// How `h(x)` splits into (bin, value).
+    pub layout: BinLayout,
+    /// Empty-bin handling.
+    pub densify: DensifyMode,
+}
+
+impl OphParams {
+    /// Paper defaults: `mod` layout, [33] densification.
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            layout: BinLayout::Mod,
+            densify: DensifyMode::Paper,
+        }
+    }
+}
+
+/// Which sketch family a [`SketchSpec`] builds, with its parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchScheme {
+    /// One Permutation Hashing (§2.1).
+    Oph(OphParams),
+    /// Classic k×MinHash baseline.
+    MinHash { k: usize },
+    /// SimHash sign-random-projection bits.
+    SimHash { bits: usize },
+    /// Feature hashing to `dim` dense dimensions (§2.2).
+    FeatureHash { dim: usize, sign: SignMode },
+    /// b-bit truncation of a densified OPH sketch (§1.2).
+    BBit { b: u32, inner: OphParams },
+}
+
+/// A complete, buildable sketch description: scheme + hash family + seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SketchSpec {
+    pub scheme: SketchScheme,
+    /// The paper's experimental variable: the basic hash family.
+    pub family: HashFamily,
+    /// Root seed for the sketcher's hash function(s).
+    pub seed: u64,
+}
+
+impl SketchSpec {
+    /// OPH spec with the paper defaults (`mod` layout, [33] densification).
+    pub fn oph(family: HashFamily, seed: u64, k: usize) -> Self {
+        Self::oph_with(family, seed, OphParams::new(k))
+    }
+
+    /// OPH spec with explicit layout/densification.
+    pub fn oph_with(family: HashFamily, seed: u64, params: OphParams) -> Self {
+        Self {
+            scheme: SketchScheme::Oph(params),
+            family,
+            seed,
+        }
+    }
+
+    /// k×MinHash spec.
+    pub fn minhash(family: HashFamily, seed: u64, k: usize) -> Self {
+        Self {
+            scheme: SketchScheme::MinHash { k },
+            family,
+            seed,
+        }
+    }
+
+    /// SimHash spec.
+    pub fn simhash(family: HashFamily, seed: u64, bits: usize) -> Self {
+        Self {
+            scheme: SketchScheme::SimHash { bits },
+            family,
+            seed,
+        }
+    }
+
+    /// Feature-hashing spec.
+    pub fn feature_hash(family: HashFamily, seed: u64, dim: usize, sign: SignMode) -> Self {
+        Self {
+            scheme: SketchScheme::FeatureHash { dim, sign },
+            family,
+            seed,
+        }
+    }
+
+    /// b-bit spec over a default-parameter OPH inner sketch.
+    pub fn bbit(family: HashFamily, seed: u64, b: u32, k: usize) -> Self {
+        Self {
+            scheme: SketchScheme::BBit {
+                b,
+                inner: OphParams::new(k),
+            },
+            family,
+            seed,
+        }
+    }
+
+    /// Scheme identifier (the grammar's scheme name).
+    pub fn scheme_id(&self) -> &'static str {
+        match self.scheme {
+            SketchScheme::Oph(_) => "oph",
+            SketchScheme::MinHash { .. } => "minhash",
+            SketchScheme::SimHash { .. } => "simhash",
+            SketchScheme::FeatureHash { .. } => "featurehash",
+            SketchScheme::BBit { .. } => "bbit",
+        }
+    }
+
+    /// Copy of this spec with the OPH bin count replaced — used by
+    /// [`crate::lsh::LshIndex`], whose structural (K, L) parameters dictate
+    /// the bin count. Panics if the scheme is not OPH.
+    pub fn with_oph_k(mut self, k: usize) -> Self {
+        match &mut self.scheme {
+            SketchScheme::Oph(p) => p.k = k,
+            other => panic!("with_oph_k on non-OPH scheme {other:?}"),
+        }
+        self
+    }
+
+    /// Parse from the canonical string form (see module docs).
+    pub fn parse(s: &str) -> Result<SketchSpec> {
+        let s = s.trim();
+        let (name, args) = match s.find('(') {
+            Some(i) => {
+                let inner = s[i + 1..]
+                    .strip_suffix(')')
+                    .ok_or_else(|| format_err!("sketch spec '{s}' missing closing ')'"))?;
+                (&s[..i], inner)
+            }
+            None => (s, ""),
+        };
+        let mut params: BTreeMap<&str, &str> = BTreeMap::new();
+        for part in args.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format_err!("bad sketch spec parameter '{part}' (want key=value)"))?;
+            if params.insert(key.trim(), value.trim()).is_some() {
+                bail!("duplicate sketch spec parameter '{}'", key.trim());
+            }
+        }
+
+        let family = match params.remove("hash") {
+            Some(id) => HashFamily::parse(id)
+                .ok_or_else(|| format_err!("unknown hash family '{id}' in sketch spec"))?,
+            None => HashFamily::MixedTab,
+        };
+        let seed = match params.remove("seed") {
+            Some(v) => parse_int::<u64>(v, "seed")?,
+            None => 0,
+        };
+        let scheme = match name {
+            "oph" => SketchScheme::Oph(take_oph_params(&mut params)?),
+            "minhash" | "mh" => SketchScheme::MinHash {
+                k: take_req::<usize>(&mut params, "k")?,
+            },
+            "simhash" => SketchScheme::SimHash {
+                bits: take_req::<usize>(&mut params, "bits")?,
+            },
+            "featurehash" | "fh" => SketchScheme::FeatureHash {
+                dim: take_req::<usize>(&mut params, "dim")?,
+                sign: match params.remove("sign") {
+                    Some(id) => SignMode::parse(id)
+                        .ok_or_else(|| format_err!("unknown sign mode '{id}' in sketch spec"))?,
+                    None => SignMode::Paired,
+                },
+            },
+            "bbit" => {
+                let b = take_req::<u32>(&mut params, "b")?;
+                if !(1..=8).contains(&b) {
+                    bail!("bbit spec needs b in 1..=8, got {b}");
+                }
+                SketchScheme::BBit {
+                    b,
+                    inner: take_oph_params(&mut params)?,
+                }
+            }
+            other => bail!(
+                "unknown sketch scheme '{other}' (expected oph|minhash|simhash|featurehash|bbit)"
+            ),
+        };
+        if let Some(key) = params.keys().next() {
+            bail!("unknown parameter '{key}' for sketch scheme '{name}'");
+        }
+        let spec = SketchSpec {
+            scheme,
+            family,
+            seed,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Max coordinates for the O(size)-memory schemes (OPH, FH, b-bit).
+    /// Parsed specs reach the registry from the wire (`sketch` op) and the
+    /// CLI, so unparseable-but-huge sizes must not allocate.
+    pub const MAX_COORDS: usize = 1 << 22;
+
+    /// Max coordinates for the hasher-per-coordinate schemes (MinHash,
+    /// SimHash), which additionally build one seeded hasher (tabulation
+    /// tables included, multi-KB each) per coordinate — this cap also
+    /// bounds what a server-side sketcher cache can retain per entry.
+    /// The paper's largest repetition counts are k ≤ 500; 1024 is
+    /// headroom, not a target. Applies to *parsed* specs only —
+    /// programmatic construction (e.g. `lsh::AngularIndex`) is not capped.
+    pub const MAX_HASHERS: usize = 1 << 10;
+
+    fn validate(&self) -> Result<()> {
+        let (size, cap) = match self.scheme {
+            SketchScheme::Oph(p) | SketchScheme::BBit { inner: p, .. } => (p.k, Self::MAX_COORDS),
+            SketchScheme::MinHash { k } => (k, Self::MAX_HASHERS),
+            SketchScheme::SimHash { bits } => (bits, Self::MAX_HASHERS),
+            SketchScheme::FeatureHash { dim, .. } => (dim, Self::MAX_COORDS),
+        };
+        if size == 0 {
+            bail!("sketch spec '{self}' has a zero-sized sketch");
+        }
+        if size > cap {
+            bail!("sketch spec '{self}' exceeds the size cap ({size} > {cap})");
+        }
+        Ok(())
+    }
+
+    /// **The registry**: construct the erased sketcher this spec describes.
+    /// This (with the typed `build_*` accessors below, which it delegates
+    /// to) is the only place sketcher construction from configuration
+    /// happens.
+    pub fn build(&self) -> Box<dyn DynSketcher> {
+        match self.scheme {
+            SketchScheme::Oph(_) => Box::new(self.build_oph().expect("scheme checked")),
+            SketchScheme::MinHash { .. } => Box::new(self.build_minhash().expect("scheme checked")),
+            SketchScheme::SimHash { .. } => Box::new(self.build_simhash().expect("scheme checked")),
+            SketchScheme::FeatureHash { .. } => {
+                Box::new(self.build_feature_hasher().expect("scheme checked"))
+            }
+            SketchScheme::BBit { .. } => Box::new(self.build_bbit().expect("scheme checked")),
+        }
+    }
+
+    /// Typed OPH construction; errors unless the scheme is [`SketchScheme::Oph`].
+    pub fn build_oph(&self) -> Result<OneHashSketcher> {
+        let SketchScheme::Oph(p) = self.scheme else {
+            bail!("spec '{self}' is not an OPH spec");
+        };
+        Ok(OneHashSketcher::from_hasher(
+            self.family.build(self.seed),
+            p.k,
+            p.layout,
+            p.densify,
+        ))
+    }
+
+    /// Typed MinHash construction; errors unless the scheme is [`SketchScheme::MinHash`].
+    pub fn build_minhash(&self) -> Result<MinHash> {
+        let SketchScheme::MinHash { k } = self.scheme else {
+            bail!("spec '{self}' is not a MinHash spec");
+        };
+        Ok(MinHash::new(self.family, self.seed, k))
+    }
+
+    /// Typed SimHash construction; errors unless the scheme is [`SketchScheme::SimHash`].
+    pub fn build_simhash(&self) -> Result<SimHash> {
+        let SketchScheme::SimHash { bits } = self.scheme else {
+            bail!("spec '{self}' is not a SimHash spec");
+        };
+        Ok(SimHash::new(self.family, self.seed, bits))
+    }
+
+    /// Typed feature-hasher construction; errors unless the scheme is
+    /// [`SketchScheme::FeatureHash`].
+    pub fn build_feature_hasher(&self) -> Result<FeatureHasher> {
+        let SketchScheme::FeatureHash { dim, sign } = self.scheme else {
+            bail!("spec '{self}' is not a feature-hashing spec");
+        };
+        Ok(FeatureHasher::new(self.family, self.seed, dim, sign))
+    }
+
+    /// Typed b-bit construction; errors unless the scheme is [`SketchScheme::BBit`].
+    pub fn build_bbit(&self) -> Result<BbitSketcher> {
+        let SketchScheme::BBit { b, inner } = self.scheme else {
+            bail!("spec '{self}' is not a b-bit spec");
+        };
+        let oph = SketchSpec::oph_with(self.family, self.seed, inner)
+            .build_oph()
+            .expect("inner scheme is OPH by construction");
+        Ok(BbitSketcher::new(oph, b))
+    }
+}
+
+impl fmt::Display for SketchSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let common = format!("hash={},seed={}", self.family.id(), self.seed);
+        match self.scheme {
+            SketchScheme::Oph(p) => write!(
+                f,
+                "oph(k={},layout={},densify={},{common})",
+                p.k,
+                p.layout.id(),
+                p.densify.id(),
+            ),
+            SketchScheme::MinHash { k } => write!(f, "minhash(k={k},{common})"),
+            SketchScheme::SimHash { bits } => write!(f, "simhash(bits={bits},{common})"),
+            SketchScheme::FeatureHash { dim, sign } => {
+                write!(f, "featurehash(dim={dim},sign={},{common})", sign.id())
+            }
+            SketchScheme::BBit { b, inner } => write!(
+                f,
+                "bbit(b={b},k={},layout={},densify={},{common})",
+                inner.k,
+                inner.layout.id(),
+                inner.densify.id(),
+            ),
+        }
+    }
+}
+
+fn parse_int<T: std::str::FromStr>(value: &str, key: &str) -> Result<T> {
+    value
+        .parse::<T>()
+        .map_err(|_| format_err!("bad integer '{value}' for sketch spec parameter '{key}'"))
+}
+
+fn take_req<T: std::str::FromStr>(params: &mut BTreeMap<&str, &str>, key: &str) -> Result<T> {
+    let value = params
+        .remove(key)
+        .ok_or_else(|| format_err!("sketch spec is missing required parameter '{key}'"))?;
+    parse_int::<T>(value, key)
+}
+
+fn take_oph_params(params: &mut BTreeMap<&str, &str>) -> Result<OphParams> {
+    let k = take_req::<usize>(params, "k")?;
+    let layout = match params.remove("layout") {
+        Some(id) => BinLayout::parse(id)
+            .ok_or_else(|| format_err!("unknown bin layout '{id}' in sketch spec"))?,
+        None => BinLayout::Mod,
+    };
+    let densify = match params.remove("densify") {
+        Some(id) => DensifyMode::parse(id)
+            .ok_or_else(|| format_err!("unknown densify mode '{id}' in sketch spec"))?,
+        None => DensifyMode::Paper,
+    };
+    Ok(OphParams { k, layout, densify })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_variants() -> Vec<SketchSpec> {
+        vec![
+            SketchSpec::oph(HashFamily::MixedTab, 42, 200),
+            SketchSpec::oph_with(
+                HashFamily::MultiplyShift,
+                7,
+                OphParams {
+                    k: 64,
+                    layout: BinLayout::Range,
+                    densify: DensifyMode::None,
+                },
+            ),
+            SketchSpec::oph_with(
+                HashFamily::Poly2,
+                1,
+                OphParams {
+                    k: 16,
+                    layout: BinLayout::Mod,
+                    densify: DensifyMode::Rotation,
+                },
+            ),
+            SketchSpec::minhash(HashFamily::Murmur3, 9, 128),
+            SketchSpec::simhash(HashFamily::City, 10, 64),
+            SketchSpec::feature_hash(HashFamily::MixedTab, 42, 128, SignMode::Paired),
+            SketchSpec::feature_hash(HashFamily::Blake2, 3, 32, SignMode::Separate),
+            SketchSpec::bbit(HashFamily::MixedTab, 5, 2, 200),
+        ]
+    }
+
+    #[test]
+    fn display_parse_roundtrip_every_variant() {
+        for spec in all_variants() {
+            let text = spec.to_string();
+            let back = SketchSpec::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+            assert_eq!(back, spec, "{text}");
+        }
+    }
+
+    #[test]
+    fn parse_applies_defaults() {
+        let spec = SketchSpec::parse("oph(k=100)").unwrap();
+        assert_eq!(spec, SketchSpec::oph(HashFamily::MixedTab, 0, 100));
+        let spec = SketchSpec::parse("featurehash(dim=64)").unwrap();
+        assert_eq!(
+            spec,
+            SketchSpec::feature_hash(HashFamily::MixedTab, 0, 64, SignMode::Paired)
+        );
+        // Aliases and whitespace tolerance.
+        let spec = SketchSpec::parse(" mh( k=8 , hash=ms , seed=3 ) ").unwrap();
+        assert_eq!(spec, SketchSpec::minhash(HashFamily::MultiplyShift, 3, 8));
+        let spec = SketchSpec::parse("fh(dim=32,sign=separate)").unwrap();
+        assert_eq!(
+            spec,
+            SketchSpec::feature_hash(HashFamily::MixedTab, 0, 32, SignMode::Separate)
+        );
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        for bad in [
+            "",
+            "oph",                          // missing required k
+            "oph(k=100",                    // unterminated
+            "oph(k=abc)",                   // bad integer
+            "oph(k=0)",                     // zero-sized sketch
+            "oph(k=100,k=200)",             // duplicate key
+            "oph(k=100,layout=diag)",       // unknown layout
+            "oph(k=100,densify=magic)",     // unknown densify mode
+            "oph(k=100,hash=md5)",          // unknown family
+            "oph(k=100,wibble=3)",          // unknown parameter
+            "minhash(bits=4)",              // wrong size key for the scheme
+            "simhash(k=4)",                 // ditto
+            "featurehash(dim=64,sign=odd)", // unknown sign mode
+            "bbit(b=0,k=100)",              // b out of range
+            "bbit(b=9,k=100)",              // b out of range
+            "oph(k=8589934592)",            // beyond MAX_COORDS (and 2^32)
+            "minhash(k=2000000000)",        // beyond MAX_HASHERS
+            "featurehash(dim=1000000000)",  // beyond MAX_COORDS
+            "simhash(bits=100000)",         // beyond MAX_HASHERS
+            "waveletsketch(k=4)",           // unknown scheme
+            "oph(k)",                       // not key=value
+        ] {
+            assert!(SketchSpec::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn build_all_variants() {
+        let set: Vec<u32> = (0..200).collect();
+        for spec in all_variants() {
+            let sk = spec.build();
+            assert_eq!(sk.scheme_id(), spec.scheme_id());
+            let value = sk.sketch_dyn(&set, &mut crate::sketch::Scratch::new());
+            assert_eq!(value.scheme_id(), spec.scheme_id());
+        }
+    }
+
+    #[test]
+    fn typed_builders_reject_scheme_mismatch() {
+        let oph = SketchSpec::oph(HashFamily::MixedTab, 1, 8);
+        let mh = SketchSpec::minhash(HashFamily::MixedTab, 1, 8);
+        assert!(oph.build_minhash().is_err());
+        assert!(oph.build_simhash().is_err());
+        assert!(oph.build_feature_hasher().is_err());
+        assert!(oph.build_bbit().is_err());
+        assert!(mh.build_oph().is_err());
+        assert!(mh.build_minhash().is_ok());
+    }
+
+    #[test]
+    fn with_oph_k_overrides_bin_count() {
+        let spec = SketchSpec::oph(HashFamily::MixedTab, 1, 8).with_oph_k(30);
+        assert_eq!(spec.build_oph().unwrap().k(), 30);
+    }
+
+    #[test]
+    #[should_panic]
+    fn with_oph_k_panics_on_non_oph() {
+        let _ = SketchSpec::minhash(HashFamily::MixedTab, 1, 8).with_oph_k(30);
+    }
+
+    #[test]
+    fn build_is_deterministic_for_fixed_seed() {
+        let set: Vec<u32> = (0..300).collect();
+        for spec in all_variants() {
+            let mut scratch = crate::sketch::Scratch::new();
+            let a = spec.build().sketch_dyn(&set, &mut scratch);
+            let b = spec.build().sketch_dyn(&set, &mut scratch);
+            assert_eq!(a, b, "{spec}");
+        }
+    }
+}

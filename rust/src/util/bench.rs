@@ -237,7 +237,7 @@ pub const BENCH_SCHEMA: &str = "mixtab-bench-v1";
 /// One machine-readable bench result (a row of a `BENCH_*.json` report).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CaseRecord {
-    /// Workload name (one of the five bench targets / `benchsuite` entries).
+    /// Workload name (one of the six bench targets / `benchsuite` entries).
     pub bench: String,
     /// Case name within the workload (e.g. `hash32/mixed_tab`).
     pub case: String,

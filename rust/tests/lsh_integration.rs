@@ -5,6 +5,7 @@ use mixtab::data::mnist_like;
 use mixtab::hash::HashFamily;
 use mixtab::lsh::metrics::{ground_truth, BatchEval, QueryEval};
 use mixtab::lsh::{LshIndex, LshParams};
+use mixtab::sketch::SketchSpec;
 
 fn build_index(
     db: &[Vec<u32>],
@@ -12,7 +13,7 @@ fn build_index(
     params: LshParams,
     seed: u64,
 ) -> LshIndex {
-    let mut idx = LshIndex::new(params, family, seed);
+    let mut idx = LshIndex::new(params, &SketchSpec::oph(family, seed, params.sketch_bins()));
     for (i, s) in db.iter().enumerate() {
         idx.insert(i as u32, s);
     }
@@ -73,14 +74,20 @@ fn ratio_improves_with_k_on_mnist_like() {
 
 #[test]
 fn empty_index_returns_nothing() {
-    let idx = LshIndex::new(LshParams::new(4, 4), HashFamily::MixedTab, 1);
+    let idx = LshIndex::new(
+        LshParams::new(4, 4),
+        &SketchSpec::oph(HashFamily::MixedTab, 1, 16),
+    );
     assert!(idx.query(&[1, 2, 3]).is_empty());
     assert!(idx.is_empty());
 }
 
 #[test]
 fn duplicate_ids_both_retrieved() {
-    let mut idx = LshIndex::new(LshParams::new(4, 6), HashFamily::MixedTab, 5);
+    let mut idx = LshIndex::new(
+        LshParams::new(4, 6),
+        &SketchSpec::oph(HashFamily::MixedTab, 5, 24),
+    );
     let set: Vec<u32> = (0..200).collect();
     idx.insert(7, &set);
     idx.insert(8, &set);

@@ -27,7 +27,7 @@ fn prop_hash_deterministic_all_families() {
 
 #[test]
 fn prop_oph_estimate_in_unit_interval() {
-    let sk = OneHashSketcher::new(
+    let sk = OneHashSketcher::from_hasher(
         HashFamily::MixedTab.build(5),
         64,
         BinLayout::Mod,
@@ -45,7 +45,7 @@ fn prop_oph_estimate_in_unit_interval() {
 
 #[test]
 fn prop_oph_self_similarity_is_one() {
-    let sk = OneHashSketcher::new(
+    let sk = OneHashSketcher::from_hasher(
         HashFamily::MixedTab.build(9),
         128,
         BinLayout::Mod,
@@ -58,7 +58,7 @@ fn prop_oph_self_similarity_is_one() {
 
 #[test]
 fn prop_densified_sketch_never_empty() {
-    let sk = OneHashSketcher::new(
+    let sk = OneHashSketcher::from_hasher(
         HashFamily::MixedTab.build(13),
         200,
         BinLayout::Mod,
@@ -216,9 +216,10 @@ fn prop_batched_sketches_bit_identical_to_per_key() {
     for fam in HashFamily::TABLE1 {
         // Blake2 hashes ~1000× slower; fewer cases keep the test quick.
         let cases = if *fam == HashFamily::Blake2 { 4 } else { 24 };
-        let oph_mod = OneHashSketcher::new(fam.build(7), 64, BinLayout::Mod, DensifyMode::Paper);
+        let oph_mod =
+            OneHashSketcher::from_hasher(fam.build(7), 64, BinLayout::Mod, DensifyMode::Paper);
         let oph_range =
-            OneHashSketcher::new(fam.build(8), 64, BinLayout::Range, DensifyMode::None);
+            OneHashSketcher::from_hasher(fam.build(8), 64, BinLayout::Range, DensifyMode::None);
         let mh = MinHash::new(*fam, 9, 16);
         let sh = SimHash::new(*fam, 10, 32);
         Runner::new(cases).run(
@@ -238,6 +239,88 @@ fn prop_batched_sketches_bit_identical_to_per_key() {
                         == oph_range.sketch_raw_per_key(set)
                     && mh.sketch_with(set, &mut scratch) == mh.sketch_per_key(set)
                     && sh.sketch_with(&v, &mut scratch) == sh.sketch_per_key(&v)
+            },
+        );
+    }
+}
+
+/// Acceptance property for the `SketchSpec` registry: for every Table 1
+/// family, spec-built sketchers are bit-identical to the pre-redesign
+/// direct constructions (injected-hasher OPH, family+seed MinHash /
+/// SimHash / FeatureHasher), the erased `build()` path matches the typed
+/// `build_*` path, and specs survive a parse/Display round trip with the
+/// built sketcher still producing identical output.
+#[test]
+fn prop_spec_registry_bit_identical_to_direct_construction() {
+    use mixtab::data::SparseVector;
+    use mixtab::sketch::bbit::BbitSketch;
+    use mixtab::sketch::minhash::MinHash;
+    use mixtab::sketch::simhash::SimHash;
+    use mixtab::sketch::{DynSketcher, Scratch, SketchSpec, SketchValue, Sketcher, SignMode};
+
+    for fam in HashFamily::TABLE1 {
+        let cases = if *fam == HashFamily::Blake2 { 4 } else { 16 };
+        let seed = 0xC0DEu64;
+
+        let oph_spec = SketchSpec::oph(*fam, seed, 64);
+        let oph_direct =
+            OneHashSketcher::from_hasher(fam.build(seed), 64, BinLayout::Mod, DensifyMode::Paper);
+        let oph_spec_built = oph_spec.build_oph().unwrap();
+        let oph_reparsed = SketchSpec::parse(&oph_spec.to_string())
+            .unwrap()
+            .build_oph()
+            .unwrap();
+
+        let mh_spec = SketchSpec::minhash(*fam, seed, 8);
+        let mh_direct = MinHash::new(*fam, seed, 8);
+        let mh_spec_built = mh_spec.build_minhash().unwrap();
+
+        let sh_spec = SketchSpec::simhash(*fam, seed, 16);
+        let sh_direct = SimHash::new(*fam, seed, 16);
+        let sh_spec_built = sh_spec.build_simhash().unwrap();
+
+        let fh_spec = SketchSpec::feature_hash(*fam, seed, 32, SignMode::Paired);
+        let fh_direct = FeatureHasher::new(*fam, seed, 32, SignMode::Paired);
+        let fh_spec_built = fh_spec.build_feature_hasher().unwrap();
+
+        let bb_spec = SketchSpec::bbit(*fam, seed, 2, 64);
+        let bb_spec_built = bb_spec.build_bbit().unwrap();
+
+        let erased = [
+            oph_spec.build(),
+            mh_spec.build(),
+            sh_spec.build(),
+            fh_spec.build(),
+            bb_spec.build(),
+        ];
+
+        Runner::new(cases).run(
+            &format!("spec == direct {}", fam.id()),
+            set_gen(200),
+            |set| {
+                let mut scratch = Scratch::new();
+                let oph_out = oph_direct.sketch(set);
+                let mh_out = mh_direct.sketch(set);
+                let sh_out = Sketcher::sketch(&sh_direct, set);
+                let fh_out = Sketcher::sketch(&fh_direct, set);
+                let bb_out = BbitSketch::from_oph(&oph_out, 2);
+                let erased_ok = erased.iter().zip([
+                    SketchValue::Oph(oph_out.clone()),
+                    SketchValue::MinHash(mh_out.clone()),
+                    SketchValue::SimHash(sh_out.clone()),
+                    SketchValue::FeatureHash(fh_out.clone()),
+                    SketchValue::BBit(bb_out.clone()),
+                ]) // the erased registry path agrees with the typed path
+                .all(|(dyn_sk, expect)| dyn_sk.sketch_dyn(set, &mut scratch) == expect);
+                // SimHash sketches the unit indicator of the set.
+                let indicator = SparseVector::unit_indicator(set);
+                oph_spec_built.sketch(set) == oph_out
+                    && oph_reparsed.sketch(set) == oph_out
+                    && mh_spec_built.sketch(set) == mh_out
+                    && sh_spec_built.sketch_with(&indicator, &mut scratch) == sh_out
+                    && Sketcher::sketch(&fh_spec_built, set) == fh_out
+                    && bb_spec_built.sketch(set) == bb_out
+                    && erased_ok
             },
         );
     }

@@ -127,7 +127,7 @@ fn pjrt_oph_matches_native_sketch() {
     .expect("engine");
 
     let hasher = HashFamily::MixedTab.build(7);
-    let sketcher = OneHashSketcher::new(
+    let sketcher = OneHashSketcher::from_hasher(
         HashFamily::MixedTab.build(7),
         k,
         BinLayout::Mod,

@@ -6,18 +6,15 @@ use mixtab::data::SparseVector;
 use mixtab::hash::HashFamily;
 use mixtab::sketch::feature_hash::{FeatureHasher, SignMode};
 use mixtab::sketch::minhash::MinHash;
-use mixtab::sketch::oph::{BinLayout, OneHashSketcher};
-use mixtab::sketch::{jaccard_exact, DensifyMode, Scratch};
+use mixtab::sketch::oph::OneHashSketcher;
+use mixtab::sketch::{jaccard_exact, DensifyMode, Scratch, SketchSpec};
 use mixtab::stats::Summary;
 use mixtab::util::rng::Xoshiro256;
 
 fn oph(seed: u64, k: usize) -> OneHashSketcher {
-    OneHashSketcher::new(
-        HashFamily::MixedTab.build(seed),
-        k,
-        BinLayout::Mod,
-        DensifyMode::Paper,
-    )
+    SketchSpec::oph(HashFamily::MixedTab, seed, k)
+        .build_oph()
+        .expect("oph spec")
 }
 
 /// OPH (densified) and k×MinHash estimate the same quantity: their means
@@ -55,12 +52,9 @@ fn structured_data_bias_contrast() {
     let estimate_with = |fam: HashFamily| {
         let mut s = Summary::new();
         for seed in 0..reps {
-            let sk = OneHashSketcher::new(
-                fam.build(seed * 7 + 1),
-                200,
-                BinLayout::Mod,
-                DensifyMode::Paper,
-            );
+            let sk = SketchSpec::oph(fam, seed * 7 + 1, 200)
+                .build_oph()
+                .expect("oph spec");
             s.add(sk.estimate(&sk.sketch(&pair.a), &sk.sketch(&pair.b)));
         }
         s
@@ -92,12 +86,9 @@ fn dataset2_bias_contrast() {
     let mse_with = |fam: HashFamily| {
         let mut s = Summary::new();
         for seed in 0..reps {
-            let sk = OneHashSketcher::new(
-                fam.build(seed * 13 + 5),
-                200,
-                BinLayout::Mod,
-                DensifyMode::Paper,
-            );
+            let sk = SketchSpec::oph(fam, seed * 13 + 5, 200)
+                .build_oph()
+                .expect("oph spec");
             s.add(sk.estimate(&sk.sketch(&pair.a), &sk.sketch(&pair.b)));
         }
         s.mse(pair.jaccard)
@@ -171,12 +162,17 @@ fn paper_densification_not_worse_than_rotation() {
     let mse_with = |mode: DensifyMode| {
         let mut s = Summary::new();
         for seed in 0..reps {
-            let sk = OneHashSketcher::new(
-                HashFamily::MixedTab.build(seed * 3 + 11),
-                200,
-                BinLayout::Mod,
-                mode,
-            );
+            let sk = SketchSpec::oph_with(
+                HashFamily::MixedTab,
+                seed * 3 + 11,
+                mixtab::sketch::OphParams {
+                    k: 200,
+                    layout: mixtab::sketch::BinLayout::Mod,
+                    densify: mode,
+                },
+            )
+            .build_oph()
+            .expect("oph spec");
             s.add(sk.estimate(&sk.sketch(&pair.a), &sk.sketch(&pair.b)));
         }
         s.mse(pair.jaccard)
