@@ -1,0 +1,11 @@
+//! Bench target wrapper: sharded LSH build + fan-out query through
+//! `ShardedIndex` (N = 1 routing overhead vs N = 4 fan-out cost). The
+//! workload lives in [`mixtab::benchsuite`] so the `mixtab bench` CLI can
+//! run it in-process and gate the JSON records.
+
+use mixtab::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new();
+    mixtab::benchsuite::sharded_query(&mut bench);
+}

@@ -1,4 +1,4 @@
-//! The six `cargo bench` workloads as in-process library functions.
+//! The seven `cargo bench` workloads as in-process library functions.
 //!
 //! Each `rust/benches/*.rs` target is a thin `fn main` wrapper around one
 //! function here, and the `mixtab bench` CLI subcommand runs any subset of
@@ -18,7 +18,7 @@ use crate::data::news20_like::{self, News20LikeParams};
 use crate::data::synthetic::dataset1;
 use crate::data::SparseVector;
 use crate::hash::HashFamily;
-use crate::lsh::{LshIndex, LshParams};
+use crate::lsh::{LshIndex, LshParams, ShardedIndex};
 use crate::sketch::feature_hash::SignMode;
 use crate::sketch::sketcher::{DynSketcher, SketchValue};
 use crate::sketch::{BinLayout, DensifyMode, OphParams, Scratch, SketchSpec};
@@ -37,6 +37,7 @@ pub const ALL: &[(&str, fn(&mut Bench))] = &[
     ("sketch_throughput", sketch_throughput),
     ("sketch_dispatch", sketch_dispatch),
     ("lsh_query", lsh_query),
+    ("sharded_query", sharded_query),
     ("coordinator_service", coordinator_service),
     ("runtime_pjrt", runtime_pjrt),
 ];
@@ -304,6 +305,55 @@ pub fn lsh_query(bench: &mut Bench) {
             "  retrieved/query = {:.1}, max bucket = {}",
             retrieved_total as f64 / queries.len() as f64,
             index.max_bucket()
+        );
+    }
+}
+
+/// Sharded LSH serving — build + fan-out query through [`ShardedIndex`]
+/// with N ∈ {1, 4} shards over the same MNIST-like corpus and spec as
+/// `lsh_query`'s operating point. N = 1 measures the routing layer's
+/// overhead over a bare index (acceptance: negligible — one extra hash per
+/// insert and a no-op merge per query); N = 4 measures the fan-out cost
+/// the multi-scheme coordinator pays for shard-level lock granularity.
+pub fn sharded_query(bench: &mut Bench) {
+    let (n_db, n_q) = if bench.is_quick() { (400, 40) } else { (4000, 400) };
+    let (db_ds, q_ds) = crate::data::mnist_like::default_split(n_db, n_q, 77);
+    let db = db_ds.as_sets();
+    let queries = q_ds.as_sets();
+    println!(
+        "sharded_query: db={} queries={} K=L=10",
+        db.len(),
+        queries.len()
+    );
+
+    let spec = SketchSpec::oph(HashFamily::MixedTab, 7, 100);
+    for shards in [1usize, 4] {
+        let mut rows = Vec::new();
+        let mut index = ShardedIndex::new(shards, LshParams::new(10, 10), &spec);
+        let m = bench.measure(&format!("build/shards{shards}"), db.len() as u64, || {
+            index = ShardedIndex::new(shards, LshParams::new(10, 10), &spec);
+            for (i, s) in db.iter().enumerate() {
+                index.insert(i as u32, s);
+            }
+            index.len()
+        });
+        bench.record("sharded_query", &m);
+        rows.push(m);
+        let mut retrieved_total = 0usize;
+        let m = bench.measure(&format!("query/shards{shards}"), queries.len() as u64, || {
+            retrieved_total = 0;
+            for q in &queries {
+                retrieved_total += black_box(index.query(q)).len();
+            }
+            retrieved_total
+        });
+        bench.record("sharded_query", &m);
+        rows.push(m);
+        print_table(&format!("sharded LSH N={shards} (per item)"), &rows);
+        println!(
+            "  retrieved/query = {:.1}, per-shard sizes = {:?}",
+            retrieved_total as f64 / queries.len() as f64,
+            index.per_shard_len()
         );
     }
 }

@@ -28,18 +28,37 @@
 //! [lsh]
 //! k = 10
 //! l = 10
+//! shards = 4           # default-scheme index shards (1 = unsharded)
 //!
 //! [batcher]
 //! enable_pjrt = true
 //! max_delay_us = 200
 //! queue_cap = 256
 //! artifacts_dir = "artifacts"
+//!
+//! # Per-connection throttling at the server layer (0 disables either knob).
+//! [limits]
+//! requests_per_sec = 200     # token-bucket rate per connection
+//! burst = 50                 # bucket capacity (defaults to requests_per_sec)
+//! max_requests_per_conn = 0  # hard per-connection request budget
+//!
+//! # Additional named schemes served concurrently with the default one.
+//! # Each gets its own sketcher and (for OPH specs) its own sharded index;
+//! # clients select one with the wire ops' optional `scheme` field.
+//! [[schemes]]
+//! name = "fast"
+//! spec = "oph(k=64,hash=multiply_shift,seed=7)"
+//! shards = 2
+//!
+//! [[schemes]]
+//! name = "dense"
+//! spec = "minhash(k=128,hash=mixed_tab,seed=9)"
 //! ```
 
 use crate::hash::HashFamily;
 use crate::sketch::feature_hash::SignMode;
 use crate::sketch::spec::{SketchScheme, SketchSpec};
-use crate::util::config::Config;
+use crate::util::config::{Config, Table, Value};
 use crate::util::error::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
@@ -49,6 +68,66 @@ pub const OPH_SEED_SALT: u64 = 0x09EB_57A1;
 
 /// Seed salt for the LSH index's sketcher.
 pub const LSH_SEED_SALT: u64 = 0x154A_11CE;
+
+/// Name of the implicit scheme every coordinator serves; it preserves the
+/// single-scheme wire behaviour (and must not be shadowed by `[[schemes]]`).
+pub const DEFAULT_SCHEME: &str = "default";
+
+/// Upper bound on configured shards per scheme — sharding buys intra-host
+/// parallelism, and hundreds of shards on one host is a config typo.
+pub const MAX_SHARDS: usize = 256;
+
+/// One `[[schemes]]` entry: a named sketch spec served alongside the
+/// default scheme, with its own sharded index when the spec is OPH.
+#[derive(Debug, Clone)]
+pub struct SchemeConfig {
+    pub name: String,
+    pub spec: SketchSpec,
+    /// Index shards for this scheme (ignored for non-OPH specs, which get
+    /// no LSH index).
+    pub shards: usize,
+}
+
+impl SchemeConfig {
+    fn from_table(table: &Table) -> Result<Self> {
+        let name = match table.get("name") {
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => bail!("[[schemes]] name must be a string, got {v:?}"),
+            None => bail!("[[schemes]] entry is missing 'name'"),
+        };
+        if name.is_empty() {
+            bail!("[[schemes]] name must be non-empty");
+        }
+        if name == DEFAULT_SCHEME || name == "oph" {
+            bail!("[[schemes]] name '{name}' is reserved");
+        }
+        let spec = match table.get("spec") {
+            Some(Value::Str(s)) => {
+                SketchSpec::parse(s).with_context(|| format!("[[schemes]] '{name}' spec"))?
+            }
+            Some(v) => bail!("[[schemes]] '{name}' spec must be a string, got {v:?}"),
+            None => bail!("[[schemes]] '{name}' is missing 'spec'"),
+        };
+        let shards = match table.get("shards") {
+            Some(v) => {
+                let Some(n) = v.as_i64().and_then(|n| usize::try_from(n).ok()) else {
+                    bail!("[[schemes]] '{name}' shards must be a non-negative integer");
+                };
+                n
+            }
+            None => 1,
+        };
+        if !(1..=MAX_SHARDS).contains(&shards) {
+            bail!("[[schemes]] '{name}' shards must be in 1..={MAX_SHARDS}, got {shards}");
+        }
+        for key in table.keys() {
+            if !matches!(key.as_str(), "name" | "spec" | "shards") {
+                bail!("unknown key '{key}' in [[schemes]] '{name}'");
+            }
+        }
+        Ok(Self { name, spec, shards })
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -72,6 +151,19 @@ pub struct CoordinatorConfig {
     /// LSH parameters.
     pub lsh_k: usize,
     pub lsh_l: usize,
+    /// Index shards for the default scheme (1 = unsharded; a one-shard
+    /// index is bit-identical to the pre-sharding coordinator).
+    pub lsh_shards: usize,
+    /// Additional named schemes (`[[schemes]]`), served next to the
+    /// default one by the scheme registry.
+    pub schemes: Vec<SchemeConfig>,
+    /// Per-connection token-bucket rate (requests/second); 0 disables.
+    pub rate_limit_rps: f64,
+    /// Token-bucket capacity; 0 derives `max(1, ⌈rate⌉)`.
+    pub rate_limit_burst: u32,
+    /// Hard per-connection request budget; 0 disables. Once exhausted the
+    /// connection gets one budget-exhausted error and is closed.
+    pub conn_request_budget: u64,
     /// Use the PJRT runtime when artifacts are present.
     pub enable_pjrt: bool,
     /// Batch window: how long the batcher waits to fill a batch.
@@ -95,6 +187,11 @@ impl Default for CoordinatorConfig {
             sketch: None,
             lsh_k: 10,
             lsh_l: 10,
+            lsh_shards: 1,
+            schemes: Vec::new(),
+            rate_limit_rps: 0.0,
+            rate_limit_burst: 0,
+            conn_request_budget: 0,
             enable_pjrt: true,
             max_delay_us: 200,
             queue_cap: 256,
@@ -132,6 +229,42 @@ impl CoordinatorConfig {
             }
             None => None,
         };
+        // The natural typo for `[[schemes]]` is `[schemes]`, which the
+        // parser stores as a plain section — it would otherwise be
+        // silently ignored and the named scheme never served.
+        if cfg.sections().any(|s| s == "schemes") {
+            bail!("[schemes] is a plain section — named schemes use [[schemes]] entries");
+        }
+        let mut schemes = Vec::new();
+        for table in cfg.tables("schemes") {
+            let scheme = SchemeConfig::from_table(table)?;
+            if schemes.iter().any(|s: &SchemeConfig| s.name == scheme.name) {
+                bail!("duplicate [[schemes]] name '{}'", scheme.name);
+            }
+            schemes.push(scheme);
+        }
+        let lsh_shards = cfg.usize_or("lsh", "shards", d.lsh_shards);
+        if !(1..=MAX_SHARDS).contains(&lsh_shards) {
+            bail!("[lsh] shards must be in 1..={MAX_SHARDS}, got {lsh_shards}");
+        }
+        let rate_limit_rps = cfg.f64_or("limits", "requests_per_sec", d.rate_limit_rps);
+        if rate_limit_rps < 0.0 || !rate_limit_rps.is_finite() {
+            bail!("[limits] requests_per_sec must be finite and >= 0, got {rate_limit_rps}");
+        }
+        let rate_limit_burst = cfg.i64_or("limits", "burst", d.rate_limit_burst as i64);
+        if !(0..=u32::MAX as i64).contains(&rate_limit_burst) {
+            bail!("[limits] burst must be in 0..={}, got {rate_limit_burst}", u32::MAX);
+        }
+        // A burst with no rate would be silently inert (the bucket is only
+        // consulted when requests_per_sec > 0) — surface the dead setting.
+        if rate_limit_burst > 0 && rate_limit_rps == 0.0 {
+            bail!("[limits] burst is set but requests_per_sec is 0 — burst has no effect");
+        }
+        let conn_request_budget =
+            cfg.i64_or("limits", "max_requests_per_conn", d.conn_request_budget as i64);
+        if conn_request_budget < 0 {
+            bail!("[limits] max_requests_per_conn must be >= 0, got {conn_request_budget}");
+        }
         Ok(Self {
             listen: cfg.str_or("service", "listen", &d.listen),
             workers: cfg.usize_or("service", "workers", d.workers),
@@ -143,6 +276,11 @@ impl CoordinatorConfig {
             sketch,
             lsh_k: cfg.usize_or("lsh", "k", d.lsh_k),
             lsh_l: cfg.usize_or("lsh", "l", d.lsh_l),
+            lsh_shards,
+            schemes,
+            rate_limit_rps,
+            rate_limit_burst: rate_limit_burst as u32,
+            conn_request_budget: conn_request_budget as u64,
             enable_pjrt: cfg.bool_or("batcher", "enable_pjrt", d.enable_pjrt),
             max_delay_us: cfg.i64_or("batcher", "max_delay_us", d.max_delay_us as i64) as u64,
             queue_cap: cfg.usize_or("batcher", "queue_cap", d.queue_cap),
@@ -193,6 +331,16 @@ impl CoordinatorConfig {
             self.seed ^ LSH_SEED_SALT,
             self.lsh_k * self.lsh_l,
         )
+    }
+
+    /// Effective token-bucket capacity when rate limiting is on: the
+    /// configured burst, or `max(1, ⌈rate⌉)` when unset.
+    pub fn effective_burst(&self) -> u32 {
+        if self.rate_limit_burst > 0 {
+            self.rate_limit_burst
+        } else {
+            (self.rate_limit_rps.ceil().max(1.0)) as u32
+        }
     }
 }
 
@@ -259,6 +407,69 @@ mod tests {
     fn rejects_bad_family() {
         let cfg = Config::parse("[fh]\nhash = \"md5\"\n").unwrap();
         assert!(CoordinatorConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn parses_schemes_shards_and_limits() {
+        let cfg = Config::parse(
+            "[lsh]\nk = 6\nl = 8\nshards = 4\n\n[limits]\nrequests_per_sec = 200\nburst = 50\nmax_requests_per_conn = 1000\n\n[[schemes]]\nname = \"fast\"\nspec = \"oph(k=64,hash=multiply_shift,seed=7)\"\nshards = 2\n\n[[schemes]]\nname = \"dense\"\nspec = \"minhash(k=32,seed=9)\"\n",
+        )
+        .unwrap();
+        let c = CoordinatorConfig::from_config(&cfg).unwrap();
+        assert_eq!(c.lsh_shards, 4);
+        assert_eq!(c.rate_limit_rps, 200.0);
+        assert_eq!(c.rate_limit_burst, 50);
+        assert_eq!(c.effective_burst(), 50);
+        assert_eq!(c.conn_request_budget, 1000);
+        assert_eq!(c.schemes.len(), 2);
+        assert_eq!(c.schemes[0].name, "fast");
+        assert_eq!(
+            c.schemes[0].spec,
+            SketchSpec::oph(HashFamily::MultiplyShift, 7, 64)
+        );
+        assert_eq!(c.schemes[0].shards, 2);
+        assert_eq!(c.schemes[1].name, "dense");
+        assert_eq!(c.schemes[1].shards, 1);
+        // Burst derivation when unset.
+        let c = CoordinatorConfig {
+            rate_limit_rps: 2.5,
+            ..CoordinatorConfig::default()
+        };
+        assert_eq!(c.effective_burst(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_schemes_and_limits() {
+        for bad in [
+            // Missing name / spec.
+            "[[schemes]]\nspec = \"oph(k=8)\"\n",
+            "[[schemes]]\nname = \"x\"\n",
+            // Reserved and duplicate names.
+            "[[schemes]]\nname = \"default\"\nspec = \"oph(k=8)\"\n",
+            "[[schemes]]\nname = \"oph\"\nspec = \"oph(k=8)\"\n",
+            "[[schemes]]\nname = \"x\"\nspec = \"oph(k=8)\"\n[[schemes]]\nname = \"x\"\nspec = \"oph(k=9)\"\n",
+            // Bad spec / non-string spec / unknown key / bad shard counts.
+            "[[schemes]]\nname = \"x\"\nspec = \"oph(k=zero)\"\n",
+            "[[schemes]]\nname = \"x\"\nspec = 42\n",
+            "[[schemes]]\nname = \"x\"\nspec = \"oph(k=8)\"\nwibble = 1\n",
+            "[[schemes]]\nname = \"x\"\nspec = \"oph(k=8)\"\nshards = 0\n",
+            "[[schemes]]\nname = \"x\"\nspec = \"oph(k=8)\"\nshards = 100000\n",
+            "[lsh]\nshards = 0\n",
+            "[limits]\nrequests_per_sec = -1\n",
+            "[limits]\nburst = -5\n",
+            "[limits]\nburst = 4294967296\n",
+            // Burst with no rate is inert — reject rather than ignore.
+            "[limits]\nburst = 50\n",
+            // Single-bracket [schemes] is the natural typo for [[schemes]].
+            "[schemes]\nname = \"x\"\nspec = \"oph(k=8)\"\n",
+            "[limits]\nmax_requests_per_conn = -5\n",
+        ] {
+            let cfg = Config::parse(bad).unwrap();
+            assert!(
+                CoordinatorConfig::from_config(&cfg).is_err(),
+                "accepted: {bad}"
+            );
+        }
     }
 
     #[test]

@@ -1,10 +1,64 @@
-//! Service metrics: lock-free counters + latency quantiles.
+//! Service metrics: lock-free counters + latency quantiles, plus
+//! per-scheme / per-shard counter blocks for the multi-scheme registry.
 
 use crate::stats::Summary;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Counters for one named scheme (and, per shard of its index, insert and
+/// raw-candidate counts). Registered once at coordinator construction via
+/// [`Metrics::register_scheme`]; the scheme holds the `Arc` and bumps the
+/// atomics lock-free on the request path.
+#[derive(Debug)]
+pub struct SchemeCounters {
+    pub name: String,
+    /// `sketch` requests served by this scheme.
+    pub sketches: AtomicU64,
+    /// `insert` requests routed to this scheme's index.
+    pub inserts: AtomicU64,
+    /// `query` requests fanned out over this scheme's index.
+    pub queries: AtomicU64,
+    /// Inserts landing in each shard (length = shard count; empty for
+    /// index-less schemes).
+    pub shard_inserts: Vec<AtomicU64>,
+    /// Raw candidates contributed by each shard across queries (before
+    /// the fan-out merge dedup).
+    pub shard_candidates: Vec<AtomicU64>,
+}
+
+impl SchemeCounters {
+    fn new(name: &str, n_shards: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            sketches: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            queries: AtomicU64::new(0),
+            shard_inserts: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
+            shard_candidates: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// JSON block for the `stats` snapshot.
+    fn snapshot(&self) -> Json {
+        let shards: Vec<Json> = self
+            .shard_inserts
+            .iter()
+            .zip(&self.shard_candidates)
+            .map(|(ins, cand)| {
+                Json::obj()
+                    .set("inserts", ins.load(Ordering::Relaxed) as usize)
+                    .set("candidates", cand.load(Ordering::Relaxed) as usize)
+            })
+            .collect();
+        Json::obj()
+            .set("sketches", self.sketches.load(Ordering::Relaxed) as usize)
+            .set("inserts", self.inserts.load(Ordering::Relaxed) as usize)
+            .set("queries", self.queries.load(Ordering::Relaxed) as usize)
+            .set("shards", Json::Arr(shards))
+    }
+}
 
 /// Counters and latency tracking for the coordinator.
 #[derive(Debug, Default)]
@@ -22,6 +76,13 @@ pub struct Metrics {
     pub lsh_queries: AtomicU64,
     pub estimates: AtomicU64,
     pub errors: AtomicU64,
+    /// Requests rejected by the server's per-connection rate limiter /
+    /// request budget.
+    pub throttled: AtomicU64,
+    /// Per-scheme counter blocks, registration order (locked only at
+    /// registration and snapshot time — the request path touches the
+    /// `Arc`ed atomics directly).
+    schemes: Mutex<Vec<Arc<SchemeCounters>>>,
     /// FH request latency samples (µs). Bounded reservoir: first 100k.
     lat_us: Mutex<Summary>,
 }
@@ -39,6 +100,15 @@ impl Metrics {
     #[inline]
     pub fn add(counter: &AtomicU64, n: u64) {
         counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Register a counter block for a named scheme with `n_shards` index
+    /// shards (0 for schemes without an LSH index). The returned `Arc` is
+    /// held by the scheme; the block also appears in [`Self::snapshot`].
+    pub fn register_scheme(&self, name: &str, n_shards: usize) -> Arc<SchemeCounters> {
+        let counters = Arc::new(SchemeCounters::new(name, n_shards));
+        self.schemes.lock().unwrap().push(Arc::clone(&counters));
+        counters
     }
 
     /// Record an FH request latency.
@@ -86,6 +156,14 @@ impl Metrics {
             .set("lsh_queries", self.lsh_queries.load(Ordering::Relaxed) as usize)
             .set("estimates", self.estimates.load(Ordering::Relaxed) as usize)
             .set("errors", self.errors.load(Ordering::Relaxed) as usize)
+            .set("throttled", self.throttled.load(Ordering::Relaxed) as usize)
+            .set("schemes", {
+                let mut schemes = Json::obj();
+                for block in self.schemes.lock().unwrap().iter() {
+                    schemes = schemes.set(&block.name, block.snapshot());
+                }
+                schemes
+            })
             .set("fh_latency_p50_us", p50)
             .set("fh_latency_p90_us", p90)
             .set("fh_latency_p99_us", p99)
@@ -113,5 +191,28 @@ mod tests {
     fn occupancy_zero_when_no_batches() {
         let m = Metrics::new();
         assert_eq!(m.mean_batch_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn scheme_counters_appear_in_snapshot() {
+        let m = Metrics::new();
+        let block = m.register_scheme("fast", 2);
+        Metrics::inc(&block.sketches);
+        Metrics::inc(&block.inserts);
+        Metrics::inc(&block.shard_inserts[1]);
+        Metrics::add(&block.shard_candidates[0], 7);
+        Metrics::inc(&m.throttled);
+        let s = m.snapshot();
+        assert_eq!(s.get("throttled").unwrap().as_i64(), Some(1));
+        let fast = s.get("schemes").unwrap().get("fast").unwrap();
+        assert_eq!(fast.get("sketches").unwrap().as_i64(), Some(1));
+        assert_eq!(fast.get("inserts").unwrap().as_i64(), Some(1));
+        let shards = fast.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].get("candidates").unwrap().as_i64(), Some(7));
+        assert_eq!(shards[1].get("inserts").unwrap().as_i64(), Some(1));
+        // Index-less schemes register zero shard blocks.
+        let dense = m.register_scheme("dense", 0);
+        assert!(dense.shard_inserts.is_empty());
     }
 }

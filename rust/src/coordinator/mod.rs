@@ -10,17 +10,23 @@
 //! * [`request`] — typed requests/responses + JSON wire codec.
 //! * [`batcher`] — dynamic batcher for FH transforms (max-batch/max-delay,
 //!   bounded queue, shed-to-native backpressure).
-//! * [`service`] — the coordinator proper: routing, LSH shards, set store.
-//! * [`server`] — newline-delimited-JSON TCP front-end.
-//! * [`metrics`] — counters and latency quantiles.
+//! * [`registry`] — the scheme registry: named sketch schemes, each with
+//!   its own sketcher, sharded index and store.
+//! * [`service`] — the coordinator proper: routing across schemes.
+//! * [`server`] — newline-delimited-JSON TCP front-end with
+//!   per-connection rate limiting / request budgets.
+//! * [`metrics`] — counters (global, per-scheme, per-shard) and latency
+//!   quantiles.
 
 pub mod config;
 pub mod request;
 pub mod batcher;
+pub mod registry;
 pub mod service;
 pub mod server;
 pub mod metrics;
 
-pub use config::CoordinatorConfig;
+pub use config::{CoordinatorConfig, SchemeConfig};
+pub use registry::{Scheme, SchemeRegistry};
 pub use request::{Request, Response};
 pub use service::Coordinator;

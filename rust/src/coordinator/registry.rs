@@ -1,0 +1,248 @@
+//! The scheme registry: several named sketch schemes served concurrently
+//! from one coordinator.
+//!
+//! PR 3 made the sketch *scheme* configuration ([`SketchSpec`]); this
+//! module makes it **plural**. A [`SchemeRegistry`] holds one [`Scheme`]
+//! per configured name — the implicit [`DEFAULT_SCHEME`] derived from the
+//! scalar config (preserving the single-scheme wire behaviour bit-for-bit)
+//! plus one per `[[schemes]]` entry — and the wire ops' optional `scheme`
+//! field selects among them. Each scheme owns:
+//!
+//! * an erased [`DynSketcher`] serving its `sketch` requests,
+//! * for OPH specs, a [`ShardedIndex`] (per-scheme sharding — the
+//!   `shards` key) serving `insert`/`query`,
+//! * a set store backing `estimate` on the default scheme,
+//! * a [`SchemeCounters`] block surfaced through the `stats` op.
+//!
+//! Non-OPH schemes (MinHash, SimHash, FH, b-bit) have no LSH index — the
+//! (K, L) bucket construction is defined over OPH bins — so `insert`/
+//! `query` against them is a clean wire error, not a panic.
+
+use crate::coordinator::config::{CoordinatorConfig, DEFAULT_SCHEME};
+use crate::coordinator::metrics::{Metrics, SchemeCounters};
+use crate::lsh::sharded::ShardedIndex;
+use crate::lsh::LshParams;
+use crate::sketch::sketcher::{DynSketcher, SketchValue};
+use crate::sketch::spec::{SketchScheme, SketchSpec};
+use crate::sketch::Scratch;
+use crate::util::error::{bail, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// One named scheme: sketcher + optional sharded index + set store.
+pub struct Scheme {
+    name: String,
+    spec: SketchSpec,
+    sketcher: Box<dyn DynSketcher>,
+    /// OPH-backed sharded LSH index; `None` for non-OPH specs.
+    index: Option<ShardedIndex>,
+    /// Inserted sets, kept for the `estimate` op. Only the default scheme
+    /// carries one — `estimate` serves the default scheme only, and
+    /// retaining every named scheme's raw corpus would double its memory
+    /// for an op that never reads it.
+    store: Option<Mutex<HashMap<u32, Vec<u32>>>>,
+    counters: Arc<SchemeCounters>,
+}
+
+impl Scheme {
+    fn new(
+        name: &str,
+        spec: SketchSpec,
+        index_spec: Option<(SketchSpec, LshParams, usize)>,
+        with_store: bool,
+        metrics: &Metrics,
+    ) -> Self {
+        let index =
+            index_spec.map(|(spec, params, shards)| ShardedIndex::new(shards, params, &spec));
+        let counters =
+            metrics.register_scheme(name, index.as_ref().map_or(0, ShardedIndex::n_shards));
+        Self {
+            name: name.to_string(),
+            spec,
+            sketcher: spec.build(),
+            index,
+            store: with_store.then(|| Mutex::new(HashMap::new())),
+            counters,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The spec serving this scheme's `sketch` requests.
+    pub fn spec(&self) -> &SketchSpec {
+        &self.spec
+    }
+
+    /// The scheme's sharded index, when its spec supports one.
+    pub fn index(&self) -> Option<&ShardedIndex> {
+        self.index.as_ref()
+    }
+
+    /// Sketch a set with this scheme's sketcher.
+    pub fn sketch(&self, set: &[u32], scratch: &mut Scratch) -> SketchValue {
+        Metrics::inc(&self.counters.sketches);
+        self.sketcher.sketch_dyn(set, scratch)
+    }
+
+    /// Insert a set into this scheme's index (and, on the default scheme,
+    /// the estimate store). Errors for index-less (non-OPH) schemes.
+    pub fn insert(&self, id: u32, set: Vec<u32>) -> Result<()> {
+        let index = self.require_index()?;
+        let shard = index.insert(id, &set);
+        Metrics::inc(&self.counters.inserts);
+        Metrics::inc(&self.counters.shard_inserts[shard]);
+        if let Some(store) = &self.store {
+            store.lock().unwrap().insert(id, set);
+        }
+        Ok(())
+    }
+
+    /// Fan-out query over this scheme's index. Errors for index-less
+    /// (non-OPH) schemes.
+    pub fn query(&self, set: &[u32]) -> Result<Vec<u32>> {
+        let index = self.require_index()?;
+        let (ids, per_shard) = index.query_fanout(set);
+        Metrics::inc(&self.counters.queries);
+        for (counter, n) in self.counters.shard_candidates.iter().zip(per_shard) {
+            Metrics::add(counter, n as u64);
+        }
+        Ok(ids)
+    }
+
+    /// A stored set by id (cloned out so no lock is held while sketching).
+    /// Always `None` on store-less (named) schemes.
+    pub fn stored(&self, id: u32) -> Option<Vec<u32>> {
+        self.store.as_ref()?.lock().unwrap().get(&id).cloned()
+    }
+
+    fn require_index(&self) -> Result<&ShardedIndex> {
+        match &self.index {
+            Some(index) => Ok(index),
+            None => bail!(
+                "scheme '{}' has no LSH index (spec '{}' is not OPH)",
+                self.name,
+                self.spec
+            ),
+        }
+    }
+}
+
+/// All schemes served by one coordinator, looked up by wire name.
+pub struct SchemeRegistry {
+    /// Registration order: default first, then `[[schemes]]` file order.
+    schemes: Vec<Scheme>,
+}
+
+impl SchemeRegistry {
+    /// Build the registry from config: the implicit default scheme
+    /// (sketcher from `cfg.sketch_spec()`, index from `cfg.lsh_spec()`
+    /// sharded `cfg.lsh_shards` ways — with one shard this is bit-identical
+    /// to the pre-registry coordinator) plus every `[[schemes]]` entry.
+    /// Name collisions are rejected at config parse time.
+    pub fn from_config(cfg: &CoordinatorConfig, metrics: &Metrics) -> Self {
+        let params = LshParams::new(cfg.lsh_k, cfg.lsh_l);
+        let mut schemes = vec![Scheme::new(
+            DEFAULT_SCHEME,
+            cfg.sketch_spec(),
+            Some((cfg.lsh_spec(), params, cfg.lsh_shards)),
+            true,
+            metrics,
+        )];
+        for sc in &cfg.schemes {
+            let index_spec = matches!(sc.spec.scheme, SketchScheme::Oph(_))
+                .then_some((sc.spec, params, sc.shards));
+            schemes.push(Scheme::new(&sc.name, sc.spec, index_spec, false, metrics));
+        }
+        Self { schemes }
+    }
+
+    /// Look up a scheme by wire name; `None` selects the default scheme.
+    pub fn get(&self, name: Option<&str>) -> Result<&Scheme> {
+        let name = name.unwrap_or(DEFAULT_SCHEME);
+        match self.schemes.iter().find(|s| s.name == name) {
+            Some(scheme) => Ok(scheme),
+            None => bail!(
+                "unknown scheme '{name}' (serving: {})",
+                self.names().join(", ")
+            ),
+        }
+    }
+
+    /// The implicit default scheme.
+    pub fn default_scheme(&self) -> &Scheme {
+        &self.schemes[0]
+    }
+
+    /// Served scheme names, registration order (default first).
+    pub fn names(&self) -> Vec<&str> {
+        self.schemes.iter().map(|s| s.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::SchemeConfig;
+    use crate::hash::HashFamily;
+
+    fn registry_cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            enable_pjrt: false,
+            lsh_k: 3,
+            lsh_l: 4,
+            lsh_shards: 2,
+            schemes: vec![
+                SchemeConfig {
+                    name: "fast".into(),
+                    spec: SketchSpec::oph(HashFamily::MultiplyShift, 7, 64),
+                    shards: 3,
+                },
+                SchemeConfig {
+                    name: "dense".into(),
+                    spec: SketchSpec::minhash(HashFamily::MixedTab, 9, 16),
+                    shards: 1,
+                },
+            ],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn registry_serves_default_and_named_schemes() {
+        let metrics = Metrics::new();
+        let reg = SchemeRegistry::from_config(&registry_cfg(), &metrics);
+        assert_eq!(reg.names(), vec![DEFAULT_SCHEME, "fast", "dense"]);
+        assert_eq!(reg.get(None).unwrap().name(), DEFAULT_SCHEME);
+        assert_eq!(reg.get(Some("fast")).unwrap().name(), "fast");
+        assert!(reg.get(Some("nope")).is_err());
+        // Shard counts follow the per-scheme config.
+        assert_eq!(reg.default_scheme().index().unwrap().n_shards(), 2);
+        assert_eq!(reg.get(Some("fast")).unwrap().index().unwrap().n_shards(), 3);
+        // Non-OPH scheme: sketching works, indexing errors cleanly.
+        let dense = reg.get(Some("dense")).unwrap();
+        assert!(dense.index().is_none());
+        let value = dense.sketch(&(0..100).collect::<Vec<_>>(), &mut Scratch::new());
+        assert_eq!(value.scheme_id(), "minhash");
+        assert!(dense.insert(1, vec![1, 2, 3]).is_err());
+        assert!(dense.query(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn schemes_are_isolated() {
+        let metrics = Metrics::new();
+        let reg = SchemeRegistry::from_config(&registry_cfg(), &metrics);
+        let set: Vec<u32> = (0..80).collect();
+        reg.get(Some("fast")).unwrap().insert(5, set.clone()).unwrap();
+        // The insert is visible in "fast" but not in the default scheme.
+        assert!(reg.get(Some("fast")).unwrap().query(&set).unwrap().contains(&5));
+        assert!(reg.get(None).unwrap().query(&set).unwrap().is_empty());
+        // Only the default scheme retains raw sets (the estimate store);
+        // named schemes index without a second copy of the corpus.
+        assert_eq!(reg.get(Some("fast")).unwrap().stored(5), None);
+        assert_eq!(reg.get(None).unwrap().stored(5), None);
+        reg.get(None).unwrap().insert(6, set.clone()).unwrap();
+        assert_eq!(reg.get(None).unwrap().stored(6), Some(set));
+    }
+}

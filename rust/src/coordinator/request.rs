@@ -21,16 +21,29 @@ pub enum Request {
     /// densified bins. Compatibility alias for the scheme-aware
     /// [`Request::Sketch`] — kept wire-stable for existing clients.
     OphSketch { set: Vec<u32> },
-    /// Sketch a set with the service's configured default sketch spec, or
-    /// with an explicit per-request [`crate::sketch::SketchSpec`] string.
+    /// Sketch a set with a named scheme's sketcher (`scheme`, default
+    /// scheme when absent), or with an explicit ad-hoc per-request
+    /// [`crate::sketch::SketchSpec`] string (`spec`). The two selectors
+    /// are mutually exclusive on the wire.
     Sketch {
         set: Vec<u32>,
         spec: Option<String>,
+        scheme: Option<String>,
     },
-    /// Insert a set into the LSH index (also stores it for `Estimate`).
-    LshInsert { id: u32, set: Vec<u32> },
-    /// Query the LSH index; returns candidate ids.
-    LshQuery { set: Vec<u32> },
+    /// Insert a set into a scheme's sharded LSH index. `scheme` absent =
+    /// default scheme (legacy behaviour); only default-scheme inserts are
+    /// additionally retained for `Estimate` — named schemes index without
+    /// storing the raw set.
+    LshInsert {
+        id: u32,
+        set: Vec<u32>,
+        scheme: Option<String>,
+    },
+    /// Query a scheme's sharded LSH index; returns merged candidate ids.
+    LshQuery {
+        set: Vec<u32>,
+        scheme: Option<String>,
+    },
     /// Estimate J between two stored ids from their sketches.
     Estimate { a: u32, b: u32 },
     /// Shingle a raw document (w = 5 bytes) and insert it into the LSH
@@ -98,6 +111,19 @@ fn arr_u32(j: &Json, key: &str) -> Result<Vec<u32>> {
                 .with_context(|| format!("bad u32 in '{key}'"))
         })
         .collect()
+}
+
+/// Optional string field: absent/null means `None`; any other non-string
+/// value is a client bug and must error rather than be masked as a default.
+fn opt_str(j: &Json, key: &str) -> Result<Option<String>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(
+            v.as_str()
+                .with_context(|| format!("'{key}' must be a string"))?
+                .to_string(),
+        )),
+    }
 }
 
 fn arr_f64(j: &Json, key: &str) -> Result<Vec<f64>> {
@@ -183,13 +209,8 @@ impl Request {
             },
             "sketch" => Request::Sketch {
                 set: arr_u32(&j, "set")?,
-                // Absent/null means "use the configured default"; any other
-                // non-string is a client bug and must not be masked as the
-                // default scheme.
-                spec: match j.get("spec") {
-                    None | Some(Json::Null) => None,
-                    Some(v) => Some(v.as_str().context("'spec' must be a string")?.to_string()),
-                },
+                spec: opt_str(&j, "spec")?,
+                scheme: opt_str(&j, "scheme")?,
             },
             "insert" => Request::LshInsert {
                 id: j
@@ -198,9 +219,11 @@ impl Request {
                     .and_then(|x| u32::try_from(x).ok())
                     .context("missing 'id'")?,
                 set: arr_u32(&j, "set")?,
+                scheme: opt_str(&j, "scheme")?,
             },
             "query" => Request::LshQuery {
                 set: arr_u32(&j, "set")?,
+                scheme: opt_str(&j, "scheme")?,
             },
             "estimate" => Request::Estimate {
                 a: j.get("a")
@@ -253,22 +276,37 @@ impl Request {
             Request::OphSketch { set } => Json::obj()
                 .set("op", "oph")
                 .set("set", set.iter().map(|&x| x as usize).collect::<Vec<_>>()),
-            Request::Sketch { set, spec } => {
-                let j = Json::obj()
+            Request::Sketch { set, spec, scheme } => {
+                let mut j = Json::obj()
                     .set("op", "sketch")
                     .set("set", set.iter().map(|&x| x as usize).collect::<Vec<_>>());
-                match spec {
-                    Some(s) => j.set("spec", s.as_str()),
+                if let Some(s) = spec {
+                    j = j.set("spec", s.as_str());
+                }
+                if let Some(s) = scheme {
+                    j = j.set("scheme", s.as_str());
+                }
+                j
+            }
+            Request::LshInsert { id, set, scheme } => {
+                let j = Json::obj()
+                    .set("op", "insert")
+                    .set("id", *id as usize)
+                    .set("set", set.iter().map(|&x| x as usize).collect::<Vec<_>>());
+                match scheme {
+                    Some(s) => j.set("scheme", s.as_str()),
                     None => j,
                 }
             }
-            Request::LshInsert { id, set } => Json::obj()
-                .set("op", "insert")
-                .set("id", *id as usize)
-                .set("set", set.iter().map(|&x| x as usize).collect::<Vec<_>>()),
-            Request::LshQuery { set } => Json::obj()
-                .set("op", "query")
-                .set("set", set.iter().map(|&x| x as usize).collect::<Vec<_>>()),
+            Request::LshQuery { set, scheme } => {
+                let j = Json::obj()
+                    .set("op", "query")
+                    .set("set", set.iter().map(|&x| x as usize).collect::<Vec<_>>());
+                match scheme {
+                    Some(s) => j.set("scheme", s.as_str()),
+                    None => j,
+                }
+            }
             Request::Estimate { a, b } => Json::obj()
                 .set("op", "estimate")
                 .set("a", *a as usize)
@@ -431,16 +469,36 @@ mod tests {
             Request::Sketch {
                 set: vec![1, 2, 3],
                 spec: None,
+                scheme: None,
             },
             Request::Sketch {
                 set: vec![4, 5],
                 spec: Some("minhash(k=16,hash=murmur3,seed=7)".into()),
+                scheme: None,
+            },
+            Request::Sketch {
+                set: vec![6],
+                spec: None,
+                scheme: Some("fast".into()),
             },
             Request::LshInsert {
                 id: 3,
                 set: vec![1, 2],
+                scheme: None,
             },
-            Request::LshQuery { set: vec![4] },
+            Request::LshInsert {
+                id: 4,
+                set: vec![3],
+                scheme: Some("fast".into()),
+            },
+            Request::LshQuery {
+                set: vec![4],
+                scheme: None,
+            },
+            Request::LshQuery {
+                set: vec![5],
+                scheme: Some("fast".into()),
+            },
             Request::Estimate { a: 1, b: 2 },
             Request::IndexDoc {
                 id: 7,
@@ -519,15 +577,24 @@ mod tests {
         assert!(Request::from_json_line("{\"op\":\"insert\",\"id\":-1,\"set\":[]}").is_err());
         // Scheme-aware sketch: missing set / unknown scheme rejected.
         assert!(Request::from_json_line("{\"op\":\"sketch\"}").is_err());
-        // A non-string spec is an error, not a fallback to the default.
+        // A non-string spec/scheme is an error, not a fallback to the default.
         assert!(Request::from_json_line("{\"op\":\"sketch\",\"set\":[1],\"spec\":42}").is_err());
-        // An explicit null spec means "use the default".
-        let r = Request::from_json_line("{\"op\":\"sketch\",\"set\":[1],\"spec\":null}").unwrap();
+        assert!(Request::from_json_line("{\"op\":\"sketch\",\"set\":[1],\"scheme\":42}").is_err());
+        assert!(
+            Request::from_json_line("{\"op\":\"insert\",\"id\":1,\"set\":[1],\"scheme\":42}")
+                .is_err()
+        );
+        assert!(Request::from_json_line("{\"op\":\"query\",\"set\":[1],\"scheme\":42}").is_err());
+        // An explicit null spec/scheme means "use the default".
+        let r =
+            Request::from_json_line("{\"op\":\"sketch\",\"set\":[1],\"spec\":null,\"scheme\":null}")
+                .unwrap();
         assert_eq!(
             r,
             Request::Sketch {
                 set: vec![1],
-                spec: None
+                spec: None,
+                scheme: None
             }
         );
         assert!(
@@ -550,11 +617,32 @@ mod tests {
         assert!(line.contains("\"type\":\"sketch\""), "line: {line}");
         assert_eq!(Response::from_json_line(&line).unwrap(), resp);
 
+        // Pre-scheme `insert`/`query` lines (no `scheme` key) still decode,
+        // selecting the default scheme.
+        let r = Request::from_json_line("{\"op\":\"insert\",\"id\":1,\"set\":[2,3]}").unwrap();
+        assert_eq!(
+            r,
+            Request::LshInsert {
+                id: 1,
+                set: vec![2, 3],
+                scheme: None
+            }
+        );
+        let r = Request::from_json_line("{\"op\":\"query\",\"set\":[2]}").unwrap();
+        assert_eq!(
+            r,
+            Request::LshQuery {
+                set: vec![2],
+                scheme: None
+            }
+        );
+
         // And the new endpoint round-trips a spec string untouched.
         let spec = "oph(k=200,layout=mod,densify=paper,hash=mixed_tab,seed=42)";
         let req = Request::Sketch {
             set: vec![9],
             spec: Some(spec.into()),
+            scheme: None,
         };
         let back = Request::from_json_line(&req.to_json_line()).unwrap();
         assert_eq!(back, req);

@@ -4,7 +4,19 @@
 //! (bounded by a worker pool). This is deliberately simple — the protocol
 //! exists so the examples and benches can exercise the full service stack
 //! end-to-end, not to compete with gRPC.
+//!
+//! **Throttling lives here**, per connection — not in spec validation.
+//! Spec parsing caps what one request can allocate, but only the
+//! connection layer can bound how *often* a client pays that cost, so each
+//! connection carries a token bucket (`[limits] requests_per_sec`/`burst`)
+//! and an optional hard request budget (`max_requests_per_conn`).
+//! Over-rate requests get an `Error` response (the connection stays up —
+//! the client is told to back off); an exhausted budget closes the
+//! connection after one final error. Both count into the `throttled`
+//! metric. One connection's bucket never affects another's.
 
+use crate::coordinator::config::CoordinatorConfig;
+use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, Response};
 use crate::coordinator::service::Coordinator;
 use crate::util::error::{Context, Result};
@@ -12,6 +24,71 @@ use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
+
+/// Admission verdict for one request on one connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Admit {
+    /// Serve it.
+    Ok,
+    /// Token bucket empty: reject this request, keep the connection.
+    Throttled,
+    /// Hard budget spent: reject and close the connection.
+    BudgetExhausted,
+}
+
+/// Per-connection rate limiter: a continuous-refill token bucket plus an
+/// optional lifetime request budget. Owned by the connection thread — no
+/// cross-connection state, so one noisy client cannot starve another.
+struct ConnLimiter {
+    /// Tokens/second; `None` when rate limiting is off.
+    rate: Option<f64>,
+    capacity: f64,
+    tokens: f64,
+    last_refill: Instant,
+    /// Remaining request budget; `None` when unlimited.
+    budget: Option<u64>,
+}
+
+impl ConnLimiter {
+    fn new(cfg: &CoordinatorConfig, now: Instant) -> Self {
+        let capacity = cfg.effective_burst() as f64;
+        Self {
+            rate: (cfg.rate_limit_rps > 0.0).then_some(cfg.rate_limit_rps),
+            capacity,
+            tokens: capacity,
+            last_refill: now,
+            budget: (cfg.conn_request_budget > 0).then_some(cfg.conn_request_budget),
+        }
+    }
+
+    /// Admission decision at time `now` (injected for deterministic tests).
+    /// Only *admitted* requests consume the budget — a throttled request
+    /// is the server's own rejection, and charging it would let the rate
+    /// limiter silently convert "back off" into "connection closed".
+    fn admit_at(&mut self, now: Instant) -> Admit {
+        if self.budget == Some(0) {
+            return Admit::BudgetExhausted;
+        }
+        if let Some(rate) = self.rate {
+            let elapsed = now.duration_since(self.last_refill).as_secs_f64();
+            self.last_refill = now;
+            self.tokens = (self.tokens + elapsed * rate).min(self.capacity);
+            if self.tokens < 1.0 {
+                return Admit::Throttled;
+            }
+            self.tokens -= 1.0;
+        }
+        if let Some(n) = &mut self.budget {
+            *n -= 1;
+        }
+        Admit::Ok
+    }
+
+    fn admit(&mut self) -> Admit {
+        self.admit_at(Instant::now())
+    }
+}
 
 /// A running server (owns the listener thread).
 pub struct Server {
@@ -99,20 +176,40 @@ fn serve_connection(stream: TcpStream, coordinator: &Coordinator) -> Result<()> 
     stream.set_nodelay(true).ok();
     let reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
+    let mut limiter = ConnLimiter::new(coordinator.config(), Instant::now());
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        let resp = match Request::from_json_line(&line) {
-            Ok(req) => coordinator.handle(req),
-            Err(e) => Response::Error {
-                message: format!("bad request: {e}"),
+        let mut close_after = false;
+        let resp = match limiter.admit() {
+            Admit::Ok => match Request::from_json_line(&line) {
+                Ok(req) => coordinator.handle(req),
+                Err(e) => Response::Error {
+                    message: format!("bad request: {e}"),
+                },
             },
+            Admit::Throttled => {
+                Metrics::inc(&coordinator.metrics.throttled);
+                Response::Error {
+                    message: "rate limited: per-connection request rate exceeded".into(),
+                }
+            }
+            Admit::BudgetExhausted => {
+                Metrics::inc(&coordinator.metrics.throttled);
+                close_after = true;
+                Response::Error {
+                    message: "request budget exhausted: connection closing".into(),
+                }
+            }
         };
         writer.write_all(resp.to_json_line().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
+        if close_after {
+            break;
+        }
     }
     Ok(())
 }
@@ -194,6 +291,66 @@ mod tests {
         let resp = Response::from_json_line(line.trim_end()).unwrap();
         assert!(matches!(resp, Response::Error { .. }));
         server.stop();
+    }
+
+    #[test]
+    fn conn_limiter_token_bucket_and_budget() {
+        use std::time::Duration;
+        let t0 = Instant::now();
+        // Bucket of 2, 1 token/s, no budget.
+        let cfg = CoordinatorConfig {
+            rate_limit_rps: 1.0,
+            rate_limit_burst: 2,
+            ..Default::default()
+        };
+        let mut lim = ConnLimiter::new(&cfg, t0);
+        assert_eq!(lim.admit_at(t0), Admit::Ok);
+        assert_eq!(lim.admit_at(t0), Admit::Ok);
+        assert_eq!(lim.admit_at(t0), Admit::Throttled, "burst spent");
+        // Refill after one second buys exactly one more.
+        let t1 = t0 + Duration::from_secs(1);
+        assert_eq!(lim.admit_at(t1), Admit::Ok);
+        assert_eq!(lim.admit_at(t1), Admit::Throttled);
+        // Refill never exceeds capacity.
+        let t9 = t0 + Duration::from_secs(9);
+        assert_eq!(lim.admit_at(t9), Admit::Ok);
+        assert_eq!(lim.admit_at(t9), Admit::Ok);
+        assert_eq!(lim.admit_at(t9), Admit::Throttled);
+
+        // Hard budget, no rate limit: N requests then close.
+        let cfg = CoordinatorConfig {
+            conn_request_budget: 3,
+            ..Default::default()
+        };
+        let mut lim = ConnLimiter::new(&cfg, t0);
+        for _ in 0..3 {
+            assert_eq!(lim.admit_at(t0), Admit::Ok);
+        }
+        assert_eq!(lim.admit_at(t0), Admit::BudgetExhausted);
+
+        // Both knobs: throttled requests do NOT consume the budget — only
+        // admitted ones do, so a rate-limited client is told to back off
+        // without its connection lifetime being burned by the rejections.
+        let cfg = CoordinatorConfig {
+            rate_limit_rps: 1.0,
+            rate_limit_burst: 1,
+            conn_request_budget: 2,
+            ..Default::default()
+        };
+        let mut lim = ConnLimiter::new(&cfg, t0);
+        assert_eq!(lim.admit_at(t0), Admit::Ok); // budget 2 -> 1
+        for _ in 0..10 {
+            assert_eq!(lim.admit_at(t0), Admit::Throttled); // budget untouched
+        }
+        let t1 = t0 + Duration::from_secs(1);
+        assert_eq!(lim.admit_at(t1), Admit::Ok); // budget 1 -> 0
+        assert_eq!(lim.admit_at(t1), Admit::BudgetExhausted);
+
+        // Both knobs off: everything admitted.
+        let mut lim = ConnLimiter::new(&CoordinatorConfig::default(), t0);
+        for _ in 0..1000 {
+            assert_eq!(lim.admit_at(t0), Admit::Ok);
+        }
     }
 
     #[test]

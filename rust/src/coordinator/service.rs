@@ -6,7 +6,8 @@
 //!   rounding; `rust/tests/runtime_artifacts.rs` enforces it.
 //! * OPH sketches — native sketcher (hashing dominates; batching buys
 //!   nothing for single sets) shared with the LSH index.
-//! * LSH insert/query — a mutexed index plus a set store for estimates.
+//! * LSH insert/query — routed through the [`SchemeRegistry`]: one sharded
+//!   index (shard-level locking) + set store per named scheme.
 //!
 //! The service object is `Send + Sync`; the TCP front-end and the examples
 //! call it from many threads.
@@ -14,9 +15,9 @@
 use crate::coordinator::batcher::FhBatcher;
 use crate::coordinator::config::CoordinatorConfig;
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::SchemeRegistry;
 use crate::coordinator::request::{ExecPath, Request, Response};
 use crate::data::sparse::SparseVector;
-use crate::lsh::{LshIndex, LshParams};
 use crate::runtime::artifact::Manifest;
 use crate::runtime::executor::ExecutorHandle;
 use crate::sketch::feature_hash::FeatureHasher;
@@ -32,19 +33,22 @@ use std::time::Instant;
 ///
 /// Every sketcher in here is built through the [`SketchSpec`] registry
 /// (`cfg.fh_spec()`, `cfg.oph_spec()`, `cfg.sketch_spec()`, `cfg.lsh_spec()`)
-/// — the sketch scheme is configuration, not code.
+/// — the sketch scheme is configuration, not code — and the index/store
+/// layers live in the [`SchemeRegistry`]: one sharded index + store per
+/// named scheme, with the default scheme preserving the single-scheme
+/// wire behaviour.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     fh: FeatureHasher,
     oph: OneHashSketcher,
-    /// The erased default sketcher serving the scheme-aware `sketch`
-    /// endpoint (built from `cfg.sketch_spec()`).
-    default_sketcher: Box<dyn DynSketcher>,
+    /// Named schemes (default + `[[schemes]]`), each with its own
+    /// sketcher, sharded index and store.
+    registry: SchemeRegistry,
     /// Per-request spec sketchers, keyed by the canonical spec string
     /// (specs round-trip through `Display`, so the key is exact).
     /// Construction can dwarf sketching — mixed tabulation fills multi-KB
     /// tables per hasher — so repeated specs must not rebuild. Bounded:
-    /// cleared wholesale at [`Self::SPEC_CACHE_CAP`] entries.
+    /// insert-if-room at [`Self::SPEC_CACHE_CAP`] entries.
     spec_cache: Mutex<HashMap<String, Arc<dyn DynSketcher>>>,
     batcher: Option<FhBatcher>,
     /// OPH artifact matching the OPH spec's k, when loaded:
@@ -53,8 +57,6 @@ pub struct Coordinator {
     /// The basic hasher used to pre-hash elements for the PJRT OPH path —
     /// must be the *same* function the native sketcher uses.
     oph_hasher: Box<dyn crate::hash::Hasher32>,
-    lsh: Mutex<LshIndex>,
-    store: Mutex<HashMap<u32, Vec<u32>>>,
     pub metrics: Arc<Metrics>,
     /// Kept alive for the batcher thread; also used by benches directly.
     executor: Option<Arc<ExecutorHandle>>,
@@ -68,11 +70,7 @@ impl Coordinator {
         let fh = cfg.fh_spec().build_feature_hasher().expect("fh spec");
         let oph_spec = cfg.oph_spec();
         let oph = oph_spec.build_oph().expect("oph spec");
-        let default_sketcher = cfg.sketch_spec().build();
-        let lsh = Mutex::new(LshIndex::new(
-            LshParams::new(cfg.lsh_k, cfg.lsh_l),
-            &cfg.lsh_spec(),
-        ));
+        let registry = SchemeRegistry::from_config(&cfg, &metrics);
 
         let (batcher, executor, oph_artifact) = if cfg.enable_pjrt {
             match Self::start_pjrt(&cfg, oph.k(), &metrics) {
@@ -98,12 +96,10 @@ impl Coordinator {
             cfg,
             fh,
             oph,
-            default_sketcher,
+            registry,
             spec_cache: Mutex::new(HashMap::new()),
             batcher,
             oph_artifact,
-            lsh,
-            store: Mutex::new(HashMap::new()),
             metrics,
             executor,
         }
@@ -203,6 +199,11 @@ impl Coordinator {
         &self.cfg
     }
 
+    /// The scheme registry (tests, stats enrichment).
+    pub fn registry(&self) -> &SchemeRegistry {
+        &self.registry
+    }
+
     /// Whether the PJRT path is live.
     pub fn pjrt_enabled(&self) -> bool {
         self.batcher.is_some()
@@ -222,25 +223,18 @@ impl Coordinator {
                 let s = self.oph.sketch(&set);
                 Response::Sketch { bins: s.bins }
             }
-            Request::Sketch { set, spec } => self.handle_sketch(set, spec),
-            Request::LshInsert { id, set } => {
-                Metrics::inc(&self.metrics.lsh_inserts);
-                self.lsh.lock().unwrap().insert(id, &set);
-                self.store.lock().unwrap().insert(id, set);
-                Response::Inserted { id }
+            Request::Sketch { set, spec, scheme } => self.handle_sketch(set, spec, scheme),
+            Request::LshInsert { id, set, scheme } => {
+                self.handle_insert(id, set, scheme.as_deref())
             }
-            Request::LshQuery { set } => {
-                Metrics::inc(&self.metrics.lsh_queries);
-                let ids = self.lsh.lock().unwrap().query(&set);
-                Response::Candidates { ids }
-            }
+            Request::LshQuery { set, scheme } => self.handle_query(&set, scheme.as_deref()),
             Request::Estimate { a, b } => {
                 Metrics::inc(&self.metrics.estimates);
-                let store = self.store.lock().unwrap();
-                match (store.get(&a), store.get(&b)) {
+                let default = self.registry.default_scheme();
+                match (default.stored(a), default.stored(b)) {
                     (Some(sa), Some(sb)) => {
-                        let ja = self.oph.sketch(sa);
-                        let jb = self.oph.sketch(sb);
+                        let ja = self.oph.sketch(&sa);
+                        let jb = self.oph.sketch(&sb);
                         Response::Estimate {
                             jaccard: self.oph.estimate(&ja, &jb),
                         }
@@ -254,26 +248,24 @@ impl Coordinator {
                 }
             }
             Request::IndexDoc { id, text } => {
-                Metrics::inc(&self.metrics.lsh_inserts);
                 let set = crate::data::shingle::byte_shingles(&text, 5);
-                self.lsh.lock().unwrap().insert(id, &set);
-                self.store.lock().unwrap().insert(id, set);
-                Response::Inserted { id }
+                self.handle_insert(id, set, None)
             }
             Request::QueryDoc { text } => {
-                Metrics::inc(&self.metrics.lsh_queries);
                 let set = crate::data::shingle::byte_shingles(&text, 5);
-                let ids = self.lsh.lock().unwrap().query(&set);
-                Response::Candidates { ids }
+                self.handle_query(&set, None)
             }
             Request::SaveIndex { path } => {
-                let lsh_spec = self.cfg.lsh_spec();
-                let lsh = self.lsh.lock().unwrap();
-                match crate::lsh::persist::save(&lsh, lsh_spec.family, lsh_spec.seed, &path) {
-                    Ok(()) => Response::Saved {
-                        path,
-                        entries: lsh.len(),
-                    },
+                let index = self
+                    .registry
+                    .default_scheme()
+                    .index()
+                    .expect("default scheme is OPH-backed");
+                // `save` counts entries under the same shard locks it
+                // writes under, so the reported count matches the bytes
+                // even with concurrent inserts.
+                match index.save(&path) {
+                    Ok(entries) => Response::Saved { path, entries },
                     Err(e) => {
                         Metrics::inc(&self.metrics.errors);
                         Response::Error {
@@ -293,7 +285,13 @@ impl Coordinator {
     /// of tabulation tables per hasher, the worst case the cache can pin
     /// is ~8 × 1024 × 8 KB ≈ 64 MB — bounded, and realistic deployments
     /// rotate far fewer than eight specs.
-    const SPEC_CACHE_CAP: usize = 8;
+    pub const SPEC_CACHE_CAP: usize = 8;
+
+    /// Current per-request spec-cache population (tests assert the
+    /// [`Self::SPEC_CACHE_CAP`] bound holds under concurrent load).
+    pub fn spec_cache_len(&self) -> usize {
+        self.spec_cache.lock().unwrap().len()
+    }
 
     /// Sketcher for a per-request spec, cached by canonical spec string so
     /// repeated requests pay construction (table fills, k seeded hashers)
@@ -318,14 +316,34 @@ impl Coordinator {
         built
     }
 
-    /// The scheme-aware sketch endpoint: the config's default spec, or a
+    /// The scheme-aware sketch endpoint: a named scheme's sketcher (the
+    /// default scheme when neither selector is given), or an ad-hoc
     /// per-request spec string parsed and built through the registry.
-    fn handle_sketch(&self, set: Vec<u32>, spec: Option<String>) -> Response {
+    fn handle_sketch(
+        &self,
+        set: Vec<u32>,
+        spec: Option<String>,
+        scheme: Option<String>,
+    ) -> Response {
         Metrics::inc(&self.metrics.sketch_requests);
         let mut scratch = Scratch::with_capacity(set.len());
-        let value = match spec {
-            None => self.default_sketcher.sketch_dyn(&set, &mut scratch),
-            Some(text) => match SketchSpec::parse(&text) {
+        let value = match (spec, scheme) {
+            (Some(_), Some(_)) => {
+                Metrics::inc(&self.metrics.errors);
+                return Response::Error {
+                    message: "'spec' and 'scheme' are mutually exclusive".into(),
+                };
+            }
+            (None, name) => match self.registry.get(name.as_deref()) {
+                Ok(s) => s.sketch(&set, &mut scratch),
+                Err(e) => {
+                    Metrics::inc(&self.metrics.errors);
+                    return Response::Error {
+                        message: e.to_string(),
+                    };
+                }
+            },
+            (Some(text), None) => match SketchSpec::parse(&text) {
                 Ok(spec) => self.cached_sketcher(&spec).sketch_dyn(&set, &mut scratch),
                 Err(e) => {
                     Metrics::inc(&self.metrics.errors);
@@ -336,6 +354,43 @@ impl Coordinator {
             },
         };
         Response::SketchValue { value }
+    }
+
+    /// Insert into a scheme's sharded index (the default scheme when
+    /// `scheme` is `None` — the legacy single-scheme behaviour). The
+    /// global counter counts *successful* inserts only, as it always has
+    /// — rejections land in `errors` (and these ops could not fail before
+    /// schemes existed, so success-only keeps the meaning stable).
+    fn handle_insert(&self, id: u32, set: Vec<u32>, scheme: Option<&str>) -> Response {
+        match self.registry.get(scheme).and_then(|s| s.insert(id, set)) {
+            Ok(()) => {
+                Metrics::inc(&self.metrics.lsh_inserts);
+                Response::Inserted { id }
+            }
+            Err(e) => {
+                Metrics::inc(&self.metrics.errors);
+                Response::Error {
+                    message: e.to_string(),
+                }
+            }
+        }
+    }
+
+    /// Fan-out query over a scheme's sharded index (success-only counter,
+    /// as with [`Self::handle_insert`]).
+    fn handle_query(&self, set: &[u32], scheme: Option<&str>) -> Response {
+        match self.registry.get(scheme).and_then(|s| s.query(set)) {
+            Ok(ids) => {
+                Metrics::inc(&self.metrics.lsh_queries);
+                Response::Candidates { ids }
+            }
+            Err(e) => {
+                Metrics::inc(&self.metrics.errors);
+                Response::Error {
+                    message: e.to_string(),
+                }
+            }
+        }
     }
 
     fn handle_fh(&self, indices: Vec<u32>, values: Vec<f64>) -> Response {
@@ -428,12 +483,17 @@ mod tests {
         c.handle(Request::LshInsert {
             id: 1,
             set: set_a.clone(),
+            scheme: None,
         });
         c.handle(Request::LshInsert {
             id: 2,
             set: set_b.clone(),
+            scheme: None,
         });
-        let Response::Candidates { ids } = c.handle(Request::LshQuery { set: set_a }) else {
+        let Response::Candidates { ids } = c.handle(Request::LshQuery {
+            set: set_a,
+            scheme: None,
+        }) else {
             panic!()
         };
         assert!(ids.contains(&1));
@@ -467,6 +527,7 @@ mod tests {
         let Response::SketchValue { value } = c.handle(Request::Sketch {
             set: set.clone(),
             spec: None,
+            scheme: None,
         }) else {
             panic!()
         };
@@ -481,6 +542,7 @@ mod tests {
         let Response::SketchValue { value } = c.handle(Request::Sketch {
             set: set.clone(),
             spec: Some("minhash(k=16,seed=3)".into()),
+            scheme: None,
         }) else {
             panic!()
         };
@@ -490,6 +552,7 @@ mod tests {
         let Response::Error { .. } = c.handle(Request::Sketch {
             set,
             spec: Some("oph(k=zero)".into()),
+            scheme: None,
         }) else {
             panic!()
         };
@@ -506,6 +569,7 @@ mod tests {
         let Response::SketchValue { value } = c.handle(Request::Sketch {
             set: (0..100).collect(),
             spec: None,
+            scheme: None,
         }) else {
             panic!()
         };
@@ -518,6 +582,91 @@ mod tests {
             panic!()
         };
         assert_eq!(bins.len(), 50);
+    }
+
+    #[test]
+    fn multi_scheme_routing_in_service() {
+        use crate::coordinator::config::SchemeConfig;
+        use crate::hash::HashFamily;
+        use crate::sketch::SketchSpec;
+        let c = Coordinator::new(CoordinatorConfig {
+            lsh_shards: 2,
+            schemes: vec![SchemeConfig {
+                name: "fast".into(),
+                spec: SketchSpec::oph(HashFamily::MultiplyShift, 5, 32),
+                shards: 3,
+            }],
+            ..native_cfg()
+        });
+        let set: Vec<u32> = (0..200).collect();
+        // Insert into the named scheme only.
+        let Response::Inserted { .. } = c.handle(Request::LshInsert {
+            id: 7,
+            set: set.clone(),
+            scheme: Some("fast".into()),
+        }) else {
+            panic!()
+        };
+        let Response::Candidates { ids } = c.handle(Request::LshQuery {
+            set: set.clone(),
+            scheme: Some("fast".into()),
+        }) else {
+            panic!()
+        };
+        assert!(ids.contains(&7));
+        let Response::Candidates { ids } = c.handle(Request::LshQuery {
+            set: set.clone(),
+            scheme: None,
+        }) else {
+            panic!()
+        };
+        assert!(ids.is_empty(), "default scheme saw the named insert");
+        // Scheme-selected sketching; spec+scheme together is an error.
+        let Response::SketchValue { value } = c.handle(Request::Sketch {
+            set: set.clone(),
+            spec: None,
+            scheme: Some("fast".into()),
+        }) else {
+            panic!()
+        };
+        assert_eq!((value.scheme_id(), value.len()), ("oph", 32));
+        let Response::Error { .. } = c.handle(Request::Sketch {
+            set: set.clone(),
+            spec: Some("oph(k=8)".into()),
+            scheme: Some("fast".into()),
+        }) else {
+            panic!()
+        };
+        // Unknown scheme names error cleanly on every scheme-aware op.
+        for resp in [
+            c.handle(Request::Sketch {
+                set: set.clone(),
+                spec: None,
+                scheme: Some("nope".into()),
+            }),
+            c.handle(Request::LshInsert {
+                id: 9,
+                set: set.clone(),
+                scheme: Some("nope".into()),
+            }),
+            c.handle(Request::LshQuery {
+                set: set.clone(),
+                scheme: Some("nope".into()),
+            }),
+        ] {
+            let Response::Error { message } = resp else {
+                panic!("expected unknown-scheme error")
+            };
+            assert!(message.contains("unknown scheme"), "{message}");
+        }
+        // Per-scheme counters surfaced in the stats snapshot.
+        let Response::Stats { json } = c.handle(Request::Stats) else {
+            panic!()
+        };
+        let fast = json.get("schemes").unwrap().get("fast").unwrap();
+        assert_eq!(fast.get("inserts").unwrap().as_i64(), Some(1));
+        assert_eq!(fast.get("queries").unwrap().as_i64(), Some(1));
+        assert_eq!(fast.get("shards").unwrap().as_arr().unwrap().len(), 3);
     }
 
     #[test]

@@ -21,10 +21,11 @@
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust.
 //! * [`coordinator`] — the serving layer: dynamic batcher, request router,
-//!   worker pool and TCP front-end for the sketching service.
+//!   multi-scheme registry (named sketch schemes over sharded indices),
+//!   worker pool and rate-limited TCP front-end for the sketching service.
 //! * [`experiments`] — one driver per paper table/figure (Table 1, Figures
 //!   2–11) regenerating the evaluation.
-//! * [`benchsuite`] — the six bench workloads as in-process functions,
+//! * [`benchsuite`] — the seven bench workloads as in-process functions,
 //!   shared by the `cargo bench` targets and the `mixtab bench` CLI, which
 //!   writes machine-readable `BENCH_*.json` reports and gates them against
 //!   a committed baseline (see `util::bench`).

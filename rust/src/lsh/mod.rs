@@ -6,11 +6,16 @@
 //!   one-permutation construction of Shrivastava & Li [32]).
 //! * [`metrics`] — brute-force ground truth, recall@T₀ and the
 //!   #retrieved/recall ratio reported in Figure 5.
+//! * [`sharded`] — N independently-locked shards behind deterministic
+//!   id→shard routing with fan-out query + merge (the multi-scheme
+//!   coordinator's per-scheme index).
 
 pub mod index;
 pub mod metrics;
 pub mod persist;
 pub mod angular;
+pub mod sharded;
 
 pub use index::{LshIndex, LshParams};
 pub use metrics::{ground_truth, QueryEval};
+pub use sharded::ShardedIndex;

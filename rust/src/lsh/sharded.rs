@@ -1,0 +1,395 @@
+//! Sharded LSH serving: N independent [`LshIndex`] shards behind one
+//! routing front, as in the k-partition/sharded-statistics setting of
+//! Dahlgaard et al. ("Hashing for statistics over k-partitions").
+//!
+//! **Routing invariant**: a stored id lives in exactly one shard, chosen
+//! by hashing the *id* with the index's configured hash family under a
+//! routing-specific seed ([`SHARD_ROUTE_SALT`]). The route therefore
+//! depends only on `(family, seed, n_shards, id)` — it is deterministic
+//! across runs and processes, which is what makes per-shard snapshots
+//! reloadable and lets shards be rebuilt independently.
+//!
+//! **Merge semantics**: every shard is built from the *same* OPH
+//! [`SketchSpec`] (same family + seed ⇒ identical sketcher), so a query is
+//! sketched once and fanned out to all shards; the result is the sorted,
+//! deduplicated union of the per-shard candidate lists. Because each id is
+//! in exactly one shard and all shards share the sketcher, that union is
+//! identical to what a single unsharded index holding the whole corpus
+//! would return — fan-out results are independent of the shard count
+//! (property-tested in `rust/tests/sharded_properties.rs`).
+//!
+//! **Concurrency**: shards are individually mutexed, so inserts routed to
+//! different shards and fan-out queries proceed without a global index
+//! lock — the coordinator serves `insert`/`query` from many connection
+//! threads against one `ShardedIndex` by shared reference.
+//!
+//! With `n_shards = 1` the structure degenerates to a bare [`LshIndex`]:
+//! identical query results and — via [`ShardedIndex::save`], which emits
+//! the plain single-index snapshot format for paper-default specs (the
+//! only ones that format can encode) — byte-identical persisted
+//! snapshots.
+
+use crate::hash::Hasher32;
+use crate::lsh::index::{LshIndex, LshParams};
+use crate::lsh::persist;
+use crate::sketch::densify::DensifyMode;
+use crate::sketch::oph::{BinLayout, OneHashSketcher, OphSketch};
+use crate::sketch::spec::{SketchScheme, SketchSpec};
+use crate::util::binio::{BinReader, BinWriter};
+use crate::util::error::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Seed salt separating the id→shard routing hash stream from the sketch
+/// hash stream of the same spec (they share the configured family).
+pub const SHARD_ROUTE_SALT: u64 = 0x5AAD_ED01;
+
+/// Magic/version of the multi-shard snapshot manifest. Single-shard
+/// indices are saved in the plain [`persist`] format instead (`MXLS`), so
+/// `n_shards = 1` snapshots stay byte-identical to unsharded ones. The
+/// manifest records the **full canonical spec string** (not just family +
+/// seed), so non-default OPH layout/densify settings survive reload; the
+/// single-file MXLS path inherits [`persist`]'s family+seed-only
+/// provenance (paper-default layout/densify assumed), a pre-existing
+/// limitation of that format.
+const MANIFEST_MAGIC: u32 = 0x4D58_5348; // "MXSH"
+const MANIFEST_VERSION: u8 = 1;
+
+/// An LSH index split into N independently-locked shards.
+pub struct ShardedIndex {
+    params: LshParams,
+    spec: SketchSpec,
+    /// Routes ids to shards; built from the spec's family under
+    /// [`SHARD_ROUTE_SALT`].
+    router: Box<dyn Hasher32>,
+    /// Shared query/insert sketcher — identical to every shard's internal
+    /// sketcher (same spec), so sets are sketched once per operation, not
+    /// once per shard.
+    sketcher: OneHashSketcher,
+    shards: Vec<Mutex<LshIndex>>,
+}
+
+impl ShardedIndex {
+    /// Build an empty sharded index: `n_shards` copies of
+    /// `LshIndex::new(params, spec)` plus the routing hasher. Panics if
+    /// `n_shards == 0` or the spec's scheme is not OPH (same contract as
+    /// [`LshIndex::new`]).
+    pub fn new(n_shards: usize, params: LshParams, spec: &SketchSpec) -> Self {
+        assert!(n_shards >= 1, "ShardedIndex needs at least one shard");
+        assert!(
+            matches!(spec.scheme, SketchScheme::Oph(_)),
+            "ShardedIndex needs an OPH sketch spec, got '{spec}'"
+        );
+        // Each shard's inner index builds its own (unused) sketcher —
+        // ShardedIndex always sketches with the shared one. That keeps
+        // LshIndex self-contained (the N=1 equivalence is with a *bare*
+        // index, sketcher and all) at a bounded cost: a few KB of tables
+        // per shard, once, with shard counts capped at MAX_SHARDS.
+        let shards = (0..n_shards).map(|_| Mutex::new(LshIndex::new(params, spec))).collect();
+        Self::assemble(params, spec, shards)
+    }
+
+    /// Wire up the routing hasher + shared sketcher around pre-built
+    /// shards (construction and [`Self::load`], which already has the
+    /// deserialized per-shard indices in hand).
+    fn assemble(params: LshParams, spec: &SketchSpec, shards: Vec<Mutex<LshIndex>>) -> Self {
+        let sketcher = spec
+            .with_oph_k(params.sketch_bins())
+            .build_oph()
+            .expect("caller checked the scheme is OPH");
+        Self {
+            params,
+            spec: *spec,
+            router: spec.family.build(spec.seed ^ SHARD_ROUTE_SALT),
+            sketcher,
+            shards,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn params(&self) -> LshParams {
+        self.params
+    }
+
+    /// The OPH spec every shard (and the shared sketcher) is built from.
+    pub fn spec(&self) -> &SketchSpec {
+        &self.spec
+    }
+
+    /// The shard an id routes to (deterministic — see module docs).
+    pub fn shard_of(&self, id: u32) -> usize {
+        self.router.hash(id) as usize % self.shards.len()
+    }
+
+    /// Total stored sets across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stored sets per shard (diagnostics / per-shard metrics).
+    pub fn per_shard_len(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).collect()
+    }
+
+    /// Sketch a set with the shared sketcher (identical to every shard's).
+    pub fn sketch(&self, set: &[u32]) -> OphSketch {
+        self.sketcher.sketch(set)
+    }
+
+    /// Insert a set under `id` into its routed shard. Returns the shard
+    /// index it landed in (for per-shard metrics).
+    pub fn insert(&self, id: u32, set: &[u32]) -> usize {
+        let sketch = self.sketch(set);
+        let shard = self.shard_of(id);
+        self.shards[shard].lock().unwrap().insert_sketch(id, &sketch);
+        shard
+    }
+
+    /// Query: sketch once, fan out to every shard, merge to the sorted,
+    /// deduplicated union (identical to an unsharded index — module docs).
+    pub fn query(&self, set: &[u32]) -> Vec<u32> {
+        self.query_fanout(set).0
+    }
+
+    /// [`Self::query`] plus the raw per-shard candidate counts (before the
+    /// merge dedup), for per-shard metrics.
+    pub fn query_fanout(&self, set: &[u32]) -> (Vec<u32>, Vec<usize>) {
+        let sketch = self.sketch(set);
+        let mut merged: Vec<u32> = Vec::new();
+        let mut per_shard = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            let ids = shard.lock().unwrap().query_sketch(&sketch);
+            per_shard.push(ids.len());
+            merged.extend_from_slice(&ids);
+        }
+        merged.sort_unstable();
+        merged.dedup();
+        (merged, per_shard)
+    }
+
+    /// The path shard `i`'s snapshot is written to / read from, for a
+    /// multi-shard index saved at `base`.
+    pub fn shard_path(base: &Path, i: usize) -> PathBuf {
+        PathBuf::from(format!("{}.shard{i}", base.display()))
+    }
+
+    /// Snapshot to disk. With one shard **and a paper-default spec**
+    /// (layout `mod`, densify `paper` — all the plain format can encode)
+    /// this writes exactly the plain [`persist`] snapshot at `base`
+    /// (byte-identical to saving the bare [`LshIndex`]); a one-shard index
+    /// with non-default layout/densify takes the manifest format instead,
+    /// because the plain format's family+seed-only provenance would
+    /// silently reload it with the wrong sketcher. With N > 1 it writes
+    /// one plain snapshot per shard at
+    /// [`Self::shard_path`] and **then** the manifest at `base` — the
+    /// manifest is the commit point, so an interrupted save cannot leave a
+    /// fresh manifest pointing at unwritten shard files (a crash between
+    /// shard writes can still mix old and new shard files under an *old*
+    /// manifest; full atomicity would need temp+rename of the whole set).
+    /// Returns the number of snapshotted entries, counted under the same
+    /// shard locks the bytes were written under — so the count always
+    /// matches the snapshot even with concurrent inserts. (With N > 1 each
+    /// *shard* is a consistent cut, but the shards are locked one at a
+    /// time, not globally.)
+    pub fn save(&self, base: impl AsRef<Path>) -> Result<usize> {
+        let base = base.as_ref();
+        let plain_encodable = matches!(
+            self.spec.scheme,
+            SketchScheme::Oph(p) if p.layout == BinLayout::Mod && p.densify == DensifyMode::Paper
+        );
+        if self.shards.len() == 1 && plain_encodable {
+            let shard = self.shards[0].lock().unwrap();
+            persist::save(&shard, self.spec.family, self.spec.seed, base)?;
+            return Ok(shard.len());
+        }
+        if let Some(parent) = base.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut entries = 0;
+        for (i, shard) in self.shards.iter().enumerate() {
+            let shard = shard.lock().unwrap();
+            persist::save(&shard, self.spec.family, self.spec.seed, Self::shard_path(base, i))?;
+            entries += shard.len();
+        }
+        let f = std::fs::File::create(base)?;
+        let mut w = BinWriter::new(BufWriter::new(f));
+        w.u32(MANIFEST_MAGIC)?;
+        w.u8(MANIFEST_VERSION)?;
+        // The full canonical spec — family, seed, *and* layout/densify —
+        // so reload rebuilds the exact sketcher the corpus was indexed
+        // under (the shard files' own headers only carry family + seed).
+        w.str(&self.spec.to_string())?;
+        w.u64(self.params.k as u64)?;
+        w.u64(self.params.l as u64)?;
+        w.u64(self.shards.len() as u64)?;
+        let mut manifest = w.finish();
+        std::io::Write::flush(&mut manifest)?;
+        Ok(entries)
+    }
+
+    /// Reload a snapshot written by [`Self::save`]. Sniffs the magic at
+    /// `base`: a plain `MXLS` snapshot loads as a one-shard index, an
+    /// `MXSH` manifest loads every shard file and checks each against the
+    /// manifest's provenance (family, seed, K, L).
+    pub fn load(base: impl AsRef<Path>) -> Result<ShardedIndex> {
+        let base = base.as_ref();
+        let mut magic_bytes = [0u8; 4];
+        {
+            let mut f = std::fs::File::open(base)
+                .with_context(|| format!("open {}", base.display()))?;
+            f.read_exact(&mut magic_bytes)
+                .with_context(|| format!("read magic of {}", base.display()))?;
+        }
+        if u32::from_le_bytes(magic_bytes) != MANIFEST_MAGIC {
+            // Plain single-index snapshot (family+seed provenance only —
+            // paper-default layout/densify, as with `persist::load`).
+            let (index, family, seed) = persist::load(base)?;
+            let params = index.params();
+            let spec = SketchSpec::oph(family, seed, params.sketch_bins());
+            return Ok(Self::assemble(params, &spec, vec![Mutex::new(index)]));
+        }
+        let f = std::fs::File::open(base)?;
+        let mut r = BinReader::new(BufReader::new(f));
+        if r.u32()? != MANIFEST_MAGIC {
+            bail!("not a sharded LSH manifest (bad magic)");
+        }
+        let version = r.u8()?;
+        if version != MANIFEST_VERSION {
+            bail!("unsupported sharded manifest version {version}");
+        }
+        let spec_str = r.str()?;
+        let spec = SketchSpec::parse(&spec_str)
+            .with_context(|| format!("bad sketch spec '{spec_str}' in sharded manifest"))?;
+        if !matches!(spec.scheme, SketchScheme::Oph(_)) {
+            bail!("sharded manifest spec '{spec}' is not OPH");
+        }
+        let k = r.u64()? as usize;
+        let l = r.u64()? as usize;
+        let n_shards = r.u64()? as usize;
+        if n_shards == 0 {
+            bail!("sharded manifest declares zero shards");
+        }
+        let params = LshParams::new(k, l);
+        let mut shards = Vec::with_capacity(n_shards);
+        for i in 0..n_shards {
+            let path = Self::shard_path(base, i);
+            let (index, shard_family, shard_seed) = persist::load(&path)
+                .with_context(|| format!("load shard snapshot {}", path.display()))?;
+            if shard_family != spec.family || shard_seed != spec.seed || index.params() != params {
+                bail!(
+                    "shard snapshot {} does not match manifest provenance",
+                    path.display()
+                );
+            }
+            shards.push(Mutex::new(index));
+        }
+        Ok(Self::assemble(params, &spec, shards))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::HashFamily;
+
+    fn spec(seed: u64) -> SketchSpec {
+        SketchSpec::oph(HashFamily::MixedTab, seed, 1)
+    }
+
+    fn corpus(n: u32) -> Vec<Vec<u32>> {
+        (0..n).map(|i| (i * 37..i * 37 + 60).collect()).collect()
+    }
+
+    #[test]
+    fn routes_spread_and_are_stable() {
+        let idx = ShardedIndex::new(4, LshParams::new(4, 4), &spec(3));
+        let mut counts = [0usize; 4];
+        for id in 0..400u32 {
+            let s = idx.shard_of(id);
+            assert_eq!(s, idx.shard_of(id), "route not stable");
+            counts[s] += 1;
+        }
+        // The routing hash spreads ids over every shard (loose bound).
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 40, "shard {i} got only {c}/400 ids");
+        }
+    }
+
+    #[test]
+    fn insert_lands_in_routed_shard_only() {
+        let idx = ShardedIndex::new(3, LshParams::new(3, 3), &spec(5));
+        let sets = corpus(30);
+        for (i, s) in sets.iter().enumerate() {
+            let shard = idx.insert(i as u32, s);
+            assert_eq!(shard, idx.shard_of(i as u32));
+        }
+        assert_eq!(idx.len(), 30);
+        assert_eq!(idx.per_shard_len().iter().sum::<usize>(), 30);
+        // Every stored set retrieves itself through the fan-out.
+        for (i, s) in sets.iter().enumerate() {
+            assert!(idx.query(s).contains(&(i as u32)), "set {i} missed itself");
+        }
+    }
+
+    #[test]
+    fn query_merge_is_sorted_and_deduplicated() {
+        let idx = ShardedIndex::new(2, LshParams::new(2, 4), &spec(9));
+        let sets = corpus(20);
+        for (i, s) in sets.iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        let (merged, per_shard) = idx.query_fanout(&sets[0]);
+        assert_eq!(per_shard.len(), 2);
+        let mut expect = merged.clone();
+        expect.sort_unstable();
+        expect.dedup();
+        assert_eq!(merged, expect);
+    }
+
+    #[test]
+    fn multi_shard_save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("mixtab_sharded_persist");
+        let _ = std::fs::remove_dir_all(&dir);
+        let idx = ShardedIndex::new(3, LshParams::new(3, 4), &spec(11));
+        let sets = corpus(25);
+        for (i, s) in sets.iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        let base = dir.join("snap.mxsh");
+        assert_eq!(idx.save(&base).unwrap(), idx.len());
+        let loaded = ShardedIndex::load(&base).unwrap();
+        assert_eq!(loaded.n_shards(), 3);
+        assert_eq!(loaded.len(), idx.len());
+        assert_eq!(loaded.per_shard_len(), idx.per_shard_len());
+        for s in &sets {
+            assert_eq!(loaded.query(s), idx.query(s));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_rejects_mismatched_and_garbage() {
+        let dir = std::env::temp_dir().join("mixtab_sharded_reject");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let garbage = dir.join("garbage");
+        std::fs::write(&garbage, b"zz").unwrap();
+        assert!(ShardedIndex::load(&garbage).is_err());
+        // Manifest whose shard files are missing.
+        let idx = ShardedIndex::new(2, LshParams::new(2, 2), &spec(1));
+        idx.insert(1, &(0..40).collect::<Vec<_>>());
+        let base = dir.join("snap");
+        idx.save(&base).unwrap();
+        std::fs::remove_file(ShardedIndex::shard_path(&base, 1)).unwrap();
+        assert!(ShardedIndex::load(&base).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -3,7 +3,7 @@
 //! ```text
 //! mixtab exp <id|all> [--seed N] [--scale F] [--out DIR] [--data-dir DIR]
 //! mixtab bench [--quick] [--only NAME] [--json PATH] [--baseline PATH] [--tolerance F]
-//! mixtab sketch --spec SPEC [--set N,N,...|--text STR]
+//! mixtab sketch [--spec SPEC | --scheme NAME [--config FILE]] [--set N,N,...|--text STR]
 //! mixtab serve [--config FILE] [--listen ADDR]
 //! mixtab info
 //! ```
@@ -49,13 +49,27 @@ fn cli() -> Command {
                 ),
         )
         .subcommand(
-            Command::new("sketch", "sketch a key set (or shingled document) with a declarative sketch spec")
+            Command::new("sketch", "sketch a key set (or shingled document) with a declarative sketch spec or a named scheme")
                 .opt(
                     "spec",
                     's',
                     "SPEC",
-                    "sketch spec, e.g. oph(k=200,hash=mixed_tab,seed=42) — schemes: oph, minhash, simhash, featurehash, bbit",
-                    Some("oph(k=200,layout=mod,densify=paper,hash=mixed_tab,seed=42)"),
+                    "sketch spec, e.g. oph(k=200,hash=mixed_tab,seed=42) — schemes: oph, minhash, simhash, featurehash, bbit (default: oph(k=200,layout=mod,densify=paper,hash=mixed_tab,seed=42))",
+                    None,
+                )
+                .opt(
+                    "scheme",
+                    '\0',
+                    "NAME",
+                    "named scheme from the config's [[schemes]] (or 'default'); mutually exclusive with --spec",
+                    None,
+                )
+                .opt(
+                    "config",
+                    'c',
+                    "FILE",
+                    "config file: resolves --scheme names; alone, supplies the default spec",
+                    None,
                 )
                 .opt("set", '\0', "N,N,...", "comma-separated u32 keys to sketch", None)
                 .opt("text", '\0', "STR", "UTF-8 document; its 5-byte shingles are sketched", None),
@@ -221,13 +235,54 @@ fn run_bench(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
     Ok(())
 }
 
+/// Default spec for `mixtab sketch` when neither `--spec` nor `--scheme`
+/// is given (the paper's OPH operating point).
+const SKETCH_DEFAULT_SPEC: &str = "oph(k=200,layout=mod,densify=paper,hash=mixed_tab,seed=42)";
+
 fn run_sketch(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
+    use mixtab::coordinator::config::DEFAULT_SCHEME;
     use mixtab::sketch::{DynSketcher as _, SketchSpec};
     if sub.help_requested() {
         println!("{}", cli().help_text());
         return Ok(());
     }
-    let spec = SketchSpec::parse(sub.get("spec").unwrap_or_default())?;
+    let spec = match (sub.get("spec"), sub.get("scheme")) {
+        (Some(_), Some(_)) => mixtab::bail!("--spec and --scheme are mutually exclusive"),
+        (Some(text), None) => {
+            // A config alongside an explicit spec would be silently inert.
+            mixtab::ensure!(
+                sub.get("config").is_none(),
+                "--config has no effect with --spec; use --scheme to select from a config"
+            );
+            SketchSpec::parse(text)?
+        }
+        (None, Some(name)) => {
+            let cfg = match sub.get("config") {
+                Some(path) => CoordinatorConfig::load(path)?,
+                None => CoordinatorConfig::default(),
+            };
+            if name == DEFAULT_SCHEME {
+                cfg.sketch_spec()
+            } else {
+                match cfg.schemes.iter().find(|s| s.name == name) {
+                    Some(s) => s.spec,
+                    None => mixtab::bail!(
+                        "unknown scheme '{name}' (configured: {})",
+                        std::iter::once(DEFAULT_SCHEME)
+                            .chain(cfg.schemes.iter().map(|s| s.name.as_str()))
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    ),
+                }
+            }
+        }
+        // With --config alone, sketch with that config's default spec
+        // (what the coordinator's `sketch` op would serve).
+        (None, None) => match sub.get("config") {
+            Some(path) => CoordinatorConfig::load(path)?.sketch_spec(),
+            None => SketchSpec::parse(SKETCH_DEFAULT_SPEC)?,
+        },
+    };
     let set: Vec<u32> = match (sub.get("set"), sub.get("text")) {
         (Some(_), Some(_)) => mixtab::bail!("--set and --text are mutually exclusive"),
         (Some(list), None) => list
@@ -273,6 +328,21 @@ fn run_serve(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
         cfg.family.id(),
         cfg.enable_pjrt
     );
+    let mut schemes = vec![format!("default[shards={}]", cfg.lsh_shards)];
+    schemes.extend(
+        cfg.schemes
+            .iter()
+            .map(|s| format!("{}[{} shards={}]", s.name, s.spec.scheme_id(), s.shards)),
+    );
+    println!("schemes: {}", schemes.join(", "));
+    if cfg.rate_limit_rps > 0.0 || cfg.conn_request_budget > 0 {
+        println!(
+            "limits: rate={}/s burst={} budget={}",
+            cfg.rate_limit_rps,
+            cfg.effective_burst(),
+            cfg.conn_request_budget
+        );
+    }
     let listen = cfg.listen.clone();
     let coordinator = Arc::new(Coordinator::new(cfg));
     println!("pjrt path live: {}", coordinator.pjrt_enabled());

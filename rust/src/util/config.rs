@@ -21,6 +21,11 @@
 //! Supported grammar: `[section]` headers, `key = value` with string
 //! (`"..."`), integer, float, boolean values, `#` comments, blank lines.
 //! Arrays of scalars (`[1, 2, 3]`) are supported for sweep definitions.
+//!
+//! `[[name]]` headers open **array-of-tables** entries (the multi-scheme
+//! serving config uses `[[schemes]]`): each occurrence appends a fresh
+//! table under `name`, and subsequent `key = value` lines populate that
+//! table until the next header. Retrieve them with [`Config::tables`].
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -84,25 +89,55 @@ impl fmt::Display for ConfigError {
 }
 impl std::error::Error for ConfigError {}
 
-/// Parsed configuration: `section.key -> value`. Keys before any section
-/// header land in the `""` (root) section.
+/// One entry of an array-of-tables (`[[name]]`) block.
+pub type Table = BTreeMap<String, Value>;
+
+/// Where subsequent `key = value` lines land while parsing.
+enum Target {
+    /// A plain `[section]` (or the root `""` section).
+    Section(String),
+    /// The most recent `[[name]]` entry: `(name, index)`.
+    TableEntry(String, usize),
+}
+
+/// Parsed configuration: `section.key -> value`, plus array-of-tables
+/// blocks (`[[name]]` → an ordered list of [`Table`]s). Keys before any
+/// section header land in the `""` (root) section.
 #[derive(Debug, Clone, Default)]
 pub struct Config {
     sections: BTreeMap<String, BTreeMap<String, Value>>,
+    tables: BTreeMap<String, Vec<Table>>,
 }
 
 impl Config {
     /// Parse from text.
     pub fn parse(text: &str) -> Result<Config, ConfigError> {
         let mut cfg = Config::default();
-        let mut section = String::new();
+        let mut target = Target::Section(String::new());
         for (lineno, raw) in text.lines().enumerate() {
             let line = strip_comment(raw).trim();
             if line.is_empty() {
                 continue;
             }
             let lno = lineno + 1;
-            if let Some(inner) = line.strip_prefix('[') {
+            if let Some(inner) = line.strip_prefix("[[") {
+                let name = inner
+                    .strip_suffix("]]")
+                    .ok_or_else(|| ConfigError {
+                        msg: "unterminated array-of-tables header".into(),
+                        line: lno,
+                    })?
+                    .trim();
+                if name.is_empty() {
+                    return Err(ConfigError {
+                        msg: "empty array-of-tables name".into(),
+                        line: lno,
+                    });
+                }
+                let entries = cfg.tables.entry(name.to_string()).or_default();
+                entries.push(Table::new());
+                target = Target::TableEntry(name.to_string(), entries.len() - 1);
+            } else if let Some(inner) = line.strip_prefix('[') {
                 let name = inner
                     .strip_suffix(']')
                     .ok_or_else(|| ConfigError {
@@ -116,8 +151,8 @@ impl Config {
                         line: lno,
                     });
                 }
-                section = name.to_string();
-                cfg.sections.entry(section.clone()).or_default();
+                cfg.sections.entry(name.to_string()).or_default();
+                target = Target::Section(name.to_string());
             } else {
                 let (k, v) = line.split_once('=').ok_or_else(|| ConfigError {
                     msg: format!("expected 'key = value', got '{line}'"),
@@ -131,10 +166,18 @@ impl Config {
                     });
                 }
                 let value = parse_value(v.trim(), lno)?;
-                cfg.sections
-                    .entry(section.clone())
-                    .or_default()
-                    .insert(key.to_string(), value);
+                match &target {
+                    Target::Section(section) => {
+                        cfg.sections
+                            .entry(section.clone())
+                            .or_default()
+                            .insert(key.to_string(), value);
+                    }
+                    Target::TableEntry(name, idx) => {
+                        cfg.tables.get_mut(name).expect("entry created at header")[*idx]
+                            .insert(key.to_string(), value);
+                    }
+                }
             }
         }
         Ok(cfg)
@@ -180,6 +223,12 @@ impl Config {
     /// Bool lookup with default.
     pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
         self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Array-of-tables entries for `name`, in file order. Empty when the
+    /// file has no `[[name]]` blocks.
+    pub fn tables(&self, name: &str) -> &[Table] {
+        self.tables.get(name).map(Vec::as_slice).unwrap_or(&[])
     }
 
     /// Section names present.
@@ -303,5 +352,34 @@ dims = [64, 128, 256]
     fn hash_inside_string_not_comment() {
         let c = Config::parse("k = \"a#b\"\n").unwrap();
         assert_eq!(c.str_or("", "k", "?"), "a#b");
+    }
+
+    #[test]
+    fn array_of_tables_entries_in_order() {
+        let c = Config::parse(
+            "[service]\nworkers = 2\n\n[[schemes]]\nname = \"fast\"\nspec = \"oph(k=64)\"\n\n[[schemes]]\nname = \"dense\"\nshards = 4\n\n[lsh]\nk = 8\n",
+        )
+        .unwrap();
+        let tables = c.tables("schemes");
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].get("name").and_then(Value::as_str), Some("fast"));
+        assert_eq!(
+            tables[0].get("spec").and_then(Value::as_str),
+            Some("oph(k=64)")
+        );
+        assert_eq!(tables[1].get("name").and_then(Value::as_str), Some("dense"));
+        assert_eq!(tables[1].get("shards").and_then(Value::as_i64), Some(4));
+        // Plain sections before/after are unaffected.
+        assert_eq!(c.i64_or("service", "workers", 0), 2);
+        assert_eq!(c.i64_or("lsh", "k", 0), 8);
+        // Absent name: empty slice, not an error.
+        assert!(c.tables("nope").is_empty());
+    }
+
+    #[test]
+    fn array_of_tables_rejects_malformed_headers() {
+        assert!(Config::parse("[[schemes]\nname = \"x\"\n").is_err());
+        assert!(Config::parse("[[]]\n").is_err());
+        assert!(Config::parse("[[schemes\n").is_err());
     }
 }

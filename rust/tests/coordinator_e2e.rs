@@ -1,12 +1,15 @@
 //! Coordinator end-to-end: native and PJRT paths, TCP round-trips,
-//! concurrent load, backpressure.
+//! concurrent load, backpressure, multi-scheme serving, per-connection
+//! throttling, and spec-cache behaviour under concurrency.
 
-use mixtab::coordinator::config::CoordinatorConfig;
+use mixtab::coordinator::config::{CoordinatorConfig, SchemeConfig};
 use mixtab::coordinator::request::{ExecPath, Request, Response};
 use mixtab::coordinator::server::{Client, Server};
 use mixtab::coordinator::Coordinator;
 use mixtab::data::mnist_like;
+use mixtab::hash::HashFamily;
 use mixtab::sketch::estimators::jaccard_exact;
+use mixtab::sketch::SketchSpec;
 use std::sync::Arc;
 
 fn artifacts_present() -> bool {
@@ -35,6 +38,7 @@ fn tcp_flow_native() {
             .call(&Request::LshInsert {
                 id: i as u32,
                 set: s.clone(),
+                scheme: None,
             })
             .unwrap();
         assert!(matches!(r, Response::Inserted { .. }));
@@ -43,6 +47,7 @@ fn tcp_flow_native() {
     let r = c
         .call(&Request::LshQuery {
             set: sets[0].clone(),
+            scheme: None,
         })
         .unwrap();
     let Response::Candidates { ids } = r else { panic!() };
@@ -188,6 +193,326 @@ fn pjrt_oph_batch_matches_native() {
         assert_eq!(sk.bins, bins, "pjrt/native sketch divergence");
         assert_eq!(sk.empty_bins(), 0);
     }
+}
+
+/// Two named schemes served concurrently from one coordinator over TCP:
+/// per-scheme inserts/queries are isolated, each scheme's index is
+/// sharded, unknown names error cleanly, and the legacy `oph` op stays
+/// byte-compatible with the pre-scheme coordinator.
+#[test]
+fn multi_scheme_roundtrips_over_tcp() {
+    let cfg = CoordinatorConfig {
+        enable_pjrt: false,
+        fh_dim: 32,
+        oph_k: 60,
+        lsh_k: 4,
+        lsh_l: 6,
+        lsh_shards: 2,
+        schemes: vec![
+            SchemeConfig {
+                name: "alpha".into(),
+                spec: SketchSpec::oph(HashFamily::MixedTab, 5, 48),
+                shards: 3,
+            },
+            SchemeConfig {
+                name: "beta".into(),
+                spec: SketchSpec::oph(HashFamily::Murmur3, 11, 32),
+                shards: 2,
+            },
+            SchemeConfig {
+                name: "dense".into(),
+                spec: SketchSpec::minhash(HashFamily::MixedTab, 9, 16),
+                shards: 1,
+            },
+        ],
+        ..Default::default()
+    };
+    let oph_spec = cfg.oph_spec();
+    let coordinator = Arc::new(Coordinator::new(cfg));
+    let server = Server::start(coordinator, "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+
+    // Drive the two OPH schemes concurrently from separate connections.
+    let handles: Vec<_> = ["alpha", "beta"]
+        .into_iter()
+        .map(|scheme| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let base = if scheme == "alpha" { 0u32 } else { 50_000 };
+                let sets: Vec<Vec<u32>> = (0..20u32)
+                    .map(|i| (base + i * 40..base + i * 40 + 80).collect())
+                    .collect();
+                for (i, s) in sets.iter().enumerate() {
+                    let r = c
+                        .call(&Request::LshInsert {
+                            id: i as u32,
+                            set: s.clone(),
+                            scheme: Some(scheme.into()),
+                        })
+                        .unwrap();
+                    assert!(matches!(r, Response::Inserted { .. }), "{scheme}");
+                }
+                // Every set retrieves itself within its own scheme.
+                for (i, s) in sets.iter().enumerate() {
+                    let Response::Candidates { ids } = c
+                        .call(&Request::LshQuery {
+                            set: s.clone(),
+                            scheme: Some(scheme.into()),
+                        })
+                        .unwrap()
+                    else {
+                        panic!("{scheme}")
+                    };
+                    assert!(ids.contains(&(i as u32)), "{scheme} set {i}");
+                }
+                sets
+            })
+        })
+        .collect();
+    let mut per_scheme_sets = Vec::new();
+    for h in handles {
+        per_scheme_sets.push(h.join().unwrap());
+    }
+
+    let mut c = Client::connect(addr).unwrap();
+    // Isolation: alpha's corpus is invisible to beta and to the default.
+    for (scheme, foreign) in [("beta", &per_scheme_sets[0]), ("alpha", &per_scheme_sets[1])] {
+        let Response::Candidates { ids } = c
+            .call(&Request::LshQuery {
+                set: foreign[0].clone(),
+                scheme: Some(scheme.into()),
+            })
+            .unwrap()
+        else {
+            panic!()
+        };
+        assert!(ids.is_empty(), "{scheme} saw a foreign scheme's insert");
+    }
+    let Response::Candidates { ids } = c
+        .call(&Request::LshQuery {
+            set: per_scheme_sets[0][0].clone(),
+            scheme: None,
+        })
+        .unwrap()
+    else {
+        panic!()
+    };
+    assert!(ids.is_empty(), "default scheme saw a named scheme's insert");
+
+    // Scheme-selected sketching, including the index-less minhash scheme.
+    let Response::SketchValue { value } = c
+        .call(&Request::Sketch {
+            set: (0..100).collect(),
+            spec: None,
+            scheme: Some("dense".into()),
+        })
+        .unwrap()
+    else {
+        panic!()
+    };
+    assert_eq!((value.scheme_id(), value.len()), ("minhash", 16));
+    let Response::Error { message } = c
+        .call(&Request::LshInsert {
+            id: 1,
+            set: vec![1, 2, 3],
+            scheme: Some("dense".into()),
+        })
+        .unwrap()
+    else {
+        panic!("index-less scheme must reject inserts")
+    };
+    assert!(message.contains("no LSH index"), "{message}");
+
+    // Unknown scheme names are clean wire errors.
+    for req in [
+        Request::Sketch {
+            set: vec![1],
+            spec: None,
+            scheme: Some("nope".into()),
+        },
+        Request::LshInsert {
+            id: 1,
+            set: vec![1],
+            scheme: Some("nope".into()),
+        },
+        Request::LshQuery {
+            set: vec![1],
+            scheme: Some("nope".into()),
+        },
+    ] {
+        let Response::Error { message } = c.call(&req).unwrap() else {
+            panic!("expected unknown-scheme error")
+        };
+        assert!(message.contains("unknown scheme"), "{message}");
+    }
+
+    // Legacy `oph` op: still the `sketch` wire shape, bins bit-identical
+    // to the pre-scheme coordinator's OPH sketcher.
+    let set: Vec<u32> = (0..300).collect();
+    let Response::Sketch { bins } = c
+        .call(&Request::OphSketch { set: set.clone() })
+        .unwrap()
+    else {
+        panic!()
+    };
+    let expected = oph_spec.build_oph().unwrap().sketch(&set);
+    assert_eq!(bins, expected.bins, "legacy oph op diverged");
+
+    // Per-scheme + per-shard counters surfaced through `stats`.
+    let Response::Stats { json } = c.call(&Request::Stats).unwrap() else {
+        panic!()
+    };
+    let schemes = json.get("schemes").unwrap();
+    for (name, shards) in [("default", 2), ("alpha", 3), ("beta", 2), ("dense", 0)] {
+        let block = schemes
+            .get(name)
+            .unwrap_or_else(|| panic!("scheme '{name}' missing from stats"));
+        assert_eq!(
+            block.get("shards").unwrap().as_arr().unwrap().len(),
+            shards,
+            "{name}"
+        );
+    }
+    let alpha = schemes.get("alpha").unwrap();
+    assert_eq!(alpha.get("inserts").unwrap().as_i64(), Some(20));
+    let alpha_shard_inserts: i64 = alpha
+        .get("shards")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.get("inserts").unwrap().as_i64().unwrap())
+        .sum();
+    assert_eq!(alpha_shard_inserts, 20, "per-shard inserts must sum to total");
+    server.stop();
+}
+
+/// An over-budget connection is throttled while a second connection on
+/// the same server is unaffected — throttling state is per-connection.
+#[test]
+fn rate_limit_throttles_per_connection() {
+    // Token bucket: burst 2, negligible refill over the test's lifetime.
+    let coordinator = Arc::new(Coordinator::new(CoordinatorConfig {
+        enable_pjrt: false,
+        fh_dim: 16,
+        oph_k: 20,
+        rate_limit_rps: 0.001,
+        rate_limit_burst: 2,
+        ..Default::default()
+    }));
+    let server = Server::start(Arc::clone(&coordinator), "127.0.0.1:0").unwrap();
+    let mut hog = Client::connect(server.addr()).unwrap();
+    let mut ok = 0;
+    let mut throttled = 0;
+    for _ in 0..6 {
+        match hog.call(&Request::Stats).unwrap() {
+            Response::Stats { .. } => ok += 1,
+            Response::Error { message } => {
+                assert!(message.contains("rate limited"), "{message}");
+                throttled += 1;
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+    assert_eq!(ok, 2, "exactly the burst should be admitted");
+    assert_eq!(throttled, 4);
+    // A fresh connection has its own full bucket.
+    let mut second = Client::connect(server.addr()).unwrap();
+    let r = second.call(&Request::Stats).unwrap();
+    assert!(
+        matches!(r, Response::Stats { .. }),
+        "second connection must be unaffected"
+    );
+    // Throttled requests are counted.
+    let throttled_metric = coordinator
+        .metrics
+        .throttled
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(throttled_metric, 4);
+    server.stop();
+}
+
+/// A hard per-connection request budget: the over-budget connection gets
+/// one final error and is closed; a new connection starts a fresh budget.
+#[test]
+fn request_budget_closes_connection() {
+    let coordinator = Arc::new(Coordinator::new(CoordinatorConfig {
+        enable_pjrt: false,
+        fh_dim: 16,
+        oph_k: 20,
+        conn_request_budget: 3,
+        ..Default::default()
+    }));
+    let server = Server::start(coordinator, "127.0.0.1:0").unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    for _ in 0..3 {
+        assert!(matches!(
+            c.call(&Request::Stats).unwrap(),
+            Response::Stats { .. }
+        ));
+    }
+    let Response::Error { message } = c.call(&Request::Stats).unwrap() else {
+        panic!("expected budget-exhausted error")
+    };
+    assert!(message.contains("budget exhausted"), "{message}");
+    // The server closed the connection: the next call fails.
+    assert!(c.call(&Request::Stats).is_err());
+    // A fresh connection gets a fresh budget.
+    let mut fresh = Client::connect(server.addr()).unwrap();
+    assert!(matches!(
+        fresh.call(&Request::Stats).unwrap(),
+        Response::Stats { .. }
+    ));
+    server.stop();
+}
+
+/// Hammer the per-request spec-sketcher cache from many threads with a
+/// mix of repeated and distinct specs: no panics, no poisoned locks, and
+/// the cache population stays within its bound.
+#[test]
+fn spec_cache_bounded_under_concurrency() {
+    let c = Arc::new(Coordinator::new(CoordinatorConfig {
+        enable_pjrt: false,
+        fh_dim: 16,
+        oph_k: 20,
+        ..Default::default()
+    }));
+    let threads: Vec<_> = (0..8)
+        .map(|t| {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || {
+                for i in 0..30u32 {
+                    // 8 threads × 30 iterations over ~20 distinct specs —
+                    // far beyond the cache cap, with heavy key overlap.
+                    let spec = format!("minhash(k=4,seed={})", (t * 30 + i) % 20);
+                    let resp = c.handle(Request::Sketch {
+                        set: vec![1, 2, 3, 4, 5],
+                        spec: Some(spec),
+                        scheme: None,
+                    });
+                    assert!(
+                        matches!(resp, Response::SketchValue { .. }),
+                        "sketch failed on thread {t}"
+                    );
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert!(
+        c.spec_cache_len() <= Coordinator::SPEC_CACHE_CAP,
+        "cache grew past its cap: {}",
+        c.spec_cache_len()
+    );
+    // The cache (and its locks) remain usable after the storm.
+    let resp = c.handle(Request::Sketch {
+        set: vec![9, 9, 9],
+        spec: Some("minhash(k=4,seed=0)".into()),
+        scheme: None,
+    });
+    assert!(matches!(resp, Response::SketchValue { .. }));
 }
 
 /// Oversized vectors (beyond the compiled nnz bound) fall back to native.

@@ -1,0 +1,213 @@
+//! Property tests for the sharded serving layer (`lsh::sharded`):
+//!
+//! * shard routing is deterministic across independently-built indices,
+//!   seeds permitting (same spec ⇒ same routes; different seed ⇒ routes
+//!   may and do differ),
+//! * a `ShardedIndex` with N = 1 is bit-identical to a bare `LshIndex` —
+//!   query results and persisted snapshot bytes,
+//! * fan-out query results are independent of the shard count.
+
+use mixtab::hash::HashFamily;
+use mixtab::lsh::{persist, LshIndex, LshParams, ShardedIndex};
+use mixtab::sketch::{BinLayout, DensifyMode, OphParams, SketchSpec};
+use mixtab::util::prop::{Gen, Runner};
+use mixtab::util::rng::Xoshiro256;
+
+fn oph_spec(family: HashFamily, seed: u64) -> SketchSpec {
+    // Bin count is overridden by the index's (K, L).
+    SketchSpec::oph(family, seed, 1)
+}
+
+/// Deterministic pseudo-random corpus of sets.
+fn corpus(n: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = 40 + (rng.next_u32() % 120) as usize;
+            (0..len).map(|_| rng.next_u32() % 1_000_000).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_routing_deterministic_across_runs() {
+    for family in [HashFamily::MixedTab, HashFamily::Murmur3] {
+        for seed in [0u64, 7, 0xDEAD_BEEF] {
+            let params = LshParams::new(4, 4);
+            let a = ShardedIndex::new(5, params, &oph_spec(family, seed));
+            let b = ShardedIndex::new(5, params, &oph_spec(family, seed));
+            Runner::new(256).run(
+                &format!("route({}, seed={seed}) stable", family.id()),
+                Gen::u32_any(),
+                |&id| a.shard_of(id) == b.shard_of(id),
+            );
+        }
+    }
+}
+
+#[test]
+fn routing_depends_on_seed_not_process_state() {
+    // Different seeds give different routings (whp over 512 ids) — the
+    // route is a function of the spec, not of global state.
+    let params = LshParams::new(4, 4);
+    let a = ShardedIndex::new(8, params, &oph_spec(HashFamily::MixedTab, 1));
+    let b = ShardedIndex::new(8, params, &oph_spec(HashFamily::MixedTab, 2));
+    let differing = (0..512u32).filter(|&id| a.shard_of(id) != b.shard_of(id)).count();
+    assert!(differing > 0, "seed does not influence routing");
+}
+
+#[test]
+fn single_shard_matches_bare_index_results() {
+    let params = LshParams::new(6, 8);
+    let spec = oph_spec(HashFamily::MixedTab, 42);
+    let mut bare = LshIndex::new(params, &spec);
+    let sharded = ShardedIndex::new(1, params, &spec);
+    let sets = corpus(60, 9);
+    for (i, s) in sets.iter().enumerate() {
+        bare.insert(i as u32, s);
+        sharded.insert(i as u32, s);
+    }
+    assert_eq!(sharded.len(), bare.len());
+    // Bit-identical sketches and query results on stored and novel sets.
+    let probes = corpus(30, 10);
+    for s in sets.iter().chain(&probes) {
+        assert_eq!(sharded.sketch(s).bins, bare.sketch(s).bins);
+        assert_eq!(sharded.query(s), bare.query(s));
+    }
+}
+
+#[test]
+fn single_shard_snapshot_bytes_identical_to_bare_index() {
+    let dir = std::env::temp_dir().join("mixtab_sharded_props_n1");
+    let _ = std::fs::remove_dir_all(&dir);
+    let params = LshParams::new(3, 5);
+    let spec = oph_spec(HashFamily::Murmur3, 17);
+    let mut bare = LshIndex::new(params, &spec);
+    let sharded = ShardedIndex::new(1, params, &spec);
+    for (i, s) in corpus(40, 21).iter().enumerate() {
+        bare.insert(i as u32, s);
+        sharded.insert(i as u32, s);
+    }
+    let bare_path = dir.join("bare.mxls");
+    let sharded_path = dir.join("sharded.mxls");
+    persist::save(&bare, spec.family, spec.seed, &bare_path).unwrap();
+    sharded.save(&sharded_path).unwrap();
+    let bare_bytes = std::fs::read(&bare_path).unwrap();
+    let sharded_bytes = std::fs::read(&sharded_path).unwrap();
+    assert!(!bare_bytes.is_empty());
+    assert_eq!(
+        bare_bytes, sharded_bytes,
+        "N=1 sharded snapshot must be byte-identical to the bare index's"
+    );
+    // And it reloads through both loaders.
+    let (loaded_bare, fam, seed) = persist::load(&sharded_path).unwrap();
+    assert_eq!((fam, seed), (spec.family, spec.seed));
+    assert_eq!(loaded_bare.len(), bare.len());
+    let loaded_sharded = ShardedIndex::load(&bare_path).unwrap();
+    assert_eq!(loaded_sharded.n_shards(), 1);
+    assert_eq!(loaded_sharded.len(), bare.len());
+    let probes = corpus(1, 33);
+    assert_eq!(loaded_sharded.query(&probes[0]), bare.query(&probes[0]));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn query_results_independent_of_shard_count() {
+    let params = LshParams::new(5, 6);
+    let spec = oph_spec(HashFamily::MixedTab, 3);
+    let sets = corpus(80, 5);
+    let probes = corpus(40, 6);
+    let reference = {
+        let idx = ShardedIndex::new(1, params, &spec);
+        for (i, s) in sets.iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        probes.iter().map(|p| idx.query(p)).collect::<Vec<_>>()
+    };
+    for n in [2usize, 3, 7, 16] {
+        let idx = ShardedIndex::new(n, params, &spec);
+        for (i, s) in sets.iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        assert_eq!(idx.len(), sets.len());
+        for (p, expect) in probes.iter().zip(&reference) {
+            assert_eq!(
+                &idx.query(p),
+                expect,
+                "N={n} fan-out diverged from the unsharded result"
+            );
+        }
+        // Self-retrieval holds at every shard count.
+        for (i, s) in sets.iter().enumerate() {
+            assert!(idx.query(s).contains(&(i as u32)));
+        }
+    }
+}
+
+#[test]
+fn multi_shard_roundtrip_preserves_routing_and_results() {
+    // Persist/load of an N>1 index preserves every query and the routing
+    // (reloaded indices keep inserting into the same shards).
+    let dir = std::env::temp_dir().join("mixtab_sharded_props_rt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let params = LshParams::new(4, 6);
+    let spec = oph_spec(HashFamily::MixedTab, 99);
+    let idx = ShardedIndex::new(4, params, &spec);
+    let sets = corpus(50, 51);
+    for (i, s) in sets.iter().enumerate() {
+        idx.insert(i as u32, s);
+    }
+    let base = dir.join("snap");
+    idx.save(&base).unwrap();
+    let loaded = ShardedIndex::load(&base).unwrap();
+    assert_eq!(loaded.n_shards(), 4);
+    assert_eq!(loaded.per_shard_len(), idx.per_shard_len());
+    for s in &sets {
+        assert_eq!(loaded.query(s), idx.query(s));
+    }
+    for id in 0..200u32 {
+        assert_eq!(loaded.shard_of(id), idx.shard_of(id));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn roundtrip_preserves_non_default_oph_params_at_any_shard_count() {
+    // The manifest stores the full spec string, so an index built from a
+    // non-default layout/densify reloads with the exact same sketcher —
+    // not a silently-defaulted one. N = 1 takes the manifest format too
+    // in this case (the plain format cannot encode layout/densify).
+    let dir = std::env::temp_dir().join("mixtab_sharded_props_layout");
+    let _ = std::fs::remove_dir_all(&dir);
+    let params = LshParams::new(4, 5);
+    let spec = SketchSpec::oph_with(
+        HashFamily::MixedTab,
+        13,
+        OphParams {
+            k: 1, // overridden by (K, L)
+            layout: BinLayout::Range,
+            densify: DensifyMode::Rotation,
+        },
+    );
+    let sets = corpus(40, 71);
+    for n in [1usize, 3] {
+        let idx = ShardedIndex::new(n, params, &spec);
+        for (i, s) in sets.iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        let base = dir.join(format!("snap_n{n}"));
+        idx.save(&base).unwrap();
+        let loaded = ShardedIndex::load(&base).unwrap();
+        assert_eq!(loaded.n_shards(), n);
+        assert_eq!(loaded.spec(), &spec);
+        for s in &sets {
+            assert_eq!(
+                loaded.sketch(s).bins,
+                idx.sketch(s).bins,
+                "N={n}: sketcher diverged on reload"
+            );
+            assert_eq!(loaded.query(s), idx.query(s), "N={n}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
