@@ -1,5 +1,6 @@
 //! Bench target wrapper: sharded LSH build + fan-out query through
-//! `ShardedIndex` (N = 1 routing overhead vs N = 4 fan-out cost). The
+//! `ShardedIndex` (N = 1 routing overhead vs N = 4 fan-out cost,
+//! sequential and pool-parallel — the `query/shards4par` case). The
 //! workload lives in [`mixtab::benchsuite`] so the `mixtab bench` CLI can
 //! run it in-process and gate the JSON records.
 

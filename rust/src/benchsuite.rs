@@ -314,7 +314,10 @@ pub fn lsh_query(bench: &mut Bench) {
 /// `lsh_query`'s operating point. N = 1 measures the routing layer's
 /// overhead over a bare index (acceptance: negligible — one extra hash per
 /// insert and a no-op merge per query); N = 4 measures the fan-out cost
-/// the multi-scheme coordinator pays for shard-level lock granularity.
+/// the multi-scheme coordinator pays for shard-level lock granularity,
+/// sequentially and (`query/shards4par`) through the shared worker pool
+/// the coordinator attaches when `[service] workers ≥ 2` — the
+/// parallel-vs-sequential contrast of the scoped per-query fan-out.
 pub fn sharded_query(bench: &mut Bench) {
     let (n_db, n_q) = if bench.is_quick() { (400, 40) } else { (4000, 400) };
     let (db_ds, q_ds) = crate::data::mnist_like::default_split(n_db, n_q, 77);
@@ -354,6 +357,37 @@ pub fn sharded_query(bench: &mut Bench) {
             "  retrieved/query = {:.1}, per-shard sizes = {:?}",
             retrieved_total as f64 / queries.len() as f64,
             index.per_shard_len()
+        );
+    }
+
+    // Parallel fan-out: the N=4 index again, with a shared 4-worker pool
+    // attached — per-shard lookups run as scoped pool tasks. Results are
+    // bit-identical to the sequential path (asserted below; the property
+    // suite proves it exhaustively), so this case isolates the fan-out
+    // mechanics: scoped-spawn overhead vs parallel shard lookups.
+    let pool = Arc::new(crate::util::threadpool::ThreadPool::new(4));
+    let mut index = ShardedIndex::new(4, LshParams::new(10, 10), &spec);
+    index.set_pool(Some(pool));
+    for (i, s) in db.iter().enumerate() {
+        index.insert(i as u32, s);
+    }
+    let mut rows = Vec::new();
+    let mut retrieved_total = 0usize;
+    let m = bench.measure("query/shards4par", queries.len() as u64, || {
+        retrieved_total = 0;
+        for q in &queries {
+            retrieved_total += black_box(index.query(q)).len();
+        }
+        retrieved_total
+    });
+    bench.record("sharded_query", &m);
+    rows.push(m);
+    print_table("sharded LSH N=4 parallel fan-out (per item)", &rows);
+    for q in queries.iter().take(8) {
+        assert_eq!(
+            index.query_fanout(q),
+            index.query_fanout_sequential(q),
+            "parallel fan-out diverged from sequential"
         );
     }
 }

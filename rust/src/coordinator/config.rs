@@ -6,7 +6,7 @@
 //! ```toml
 //! [service]
 //! listen = "127.0.0.1:7878"
-//! workers = 2
+//! workers = 2          # shard fan-out pool width (< 2 = sequential fan-out)
 //!
 //! [fh]
 //! dim = 128
@@ -133,7 +133,10 @@ impl SchemeConfig {
 pub struct CoordinatorConfig {
     /// TCP listen address for the server front-end.
     pub listen: String,
-    /// Sketch worker threads.
+    /// Worker threads for the shared shard fan-out pool (queries visit a
+    /// scheme's shards in parallel). Below 2 — or with no multi-shard
+    /// scheme configured — fan-out stays sequential; see
+    /// [`Self::fanout_workers`].
     pub workers: usize,
     /// FH output dimension d'.
     pub fh_dim: usize,
@@ -333,6 +336,21 @@ impl CoordinatorConfig {
         )
     }
 
+    /// Width of the shared shard fan-out pool, or 0 when fan-out is
+    /// sequential: parallel fan-out needs at least 2 workers *and* at
+    /// least one multi-shard scheme to help (a pool no scheme can use
+    /// would only cost idle threads — note an index later swapped in by
+    /// `load_index` inherits this decision, so a single-shard config
+    /// serves a loaded multi-shard snapshot sequentially).
+    pub fn fanout_workers(&self) -> usize {
+        let multi_shard = self.lsh_shards > 1 || self.schemes.iter().any(|s| s.shards > 1);
+        if self.workers >= 2 && multi_shard {
+            self.workers
+        } else {
+            0
+        }
+    }
+
     /// Effective token-bucket capacity when rate limiting is on: the
     /// configured burst, or `max(1, ⌈rate⌉)` when unset.
     pub fn effective_burst(&self) -> u32 {
@@ -436,6 +454,36 @@ mod tests {
             ..CoordinatorConfig::default()
         };
         assert_eq!(c.effective_burst(), 3);
+    }
+
+    #[test]
+    fn fanout_workers_derivation() {
+        // Default: 2 workers but only single-shard schemes → sequential.
+        assert_eq!(CoordinatorConfig::default().fanout_workers(), 0);
+        // Multi-shard default scheme turns the pool on.
+        let c = CoordinatorConfig {
+            lsh_shards: 4,
+            workers: 3,
+            ..CoordinatorConfig::default()
+        };
+        assert_eq!(c.fanout_workers(), 3);
+        // A multi-shard named scheme is enough.
+        let c = CoordinatorConfig {
+            schemes: vec![SchemeConfig {
+                name: "fast".into(),
+                spec: SketchSpec::oph(HashFamily::MixedTab, 1, 8),
+                shards: 2,
+            }],
+            ..CoordinatorConfig::default()
+        };
+        assert_eq!(c.fanout_workers(), 2);
+        // Fewer than 2 workers always means sequential.
+        let c = CoordinatorConfig {
+            lsh_shards: 4,
+            workers: 1,
+            ..CoordinatorConfig::default()
+        };
+        assert_eq!(c.fanout_workers(), 0);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 use crate::stats::Summary;
 use crate::util::json::Json;
+use crate::util::sync::lock_unpoisoned;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -20,8 +21,11 @@ pub struct SchemeCounters {
     pub inserts: AtomicU64,
     /// `query` requests fanned out over this scheme's index.
     pub queries: AtomicU64,
-    /// Inserts landing in each shard (length = shard count; empty for
-    /// index-less schemes).
+    /// `estimate` requests served from this scheme's sketch store.
+    pub estimates: AtomicU64,
+    /// Inserts landing in each shard (length = the shard count registered
+    /// at startup; empty for index-less schemes; a `load_index` may serve
+    /// more shards than are counted here).
     pub shard_inserts: Vec<AtomicU64>,
     /// Raw candidates contributed by each shard across queries (before
     /// the fan-out merge dedup).
@@ -35,6 +39,7 @@ impl SchemeCounters {
             sketches: AtomicU64::new(0),
             inserts: AtomicU64::new(0),
             queries: AtomicU64::new(0),
+            estimates: AtomicU64::new(0),
             shard_inserts: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
             shard_candidates: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
         }
@@ -56,6 +61,7 @@ impl SchemeCounters {
             .set("sketches", self.sketches.load(Ordering::Relaxed) as usize)
             .set("inserts", self.inserts.load(Ordering::Relaxed) as usize)
             .set("queries", self.queries.load(Ordering::Relaxed) as usize)
+            .set("estimates", self.estimates.load(Ordering::Relaxed) as usize)
             .set("shards", Json::Arr(shards))
     }
 }
@@ -75,6 +81,9 @@ pub struct Metrics {
     pub lsh_inserts: AtomicU64,
     pub lsh_queries: AtomicU64,
     pub estimates: AtomicU64,
+    /// Successful `save_index` / `load_index` snapshot operations.
+    pub index_saves: AtomicU64,
+    pub index_loads: AtomicU64,
     pub errors: AtomicU64,
     /// Requests rejected by the server's per-connection rate limiter /
     /// request budget.
@@ -107,14 +116,14 @@ impl Metrics {
     /// held by the scheme; the block also appears in [`Self::snapshot`].
     pub fn register_scheme(&self, name: &str, n_shards: usize) -> Arc<SchemeCounters> {
         let counters = Arc::new(SchemeCounters::new(name, n_shards));
-        self.schemes.lock().unwrap().push(Arc::clone(&counters));
+        lock_unpoisoned(&self.schemes).push(Arc::clone(&counters));
         counters
     }
 
     /// Record an FH request latency.
     pub fn observe_latency(&self, start: Instant) {
         let us = start.elapsed().as_micros() as f64;
-        let mut s = self.lat_us.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.lat_us);
         if s.len() < 100_000 {
             s.add(us);
         }
@@ -131,7 +140,7 @@ impl Metrics {
 
     /// Snapshot as JSON (served by the `stats` op).
     pub fn snapshot(&self) -> Json {
-        let lat = self.lat_us.lock().unwrap();
+        let lat = lock_unpoisoned(&self.lat_us);
         let (p50, p90, p99) = if lat.is_empty() {
             (0.0, 0.0, 0.0)
         } else {
@@ -155,6 +164,8 @@ impl Metrics {
             .set("lsh_inserts", self.lsh_inserts.load(Ordering::Relaxed) as usize)
             .set("lsh_queries", self.lsh_queries.load(Ordering::Relaxed) as usize)
             .set("estimates", self.estimates.load(Ordering::Relaxed) as usize)
+            .set("index_saves", self.index_saves.load(Ordering::Relaxed) as usize)
+            .set("index_loads", self.index_loads.load(Ordering::Relaxed) as usize)
             .set("errors", self.errors.load(Ordering::Relaxed) as usize)
             .set("throttled", self.throttled.load(Ordering::Relaxed) as usize)
             .set("schemes", {
@@ -199,6 +210,7 @@ mod tests {
         let block = m.register_scheme("fast", 2);
         Metrics::inc(&block.sketches);
         Metrics::inc(&block.inserts);
+        Metrics::inc(&block.estimates);
         Metrics::inc(&block.shard_inserts[1]);
         Metrics::add(&block.shard_candidates[0], 7);
         Metrics::inc(&m.throttled);
@@ -207,6 +219,9 @@ mod tests {
         let fast = s.get("schemes").unwrap().get("fast").unwrap();
         assert_eq!(fast.get("sketches").unwrap().as_i64(), Some(1));
         assert_eq!(fast.get("inserts").unwrap().as_i64(), Some(1));
+        assert_eq!(fast.get("estimates").unwrap().as_i64(), Some(1));
+        assert_eq!(s.get("index_saves").unwrap().as_i64(), Some(0));
+        assert_eq!(s.get("index_loads").unwrap().as_i64(), Some(0));
         let shards = fast.get("shards").unwrap().as_arr().unwrap();
         assert_eq!(shards.len(), 2);
         assert_eq!(shards[0].get("candidates").unwrap().as_i64(), Some(7));

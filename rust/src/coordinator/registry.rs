@@ -10,13 +10,22 @@
 //!
 //! * an erased [`DynSketcher`] serving its `sketch` requests,
 //! * for OPH specs, a [`ShardedIndex`] (per-scheme sharding — the
-//!   `shards` key) serving `insert`/`query`,
-//! * a set store backing `estimate` on the default scheme,
+//!   `shards` key) serving `insert`/`query`/`save_index`/`load_index`,
+//!   behind an `RwLock` so `load_index` can swap in a reloaded snapshot
+//!   while serving,
+//! * a **sketch store**: the scheme's own sketch of every inserted set,
+//!   computed once at insert time. `estimate` compares these directly —
+//!   no per-request re-sketching, no raw-set retention, and no legacy-
+//!   sketcher mismatch when the scheme's spec is not the derived OPH
+//!   default. Every scheme (not just the default) serves `estimate`.
 //! * a [`SchemeCounters`] block surfaced through the `stats` op.
 //!
 //! Non-OPH schemes (MinHash, SimHash, FH, b-bit) have no LSH index — the
 //! (K, L) bucket construction is defined over OPH bins — so `insert`/
-//! `query` against them is a clean wire error, not a panic.
+//! `query`/`save_index`/`load_index` against them is a clean wire error,
+//! not a panic. All locks on these paths are taken poison-tolerantly
+//! ([`crate::util::sync`]): a wire request must never be able to wedge
+//! the service behind a poisoned mutex.
 
 use crate::coordinator::config::{CoordinatorConfig, DEFAULT_SCHEME};
 use crate::coordinator::metrics::{Metrics, SchemeCounters};
@@ -26,21 +35,33 @@ use crate::sketch::sketcher::{DynSketcher, SketchValue};
 use crate::sketch::spec::{SketchScheme, SketchSpec};
 use crate::sketch::Scratch;
 use crate::util::error::{bail, Result};
+use crate::util::sync::{lock_unpoisoned, read_unpoisoned, write_unpoisoned};
+use crate::util::threadpool::ThreadPool;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
-/// One named scheme: sketcher + optional sharded index + set store.
+/// One named scheme: sketcher + optional sharded index + sketch store.
 pub struct Scheme {
     name: String,
     spec: SketchSpec,
     sketcher: Box<dyn DynSketcher>,
-    /// OPH-backed sharded LSH index; `None` for non-OPH specs.
-    index: Option<ShardedIndex>,
-    /// Inserted sets, kept for the `estimate` op. Only the default scheme
-    /// carries one — `estimate` serves the default scheme only, and
-    /// retaining every named scheme's raw corpus would double its memory
-    /// for an op that never reads it.
-    store: Option<Mutex<HashMap<u32, Vec<u32>>>>,
+    /// OPH-backed sharded LSH index; `None` for non-OPH specs. `RwLock`
+    /// so [`Self::load_index`] can replace it at runtime; `insert`/
+    /// `query` take the read lock (the shard mutexes provide write
+    /// granularity, so readers of this lock still insert concurrently).
+    index: RwLock<Option<ShardedIndex>>,
+    /// The (spec, params) the index was configured from — `load_index`
+    /// validates snapshot provenance against it.
+    index_spec: Option<(SketchSpec, LshParams)>,
+    /// Sketches of inserted sets, keyed by id, produced by **this
+    /// scheme's own sketcher** at insert time. `estimate` reads these; a
+    /// sketch is k coordinates, far smaller than the raw set it replaced
+    /// in the pre-PR5 default-scheme store. Not part of index snapshots
+    /// (documented on [`Self::load_index`]).
+    sketches: Mutex<HashMap<u32, SketchValue>>,
+    /// Fan-out pool handed to the configured index and to every index
+    /// swapped in by [`Self::load_index`].
+    pool: Option<Arc<ThreadPool>>,
     counters: Arc<SchemeCounters>,
 }
 
@@ -49,19 +70,24 @@ impl Scheme {
         name: &str,
         spec: SketchSpec,
         index_spec: Option<(SketchSpec, LshParams, usize)>,
-        with_store: bool,
+        pool: Option<Arc<ThreadPool>>,
         metrics: &Metrics,
     ) -> Self {
-        let index =
-            index_spec.map(|(spec, params, shards)| ShardedIndex::new(shards, params, &spec));
+        let index = index_spec.map(|(ispec, params, shards)| {
+            let mut idx = ShardedIndex::new(shards, params, &ispec);
+            idx.set_pool(pool.clone());
+            idx
+        });
         let counters =
             metrics.register_scheme(name, index.as_ref().map_or(0, ShardedIndex::n_shards));
         Self {
             name: name.to_string(),
             spec,
             sketcher: spec.build(),
-            index,
-            store: with_store.then(|| Mutex::new(HashMap::new())),
+            index: RwLock::new(index),
+            index_spec: index_spec.map(|(ispec, params, _)| (ispec, params)),
+            sketches: Mutex::new(HashMap::new()),
+            pool,
             counters,
         }
     }
@@ -75,9 +101,24 @@ impl Scheme {
         &self.spec
     }
 
-    /// The scheme's sharded index, when its spec supports one.
-    pub fn index(&self) -> Option<&ShardedIndex> {
-        self.index.as_ref()
+    /// Whether this scheme serves an LSH index (OPH specs only).
+    pub fn has_index(&self) -> bool {
+        read_unpoisoned(&self.index).is_some()
+    }
+
+    /// Shard count of the serving index (0 for index-less schemes). May
+    /// differ from the configured count after [`Self::load_index`].
+    pub fn n_shards(&self) -> usize {
+        read_unpoisoned(&self.index)
+            .as_ref()
+            .map_or(0, ShardedIndex::n_shards)
+    }
+
+    /// Stored sets in the serving index (0 for index-less schemes).
+    pub fn index_len(&self) -> usize {
+        read_unpoisoned(&self.index)
+            .as_ref()
+            .map_or(0, ShardedIndex::len)
     }
 
     /// Sketch a set with this scheme's sketcher.
@@ -86,23 +127,42 @@ impl Scheme {
         self.sketcher.sketch_dyn(set, scratch)
     }
 
-    /// Insert a set into this scheme's index (and, on the default scheme,
-    /// the estimate store). Errors for index-less (non-OPH) schemes.
+    /// Insert a set into this scheme's index and record the scheme's own
+    /// sketch of it for `estimate`. Errors for index-less (non-OPH)
+    /// schemes. Index and sketch store are updated one after the other
+    /// (not atomically together): a concurrent `estimate` racing an
+    /// `insert` may miss the id, exactly as it would have a moment
+    /// earlier.
     pub fn insert(&self, id: u32, set: Vec<u32>) -> Result<()> {
-        let index = self.require_index()?;
-        let shard = index.insert(id, &set);
-        Metrics::inc(&self.counters.inserts);
-        Metrics::inc(&self.counters.shard_inserts[shard]);
-        if let Some(store) = &self.store {
-            store.lock().unwrap().insert(id, set);
+        {
+            let guard = read_unpoisoned(&self.index);
+            let Some(index) = guard.as_ref() else {
+                return self.no_index();
+            };
+            let shard = index.insert(id, &set);
+            Metrics::inc(&self.counters.inserts);
+            // A loaded snapshot may serve more shards than the counter
+            // block registered at startup; out-of-range shards simply go
+            // uncounted per-shard (the scheme totals stay exact).
+            if let Some(counter) = self.counters.shard_inserts.get(shard) {
+                Metrics::inc(counter);
+            }
         }
+        let value = self
+            .sketcher
+            .sketch_dyn(&set, &mut Scratch::with_capacity(set.len()));
+        lock_unpoisoned(&self.sketches).insert(id, value);
         Ok(())
     }
 
-    /// Fan-out query over this scheme's index. Errors for index-less
+    /// Fan-out query over this scheme's index (parallel across shards
+    /// when the coordinator attached a pool). Errors for index-less
     /// (non-OPH) schemes.
     pub fn query(&self, set: &[u32]) -> Result<Vec<u32>> {
-        let index = self.require_index()?;
+        let guard = read_unpoisoned(&self.index);
+        let Some(index) = guard.as_ref() else {
+            return self.no_index();
+        };
         let (ids, per_shard) = index.query_fanout(set);
         Metrics::inc(&self.counters.queries);
         for (counter, n) in self.counters.shard_candidates.iter().zip(per_shard) {
@@ -111,21 +171,92 @@ impl Scheme {
         Ok(ids)
     }
 
-    /// A stored set by id (cloned out so no lock is held while sketching).
-    /// Always `None` on store-less (named) schemes.
-    pub fn stored(&self, id: u32) -> Option<Vec<u32>> {
-        self.store.as_ref()?.lock().unwrap().get(&id).cloned()
+    /// Similarity estimate between two previously inserted ids, from
+    /// their stored sketches — this scheme's own sketcher, compared with
+    /// the scheme-appropriate estimator ([`SketchValue::estimate`]). No
+    /// re-sketching happens on this path.
+    pub fn estimate(&self, a: u32, b: u32) -> Result<f64> {
+        let sketches = lock_unpoisoned(&self.sketches);
+        let (Some(sa), Some(sb)) = (sketches.get(&a), sketches.get(&b)) else {
+            bail!("unknown id(s): {a}, {b}");
+        };
+        let est = sa.estimate(sb)?;
+        Metrics::inc(&self.counters.estimates);
+        Ok(est)
     }
 
-    fn require_index(&self) -> Result<&ShardedIndex> {
-        match &self.index {
-            Some(index) => Ok(index),
-            None => bail!(
-                "scheme '{}' has no LSH index (spec '{}' is not OPH)",
+    /// Number of ids with a stored sketch (tests/diagnostics).
+    pub fn sketch_store_len(&self) -> usize {
+        lock_unpoisoned(&self.sketches).len()
+    }
+
+    /// Snapshot this scheme's index to a server-side path; returns the
+    /// entry count. Errors (never panics) for index-less schemes.
+    pub fn save_index(&self, path: &str) -> Result<usize> {
+        let guard = read_unpoisoned(&self.index);
+        let Some(index) = guard.as_ref() else {
+            return self.no_index();
+        };
+        index.save(path)
+    }
+
+    /// Replace this scheme's index with a snapshot written by
+    /// [`Self::save_index`] / [`ShardedIndex::save`]. The snapshot's
+    /// provenance must match the scheme's configured index spec — hash
+    /// family, seed, layout/densify, and (K, L) — so a reload can never
+    /// silently change the serving sketcher; the shard *count* may
+    /// differ (routing is deterministic per count and snapshots are
+    /// self-consistent). Returns `(entries, shards)`.
+    ///
+    /// The `estimate` sketch store is not part of index snapshots, and a
+    /// successful load **clears** it: the old sketches describe the
+    /// corpus being replaced, and keeping them would let `estimate`
+    /// answer for ids the restored index no longer contains (or now maps
+    /// to different sets). Loaded ids serve `query` immediately and
+    /// `estimate` after re-insertion. (An `insert` racing the swap can
+    /// still slip its sketch in after the clear while its set misses the
+    /// new index — inherent to replace-by-swap; the id simply behaves as
+    /// if inserted just before the load.)
+    pub fn load_index(&self, path: &str) -> Result<(usize, usize)> {
+        let Some((ispec, params)) = self.index_spec else {
+            return self.no_index();
+        };
+        let mut loaded = ShardedIndex::load(path)?;
+        // Normalise both specs to the index's structural bin count before
+        // comparing: configured specs keep their nominal k (the index
+        // overrides it), plain snapshots record k = K·L.
+        let bins = params.sketch_bins();
+        if loaded.params() != params || loaded.spec().with_oph_k(bins) != ispec.with_oph_k(bins) {
+            bail!(
+                "snapshot '{path}' does not match scheme '{}': snapshot has spec '{}' K={} L={}, scheme expects spec '{}' K={} L={}",
                 self.name,
-                self.spec
-            ),
+                loaded.spec(),
+                loaded.params().k,
+                loaded.params().l,
+                ispec,
+                params.k,
+                params.l
+            );
         }
+        loaded.set_pool(self.pool.clone());
+        let (entries, shards) = (loaded.len(), loaded.n_shards());
+        // Clear the stale sketches under the index write lock so no
+        // `estimate` can observe the new index paired with the old
+        // corpus's sketches. (No other path holds the sketch-store lock
+        // while waiting on the index lock, so the nesting cannot
+        // deadlock.)
+        let mut guard = write_unpoisoned(&self.index);
+        lock_unpoisoned(&self.sketches).clear();
+        *guard = Some(loaded);
+        Ok((entries, shards))
+    }
+
+    fn no_index<T>(&self) -> Result<T> {
+        bail!(
+            "scheme '{}' has no LSH index (spec '{}' is not OPH)",
+            self.name,
+            self.spec
+        )
     }
 }
 
@@ -140,20 +271,26 @@ impl SchemeRegistry {
     /// (sketcher from `cfg.sketch_spec()`, index from `cfg.lsh_spec()`
     /// sharded `cfg.lsh_shards` ways — with one shard this is bit-identical
     /// to the pre-registry coordinator) plus every `[[schemes]]` entry.
-    /// Name collisions are rejected at config parse time.
-    pub fn from_config(cfg: &CoordinatorConfig, metrics: &Metrics) -> Self {
+    /// Name collisions are rejected at config parse time. `pool`, when
+    /// given, is shared by every scheme's index for parallel shard
+    /// fan-out.
+    pub fn from_config(
+        cfg: &CoordinatorConfig,
+        metrics: &Metrics,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Self {
         let params = LshParams::new(cfg.lsh_k, cfg.lsh_l);
         let mut schemes = vec![Scheme::new(
             DEFAULT_SCHEME,
             cfg.sketch_spec(),
             Some((cfg.lsh_spec(), params, cfg.lsh_shards)),
-            true,
+            pool.clone(),
             metrics,
         )];
         for sc in &cfg.schemes {
             let index_spec = matches!(sc.spec.scheme, SketchScheme::Oph(_))
                 .then_some((sc.spec, params, sc.shards));
-            schemes.push(Scheme::new(&sc.name, sc.spec, index_spec, false, metrics));
+            schemes.push(Scheme::new(&sc.name, sc.spec, index_spec, pool.clone(), metrics));
         }
         Self { schemes }
     }
@@ -186,6 +323,7 @@ mod tests {
     use super::*;
     use crate::coordinator::config::SchemeConfig;
     use crate::hash::HashFamily;
+    use crate::sketch::estimators::jaccard_exact;
 
     fn registry_cfg() -> CoordinatorConfig {
         CoordinatorConfig {
@@ -212,37 +350,116 @@ mod tests {
     #[test]
     fn registry_serves_default_and_named_schemes() {
         let metrics = Metrics::new();
-        let reg = SchemeRegistry::from_config(&registry_cfg(), &metrics);
+        let reg = SchemeRegistry::from_config(&registry_cfg(), &metrics, None);
         assert_eq!(reg.names(), vec![DEFAULT_SCHEME, "fast", "dense"]);
         assert_eq!(reg.get(None).unwrap().name(), DEFAULT_SCHEME);
         assert_eq!(reg.get(Some("fast")).unwrap().name(), "fast");
         assert!(reg.get(Some("nope")).is_err());
         // Shard counts follow the per-scheme config.
-        assert_eq!(reg.default_scheme().index().unwrap().n_shards(), 2);
-        assert_eq!(reg.get(Some("fast")).unwrap().index().unwrap().n_shards(), 3);
-        // Non-OPH scheme: sketching works, indexing errors cleanly.
+        assert_eq!(reg.default_scheme().n_shards(), 2);
+        assert_eq!(reg.get(Some("fast")).unwrap().n_shards(), 3);
+        // Non-OPH scheme: sketching works, index ops error cleanly.
         let dense = reg.get(Some("dense")).unwrap();
-        assert!(dense.index().is_none());
+        assert!(!dense.has_index());
         let value = dense.sketch(&(0..100).collect::<Vec<_>>(), &mut Scratch::new());
         assert_eq!(value.scheme_id(), "minhash");
         assert!(dense.insert(1, vec![1, 2, 3]).is_err());
         assert!(dense.query(&[1, 2, 3]).is_err());
+        assert!(dense.save_index("/tmp/never-written.mxsh").is_err());
+        assert!(dense.load_index("/tmp/never-read.mxsh").is_err());
     }
 
     #[test]
     fn schemes_are_isolated() {
         let metrics = Metrics::new();
-        let reg = SchemeRegistry::from_config(&registry_cfg(), &metrics);
+        let reg = SchemeRegistry::from_config(&registry_cfg(), &metrics, None);
         let set: Vec<u32> = (0..80).collect();
         reg.get(Some("fast")).unwrap().insert(5, set.clone()).unwrap();
         // The insert is visible in "fast" but not in the default scheme.
         assert!(reg.get(Some("fast")).unwrap().query(&set).unwrap().contains(&5));
         assert!(reg.get(None).unwrap().query(&set).unwrap().is_empty());
-        // Only the default scheme retains raw sets (the estimate store);
-        // named schemes index without a second copy of the corpus.
-        assert_eq!(reg.get(Some("fast")).unwrap().stored(5), None);
-        assert_eq!(reg.get(None).unwrap().stored(5), None);
-        reg.get(None).unwrap().insert(6, set.clone()).unwrap();
-        assert_eq!(reg.get(None).unwrap().stored(6), Some(set));
+        // Sketch stores are per-scheme too: "fast" can estimate its own
+        // inserts, the default scheme knows nothing about them.
+        reg.get(Some("fast")).unwrap().insert(6, set.clone()).unwrap();
+        assert_eq!(reg.get(Some("fast")).unwrap().estimate(5, 6).unwrap(), 1.0);
+        assert!(reg.get(None).unwrap().estimate(5, 6).is_err());
+        assert_eq!(reg.get(Some("fast")).unwrap().sketch_store_len(), 2);
+        assert_eq!(reg.get(None).unwrap().sketch_store_len(), 0);
+    }
+
+    #[test]
+    fn estimate_uses_stored_scheme_sketches() {
+        let metrics = Metrics::new();
+        let reg = SchemeRegistry::from_config(&registry_cfg(), &metrics, None);
+        let a: Vec<u32> = (0..300).collect();
+        let b: Vec<u32> = (30..330).collect(); // J = 270/330 ≈ 0.82
+        let fast = reg.get(Some("fast")).unwrap();
+        fast.insert(1, a.clone()).unwrap();
+        fast.insert(2, b.clone()).unwrap();
+        let est = fast.estimate(1, 2).unwrap();
+        let truth = jaccard_exact(&a, &b);
+        assert!((est - truth).abs() < 0.25, "est {est} truth {truth}");
+        // Bit-identical to comparing this scheme's own sketches directly
+        // — the store holds the sketcher's output, not a re-derivation.
+        let sk = fast.spec().build();
+        let mut scratch = Scratch::new();
+        let expect = sk
+            .sketch_dyn(&a, &mut scratch)
+            .estimate(&sk.sketch_dyn(&b, &mut scratch))
+            .unwrap();
+        assert_eq!(est, expect);
+        // Unknown ids are clean errors.
+        assert!(fast.estimate(1, 99).is_err());
+        assert!(fast.estimate(98, 99).is_err());
+    }
+
+    #[test]
+    fn load_index_validates_and_swaps() {
+        let dir = std::env::temp_dir().join("mixtab_registry_load");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let metrics = Metrics::new();
+        let reg = SchemeRegistry::from_config(&registry_cfg(), &metrics, None);
+        let fast = reg.get(Some("fast")).unwrap();
+        let sets: Vec<Vec<u32>> = (0..20u32)
+            .map(|i| (i * 40..i * 40 + 70).collect())
+            .collect();
+        for (i, s) in sets.iter().enumerate() {
+            fast.insert(i as u32, s.clone()).unwrap();
+        }
+        let snap = dir.join("fast.mxsh").display().to_string();
+        assert_eq!(fast.save_index(&snap).unwrap(), sets.len());
+
+        // A snapshot of "fast" does not load into the default scheme
+        // (different spec provenance) or parse from a missing path.
+        assert!(reg.get(None).unwrap().load_index(&snap).is_err());
+        assert!(fast.load_index(&dir.join("missing").display().to_string()).is_err());
+        // ...and the failed loads left the old index AND sketch store
+        // serving.
+        assert!(fast.query(&sets[0]).unwrap().contains(&0));
+        assert!(fast.estimate(0, 1).is_ok());
+
+        // A *successful* load clears the sketch store: the replaced
+        // corpus's sketches must not keep serving estimates against the
+        // restored index.
+        let (entries, shards) = fast.load_index(&snap).unwrap();
+        assert_eq!((entries, shards), (sets.len(), 3));
+        assert_eq!(fast.sketch_store_len(), 0);
+        assert!(fast.estimate(0, 1).is_err());
+        assert!(fast.query(&sets[0]).unwrap().contains(&0));
+
+        // Reload into a *fresh* registry: queries serve, estimate does
+        // not (the sketch store is not part of snapshots).
+        let metrics2 = Metrics::new();
+        let reg2 = SchemeRegistry::from_config(&registry_cfg(), &metrics2, None);
+        let fast2 = reg2.get(Some("fast")).unwrap();
+        let (entries, shards) = fast2.load_index(&snap).unwrap();
+        assert_eq!((entries, shards), (sets.len(), 3));
+        assert_eq!(fast2.index_len(), sets.len());
+        for (i, s) in sets.iter().enumerate() {
+            assert!(fast2.query(s).unwrap().contains(&(i as u32)), "set {i}");
+        }
+        assert!(fast2.estimate(0, 1).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -30,10 +30,9 @@ pub enum Request {
         spec: Option<String>,
         scheme: Option<String>,
     },
-    /// Insert a set into a scheme's sharded LSH index. `scheme` absent =
-    /// default scheme (legacy behaviour); only default-scheme inserts are
-    /// additionally retained for `Estimate` — named schemes index without
-    /// storing the raw set.
+    /// Insert a set into a scheme's sharded LSH index (`scheme` absent =
+    /// default scheme, the legacy behaviour). Every scheme also stores
+    /// its own sketch of the set at insert time, backing `Estimate`.
     LshInsert {
         id: u32,
         set: Vec<u32>,
@@ -44,15 +43,36 @@ pub enum Request {
         set: Vec<u32>,
         scheme: Option<String>,
     },
-    /// Estimate J between two stored ids from their sketches.
-    Estimate { a: u32, b: u32 },
-    /// Shingle a raw document (w = 5 bytes) and insert it into the LSH
-    /// index — the ingest path of a dedup/search service.
-    IndexDoc { id: u32, text: String },
-    /// Shingle a raw document and query the LSH index.
-    QueryDoc { text: String },
-    /// Snapshot the LSH index to a server-side path.
-    SaveIndex { path: String },
+    /// Similarity estimate between two stored ids, compared from the
+    /// sketches the scheme stored at insert time (never re-sketched).
+    Estimate {
+        a: u32,
+        b: u32,
+        scheme: Option<String>,
+    },
+    /// Shingle a raw document (w = 5 bytes) and insert it into a scheme's
+    /// LSH index — the ingest path of a dedup/search service.
+    IndexDoc {
+        id: u32,
+        text: String,
+        scheme: Option<String>,
+    },
+    /// Shingle a raw document and query a scheme's LSH index.
+    QueryDoc {
+        text: String,
+        scheme: Option<String>,
+    },
+    /// Snapshot a scheme's LSH index to a server-side path.
+    SaveIndex {
+        path: String,
+        scheme: Option<String>,
+    },
+    /// Restore a scheme's LSH index from a snapshot written by
+    /// `save_index` (provenance-checked against the scheme's spec).
+    LoadIndex {
+        path: String,
+        scheme: Option<String>,
+    },
     /// Service statistics snapshot.
     Stats,
 }
@@ -92,6 +112,13 @@ pub enum Response {
         path: String,
         entries: usize,
     },
+    /// A `load_index` restore: how many entries across how many shards
+    /// the scheme now serves.
+    Loaded {
+        path: String,
+        entries: usize,
+        shards: usize,
+    },
     Stats {
         json: Json,
     },
@@ -111,6 +138,21 @@ fn arr_u32(j: &Json, key: &str) -> Result<Vec<u32>> {
                 .with_context(|| format!("bad u32 in '{key}'"))
         })
         .collect()
+}
+
+/// Reject fields the op does not define. Without this, a mistyped
+/// selector — `"shceme"`, `"Scheme"`, a `spec` on an op that has none —
+/// would be silently dropped and the request silently served by the
+/// default scheme, which is exactly the failure mode the optional
+/// `scheme` field must not have.
+fn check_keys(j: &Json, op: &str, allowed: &[&str]) -> Result<()> {
+    let Some(obj) = j.as_obj() else { return Ok(()) };
+    for key in obj.keys() {
+        if key != "op" && !allowed.contains(&key.as_str()) {
+            bail!("unknown field '{key}' for op '{op}'");
+        }
+    }
+    Ok(())
 }
 
 /// Optional string field: absent/null means `None`; any other non-string
@@ -200,68 +242,113 @@ impl Request {
             .and_then(Json::as_str)
             .context("missing 'op'")?;
         Ok(match op {
-            "fh" => Request::FhTransform {
-                indices: arr_u32(&j, "indices")?,
-                values: arr_f64(&j, "values")?,
-            },
-            "oph" => Request::OphSketch {
-                set: arr_u32(&j, "set")?,
-            },
-            "sketch" => Request::Sketch {
-                set: arr_u32(&j, "set")?,
-                spec: opt_str(&j, "spec")?,
-                scheme: opt_str(&j, "scheme")?,
-            },
-            "insert" => Request::LshInsert {
-                id: j
-                    .get("id")
-                    .and_then(Json::as_i64)
-                    .and_then(|x| u32::try_from(x).ok())
-                    .context("missing 'id'")?,
-                set: arr_u32(&j, "set")?,
-                scheme: opt_str(&j, "scheme")?,
-            },
-            "query" => Request::LshQuery {
-                set: arr_u32(&j, "set")?,
-                scheme: opt_str(&j, "scheme")?,
-            },
-            "estimate" => Request::Estimate {
-                a: j.get("a")
-                    .and_then(Json::as_i64)
-                    .and_then(|x| u32::try_from(x).ok())
-                    .context("missing 'a'")?,
-                b: j.get("b")
-                    .and_then(Json::as_i64)
-                    .and_then(|x| u32::try_from(x).ok())
-                    .context("missing 'b'")?,
-            },
-            "index_doc" => Request::IndexDoc {
-                id: j
-                    .get("id")
-                    .and_then(Json::as_i64)
-                    .and_then(|x| u32::try_from(x).ok())
-                    .context("missing 'id'")?,
-                text: j
-                    .get("text")
-                    .and_then(Json::as_str)
-                    .context("missing 'text'")?
-                    .to_string(),
-            },
-            "query_doc" => Request::QueryDoc {
-                text: j
-                    .get("text")
-                    .and_then(Json::as_str)
-                    .context("missing 'text'")?
-                    .to_string(),
-            },
-            "save_index" => Request::SaveIndex {
-                path: j
-                    .get("path")
-                    .and_then(Json::as_str)
-                    .context("missing 'path'")?
-                    .to_string(),
-            },
-            "stats" => Request::Stats,
+            "fh" => {
+                check_keys(&j, op, &["indices", "values"])?;
+                Request::FhTransform {
+                    indices: arr_u32(&j, "indices")?,
+                    values: arr_f64(&j, "values")?,
+                }
+            }
+            "oph" => {
+                check_keys(&j, op, &["set"])?;
+                Request::OphSketch {
+                    set: arr_u32(&j, "set")?,
+                }
+            }
+            "sketch" => {
+                check_keys(&j, op, &["set", "spec", "scheme"])?;
+                Request::Sketch {
+                    set: arr_u32(&j, "set")?,
+                    spec: opt_str(&j, "spec")?,
+                    scheme: opt_str(&j, "scheme")?,
+                }
+            }
+            "insert" => {
+                check_keys(&j, op, &["id", "set", "scheme"])?;
+                Request::LshInsert {
+                    id: j
+                        .get("id")
+                        .and_then(Json::as_i64)
+                        .and_then(|x| u32::try_from(x).ok())
+                        .context("missing 'id'")?,
+                    set: arr_u32(&j, "set")?,
+                    scheme: opt_str(&j, "scheme")?,
+                }
+            }
+            "query" => {
+                check_keys(&j, op, &["set", "scheme"])?;
+                Request::LshQuery {
+                    set: arr_u32(&j, "set")?,
+                    scheme: opt_str(&j, "scheme")?,
+                }
+            }
+            "estimate" => {
+                check_keys(&j, op, &["a", "b", "scheme"])?;
+                Request::Estimate {
+                    a: j.get("a")
+                        .and_then(Json::as_i64)
+                        .and_then(|x| u32::try_from(x).ok())
+                        .context("missing 'a'")?,
+                    b: j.get("b")
+                        .and_then(Json::as_i64)
+                        .and_then(|x| u32::try_from(x).ok())
+                        .context("missing 'b'")?,
+                    scheme: opt_str(&j, "scheme")?,
+                }
+            }
+            "index_doc" => {
+                check_keys(&j, op, &["id", "text", "scheme"])?;
+                Request::IndexDoc {
+                    id: j
+                        .get("id")
+                        .and_then(Json::as_i64)
+                        .and_then(|x| u32::try_from(x).ok())
+                        .context("missing 'id'")?,
+                    text: j
+                        .get("text")
+                        .and_then(Json::as_str)
+                        .context("missing 'text'")?
+                        .to_string(),
+                    scheme: opt_str(&j, "scheme")?,
+                }
+            }
+            "query_doc" => {
+                check_keys(&j, op, &["text", "scheme"])?;
+                Request::QueryDoc {
+                    text: j
+                        .get("text")
+                        .and_then(Json::as_str)
+                        .context("missing 'text'")?
+                        .to_string(),
+                    scheme: opt_str(&j, "scheme")?,
+                }
+            }
+            "save_index" => {
+                check_keys(&j, op, &["path", "scheme"])?;
+                Request::SaveIndex {
+                    path: j
+                        .get("path")
+                        .and_then(Json::as_str)
+                        .context("missing 'path'")?
+                        .to_string(),
+                    scheme: opt_str(&j, "scheme")?,
+                }
+            }
+            "load_index" => {
+                check_keys(&j, op, &["path", "scheme"])?;
+                Request::LoadIndex {
+                    path: j
+                        .get("path")
+                        .and_then(Json::as_str)
+                        .context("missing 'path'")?
+                        .to_string(),
+                    scheme: opt_str(&j, "scheme")?,
+                }
+            }
+            "stats" => {
+                check_keys(&j, op, &[])?;
+                Request::Stats
+            }
             other => bail!("unknown op '{other}'"),
         })
     }
@@ -307,19 +394,46 @@ impl Request {
                     None => j,
                 }
             }
-            Request::Estimate { a, b } => Json::obj()
-                .set("op", "estimate")
-                .set("a", *a as usize)
-                .set("b", *b as usize),
-            Request::IndexDoc { id, text } => Json::obj()
-                .set("op", "index_doc")
-                .set("id", *id as usize)
-                .set("text", text.as_str()),
-            Request::QueryDoc { text } => {
-                Json::obj().set("op", "query_doc").set("text", text.as_str())
+            Request::Estimate { a, b, scheme } => {
+                let j = Json::obj()
+                    .set("op", "estimate")
+                    .set("a", *a as usize)
+                    .set("b", *b as usize);
+                match scheme {
+                    Some(s) => j.set("scheme", s.as_str()),
+                    None => j,
+                }
             }
-            Request::SaveIndex { path } => {
-                Json::obj().set("op", "save_index").set("path", path.as_str())
+            Request::IndexDoc { id, text, scheme } => {
+                let j = Json::obj()
+                    .set("op", "index_doc")
+                    .set("id", *id as usize)
+                    .set("text", text.as_str());
+                match scheme {
+                    Some(s) => j.set("scheme", s.as_str()),
+                    None => j,
+                }
+            }
+            Request::QueryDoc { text, scheme } => {
+                let j = Json::obj().set("op", "query_doc").set("text", text.as_str());
+                match scheme {
+                    Some(s) => j.set("scheme", s.as_str()),
+                    None => j,
+                }
+            }
+            Request::SaveIndex { path, scheme } => {
+                let j = Json::obj().set("op", "save_index").set("path", path.as_str());
+                match scheme {
+                    Some(s) => j.set("scheme", s.as_str()),
+                    None => j,
+                }
+            }
+            Request::LoadIndex { path, scheme } => {
+                let j = Json::obj().set("op", "load_index").set("path", path.as_str());
+                match scheme {
+                    Some(s) => j.set("scheme", s.as_str()),
+                    None => j,
+                }
             }
             Request::Stats => Json::obj().set("op", "stats"),
         };
@@ -369,6 +483,16 @@ impl Response {
                 .set("type", "saved")
                 .set("path", path.as_str())
                 .set("entries", *entries),
+            Response::Loaded {
+                path,
+                entries,
+                shards,
+            } => Json::obj()
+                .set("ok", true)
+                .set("type", "loaded")
+                .set("path", path.as_str())
+                .set("entries", *entries)
+                .set("shards", *shards),
             Response::Stats { json } => Json::obj()
                 .set("ok", true)
                 .set("type", "stats")
@@ -446,6 +570,21 @@ impl Response {
                     .and_then(Json::as_usize)
                     .context("entries")?,
             },
+            "loaded" => Response::Loaded {
+                path: j
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .context("path")?
+                    .to_string(),
+                entries: j
+                    .get("entries")
+                    .and_then(Json::as_usize)
+                    .context("entries")?,
+                shards: j
+                    .get("shards")
+                    .and_then(Json::as_usize)
+                    .context("shards")?,
+            },
             "stats" => Response::Stats {
                 json: j.get("stats").cloned().unwrap_or(Json::Null),
             },
@@ -499,16 +638,49 @@ mod tests {
                 set: vec![5],
                 scheme: Some("fast".into()),
             },
-            Request::Estimate { a: 1, b: 2 },
+            Request::Estimate {
+                a: 1,
+                b: 2,
+                scheme: None,
+            },
+            Request::Estimate {
+                a: 3,
+                b: 4,
+                scheme: Some("fast".into()),
+            },
             Request::IndexDoc {
                 id: 7,
                 text: "the quick brown fox".into(),
+                scheme: None,
+            },
+            Request::IndexDoc {
+                id: 8,
+                text: "jumps over".into(),
+                scheme: Some("fast".into()),
             },
             Request::QueryDoc {
                 text: "lazy dog".into(),
+                scheme: None,
+            },
+            Request::QueryDoc {
+                text: "lazy dog".into(),
+                scheme: Some("fast".into()),
             },
             Request::SaveIndex {
                 path: "/tmp/x.mxls".into(),
+                scheme: None,
+            },
+            Request::SaveIndex {
+                path: "/tmp/x.mxsh".into(),
+                scheme: Some("fast".into()),
+            },
+            Request::LoadIndex {
+                path: "/tmp/x.mxls".into(),
+                scheme: None,
+            },
+            Request::LoadIndex {
+                path: "/tmp/x.mxsh".into(),
+                scheme: Some("fast".into()),
             },
             Request::Stats,
         ];
@@ -556,6 +728,11 @@ mod tests {
                 path: "/tmp/x.mxls".into(),
                 entries: 12,
             },
+            Response::Loaded {
+                path: "/tmp/x.mxsh".into(),
+                entries: 12,
+                shards: 3,
+            },
             Response::Error {
                 message: "nope".into(),
             },
@@ -597,6 +774,49 @@ mod tests {
                 scheme: None
             }
         );
+        // The persistence/estimate ops honour and validate `scheme` too.
+        let r = Request::from_json_line(
+            "{\"op\":\"estimate\",\"a\":1,\"b\":2,\"scheme\":\"fast\"}",
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::Estimate {
+                a: 1,
+                b: 2,
+                scheme: Some("fast".into())
+            }
+        );
+        assert!(
+            Request::from_json_line("{\"op\":\"estimate\",\"a\":1,\"b\":2,\"scheme\":42}").is_err()
+        );
+        assert!(
+            Request::from_json_line("{\"op\":\"save_index\",\"path\":\"p\",\"scheme\":42}")
+                .is_err()
+        );
+        assert!(
+            Request::from_json_line("{\"op\":\"load_index\",\"path\":\"p\",\"scheme\":42}")
+                .is_err()
+        );
+        assert!(Request::from_json_line("{\"op\":\"load_index\"}").is_err());
+        // Unknown fields are rejected on every op — a mistyped `scheme`
+        // must not silently serve the default.
+        for bad in [
+            "{\"op\":\"estimate\",\"a\":1,\"b\":2,\"shceme\":\"fast\"}",
+            "{\"op\":\"estimate\",\"a\":1,\"b\":2,\"spec\":\"oph(k=8)\"}",
+            "{\"op\":\"sketch\",\"set\":[1],\"Scheme\":\"fast\"}",
+            "{\"op\":\"insert\",\"id\":1,\"set\":[1],\"shard\":0}",
+            "{\"op\":\"query\",\"set\":[1],\"schemes\":\"fast\"}",
+            "{\"op\":\"index_doc\",\"id\":1,\"text\":\"t\",\"shceme\":\"x\"}",
+            "{\"op\":\"query_doc\",\"text\":\"t\",\"shceme\":\"x\"}",
+            "{\"op\":\"save_index\",\"path\":\"p\",\"wibble\":1}",
+            "{\"op\":\"load_index\",\"path\":\"p\",\"wibble\":1}",
+            "{\"op\":\"oph\",\"set\":[1],\"scheme\":\"fast\"}",
+            "{\"op\":\"stats\",\"scheme\":\"fast\"}",
+            "{\"op\":\"fh\",\"indices\":[1],\"values\":[1.0],\"scheme\":\"x\"}",
+        ] {
+            assert!(Request::from_json_line(bad).is_err(), "accepted: {bad}");
+        }
         assert!(
             Response::from_json_line("{\"ok\":true,\"type\":\"sketch_value\",\"scheme\":\"zzz\"}")
                 .is_err()
@@ -633,6 +853,42 @@ mod tests {
             r,
             Request::LshQuery {
                 set: vec![2],
+                scheme: None
+            }
+        );
+        // Pre-scheme `estimate`/`index_doc`/`query_doc`/`save_index`
+        // lines (no `scheme` key) still decode to the default scheme.
+        let r = Request::from_json_line("{\"op\":\"estimate\",\"a\":1,\"b\":2}").unwrap();
+        assert_eq!(
+            r,
+            Request::Estimate {
+                a: 1,
+                b: 2,
+                scheme: None
+            }
+        );
+        let r = Request::from_json_line("{\"op\":\"save_index\",\"path\":\"/tmp/x\"}").unwrap();
+        assert_eq!(
+            r,
+            Request::SaveIndex {
+                path: "/tmp/x".into(),
+                scheme: None
+            }
+        );
+        let r = Request::from_json_line("{\"op\":\"index_doc\",\"id\":1,\"text\":\"t\"}").unwrap();
+        assert_eq!(
+            r,
+            Request::IndexDoc {
+                id: 1,
+                text: "t".into(),
+                scheme: None
+            }
+        );
+        let r = Request::from_json_line("{\"op\":\"query_doc\",\"text\":\"t\"}").unwrap();
+        assert_eq!(
+            r,
+            Request::QueryDoc {
+                text: "t".into(),
                 scheme: None
             }
         );

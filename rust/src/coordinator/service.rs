@@ -6,11 +6,17 @@
 //!   rounding; `rust/tests/runtime_artifacts.rs` enforces it.
 //! * OPH sketches — native sketcher (hashing dominates; batching buys
 //!   nothing for single sets) shared with the LSH index.
-//! * LSH insert/query — routed through the [`SchemeRegistry`]: one sharded
-//!   index (shard-level locking) + set store per named scheme.
+//! * LSH insert/query/estimate/save/load — routed through the
+//!   [`SchemeRegistry`]: one sharded index (shard-level locking, parallel
+//!   fan-out on the shared pool when configured) + sketch store per named
+//!   scheme. Every scheme-aware op resolves its optional `scheme` field
+//!   with the same semantics: absent = default, unknown = wire error.
 //!
 //! The service object is `Send + Sync`; the TCP front-end and the examples
-//! call it from many threads.
+//! call it from many threads. **No wire request may panic a connection
+//! thread**: every error on a request path is a `Response::Error`, and
+//! this module stays grep-clean of `unwrap`/`expect` on those paths
+//! (locks go through [`crate::util::sync`]).
 
 use crate::coordinator::batcher::FhBatcher;
 use crate::coordinator::config::CoordinatorConfig;
@@ -25,6 +31,8 @@ use crate::sketch::oph::{BinLayout, OneHashSketcher};
 use crate::sketch::sketcher::DynSketcher;
 use crate::sketch::spec::{SketchScheme, SketchSpec};
 use crate::sketch::Scratch;
+use crate::util::sync::lock_unpoisoned;
+use crate::util::threadpool::ThreadPool;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -34,9 +42,9 @@ use std::time::Instant;
 /// Every sketcher in here is built through the [`SketchSpec`] registry
 /// (`cfg.fh_spec()`, `cfg.oph_spec()`, `cfg.sketch_spec()`, `cfg.lsh_spec()`)
 /// — the sketch scheme is configuration, not code — and the index/store
-/// layers live in the [`SchemeRegistry`]: one sharded index + store per
-/// named scheme, with the default scheme preserving the single-scheme
-/// wire behaviour.
+/// layers live in the [`SchemeRegistry`]: one sharded index + sketch
+/// store per named scheme, with the default scheme preserving the
+/// single-scheme wire behaviour.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     fh: FeatureHasher,
@@ -51,6 +59,12 @@ pub struct Coordinator {
     /// insert-if-room at [`Self::SPEC_CACHE_CAP`] entries.
     spec_cache: Mutex<HashMap<String, Arc<dyn DynSketcher>>>,
     batcher: Option<FhBatcher>,
+    /// Shared shard fan-out pool (`cfg.fanout_workers()` wide), handed to
+    /// every scheme's sharded index; `None` keeps fan-out sequential.
+    /// Fan-out goes through `ThreadPool::scope` (caller participates,
+    /// scoped spawns bounded by the width per query — see its docs for
+    /// why resident workers can't run borrowing closures safely).
+    fanout: Option<Arc<ThreadPool>>,
     /// OPH artifact matching the OPH spec's k, when loaded:
     /// `(name, batch, nnz)`.
     oph_artifact: Option<(String, usize, usize)>,
@@ -70,7 +84,11 @@ impl Coordinator {
         let fh = cfg.fh_spec().build_feature_hasher().expect("fh spec");
         let oph_spec = cfg.oph_spec();
         let oph = oph_spec.build_oph().expect("oph spec");
-        let registry = SchemeRegistry::from_config(&cfg, &metrics);
+        let fanout = match cfg.fanout_workers() {
+            0 => None,
+            n => Some(Arc::new(ThreadPool::new(n))),
+        };
+        let registry = SchemeRegistry::from_config(&cfg, &metrics, fanout.clone());
 
         let (batcher, executor, oph_artifact) = if cfg.enable_pjrt {
             match Self::start_pjrt(&cfg, oph.k(), &metrics) {
@@ -99,6 +117,7 @@ impl Coordinator {
             registry,
             spec_cache: Mutex::new(HashMap::new()),
             batcher,
+            fanout,
             oph_artifact,
             metrics,
             executor,
@@ -209,6 +228,11 @@ impl Coordinator {
         self.batcher.is_some()
     }
 
+    /// Width of the shard fan-out pool (0 = sequential fan-out).
+    pub fn fanout_workers(&self) -> usize {
+        self.fanout.as_ref().map_or(0, |p| p.size())
+    }
+
     /// Direct executor access (benches).
     pub fn executor(&self) -> Option<&Arc<ExecutorHandle>> {
         self.executor.as_ref()
@@ -228,48 +252,75 @@ impl Coordinator {
                 self.handle_insert(id, set, scheme.as_deref())
             }
             Request::LshQuery { set, scheme } => self.handle_query(&set, scheme.as_deref()),
-            Request::Estimate { a, b } => {
+            Request::Estimate { a, b, scheme } => {
+                // Served from the scheme's stored sketches — sketched
+                // once at insert time by the scheme's own sketcher, never
+                // re-derived (or worse, re-derived by the legacy OPH
+                // sketcher) per request.
                 Metrics::inc(&self.metrics.estimates);
-                let default = self.registry.default_scheme();
-                match (default.stored(a), default.stored(b)) {
-                    (Some(sa), Some(sb)) => {
-                        let ja = self.oph.sketch(&sa);
-                        let jb = self.oph.sketch(&sb);
-                        Response::Estimate {
-                            jaccard: self.oph.estimate(&ja, &jb),
-                        }
-                    }
-                    _ => {
+                match self
+                    .registry
+                    .get(scheme.as_deref())
+                    .and_then(|s| s.estimate(a, b))
+                {
+                    Ok(jaccard) => Response::Estimate { jaccard },
+                    Err(e) => {
                         Metrics::inc(&self.metrics.errors);
                         Response::Error {
-                            message: format!("unknown id(s): {a}, {b}"),
+                            message: e.to_string(),
                         }
                     }
                 }
             }
-            Request::IndexDoc { id, text } => {
+            Request::IndexDoc { id, text, scheme } => {
                 let set = crate::data::shingle::byte_shingles(&text, 5);
-                self.handle_insert(id, set, None)
+                self.handle_insert(id, set, scheme.as_deref())
             }
-            Request::QueryDoc { text } => {
+            Request::QueryDoc { text, scheme } => {
                 let set = crate::data::shingle::byte_shingles(&text, 5);
-                self.handle_query(&set, None)
+                self.handle_query(&set, scheme.as_deref())
             }
-            Request::SaveIndex { path } => {
-                let index = self
+            Request::SaveIndex { path, scheme } => {
+                // `save_index` counts entries under the same shard locks
+                // it writes under, so the reported count matches the
+                // bytes even with concurrent inserts. Index-less (non-
+                // OPH) schemes and unknown names are wire errors — a
+                // snapshot request must never panic the connection.
+                match self
                     .registry
-                    .default_scheme()
-                    .index()
-                    .expect("default scheme is OPH-backed");
-                // `save` counts entries under the same shard locks it
-                // writes under, so the reported count matches the bytes
-                // even with concurrent inserts.
-                match index.save(&path) {
-                    Ok(entries) => Response::Saved { path, entries },
+                    .get(scheme.as_deref())
+                    .and_then(|s| s.save_index(&path))
+                {
+                    Ok(entries) => {
+                        Metrics::inc(&self.metrics.index_saves);
+                        Response::Saved { path, entries }
+                    }
                     Err(e) => {
                         Metrics::inc(&self.metrics.errors);
                         Response::Error {
                             message: format!("save failed: {e}"),
+                        }
+                    }
+                }
+            }
+            Request::LoadIndex { path, scheme } => {
+                match self
+                    .registry
+                    .get(scheme.as_deref())
+                    .and_then(|s| s.load_index(&path))
+                {
+                    Ok((entries, shards)) => {
+                        Metrics::inc(&self.metrics.index_loads);
+                        Response::Loaded {
+                            path,
+                            entries,
+                            shards,
+                        }
+                    }
+                    Err(e) => {
+                        Metrics::inc(&self.metrics.errors);
+                        Response::Error {
+                            message: format!("load failed: {e}"),
                         }
                     }
                 }
@@ -290,7 +341,7 @@ impl Coordinator {
     /// Current per-request spec-cache population (tests assert the
     /// [`Self::SPEC_CACHE_CAP`] bound holds under concurrent load).
     pub fn spec_cache_len(&self) -> usize {
-        self.spec_cache.lock().unwrap().len()
+        lock_unpoisoned(&self.spec_cache).len()
     }
 
     /// Sketcher for a per-request spec, cached by canonical spec string so
@@ -299,14 +350,14 @@ impl Coordinator {
     fn cached_sketcher(&self, spec: &SketchSpec) -> Arc<dyn DynSketcher> {
         let key = spec.to_string();
         {
-            let cache = self.spec_cache.lock().unwrap();
+            let cache = lock_unpoisoned(&self.spec_cache);
             if let Some(sketcher) = cache.get(&key) {
                 return Arc::clone(sketcher);
             }
         }
         // Build outside the lock; a racing duplicate build is harmless.
         let built: Arc<dyn DynSketcher> = Arc::from(spec.build());
-        let mut cache = self.spec_cache.lock().unwrap();
+        let mut cache = lock_unpoisoned(&self.spec_cache);
         // Insert-if-room rather than evict: a stream of distinct hostile
         // specs must not flush the legitimate hot entries (overflow specs
         // still work, they just rebuild per request).
@@ -491,19 +542,41 @@ mod tests {
             scheme: None,
         });
         let Response::Candidates { ids } = c.handle(Request::LshQuery {
-            set: set_a,
+            set: set_a.clone(),
             scheme: None,
         }) else {
             panic!()
         };
         assert!(ids.contains(&1));
-        let Response::Estimate { jaccard } = c.handle(Request::Estimate { a: 1, b: 2 }) else {
+        let Response::Estimate { jaccard } = c.handle(Request::Estimate {
+            a: 1,
+            b: 2,
+            scheme: None,
+        }) else {
             panic!()
         };
         assert!((jaccard - 0.82).abs() < 0.2, "jaccard {jaccard}");
-        let Response::Error { .. } = c.handle(Request::Estimate { a: 1, b: 99 }) else {
+        // Estimate is served from the sketches stored at insert time; for
+        // the default (OPH) spec that is bit-identical to sketching the
+        // raw sets with the service's OPH sketcher, as it always was.
+        let ja = c.oph.sketch(&set_a);
+        let jb = c.oph.sketch(&set_b);
+        assert_eq!(jaccard, c.oph.estimate(&ja, &jb));
+        let Response::Error { .. } = c.handle(Request::Estimate {
+            a: 1,
+            b: 99,
+            scheme: None,
+        }) else {
             panic!("expected error for unknown id")
         };
+        let Response::Error { message } = c.handle(Request::Estimate {
+            a: 1,
+            b: 2,
+            scheme: Some("nope".into()),
+        }) else {
+            panic!("expected error for unknown scheme")
+        };
+        assert!(message.contains("unknown scheme"), "{message}");
     }
 
     #[test]
@@ -670,6 +743,87 @@ mod tests {
     }
 
     #[test]
+    fn estimate_follows_non_oph_default_spec() {
+        use crate::hash::HashFamily;
+        use crate::sketch::{MinHash, SketchSpec, Sketcher as _};
+        // Pre-PR5, a non-OPH `[sketch]` default still estimated with the
+        // *legacy OPH sketcher* over re-sketched raw sets — disagreeing
+        // with the configured scheme. Now the stored minhash sketches are
+        // compared with the minhash estimator, bit-identical to doing it
+        // by hand.
+        let spec = SketchSpec::minhash(HashFamily::MixedTab, 7, 64);
+        let c = Coordinator::new(CoordinatorConfig {
+            sketch: Some(spec),
+            ..native_cfg()
+        });
+        let set_a: Vec<u32> = (0..300).collect();
+        let set_b: Vec<u32> = (30..330).collect(); // J ≈ 0.82
+        for (id, s) in [(1u32, &set_a), (2, &set_b)] {
+            let Response::Inserted { .. } = c.handle(Request::LshInsert {
+                id,
+                set: s.clone(),
+                scheme: None,
+            }) else {
+                panic!()
+            };
+        }
+        let Response::Estimate { jaccard } = c.handle(Request::Estimate {
+            a: 1,
+            b: 2,
+            scheme: None,
+        }) else {
+            panic!()
+        };
+        let mh = MinHash::new(HashFamily::MixedTab, 7, 64);
+        let expect = mh.estimate(&mh.sketch(&set_a), &mh.sketch(&set_b));
+        assert_eq!(jaccard, expect, "estimate must use the configured scheme");
+        assert!((jaccard - 0.82).abs() < 0.25, "jaccard {jaccard}");
+    }
+
+    #[test]
+    fn parallel_fanout_coordinator_matches_sequential() {
+        // Same corpus served by a sequential (1 worker) and a parallel
+        // (3 workers over 4 shards) coordinator: identical candidates.
+        let sets: Vec<Vec<u32>> = (0..40u32)
+            .map(|i| (i * 37..i * 37 + 90).collect())
+            .collect();
+        let mk = |workers: usize| {
+            let c = Coordinator::new(CoordinatorConfig {
+                lsh_shards: 4,
+                workers,
+                ..native_cfg()
+            });
+            for (i, s) in sets.iter().enumerate() {
+                c.handle(Request::LshInsert {
+                    id: i as u32,
+                    set: s.clone(),
+                    scheme: None,
+                });
+            }
+            c
+        };
+        let seq = mk(1);
+        let par = mk(3);
+        assert_eq!(seq.fanout_workers(), 0);
+        assert_eq!(par.fanout_workers(), 3);
+        for s in &sets {
+            let Response::Candidates { ids: a } = seq.handle(Request::LshQuery {
+                set: s.clone(),
+                scheme: None,
+            }) else {
+                panic!()
+            };
+            let Response::Candidates { ids: b } = par.handle(Request::LshQuery {
+                set: s.clone(),
+                scheme: None,
+            }) else {
+                panic!()
+            };
+            assert_eq!(a, b, "parallel fan-out diverged");
+        }
+    }
+
+    #[test]
     fn stats_reflect_traffic() {
         let c = Coordinator::new(native_cfg());
         c.handle(Request::FhTransform {
@@ -697,23 +851,37 @@ mod tests {
         c.handle(Request::IndexDoc {
             id: 5,
             text: doc.into(),
+            scheme: None,
         });
         // Exact duplicate always collides.
-        let Response::Candidates { ids } = c.handle(Request::QueryDoc { text: doc.into() })
-        else {
+        let Response::Candidates { ids } = c.handle(Request::QueryDoc {
+            text: doc.into(),
+            scheme: None,
+        }) else {
             panic!()
         };
         assert!(ids.contains(&5), "exact duplicate not found");
         let Response::Candidates { ids } = c.handle(Request::QueryDoc {
             text: doc.replace("lazy", "sleepy"),
+            scheme: None,
         }) else {
             panic!()
         };
         assert!(ids.contains(&5), "near-duplicate doc not found");
-        // Save the index and reload it.
+        // Doc ops honour `scheme` with the usual error semantics.
+        let Response::Error { message } = c.handle(Request::QueryDoc {
+            text: doc.into(),
+            scheme: Some("nope".into()),
+        }) else {
+            panic!()
+        };
+        assert!(message.contains("unknown scheme"), "{message}");
+        // Save the index and reload it — through the wire op and through
+        // the raw persist layer.
         let path = std::env::temp_dir().join("mixtab_svc_snap.mxls");
         let Response::Saved { entries, .. } = c.handle(Request::SaveIndex {
             path: path.to_str().unwrap().into(),
+            scheme: None,
         }) else {
             panic!()
         };
@@ -721,6 +889,36 @@ mod tests {
         let (loaded, fam, _) = crate::lsh::persist::load(&path).unwrap();
         assert_eq!(fam, c.config().family);
         assert_eq!(loaded.len(), 1);
+        // `load_index` restores it into a fresh coordinator, which then
+        // retrieves the document (estimate sketches are not persisted).
+        let fresh = Coordinator::new(CoordinatorConfig {
+            lsh_k: 2,
+            lsh_l: 10,
+            ..native_cfg()
+        });
+        let Response::Loaded {
+            entries, shards, ..
+        } = fresh.handle(Request::LoadIndex {
+            path: path.to_str().unwrap().into(),
+            scheme: None,
+        }) else {
+            panic!("load_index failed")
+        };
+        assert_eq!((entries, shards), (1, 1));
+        let Response::Candidates { ids } = fresh.handle(Request::QueryDoc {
+            text: doc.into(),
+            scheme: None,
+        }) else {
+            panic!()
+        };
+        assert!(ids.contains(&5), "doc lost across save/load");
+        // A bad path is a clean wire error.
+        let Response::Error { .. } = fresh.handle(Request::LoadIndex {
+            path: "/nonexistent/mixtab.snap".into(),
+            scheme: None,
+        }) else {
+            panic!("expected error for missing snapshot")
+        };
         let _ = std::fs::remove_file(&path);
     }
 

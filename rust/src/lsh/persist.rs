@@ -9,9 +9,9 @@
 use crate::hash::HashFamily;
 use crate::lsh::index::{LshIndex, LshParams};
 use crate::util::binio::{BinReader, BinWriter};
-use crate::util::error::{bail, Context, Result};
+use crate::util::error::{bail, format_err, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const MAGIC: u32 = 0x4D58_4C53; // "MXLS"
 const VERSION: u8 = 1;
@@ -39,13 +39,29 @@ pub fn save_to(index: &LshIndex, family: HashFamily, seed: u64, w: impl Write) -
     Ok(())
 }
 
-/// Save to a file path.
+/// Save to a file path — atomically and durably: the bytes go to
+/// `<path>.tmp`, are flushed and fsync'd, then renamed over `path`.
+/// Re-saving over an existing snapshot can therefore never truncate it,
+/// and a crash mid-write leaves the old file intact (plus at worst a
+/// stale `.tmp`). The file contents are exactly [`save_to`]'s byte
+/// stream — rename does not change them, so byte-identity guarantees
+/// (e.g. the N=1 sharded snapshot) are unaffected.
 pub fn save(index: &LshIndex, family: HashFamily, seed: u64, path: impl AsRef<Path>) -> Result<()> {
-    if let Some(parent) = path.as_ref().parent() {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let f = std::fs::File::create(path.as_ref())?;
-    save_to(index, family, seed, BufWriter::new(f))
+    let tmp = PathBuf::from(format!("{}.tmp", path.display()));
+    let f = std::fs::File::create(&tmp)?;
+    let mut w = BufWriter::new(f);
+    save_to(index, family, seed, &mut w)?;
+    w.flush()?;
+    let f = w
+        .into_inner()
+        .map_err(|e| format_err!("flush snapshot buffer: {e}"))?;
+    f.sync_all()?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
 }
 
 /// Reload an index from a reader. Returns `(index, family, seed)`.
@@ -134,6 +150,25 @@ mod tests {
         save(&index, HashFamily::Murmur3, 5, &path).unwrap();
         let (loaded, _, _) = load(&path).unwrap();
         assert_eq!(loaded.query(&(0..50).collect::<Vec<_>>()), vec![1]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_is_atomic_over_existing_snapshot() {
+        let dir = std::env::temp_dir().join("mixtab_lsh_persist_atomic");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut index =
+            LshIndex::new(LshParams::new(3, 3), &SketchSpec::oph(HashFamily::Murmur3, 5, 9));
+        index.insert(1, &(0..50).collect::<Vec<_>>());
+        let path = dir.join("snap.mxls");
+        save(&index, HashFamily::Murmur3, 5, &path).unwrap();
+        // Re-save over the existing snapshot: committed via rename, and
+        // no temp file is left behind.
+        index.insert(2, &(100..160).collect::<Vec<_>>());
+        save(&index, HashFamily::Murmur3, 5, &path).unwrap();
+        assert!(!dir.join("snap.mxls.tmp").exists(), "temp file left behind");
+        let (loaded, _, _) = load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -21,7 +21,13 @@
 //! **Concurrency**: shards are individually mutexed, so inserts routed to
 //! different shards and fan-out queries proceed without a global index
 //! lock — the coordinator serves `insert`/`query` from many connection
-//! threads against one `ShardedIndex` by shared reference.
+//! threads against one `ShardedIndex` by shared reference. With a shared
+//! [`ThreadPool`] attached ([`ShardedIndex::set_pool`]) the fan-out visits
+//! shards **in parallel** (one scoped task per shard, sketch borrowed, at
+//! most pool-width concurrent); the merge is order-independent, so the
+//! parallel path is bit-identical to the sequential one — property-tested
+//! in `rust/tests/sharded_properties.rs` against
+//! [`ShardedIndex::query_fanout_sequential`].
 //!
 //! With `n_shards = 1` the structure degenerates to a bare [`LshIndex`]:
 //! identical query results and — via [`ShardedIndex::save`], which emits
@@ -36,10 +42,12 @@ use crate::sketch::densify::DensifyMode;
 use crate::sketch::oph::{BinLayout, OneHashSketcher, OphSketch};
 use crate::sketch::spec::{SketchScheme, SketchSpec};
 use crate::util::binio::{BinReader, BinWriter};
-use crate::util::error::{bail, Context, Result};
+use crate::util::error::{bail, format_err, Context, Result};
+use crate::util::sync::lock_unpoisoned;
+use crate::util::threadpool::ThreadPool;
 use std::io::{BufReader, BufWriter, Read};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Seed salt separating the id→shard routing hash stream from the sketch
 /// hash stream of the same spec (they share the configured family).
@@ -68,6 +76,10 @@ pub struct ShardedIndex {
     /// once per shard.
     sketcher: OneHashSketcher,
     shards: Vec<Mutex<LshIndex>>,
+    /// Shared worker pool for parallel shard fan-out; `None` (the
+    /// default) keeps queries sequential. Attached by the coordinator
+    /// ([`Self::set_pool`]); never serialized.
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl ShardedIndex {
@@ -104,7 +116,20 @@ impl ShardedIndex {
             router: spec.family.build(spec.seed ^ SHARD_ROUTE_SALT),
             sketcher,
             shards,
+            pool: None,
         }
+    }
+
+    /// Attach (or detach) a shared fan-out pool. With a pool and more
+    /// than one shard, [`Self::query_fanout`] visits shards in parallel;
+    /// results stay bit-identical to the sequential path (module docs).
+    pub fn set_pool(&mut self, pool: Option<Arc<ThreadPool>>) {
+        self.pool = pool;
+    }
+
+    /// Whether queries currently fan out in parallel.
+    pub fn fanout_parallel(&self) -> bool {
+        self.pool.is_some() && self.shards.len() > 1
     }
 
     pub fn n_shards(&self) -> usize {
@@ -127,7 +152,7 @@ impl ShardedIndex {
 
     /// Total stored sets across shards.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| lock_unpoisoned(s).len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -136,7 +161,7 @@ impl ShardedIndex {
 
     /// Stored sets per shard (diagnostics / per-shard metrics).
     pub fn per_shard_len(&self) -> Vec<usize> {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).collect()
+        self.shards.iter().map(|s| lock_unpoisoned(s).len()).collect()
     }
 
     /// Sketch a set with the shared sketcher (identical to every shard's).
@@ -145,11 +170,15 @@ impl ShardedIndex {
     }
 
     /// Insert a set under `id` into its routed shard. Returns the shard
-    /// index it landed in (for per-shard metrics).
+    /// index it landed in (for per-shard metrics). The shard lock is
+    /// taken poison-tolerantly: `insert_sketch` cannot unwind mid-write
+    /// here (its only assert checks the bin count, which the shared
+    /// sketcher guarantees), so a guard recovered after an unrelated
+    /// panic still protects consistent state.
     pub fn insert(&self, id: u32, set: &[u32]) -> usize {
         let sketch = self.sketch(set);
         let shard = self.shard_of(id);
-        self.shards[shard].lock().unwrap().insert_sketch(id, &sketch);
+        lock_unpoisoned(&self.shards[shard]).insert_sketch(id, &sketch);
         shard
     }
 
@@ -161,18 +190,56 @@ impl ShardedIndex {
 
     /// [`Self::query`] plus the raw per-shard candidate counts (before the
     /// merge dedup), for per-shard metrics.
+    ///
+    /// With a pool attached and more than one shard, the per-shard
+    /// lookups run as scoped tasks on the shared [`ThreadPool`] — the
+    /// sketch is borrowed (sketched once, no copies), concurrency is
+    /// bounded by the pool width, and results land in shard order no
+    /// matter which task finishes first, so per-shard counts and the
+    /// merged union are bit-identical to the sequential path.
     pub fn query_fanout(&self, set: &[u32]) -> (Vec<u32>, Vec<usize>) {
         let sketch = self.sketch(set);
-        let mut merged: Vec<u32> = Vec::new();
-        let mut per_shard = Vec::with_capacity(self.shards.len());
-        for shard in &self.shards {
-            let ids = shard.lock().unwrap().query_sketch(&sketch);
-            per_shard.push(ids.len());
-            merged.extend_from_slice(&ids);
-        }
+        let per_shard: Vec<Vec<u32>> = match &self.pool {
+            Some(pool) if self.shards.len() > 1 => {
+                let sketch = &sketch;
+                pool.scope(
+                    self.shards
+                        .iter()
+                        .map(|shard| move || lock_unpoisoned(shard).query_sketch(sketch))
+                        .collect(),
+                )
+            }
+            _ => self
+                .shards
+                .iter()
+                .map(|shard| lock_unpoisoned(shard).query_sketch(&sketch))
+                .collect(),
+        };
+        Self::merge(per_shard)
+    }
+
+    /// Sequential reference fan-out, ignoring any attached pool — the
+    /// property tests prove [`Self::query_fanout`] bit-identical to this,
+    /// and the `sharded_query` bench compares the two.
+    pub fn query_fanout_sequential(&self, set: &[u32]) -> (Vec<u32>, Vec<usize>) {
+        let sketch = self.sketch(set);
+        Self::merge(
+            self.shards
+                .iter()
+                .map(|shard| lock_unpoisoned(shard).query_sketch(&sketch))
+                .collect(),
+        )
+    }
+
+    /// Merge per-shard candidate lists (in shard order) into the sorted
+    /// deduplicated union + raw per-shard counts. Sorting makes the
+    /// result independent of both shard order and completion order.
+    fn merge(per_shard: Vec<Vec<u32>>) -> (Vec<u32>, Vec<usize>) {
+        let counts = per_shard.iter().map(Vec::len).collect();
+        let mut merged = per_shard.concat();
         merged.sort_unstable();
         merged.dedup();
-        (merged, per_shard)
+        (merged, counts)
     }
 
     /// The path shard `i`'s snapshot is written to / read from, for a
@@ -190,10 +257,15 @@ impl ShardedIndex {
     /// silently reload it with the wrong sketcher. With N > 1 it writes
     /// one plain snapshot per shard at
     /// [`Self::shard_path`] and **then** the manifest at `base` — the
-    /// manifest is the commit point, so an interrupted save cannot leave a
-    /// fresh manifest pointing at unwritten shard files (a crash between
-    /// shard writes can still mix old and new shard files under an *old*
-    /// manifest; full atomicity would need temp+rename of the whole set).
+    /// manifest is the commit point, and every file involved (each shard
+    /// snapshot via [`persist::save`], and the manifest here) is written
+    /// atomically and durably: temp file, fsync, rename. An interrupted
+    /// save therefore can neither leave a fresh manifest pointing at
+    /// unwritten shard files nor truncate any previously valid file; the
+    /// remaining (documented) gap is that a crash between shard renames
+    /// leaves a mix of old and new *complete* shard snapshots under the
+    /// old manifest — a consistent-per-shard but corpus-mixed cut; whole-
+    /// set atomicity would need a versioned snapshot directory.
     /// Returns the number of snapshotted entries, counted under the same
     /// shard locks the bytes were written under — so the count always
     /// matches the snapshot even with concurrent inserts. (With N > 1 each
@@ -206,7 +278,7 @@ impl ShardedIndex {
             SketchScheme::Oph(p) if p.layout == BinLayout::Mod && p.densify == DensifyMode::Paper
         );
         if self.shards.len() == 1 && plain_encodable {
-            let shard = self.shards[0].lock().unwrap();
+            let shard = lock_unpoisoned(&self.shards[0]);
             persist::save(&shard, self.spec.family, self.spec.seed, base)?;
             return Ok(shard.len());
         }
@@ -215,11 +287,17 @@ impl ShardedIndex {
         }
         let mut entries = 0;
         for (i, shard) in self.shards.iter().enumerate() {
-            let shard = shard.lock().unwrap();
+            let shard = lock_unpoisoned(shard);
             persist::save(&shard, self.spec.family, self.spec.seed, Self::shard_path(base, i))?;
             entries += shard.len();
         }
-        let f = std::fs::File::create(base)?;
+        // The manifest is the commit point, so it must be atomic *and*
+        // durable: write it to `<base>.tmp`, fsync, then rename over
+        // `base`. A crash mid-save can leave a stale `.tmp` (and fresh
+        // shard files under an old manifest) but never a truncated or
+        // unsynced manifest claiming shard files that aren't there.
+        let tmp = PathBuf::from(format!("{}.tmp", base.display()));
+        let f = std::fs::File::create(&tmp)?;
         let mut w = BinWriter::new(BufWriter::new(f));
         w.u32(MANIFEST_MAGIC)?;
         w.u8(MANIFEST_VERSION)?;
@@ -232,6 +310,11 @@ impl ShardedIndex {
         w.u64(self.shards.len() as u64)?;
         let mut manifest = w.finish();
         std::io::Write::flush(&mut manifest)?;
+        let file = manifest
+            .into_inner()
+            .map_err(|e| format_err!("flush sharded manifest buffer: {e}"))?;
+        file.sync_all()?;
+        std::fs::rename(&tmp, base)?;
         Ok(entries)
     }
 
@@ -372,6 +455,34 @@ mod tests {
         for s in &sets {
             assert_eq!(loaded.query(s), idx.query(s));
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_commits_manifest_via_temp_rename() {
+        let dir = std::env::temp_dir().join("mixtab_sharded_tmp_rename");
+        let _ = std::fs::remove_dir_all(&dir);
+        let idx = ShardedIndex::new(2, LshParams::new(2, 3), &spec(4));
+        for (i, s) in corpus(10).iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        let base = dir.join("snap.mxsh");
+        idx.save(&base).unwrap();
+        assert!(base.exists(), "manifest missing after save");
+        let tmp = PathBuf::from(format!("{}.tmp", base.display()));
+        assert!(!tmp.exists(), "temp manifest left behind after rename");
+        for i in 0..2 {
+            let shard = ShardedIndex::shard_path(&base, i);
+            assert!(shard.exists(), "shard {i} snapshot missing");
+            let shard_tmp = PathBuf::from(format!("{}.tmp", shard.display()));
+            assert!(!shard_tmp.exists(), "shard {i} temp file left behind");
+        }
+        assert!(ShardedIndex::load(&base).is_ok());
+        // Re-saving over an existing snapshot also commits cleanly.
+        idx.insert(99, &(0..50).collect::<Vec<_>>());
+        assert_eq!(idx.save(&base).unwrap(), idx.len());
+        assert!(!tmp.exists());
+        assert_eq!(ShardedIndex::load(&base).unwrap().len(), idx.len());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -4,7 +4,7 @@
 //! mixtab exp <id|all> [--seed N] [--scale F] [--out DIR] [--data-dir DIR]
 //! mixtab bench [--quick] [--only NAME] [--json PATH] [--baseline PATH] [--tolerance F]
 //! mixtab sketch [--spec SPEC | --scheme NAME [--config FILE]] [--set N,N,...|--text STR]
-//! mixtab serve [--config FILE] [--listen ADDR]
+//! mixtab serve [--config FILE] [--listen ADDR] [--load PATH]
 //! mixtab info
 //! ```
 
@@ -77,7 +77,14 @@ fn cli() -> Command {
         .subcommand(
             Command::new("serve", "run the sketching service")
                 .opt("config", 'c', "FILE", "config file (TOML subset)", None)
-                .opt("listen", '\0', "ADDR", "listen address override", None),
+                .opt("listen", '\0', "ADDR", "listen address override", None)
+                .opt(
+                    "load",
+                    '\0',
+                    "PATH",
+                    "restore the default scheme's LSH index from a snapshot before serving (same provenance checks as the load_index op)",
+                    None,
+                ),
         )
         .subcommand(Command::new("info", "print build/artifact information"))
 }
@@ -335,6 +342,10 @@ fn run_serve(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
             .map(|s| format!("{}[{} shards={}]", s.name, s.spec.scheme_id(), s.shards)),
     );
     println!("schemes: {}", schemes.join(", "));
+    match cfg.fanout_workers() {
+        0 => println!("fanout: sequential"),
+        n => println!("fanout: parallel, {n} worker(s)"),
+    }
     if cfg.rate_limit_rps > 0.0 || cfg.conn_request_budget > 0 {
         println!(
             "limits: rate={}/s burst={} budget={}",
@@ -346,6 +357,10 @@ fn run_serve(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
     let listen = cfg.listen.clone();
     let coordinator = Arc::new(Coordinator::new(cfg));
     println!("pjrt path live: {}", coordinator.pjrt_enabled());
+    if let Some(path) = sub.get("load") {
+        let (entries, shards) = coordinator.registry().get(None)?.load_index(path)?;
+        println!("loaded default index: {entries} entries across {shards} shard(s) from {path}");
+    }
     let server = Server::start(coordinator, &listen)?;
     println!("serving on {} — Ctrl-C to stop", server.addr());
     loop {

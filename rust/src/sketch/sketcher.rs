@@ -23,10 +23,11 @@
 use super::bbit::{BbitSketch, BbitSketcher};
 use super::feature_hash::FeatureHasher;
 use super::minhash::MinHash;
-use super::oph::{OneHashSketcher, OphSketch};
+use super::oph::{estimate_collision, OneHashSketcher, OphSketch};
 use super::scratch::Scratch;
 use super::simhash::SimHash;
 use crate::data::sparse::SparseVector;
+use crate::util::error::{bail, Result};
 
 /// A sketch produced by an erased [`DynSketcher`] — one variant per family.
 #[derive(Debug, Clone, PartialEq)]
@@ -68,6 +69,62 @@ impl SketchValue {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Similarity estimate between two sketches produced by the *same*
+    /// sketcher: the fraction of agreeing coordinates for OPH (§2.1) and
+    /// MinHash (a Jaccard estimate), the Li–König corrected Jaccard
+    /// estimate for b-bit, the sign-random-projection cosine estimate for
+    /// SimHash, and the cosine of the hashed vectors for feature hashing.
+    ///
+    /// Scheme, size, or b-width mismatches are errors, never panics —
+    /// this sits on the coordinator's `estimate` wire path, where the
+    /// family estimators' `assert_eq!` guards must not fire.
+    pub fn estimate(&self, other: &SketchValue) -> Result<f64> {
+        if self.scheme_id() != other.scheme_id() {
+            bail!(
+                "cannot estimate across schemes '{}' and '{}'",
+                self.scheme_id(),
+                other.scheme_id()
+            );
+        }
+        if self.len() != other.len() || self.is_empty() {
+            bail!(
+                "sketch size mismatch ({} vs {} coordinates)",
+                self.len(),
+                other.len()
+            );
+        }
+        Ok(match (self, other) {
+            (SketchValue::Oph(a), SketchValue::Oph(b)) => estimate_collision(a, b),
+            (SketchValue::MinHash(a), SketchValue::MinHash(b)) => {
+                a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len() as f64
+            }
+            (SketchValue::SimHash(a), SketchValue::SimHash(b)) => {
+                // P[bit match] = 1 − θ/π ⇒ cos(π·(1 − frac)), as in
+                // `SimHash::estimate_cosine`.
+                let frac =
+                    a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len() as f64;
+                (std::f64::consts::PI * (1.0 - frac)).cos()
+            }
+            (SketchValue::FeatureHash(a), SketchValue::FeatureHash(b)) => {
+                let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+                let na = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+                let nb = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+                if na == 0.0 || nb == 0.0 {
+                    0.0
+                } else {
+                    dot / (na * nb)
+                }
+            }
+            (SketchValue::BBit(a), SketchValue::BBit(b)) => {
+                if a.b != b.b {
+                    bail!("b-bit width mismatch ({} vs {})", a.b, b.b);
+                }
+                a.estimate(b)
+            }
+            _ => unreachable!("scheme ids checked equal above"),
+        })
     }
 }
 
@@ -271,6 +328,97 @@ mod tests {
         for (s, v) in sets.iter().zip(&batch) {
             assert_eq!(v, &erased.sketch_dyn(s, &mut scratch));
         }
+    }
+
+    #[test]
+    fn value_estimate_matches_family_estimators() {
+        let a: Vec<u32> = (0..300).collect();
+        let b: Vec<u32> = (30..330).collect();
+        let mut scratch = Scratch::new();
+
+        // OPH: identical to the typed sketcher's estimate.
+        let spec = SketchSpec::oph(HashFamily::MixedTab, 3, 64);
+        let oph = spec.build_oph().unwrap();
+        let erased = spec.build();
+        let (va, vb) = (
+            erased.sketch_dyn(&a, &mut scratch),
+            erased.sketch_dyn(&b, &mut scratch),
+        );
+        let expect = oph.estimate(&oph.sketch(&a), &oph.sketch(&b));
+        assert_eq!(va.estimate(&vb).unwrap(), expect);
+        assert_eq!(va.estimate(&va).unwrap(), 1.0);
+
+        // MinHash: identical to `MinHash::estimate`.
+        let spec = SketchSpec::minhash(HashFamily::MixedTab, 4, 32);
+        let mh = spec.build_minhash().unwrap();
+        let erased = spec.build();
+        let (va, vb) = (
+            erased.sketch_dyn(&a, &mut scratch),
+            erased.sketch_dyn(&b, &mut scratch),
+        );
+        let expect = mh.estimate(&mh.sketch(&a), &mh.sketch(&b));
+        assert_eq!(va.estimate(&vb).unwrap(), expect);
+
+        // SimHash: identical to `SimHash::estimate_cosine`.
+        let spec = SketchSpec::simhash(HashFamily::MixedTab, 5, 64);
+        let sh = spec.build_simhash().unwrap();
+        let erased = spec.build();
+        let (va, vb) = (
+            erased.sketch_dyn(&a, &mut scratch),
+            erased.sketch_dyn(&b, &mut scratch),
+        );
+        let (ta, tb) = (Sketcher::sketch(&sh, &a), Sketcher::sketch(&sh, &b));
+        assert_eq!(va.estimate(&vb).unwrap(), sh.estimate_cosine(&ta, &tb));
+
+        // b-bit: identical to `BbitSketch::estimate`.
+        let spec = SketchSpec::bbit(HashFamily::MixedTab, 6, 2, 64);
+        let bb = spec.build_bbit().unwrap();
+        let erased = spec.build();
+        let (va, vb) = (
+            erased.sketch_dyn(&a, &mut scratch),
+            erased.sketch_dyn(&b, &mut scratch),
+        );
+        let expect = bb.sketch(&a).estimate(&bb.sketch(&b));
+        assert_eq!(va.estimate(&vb).unwrap(), expect);
+
+        // Feature hashing: cosine of identical vectors is 1.
+        let spec = SketchSpec::feature_hash(
+            HashFamily::MixedTab,
+            7,
+            64,
+            crate::sketch::SignMode::Paired,
+        );
+        let erased = spec.build();
+        let va = erased.sketch_dyn(&a, &mut scratch);
+        assert!((va.estimate(&va).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn value_estimate_rejects_mismatches() {
+        let set: Vec<u32> = (0..100).collect();
+        let mut scratch = Scratch::new();
+        let oph = SketchSpec::oph(HashFamily::MixedTab, 1, 32)
+            .build()
+            .sketch_dyn(&set, &mut scratch);
+        let oph_small = SketchSpec::oph(HashFamily::MixedTab, 1, 16)
+            .build()
+            .sketch_dyn(&set, &mut scratch);
+        let mh = SketchSpec::minhash(HashFamily::MixedTab, 1, 32)
+            .build()
+            .sketch_dyn(&set, &mut scratch);
+        assert!(oph.estimate(&mh).is_err(), "scheme mismatch must error");
+        assert!(oph.estimate(&oph_small).is_err(), "size mismatch must error");
+        let b2 = SketchValue::BBit(crate::sketch::BbitSketch {
+            b: 2,
+            vals: vec![0, 1],
+        });
+        let b4 = SketchValue::BBit(crate::sketch::BbitSketch {
+            b: 4,
+            vals: vec![0, 1],
+        });
+        assert!(b2.estimate(&b4).is_err(), "b-width mismatch must error");
+        let empty = SketchValue::MinHash(Vec::new());
+        assert!(empty.estimate(&empty).is_err(), "empty sketches must error");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! * [`config`] — TOML-subset config files for the coordinator.
 //! * [`cli`] — declarative command-line parsing for the `mixtab` binary.
 //! * [`threadpool`] — fixed worker pool with job handles.
+//! * [`sync`] — poison-tolerant lock helpers for the wire request paths.
 //! * [`prop`] — property-based testing with integrated shrinking.
 //! * [`bench`] — measurement harness used by `cargo bench` targets
 //!   (warmup + repeated timed runs + robust summary statistics).
@@ -26,6 +27,7 @@ pub mod json;
 pub mod csv;
 pub mod config;
 pub mod cli;
+pub mod sync;
 pub mod threadpool;
 pub mod prop;
 pub mod bench;

@@ -1,0 +1,68 @@
+//! Poison-tolerant lock acquisition for the serving layers.
+//!
+//! `std` mutexes poison when a holder panics. On the coordinator's wire
+//! paths that turns one panicking request into a permanent denial of
+//! service: every later request on *any* connection would panic again on
+//! `lock().unwrap()`. The state guarded on those paths — metric counters,
+//! the spec-sketcher cache, index shards whose mutations don't unwind
+//! mid-write — stays valid across a panic, so the right recovery is to
+//! take the guard anyway and keep serving. These helpers centralise that
+//! decision (and make `service.rs` grep-clean of `unwrap`/`expect` on
+//! request paths).
+//!
+//! Use the plain `lock().unwrap()` style everywhere a panic is a
+//! programming error worth propagating (tests, experiment drivers);
+//! reach for these only where a wire request must never take the
+//! process down.
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Read-lock an `RwLock`, recovering the guard from poisoning.
+pub fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Write-lock an `RwLock`, recovering the guard from poisoning.
+pub fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+
+    #[test]
+    fn mutex_recovers_after_panic() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_unpoisoned(&m), 7);
+        *lock_unpoisoned(&m) = 8;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_recovers_after_panic() {
+        let l = Arc::new(RwLock::new(1usize));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _guard = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert_eq!(*read_unpoisoned(&l), 1);
+        *write_unpoisoned(&l) = 2;
+        assert_eq!(*read_unpoisoned(&l), 2);
+    }
+}

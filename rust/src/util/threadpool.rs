@@ -1,14 +1,15 @@
 //! A fixed-size worker thread pool.
 //!
-//! Used by the coordinator's sketch workers and by experiment drivers to
+//! Used by the coordinator's shard fan-out, and by experiment drivers to
 //! parallelise independent repetitions. Plain `std::thread` + `mpsc`; no
 //! external runtime. Jobs are `FnOnce() + Send` closures; [`ThreadPool::scope`]
 //! offers a rayon-like scoped API for borrowing the caller's stack.
 
+use crate::util::sync::lock_unpoisoned;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -23,7 +24,10 @@ pub struct ThreadPool {
     tx: Sender<Msg>,
     shared_rx: Arc<Mutex<Receiver<Msg>>>,
     workers: Vec<JoinHandle<()>>,
-    in_flight: Arc<AtomicUsize>,
+    /// In-flight job count + the condvar [`Self::wait_idle`] parks on —
+    /// workers signal when the count drains to zero, so an idle waiter
+    /// sleeps instead of burning a core on `yield_now`.
+    in_flight: Arc<(Mutex<usize>, Condvar)>,
     panics: Arc<AtomicUsize>,
 }
 
@@ -33,7 +37,7 @@ impl ThreadPool {
         assert!(n >= 1, "thread pool needs at least one worker");
         let (tx, rx) = channel::<Msg>();
         let shared_rx = Arc::new(Mutex::new(rx));
-        let in_flight = Arc::new(AtomicUsize::new(0));
+        let in_flight = Arc::new((Mutex::new(0usize), Condvar::new()));
         let panics = Arc::new(AtomicUsize::new(0));
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
@@ -45,7 +49,7 @@ impl ThreadPool {
                     .name(format!("mixtab-worker-{i}"))
                     .spawn(move || loop {
                         let msg = {
-                            let guard = rx.lock().expect("pool queue poisoned");
+                            let guard = lock_unpoisoned(&rx);
                             guard.recv()
                         };
                         match msg {
@@ -53,7 +57,12 @@ impl ThreadPool {
                                 if catch_unwind(AssertUnwindSafe(job)).is_err() {
                                     pan.fetch_add(1, Ordering::SeqCst);
                                 }
-                                inf.fetch_sub(1, Ordering::SeqCst);
+                                let (count, idle) = &*inf;
+                                let mut n = lock_unpoisoned(count);
+                                *n -= 1;
+                                if *n == 0 {
+                                    idle.notify_all();
+                                }
                             }
                             Ok(Msg::Shutdown) | Err(_) => break,
                         }
@@ -77,16 +86,21 @@ impl ThreadPool {
 
     /// Submit a job.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        *lock_unpoisoned(&self.in_flight.0) += 1;
         self.tx
             .send(Msg::Run(Box::new(job)))
             .expect("pool receiver gone");
     }
 
-    /// Block until all submitted jobs have completed.
+    /// Block until all submitted jobs have completed. Parks on a condvar
+    /// signalled by the worker that drains the last job — no busy-spin, so
+    /// an idle waiter costs nothing. Jobs that panicked still count as
+    /// completed (see [`Self::panic_count`]), exactly as before.
     pub fn wait_idle(&self) {
-        while self.in_flight.load(Ordering::SeqCst) != 0 {
-            std::thread::yield_now();
+        let (count, idle) = &*self.in_flight;
+        let mut n = lock_unpoisoned(count);
+        while *n != 0 {
+            n = idle.wait(n).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -96,18 +110,32 @@ impl ThreadPool {
     }
 
     /// Run a batch of scoped closures that may borrow from the caller's
-    /// stack, blocking until all complete. Implemented with
+    /// stack, blocking until all complete. Results come back in task
+    /// order regardless of execution order. Implemented with
     /// `std::thread::scope` so it is safe without `'static` bounds.
     ///
-    /// This spawns fresh scoped threads (capped at the pool size at a time)
-    /// rather than reusing pool workers — acceptable for the coarse-grained
-    /// experiment parallelism it is used for.
+    /// The **calling thread participates** in the work loop, so a call
+    /// with W = `min(pool size, task count)` usable width spawns only
+    /// W − 1 fresh scoped threads — a single-task scope (and a two-shard
+    /// fan-out's second lookup) runs with at most one spawn. Scoped
+    /// threads are used instead of the resident workers because handing
+    /// a borrowing closure to a long-lived worker would need `unsafe`
+    /// lifetime erasure, which this crate avoids; the resident workers
+    /// serve [`Self::execute`] jobs. The pool size bounds each *call's*
+    /// concurrency (concurrent `scope` calls each get their own width —
+    /// the bound is per call, not global). Callers are the experiment
+    /// drivers (coarse tasks, spawn cost invisible) and the sharded
+    /// fan-out ([`crate::lsh::ShardedIndex::query_fanout`], where the
+    /// per-query spawn cost is the price of a safe borrowed fan-out —
+    /// measured against the sequential path by the `sharded_query`
+    /// bench; reusing resident workers for fan-out is a tracked ROADMAP
+    /// candidate).
     pub fn scope<'env, T, F>(&self, tasks: Vec<F>) -> Vec<T>
     where
         T: Send + 'env,
         F: FnOnce() -> T + Send + 'env,
     {
-        let width = self.size();
+        let spawned = self.size().min(tasks.len()).saturating_sub(1);
         let mut results: Vec<Option<T>> = Vec::new();
         results.resize_with(tasks.len(), || None);
         let mut tasks: Vec<Option<F>> = tasks.into_iter().map(Some).collect();
@@ -115,22 +143,29 @@ impl ThreadPool {
         let tasks_ref = Mutex::new(&mut tasks);
         let results_ref = Mutex::new(&mut results);
         std::thread::scope(|s| {
-            for _ in 0..width {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::SeqCst);
-                    let task = {
-                        let mut guard = tasks_ref.lock().unwrap();
-                        match guard.get_mut(i) {
-                            Some(slot) => slot.take(),
-                            None => return,
-                        }
-                    };
-                    let Some(task) = task else { return };
-                    let out = task();
-                    let mut guard = results_ref.lock().unwrap();
-                    guard[i] = Some(out);
-                });
+            // Shared work loop: claim the next task index, run it, store
+            // its result in its slot. Non-`move`, so every capture is a
+            // shared reference and the closure is `Copy` — one body for
+            // the spawned threads and the caller.
+            let work = || loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                let task = {
+                    let mut guard = tasks_ref.lock().unwrap();
+                    match guard.get_mut(i) {
+                        Some(slot) => slot.take(),
+                        None => return,
+                    }
+                };
+                let Some(task) = task else { return };
+                let out = task();
+                let mut guard = results_ref.lock().unwrap();
+                guard[i] = Some(out);
+            };
+            for _ in 0..spawned {
+                s.spawn(work);
             }
+            // The caller works too instead of blocking idle.
+            work();
         });
         results
             .into_iter()
@@ -190,6 +225,21 @@ mod tests {
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::SeqCst), 1);
         assert_eq!(pool.panic_count(), 1);
+    }
+
+    #[test]
+    fn wait_idle_parks_and_wakes() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle(); // idle pool: returns immediately
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle(); // must sleep through the job, not miss the wake
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+        pool.wait_idle(); // and stay reusable
     }
 
     #[test]

@@ -53,8 +53,15 @@ fn tcp_flow_native() {
     let Response::Candidates { ids } = r else { panic!() };
     assert!(ids.contains(&0));
 
-    // Estimate between two stored sets tracks the exact Jaccard loosely.
-    let r = c.call(&Request::Estimate { a: 0, b: 1 }).unwrap();
+    // Estimate between two stored ids tracks the exact Jaccard loosely
+    // (served from the sketches stored at insert time).
+    let r = c
+        .call(&Request::Estimate {
+            a: 0,
+            b: 1,
+            scheme: None,
+        })
+        .unwrap();
     let Response::Estimate { jaccard } = r else { panic!() };
     let truth = jaccard_exact(&sets[0], &sets[1]);
     assert!((jaccard - truth).abs() < 0.25, "est {jaccard} truth {truth}");
@@ -384,6 +391,263 @@ fn multi_scheme_roundtrips_over_tcp() {
         .map(|s| s.get("inserts").unwrap().as_i64().unwrap())
         .sum();
     assert_eq!(alpha_shard_inserts, 20, "per-shard inserts must sum to total");
+    server.stop();
+}
+
+/// Scheme-aware `estimate`/`save_index`/`load_index` over TCP, including
+/// every panic-free error path: index-less (non-OPH) schemes reject
+/// persistence cleanly (the pre-PR5 `save_index` expect would have killed
+/// the connection thread), unknown schemes and ids error, provenance
+/// mismatches are rejected, and a snapshot round-trips through
+/// `load_index` on a fresh coordinator with a parallel fan-out pool.
+#[test]
+fn scheme_aware_estimate_and_persistence_over_tcp() {
+    let dir = std::env::temp_dir().join("mixtab_e2e_load_save");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = CoordinatorConfig {
+        enable_pjrt: false,
+        fh_dim: 32,
+        oph_k: 60,
+        lsh_k: 4,
+        lsh_l: 6,
+        workers: 3, // parallel fan-out over alpha's 3 shards
+        schemes: vec![
+            SchemeConfig {
+                name: "alpha".into(),
+                spec: SketchSpec::oph(HashFamily::MixedTab, 5, 48),
+                shards: 3,
+            },
+            SchemeConfig {
+                name: "dense".into(),
+                spec: SketchSpec::minhash(HashFamily::MixedTab, 9, 16),
+                shards: 1,
+            },
+        ],
+        ..Default::default()
+    };
+    let coordinator = Arc::new(Coordinator::new(cfg.clone()));
+    assert_eq!(coordinator.fanout_workers(), 3);
+    let server = Server::start(coordinator, "127.0.0.1:0").unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+
+    let (db_ds, _) = mnist_like::default_split(30, 5, 4);
+    let sets = db_ds.as_sets();
+    for (i, s) in sets.iter().enumerate() {
+        let r = c
+            .call(&Request::LshInsert {
+                id: i as u32,
+                set: s.clone(),
+                scheme: Some("alpha".into()),
+            })
+            .unwrap();
+        assert!(matches!(r, Response::Inserted { .. }));
+    }
+
+    // Estimate within the named scheme: served from the 48-bin OPH
+    // sketches alpha stored at insert time, tracking the exact Jaccard.
+    let Response::Estimate { jaccard } = c
+        .call(&Request::Estimate {
+            a: 0,
+            b: 1,
+            scheme: Some("alpha".into()),
+        })
+        .unwrap()
+    else {
+        panic!()
+    };
+    let truth = jaccard_exact(&sets[0], &sets[1]);
+    assert!((jaccard - truth).abs() < 0.3, "est {jaccard} truth {truth}");
+    // The default scheme never saw these ids — clean error, not a
+    // cross-scheme answer.
+    let Response::Error { message } = c
+        .call(&Request::Estimate {
+            a: 0,
+            b: 1,
+            scheme: None,
+        })
+        .unwrap()
+    else {
+        panic!()
+    };
+    assert!(message.contains("unknown id"), "{message}");
+
+    // Unknown scheme names error cleanly on every new scheme-aware op.
+    let snap = dir.join("alpha.mxsh").display().to_string();
+    for req in [
+        Request::Estimate {
+            a: 0,
+            b: 1,
+            scheme: Some("nope".into()),
+        },
+        Request::SaveIndex {
+            path: snap.clone(),
+            scheme: Some("nope".into()),
+        },
+        Request::LoadIndex {
+            path: snap.clone(),
+            scheme: Some("nope".into()),
+        },
+        Request::IndexDoc {
+            id: 1,
+            text: "doc".into(),
+            scheme: Some("nope".into()),
+        },
+        Request::QueryDoc {
+            text: "doc".into(),
+            scheme: Some("nope".into()),
+        },
+    ] {
+        let Response::Error { message } = c.call(&req).unwrap() else {
+            panic!("expected unknown-scheme error")
+        };
+        assert!(message.contains("unknown scheme"), "{message}");
+    }
+
+    // Index-less (non-OPH) scheme: save/load are wire errors and the
+    // connection survives — this is the path that used to be an
+    // `.expect()` away from killing the connection thread.
+    for req in [
+        Request::SaveIndex {
+            path: dir.join("dense.mxsh").display().to_string(),
+            scheme: Some("dense".into()),
+        },
+        Request::LoadIndex {
+            path: snap.clone(),
+            scheme: Some("dense".into()),
+        },
+    ] {
+        let Response::Error { message } = c.call(&req).unwrap() else {
+            panic!("index-less scheme must reject persistence")
+        };
+        assert!(message.contains("no LSH index"), "{message}");
+    }
+    assert!(matches!(
+        c.call(&Request::Stats).unwrap(),
+        Response::Stats { .. }
+    ));
+
+    // Snapshot alpha (3 shards → manifest + per-shard files).
+    let Response::Saved { entries, .. } = c
+        .call(&Request::SaveIndex {
+            path: snap.clone(),
+            scheme: Some("alpha".into()),
+        })
+        .unwrap()
+    else {
+        panic!()
+    };
+    assert_eq!(entries, sets.len());
+    server.stop();
+
+    // A fresh coordinator restores the snapshot over TCP.
+    let server = Server::start(Arc::new(Coordinator::new(cfg)), "127.0.0.1:0").unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+    // …but only into the scheme whose provenance matches: the default
+    // scheme's spec (different seed/family derivation) is rejected.
+    let Response::Error { message } = c
+        .call(&Request::LoadIndex {
+            path: snap.clone(),
+            scheme: None,
+        })
+        .unwrap()
+    else {
+        panic!("default-scheme load of an alpha snapshot must fail")
+    };
+    assert!(message.contains("does not match"), "{message}");
+    let Response::Loaded {
+        entries, shards, ..
+    } = c
+        .call(&Request::LoadIndex {
+            path: snap.clone(),
+            scheme: Some("alpha".into()),
+        })
+        .unwrap()
+    else {
+        panic!()
+    };
+    assert_eq!((entries, shards), (sets.len(), 3));
+    // The reloaded shards serve fan-out queries (self-retrieval).
+    for (i, s) in sets.iter().enumerate().take(8) {
+        let Response::Candidates { ids } = c
+            .call(&Request::LshQuery {
+                set: s.clone(),
+                scheme: Some("alpha".into()),
+            })
+            .unwrap()
+        else {
+            panic!()
+        };
+        assert!(ids.contains(&(i as u32)), "set {i} lost across save/load");
+    }
+    // The estimate sketch store is not part of snapshots (documented):
+    // loaded ids serve queries, not estimates.
+    let Response::Error { .. } = c
+        .call(&Request::Estimate {
+            a: 0,
+            b: 1,
+            scheme: Some("alpha".into()),
+        })
+        .unwrap()
+    else {
+        panic!()
+    };
+    // A missing snapshot errors cleanly and leaves the loaded index
+    // serving.
+    let Response::Error { .. } = c
+        .call(&Request::LoadIndex {
+            path: dir.join("missing.mxsh").display().to_string(),
+            scheme: Some("alpha".into()),
+        })
+        .unwrap()
+    else {
+        panic!()
+    };
+    let Response::Candidates { ids } = c
+        .call(&Request::LshQuery {
+            set: sets[0].clone(),
+            scheme: Some("alpha".into()),
+        })
+        .unwrap()
+    else {
+        panic!()
+    };
+    assert!(ids.contains(&0));
+    // Stats surface the persistence counters and per-scheme estimates.
+    let Response::Stats { json } = c.call(&Request::Stats).unwrap() else {
+        panic!()
+    };
+    assert_eq!(json.get("index_loads").unwrap().as_i64(), Some(1));
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A request line carrying an unknown field — the classic mistyped
+/// `scheme` — is rejected at the parser, not silently served by the
+/// default scheme.
+#[test]
+fn mistyped_scheme_field_is_rejected_on_the_wire() {
+    use std::io::{BufRead, BufReader, BufWriter, Write};
+    let coordinator = Arc::new(Coordinator::new(CoordinatorConfig {
+        enable_pjrt: false,
+        fh_dim: 16,
+        oph_k: 20,
+        ..Default::default()
+    }));
+    let server = Server::start(coordinator, "127.0.0.1:0").unwrap();
+    let stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut w = BufWriter::new(stream.try_clone().unwrap());
+    let mut r = BufReader::new(stream);
+    w.write_all(b"{\"op\":\"estimate\",\"a\":1,\"b\":2,\"shceme\":\"alpha\"}\n")
+        .unwrap();
+    w.flush().unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let resp = Response::from_json_line(line.trim_end()).unwrap();
+    let Response::Error { message } = resp else {
+        panic!("mistyped field must not be served: {resp:?}")
+    };
+    assert!(message.contains("unknown field"), "{message}");
     server.stop();
 }
 

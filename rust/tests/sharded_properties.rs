@@ -5,7 +5,9 @@
 //!   may and do differ),
 //! * a `ShardedIndex` with N = 1 is bit-identical to a bare `LshIndex` —
 //!   query results and persisted snapshot bytes,
-//! * fan-out query results are independent of the shard count.
+//! * fan-out query results are independent of the shard count,
+//! * the pool-parallel fan-out is bit-identical to the sequential path
+//!   for N ∈ {1, 2, 4}, including non-default OPH layouts.
 
 use mixtab::hash::HashFamily;
 use mixtab::lsh::{persist, LshIndex, LshParams, ShardedIndex};
@@ -140,6 +142,89 @@ fn query_results_independent_of_shard_count() {
         // Self-retrieval holds at every shard count.
         for (i, s) in sets.iter().enumerate() {
             assert!(idx.query(s).contains(&(i as u32)));
+        }
+    }
+}
+
+#[test]
+fn parallel_fanout_bit_identical_to_sequential() {
+    use mixtab::util::threadpool::ThreadPool;
+    use std::sync::Arc;
+    let params = LshParams::new(5, 6);
+    let specs = [
+        // Paper-default layout/densify…
+        oph_spec(HashFamily::MixedTab, 3),
+        // …and a non-default layout + densification mode.
+        SketchSpec::oph_with(
+            HashFamily::MixedTab,
+            13,
+            OphParams {
+                k: 1, // overridden by (K, L)
+                layout: BinLayout::Range,
+                densify: DensifyMode::Rotation,
+            },
+        ),
+    ];
+    let sets = corpus(80, 5);
+    let probes = corpus(40, 6);
+    // A pool narrower than the widest shard count, so tasks queue.
+    let pool = Arc::new(ThreadPool::new(3));
+    for spec in specs {
+        for n in [1usize, 2, 4] {
+            let mut par = ShardedIndex::new(n, params, &spec);
+            par.set_pool(Some(Arc::clone(&pool)));
+            assert_eq!(par.fanout_parallel(), n > 1);
+            let seq = ShardedIndex::new(n, params, &spec);
+            for (i, s) in sets.iter().enumerate() {
+                par.insert(i as u32, s);
+                seq.insert(i as u32, s);
+            }
+            for p in probes.iter().chain(sets.iter()) {
+                let (ids, counts) = par.query_fanout(p);
+                // Bit-identical to the same index's sequential reference
+                // path — merged union *and* per-shard counts…
+                assert_eq!(
+                    (ids.clone(), counts),
+                    par.query_fanout_sequential(p),
+                    "N={n} spec={spec}"
+                );
+                // …and to an index that never had a pool.
+                assert_eq!(ids, seq.query(p), "N={n} spec={spec}");
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_fanout_results_independent_of_shard_count() {
+    use mixtab::util::threadpool::ThreadPool;
+    use std::sync::Arc;
+    // The PR-4 N-independence property, re-proven on the parallel path:
+    // pool-backed fan-out at any N equals the unsharded reference.
+    let params = LshParams::new(5, 6);
+    let spec = oph_spec(HashFamily::MixedTab, 3);
+    let sets = corpus(80, 5);
+    let probes = corpus(40, 6);
+    let reference = {
+        let idx = ShardedIndex::new(1, params, &spec);
+        for (i, s) in sets.iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        probes.iter().map(|p| idx.query(p)).collect::<Vec<_>>()
+    };
+    let pool = Arc::new(ThreadPool::new(4));
+    for n in [2usize, 4] {
+        let mut idx = ShardedIndex::new(n, params, &spec);
+        idx.set_pool(Some(Arc::clone(&pool)));
+        for (i, s) in sets.iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        for (p, expect) in probes.iter().zip(&reference) {
+            assert_eq!(
+                &idx.query(p),
+                expect,
+                "N={n} parallel fan-out diverged from the unsharded result"
+            );
         }
     }
 }
