@@ -493,6 +493,98 @@ pub fn coordinator_service(bench: &mut Bench) {
         // Smoke assertion: everything completed.
         assert_eq!(total as usize, clients * per_client);
     }
+
+    // Batched vs unbatched op throughput over TCP: the same pipelined
+    // sketch/insert/query mix served with the cross-connection OpBatcher
+    // on (default) and off (every op on the direct worker path).
+    use crate::coordinator::server::{PipelinedClient, Server};
+    let (tcp_clients, ops_per_client) = if bench.is_quick() { (4, 50) } else { (8, 400) };
+    println!(
+        "coordinator_service: {tcp_clients} pipelined TCP clients × {ops_per_client} ops (insert/query/sketch mix)"
+    );
+    for (label, op_batch) in [("batched", 32usize), ("unbatched", 0)] {
+        let c = Arc::new(Coordinator::new(CoordinatorConfig {
+            enable_pjrt: false,
+            oph_k: 64,
+            op_batch,
+            request_workers: 4,
+            ..Default::default()
+        }));
+        let server = Server::start(Arc::clone(&c), "127.0.0.1:0").expect("server");
+        let addr = server.addr();
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..tcp_clients)
+            .map(|cl| {
+                std::thread::spawn(move || {
+                    let mut client = PipelinedClient::connect(addr).expect("connect");
+                    let mut rng = Xoshiro256::stream(7, cl as u64);
+                    let mut ok = 0u64;
+                    // Closed loop with a pipelining window: keep up to 16
+                    // tagged ops in flight per connection.
+                    const WINDOW: usize = 16;
+                    let (mut sent, mut inflight) = (0usize, 0usize);
+                    while sent < ops_per_client || inflight > 0 {
+                        while sent < ops_per_client && inflight < WINDOW {
+                            let set: Vec<u32> =
+                                (0..40).map(|_| rng.next_u32() % 100_000).collect();
+                            let req = match sent % 3 {
+                                0 => Request::LshInsert {
+                                    id: (cl * ops_per_client + sent) as u32,
+                                    set,
+                                    scheme: None,
+                                },
+                                1 => Request::LshQuery { set, scheme: None },
+                                _ => Request::Sketch {
+                                    set,
+                                    spec: None,
+                                    scheme: None,
+                                },
+                            };
+                            client.send(&req).expect("send");
+                            sent += 1;
+                            inflight += 1;
+                        }
+                        let (_, resp) = client.recv().expect("recv");
+                        if !matches!(resp, Response::Error { .. }) {
+                            ok += 1;
+                        }
+                        inflight -= 1;
+                    }
+                    ok
+                })
+            })
+            .collect();
+        let mut total = 0u64;
+        for h in handles {
+            total += h.join().expect("client");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = total as f64 / wall;
+        let snap = c.metrics.snapshot();
+        let occupancy = match (
+            snap.get("op_batches").and_then(|j| j.as_i64()),
+            snap.get("op_batch_rows").and_then(|j| j.as_i64()),
+        ) {
+            (Some(b), Some(r)) if b > 0 => r as f64 / b as f64,
+            _ => 0.0,
+        };
+        println!(
+            "  {label:<14} {} op/s  op-batch occupancy={occupancy:.2}",
+            fmt_rate(rps)
+        );
+        bench.record_rate(
+            "coordinator_service",
+            &format!("{label}/op_rate"),
+            rps,
+            if rps > 0.0 { 1e9 / rps } else { 0.0 },
+        );
+        assert_eq!(
+            total as usize,
+            tcp_clients * ops_per_client,
+            "{label}: every op answered"
+        );
+        server.stop();
+    }
 }
 
 /// PJRT artifact execution — FH and OPH batch latency/throughput vs the

@@ -1,21 +1,30 @@
-//! Dynamic batcher for FH transforms.
+//! Dynamic batchers: FH rows for PJRT, and wire ops across connections.
 //!
-//! The PJRT artifacts are compiled for a fixed `[batch, nnz]` shape, so the
-//! batcher's job is classic serving-systems work: accumulate single-row
-//! requests into a full batch, dispatch when the batch fills **or** the
-//! oldest request has waited `max_delay_us` (bounded tail latency), pad the
-//! remainder, and scatter per-row results back to the waiting callers.
+//! [`FhBatcher`]: the PJRT artifacts are compiled for a fixed `[batch, nnz]`
+//! shape, so the batcher's job is classic serving-systems work: accumulate
+//! single-row requests into a full batch, dispatch when the batch fills
+//! **or** the oldest request has waited `max_delay_us` (bounded tail
+//! latency), pad the remainder, and scatter per-row results back to the
+//! waiting callers.
 //!
-//! Backpressure: the submit queue is bounded (`queue_cap`); when PJRT falls
+//! [`OpBatcher`] generalises the same fill-or-deadline loop to whole wire
+//! ops (`sketch`/`insert`/`query`), so requests from *different*
+//! connections coalesce into batched coordinator calls. It is generic over
+//! an [`OpExecutor`] so the deterministic test harness can inject gating
+//! and counting executors.
+//!
+//! Backpressure: both submit queues are bounded; when the consumer falls
 //! behind, `submit` fails fast and the caller runs the bit-compatible
-//! native path instead — load shedding rather than queue collapse.
+//! direct path instead — load shedding rather than queue collapse.
 
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::Response;
 use crate::runtime::artifact::ArtifactKind;
 use crate::runtime::executor::ExecutorHandle;
 use crate::util::error::{format_err, Result};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// One row's result: the dense output and its squared norm.
@@ -156,6 +165,129 @@ fn batcher_loop(
                 }
             }
         }
+    }
+}
+
+/// A batchable wire op: the scheme-routed subset of the protocol whose
+/// batched execution is bit-identical to per-request serving (ad-hoc-spec
+/// sketches, doc ops, persistence, and stats stay on the direct path).
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchOp {
+    Sketch { set: Vec<u32> },
+    Insert { id: u32, set: Vec<u32> },
+    Query { set: Vec<u32> },
+}
+
+/// One queued op plus its completion callback. The callback is invoked
+/// exactly once with the op's response — by the executor on the batch
+/// path, or by the caller after a shed.
+pub struct OpJob {
+    /// Scheme selector as it appeared on the wire (`None` = default).
+    pub scheme: Option<String>,
+    pub op: BatchOp,
+    pub done: Box<dyn FnOnce(Response) + Send + 'static>,
+}
+
+impl OpJob {
+    /// Deliver the response, consuming the job.
+    pub fn complete(self, resp: Response) {
+        (self.done)(resp);
+    }
+}
+
+/// Executes one collected batch, completing every job. Implementors must
+/// not panic (the coordinator's no-panic request invariant) and must
+/// complete every job exactly once — a dropped callback leaves the
+/// connection's pending slot occupied forever.
+pub trait OpExecutor: Send + Sync + 'static {
+    fn run_ops(&self, jobs: Vec<OpJob>);
+}
+
+/// Cross-connection op batcher: the [`FhBatcher`] fill-or-deadline loop,
+/// lifted from FH rows to whole wire ops.
+pub struct OpBatcher {
+    /// `Some` until drop; taken then so the loop's `recv` sees
+    /// disconnection and drains.
+    tx: Option<SyncSender<OpJob>>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl OpBatcher {
+    /// Spawn the batcher thread. `max_batch >= 1`; `queue_cap` bounds the
+    /// submit queue (overflow sheds to the caller).
+    pub fn spawn(
+        executor: Arc<dyn OpExecutor>,
+        max_batch: usize,
+        max_delay_us: u64,
+        queue_cap: usize,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        assert!(max_batch >= 1, "op batcher needs max_batch >= 1");
+        let (tx, rx) = std::sync::mpsc::sync_channel::<OpJob>(queue_cap);
+        let join = std::thread::Builder::new()
+            .name("mixtab-op-batcher".into())
+            .spawn(move || op_batcher_loop(executor, max_batch, max_delay_us, rx, metrics))
+            .expect("spawn op batcher");
+        Self {
+            tx: Some(tx),
+            join: Some(join),
+        }
+    }
+
+    /// Submit one op. On a full (or shut-down) queue the job is handed
+    /// back so the caller can run it on the direct path — load shedding,
+    /// never silent loss.
+    pub fn submit(&self, job: OpJob) -> std::result::Result<(), OpJob> {
+        let tx = self.tx.as_ref().expect("op batcher sender taken");
+        match tx.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(j) | TrySendError::Disconnected(j)) => Err(j),
+        }
+    }
+}
+
+impl Drop for OpBatcher {
+    /// Drain-on-shutdown: dropping the sender lets the loop's `recv` keep
+    /// returning already-queued jobs until the channel is empty, so every
+    /// accepted op is still executed and completed before the thread exits.
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+fn op_batcher_loop(
+    executor: Arc<dyn OpExecutor>,
+    max_batch: usize,
+    max_delay_us: u64,
+    rx: Receiver<OpJob>,
+    metrics: Arc<Metrics>,
+) {
+    let max_delay = Duration::from_micros(max_delay_us);
+    loop {
+        // Block for the first op of the next batch.
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return, // sender dropped and queue drained — shut down
+        };
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + max_delay;
+        while jobs.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Metrics::inc(&metrics.op_batches);
+        Metrics::add(&metrics.op_batch_rows, jobs.len() as u64);
+        executor.run_ops(jobs);
     }
 }
 

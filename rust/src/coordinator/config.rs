@@ -7,6 +7,9 @@
 //! [service]
 //! listen = "127.0.0.1:7878"
 //! workers = 2          # shard fan-out pool width (< 2 = sequential fan-out)
+//! request_workers = 4  # fixed pool executing decoded requests (event loop)
+//! idle_timeout_ms = 0  # close connections idle this long (0 = never)
+//! conn_queue_cap = 64  # per-connection pending cap (in-flight + queued replies)
 //!
 //! [fh]
 //! dim = 128
@@ -35,12 +38,18 @@
 //! max_delay_us = 200
 //! queue_cap = 256
 //! artifacts_dir = "artifacts"
+//! # Cross-connection op batching: coalesce `sketch`/`insert`/`query`
+//! # ops from different connections into batched calls (0 = off).
+//! op_batch = 32
+//! op_max_delay_us = 200
+//! op_queue_cap = 256
 //!
 //! # Per-connection throttling at the server layer (0 disables either knob).
 //! [limits]
 //! requests_per_sec = 200     # token-bucket rate per connection
 //! burst = 50                 # bucket capacity (defaults to requests_per_sec)
 //! max_requests_per_conn = 0  # hard per-connection request budget
+//! max_connections = 0        # global concurrent-connection cap (0 = unlimited)
 //!
 //! # Additional named schemes served concurrently with the default one.
 //! # Each gets its own sketcher and (for OPH specs) its own sharded index;
@@ -138,6 +147,16 @@ pub struct CoordinatorConfig {
     /// scheme configured — fan-out stays sequential; see
     /// [`Self::fanout_workers`].
     pub workers: usize,
+    /// Fixed worker pool executing decoded requests behind the event
+    /// loop — the serving concurrency, decoupled from connection count.
+    pub request_workers: usize,
+    /// Close a connection with no in-flight work after this long without
+    /// traffic; 0 disables.
+    pub idle_timeout_ms: u64,
+    /// Per-connection pending cap: in-flight requests plus queued
+    /// responses. At the cap the event loop stops reading the socket, so
+    /// backpressure propagates to the client via TCP.
+    pub conn_queue_cap: usize,
     /// FH output dimension d'.
     pub fh_dim: usize,
     /// Basic hash family for every sketch (the paper's variable).
@@ -167,12 +186,22 @@ pub struct CoordinatorConfig {
     /// Hard per-connection request budget; 0 disables. Once exhausted the
     /// connection gets one budget-exhausted error and is closed.
     pub conn_request_budget: u64,
+    /// Global concurrent-connection cap; 0 disables. Connection N+1 gets
+    /// one clean error line and is closed, never left hanging.
+    pub max_connections: usize,
     /// Use the PJRT runtime when artifacts are present.
     pub enable_pjrt: bool,
     /// Batch window: how long the batcher waits to fill a batch.
     pub max_delay_us: u64,
     /// Bounded batcher queue; overflow sheds to the native path.
     pub queue_cap: usize,
+    /// Cross-connection op batch size for `sketch`/`insert`/`query`
+    /// (fill-or-deadline dispatch); 0 turns op batching off.
+    pub op_batch: usize,
+    /// Op-batch window: how long the op batcher waits to fill a batch.
+    pub op_max_delay_us: u64,
+    /// Bounded op-batcher queue; overflow sheds to the direct path.
+    pub op_queue_cap: usize,
     /// Where `manifest.json` lives.
     pub artifacts_dir: PathBuf,
 }
@@ -182,6 +211,9 @@ impl Default for CoordinatorConfig {
         Self {
             listen: "127.0.0.1:7878".into(),
             workers: 2,
+            request_workers: 4,
+            idle_timeout_ms: 0,
+            conn_queue_cap: 64,
             fh_dim: 128,
             family: HashFamily::MixedTab,
             sign: SignMode::Paired,
@@ -195,9 +227,13 @@ impl Default for CoordinatorConfig {
             rate_limit_rps: 0.0,
             rate_limit_burst: 0,
             conn_request_budget: 0,
+            max_connections: 0,
             enable_pjrt: true,
             max_delay_us: 200,
             queue_cap: 256,
+            op_batch: 32,
+            op_max_delay_us: 200,
+            op_queue_cap: 256,
             artifacts_dir: PathBuf::from("artifacts"),
         }
     }
@@ -268,9 +304,45 @@ impl CoordinatorConfig {
         if conn_request_budget < 0 {
             bail!("[limits] max_requests_per_conn must be >= 0, got {conn_request_budget}");
         }
+        let max_connections = cfg.i64_or("limits", "max_connections", d.max_connections as i64);
+        if max_connections < 0 {
+            bail!("[limits] max_connections must be >= 0, got {max_connections}");
+        }
+        let request_workers = cfg.usize_or("service", "request_workers", d.request_workers);
+        if request_workers == 0 {
+            bail!("[service] request_workers must be >= 1");
+        }
+        let idle_timeout_ms = cfg.i64_or("service", "idle_timeout_ms", d.idle_timeout_ms as i64);
+        if idle_timeout_ms < 0 {
+            bail!("[service] idle_timeout_ms must be >= 0, got {idle_timeout_ms}");
+        }
+        let conn_queue_cap = cfg.usize_or("service", "conn_queue_cap", d.conn_queue_cap);
+        if conn_queue_cap == 0 {
+            bail!("[service] conn_queue_cap must be >= 1");
+        }
+        let op_batch = cfg.usize_or("batcher", "op_batch", d.op_batch);
+        let op_max_delay_us = cfg.i64_or("batcher", "op_max_delay_us", d.op_max_delay_us as i64);
+        if op_max_delay_us < 0 {
+            bail!("[batcher] op_max_delay_us must be >= 0, got {op_max_delay_us}");
+        }
+        let op_queue_cap = cfg.usize_or("batcher", "op_queue_cap", d.op_queue_cap);
+        if op_queue_cap == 0 {
+            bail!("[batcher] op_queue_cap must be >= 1");
+        }
+        // The op-batch knobs are only consulted when op batching is on —
+        // surface dead settings like the burst/rate pair above.
+        if op_batch == 0
+            && (cfg.get("batcher", "op_max_delay_us").is_some()
+                || cfg.get("batcher", "op_queue_cap").is_some())
+        {
+            bail!("[batcher] op_max_delay_us/op_queue_cap have no effect when op_batch is 0");
+        }
         Ok(Self {
             listen: cfg.str_or("service", "listen", &d.listen),
             workers: cfg.usize_or("service", "workers", d.workers),
+            request_workers,
+            idle_timeout_ms: idle_timeout_ms as u64,
+            conn_queue_cap,
             fh_dim: cfg.usize_or("fh", "dim", d.fh_dim),
             family,
             sign,
@@ -284,9 +356,13 @@ impl CoordinatorConfig {
             rate_limit_rps,
             rate_limit_burst: rate_limit_burst as u32,
             conn_request_budget: conn_request_budget as u64,
+            max_connections: max_connections as usize,
             enable_pjrt: cfg.bool_or("batcher", "enable_pjrt", d.enable_pjrt),
             max_delay_us: cfg.i64_or("batcher", "max_delay_us", d.max_delay_us as i64) as u64,
             queue_cap: cfg.usize_or("batcher", "queue_cap", d.queue_cap),
+            op_batch,
+            op_max_delay_us: op_max_delay_us as u64,
+            op_queue_cap,
             artifacts_dir: PathBuf::from(cfg.str_or(
                 "batcher",
                 "artifacts_dir",
@@ -511,6 +587,16 @@ mod tests {
             // Single-bracket [schemes] is the natural typo for [[schemes]].
             "[schemes]\nname = \"x\"\nspec = \"oph(k=8)\"\n",
             "[limits]\nmax_requests_per_conn = -5\n",
+            // Event-loop / op-batching knobs.
+            "[limits]\nmax_connections = -1\n",
+            "[service]\nrequest_workers = 0\n",
+            "[service]\nidle_timeout_ms = -1\n",
+            "[service]\nconn_queue_cap = 0\n",
+            "[batcher]\nop_max_delay_us = -1\n",
+            "[batcher]\nop_queue_cap = 0\n",
+            // Op-batch knobs with batching off are inert — reject.
+            "[batcher]\nop_batch = 0\nop_max_delay_us = 100\n",
+            "[batcher]\nop_batch = 0\nop_queue_cap = 16\n",
         ] {
             let cfg = Config::parse(bad).unwrap();
             assert!(
@@ -518,6 +604,31 @@ mod tests {
                 "accepted: {bad}"
             );
         }
+    }
+
+    #[test]
+    fn parses_event_loop_and_op_batch_knobs() {
+        let c = CoordinatorConfig::default();
+        assert_eq!(c.request_workers, 4);
+        assert_eq!(c.idle_timeout_ms, 0);
+        assert_eq!(c.conn_queue_cap, 64);
+        assert_eq!(c.max_connections, 0);
+        assert_eq!(c.op_batch, 32); // on by default
+        let cfg = Config::parse(
+            "[service]\nrequest_workers = 8\nidle_timeout_ms = 5000\nconn_queue_cap = 16\n\n[limits]\nmax_connections = 100\n\n[batcher]\nop_batch = 64\nop_max_delay_us = 50\nop_queue_cap = 512\n",
+        )
+        .unwrap();
+        let c = CoordinatorConfig::from_config(&cfg).unwrap();
+        assert_eq!(c.request_workers, 8);
+        assert_eq!(c.idle_timeout_ms, 5000);
+        assert_eq!(c.conn_queue_cap, 16);
+        assert_eq!(c.max_connections, 100);
+        assert_eq!(c.op_batch, 64);
+        assert_eq!(c.op_max_delay_us, 50);
+        assert_eq!(c.op_queue_cap, 512);
+        // op_batch = 0 alone is a legal way to turn batching off.
+        let cfg = Config::parse("[batcher]\nop_batch = 0\n").unwrap();
+        assert_eq!(CoordinatorConfig::from_config(&cfg).unwrap().op_batch, 0);
     }
 
     #[test]

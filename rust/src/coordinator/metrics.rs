@@ -88,6 +88,19 @@ pub struct Metrics {
     /// Requests rejected by the server's per-connection rate limiter /
     /// request budget.
     pub throttled: AtomicU64,
+    /// Cross-connection op batches dispatched, and the ops they carried
+    /// (mean = op-batch occupancy).
+    pub op_batches: AtomicU64,
+    pub op_batch_rows: AtomicU64,
+    /// Ops shed to the direct worker path because the op-batch queue was
+    /// full.
+    pub op_shed: AtomicU64,
+    /// Requests carrying a pipeline tag (`rid`).
+    pub pipelined_requests: AtomicU64,
+    /// Accepts shed by the `[limits] max_connections` cap.
+    pub conns_rejected: AtomicU64,
+    /// Connections closed by `[service] idle_timeout_ms`.
+    pub idle_closed: AtomicU64,
     /// Per-scheme counter blocks, registration order (locked only at
     /// registration and snapshot time — the request path touches the
     /// `Arc`ed atomics directly).
@@ -168,6 +181,21 @@ impl Metrics {
             .set("index_loads", self.index_loads.load(Ordering::Relaxed) as usize)
             .set("errors", self.errors.load(Ordering::Relaxed) as usize)
             .set("throttled", self.throttled.load(Ordering::Relaxed) as usize)
+            .set("op_batches", self.op_batches.load(Ordering::Relaxed) as usize)
+            .set(
+                "op_batch_rows",
+                self.op_batch_rows.load(Ordering::Relaxed) as usize,
+            )
+            .set("op_shed", self.op_shed.load(Ordering::Relaxed) as usize)
+            .set(
+                "pipelined_requests",
+                self.pipelined_requests.load(Ordering::Relaxed) as usize,
+            )
+            .set(
+                "conns_rejected",
+                self.conns_rejected.load(Ordering::Relaxed) as usize,
+            )
+            .set("idle_closed", self.idle_closed.load(Ordering::Relaxed) as usize)
             .set("schemes", {
                 let mut schemes = Json::obj();
                 for block in self.schemes.lock().unwrap().iter() {
@@ -202,6 +230,24 @@ mod tests {
     fn occupancy_zero_when_no_batches() {
         let m = Metrics::new();
         assert_eq!(m.mean_batch_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn op_batch_and_server_counters_appear_in_snapshot() {
+        let m = Metrics::new();
+        Metrics::inc(&m.op_batches);
+        Metrics::add(&m.op_batch_rows, 5);
+        Metrics::inc(&m.op_shed);
+        Metrics::add(&m.pipelined_requests, 3);
+        Metrics::inc(&m.conns_rejected);
+        Metrics::inc(&m.idle_closed);
+        let s = m.snapshot();
+        assert_eq!(s.get("op_batches").unwrap().as_i64(), Some(1));
+        assert_eq!(s.get("op_batch_rows").unwrap().as_i64(), Some(5));
+        assert_eq!(s.get("op_shed").unwrap().as_i64(), Some(1));
+        assert_eq!(s.get("pipelined_requests").unwrap().as_i64(), Some(3));
+        assert_eq!(s.get("conns_rejected").unwrap().as_i64(), Some(1));
+        assert_eq!(s.get("idle_closed").unwrap().as_i64(), Some(1));
     }
 
     #[test]

@@ -8,13 +8,16 @@
 //!
 //! * [`config`] — service configuration (TOML-subset files + defaults).
 //! * [`request`] — typed requests/responses + JSON wire codec.
-//! * [`batcher`] — dynamic batcher for FH transforms (max-batch/max-delay,
-//!   bounded queue, shed-to-native backpressure).
+//! * [`batcher`] — dynamic batchers: FH transforms (shed-to-native) and
+//!   the cross-connection op batcher (max-batch/max-delay, bounded
+//!   queues, shed-to-direct backpressure).
 //! * [`registry`] — the scheme registry: named sketch schemes, each with
 //!   its own sketcher, sharded index and store.
 //! * [`service`] — the coordinator proper: routing across schemes.
-//! * [`server`] — newline-delimited-JSON TCP front-end with
-//!   per-connection rate limiting / request budgets.
+//! * [`server`] — event-driven newline-delimited-JSON TCP front-end:
+//!   nonblocking event loop + fixed worker pool, pipelined `rid`-tagged
+//!   requests, per-connection rate limiting / request budgets /
+//!   backpressure, and a global connection cap.
 //! * [`metrics`] — counters (global, per-scheme, per-shard) and latency
 //!   quantiles.
 

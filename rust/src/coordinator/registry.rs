@@ -155,6 +155,68 @@ impl Scheme {
         Ok(())
     }
 
+    /// Batched [`Self::sketch`]: one scratch reused across the batch.
+    /// Per-set results are bit-identical to `sketch` (the batch
+    /// entry point is property-tested equal per set), and the per-scheme
+    /// counter advances by the batch size, as singles would.
+    pub fn sketch_batch(&self, sets: &[Vec<u32>]) -> Vec<SketchValue> {
+        Metrics::add(&self.counters.sketches, sets.len() as u64);
+        let cap = sets.iter().map(Vec::len).max().unwrap_or(0);
+        self.sketcher
+            .sketch_batch_dyn(sets, &mut Scratch::with_capacity(cap))
+    }
+
+    /// Batched [`Self::insert`]: one index read-lock acquisition for the
+    /// index writes, one scratch and one store-lock acquisition for the
+    /// sketch store. Per-item effects — index contents, stored sketch,
+    /// counters — are identical to calling `insert` per id. Errors for
+    /// index-less schemes (the whole batch, no partial application).
+    pub fn insert_batch(&self, items: &[(u32, Vec<u32>)]) -> Result<()> {
+        {
+            let guard = read_unpoisoned(&self.index);
+            let Some(index) = guard.as_ref() else {
+                return self.no_index();
+            };
+            for (id, set) in items {
+                let shard = index.insert(*id, set);
+                Metrics::inc(&self.counters.inserts);
+                if let Some(counter) = self.counters.shard_inserts.get(shard) {
+                    Metrics::inc(counter);
+                }
+            }
+        }
+        let cap = items.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+        let mut scratch = Scratch::with_capacity(cap);
+        let values: Vec<(u32, SketchValue)> = items
+            .iter()
+            .map(|(id, set)| (*id, self.sketcher.sketch_dyn(set, &mut scratch)))
+            .collect();
+        let mut store = lock_unpoisoned(&self.sketches);
+        for (id, value) in values {
+            store.insert(id, value);
+        }
+        Ok(())
+    }
+
+    /// Batched [`Self::query`]: one read-lock acquisition, per-set
+    /// results identical to `query`. Errors for index-less schemes.
+    pub fn query_batch(&self, sets: &[Vec<u32>]) -> Result<Vec<Vec<u32>>> {
+        let guard = read_unpoisoned(&self.index);
+        let Some(index) = guard.as_ref() else {
+            return self.no_index();
+        };
+        let mut out = Vec::with_capacity(sets.len());
+        for set in sets {
+            let (ids, per_shard) = index.query_fanout(set);
+            Metrics::inc(&self.counters.queries);
+            for (counter, n) in self.counters.shard_candidates.iter().zip(per_shard) {
+                Metrics::add(counter, n as u64);
+            }
+            out.push(ids);
+        }
+        Ok(out)
+    }
+
     /// Fan-out query over this scheme's index (parallel across shards
     /// when the coordinator attached a pool). Errors for index-less
     /// (non-OPH) schemes.
@@ -411,6 +473,54 @@ mod tests {
         // Unknown ids are clean errors.
         assert!(fast.estimate(1, 99).is_err());
         assert!(fast.estimate(98, 99).is_err());
+    }
+
+    /// The batch entry points are the op batcher's substrate: their
+    /// per-item effects must be bit-identical to the single-op methods.
+    #[test]
+    fn batch_ops_match_singles() {
+        let metrics = Metrics::new();
+        let reg = SchemeRegistry::from_config(&registry_cfg(), &metrics, None);
+        let metrics_b = Metrics::new();
+        let reg_b = SchemeRegistry::from_config(&registry_cfg(), &metrics_b, None);
+        let sets: Vec<Vec<u32>> = (0..12u32)
+            .map(|i| (i * 30..i * 30 + 50).collect())
+            .collect();
+        let single = reg.get(Some("fast")).unwrap();
+        let batched = reg_b.get(Some("fast")).unwrap();
+        for (i, s) in sets.iter().enumerate() {
+            single.insert(i as u32, s.clone()).unwrap();
+        }
+        let items: Vec<(u32, Vec<u32>)> = sets
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i as u32, s.clone()))
+            .collect();
+        batched.insert_batch(&items).unwrap();
+        // Queries agree item-for-item across both indices and both entry
+        // points, and the sketch stores estimate identically.
+        let results = batched.query_batch(&sets).unwrap();
+        for (i, s) in sets.iter().enumerate() {
+            assert_eq!(single.query(s).unwrap(), results[i], "set {i}");
+            assert_eq!(batched.query(s).unwrap(), results[i], "set {i}");
+        }
+        assert_eq!(single.estimate(0, 1).unwrap(), batched.estimate(0, 1).unwrap());
+        assert_eq!(batched.sketch_store_len(), sets.len());
+        // Batched sketching is bit-identical to singles.
+        let values = single.sketch_batch(&sets);
+        for (i, s) in sets.iter().enumerate() {
+            assert_eq!(single.sketch(s, &mut Scratch::new()), values[i], "set {i}");
+        }
+        // Counters advanced per item, exactly as singles.
+        let s = metrics_b.snapshot();
+        let fast = s.get("schemes").unwrap().get("fast").unwrap();
+        assert_eq!(fast.get("inserts").unwrap().as_i64(), Some(12));
+        assert_eq!(fast.get("queries").unwrap().as_i64(), Some(24));
+        // Index-less schemes: batch index ops are clean errors.
+        let dense = reg.get(Some("dense")).unwrap();
+        assert!(dense.insert_batch(&items).is_err());
+        assert!(dense.query_batch(&sets).is_err());
+        assert_eq!(dense.sketch_batch(&sets).len(), sets.len());
     }
 
     #[test]

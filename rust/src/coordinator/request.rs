@@ -10,7 +10,7 @@ use crate::sketch::bbit::BbitSketch;
 use crate::sketch::oph::OphSketch;
 use crate::sketch::sketcher::SketchValue;
 use crate::util::json::{self, Json};
-use crate::util::error::{bail, Context, Result};
+use crate::util::error::{bail, Context, Error, Result};
 
 /// A client request.
 #[derive(Debug, Clone, PartialEq)]
@@ -145,14 +145,49 @@ fn arr_u32(j: &Json, key: &str) -> Result<Vec<u32>> {
 /// would be silently dropped and the request silently served by the
 /// default scheme, which is exactly the failure mode the optional
 /// `scheme` field must not have.
+///
+/// `rid` is the protocol-level pipeline tag (see [`parse_tagged_request`])
+/// and is legal on every op, like `op` itself. It is named `rid` rather
+/// than `id` because `insert`/`index_doc` already use `id` as payload.
 fn check_keys(j: &Json, op: &str, allowed: &[&str]) -> Result<()> {
     let Some(obj) = j.as_obj() else { return Ok(()) };
     for key in obj.keys() {
-        if key != "op" && !allowed.contains(&key.as_str()) {
+        if key != "op" && key != "rid" && !allowed.contains(&key.as_str()) {
             bail!("unknown field '{key}' for op '{op}'");
         }
     }
     Ok(())
+}
+
+/// Decode one wire line into its pipeline tag and request.
+///
+/// The tag (`rid`, a client-chosen non-negative integer — exact below
+/// 2^53, the JSON number limit) marks the request as pipelined: the
+/// server may return its response out of order, echoing the tag.
+/// Untagged requests keep the legacy strictly-sequential contract.
+///
+/// The tag is extracted *before* the request body is validated, so a
+/// malformed pipelined request still gets its error response mapped back
+/// to the right tag; if the tag itself is invalid it is reported as the
+/// request error (with no tag to echo).
+pub fn parse_tagged_request(line: &str) -> (Option<u64>, Result<Request>) {
+    let j = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return (None, Err(Error::msg(e).context("parse request json"))),
+    };
+    let rid = match j.get("rid") {
+        None | Some(Json::Null) => None,
+        Some(v) => match v.as_i64().and_then(|x| u64::try_from(x).ok()) {
+            Some(r) => Some(r),
+            None => {
+                return (
+                    None,
+                    Err(Error::msg("'rid' must be a non-negative integer")),
+                )
+            }
+        },
+    };
+    (rid, Request::from_json_line(line))
 }
 
 /// Optional string field: absent/null means `None`; any other non-string
@@ -355,6 +390,15 @@ impl Request {
 
     /// Encode for the wire.
     pub fn to_json_line(&self) -> String {
+        json::to_string(&self.to_json())
+    }
+
+    /// Encode for the wire with a pipeline tag (see [`parse_tagged_request`]).
+    pub fn to_json_line_tagged(&self, rid: u64) -> String {
+        json::to_string(&self.to_json().set("rid", rid as usize))
+    }
+
+    fn to_json(&self) -> Json {
         let j = match self {
             Request::FhTransform { indices, values } => Json::obj()
                 .set("op", "fh")
@@ -437,12 +481,26 @@ impl Request {
             }
             Request::Stats => Json::obj().set("op", "stats"),
         };
-        json::to_string(&j)
+        j
     }
 }
 
 impl Response {
     pub fn to_json_line(&self) -> String {
+        json::to_string(&self.to_json())
+    }
+
+    /// Encode for the wire, echoing the request's pipeline tag when it
+    /// had one. Untagged responses are byte-identical to the legacy wire
+    /// format, so un-pipelined clients never see a `rid` key.
+    pub fn to_json_line_tagged(&self, rid: Option<u64>) -> String {
+        match rid {
+            Some(r) => json::to_string(&self.to_json().set("rid", r as usize)),
+            None => self.to_json_line(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
         let j = match self {
             Response::Fh { out, sqnorm, path } => Json::obj()
                 .set("ok", true)
@@ -501,7 +559,19 @@ impl Response {
                 Json::obj().set("ok", false).set("error", message.as_str())
             }
         };
-        json::to_string(&j)
+        j
+    }
+
+    /// Decode one wire line plus its pipeline tag (client side). A
+    /// response without a `rid` key yields `None` — either the request
+    /// was untagged, or the server is pre-pipelining.
+    pub fn from_json_line_tagged(line: &str) -> Result<(Option<u64>, Response)> {
+        let j = Json::parse(line).context("parse response json")?;
+        let rid = j
+            .get("rid")
+            .and_then(Json::as_i64)
+            .and_then(|x| u64::try_from(x).ok());
+        Ok((rid, Response::from_json_line(line)?))
     }
 
     /// Decode one wire line (client side).
@@ -821,6 +891,64 @@ mod tests {
             Response::from_json_line("{\"ok\":true,\"type\":\"sketch_value\",\"scheme\":\"zzz\"}")
                 .is_err()
         );
+    }
+
+    /// The pipeline tag: legal on every op, echoed on the response,
+    /// invisible when absent.
+    #[test]
+    fn rid_tag_roundtrip() {
+        // Every op accepts `rid`.
+        for (line, rid) in [
+            ("{\"op\":\"stats\",\"rid\":7}", Some(7)),
+            ("{\"op\":\"oph\",\"set\":[1],\"rid\":0}", Some(0)),
+            ("{\"op\":\"sketch\",\"set\":[1],\"rid\":9007199254740991}", Some((1u64 << 53) - 1)),
+            ("{\"op\":\"insert\",\"id\":1,\"set\":[2],\"rid\":3}", Some(3)),
+            ("{\"op\":\"query\",\"set\":[2]}", None),
+            ("{\"op\":\"stats\",\"rid\":null}", None),
+        ] {
+            let (got, req) = parse_tagged_request(line);
+            assert_eq!(got, rid, "line: {line}");
+            assert!(req.is_ok(), "line: {line}");
+        }
+        // The tag survives a malformed body — the server needs it to
+        // route the error response.
+        let (rid, req) = parse_tagged_request("{\"op\":\"sketch\",\"rid\":4}");
+        assert_eq!(rid, Some(4));
+        assert!(req.is_err());
+        // An invalid tag is itself the error.
+        for bad in [
+            "{\"op\":\"stats\",\"rid\":-1}",
+            "{\"op\":\"stats\",\"rid\":\"x\"}",
+            "{\"op\":\"stats\",\"rid\":1.5}",
+        ] {
+            let (rid, req) = parse_tagged_request(bad);
+            assert_eq!(rid, None, "line: {bad}");
+            assert!(req.is_err(), "accepted: {bad}");
+        }
+        // Request-side tagged encode round-trips.
+        let req = Request::LshQuery {
+            set: vec![4, 5],
+            scheme: Some("fast".into()),
+        };
+        let line = req.to_json_line_tagged(42);
+        let (rid, back) = parse_tagged_request(&line);
+        assert_eq!(rid, Some(42));
+        assert_eq!(back.unwrap(), req);
+        // Response-side: tag echoed when present, absent otherwise.
+        let resp = Response::Candidates { ids: vec![1, 2] };
+        let line = resp.to_json_line_tagged(Some(42));
+        let (rid, back) = Response::from_json_line_tagged(&line).unwrap();
+        assert_eq!((rid, back), (Some(42), resp.clone()));
+        let line = resp.to_json_line_tagged(None);
+        assert!(!line.contains("rid"), "line: {line}");
+        assert_eq!(line, resp.to_json_line());
+        let (rid, back) = Response::from_json_line_tagged(&line).unwrap();
+        assert_eq!((rid, back), (None, resp));
+        // Error responses echo the tag too.
+        let err = Response::Error { message: "nope".into() };
+        let (rid, back) =
+            Response::from_json_line_tagged(&err.to_json_line_tagged(Some(7))).unwrap();
+        assert_eq!((rid, back), (Some(7), err));
     }
 
     /// The pre-spec `oph` op and `sketch` response type stay wire-stable —

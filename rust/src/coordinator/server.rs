@@ -1,9 +1,39 @@
-//! TCP front-end: newline-delimited JSON over a plain socket.
+//! TCP front-end: an event-driven, pipelined, newline-delimited-JSON
+//! server.
 //!
-//! One request per line, one response per line, connection-per-thread
-//! (bounded by a worker pool). This is deliberately simple — the protocol
-//! exists so the examples and benches can exercise the full service stack
-//! end-to-end, not to compete with gRPC.
+//! One request per line, one response per line — served by a single
+//! nonblocking event-loop thread that owns every socket plus a fixed
+//! worker pool ([`crate::util::threadpool::ThreadPool`]) that runs the
+//! handlers. The event loop accepts bytes, extracts frames, and admits
+//! requests; completed responses flow back over an mpsc channel and are
+//! written from bounded per-connection outbound queues. When a
+//! connection's pending work hits `[service] conn_queue_cap` the loop
+//! simply stops reading that socket, so a fast writer or stalled reader
+//! exerts TCP backpressure instead of growing server memory.
+//!
+//! **Pipelining.** A request may carry a client-chosen `rid` tag (a
+//! non-negative integer, exact up to 2^53 − 1). Tagged requests execute
+//! concurrently on the pool and their responses may return out of order,
+//! each echoing its tag. Untagged requests keep the legacy contract:
+//! strictly one in flight per connection, responses in arrival order — a
+//! client that never sends `rid` cannot observe the new architecture.
+//! The two lanes share one admission path and one outbound queue.
+//!
+//! **Cross-connection batching.** Batchable ops (`sketch` without an
+//! ad-hoc spec, `insert`, `query`) route through an
+//! [`OpBatcher`](crate::coordinator::batcher::OpBatcher) that coalesces
+//! jobs *across connections* into one registry call per scheme
+//! (fill-or-deadline dispatch). A full batch queue sheds the op to the
+//! direct worker path (`op_shed` metric) — the batched entry points reuse
+//! the per-item primitives, so results are bit-identical either way (the
+//! `coordinator` integration harness proves this for every scheme
+//! family).
+//!
+//! **Determinism.** All per-connection protocol state lives in
+//! [`ConnState`], which does no IO and takes every timestamp as a
+//! parameter. The concurrency harness drives it with scripted byte
+//! sequences and fake clocks — no sleeps, no real sockets — and the
+//! event loop is a thin IO shell around it.
 //!
 //! **Throttling lives here**, per connection — not in spec validation.
 //! Spec parsing caps what one request can allocate, but only the
@@ -13,18 +43,38 @@
 //! Over-rate requests get an `Error` response (the connection stays up —
 //! the client is told to back off); an exhausted budget closes the
 //! connection after one final error. Both count into the `throttled`
-//! metric. One connection's bucket never affects another's.
+//! metric. One connection's bucket never affects another's. A global
+//! `[limits] max_connections` cap sheds whole connections at accept time
+//! with one clean error line (`conns_rejected` metric) instead of letting
+//! them hang.
 
+use crate::coordinator::batcher::{BatchOp, OpBatcher, OpExecutor, OpJob};
 use crate::coordinator::config::CoordinatorConfig;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{Request, Response};
+use crate::coordinator::request::{parse_tagged_request, Request, Response};
 use crate::coordinator::service::Coordinator;
 use crate::util::error::{Context, Result};
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Hard bound on one wire line. A peer that exceeds it without a newline
+/// is protocol-broken: it gets one error response and the connection
+/// closes. Far above any legitimate request (spec validation caps set
+/// sizes well below this).
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+const THROTTLE_MSG: &str = "rate limited: per-connection request rate exceeded";
+const BUDGET_MSG: &str = "request budget exhausted: connection closing";
+const CAPACITY_MSG: &str = "server at connection capacity: try again later";
 
 /// Admission verdict for one request on one connection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,8 +88,9 @@ enum Admit {
 }
 
 /// Per-connection rate limiter: a continuous-refill token bucket plus an
-/// optional lifetime request budget. Owned by the connection thread — no
-/// cross-connection state, so one noisy client cannot starve another.
+/// optional lifetime request budget. Owned by the connection's
+/// [`ConnState`] — no cross-connection state, so one noisy client cannot
+/// starve another.
 struct ConnLimiter {
     /// Tokens/second; `None` when rate limiting is off.
     rate: Option<f64>,
@@ -84,40 +135,534 @@ impl ConnLimiter {
         }
         Admit::Ok
     }
+}
 
-    fn admit(&mut self) -> Admit {
-        self.admit_at(Instant::now())
+/// One decoded request ready for execution, tagged with its pipeline id
+/// (`None` = the ordered lane).
+#[derive(Debug)]
+pub struct Dispatch {
+    pub rid: Option<u64>,
+    pub req: Request,
+}
+
+/// Best-effort `rid` extraction for error responses synthesized *before*
+/// the request body is parsed (throttle / budget rejections), so a
+/// pipelined client can still map the error back to its request. Absent
+/// or invalid tags echo nothing, matching the untagged wire format.
+fn peek_rid(line: &str) -> Option<u64> {
+    Json::parse(line)
+        .ok()?
+        .get("rid")?
+        .as_i64()
+        .and_then(|x| u64::try_from(x).ok())
+}
+
+/// Per-connection protocol state machine: framing, admission, the
+/// pipelined/ordered dispatch lanes, and the bounded outbound queue.
+///
+/// Deliberately IO-free and clock-injected — every method takes `now` —
+/// so the concurrency test harness can drive arbitrary interleavings of
+/// partial reads, partial writes, completions, and timeouts without real
+/// sockets or sleeps. The event loop is a thin shell that feeds it.
+///
+/// Backpressure invariant: `pending()` (requests admitted but not yet
+/// fully written back) never exceeds the configured cap, because frame
+/// extraction stops at the cap and [`Self::wants_read`] turns off — the
+/// kernel socket buffer, and ultimately the peer, absorb the rest.
+pub struct ConnState {
+    limiter: ConnLimiter,
+    metrics: Arc<Metrics>,
+    idle_timeout: Option<Duration>,
+    cap: usize,
+    max_line: usize,
+    /// Unconsumed inbound bytes (at most one partial frame plus whatever
+    /// the cap kept us from extracting).
+    inbuf: Vec<u8>,
+    /// `inbuf[..scan_pos]` is known newline-free — resume point so a slow
+    /// trickle of bytes is not rescanned quadratically.
+    scan_pos: usize,
+    /// Untagged requests admitted but not yet dispatched: the ordered
+    /// lane executes strictly one at a time, in arrival order.
+    ordered: VecDeque<Request>,
+    ordered_inflight: bool,
+    tagged_inflight: usize,
+    /// Serialized response lines awaiting the socket.
+    outq: VecDeque<Vec<u8>>,
+    /// Bytes of `outq.front()` already written.
+    out_pos: usize,
+    last_activity: Instant,
+    /// Budget exhausted or protocol broken: serve what was admitted,
+    /// write everything out, then close. No further frames are read.
+    close_after_drain: bool,
+    read_closed: bool,
+}
+
+impl ConnState {
+    pub fn new(cfg: &CoordinatorConfig, metrics: Arc<Metrics>, now: Instant) -> Self {
+        Self {
+            limiter: ConnLimiter::new(cfg, now),
+            metrics,
+            idle_timeout: match cfg.idle_timeout_ms {
+                0 => None,
+                ms => Some(Duration::from_millis(ms)),
+            },
+            cap: cfg.conn_queue_cap.max(1),
+            max_line: MAX_LINE_BYTES,
+            inbuf: Vec::new(),
+            scan_pos: 0,
+            ordered: VecDeque::new(),
+            ordered_inflight: false,
+            tagged_inflight: 0,
+            outq: VecDeque::new(),
+            out_pos: 0,
+            last_activity: now,
+            close_after_drain: false,
+            read_closed: false,
+        }
+    }
+
+    /// Override the line-length bound (tests shrink it to exercise the
+    /// oversized-frame path without megabyte payloads).
+    pub fn set_max_line(&mut self, n: usize) {
+        self.max_line = n;
+    }
+
+    /// Requests admitted but not yet fully answered on the wire:
+    /// in flight + queued for dispatch + queued for write. Frame
+    /// extraction stops at the cap, and every admitted request produces
+    /// exactly one response line, so this also bounds the outbound queue.
+    pub fn pending(&self) -> usize {
+        self.tagged_inflight
+            + usize::from(self.ordered_inflight)
+            + self.ordered.len()
+            + self.outq.len()
+    }
+
+    /// Whether the event loop should read more bytes from the socket.
+    pub fn wants_read(&self) -> bool {
+        !self.read_closed
+            && !self.close_after_drain
+            && self.pending() < self.cap
+            && self.inbuf.len() <= self.max_line
+    }
+
+    /// Whether there are response bytes waiting for the socket.
+    pub fn has_output(&self) -> bool {
+        !self.outq.is_empty()
+    }
+
+    /// Feed bytes read from the socket; returns requests to dispatch.
+    pub fn on_bytes(&mut self, bytes: &[u8], now: Instant) -> Vec<Dispatch> {
+        self.last_activity = now;
+        self.inbuf.extend_from_slice(bytes);
+        self.pump(now)
+    }
+
+    /// The peer closed its write side. Any complete buffered frames (and
+    /// a final unterminated line, which the old blocking reader also
+    /// served) are still processed; the connection closes once drained.
+    pub fn on_eof(&mut self, now: Instant) -> Vec<Dispatch> {
+        self.read_closed = true;
+        self.pump(now)
+    }
+
+    /// A dispatched request completed: queue its wire line and return any
+    /// newly unblocked dispatches (the next ordered request, or frames
+    /// that were waiting on the pending cap).
+    pub fn on_response(
+        &mut self,
+        rid: Option<u64>,
+        resp: &Response,
+        now: Instant,
+    ) -> Vec<Dispatch> {
+        match rid {
+            Some(_) => self.tagged_inflight = self.tagged_inflight.saturating_sub(1),
+            None => self.ordered_inflight = false,
+        }
+        self.enqueue_response(rid, resp);
+        self.pump(now)
+    }
+
+    /// Next unwritten outbound bytes, if any.
+    pub fn next_write(&self) -> Option<&[u8]> {
+        self.outq.front().map(|buf| &buf[self.out_pos..])
+    }
+
+    /// Record `n` bytes written from [`Self::next_write`]. Completing a
+    /// line frees a pending slot, which may unblock extraction — any new
+    /// dispatches are returned.
+    pub fn advance_write(&mut self, n: usize, now: Instant) -> Vec<Dispatch> {
+        self.last_activity = now;
+        self.out_pos += n;
+        if self.outq.front().is_some_and(|buf| self.out_pos >= buf.len()) {
+            self.outq.pop_front();
+            self.out_pos = 0;
+            return self.pump(now);
+        }
+        Vec::new()
+    }
+
+    /// Whether the connection should be torn down at `now`: peer gone or
+    /// close requested (after the outbound queue drains), or idle-expired.
+    pub fn should_close(&self, now: Instant) -> bool {
+        ((self.close_after_drain || self.read_closed) && self.pending() == 0)
+            || self.idle_expired(now)
+    }
+
+    /// `[service] idle_timeout_ms` check: a connection with nothing
+    /// pending and no byte of activity for the window is reclaimed. Never
+    /// fires while work is in flight, so a slow handler cannot trip it.
+    pub fn idle_expired(&self, now: Instant) -> bool {
+        match self.idle_timeout {
+            Some(t) => {
+                self.pending() == 0
+                    && !self.close_after_drain
+                    && !self.read_closed
+                    && now.duration_since(self.last_activity) >= t
+            }
+            None => false,
+        }
+    }
+
+    fn enqueue_response(&mut self, rid: Option<u64>, resp: &Response) {
+        let mut line = resp.to_json_line_tagged(rid).into_bytes();
+        line.push(b'\n');
+        self.outq.push_back(line);
+    }
+
+    /// Extract frames while capacity allows, then top up the ordered lane.
+    fn pump(&mut self, now: Instant) -> Vec<Dispatch> {
+        let mut out = Vec::new();
+        self.extract(now, &mut out);
+        if !self.ordered_inflight {
+            if let Some(req) = self.ordered.pop_front() {
+                self.ordered_inflight = true;
+                out.push(Dispatch { rid: None, req });
+            }
+        }
+        out
+    }
+
+    fn extract(&mut self, now: Instant, out: &mut Vec<Dispatch>) {
+        loop {
+            if self.close_after_drain || self.pending() >= self.cap {
+                return;
+            }
+            let raw = if let Some(off) = self.inbuf[self.scan_pos..]
+                .iter()
+                .position(|&b| b == b'\n')
+            {
+                let end = self.scan_pos + off;
+                let mut raw: Vec<u8> = self.inbuf.drain(..=end).collect();
+                raw.pop(); // the newline
+                self.scan_pos = 0;
+                raw
+            } else {
+                self.scan_pos = self.inbuf.len();
+                if self.inbuf.len() > self.max_line {
+                    self.inbuf.clear();
+                    self.scan_pos = 0;
+                    self.read_closed = true;
+                    self.close_after_drain = true;
+                    self.enqueue_response(
+                        None,
+                        &Response::Error {
+                            message: format!(
+                                "bad request: line exceeds {} byte limit",
+                                self.max_line
+                            ),
+                        },
+                    );
+                    return;
+                }
+                if self.read_closed && !self.inbuf.is_empty() {
+                    self.scan_pos = 0;
+                    std::mem::take(&mut self.inbuf)
+                } else {
+                    return;
+                }
+            };
+            let text = String::from_utf8_lossy(&raw);
+            let line = text.trim();
+            if line.is_empty() {
+                continue; // blank keep-alives are free, as before
+            }
+            self.process_line(line, now, out);
+        }
+    }
+
+    /// Admission, then parse, then lane routing for one wire line.
+    fn process_line(&mut self, line: &str, now: Instant, out: &mut Vec<Dispatch>) {
+        match self.limiter.admit_at(now) {
+            Admit::Ok => {}
+            Admit::Throttled => {
+                Metrics::inc(&self.metrics.throttled);
+                self.enqueue_response(
+                    peek_rid(line),
+                    &Response::Error {
+                        message: THROTTLE_MSG.into(),
+                    },
+                );
+                return;
+            }
+            Admit::BudgetExhausted => {
+                Metrics::inc(&self.metrics.throttled);
+                self.enqueue_response(
+                    peek_rid(line),
+                    &Response::Error {
+                        message: BUDGET_MSG.into(),
+                    },
+                );
+                self.close_after_drain = true;
+                return;
+            }
+        }
+        let (rid, parsed) = parse_tagged_request(line);
+        match parsed {
+            Ok(req) => match rid {
+                Some(r) => {
+                    Metrics::inc(&self.metrics.pipelined_requests);
+                    self.tagged_inflight += 1;
+                    out.push(Dispatch { rid: Some(r), req });
+                }
+                None => self.ordered.push_back(req),
+            },
+            Err(e) => self.enqueue_response(
+                rid,
+                &Response::Error {
+                    message: format!("bad request: {e}"),
+                },
+            ),
+        }
     }
 }
 
-/// A running server (owns the listener thread).
+/// What the server serves: anything mapping a request to a response.
+/// [`Coordinator`] is the production handler; tests inject panicking or
+/// recording handlers to drive the worker pool's containment paths.
+pub trait Handler: Send + Sync + 'static {
+    fn handle(&self, req: Request) -> Response;
+}
+
+impl Handler for Coordinator {
+    fn handle(&self, req: Request) -> Response {
+        Coordinator::handle(self, req)
+    }
+}
+
+/// A completed request on its way back to the event loop.
+struct Completion {
+    conn: u64,
+    rid: Option<u64>,
+    resp: Response,
+}
+
+/// One live connection owned by the event loop.
+struct Conn {
+    id: u64,
+    stream: TcpStream,
+    state: ConnState,
+}
+
+/// Run the handler with panic containment: a panicking handler yields a
+/// wire error on that one request while the worker, the pool, and every
+/// other connection keep serving. (The coordinator never panics on
+/// request paths; this guards injected handlers and future regressions.)
+fn run_guarded(handler: &dyn Handler, req: Request) -> Response {
+    match catch_unwind(AssertUnwindSafe(|| handler.handle(req))) {
+        Ok(resp) => resp,
+        Err(_) => Response::Error {
+            message: "internal error: request handler panicked".into(),
+        },
+    }
+}
+
+/// The batchable subset: scheme-routed `sketch` (no ad-hoc spec),
+/// `insert`, `query`. Everything else takes the direct worker path.
+fn to_batch_op(req: Request) -> std::result::Result<(Option<String>, BatchOp), Request> {
+    match req {
+        Request::Sketch {
+            set,
+            spec: None,
+            scheme,
+        } => Ok((scheme, BatchOp::Sketch { set })),
+        Request::LshInsert { id, set, scheme } => Ok((scheme, BatchOp::Insert { id, set })),
+        Request::LshQuery { set, scheme } => Ok((scheme, BatchOp::Query { set })),
+        other => Err(other),
+    }
+}
+
+fn from_batch_op(scheme: Option<String>, op: BatchOp) -> Request {
+    match op {
+        BatchOp::Sketch { set } => Request::Sketch {
+            set,
+            spec: None,
+            scheme,
+        },
+        BatchOp::Insert { id, set } => Request::LshInsert { id, set, scheme },
+        BatchOp::Query { set } => Request::LshQuery { set, scheme },
+    }
+}
+
+/// Routes dispatches to the op batcher or the worker pool and owns the
+/// return path. Dropping it (event-loop exit) drains the batcher.
+struct Router {
+    handler: Arc<dyn Handler>,
+    batcher: Option<OpBatcher>,
+    pool: Arc<ThreadPool>,
+    metrics: Arc<Metrics>,
+    done_tx: Sender<Completion>,
+}
+
+impl Router {
+    fn dispatch_all(&self, conn: u64, dispatches: Vec<Dispatch>) {
+        for d in dispatches {
+            self.dispatch_one(conn, d);
+        }
+    }
+
+    fn dispatch_one(&self, conn: u64, d: Dispatch) {
+        let Dispatch { rid, req } = d;
+        let req = if let Some(b) = &self.batcher {
+            match to_batch_op(req) {
+                Ok((scheme, op)) => {
+                    let tx = self.done_tx.clone();
+                    let job = OpJob {
+                        scheme,
+                        op,
+                        done: Box::new(move |resp| {
+                            let _ = tx.send(Completion { conn, rid, resp });
+                        }),
+                    };
+                    match b.submit(job) {
+                        Ok(()) => return,
+                        Err(job) => {
+                            // Queue full: shed to the direct path. The
+                            // completion callback travels with the job, so
+                            // the response still reaches the connection.
+                            Metrics::inc(&self.metrics.op_shed);
+                            let OpJob { scheme, op, done } = job;
+                            let handler = Arc::clone(&self.handler);
+                            self.pool.execute(move || {
+                                done(run_guarded(&*handler, from_batch_op(scheme, op)));
+                            });
+                            return;
+                        }
+                    }
+                }
+                Err(req) => req,
+            }
+        } else {
+            req
+        };
+        let handler = Arc::clone(&self.handler);
+        let tx = self.done_tx.clone();
+        self.pool.execute(move || {
+            let resp = run_guarded(&*handler, req);
+            let _ = tx.send(Completion { conn, rid, resp });
+        });
+    }
+}
+
+/// A running server: an accept thread, an event-loop thread, and a fixed
+/// worker pool.
 pub struct Server {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    join: Option<std::thread::JoinHandle<()>>,
+    accept_join: Option<JoinHandle<()>>,
+    loop_join: Option<JoinHandle<()>>,
+    /// Cumulative accepted connections (including capacity-rejected ones).
     connections: Arc<AtomicUsize>,
+    /// Currently open connections (the `max_connections` gauge).
+    live: Arc<AtomicUsize>,
+    pool: Arc<ThreadPool>,
 }
 
 impl Server {
-    /// Bind and serve `coordinator` on `cfg.listen` (use port 0 for an
+    /// Bind and serve `coordinator` on `listen` (use port 0 for an
     /// ephemeral port; the bound address is available via [`Server::addr`]).
+    /// Wires the cross-connection [`OpBatcher`] when `[batcher] op_batch`
+    /// is on (the default).
     pub fn start(coordinator: Arc<Coordinator>, listen: &str) -> Result<Server> {
+        let cfg = coordinator.config().clone();
+        let metrics = Arc::clone(&coordinator.metrics);
+        let batcher = (cfg.op_batch > 0).then(|| {
+            OpBatcher::spawn(
+                Arc::clone(&coordinator) as Arc<dyn OpExecutor>,
+                cfg.op_batch,
+                cfg.op_max_delay_us,
+                cfg.op_queue_cap,
+                Arc::clone(&metrics),
+            )
+        });
+        Self::start_inner(coordinator, batcher, cfg, metrics, listen)
+    }
+
+    /// Serve an arbitrary [`Handler`] — the concurrency harness injects
+    /// panicking and recording handlers here. No op batcher: every
+    /// request takes the direct worker path.
+    pub fn start_with_handler(
+        handler: Arc<dyn Handler>,
+        cfg: CoordinatorConfig,
+        listen: &str,
+    ) -> Result<Server> {
+        let metrics = Arc::new(Metrics::new());
+        Self::start_inner(handler, None, cfg, metrics, listen)
+    }
+
+    fn start_inner(
+        handler: Arc<dyn Handler>,
+        batcher: Option<OpBatcher>,
+        cfg: CoordinatorConfig,
+        metrics: Arc<Metrics>,
+        listen: &str,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let connections = Arc::new(AtomicUsize::new(0));
-        let stop2 = Arc::clone(&stop);
-        let conns2 = Arc::clone(&connections);
-        let join = std::thread::Builder::new()
-            .name("mixtab-server".into())
-            .spawn(move || accept_loop(listener, coordinator, stop2, conns2))
-            .expect("spawn server");
+        let live = Arc::new(AtomicUsize::new(0));
+        let pool = Arc::new(ThreadPool::new(cfg.request_workers.max(1)));
+        let (conn_tx, conn_rx) = channel::<TcpStream>();
+        let (done_tx, done_rx) = channel::<Completion>();
+        let accept_join = {
+            let stop = Arc::clone(&stop);
+            let connections = Arc::clone(&connections);
+            let live = Arc::clone(&live);
+            let metrics = Arc::clone(&metrics);
+            let max_conns = cfg.max_connections;
+            std::thread::Builder::new()
+                .name("mixtab-server".into())
+                .spawn(move || {
+                    accept_loop(listener, stop, connections, live, max_conns, metrics, conn_tx)
+                })
+                .expect("spawn server")
+        };
+        let loop_join = {
+            let stop = Arc::clone(&stop);
+            let live = Arc::clone(&live);
+            let metrics = Arc::clone(&metrics);
+            let router = Router {
+                handler,
+                batcher,
+                pool: Arc::clone(&pool),
+                metrics: Arc::clone(&metrics),
+                done_tx,
+            };
+            std::thread::Builder::new()
+                .name("mixtab-event-loop".into())
+                .spawn(move || event_loop(conn_rx, done_rx, router, cfg, metrics, stop, live))
+                .expect("spawn event loop")
+        };
         Ok(Server {
             addr,
             stop,
-            join: Some(join),
+            accept_join: Some(accept_join),
+            loop_join: Some(loop_join),
             connections,
+            live,
+            pool,
         })
     }
 
@@ -125,14 +670,35 @@ impl Server {
         self.addr
     }
 
+    /// Cumulative accepted connections over the server's lifetime.
     pub fn connection_count(&self) -> usize {
         self.connections.load(Ordering::Relaxed)
     }
 
-    /// Request shutdown and join the accept thread.
+    /// Currently open connections.
+    pub fn live_connections(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// Requests handed to the worker pool and not yet completed. Tests
+    /// and shutdown paths use this to observe draining without sleeping.
+    pub fn requests_in_flight(&self) -> usize {
+        self.pool.in_flight()
+    }
+
+    /// Request shutdown and join the accept and event-loop threads. The
+    /// op batcher drains (every accepted op executes) and the worker pool
+    /// joins when the last reference drops.
     pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(j) = self.join.take() {
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.loop_join.take() {
             let _ = j.join();
         }
     }
@@ -140,81 +706,174 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        self.shutdown();
     }
 }
 
 fn accept_loop(
     listener: TcpListener,
-    coordinator: Arc<Coordinator>,
     stop: Arc<AtomicBool>,
     connections: Arc<AtomicUsize>,
+    live: Arc<AtomicUsize>,
+    max_conns: usize,
+    metrics: Arc<Metrics>,
+    conn_tx: Sender<TcpStream>,
 ) {
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
                 connections.fetch_add(1, Ordering::Relaxed);
-                let c = Arc::clone(&coordinator);
-                let _ = std::thread::Builder::new()
-                    .name("mixtab-conn".into())
-                    .spawn(move || {
-                        let _ = serve_connection(stream, &c);
-                    });
+                let admitted = {
+                    let prev = live.fetch_add(1, Ordering::SeqCst);
+                    if max_conns > 0 && prev >= max_conns {
+                        live.fetch_sub(1, Ordering::SeqCst);
+                        false
+                    } else {
+                        true
+                    }
+                };
+                if !admitted {
+                    // Shed cleanly: one error line, then close — the
+                    // client sees a parseable rejection, not a hang.
+                    Metrics::inc(&metrics.conns_rejected);
+                    let mut s = stream;
+                    s.set_nonblocking(false).ok();
+                    let line = Response::Error {
+                        message: CAPACITY_MSG.into(),
+                    }
+                    .to_json_line();
+                    let _ = s.write_all(line.as_bytes());
+                    let _ = s.write_all(b"\n");
+                    continue;
+                }
+                if conn_tx.send(stream).is_err() {
+                    return; // event loop gone
+                }
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
             }
             Err(_) => break,
         }
     }
 }
 
-fn serve_connection(stream: TcpStream, coordinator: &Coordinator) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    let mut limiter = ConnLimiter::new(coordinator.config(), Instant::now());
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+fn event_loop(
+    conn_rx: Receiver<TcpStream>,
+    done_rx: Receiver<Completion>,
+    router: Router,
+    cfg: CoordinatorConfig,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    live: Arc<AtomicUsize>,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut next_id: u64 = 0;
+    let mut read_buf = [0u8; 8192];
+    // A completion picked up by the idle wait, handled next iteration.
+    let mut carry: Option<Completion> = None;
+    while !stop.load(Ordering::SeqCst) {
+        let mut progress = false;
+
+        // New connections from the accept thread.
+        while let Ok(stream) = conn_rx.try_recv() {
+            stream.set_nonblocking(true).ok();
+            stream.set_nodelay(true).ok();
+            conns.push(Conn {
+                id: next_id,
+                stream,
+                state: ConnState::new(&cfg, Arc::clone(&metrics), Instant::now()),
+            });
+            next_id += 1;
+            progress = true;
         }
-        let mut close_after = false;
-        let resp = match limiter.admit() {
-            Admit::Ok => match Request::from_json_line(&line) {
-                Ok(req) => coordinator.handle(req),
-                Err(e) => Response::Error {
-                    message: format!("bad request: {e}"),
-                },
-            },
-            Admit::Throttled => {
-                Metrics::inc(&coordinator.metrics.throttled);
-                Response::Error {
-                    message: "rate limited: per-connection request rate exceeded".into(),
+
+        // Completed requests from the workers / batcher.
+        while let Some(done) = carry.take().or_else(|| done_rx.try_recv().ok()) {
+            progress = true;
+            if let Some(conn) = conns.iter_mut().find(|c| c.id == done.conn) {
+                let ds = conn.state.on_response(done.rid, &done.resp, Instant::now());
+                router.dispatch_all(conn.id, ds);
+            }
+            // else: connection died with requests in flight — drop it.
+        }
+
+        // Socket IO, round-robin.
+        let mut i = 0;
+        while i < conns.len() {
+            let mut dead = false;
+            let conn = &mut conns[i];
+            while conn.state.wants_read() {
+                match conn.stream.read(&mut read_buf) {
+                    Ok(0) => {
+                        progress = true;
+                        let ds = conn.state.on_eof(Instant::now());
+                        router.dispatch_all(conn.id, ds);
+                        break;
+                    }
+                    Ok(n) => {
+                        progress = true;
+                        let ds = conn.state.on_bytes(&read_buf[..n], Instant::now());
+                        router.dispatch_all(conn.id, ds);
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
                 }
             }
-            Admit::BudgetExhausted => {
-                Metrics::inc(&coordinator.metrics.throttled);
-                close_after = true;
-                Response::Error {
-                    message: "request budget exhausted: connection closing".into(),
+            while !dead {
+                let Some(chunk) = conn.state.next_write() else {
+                    break;
+                };
+                match conn.stream.write(chunk) {
+                    Ok(0) => {
+                        dead = true;
+                    }
+                    Ok(n) => {
+                        progress = true;
+                        let ds = conn.state.advance_write(n, Instant::now());
+                        router.dispatch_all(conn.id, ds);
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        dead = true;
+                    }
                 }
             }
-        };
-        writer.write_all(resp.to_json_line().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
-        if close_after {
-            break;
+            let now = Instant::now();
+            if dead || conn.state.should_close(now) {
+                if !dead && conn.state.idle_expired(now) {
+                    Metrics::inc(&metrics.idle_closed);
+                }
+                conns.swap_remove(i);
+                live.fetch_sub(1, Ordering::SeqCst);
+                progress = true;
+            } else {
+                i += 1;
+            }
+        }
+
+        if !progress {
+            // Nothing to do: park briefly on the completion channel so a
+            // finishing worker wakes us immediately instead of after a
+            // fixed sleep.
+            if let Ok(done) = done_rx.recv_timeout(Duration::from_millis(1)) {
+                carry = Some(done);
+            }
         }
     }
-    Ok(())
+    // Dropping the router drains the op batcher (accepted ops still
+    // execute); completions to the dropped receiver are ignored.
+    drop(router);
+    drop(done_rx);
 }
 
-/// Minimal blocking client for tests, benches and examples.
+/// Minimal blocking client for tests, benches and examples. Speaks the
+/// untagged (ordered-lane) protocol: one request, one in-order response.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
@@ -236,8 +895,68 @@ impl Client {
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            crate::bail!("connection closed by server");
+        }
         Response::from_json_line(line.trim_end())
+    }
+}
+
+/// Client speaking the pipelined protocol: requests are tagged with an
+/// auto-incrementing `rid` and sent without waiting; responses are
+/// collected in whatever order the server returns them, each carrying
+/// the tag of the request it answers.
+pub struct PipelinedClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_rid: u64,
+}
+
+impl PipelinedClient {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<PipelinedClient> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        stream.set_nodelay(true).ok();
+        Ok(PipelinedClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+            next_rid: 0,
+        })
+    }
+
+    /// Queue one tagged request (buffered; flushed by [`Self::recv`] or
+    /// [`Self::flush`]); returns the rid assigned.
+    pub fn send(&mut self, req: &Request) -> Result<u64> {
+        let rid = self.next_rid;
+        self.next_rid += 1;
+        self.send_with_rid(req, rid)?;
+        Ok(rid)
+    }
+
+    /// Queue one request under an explicit rid (rid reuse is the
+    /// client's own problem — the server just echoes it).
+    pub fn send_with_rid(&mut self, req: &Request, rid: u64) -> Result<()> {
+        self.writer
+            .write_all(req.to_json_line_tagged(rid).as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.writer.flush().context("flush")
+    }
+
+    /// Receive the next response in server order: `(rid, response)`.
+    /// `rid` is `None` only for errors the server could not attribute to
+    /// a tagged request (e.g. a throttled line with an invalid tag).
+    pub fn recv(&mut self) -> Result<(Option<u64>, Response)> {
+        self.flush()?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("read response")?;
+        if n == 0 {
+            crate::bail!("connection closed by server");
+        }
+        Response::from_json_line_tagged(line.trim_end())
     }
 }
 
@@ -246,6 +965,7 @@ mod tests {
     use super::*;
     use crate::coordinator::config::CoordinatorConfig;
     use crate::coordinator::request::ExecPath;
+    use std::collections::HashMap;
 
     fn native_coordinator() -> Arc<Coordinator> {
         Arc::new(Coordinator::new(CoordinatorConfig {
@@ -295,7 +1015,6 @@ mod tests {
 
     #[test]
     fn conn_limiter_token_bucket_and_budget() {
-        use std::time::Duration;
         let t0 = Instant::now();
         // Bucket of 2, 1 token/s, no budget.
         let cfg = CoordinatorConfig {
@@ -373,6 +1092,65 @@ mod tests {
         for h in handles {
             assert!(h.join().unwrap());
         }
+        server.stop();
+    }
+
+    #[test]
+    fn pipelined_requests_over_tcp() {
+        let server = Server::start(native_coordinator(), "127.0.0.1:0").unwrap();
+        let mut c = PipelinedClient::connect(server.addr()).unwrap();
+        // Fire a burst of tagged requests without waiting, then collect.
+        let mut rids = Vec::new();
+        for i in 0..8u32 {
+            rids.push(
+                c.send(&Request::Sketch {
+                    set: (i * 5..i * 5 + 30).collect(),
+                    spec: None,
+                    scheme: None,
+                })
+                .unwrap(),
+            );
+        }
+        let mut got: HashMap<u64, Response> = HashMap::new();
+        for _ in 0..8 {
+            let (rid, resp) = c.recv().unwrap();
+            got.insert(rid.expect("tagged response"), resp);
+        }
+        for rid in rids {
+            assert!(
+                matches!(got.get(&rid), Some(Response::SketchValue { .. })),
+                "rid {rid} answered"
+            );
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn panicking_handler_yields_wire_error_and_server_survives() {
+        struct Panicky;
+        impl Handler for Panicky {
+            fn handle(&self, req: Request) -> Response {
+                match req {
+                    Request::Stats => Response::Error {
+                        message: "ok".into(),
+                    },
+                    _ => panic!("injected handler panic"),
+                }
+            }
+        }
+        let cfg = CoordinatorConfig::default();
+        let server = Server::start_with_handler(Arc::new(Panicky), cfg, "127.0.0.1:0").unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        let resp = c
+            .call(&Request::OphSketch { set: vec![1, 2, 3] })
+            .unwrap();
+        let Response::Error { message } = resp else {
+            panic!("expected error");
+        };
+        assert!(message.contains("panicked"), "got: {message}");
+        // Same connection and pool keep serving after the panic.
+        let resp = c.call(&Request::Stats).unwrap();
+        assert!(matches!(resp, Response::Error { .. }));
         server.stop();
     }
 }

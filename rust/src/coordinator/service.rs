@@ -18,7 +18,7 @@
 //! this module stays grep-clean of `unwrap`/`expect` on those paths
 //! (locks go through [`crate::util::sync`]).
 
-use crate::coordinator::batcher::FhBatcher;
+use crate::coordinator::batcher::{BatchOp, FhBatcher, OpExecutor, OpJob};
 use crate::coordinator::config::CoordinatorConfig;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::registry::SchemeRegistry;
@@ -33,7 +33,7 @@ use crate::sketch::spec::{SketchScheme, SketchSpec};
 use crate::sketch::Scratch;
 use crate::util::sync::lock_unpoisoned;
 use crate::util::threadpool::ThreadPool;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -444,6 +444,80 @@ impl Coordinator {
         }
     }
 
+    /// Batched scheme-routed `sketch` (ad-hoc specs never reach this
+    /// path): per-item responses and counter movement identical to
+    /// [`Self::handle_sketch`] with `spec: None`.
+    fn handle_sketch_batch(&self, sets: Vec<Vec<u32>>, scheme: Option<&str>) -> Vec<Response> {
+        Metrics::add(&self.metrics.sketch_requests, sets.len() as u64);
+        match self.registry.get(scheme) {
+            Ok(s) => s
+                .sketch_batch(&sets)
+                .into_iter()
+                .map(|value| Response::SketchValue { value })
+                .collect(),
+            Err(e) => {
+                Metrics::add(&self.metrics.errors, sets.len() as u64);
+                let message = e.to_string();
+                sets.iter()
+                    .map(|_| Response::Error {
+                        message: message.clone(),
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Batched `insert`: per-item responses and counters identical to
+    /// [`Self::handle_insert`] per id.
+    fn handle_insert_batch(
+        &self,
+        items: Vec<(u32, Vec<u32>)>,
+        scheme: Option<&str>,
+    ) -> Vec<Response> {
+        match self.registry.get(scheme).and_then(|s| s.insert_batch(&items)) {
+            Ok(()) => {
+                Metrics::add(&self.metrics.lsh_inserts, items.len() as u64);
+                items
+                    .into_iter()
+                    .map(|(id, _)| Response::Inserted { id })
+                    .collect()
+            }
+            Err(e) => {
+                Metrics::add(&self.metrics.errors, items.len() as u64);
+                let message = e.to_string();
+                items
+                    .iter()
+                    .map(|_| Response::Error {
+                        message: message.clone(),
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Batched `query`: per-item responses and counters identical to
+    /// [`Self::handle_query`] per set.
+    fn handle_query_batch(&self, sets: Vec<Vec<u32>>, scheme: Option<&str>) -> Vec<Response> {
+        match self.registry.get(scheme).and_then(|s| s.query_batch(&sets)) {
+            Ok(results) => {
+                Metrics::add(&self.metrics.lsh_queries, sets.len() as u64);
+                results
+                    .into_iter()
+                    .map(|ids| Response::Candidates { ids })
+                    .collect()
+            }
+            Err(e) => {
+                Metrics::add(&self.metrics.errors, sets.len() as u64);
+                let message = e.to_string();
+                sets.iter()
+                    .map(|_| Response::Error {
+                        message: message.clone(),
+                    })
+                    .collect()
+            }
+        }
+    }
+
     fn handle_fh(&self, indices: Vec<u32>, values: Vec<f64>) -> Response {
         let start = Instant::now();
         Metrics::inc(&self.metrics.fh_requests);
@@ -490,6 +564,68 @@ impl Coordinator {
             out: out.into_iter().map(|x| x as f32).collect(),
             sqnorm: sq,
             path: ExecPath::Native,
+        }
+    }
+}
+
+impl OpExecutor for Coordinator {
+    /// Execute one cross-connection op batch. Jobs are grouped by scheme,
+    /// and within each scheme all inserts run before all sketches and
+    /// queries — a valid linearization of ops that were submitted
+    /// concurrently (a client needing insert→query ordering must await
+    /// the insert response, which is true against any concurrent server;
+    /// the server's per-connection ordered lane dispatches at most one
+    /// untagged op per connection at a time, so no single connection's
+    /// sequential stream is ever reordered by this grouping). Per-item
+    /// responses and metrics are bit-identical to the direct path.
+    fn run_ops(&self, jobs: Vec<OpJob>) {
+        #[derive(Default)]
+        struct Group {
+            inserts: Vec<(usize, (u32, Vec<u32>))>,
+            sketches: Vec<(usize, Vec<u32>)>,
+            queries: Vec<(usize, Vec<u32>)>,
+        }
+        let n = jobs.len();
+        let mut dones = Vec::with_capacity(n);
+        let mut groups: BTreeMap<Option<String>, Group> = BTreeMap::new();
+        for (slot, job) in jobs.into_iter().enumerate() {
+            let OpJob { scheme, op, done } = job;
+            dones.push(done);
+            let g = groups.entry(scheme).or_default();
+            match op {
+                BatchOp::Insert { id, set } => g.inserts.push((slot, (id, set))),
+                BatchOp::Sketch { set } => g.sketches.push((slot, set)),
+                BatchOp::Query { set } => g.queries.push((slot, set)),
+            }
+        }
+        let mut responses: Vec<Option<Response>> = (0..n).map(|_| None).collect();
+        for (scheme, g) in groups {
+            let name = scheme.as_deref();
+            if !g.inserts.is_empty() {
+                let (slots, items): (Vec<_>, Vec<_>) = g.inserts.into_iter().unzip();
+                for (slot, resp) in slots.into_iter().zip(self.handle_insert_batch(items, name)) {
+                    responses[slot] = Some(resp);
+                }
+            }
+            if !g.sketches.is_empty() {
+                let (slots, sets): (Vec<_>, Vec<_>) = g.sketches.into_iter().unzip();
+                for (slot, resp) in slots.into_iter().zip(self.handle_sketch_batch(sets, name)) {
+                    responses[slot] = Some(resp);
+                }
+            }
+            if !g.queries.is_empty() {
+                let (slots, sets): (Vec<_>, Vec<_>) = g.queries.into_iter().unzip();
+                for (slot, resp) in slots.into_iter().zip(self.handle_query_batch(sets, name)) {
+                    responses[slot] = Some(resp);
+                }
+            }
+        }
+        for (done, resp) in dones.into_iter().zip(responses) {
+            // Every slot is filled by construction; the fallback keeps
+            // this path panic-free regardless.
+            done(resp.unwrap_or_else(|| Response::Error {
+                message: "internal: op missing from batch".into(),
+            }));
         }
     }
 }
@@ -920,6 +1056,93 @@ mod tests {
             panic!("expected error for missing snapshot")
         };
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// One `run_ops` call with interleaved submission order must produce,
+    /// per item, exactly what direct `handle` calls produce under the
+    /// batch's linearization (inserts before sketches before queries) —
+    /// including metrics movement and error items.
+    #[test]
+    fn run_ops_batches_match_direct_handling() {
+        use std::sync::mpsc::channel;
+        let batched = Coordinator::new(native_cfg());
+        let direct = Coordinator::new(native_cfg());
+        let n = 6usize;
+        let sets: Vec<Vec<u32>> = (0..n as u32).map(|i| (i * 25..i * 25 + 60).collect()).collect();
+        // Direct path, in the linearization order the batch will use.
+        let mut expect = Vec::new();
+        for (i, s) in sets.iter().enumerate() {
+            expect.push(direct.handle(Request::LshInsert {
+                id: i as u32,
+                set: s.clone(),
+                scheme: None,
+            }));
+        }
+        for s in &sets {
+            expect.push(direct.handle(Request::Sketch {
+                set: s.clone(),
+                spec: None,
+                scheme: None,
+            }));
+        }
+        for s in &sets {
+            expect.push(direct.handle(Request::LshQuery {
+                set: s.clone(),
+                scheme: None,
+            }));
+        }
+        expect.push(direct.handle(Request::LshQuery {
+            set: sets[0].clone(),
+            scheme: Some("nope".into()),
+        }));
+        // Batch path: submission order interleaves kinds per set, so the
+        // grouping (not the submission order) must produce the
+        // linearization above. Callbacks tag each response with its slot
+        // in `expect`.
+        let (tx, rx) = channel();
+        let mut jobs = Vec::new();
+        let mut job = |tag: usize, scheme: Option<String>, op: BatchOp| {
+            let tx = tx.clone();
+            jobs.push(OpJob {
+                scheme,
+                op,
+                done: Box::new(move |resp| {
+                    let _ = tx.send((tag, resp));
+                }),
+            });
+        };
+        for (i, s) in sets.iter().enumerate() {
+            job(
+                i,
+                None,
+                BatchOp::Insert {
+                    id: i as u32,
+                    set: s.clone(),
+                },
+            );
+            job(n + i, None, BatchOp::Sketch { set: s.clone() });
+            job(2 * n + i, None, BatchOp::Query { set: s.clone() });
+        }
+        job(3 * n, Some("nope".into()), BatchOp::Query { set: sets[0].clone() });
+        drop(tx);
+        batched.run_ops(jobs);
+        let mut got: Vec<Option<Response>> = (0..expect.len()).map(|_| None).collect();
+        for (tag, resp) in rx {
+            assert!(got[tag].is_none(), "slot {tag} completed twice");
+            got[tag] = Some(resp);
+        }
+        for (tag, want) in expect.iter().enumerate() {
+            assert_eq!(got[tag].as_ref(), Some(want), "slot {tag}");
+        }
+        // Metrics moved exactly as the direct path's.
+        let (Response::Stats { json: a }, Response::Stats { json: b }) =
+            (batched.handle(Request::Stats), direct.handle(Request::Stats))
+        else {
+            panic!()
+        };
+        for key in ["lsh_inserts", "sketch_requests", "lsh_queries", "errors"] {
+            assert_eq!(a.get(key).unwrap().as_i64(), b.get(key).unwrap().as_i64(), "{key}");
+        }
     }
 
     #[test]

@@ -354,6 +354,26 @@ fn run_serve(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
             cfg.conn_request_budget
         );
     }
+    if cfg.max_connections > 0 {
+        println!("limits: max_connections={}", cfg.max_connections);
+    }
+    println!(
+        "event loop: {} request worker(s), conn_queue_cap={}, idle_timeout={}",
+        cfg.request_workers,
+        cfg.conn_queue_cap,
+        if cfg.idle_timeout_ms == 0 {
+            "off".to_string()
+        } else {
+            format!("{}ms", cfg.idle_timeout_ms)
+        }
+    );
+    match cfg.op_batch {
+        0 => println!("op batching: off (direct worker path)"),
+        n => println!(
+            "op batching: on, max_batch={} max_delay={}us queue_cap={}",
+            n, cfg.op_max_delay_us, cfg.op_queue_cap
+        ),
+    }
     let listen = cfg.listen.clone();
     let coordinator = Arc::new(Coordinator::new(cfg));
     println!("pjrt path live: {}", coordinator.pjrt_enabled());

@@ -109,6 +109,13 @@ impl ThreadPool {
         self.panics.load(Ordering::SeqCst)
     }
 
+    /// Number of submitted jobs not yet completed (queued + running).
+    /// The server surfaces this so tests and shutdown paths can observe
+    /// the pool draining without sleeping.
+    pub fn in_flight(&self) -> usize {
+        *lock_unpoisoned(&self.in_flight.0)
+    }
+
     /// Run a batch of scoped closures that may borrow from the caller's
     /// stack, blocking until all complete. Results come back in task
     /// order regardless of execution order. Implemented with
@@ -211,6 +218,7 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(pool.in_flight(), 0);
     }
 
     #[test]

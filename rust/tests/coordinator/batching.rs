@@ -1,0 +1,373 @@
+//! OpBatcher semantics (fill vs deadline vs shed, queue-full rejection,
+//! drain-on-shutdown) with an injected executor, plus the central
+//! property: ops batched *across connections* are bit-identical to
+//! sequential per-request serving for all five sketch families.
+
+use crate::{coordinator, five_family_cfg, seeded_set, FAMILY_SCHEMES};
+use mixtab::coordinator::batcher::{BatchOp, OpBatcher, OpExecutor, OpJob};
+use mixtab::coordinator::metrics::Metrics;
+use mixtab::coordinator::request::{Request, Response};
+use mixtab::coordinator::server::{Client, PipelinedClient, Server};
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+const WAIT: Duration = Duration::from_secs(30);
+
+fn err(msg: &str) -> Response {
+    Response::Error {
+        message: msg.into(),
+    }
+}
+
+/// Records batch sizes in dispatch order; completes every job.
+struct RecordingExec {
+    batches: Mutex<Vec<usize>>,
+}
+
+impl OpExecutor for RecordingExec {
+    fn run_ops(&self, jobs: Vec<OpJob>) {
+        self.batches.lock().unwrap().push(jobs.len());
+        for j in jobs {
+            j.complete(err("done"));
+        }
+    }
+}
+
+/// Blocks inside `run_ops` until released; signals entry first.
+struct GatedExec {
+    entered: mpsc::Sender<()>,
+    gate: Mutex<mpsc::Receiver<()>>,
+}
+
+impl OpExecutor for GatedExec {
+    fn run_ops(&self, jobs: Vec<OpJob>) {
+        self.entered.send(()).expect("test alive");
+        self.gate.lock().unwrap().recv().expect("released");
+        for j in jobs {
+            j.complete(err("batched"));
+        }
+    }
+}
+
+fn submit_tagged(
+    batcher: &OpBatcher,
+    done_tx: &mpsc::Sender<&'static str>,
+    tag: &'static str,
+) -> std::result::Result<(), OpJob> {
+    let tx = done_tx.clone();
+    batcher.submit(OpJob {
+        scheme: None,
+        op: BatchOp::Query { set: vec![1] },
+        done: Box::new(move |_| tx.send(tag).expect("test alive")),
+    })
+}
+
+#[test]
+fn fill_trigger_dispatches_exactly_at_max_batch() {
+    let exec = Arc::new(RecordingExec {
+        batches: Mutex::new(Vec::new()),
+    });
+    let metrics = Arc::new(Metrics::new());
+    // 10s deadline: only the fill trigger can plausibly dispatch.
+    let batcher = OpBatcher::spawn(
+        Arc::clone(&exec) as Arc<dyn OpExecutor>,
+        4,
+        10_000_000,
+        64,
+        Arc::clone(&metrics),
+    );
+    let (tx, rx) = mpsc::channel();
+    for i in 0..8u32 {
+        let tx = tx.clone();
+        batcher
+            .submit(OpJob {
+                scheme: None,
+                op: BatchOp::Sketch { set: vec![i] },
+                done: Box::new(move |_| tx.send(()).expect("test alive")),
+            })
+            .unwrap_or_else(|_| panic!("queue unexpectedly full"));
+    }
+    for _ in 0..8 {
+        rx.recv_timeout(WAIT).expect("every job completes");
+    }
+    assert_eq!(
+        *exec.batches.lock().unwrap(),
+        vec![4, 4],
+        "fill trigger cuts batches at max_batch, never waits for the deadline"
+    );
+    assert_eq!(metrics.op_batches.load(Ordering::Relaxed), 2);
+    assert_eq!(metrics.op_batch_rows.load(Ordering::Relaxed), 8);
+    drop(batcher);
+}
+
+#[test]
+fn deadline_trigger_dispatches_partial_batches() {
+    let exec = Arc::new(RecordingExec {
+        batches: Mutex::new(Vec::new()),
+    });
+    // max_batch 100 can never fill from 3 jobs: only the deadline can
+    // dispatch them. If the deadline path were broken this would hang
+    // (and the recv_timeout below would fail), not flake.
+    let batcher = OpBatcher::spawn(
+        Arc::clone(&exec) as Arc<dyn OpExecutor>,
+        100,
+        2_000,
+        64,
+        Arc::new(Metrics::new()),
+    );
+    let (tx, rx) = mpsc::channel();
+    for i in 0..3u32 {
+        let tx = tx.clone();
+        batcher
+            .submit(OpJob {
+                scheme: None,
+                op: BatchOp::Insert {
+                    id: i,
+                    set: vec![i],
+                },
+                done: Box::new(move |_| tx.send(()).expect("test alive")),
+            })
+            .unwrap_or_else(|_| panic!("queue unexpectedly full"));
+    }
+    for _ in 0..3 {
+        rx.recv_timeout(WAIT).expect("deadline dispatches partial batch");
+    }
+    let sizes = exec.batches.lock().unwrap().clone();
+    assert_eq!(sizes.iter().sum::<usize>(), 3);
+    assert!(
+        sizes.iter().all(|&s| s < 100),
+        "no batch ever filled: {sizes:?}"
+    );
+    drop(batcher);
+}
+
+#[test]
+fn queue_full_sheds_job_back_to_caller_ahead_of_parked_work() {
+    let (entered_tx, entered_rx) = mpsc::channel();
+    let (release_tx, release_rx) = mpsc::channel();
+    let exec = Arc::new(GatedExec {
+        entered: entered_tx,
+        gate: Mutex::new(release_rx),
+    });
+    // max_batch 1 + queue_cap 1: one job in run_ops, one in the queue,
+    // the third must be handed back.
+    let batcher = OpBatcher::spawn(exec as Arc<dyn OpExecutor>, 1, 0, 1, Arc::new(Metrics::new()));
+    let (done_tx, done_rx) = mpsc::channel::<&'static str>();
+    submit_tagged(&batcher, &done_tx, "A").expect("A accepted");
+    entered_rx.recv_timeout(WAIT).expect("A entered run_ops");
+    submit_tagged(&batcher, &done_tx, "B").expect("B queued");
+    let rejected = submit_tagged(&batcher, &done_tx, "C").expect_err("C shed");
+    // The shed job comes back payload-intact — load shedding, not loss.
+    assert_eq!(rejected.op, BatchOp::Query { set: vec![1] });
+    // The caller runs it directly: its completion lands while A and B
+    // are still parked — shed work is never stuck behind the queue it
+    // failed to enter.
+    rejected.complete(err("direct"));
+    assert_eq!(done_rx.recv_timeout(WAIT).unwrap(), "C");
+    // Release the gate twice (A's batch, then B's): submit order holds
+    // for accepted jobs.
+    release_tx.send(()).expect("batcher alive");
+    release_tx.send(()).expect("batcher alive");
+    assert_eq!(done_rx.recv_timeout(WAIT).unwrap(), "A");
+    assert_eq!(done_rx.recv_timeout(WAIT).unwrap(), "B");
+    drop(batcher);
+}
+
+#[test]
+fn drop_drains_queued_jobs_before_shutdown() {
+    let (entered_tx, entered_rx) = mpsc::channel();
+    let (release_tx, release_rx) = mpsc::channel();
+    let exec = Arc::new(GatedExec {
+        entered: entered_tx,
+        gate: Mutex::new(release_rx),
+    });
+    let batcher = OpBatcher::spawn(exec as Arc<dyn OpExecutor>, 1, 0, 8, Arc::new(Metrics::new()));
+    let (done_tx, done_rx) = mpsc::channel::<&'static str>();
+    submit_tagged(&batcher, &done_tx, "A").expect("A accepted");
+    entered_rx.recv_timeout(WAIT).expect("A entered run_ops");
+    for tag in ["B", "C", "D"] {
+        submit_tagged(&batcher, &done_tx, tag).expect("queued");
+    }
+    // Pre-load the releases, then drop the batcher while three jobs are
+    // still queued: Drop must drain and complete them, not discard them.
+    for _ in 0..4 {
+        release_tx.send(()).expect("batcher alive");
+    }
+    let dropper = std::thread::spawn(move || drop(batcher));
+    let mut got: Vec<&str> = (0..4)
+        .map(|_| done_rx.recv_timeout(WAIT).expect("drained job completes"))
+        .collect();
+    dropper.join().expect("drop joins cleanly");
+    got.sort_unstable();
+    assert_eq!(got, vec!["A", "B", "C", "D"]);
+}
+
+/// The tentpole property: the same workload served (a) sequentially,
+/// one blocking request at a time with batching disabled, and (b) from
+/// concurrent pipelined connections coalesced by the cross-connection
+/// OpBatcher, produces bit-identical responses for every sketch family.
+#[test]
+fn batched_across_connections_bit_identical_to_sequential_all_families() {
+    let mut ref_cfg = five_family_cfg();
+    ref_cfg.op_batch = 0; // reference: direct per-request path
+    let mut bat_cfg = five_family_cfg();
+    bat_cfg.op_batch = 16;
+    bat_cfg.op_max_delay_us = 2_000; // generous coalescing window
+    let ref_c = coordinator(ref_cfg);
+    let bat_c = coordinator(bat_cfg);
+    let ref_server = Server::start(Arc::clone(&ref_c), "127.0.0.1:0").unwrap();
+    let bat_server = Server::start(Arc::clone(&bat_c), "127.0.0.1:0").unwrap();
+
+    let sets: Vec<Vec<u32>> = (0..24).map(|i| seeded_set(42, i, 60)).collect();
+
+    // Sequential reference sketches for all five schemes.
+    let mut rc = Client::connect(ref_server.addr()).unwrap();
+    let mut expect: HashMap<(usize, usize), Response> = HashMap::new();
+    for (si, scheme) in FAMILY_SCHEMES.iter().enumerate() {
+        for (i, s) in sets.iter().enumerate() {
+            let r = rc
+                .call(&Request::Sketch {
+                    set: s.clone(),
+                    spec: None,
+                    scheme: scheme.map(str::to_string),
+                })
+                .unwrap();
+            assert!(matches!(r, Response::SketchValue { .. }), "scheme {scheme:?}");
+            expect.insert((si, i), r);
+        }
+    }
+
+    // Subject: 4 pipelined connections interleaving all five schemes, so
+    // the batcher coalesces mixed-scheme ops from different sockets.
+    let addr = bat_server.addr();
+    let shared_sets = Arc::new(sets.clone());
+    let handles: Vec<_> = (0..4)
+        .map(|conn| {
+            let sets = Arc::clone(&shared_sets);
+            std::thread::spawn(move || {
+                let mut c = PipelinedClient::connect(addr).unwrap();
+                let mut tags: HashMap<u64, (usize, usize)> = HashMap::new();
+                for (si, scheme) in FAMILY_SCHEMES.iter().enumerate() {
+                    for i in (conn..sets.len()).step_by(4) {
+                        let rid = c
+                            .send(&Request::Sketch {
+                                set: sets[i].clone(),
+                                spec: None,
+                                scheme: scheme.map(str::to_string),
+                            })
+                            .unwrap();
+                        tags.insert(rid, (si, i));
+                    }
+                }
+                let mut got = HashMap::new();
+                for _ in 0..tags.len() {
+                    let (rid, resp) = c.recv().unwrap();
+                    got.insert(tags[&rid.expect("tagged")], resp);
+                }
+                got
+            })
+        })
+        .collect();
+    let mut got: HashMap<(usize, usize), Response> = HashMap::new();
+    for h in handles {
+        got.extend(h.join().expect("client thread"));
+    }
+    assert_eq!(got.len(), FAMILY_SCHEMES.len() * sets.len());
+    for (k, v) in &expect {
+        assert_eq!(
+            got.get(k),
+            Some(v),
+            "scheme #{} set #{}: batched-across-connections == sequential, bit for bit",
+            k.0,
+            k.1
+        );
+    }
+    // The batcher really ran — this wasn't a silent direct fall-through.
+    let batches = bat_c.metrics.op_batches.load(Ordering::Relaxed);
+    assert!(batches > 0, "op batcher dispatched no batches");
+
+    // Insert/query/estimate identity on the default OPH scheme: the
+    // subject ingests from 4 concurrent pipelined connections, the
+    // reference sequentially; stored sketches must be bit-identical
+    // regardless of arrival order or batch boundaries.
+    for (i, s) in sets.iter().enumerate() {
+        let r = rc
+            .call(&Request::LshInsert {
+                id: i as u32,
+                set: s.clone(),
+                scheme: None,
+            })
+            .unwrap();
+        assert!(matches!(r, Response::Inserted { .. }));
+    }
+    let handles: Vec<_> = (0..4)
+        .map(|conn| {
+            let sets = Arc::clone(&shared_sets);
+            std::thread::spawn(move || {
+                let mut c = PipelinedClient::connect(addr).unwrap();
+                let mut n = 0;
+                for i in (conn..sets.len()).step_by(4) {
+                    c.send(&Request::LshInsert {
+                        id: i as u32,
+                        set: sets[i].clone(),
+                        scheme: None,
+                    })
+                    .unwrap();
+                    n += 1;
+                }
+                for _ in 0..n {
+                    let (_, resp) = c.recv().unwrap();
+                    assert!(matches!(resp, Response::Inserted { .. }));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("insert client");
+    }
+    let mut bc = Client::connect(addr).unwrap();
+    for s in sets.iter() {
+        let Response::Candidates { ids: mut a } = bc
+            .call(&Request::LshQuery {
+                set: s.clone(),
+                scheme: None,
+            })
+            .unwrap()
+        else {
+            panic!("expected candidates")
+        };
+        let Response::Candidates { ids: mut b } = rc
+            .call(&Request::LshQuery {
+                set: s.clone(),
+                scheme: None,
+            })
+            .unwrap()
+        else {
+            panic!("expected candidates")
+        };
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "candidate sets agree");
+    }
+    for i in 1..sets.len() {
+        let ra = bc
+            .call(&Request::Estimate {
+                a: 0,
+                b: i as u32,
+                scheme: None,
+            })
+            .unwrap();
+        let rb = rc
+            .call(&Request::Estimate {
+                a: 0,
+                b: i as u32,
+                scheme: None,
+            })
+            .unwrap();
+        assert_eq!(ra, rb, "estimates from stored sketches exactly equal");
+    }
+    bat_server.stop();
+    ref_server.stop();
+}

@@ -1,0 +1,371 @@
+//! Scripted-framer suite: drives [`ConnState`] — the server's IO-free
+//! per-connection protocol machine — with exact byte sequences, fake
+//! clocks, and hand-ordered completions. Every interleaving here is
+//! deterministic: no sockets, no threads, no sleeps.
+
+use crate::base_cfg;
+use mixtab::coordinator::metrics::Metrics;
+use mixtab::coordinator::request::{Request, Response};
+use mixtab::coordinator::server::{ConnState, Dispatch};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn err(msg: &str) -> Response {
+    Response::Error {
+        message: msg.into(),
+    }
+}
+
+type Drained = (Vec<(Option<u64>, Response)>, Vec<Dispatch>);
+
+/// Drain the outbound queue with full writes, decoding each line; also
+/// returns any dispatches unblocked by the freed capacity.
+fn drain_output(cs: &mut ConnState, now: Instant) -> Drained {
+    let mut lines = Vec::new();
+    let mut dispatches = Vec::new();
+    while let Some(chunk) = cs.next_write().map(<[u8]>::to_vec) {
+        dispatches.extend(cs.advance_write(chunk.len(), now));
+        let text = String::from_utf8(chunk).expect("utf8 response line");
+        for l in text.lines() {
+            lines.push(Response::from_json_line_tagged(l).expect("decode response"));
+        }
+    }
+    (lines, dispatches)
+}
+
+#[test]
+fn frames_split_across_reads_and_ordered_lane_serializes() {
+    let cfg = base_cfg();
+    let t0 = Instant::now();
+    let mut cs = ConnState::new(&cfg, Arc::new(Metrics::new()), t0);
+    let wire = format!(
+        "{}\n{}\n",
+        Request::Stats.to_json_line(),
+        Request::OphSketch { set: vec![1, 2, 3] }.to_json_line()
+    );
+    // Trickle the bytes in 3-byte reads: nothing dispatches until a
+    // newline completes a frame, and the ordered lane holds the second
+    // request while the first is in flight.
+    let mut dispatched = Vec::new();
+    for chunk in wire.as_bytes().chunks(3) {
+        dispatched.extend(cs.on_bytes(chunk, t0));
+    }
+    assert_eq!(dispatched.len(), 1);
+    assert!(matches!(
+        dispatched[0],
+        Dispatch {
+            rid: None,
+            req: Request::Stats
+        }
+    ));
+    assert_eq!(cs.pending(), 2, "one in flight, one queued");
+    // Completing the first unblocks the second.
+    let next = cs.on_response(None, &err("r1"), t0);
+    assert_eq!(next.len(), 1);
+    assert!(next[0].rid.is_none());
+    assert!(matches!(&next[0].req, Request::OphSketch { .. }));
+    assert!(cs.on_response(None, &err("r2"), t0).is_empty());
+    // Responses drain in order, untagged — the legacy wire format.
+    let (lines, unblocked) = drain_output(&mut cs, t0);
+    assert!(unblocked.is_empty());
+    assert_eq!(lines, vec![(None, err("r1")), (None, err("r2"))]);
+    assert_eq!(cs.pending(), 0);
+    assert!(!cs.should_close(t0));
+}
+
+#[test]
+fn tagged_requests_dispatch_concurrently_and_echo_rids_out_of_order() {
+    let cfg = base_cfg();
+    let metrics = Arc::new(Metrics::new());
+    let t0 = Instant::now();
+    let mut cs = ConnState::new(&cfg, Arc::clone(&metrics), t0);
+    let mut wire = String::new();
+    for rid in [7u64, 9, 11] {
+        wire.push_str(&Request::Stats.to_json_line_tagged(rid));
+        wire.push('\n');
+    }
+    let ds = cs.on_bytes(wire.as_bytes(), t0);
+    assert_eq!(
+        ds.iter().map(|d| d.rid).collect::<Vec<_>>(),
+        vec![Some(7), Some(9), Some(11)],
+        "tagged lane has no serialization"
+    );
+    assert_eq!(metrics.pipelined_requests.load(Ordering::Relaxed), 3);
+    // Complete out of order; each response line echoes its tag.
+    for rid in [9u64, 11, 7] {
+        assert!(cs
+            .on_response(Some(rid), &err(&format!("r{rid}")), t0)
+            .is_empty());
+    }
+    let (lines, _) = drain_output(&mut cs, t0);
+    assert_eq!(
+        lines.iter().map(|(r, _)| r.unwrap()).collect::<Vec<_>>(),
+        vec![9, 11, 7],
+        "responses return in completion order, mapped by rid"
+    );
+}
+
+#[test]
+fn ordered_lane_stays_sequential_amid_tagged_traffic() {
+    let cfg = base_cfg();
+    let t0 = Instant::now();
+    let mut cs = ConnState::new(&cfg, Arc::new(Metrics::new()), t0);
+    // u1, t5, u2, t6 on the wire: both tagged dispatch immediately, the
+    // ordered pair strictly one at a time.
+    let wire = format!(
+        "{}\n{}\n{}\n{}\n",
+        Request::OphSketch { set: vec![1] }.to_json_line(),
+        Request::Stats.to_json_line_tagged(5),
+        Request::OphSketch { set: vec![2] }.to_json_line(),
+        Request::Stats.to_json_line_tagged(6),
+    );
+    let ds = cs.on_bytes(wire.as_bytes(), t0);
+    assert_eq!(
+        ds.iter().map(|d| d.rid).collect::<Vec<_>>(),
+        vec![Some(5), Some(6), None]
+    );
+    assert!(matches!(&ds[2].req, Request::OphSketch { set } if set == &vec![1]));
+    assert_eq!(cs.pending(), 4);
+    // Tagged completions never release the ordered lane.
+    assert!(cs.on_response(Some(5), &err("t5"), t0).is_empty());
+    assert!(cs.on_response(Some(6), &err("t6"), t0).is_empty());
+    // Only u1's completion dispatches u2.
+    let next = cs.on_response(None, &err("u1"), t0);
+    assert_eq!(next.len(), 1);
+    assert!(matches!(&next[0].req, Request::OphSketch { set } if set == &vec![2]));
+    assert!(cs.on_response(None, &err("u2"), t0).is_empty());
+    let (lines, _) = drain_output(&mut cs, t0);
+    assert_eq!(lines.len(), 4);
+}
+
+#[test]
+fn pending_cap_gates_extraction_until_writes_drain() {
+    let mut cfg = base_cfg();
+    cfg.conn_queue_cap = 2;
+    let t0 = Instant::now();
+    let mut cs = ConnState::new(&cfg, Arc::new(Metrics::new()), t0);
+    let mut wire = String::new();
+    for rid in 0..5u64 {
+        wire.push_str(&Request::Stats.to_json_line_tagged(rid));
+        wire.push('\n');
+    }
+    let ds = cs.on_bytes(wire.as_bytes(), t0);
+    assert_eq!(
+        ds.iter().map(|d| d.rid).collect::<Vec<_>>(),
+        vec![Some(0), Some(1)],
+        "extraction stops at the pending cap"
+    );
+    assert!(!cs.wants_read(), "backpressure: stop reading the socket");
+    // A completion alone frees nothing — the response line still holds a
+    // pending slot until it is written out.
+    assert!(cs.on_response(Some(0), &err("r0"), t0).is_empty());
+    assert_eq!(cs.pending(), 2);
+    // Write drain frees the slot and resumes extraction, one frame per
+    // freed slot.
+    let (lines, unblocked) = drain_output(&mut cs, t0);
+    assert_eq!(lines.len(), 1);
+    assert_eq!(unblocked.iter().map(|d| d.rid).collect::<Vec<_>>(), vec![Some(2)]);
+    assert!(!cs.wants_read(), "cap re-filled by the resumed frame");
+    // Keep completing + draining: the remaining frames flow through.
+    let mut seen = Vec::new();
+    for rid in [1u64, 2] {
+        assert!(cs.on_response(Some(rid), &err("r"), t0).is_empty());
+        let (lines, unblocked) = drain_output(&mut cs, t0);
+        seen.extend(lines);
+        assert_eq!(unblocked.len(), 1);
+    }
+    assert_eq!(cs.pending(), 2, "rids 3 and 4 now in flight");
+    for rid in [3u64, 4] {
+        assert!(cs.on_response(Some(rid), &err("r"), t0).is_empty());
+    }
+    let (lines, unblocked) = drain_output(&mut cs, t0);
+    assert!(unblocked.is_empty());
+    seen.extend(lines);
+    assert_eq!(seen.len(), 4);
+    assert_eq!(cs.pending(), 0);
+    assert!(cs.wants_read());
+}
+
+#[test]
+fn throttle_errors_echo_rid_and_token_refill_restores_service() {
+    let mut cfg = base_cfg();
+    cfg.rate_limit_rps = 1.0;
+    cfg.rate_limit_burst = 2;
+    let metrics = Arc::new(Metrics::new());
+    let t0 = Instant::now();
+    let mut cs = ConnState::new(&cfg, Arc::clone(&metrics), t0);
+    let mut wire = String::new();
+    for rid in [1u64, 2, 3] {
+        wire.push_str(&Request::Stats.to_json_line_tagged(rid));
+        wire.push('\n');
+    }
+    let ds = cs.on_bytes(wire.as_bytes(), t0);
+    assert_eq!(
+        ds.iter().map(|d| d.rid).collect::<Vec<_>>(),
+        vec![Some(1), Some(2)],
+        "burst of 2 admits exactly 2"
+    );
+    assert_eq!(metrics.throttled.load(Ordering::Relaxed), 1);
+    // Blank keep-alive lines are free: no admission charge, no response.
+    assert!(cs.on_bytes(b"\n \n", t0).is_empty());
+    assert_eq!(metrics.throttled.load(Ordering::Relaxed), 1);
+    // The rejection was synthesized before parse, yet still echoes the
+    // tag so a pipelined client can map it.
+    let (lines, _) = drain_output(&mut cs, t0);
+    assert_eq!(lines.len(), 1);
+    let (rid, Response::Error { message }) = lines[0].clone() else {
+        panic!("expected error");
+    };
+    assert_eq!(rid, Some(3));
+    assert!(message.contains("rate limited"), "got: {message}");
+    // One second of fake clock buys exactly one more token.
+    let t1 = t0 + Duration::from_secs(1);
+    let ds = cs.on_bytes(
+        format!("{}\n", Request::Stats.to_json_line_tagged(4)).as_bytes(),
+        t1,
+    );
+    assert_eq!(ds.len(), 1);
+    let ds = cs.on_bytes(
+        format!("{}\n", Request::Stats.to_json_line_tagged(5)).as_bytes(),
+        t1,
+    );
+    assert!(ds.is_empty());
+    assert_eq!(metrics.throttled.load(Ordering::Relaxed), 2);
+}
+
+#[test]
+fn budget_exhaustion_drains_admitted_work_then_closes() {
+    let mut cfg = base_cfg();
+    cfg.conn_request_budget = 2;
+    let metrics = Arc::new(Metrics::new());
+    let t0 = Instant::now();
+    let mut cs = ConnState::new(&cfg, Arc::clone(&metrics), t0);
+    let mut wire = String::new();
+    for rid in [1u64, 2, 3, 4] {
+        wire.push_str(&Request::Stats.to_json_line_tagged(rid));
+        wire.push('\n');
+    }
+    let ds = cs.on_bytes(wire.as_bytes(), t0);
+    assert_eq!(
+        ds.iter().map(|d| d.rid).collect::<Vec<_>>(),
+        vec![Some(1), Some(2)]
+    );
+    assert_eq!(
+        metrics.throttled.load(Ordering::Relaxed),
+        1,
+        "budget rejection counts as throttled"
+    );
+    assert!(!cs.wants_read(), "no frames read past the budget error");
+    assert!(
+        !cs.should_close(t0),
+        "admitted work drains before the close"
+    );
+    // In-flight completions still flow out.
+    assert!(cs.on_response(Some(1), &err("r1"), t0).is_empty());
+    assert!(cs.on_response(Some(2), &err("r2"), t0).is_empty());
+    let (lines, _) = drain_output(&mut cs, t0);
+    // The budget error was enqueued at admission time, ahead of the two
+    // completions; rid 4 was never admitted at all.
+    assert_eq!(lines.len(), 3);
+    assert_eq!(lines[0].0, Some(3));
+    let Response::Error { message } = &lines[0].1 else {
+        panic!("expected error");
+    };
+    assert!(message.contains("budget exhausted"), "got: {message}");
+    assert_eq!(lines[1].0, Some(1));
+    assert_eq!(lines[2].0, Some(2));
+    assert!(cs.should_close(t0), "drained: now close");
+}
+
+#[test]
+fn oversized_line_yields_one_error_then_close() {
+    let cfg = base_cfg();
+    let t0 = Instant::now();
+    let mut cs = ConnState::new(&cfg, Arc::new(Metrics::new()), t0);
+    cs.set_max_line(64);
+    let ds = cs.on_bytes(&[b'x'; 80], t0);
+    assert!(ds.is_empty());
+    assert!(!cs.wants_read());
+    let (lines, _) = drain_output(&mut cs, t0);
+    assert_eq!(lines.len(), 1);
+    let (rid, Response::Error { message }) = lines[0].clone() else {
+        panic!("expected error");
+    };
+    assert_eq!(rid, None);
+    assert!(message.contains("byte limit"), "got: {message}");
+    assert!(cs.should_close(t0));
+}
+
+#[test]
+fn idle_timeout_fires_on_fake_clock_only_when_quiescent() {
+    let mut cfg = base_cfg();
+    cfg.idle_timeout_ms = 50;
+    let t0 = Instant::now();
+    let mut cs = ConnState::new(&cfg, Arc::new(Metrics::new()), t0);
+    let ms = Duration::from_millis;
+    assert!(!cs.idle_expired(t0 + ms(49)));
+    assert!(cs.idle_expired(t0 + ms(50)));
+    assert!(cs.should_close(t0 + ms(50)));
+    // Any byte resets the window — even a partial frame.
+    let t1 = t0 + ms(40);
+    assert!(cs.on_bytes(b"{\"op\":", t1).is_empty());
+    assert!(!cs.idle_expired(t1 + ms(49)));
+    assert!(cs.idle_expired(t1 + ms(50)));
+    // Never fires while a request is in flight, however long it runs.
+    let t2 = t1 + ms(10);
+    let ds = cs.on_bytes(b"\"stats\",\"rid\":1}\n", t2);
+    assert_eq!(ds.len(), 1, "split frame completed and dispatched");
+    assert!(!cs.idle_expired(t2 + Duration::from_secs(3600)));
+    // The window restarts from the last write of the response.
+    let t3 = t2 + ms(5);
+    assert!(cs.on_response(Some(1), &err("r"), t3).is_empty());
+    let t4 = t3 + ms(5);
+    let (lines, _) = drain_output(&mut cs, t4);
+    assert_eq!(lines.len(), 1);
+    assert!(!cs.idle_expired(t4 + ms(49)));
+    assert!(cs.idle_expired(t4 + ms(50)));
+}
+
+#[test]
+fn eof_serves_final_unterminated_line_then_closes() {
+    let cfg = base_cfg();
+    let t0 = Instant::now();
+    let mut cs = ConnState::new(&cfg, Arc::new(Metrics::new()), t0);
+    // The old blocking reader served a final line missing its newline;
+    // the event loop keeps that contract.
+    assert!(cs.on_bytes(b"{\"op\":\"stats\"}", t0).is_empty());
+    let ds = cs.on_eof(t0);
+    assert_eq!(ds.len(), 1);
+    assert!(matches!(ds[0].req, Request::Stats));
+    assert!(!cs.should_close(t0), "response still owed");
+    assert!(cs.on_response(None, &err("r"), t0).is_empty());
+    let (lines, _) = drain_output(&mut cs, t0);
+    assert_eq!(lines.len(), 1);
+    assert!(cs.should_close(t0));
+}
+
+#[test]
+fn partial_writes_resume_mid_line_and_untagged_format_is_legacy() {
+    let cfg = base_cfg();
+    let t0 = Instant::now();
+    let mut cs = ConnState::new(&cfg, Arc::new(Metrics::new()), t0);
+    let ds = cs.on_bytes(
+        format!("{}\n", Request::Stats.to_json_line()).as_bytes(),
+        t0,
+    );
+    assert_eq!(ds.len(), 1);
+    let resp = err("hello");
+    cs.on_response(None, &resp, t0);
+    // Untagged responses serialize byte-identically to the pre-pipelining
+    // wire format.
+    assert_eq!(resp.to_json_line_tagged(None), resp.to_json_line());
+    let expected = format!("{}\n", resp.to_json_line()).into_bytes();
+    assert_eq!(cs.next_write().unwrap(), &expected[..]);
+    // A short write leaves the tail exactly where it stopped.
+    assert!(cs.advance_write(5, t0).is_empty());
+    assert_eq!(cs.next_write().unwrap(), &expected[5..]);
+    assert!(cs.advance_write(expected.len() - 5, t0).is_empty());
+    assert!(cs.next_write().is_none());
+    assert_eq!(cs.pending(), 0);
+}

@@ -1,0 +1,91 @@
+//! Global connection-cap and idle-timeout behaviour over real TCP.
+
+use crate::{base_cfg, coordinator};
+use mixtab::coordinator::request::{Request, Response};
+use mixtab::coordinator::server::{Client, Server};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Connection N+1 past `max_connections` gets a clean one-line error and
+/// an orderly close — never a hang — and a freed slot is re-admittable.
+#[test]
+fn connection_cap_sheds_cleanly_and_recovers() {
+    let mut cfg = base_cfg();
+    cfg.max_connections = 2;
+    let c = coordinator(cfg);
+    let server = Server::start(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+
+    let mut c1 = Client::connect(addr).unwrap();
+    let mut c2 = Client::connect(addr).unwrap();
+    assert!(matches!(c1.call(&Request::Stats).unwrap(), Response::Stats { .. }));
+    assert!(matches!(c2.call(&Request::Stats).unwrap(), Response::Stats { .. }));
+
+    // Third connection: shed with a parseable error line, then EOF.
+    let over = TcpStream::connect(addr).unwrap();
+    over.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(over);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = Response::from_json_line(line.trim_end()).unwrap();
+    let Response::Error { message } = resp else {
+        panic!("capacity shed must be a wire error, got {resp:?}");
+    };
+    assert!(message.contains("capacity"), "got: {message}");
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "clean EOF after shed");
+    assert_eq!(c.metrics.conns_rejected.load(Ordering::Relaxed), 1);
+
+    // Admitted connections are unaffected by the shed…
+    assert!(matches!(c2.call(&Request::Stats).unwrap(), Response::Stats { .. }));
+
+    // …and closing one frees its slot for a new client.
+    drop(c1);
+    let mut admitted = false;
+    for _ in 0..400 {
+        if let Ok(mut fresh) = Client::connect(addr) {
+            if matches!(fresh.call(&Request::Stats), Ok(Response::Stats { .. })) {
+                admitted = true;
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(admitted, "freed slot was never re-admitted");
+    server.stop();
+}
+
+/// A connection quiet past `idle_timeout_ms` is reaped: the server
+/// closes the socket (blocking read sees EOF) and counts the reap.
+#[test]
+fn idle_timeout_reaps_quiet_connections_over_tcp() {
+    let mut cfg = base_cfg();
+    cfg.idle_timeout_ms = 150;
+    let c = coordinator(cfg);
+    let server = Server::start(Arc::clone(&c), "127.0.0.1:0").unwrap();
+
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    // One served request proves the connection is live…
+    stream
+        .write_all(format!("{}\n", Request::Stats.to_json_line()).as_bytes())
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(matches!(
+        Response::from_json_line(line.trim_end()).unwrap(),
+        Response::Stats { .. }
+    ));
+    // …then we go quiet and the server must hang up on us.
+    let mut rest = Vec::new();
+    let n = reader.read_to_end(&mut rest).unwrap();
+    assert_eq!(n, 0, "idle close must not write anything");
+    assert_eq!(c.metrics.idle_closed.load(Ordering::Relaxed), 1);
+    server.stop();
+}

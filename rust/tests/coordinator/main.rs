@@ -1,0 +1,86 @@
+//! Deterministic concurrency harness for the event-driven server.
+//!
+//! The server's per-connection protocol machine ([`ConnState`]) does no
+//! IO and takes every timestamp as a parameter, so these suites drive it
+//! with scripted byte sequences and fake clocks — exact interleavings,
+//! no wall-clock sleeps, no real sockets. The TCP suites then prove the
+//! same properties end-to-end: pipelined out-of-order responses, the
+//! cross-connection op batcher's bit-identity with sequential serving
+//! for every sketch family, connection caps, and panic containment.
+//!
+//! Registered in Cargo.toml as the `coordinator` test target; the CI
+//! `test-stress` job runs it single-threaded with the `#[ignore]`d soak
+//! included.
+
+mod batching;
+mod framing;
+mod limits;
+mod pipeline;
+mod soak;
+
+use mixtab::coordinator::config::{CoordinatorConfig, SchemeConfig};
+use mixtab::coordinator::Coordinator;
+use mixtab::hash::HashFamily;
+use mixtab::sketch::feature_hash::SignMode;
+use mixtab::sketch::SketchSpec;
+use mixtab::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+/// Base config: native path, small parameters, fast to construct.
+pub fn base_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        enable_pjrt: false,
+        fh_dim: 32,
+        oph_k: 40,
+        lsh_k: 4,
+        lsh_l: 6,
+        lsh_shards: 2,
+        ..Default::default()
+    }
+}
+
+/// One named scheme per sketch family (plus the default OPH scheme), so
+/// a single coordinator serves all five families the paper's estimators
+/// cover: oph, minhash, simhash, featurehash, bbit.
+pub fn five_family_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        schemes: vec![
+            SchemeConfig {
+                name: "mh".into(),
+                spec: SketchSpec::minhash(HashFamily::MixedTab, 11, 24),
+                shards: 1,
+            },
+            SchemeConfig {
+                name: "sh".into(),
+                spec: SketchSpec::simhash(HashFamily::MixedTab, 13, 64),
+                shards: 1,
+            },
+            SchemeConfig {
+                name: "fh".into(),
+                spec: SketchSpec::feature_hash(HashFamily::MixedTab, 17, 32, SignMode::Paired),
+                shards: 1,
+            },
+            SchemeConfig {
+                name: "bb".into(),
+                spec: SketchSpec::bbit(HashFamily::MixedTab, 19, 2, 32),
+                shards: 1,
+            },
+        ],
+        ..base_cfg()
+    }
+}
+
+/// The scheme selectors covering all five families on one coordinator.
+pub const FAMILY_SCHEMES: [Option<&str>; 5] =
+    [None, Some("mh"), Some("sh"), Some("fh"), Some("bb")];
+
+pub fn coordinator(cfg: CoordinatorConfig) -> Arc<Coordinator> {
+    Arc::new(Coordinator::new(cfg))
+}
+
+/// Seeded test set: `n` elements drawn from a bounded universe (dense
+/// enough for LSH collisions at the harness's small K×L).
+pub fn seeded_set(seed: u64, stream: u64, n: usize) -> Vec<u32> {
+    let mut rng = Xoshiro256::stream(seed, stream);
+    (0..n).map(|_| rng.next_u32() % 50_000).collect()
+}

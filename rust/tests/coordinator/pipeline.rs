@@ -1,0 +1,258 @@
+//! Pipelining property suite over real TCP: out-of-order rid mapping,
+//! interleaved multi-op streams from 8 scripted clients with seeded
+//! pipelining depths, and panic containment in the worker pool.
+
+use crate::{base_cfg, coordinator, seeded_set};
+use mixtab::coordinator::request::{Request, Response};
+use mixtab::coordinator::server::{Handler, PipelinedClient, Server};
+use mixtab::util::rng::Xoshiro256;
+use std::collections::{HashMap, HashSet};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Parks any request whose set starts with 0 on a gate the *test* holds;
+/// everything else answers immediately. Lets the test force a provable
+/// out-of-order completion: it only opens the gate after the fast
+/// response has already arrived on the wire.
+struct GateHandler {
+    gate: Mutex<mpsc::Receiver<()>>,
+}
+
+impl Handler for GateHandler {
+    fn handle(&self, req: Request) -> Response {
+        let Request::OphSketch { set } = req else {
+            return Response::Error {
+                message: "unexpected op".into(),
+            };
+        };
+        if set.first() == Some(&0) {
+            self.gate.lock().unwrap().recv().expect("gate opened");
+            Response::Error {
+                message: "slow".into(),
+            }
+        } else {
+            Response::Error {
+                message: "fast".into(),
+            }
+        }
+    }
+}
+
+#[test]
+fn responses_return_out_of_order_mapped_by_rid() {
+    let (open_gate, gate) = mpsc::channel();
+    let handler = Arc::new(GateHandler {
+        gate: Mutex::new(gate),
+    });
+    let mut cfg = base_cfg();
+    cfg.request_workers = 2; // slow and fast must run concurrently
+    let server = Server::start_with_handler(handler, cfg, "127.0.0.1:0").unwrap();
+    let mut c = PipelinedClient::connect(server.addr()).unwrap();
+    let slow = c.send(&Request::OphSketch { set: vec![0] }).unwrap();
+    let fast = c.send(&Request::OphSketch { set: vec![1] }).unwrap();
+    // The fast response overtakes the parked slow one on the wire…
+    let (rid, resp) = c.recv().unwrap();
+    assert_eq!(rid, Some(fast));
+    assert!(matches!(resp, Response::Error { message } if message == "fast"));
+    // …and only then do we let the slow request finish.
+    open_gate.send(()).unwrap();
+    let (rid, resp) = c.recv().unwrap();
+    assert_eq!(rid, Some(slow));
+    assert!(matches!(resp, Response::Error { message } if message == "slow"));
+    server.stop();
+}
+
+/// What each in-flight request must produce.
+enum Expect {
+    /// Bit-identical to a reference coordinator handling the same request.
+    Exact(Request),
+    /// Candidates must contain this id (LSH self-retrieval of an
+    /// already-acknowledged insert).
+    SelfHit(u32),
+    StatsOk,
+}
+
+#[test]
+fn interleaved_multi_op_streams_from_eight_scripted_clients() {
+    let cfg = base_cfg(); // op batching on (default): exercised under load
+    let subject = coordinator(cfg.clone());
+    let reference = coordinator(cfg);
+    let server = Server::start(subject, "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..8u64)
+        .map(|cl| {
+            let reference = Arc::clone(&reference);
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::stream(99, cl);
+                let mut c = PipelinedClient::connect(addr).unwrap();
+                // Phase 1: pipeline this client's 8 inserts (ids are
+                // disjoint per client) and check every ack by rid.
+                let my_sets: Vec<Vec<u32>> =
+                    (0..8).map(|i| seeded_set(7, cl * 8 + i, 50)).collect();
+                let mut tags = HashMap::new();
+                for (i, s) in my_sets.iter().enumerate() {
+                    let id = (cl * 8) as u32 + i as u32;
+                    let rid = c
+                        .send(&Request::LshInsert {
+                            id,
+                            set: s.clone(),
+                            scheme: None,
+                        })
+                        .unwrap();
+                    tags.insert(rid, id);
+                }
+                for _ in 0..my_sets.len() {
+                    let (rid, resp) = c.recv().unwrap();
+                    let id = tags[&rid.expect("tagged")];
+                    assert_eq!(resp, Response::Inserted { id });
+                }
+                // Phase 2: a seeded interleaving of sketch / transform /
+                // query / stats ops at random pipelining depths. Sketches
+                // and transforms must match the reference coordinator
+                // bit for bit; queries must retrieve their own id.
+                let total = 24usize;
+                let mut pending: HashMap<u64, Expect> = HashMap::new();
+                let (mut issued, mut done) = (0usize, 0usize);
+                while done < total {
+                    let depth = 1 + (rng.next_u32() % 6) as usize;
+                    while issued < total && pending.len() < depth {
+                        let exp = match rng.next_u32() % 4 {
+                            0 => Expect::Exact(Request::Sketch {
+                                set: seeded_set(11, rng.next_u64(), 40),
+                                spec: None,
+                                scheme: None,
+                            }),
+                            1 => {
+                                let n = 20 + (rng.next_u32() % 20) as usize;
+                                Expect::Exact(Request::FhTransform {
+                                    indices: (0..n)
+                                        .map(|_| rng.next_u32() % 1_000_000)
+                                        .collect(),
+                                    values: (0..n).map(|_| rng.next_f64() - 0.5).collect(),
+                                })
+                            }
+                            2 => {
+                                let j = issued % my_sets.len();
+                                let rid = c
+                                    .send(&Request::LshQuery {
+                                        set: my_sets[j].clone(),
+                                        scheme: None,
+                                    })
+                                    .unwrap();
+                                pending.insert(rid, Expect::SelfHit((cl * 8) as u32 + j as u32));
+                                issued += 1;
+                                continue;
+                            }
+                            _ => {
+                                let rid = c.send(&Request::Stats).unwrap();
+                                pending.insert(rid, Expect::StatsOk);
+                                issued += 1;
+                                continue;
+                            }
+                        };
+                        let Expect::Exact(ref req) = exp else {
+                            unreachable!()
+                        };
+                        let rid = c.send(req).unwrap();
+                        pending.insert(rid, exp);
+                        issued += 1;
+                    }
+                    let (rid, resp) = c.recv().unwrap();
+                    let exp = pending
+                        .remove(&rid.expect("tagged"))
+                        .expect("rid known and unanswered");
+                    match exp {
+                        Expect::Exact(req) => {
+                            assert_eq!(
+                                resp,
+                                reference.handle(req),
+                                "client {cl}: pipelined response bit-identical"
+                            );
+                        }
+                        Expect::SelfHit(id) => {
+                            let Response::Candidates { ids } = resp else {
+                                panic!("client {cl}: expected candidates, got {resp:?}");
+                            };
+                            assert!(ids.contains(&id), "client {cl}: self-retrieval of {id}");
+                        }
+                        Expect::StatsOk => {
+                            assert!(matches!(resp, Response::Stats { .. }));
+                        }
+                    }
+                    done += 1;
+                }
+                assert!(pending.is_empty());
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("scripted client");
+    }
+    server.stop();
+}
+
+/// A handler that panics on poisoned payloads.
+struct PanickyHandler;
+
+impl Handler for PanickyHandler {
+    fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::OphSketch { set } if set.first() == Some(&666) => {
+                panic!("injected handler panic")
+            }
+            Request::OphSketch { set } => Response::Candidates { ids: set },
+            _ => Response::Error {
+                message: "unexpected op".into(),
+            },
+        }
+    }
+}
+
+#[test]
+fn handler_panics_become_wire_errors_and_pool_survives() {
+    let mut cfg = base_cfg();
+    cfg.request_workers = 4;
+    let server = Server::start_with_handler(Arc::new(PanickyHandler), cfg, "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..8u32)
+        .map(|cl| {
+            std::thread::spawn(move || {
+                let mut c = PipelinedClient::connect(addr).unwrap();
+                let mut poisoned = HashSet::new();
+                for i in 0..12u32 {
+                    let poison = (i + cl) % 3 == 0;
+                    let set = if poison {
+                        vec![666, cl, i]
+                    } else {
+                        vec![cl, i]
+                    };
+                    let rid = c.send(&Request::OphSketch { set }).unwrap();
+                    if poison {
+                        poisoned.insert(rid);
+                    }
+                }
+                for _ in 0..12 {
+                    let (rid, resp) = c.recv().unwrap();
+                    let rid = rid.expect("tagged");
+                    if poisoned.contains(&rid) {
+                        let Response::Error { message } = resp else {
+                            panic!("poisoned request must yield a wire error, got {resp:?}");
+                        };
+                        assert!(message.contains("panicked"), "got: {message}");
+                    } else {
+                        assert!(matches!(resp, Response::Candidates { .. }));
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("panic-mix client");
+    }
+    // 32 panics later the pool still serves a fresh connection.
+    let mut c = PipelinedClient::connect(addr).unwrap();
+    let rid = c.send(&Request::OphSketch { set: vec![5] }).unwrap();
+    let (got, resp) = c.recv().unwrap();
+    assert_eq!(got, Some(rid));
+    assert!(matches!(resp, Response::Candidates { .. }));
+    server.stop();
+}

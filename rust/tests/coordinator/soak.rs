@@ -1,0 +1,112 @@
+//! Soak: 256 concurrent pipelined clients against one event loop.
+//!
+//! Ignored by default — the CI `test-stress` job runs it (single-
+//! threaded, under a job timeout) via `--include-ignored`.
+
+use crate::{base_cfg, coordinator, seeded_set};
+use mixtab::coordinator::request::{Request, Response};
+use mixtab::coordinator::server::{PipelinedClient, Server};
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const CLIENTS: usize = 256;
+const OPS: usize = 16;
+const WINDOW: usize = 8;
+
+#[derive(Clone, Copy)]
+enum Kind {
+    Insert(u32),
+    Query,
+    Sketch,
+    Stats,
+}
+
+#[test]
+#[ignore = "stress soak: run by the CI test-stress job (or --include-ignored)"]
+fn soak_256_pipelined_clients() {
+    let mut cfg = base_cfg();
+    cfg.request_workers = 4;
+    cfg.conn_queue_cap = 32;
+    let c = coordinator(cfg);
+    let server = Server::start(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|cl| {
+            std::thread::spawn(move || {
+                let mut conn = PipelinedClient::connect(addr).unwrap();
+                let mut pending: HashMap<u64, Kind> = HashMap::new();
+                let (mut sent, mut done) = (0usize, 0usize);
+                while done < OPS {
+                    while sent < OPS && pending.len() < WINDOW {
+                        let uid = (cl * OPS + sent) as u64;
+                        let (req, kind) = match sent % 4 {
+                            0 => (
+                                Request::LshInsert {
+                                    id: uid as u32,
+                                    set: seeded_set(5, uid, 30),
+                                    scheme: None,
+                                },
+                                Kind::Insert(uid as u32),
+                            ),
+                            1 => (
+                                Request::LshQuery {
+                                    set: seeded_set(5, uid, 30),
+                                    scheme: None,
+                                },
+                                Kind::Query,
+                            ),
+                            2 => (
+                                Request::Sketch {
+                                    set: seeded_set(5, uid, 30),
+                                    spec: None,
+                                    scheme: None,
+                                },
+                                Kind::Sketch,
+                            ),
+                            _ => (Request::Stats, Kind::Stats),
+                        };
+                        let rid = conn.send(&req).unwrap();
+                        pending.insert(rid, kind);
+                        sent += 1;
+                    }
+                    let (rid, resp) = conn.recv().unwrap();
+                    match pending.remove(&rid.expect("tagged")).expect("known rid") {
+                        Kind::Insert(id) => assert_eq!(resp, Response::Inserted { id }),
+                        Kind::Query => assert!(matches!(resp, Response::Candidates { .. })),
+                        Kind::Sketch => assert!(matches!(resp, Response::SketchValue { .. })),
+                        Kind::Stats => assert!(matches!(resp, Response::Stats { .. })),
+                    }
+                    done += 1;
+                }
+                assert!(pending.is_empty());
+                done
+            })
+        })
+        .collect();
+    let total: usize = handles.into_iter().map(|h| h.join().expect("client")).sum();
+    assert_eq!(total, CLIENTS * OPS);
+
+    // The pool decrements in-flight after the completion is sent, so a
+    // client can observe its last response a beat before the counter
+    // drains — poll with a bound instead of asserting immediately.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.requests_in_flight() != 0 {
+        assert!(Instant::now() < deadline, "in-flight never drained");
+        std::thread::yield_now();
+    }
+
+    assert_eq!(server.connection_count(), CLIENTS);
+    assert_eq!(
+        c.metrics.pipelined_requests.load(Ordering::Relaxed),
+        (CLIENTS * OPS) as u64
+    );
+    assert_eq!(
+        c.metrics.lsh_inserts.load(Ordering::Relaxed),
+        (CLIENTS * OPS / 4) as u64
+    );
+    assert_eq!(c.metrics.errors.load(Ordering::Relaxed), 0);
+    server.stop();
+}
