@@ -496,9 +496,14 @@ pub fn coordinator_service(bench: &mut Bench) {
 
     // Batched vs unbatched op throughput over TCP: the same pipelined
     // sketch/insert/query mix served with the cross-connection OpBatcher
-    // on (default) and off (every op on the direct worker path).
-    use crate::coordinator::server::{PipelinedClient, Server};
+    // on (default) and off (every op on the direct worker path). Driven
+    // by `loadtest::driver::drive` — the same closed-loop windowed engine
+    // the `mixtab loadtest` trajectory measures with, so the bench and
+    // the loadtest stay comparable by construction.
+    use crate::coordinator::server::Server;
+    use crate::loadtest::driver;
     let (tcp_clients, ops_per_client) = if bench.is_quick() { (4, 50) } else { (8, 400) };
+    let ops = tcp_clients * ops_per_client;
     println!(
         "coordinator_service: {tcp_clients} pipelined TCP clients × {ops_per_client} ops (insert/query/sketch mix)"
     );
@@ -511,55 +516,27 @@ pub fn coordinator_service(bench: &mut Bench) {
             ..Default::default()
         }));
         let server = Server::start(Arc::clone(&c), "127.0.0.1:0").expect("server");
-        let addr = server.addr();
-        let t0 = Instant::now();
-        let handles: Vec<_> = (0..tcp_clients)
-            .map(|cl| {
-                std::thread::spawn(move || {
-                    let mut client = PipelinedClient::connect(addr).expect("connect");
-                    let mut rng = Xoshiro256::stream(7, cl as u64);
-                    let mut ok = 0u64;
-                    // Closed loop with a pipelining window: keep up to 16
-                    // tagged ops in flight per connection.
-                    const WINDOW: usize = 16;
-                    let (mut sent, mut inflight) = (0usize, 0usize);
-                    while sent < ops_per_client || inflight > 0 {
-                        while sent < ops_per_client && inflight < WINDOW {
-                            let set: Vec<u32> =
-                                (0..40).map(|_| rng.next_u32() % 100_000).collect();
-                            let req = match sent % 3 {
-                                0 => Request::LshInsert {
-                                    id: (cl * ops_per_client + sent) as u32,
-                                    set,
-                                    scheme: None,
-                                },
-                                1 => Request::LshQuery { set, scheme: None },
-                                _ => Request::Sketch {
-                                    set,
-                                    spec: None,
-                                    scheme: None,
-                                },
-                            };
-                            client.send(&req).expect("send");
-                            sent += 1;
-                            inflight += 1;
-                        }
-                        let (_, resp) = client.recv().expect("recv");
-                        if !matches!(resp, Response::Error { .. }) {
-                            ok += 1;
-                        }
-                        inflight -= 1;
-                    }
-                    ok
-                })
-            })
-            .collect();
-        let mut total = 0u64;
-        for h in handles {
-            total += h.join().expect("client");
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let rps = total as f64 / wall;
+        // The op stream is a pure function of the global op index: same
+        // mix and same sets regardless of how ops land on connections.
+        let stats = driver::drive(server.addr(), tcp_clients, ops, 16, |i| {
+            let mut rng = Xoshiro256::stream(7, i as u64);
+            let set: Vec<u32> = (0..40).map(|_| rng.next_u32() % 100_000).collect();
+            match i % 3 {
+                0 => Request::LshInsert {
+                    id: i as u32,
+                    set,
+                    scheme: None,
+                },
+                1 => Request::LshQuery { set, scheme: None },
+                _ => Request::Sketch {
+                    set,
+                    spec: None,
+                    scheme: None,
+                },
+            }
+        })
+        .expect("drive");
+        let rps = stats.qps();
         let snap = c.metrics.snapshot();
         let occupancy = match (
             snap.get("op_batches").and_then(|j| j.as_i64()),
@@ -568,8 +545,9 @@ pub fn coordinator_service(bench: &mut Bench) {
             (Some(b), Some(r)) if b > 0 => r as f64 / b as f64,
             _ => 0.0,
         };
+        let (p50, p99, _) = stats.latency_us.tail_quantiles();
         println!(
-            "  {label:<14} {} op/s  op-batch occupancy={occupancy:.2}",
+            "  {label:<14} {} op/s  lat p50={p50:.0}µs p99={p99:.0}µs  op-batch occupancy={occupancy:.2}",
             fmt_rate(rps)
         );
         bench.record_rate(
@@ -578,11 +556,8 @@ pub fn coordinator_service(bench: &mut Bench) {
             rps,
             if rps > 0.0 { 1e9 / rps } else { 0.0 },
         );
-        assert_eq!(
-            total as usize,
-            tcp_clients * ops_per_client,
-            "{label}: every op answered"
-        );
+        assert_eq!(stats.ok as usize, ops, "{label}: every op answered cleanly");
+        assert_eq!(stats.errors, 0, "{label}: no wire errors");
         server.stop();
     }
 }

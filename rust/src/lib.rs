@@ -29,6 +29,10 @@
 //!   shared by the `cargo bench` targets and the `mixtab bench` CLI, which
 //!   writes machine-readable `BENCH_*.json` reports and gates them against
 //!   a committed baseline (see `util::bench`).
+//! * [`loadtest`] — the `mixtab loadtest` million-set recall/QPS harness:
+//!   clustered corpus generation, concurrent pipelined client driver,
+//!   sampled brute-force recall oracle, and the append-only CSV result
+//!   store CI gates against (the perf trajectory of record).
 //! * [`util`] — self-contained substrate (error handling, logging, JSON,
 //!   config, CSV, RNG, thread pool, CLI parsing, property-testing, bench
 //!   harness) — the offline registry ships none of the usual crates, so
@@ -46,6 +50,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod experiments;
 pub mod benchsuite;
+pub mod loadtest;
 
 /// Crate-wide result type (first-party; see [`util::error`]).
 pub type Result<T> = util::error::Result<T>;

@@ -1,0 +1,267 @@
+//! Loadtest corpus generation: clustered synthetic sets and shingled
+//! documents at million-set scale.
+//!
+//! The corpus is built from *clusters* so that recall@k is well-defined:
+//! every member of a cluster is an independent perturbation of the
+//! cluster's base (a dense low-id block for synthetic clusters — the §4.1
+//! structure that defeats weak hashing — or a base text for shingled-doc
+//! clusters), so a held-out member of the same cluster has genuine near
+//! neighbours with Jaccard ≈ 0.6–0.8, while adjacent clusters overlap at
+//! J ≈ 0.1–0.2 and unrelated clusters at ≈ 0. Everything is a pure
+//! function of `(seed, cluster, member)`, so the sustained-phase inserts
+//! can be regenerated exactly for the brute-force oracle and two runs of
+//! the same config sketch byte-identical corpora.
+
+use crate::data::shingle::byte_shingles;
+use crate::util::rng::Xoshiro256;
+use crate::util::threadpool::ThreadPool;
+
+/// Knobs for [`generate`].
+#[derive(Debug, Clone)]
+pub struct CorpusParams {
+    /// Total database sets (synthetic + shingled docs).
+    pub n_sets: usize,
+    /// Held-out query sets (one extra member per cluster, wrapping).
+    pub n_queries: usize,
+    /// Members per cluster. With recall@k ≤ `cluster_size − 1` genuine
+    /// neighbours per query, keep `k < cluster_size`.
+    pub cluster_size: usize,
+    /// Fraction of clusters that are shingled documents (the rest are
+    /// synthetic dense-block sets).
+    pub doc_frac: f64,
+    /// Root seed; every set derives from `(seed, cluster, member)`.
+    pub seed: u64,
+}
+
+impl Default for CorpusParams {
+    fn default() -> Self {
+        Self {
+            n_sets: 1_000_000,
+            n_queries: 64,
+            cluster_size: 12,
+            doc_frac: 0.5,
+            seed: 42,
+        }
+    }
+}
+
+/// A generated corpus: `sets[i]` is the set inserted under id `i`.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub sets: Vec<Vec<u32>>,
+    /// Held-out queries (never inserted), one per sampled cluster.
+    pub queries: Vec<Vec<u32>>,
+    /// How many of `sets` are shingled documents.
+    pub docs: usize,
+}
+
+const SYNTH_SALT: u64 = 0x51E7_C0DE;
+const DOC_SALT: u64 = 0xD0C5_EED5;
+const KIND_SALT: u64 = 0xC1A5_51F1;
+const EXTRA_SALT: u64 = 0xE87A_5E75;
+
+/// Whether cluster `c` is a shingled-doc cluster (seeded coin flip, so the
+/// two kinds interleave at any corpus size). Public so the mixed-phase op
+/// stream can regenerate any database set without holding the corpus.
+pub fn cluster_is_doc(seed: u64, cluster: usize, doc_frac: f64) -> bool {
+    Xoshiro256::stream(seed ^ KIND_SALT, cluster as u64).next_f64() < doc_frac
+}
+
+/// Generate the corpus, parallelised over `workers` threads.
+pub fn generate(p: &CorpusParams, workers: usize) -> Corpus {
+    assert!(p.cluster_size >= 1 && p.n_sets >= 1);
+    let n_clusters = p.n_sets.div_ceil(p.cluster_size);
+    let pool = ThreadPool::new(workers.max(1));
+    // ~8 chunks per worker: coarse enough that spawn cost is invisible,
+    // fine enough that the pool stays busy to the end.
+    let chunk = n_clusters.div_ceil((pool.size() * 8).max(1)).max(1);
+    let tasks: Vec<_> = (0..n_clusters)
+        .step_by(chunk)
+        .map(|start| {
+            let end = (start + chunk).min(n_clusters);
+            move || {
+                let mut sets = Vec::with_capacity((end - start) * p.cluster_size);
+                let mut docs = 0usize;
+                for c in start..end {
+                    let members = cluster_members(p, c);
+                    let is_doc = cluster_is_doc(p.seed, c, p.doc_frac);
+                    for m in 0..members {
+                        sets.push(member_set(p.seed, c, m, is_doc));
+                    }
+                    if is_doc {
+                        docs += members;
+                    }
+                }
+                (sets, docs)
+            }
+        })
+        .collect();
+    let parts = pool.scope(tasks);
+    let mut sets = Vec::with_capacity(p.n_sets);
+    let mut docs = 0usize;
+    for (part, d) in parts {
+        sets.extend(part);
+        docs += d;
+    }
+    debug_assert_eq!(sets.len(), p.n_sets);
+    // Held-out queries: extra members (index ≥ cluster_size) of clusters
+    // 0, 1, …, wrapping when n_queries > n_clusters.
+    let queries = (0..p.n_queries)
+        .map(|qi| {
+            let c = qi % n_clusters;
+            let m = p.cluster_size + qi / n_clusters;
+            member_set(p.seed, c, m, cluster_is_doc(p.seed, c, p.doc_frac))
+        })
+        .collect();
+    Corpus { sets, queries, docs }
+}
+
+/// How many members of cluster `c` are database sets (the last cluster may
+/// be ragged).
+fn cluster_members(p: &CorpusParams, c: usize) -> usize {
+    (p.n_sets - c * p.cluster_size).min(p.cluster_size)
+}
+
+/// Member `m` of cluster `c` — deterministic in `(seed, cluster, member)`.
+pub fn member_set(seed: u64, cluster: usize, member: usize, is_doc: bool) -> Vec<u32> {
+    debug_assert!(member < 1 << 20, "member index overflows the stream split");
+    if is_doc {
+        doc_member(seed, cluster, member)
+    } else {
+        synth_member(seed, cluster, member)
+    }
+}
+
+/// Synthetic member: the cluster's dense low-id base block (stride 37 with
+/// length 64, so adjacent clusters overlap in 27 ids — graded similarity),
+/// each id kept w.p. 0.95, plus 6 noise ids from a high disjoint range.
+/// Same-cluster pairs land at J ≈ 0.75, adjacent clusters at ≈ 0.2.
+fn synth_member(seed: u64, cluster: usize, member: usize) -> Vec<u32> {
+    let mut rng = Xoshiro256::stream(seed ^ SYNTH_SALT, ((cluster as u64) << 20) | member as u64);
+    let base_start = (cluster as u32 % 0x0010_0000).wrapping_mul(37);
+    let mut out: Vec<u32> = (base_start..base_start + 64)
+        .filter(|_| rng.bernoulli(0.95))
+        .collect();
+    for _ in 0..6 {
+        out.push(0x4000_0000 | (rng.next_u32() & 0x3FFF_FFFF));
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Shingled-document member: the cluster's base text (24 seeded words),
+/// with 2 word positions rewritten per member, reduced to 5-byte shingles.
+/// Same-cluster pairs land at J ≈ 0.6–0.7.
+fn doc_member(seed: u64, cluster: usize, member: usize) -> Vec<u32> {
+    // Base words come from a reserved member stream so no real member can
+    // collide with it (member < 2^20 is asserted upstream).
+    let mut base_rng = Xoshiro256::stream(seed ^ DOC_SALT, ((cluster as u64) << 20) | 0xF_FFFF);
+    let mut words: Vec<String> = (0..24).map(|_| random_word(&mut base_rng)).collect();
+    let mut rng = Xoshiro256::stream(seed ^ DOC_SALT, ((cluster as u64) << 20) | member as u64);
+    for _ in 0..2 {
+        let pos = rng.range(0, words.len());
+        words[pos] = random_word(&mut rng);
+    }
+    byte_shingles(&words.join(" "), 5)
+}
+
+fn random_word(rng: &mut Xoshiro256) -> String {
+    let len = rng.range(3, 9);
+    (0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+}
+
+/// A sustained-phase insert: a random set in a high id range, unrelated to
+/// every cluster (it can enter a query's brute-force top-k only by beating
+/// genuine neighbours, which a random set cannot). Pure in `(seed, i)`, so
+/// the oracle regenerates phase-2 inserts exactly.
+pub fn extra_set(seed: u64, i: u64) -> Vec<u32> {
+    let mut rng = Xoshiro256::stream(seed ^ EXTRA_SALT, i);
+    let mut out: Vec<u32> = (0..60).map(|_| 0x8000_0000 | (rng.next_u32() >> 1)).collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::estimators::jaccard_sorted;
+
+    #[test]
+    fn deterministic_and_sized() {
+        let p = CorpusParams {
+            n_sets: 100,
+            n_queries: 7,
+            cluster_size: 12,
+            doc_frac: 0.5,
+            seed: 9,
+        };
+        let a = generate(&p, 3);
+        let b = generate(&p, 1);
+        assert_eq!(a.sets, b.sets, "corpus must not depend on worker count");
+        assert_eq!(a.queries, b.queries);
+        assert_eq!(a.docs, b.docs);
+        assert_eq!(a.sets.len(), 100);
+        assert_eq!(a.queries.len(), 7);
+        assert!(a.docs > 0 && a.docs < 100, "both kinds present: {}", a.docs);
+        for s in &a.sets {
+            assert!(!s.is_empty());
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted dedup");
+        }
+    }
+
+    #[test]
+    fn cluster_structure_gives_graded_similarity() {
+        let seed = 4;
+        for is_doc in [false, true] {
+            // Same cluster: near neighbours.
+            let a = member_set(seed, 3, 0, is_doc);
+            let b = member_set(seed, 3, 1, is_doc);
+            let j_same = jaccard_sorted(&a, &b);
+            assert!(j_same > 0.4, "same-cluster J too low ({is_doc}): {j_same}");
+            // Distant cluster: near-zero similarity.
+            let c = member_set(seed, 900, 0, is_doc);
+            let j_far = jaccard_sorted(&a, &c);
+            assert!(j_far < 0.05, "far-cluster J too high ({is_doc}): {j_far}");
+            assert!(j_same > j_far);
+        }
+        // Adjacent synthetic clusters overlap, but less than co-members.
+        let a = member_set(seed, 3, 0, false);
+        let d = member_set(seed, 4, 0, false);
+        let j_adj = jaccard_sorted(&a, &d);
+        assert!(j_adj > 0.02 && j_adj < 0.45, "adjacent J: {j_adj}");
+    }
+
+    #[test]
+    fn queries_are_held_out_near_neighbours() {
+        let p = CorpusParams {
+            n_sets: 60,
+            n_queries: 3,
+            cluster_size: 12,
+            doc_frac: 0.0,
+            seed: 11,
+        };
+        let c = generate(&p, 2);
+        // Query qi targets cluster qi: its best database match is strong.
+        for (qi, q) in c.queries.iter().enumerate() {
+            let best = c
+                .sets
+                .iter()
+                .map(|s| jaccard_sorted(q, s))
+                .fold(0.0f64, f64::max);
+            assert!(best > 0.4, "query {qi} has no near neighbour: {best}");
+            // Held out: no database set is identical.
+            assert!(c.sets.iter().all(|s| s != q));
+        }
+    }
+
+    #[test]
+    fn extra_sets_stay_out_of_cluster_space() {
+        let e = extra_set(7, 123);
+        assert!(e.windows(2).all(|w| w[0] < w[1]));
+        assert!(e.iter().all(|&x| x >= 0x8000_0000));
+        assert_eq!(e, extra_set(7, 123));
+        assert_ne!(e, extra_set(7, 124));
+    }
+}

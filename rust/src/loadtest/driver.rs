@@ -1,0 +1,130 @@
+//! Concurrent pipelined client driver for the real TCP coordinator.
+//!
+//! [`drive`] fans a deterministic op stream across `clients` concurrent
+//! [`PipelinedClient`] connections: global op `i` is handled by client
+//! `i % clients`, each connection keeps up to `window` tagged requests in
+//! flight (the op's global index doubles as its `rid`), and every response
+//! is timed from its send. This is the loadtest's closed-loop engine and —
+//! via `benchsuite::coordinator_service` — the bench suite's TCP op-rate
+//! measurement, so both trajectories measure with the same mechanics.
+
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::server::PipelinedClient;
+use crate::stats::Summary;
+use crate::util::error::{Context, Result};
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::time::Instant;
+
+/// Aggregate outcome of one [`drive`] call.
+#[derive(Debug, Clone)]
+pub struct DriveStats {
+    /// Ops answered with a non-error response.
+    pub ok: u64,
+    /// Ops answered with a wire error (still counted as completed).
+    pub errors: u64,
+    /// Wall time of the whole drive (connect → last response).
+    pub wall_secs: f64,
+    /// Closed-loop per-op latency in microseconds, send to receive —
+    /// includes client-side pipelining delay, which is what a real
+    /// windowed client experiences.
+    pub latency_us: Summary,
+}
+
+impl DriveStats {
+    /// Completed ops (ok + errors).
+    pub fn total(&self) -> u64 {
+        self.ok + self.errors
+    }
+
+    /// Completed ops per second of wall time.
+    pub fn qps(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.total() as f64 / self.wall_secs
+    }
+}
+
+/// Drive `ops` requests at a running server from `clients` concurrent
+/// pipelined connections with a per-connection window of `window`
+/// in-flight ops. `gen` must be a pure function of the global op index —
+/// it is called once per op, on the owning client's thread.
+pub fn drive(
+    addr: SocketAddr,
+    clients: usize,
+    ops: usize,
+    window: usize,
+    gen: impl Fn(usize) -> Request + Sync,
+) -> Result<DriveStats> {
+    assert!(clients >= 1 && window >= 1, "need ≥1 client and window");
+    let gen = &gen;
+    let t0 = Instant::now();
+    let results: Vec<Result<(u64, u64, Summary)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|cl| s.spawn(move || client_loop(addr, cl, clients, ops, window, gen)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("driver client thread panicked"))
+            .collect()
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let (mut ok, mut errors) = (0u64, 0u64);
+    let mut latency_us = Summary::new();
+    for r in results {
+        let (o, e, lat) = r?;
+        ok += o;
+        errors += e;
+        for &v in lat.values() {
+            latency_us.add(v);
+        }
+    }
+    Ok(DriveStats {
+        ok,
+        errors,
+        wall_secs,
+        latency_us,
+    })
+}
+
+fn client_loop(
+    addr: SocketAddr,
+    cl: usize,
+    clients: usize,
+    ops: usize,
+    window: usize,
+    gen: &(impl Fn(usize) -> Request + Sync),
+) -> Result<(u64, u64, Summary)> {
+    let mut next = cl;
+    if next >= ops {
+        return Ok((0, 0, Summary::new()));
+    }
+    let mut client = PipelinedClient::connect(addr)?;
+    let mut inflight: HashMap<u64, Instant> = HashMap::with_capacity(window);
+    let (mut ok, mut errors) = (0u64, 0u64);
+    let mut lat = Summary::new();
+    loop {
+        while next < ops && inflight.len() < window {
+            let req = gen(next);
+            client.send_with_rid(&req, next as u64)?;
+            inflight.insert(next as u64, Instant::now());
+            next += clients;
+        }
+        if inflight.is_empty() {
+            break;
+        }
+        let (rid, resp) = client.recv()?;
+        let rid = rid.context("untagged response on a pipelined connection")?;
+        match inflight.remove(&rid) {
+            Some(t) => lat.add(t.elapsed().as_secs_f64() * 1e6),
+            None => crate::bail!("response for unknown rid {rid}"),
+        }
+        if matches!(resp, Response::Error { .. }) {
+            errors += 1;
+        } else {
+            ok += 1;
+        }
+    }
+    Ok((ok, errors, lat))
+}

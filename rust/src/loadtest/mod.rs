@@ -1,0 +1,319 @@
+//! `mixtab loadtest`: the million-set recall/QPS harness.
+//!
+//! One run drives the *real* TCP coordinator end to end:
+//!
+//! 1. generate a clustered corpus ([`corpus`]) of synthetic sets and
+//!    shingled documents,
+//! 2. load it through concurrent pipelined clients ([`driver`]) — the
+//!    insert-only **load phase**,
+//! 3. run a sustained **mixed phase** of interleaved inserts and queries
+//!    whose op stream is a pure function of the seed,
+//! 4. score recall@k for held-out queries against a sampled brute-force
+//!    oracle ([`oracle`]) over exactly what the server holds,
+//! 5. append one [`store::RunRecord`] row — git sha, timestamp, full
+//!    config, QPS, tail latency, recall, peak RSS — to the append-only
+//!    results CSV ([`store`]), the repo's perf trajectory of record.
+//!
+//! Every input derives from `(seed, index)`, so a run is reproducible
+//! bit-for-bit in workload terms; recall@k in particular is deterministic
+//! given the config, which is what lets CI gate it tightly while gating
+//! throughput loosely (see [`store::gate`]).
+
+pub mod corpus;
+pub mod driver;
+pub mod oracle;
+pub mod report;
+pub mod store;
+
+use crate::coordinator::config::CoordinatorConfig;
+use crate::coordinator::request::Request;
+use crate::coordinator::server::Server;
+use crate::coordinator::service::Coordinator;
+use crate::hash::HashFamily;
+use crate::util::error::Result;
+use crate::util::rng::Xoshiro256;
+use crate::util::threadpool::default_parallelism;
+use std::net::SocketAddr;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Stream salt for the mixed-phase op coin flips.
+const MIX_SALT: u64 = 0xA11C_E5ED;
+
+/// All knobs of one loadtest run.
+#[derive(Debug, Clone)]
+pub struct LoadtestConfig {
+    /// Database sets loaded in the load phase.
+    pub sets: usize,
+    /// Held-out queries scored for recall@k.
+    pub queries: usize,
+    /// Recall cutoff (must stay below `cluster_size` so truth is
+    /// dominated by genuine same-cluster neighbours).
+    pub k: usize,
+    /// Concurrent pipelined client connections.
+    pub clients: usize,
+    /// Per-connection in-flight window.
+    pub window: usize,
+    /// Sustained-phase op count (inserts + queries).
+    pub mix_ops: usize,
+    /// Fraction of sustained-phase ops that are queries.
+    pub query_frac: f64,
+    /// Corpus cluster size (see [`corpus::CorpusParams`]).
+    pub cluster_size: usize,
+    /// Fraction of shingled-doc clusters.
+    pub doc_frac: f64,
+    /// Hash family under test (the paper's variable).
+    pub family: HashFamily,
+    /// Stored-sketch size (memory per set in the server's sketch store).
+    pub oph_k: usize,
+    /// LSH structural parameters: `lsh_l` bands of `lsh_k` bins.
+    pub lsh_k: usize,
+    pub lsh_l: usize,
+    /// Index shards for the default scheme.
+    pub shards: usize,
+    /// Cross-connection op batch size (0 = off).
+    pub op_batch: usize,
+    /// Server request-worker pool width.
+    pub request_workers: usize,
+    /// Root seed for corpus + op stream.
+    pub seed: u64,
+    /// Threads for corpus generation and the brute-force oracle.
+    pub oracle_workers: usize,
+    /// Whether this is the scaled-down CI shape (recorded in the row;
+    /// quick and full runs are never gated against each other).
+    pub quick: bool,
+}
+
+impl Default for LoadtestConfig {
+    /// The full nightly shape: ≥1M sets against the coordinator.
+    fn default() -> Self {
+        Self {
+            sets: 1_000_000,
+            queries: 64,
+            k: 10,
+            clients: 8,
+            window: 32,
+            mix_ops: 200_000,
+            query_frac: 0.5,
+            cluster_size: 12,
+            doc_frac: 0.5,
+            family: HashFamily::MixedTab,
+            oph_k: 64,
+            lsh_k: 8,
+            lsh_l: 12,
+            shards: 2,
+            op_batch: 32,
+            request_workers: 4,
+            seed: 42,
+            oracle_workers: default_parallelism(),
+            quick: false,
+        }
+    }
+}
+
+impl LoadtestConfig {
+    /// The CI smoke shape: ~50k sets, same structure, minutes not hours.
+    pub fn quick() -> Self {
+        Self {
+            sets: 50_000,
+            queries: 32,
+            mix_ops: 20_000,
+            clients: 4,
+            window: 16,
+            quick: true,
+            ..Self::default()
+        }
+    }
+
+    /// The coordinator the run serves against.
+    pub fn coordinator_config(&self) -> CoordinatorConfig {
+        CoordinatorConfig {
+            listen: "127.0.0.1:0".into(),
+            family: self.family,
+            seed: self.seed,
+            oph_k: self.oph_k,
+            lsh_k: self.lsh_k,
+            lsh_l: self.lsh_l,
+            lsh_shards: self.shards,
+            workers: 2,
+            request_workers: self.request_workers,
+            op_batch: self.op_batch,
+            enable_pjrt: false,
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    /// The run's identity string, recorded in its results row. Contains
+    /// the full sketch spec (commas and all — the store's CSV quoting is
+    /// load-bearing) plus every workload knob that shapes the measurement.
+    pub fn config_string(&self) -> String {
+        let spec = self.coordinator_config().sketch_spec();
+        format!(
+            "spec={spec} lsh={}x{} shards={} op_batch={} request_workers={} \
+             corpus(cluster={},doc_frac={}) seed={}",
+            self.lsh_k,
+            self.lsh_l,
+            self.shards,
+            self.op_batch,
+            self.request_workers,
+            self.cluster_size,
+            self.doc_frac,
+            self.seed,
+        )
+    }
+
+    fn corpus_params(&self) -> corpus::CorpusParams {
+        corpus::CorpusParams {
+            n_sets: self.sets,
+            n_queries: self.queries,
+            cluster_size: self.cluster_size,
+            doc_frac: self.doc_frac,
+            seed: self.seed,
+        }
+    }
+
+    /// The deterministic sustained-phase op for global index `i`. Pure in
+    /// `(seed, i)`: the oracle replays the same stream to reconstruct the
+    /// server's final database without talking to the driver.
+    pub fn mixed_op(&self, i: usize) -> Request {
+        let mut rng = Xoshiro256::stream(self.seed ^ MIX_SALT, i as u64);
+        if rng.bernoulli(self.query_frac) {
+            let target = rng.range(0, self.sets);
+            let cluster = target / self.cluster_size;
+            Request::LshQuery {
+                set: corpus::member_set(
+                    self.seed,
+                    cluster,
+                    target % self.cluster_size,
+                    corpus::cluster_is_doc(self.seed, cluster, self.doc_frac),
+                ),
+                scheme: None,
+            }
+        } else {
+            Request::LshInsert {
+                id: (self.sets + i) as u32,
+                set: corpus::extra_set(self.seed, i as u64),
+                scheme: None,
+            }
+        }
+    }
+}
+
+/// Run one loadtest end to end against an in-process server and return
+/// the finished row (not yet persisted — the CLI decides where it goes).
+pub fn run(cfg: &LoadtestConfig) -> Result<store::RunRecord> {
+    crate::ensure!(cfg.sets >= 1 && cfg.queries >= 1, "empty loadtest corpus");
+    crate::ensure!(
+        cfg.k < cfg.cluster_size,
+        "k must stay below cluster_size for recall@k truth to be in-cluster"
+    );
+    crate::ensure!(
+        (cfg.sets + cfg.mix_ops) <= u32::MAX as usize,
+        "id space overflow: sets + mix_ops must fit u32"
+    );
+
+    println!(
+        "loadtest: generating corpus ({} sets, {} queries, {} workers)",
+        cfg.sets, cfg.queries, cfg.oracle_workers
+    );
+    let t = Instant::now();
+    let corpus = corpus::generate(&cfg.corpus_params(), cfg.oracle_workers);
+    println!(
+        "loadtest: corpus ready in {:.1}s ({} shingled docs)",
+        t.elapsed().as_secs_f64(),
+        corpus.docs
+    );
+
+    let coordinator = Arc::new(Coordinator::new(cfg.coordinator_config()));
+    let metrics = Arc::clone(&coordinator.metrics);
+    let server = Server::start(coordinator, "127.0.0.1:0")?;
+    let addr: SocketAddr = server.addr();
+
+    // Phase 1: load. Every corpus set inserted under its index as id.
+    let sets_ref = &corpus.sets;
+    let load = driver::drive(addr, cfg.clients, cfg.sets, cfg.window, |i| {
+        Request::LshInsert {
+            id: i as u32,
+            set: sets_ref[i].clone(),
+            scheme: None,
+        }
+    })?;
+    crate::ensure!(
+        load.errors == 0,
+        "load phase saw {} wire errors (first run `mixtab serve` logs)",
+        load.errors
+    );
+    println!(
+        "loadtest: load phase {} inserts in {:.1}s ({})",
+        load.ok,
+        load.wall_secs,
+        crate::util::bench::fmt_rate(load.qps())
+    );
+
+    // Phase 2: sustained mixed inserts + queries.
+    let mixed = driver::drive(addr, cfg.clients, cfg.mix_ops, cfg.window, |i| {
+        cfg.mixed_op(i)
+    })?;
+    crate::ensure!(
+        mixed.errors == 0,
+        "mixed phase saw {} wire errors",
+        mixed.errors
+    );
+    println!(
+        "loadtest: mixed phase {} ops in {:.1}s ({})",
+        mixed.ok,
+        mixed.wall_secs,
+        crate::util::bench::fmt_rate(mixed.qps())
+    );
+
+    // Oracle database = exactly what the server now holds, id-aligned:
+    // the corpus under ids 0..sets, plus each mixed-phase *insert* under
+    // id sets+i (query op slots stay empty — J=0 never enters the truth).
+    let docs = corpus.docs;
+    let corpus::Corpus { sets: mut db, queries, .. } = corpus;
+    db.reserve(cfg.mix_ops);
+    for i in 0..cfg.mix_ops {
+        match cfg.mixed_op(i) {
+            Request::LshInsert { set, .. } => db.push(set),
+            _ => db.push(Vec::new()),
+        }
+    }
+    let recall = oracle::measure_recall(addr, &db, &queries, cfg.k, cfg.oracle_workers)?;
+    println!(
+        "loadtest: recall@{} = {:.4} over {} queries ({} skipped)",
+        cfg.k, recall.mean_recall, recall.evaluated, recall.skipped
+    );
+
+    server.stop();
+
+    let (p50, p99, p999) = mixed.latency_us.tail_quantiles();
+    Ok(store::RunRecord {
+        schema: store::LOADTEST_SCHEMA.to_string(),
+        git_sha: crate::util::bench::git_sha(),
+        unix_ts: std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0),
+        quick: cfg.quick,
+        config: cfg.config_string(),
+        sets: cfg.sets as u64,
+        docs: docs as u64,
+        queries: cfg.queries as u64,
+        k: cfg.k as u64,
+        clients: cfg.clients as u64,
+        window: cfg.window as u64,
+        mix_ops: cfg.mix_ops as u64,
+        query_frac: cfg.query_frac,
+        load_qps: load.qps(),
+        mixed_qps: mixed.qps(),
+        recall_at_k: recall.mean_recall,
+        p50_us: p50,
+        p99_us: p99,
+        p999_us: p999,
+        peak_rss_mb: report::peak_rss_bytes() as f64 / (1024.0 * 1024.0),
+        server_inserts: metrics.lsh_inserts.load(Ordering::Relaxed),
+        server_queries: metrics.lsh_queries.load(Ordering::Relaxed),
+        server_errors: metrics.errors.load(Ordering::Relaxed),
+    })
+}

@@ -1,0 +1,93 @@
+//! Sampled brute-force recall oracle.
+//!
+//! Recall@k is measured over the corpus's held-out queries only — an
+//! exhaustive all-pairs oracle at 10⁶ sets is ~10¹² Jaccard evaluations,
+//! while `n_queries` brute-force scans are `n_queries × n_sets` and finish
+//! in seconds on a thread pool (DESIGN.md §3.5). The database handed here
+//! must be exactly what the server holds: the generated corpus plus the
+//! regenerated sustained-phase inserts, id-aligned with the server's ids.
+
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::server::PipelinedClient;
+use crate::lsh::metrics::{recall_at_k, topk_ground_truth_batch};
+use crate::util::error::{Context, Result};
+use crate::util::threadpool::ThreadPool;
+use std::net::SocketAddr;
+
+/// Outcome of [`measure_recall`].
+#[derive(Debug, Clone)]
+pub struct RecallEval {
+    /// Mean recall@k over evaluated queries (NaN when none evaluated).
+    pub mean_recall: f64,
+    /// Queries with non-empty brute-force truth.
+    pub evaluated: usize,
+    /// Queries skipped because they had no genuine neighbour (J > 0).
+    pub skipped: usize,
+}
+
+/// Query the live server with every held-out query, then score the
+/// retrieved candidates against brute-force top-k truth computed over
+/// `db` (where `db[i]` is the set the server holds under id `i`; empty
+/// slots are fine — they can never enter the truth).
+pub fn measure_recall(
+    addr: SocketAddr,
+    db: &[Vec<u32>],
+    queries: &[Vec<u32>],
+    k: usize,
+    workers: usize,
+) -> Result<RecallEval> {
+    // Retrieve live candidates first: one pipelined connection, the query
+    // index as the rid, so out-of-order responses land in their slots.
+    let mut client = PipelinedClient::connect(addr)?;
+    for (qi, q) in queries.iter().enumerate() {
+        client.send_with_rid(
+            &Request::LshQuery {
+                set: q.clone(),
+                scheme: None,
+            },
+            qi as u64,
+        )?;
+    }
+    let mut retrieved: Vec<Option<Vec<u32>>> = vec![None; queries.len()];
+    for _ in 0..queries.len() {
+        let (rid, resp) = client.recv()?;
+        let rid = rid.context("untagged oracle response")? as usize;
+        let slot = retrieved.get_mut(rid).context("oracle rid out of range")?;
+        match resp {
+            Response::Candidates { mut ids } => {
+                // The index returns sorted merged ids already; enforce the
+                // invariant here so recall_at_k's binary search is safe
+                // even if a future server relaxes it.
+                ids.sort_unstable();
+                ids.dedup();
+                *slot = Some(ids);
+            }
+            Response::Error { message } => crate::bail!("oracle query failed: {message}"),
+            other => crate::bail!("unexpected oracle response: {other:?}"),
+        }
+    }
+
+    let pool = ThreadPool::new(workers.max(1));
+    let truth = topk_ground_truth_batch(&pool, db, queries, k);
+
+    let (mut sum, mut evaluated, mut skipped) = (0.0f64, 0usize, 0usize);
+    for (slot, t) in retrieved.iter().zip(&truth) {
+        let ids = slot.as_ref().context("oracle query went unanswered")?;
+        match recall_at_k(ids, t) {
+            Some(r) => {
+                sum += r;
+                evaluated += 1;
+            }
+            None => skipped += 1,
+        }
+    }
+    Ok(RecallEval {
+        mean_recall: if evaluated == 0 {
+            f64::NAN
+        } else {
+            sum / evaluated as f64
+        },
+        evaluated,
+        skipped,
+    })
+}

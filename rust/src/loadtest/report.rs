@@ -1,0 +1,102 @@
+//! Human-readable loadtest reporting + process peak-RSS measurement.
+
+use super::store::{MetricDelta, RunRecord};
+use crate::util::bench::fmt_rate;
+
+/// Peak resident set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`). The server runs in-process, so this covers the
+/// index, sketch store, and corpus together. Returns 0 where procfs is
+/// unavailable (non-Linux) — recorded as-is rather than guessed.
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+/// Print one run the way `mixtab bench` prints cases.
+pub fn print_run(r: &RunRecord) {
+    println!("loadtest run @ {} ({})", r.git_sha, if r.quick { "quick" } else { "full" });
+    println!("  config        {}", r.config);
+    println!(
+        "  corpus        {} sets ({} shingled docs), {} queries, k={}",
+        r.sets, r.docs, r.queries, r.k
+    );
+    println!(
+        "  drive         {} clients x window {}, {} mixed ops ({:.0}% queries)",
+        r.clients,
+        r.window,
+        r.mix_ops,
+        r.query_frac * 100.0
+    );
+    println!("  load_qps      {}", fmt_rate(r.load_qps));
+    println!("  mixed_qps     {}", fmt_rate(r.mixed_qps));
+    println!("  recall@{}     {:.4}", r.k, r.recall_at_k);
+    println!(
+        "  latency       p50 {:.0} us | p99 {:.0} us | p999 {:.0} us",
+        r.p50_us, r.p99_us, r.p999_us
+    );
+    println!("  peak_rss      {:.1} MB", r.peak_rss_mb);
+    println!(
+        "  server        {} inserts, {} queries, {} errors",
+        r.server_inserts, r.server_queries, r.server_errors
+    );
+}
+
+/// Print a `--compare` diff table between two runs.
+pub fn print_compare(baseline: &RunRecord, current: &RunRecord, deltas: &[MetricDelta]) {
+    println!(
+        "baseline {} ({}) vs current {} ({})",
+        baseline.git_sha,
+        baseline.unix_ts,
+        current.git_sha,
+        current.unix_ts
+    );
+    if baseline.config != current.config {
+        println!("  NOTE: configs differ");
+        println!("    baseline: {}", baseline.config);
+        println!("    current:  {}", current.config);
+    }
+    for d in deltas {
+        let change = d.rel_change();
+        let arrow = if change.abs() < 1e-12 {
+            "="
+        } else if (change > 0.0) == d.higher_is_better {
+            "+"
+        } else {
+            "-"
+        };
+        println!(
+            "  {arrow} {:<12} {:>14.4} -> {:>14.4}  ({:+.2}%)",
+            d.name,
+            d.baseline,
+            d.current,
+            change * 100.0
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_rss_is_sane_on_linux() {
+        let rss = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            // A test process has touched at least a megabyte.
+            assert!(rss > 1 << 20, "VmHWM {rss}");
+        }
+    }
+}

@@ -1,0 +1,425 @@
+//! The loadtest result store: an append-only CSV, one row per run.
+//!
+//! CSV (not JSON) because the store is the *queryable perf trajectory of
+//! record* — every row carries the git sha, timestamp, and full config
+//! string, so `results.csv` loads straight into any spreadsheet/pandas
+//! session and diffs with `mixtab loadtest --compare`. Quoting is handled
+//! by [`crate::util::csv`]: the config string contains commas by
+//! construction (`oph(k=64,...)`) and must round-trip exactly.
+//!
+//! The schema is versioned via the `schema` column ([`LOADTEST_SCHEMA`]);
+//! readers look fields up *by header name*, so reordering or appending
+//! columns in a later version keeps old files loadable, and a missing
+//! column is a hard error rather than a silently-zero metric.
+
+use crate::util::csv;
+use crate::util::error::{Context, Result};
+use std::fmt;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Current row-schema identifier, recorded in every row.
+pub const LOADTEST_SCHEMA: &str = "mixtab-loadtest-v1";
+
+/// Column names, in file order. `from_fields` looks up by name, not
+/// position — the order here only fixes what new files look like.
+pub const HEADER: [&str; 23] = [
+    "schema",
+    "git_sha",
+    "unix_ts",
+    "quick",
+    "config",
+    "sets",
+    "docs",
+    "queries",
+    "k",
+    "clients",
+    "window",
+    "mix_ops",
+    "query_frac",
+    "load_qps",
+    "mixed_qps",
+    "recall_at_k",
+    "p50_us",
+    "p99_us",
+    "p999_us",
+    "peak_rss_mb",
+    "server_inserts",
+    "server_queries",
+    "server_errors",
+];
+
+/// One loadtest run — a row of the trajectory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRecord {
+    pub schema: String,
+    pub git_sha: String,
+    pub unix_ts: u64,
+    pub quick: bool,
+    /// Full config string (scheme spec + workload knobs) — the run's
+    /// identity for apples-to-apples comparisons.
+    pub config: String,
+    pub sets: u64,
+    pub docs: u64,
+    pub queries: u64,
+    pub k: u64,
+    pub clients: u64,
+    pub window: u64,
+    pub mix_ops: u64,
+    pub query_frac: f64,
+    /// Insert-only load phase throughput (ops/s).
+    pub load_qps: f64,
+    /// Sustained mixed-phase throughput (ops/s).
+    pub mixed_qps: f64,
+    pub recall_at_k: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub peak_rss_mb: f64,
+    pub server_inserts: u64,
+    pub server_queries: u64,
+    pub server_errors: u64,
+}
+
+impl RunRecord {
+    /// Render in [`HEADER`] order.
+    pub fn to_fields(&self) -> Vec<String> {
+        vec![
+            self.schema.clone(),
+            self.git_sha.clone(),
+            self.unix_ts.to_string(),
+            self.quick.to_string(),
+            self.config.clone(),
+            self.sets.to_string(),
+            self.docs.to_string(),
+            self.queries.to_string(),
+            self.k.to_string(),
+            self.clients.to_string(),
+            self.window.to_string(),
+            self.mix_ops.to_string(),
+            csv::f(self.query_frac),
+            csv::f(self.load_qps),
+            csv::f(self.mixed_qps),
+            csv::f(self.recall_at_k),
+            csv::f(self.p50_us),
+            csv::f(self.p99_us),
+            csv::f(self.p999_us),
+            csv::f(self.peak_rss_mb),
+            self.server_inserts.to_string(),
+            self.server_queries.to_string(),
+            self.server_errors.to_string(),
+        ]
+    }
+
+    /// Decode one data row against its file's header (lookup by name).
+    pub fn from_fields(header: &[String], row: &[String]) -> Result<RunRecord> {
+        let get = |name: &str| -> Result<&str> {
+            let idx = header
+                .iter()
+                .position(|h| h == name)
+                .with_context(|| format!("results csv: missing column '{name}'"))?;
+            row.get(idx)
+                .map(String::as_str)
+                .with_context(|| format!("results csv: row too short for column '{name}'"))
+        };
+        let u = |name: &str| -> Result<u64> {
+            get(name)?
+                .parse()
+                .with_context(|| format!("results csv: bad integer in '{name}'"))
+        };
+        let fl = |name: &str| -> Result<f64> {
+            get(name)?
+                .parse()
+                .with_context(|| format!("results csv: bad number in '{name}'"))
+        };
+        Ok(RunRecord {
+            schema: get("schema")?.to_string(),
+            git_sha: get("git_sha")?.to_string(),
+            unix_ts: u("unix_ts")?,
+            quick: get("quick")? == "true",
+            config: get("config")?.to_string(),
+            sets: u("sets")?,
+            docs: u("docs")?,
+            queries: u("queries")?,
+            k: u("k")?,
+            clients: u("clients")?,
+            window: u("window")?,
+            mix_ops: u("mix_ops")?,
+            query_frac: fl("query_frac")?,
+            load_qps: fl("load_qps")?,
+            mixed_qps: fl("mixed_qps")?,
+            recall_at_k: fl("recall_at_k")?,
+            p50_us: fl("p50_us")?,
+            p99_us: fl("p99_us")?,
+            p999_us: fl("p999_us")?,
+            peak_rss_mb: fl("peak_rss_mb")?,
+            server_inserts: u("server_inserts")?,
+            server_queries: u("server_queries")?,
+            server_errors: u("server_errors")?,
+        })
+    }
+}
+
+/// Append one run to `path`, creating the file (with header) on first
+/// write. An existing file must carry exactly the current [`HEADER`] —
+/// appending a v1 row to a foreign or future-schema file would corrupt
+/// the trajectory, so it errors instead.
+pub fn append(path: impl AsRef<Path>, record: &RunRecord) -> Result<()> {
+    let path = path.as_ref();
+    if path.exists() {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read results store {}", path.display()))?;
+        let rows = csv::parse(&text)?;
+        let header = rows.first().context("results csv: empty existing file")?;
+        crate::ensure!(
+            header.iter().map(String::as_str).eq(HEADER),
+            "results csv {}: header does not match schema {LOADTEST_SCHEMA}",
+            path.display()
+        );
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open results store {}", path.display()))?;
+        f.write_all(csv::format_record(record.to_fields()).as_bytes())?;
+    } else {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut text = csv::format_record(HEADER);
+        text.push_str(&csv::format_record(record.to_fields()));
+        std::fs::write(path, text)
+            .with_context(|| format!("create results store {}", path.display()))?;
+    }
+    Ok(())
+}
+
+/// Load every run in `path`, oldest first.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<RunRecord>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read results store {}", path.display()))?;
+    let rows = csv::parse(&text)?;
+    let mut it = rows.into_iter();
+    let header = it.next().context("results csv: missing header")?;
+    it.map(|row| RunRecord::from_fields(&header, &row)).collect()
+}
+
+/// The most recent run in `path` — errors when the store has no runs.
+pub fn last_run(path: impl AsRef<Path>) -> Result<RunRecord> {
+    let path = path.as_ref();
+    load(path)?
+        .pop()
+        .with_context(|| format!("results csv {}: no runs", path.display()))
+}
+
+/// One metric's movement between two runs.
+#[derive(Debug, Clone)]
+pub struct MetricDelta {
+    pub name: &'static str,
+    pub baseline: f64,
+    pub current: f64,
+    /// Whether larger is better for this metric (throughput/recall yes,
+    /// latency/RSS no) — lets reports colour regressions consistently.
+    pub higher_is_better: bool,
+}
+
+impl MetricDelta {
+    /// Relative change, current vs baseline (positive = increased).
+    pub fn rel_change(&self) -> f64 {
+        if self.baseline == 0.0 {
+            return if self.current == 0.0 { 0.0 } else { f64::INFINITY };
+        }
+        self.current / self.baseline - 1.0
+    }
+}
+
+/// Diff the trajectory metrics of two runs (baseline vs current).
+pub fn diff(baseline: &RunRecord, current: &RunRecord) -> Vec<MetricDelta> {
+    let m = |name, b, c, hib| MetricDelta {
+        name,
+        baseline: b,
+        current: c,
+        higher_is_better: hib,
+    };
+    vec![
+        m("load_qps", baseline.load_qps, current.load_qps, true),
+        m("mixed_qps", baseline.mixed_qps, current.mixed_qps, true),
+        m("recall_at_k", baseline.recall_at_k, current.recall_at_k, true),
+        m("p50_us", baseline.p50_us, current.p50_us, false),
+        m("p99_us", baseline.p99_us, current.p99_us, false),
+        m("p999_us", baseline.p999_us, current.p999_us, false),
+        m("peak_rss_mb", baseline.peak_rss_mb, current.peak_rss_mb, false),
+    ]
+}
+
+/// One gate violation (current worse than baseline beyond tolerance).
+#[derive(Debug, Clone)]
+pub struct GateFailure {
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub current: f64,
+    /// The tolerance the drop exceeded (absolute for recall, fractional
+    /// for throughput).
+    pub allowed: f64,
+    /// The observed drop, in the same units as `allowed`.
+    pub observed: f64,
+}
+
+impl fmt::Display for GateFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: baseline {:.4} -> current {:.4} (drop {:.4} > allowed {:.4})",
+            self.metric, self.baseline, self.current, self.observed, self.allowed
+        )
+    }
+}
+
+/// Gate `current` against `baseline`: recall@k is gated on **absolute**
+/// drop (it is deterministic given the config, so the tolerance can be
+/// tight), throughput on **fractional** loss (shared-runner noise), via
+/// [`crate::util::bench::frac_loss`] — the same loss definition the bench
+/// suite gates on. Latency and RSS are reported by [`diff`] but not
+/// gated: on shared CI runners their variance would either force useless
+/// tolerances or flake.
+///
+/// Errors (rather than "passes") when the two runs are not comparable:
+/// different row schema or different quick/full shape.
+pub fn gate(
+    current: &RunRecord,
+    baseline: &RunRecord,
+    recall_tol: f64,
+    qps_tol: f64,
+) -> Result<Vec<GateFailure>> {
+    crate::ensure!(
+        current.schema == baseline.schema,
+        "gate: schema mismatch (baseline {}, current {})",
+        baseline.schema,
+        current.schema
+    );
+    crate::ensure!(
+        current.quick == baseline.quick,
+        "gate: comparing a quick run against a full baseline (or vice versa)"
+    );
+    let mut failures = Vec::new();
+    let recall_drop = baseline.recall_at_k - current.recall_at_k;
+    if recall_drop > recall_tol {
+        failures.push(GateFailure {
+            metric: "recall_at_k",
+            baseline: baseline.recall_at_k,
+            current: current.recall_at_k,
+            allowed: recall_tol,
+            observed: recall_drop,
+        });
+    }
+    for (name, b, c) in [
+        ("load_qps", baseline.load_qps, current.load_qps),
+        ("mixed_qps", baseline.mixed_qps, current.mixed_qps),
+    ] {
+        let loss = crate::util::bench::frac_loss(b, c);
+        if loss > qps_tol {
+            failures.push(GateFailure {
+                metric: name,
+                baseline: b,
+                current: c,
+                allowed: qps_tol,
+                observed: loss,
+            });
+        }
+    }
+    Ok(failures)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample(recall: f64, qps: f64) -> RunRecord {
+        RunRecord {
+            schema: LOADTEST_SCHEMA.to_string(),
+            git_sha: "deadbeef".into(),
+            unix_ts: 1_700_000_000,
+            quick: true,
+            config: "oph(k=64,layout=mod,densify=paper,hash=mixed_tab,seed=42) lsh=8x12".into(),
+            sets: 50_000,
+            docs: 25_000,
+            queries: 32,
+            k: 10,
+            clients: 4,
+            window: 16,
+            mix_ops: 20_000,
+            query_frac: 0.5,
+            load_qps: qps,
+            mixed_qps: qps * 0.8,
+            recall_at_k: recall,
+            p50_us: 120.0,
+            p99_us: 900.0,
+            p999_us: 2500.0,
+            peak_rss_mb: 512.0,
+            server_inserts: 60_000,
+            server_queries: 10_032,
+            server_errors: 0,
+        }
+    }
+
+    #[test]
+    fn fields_roundtrip_by_name() {
+        let r = sample(0.8, 10_000.0);
+        let header: Vec<String> = HEADER.iter().map(|s| s.to_string()).collect();
+        let back = RunRecord::from_fields(&header, &r.to_fields()).unwrap();
+        assert_eq!(back, r);
+        // Name-based lookup: a reordered header still decodes.
+        let mut rev_header = header.clone();
+        rev_header.reverse();
+        let mut rev_row = r.to_fields();
+        rev_row.reverse();
+        assert_eq!(RunRecord::from_fields(&rev_header, &rev_row).unwrap(), r);
+        // A missing column is a hard error naming the column.
+        let short: Vec<String> = header[1..].to_vec();
+        let err = RunRecord::from_fields(&short, &rev_row).unwrap_err();
+        assert!(err.to_string().contains("missing column 'schema'"), "{err}");
+    }
+
+    #[test]
+    fn gate_tolerances() {
+        // Dyadic recall values (exact in f64) so "at tolerance" is an
+        // exact boundary, not a rounding accident.
+        let base = sample(0.75, 10_000.0);
+        // At tolerance: recall drop exactly 0.125, qps loss 0.2 − ε.
+        let at = sample(0.625, 8_000.0);
+        assert!(gate(&at, &base, 0.125, 0.2).unwrap().is_empty());
+        // Over tolerance on each axis.
+        let bad_recall = sample(0.5, 10_000.0);
+        let fails = gate(&bad_recall, &base, 0.125, 0.2).unwrap();
+        assert_eq!(fails.len(), 1);
+        assert_eq!(fails[0].metric, "recall_at_k");
+        assert!(fails[0].to_string().contains("recall_at_k"), "{}", fails[0]);
+        let bad_qps = sample(0.75, 7_000.0);
+        let fails = gate(&bad_qps, &base, 0.125, 0.2).unwrap();
+        assert_eq!(fails.len(), 2, "both load and mixed qps dropped");
+        // Improvements never fail.
+        assert!(gate(&sample(0.9375, 20_000.0), &base, 0.125, 0.2).unwrap().is_empty());
+        // Incomparable runs are an error, not a pass.
+        let mut full = sample(0.75, 10_000.0);
+        full.quick = false;
+        assert!(gate(&full, &base, 0.125, 0.2).is_err());
+        let mut foreign = sample(0.75, 10_000.0);
+        foreign.schema = "mixtab-loadtest-v0".into();
+        assert!(gate(&foreign, &base, 0.125, 0.2).is_err());
+    }
+
+    #[test]
+    fn diff_directions() {
+        let base = sample(0.8, 10_000.0);
+        let cur = sample(0.9, 9_000.0);
+        let deltas = diff(&base, &cur);
+        let load = deltas.iter().find(|d| d.name == "load_qps").unwrap();
+        assert!(load.higher_is_better && load.rel_change() < 0.0);
+        let recall = deltas.iter().find(|d| d.name == "recall_at_k").unwrap();
+        assert!(recall.rel_change() > 0.0);
+        let p99 = deltas.iter().find(|d| d.name == "p99_us").unwrap();
+        assert!(!p99.higher_is_better);
+    }
+}

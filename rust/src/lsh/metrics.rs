@@ -37,6 +37,78 @@ pub fn ground_truth_batch(
     pool.scope(tasks)
 }
 
+/// Per-query top-k ground truth: the ids of the `k` database sets with the
+/// highest Jaccard similarity to `query` (ties broken by smaller id, for
+/// determinism), **excluding** zero-similarity sets — a random database can
+/// never pad the truth, so recall@k stays meaningful when a query has
+/// fewer than `k` genuine neighbours. This is the brute-force oracle the
+/// `mixtab loadtest` recall gate samples (see DESIGN.md §3.5 for why it is
+/// sampled over queries rather than exhaustive at 10⁶ sets).
+pub fn topk_ground_truth(db: &[Vec<u32>], query: &[u32], k: usize) -> Vec<u32> {
+    if k == 0 {
+        return Vec::new();
+    }
+    // Bounded selection: keep the best k seen so far, sorted descending by
+    // (similarity, smaller-id-wins). k is small (≤ ~100), so linear insert
+    // beats a heap on constant factors and keeps ordering deterministic.
+    let mut best: Vec<(f64, u32)> = Vec::with_capacity(k + 1);
+    for (i, x) in db.iter().enumerate() {
+        let j = jaccard_sorted(query, x);
+        if j <= 0.0 {
+            continue;
+        }
+        let id = i as u32;
+        if best.len() == k {
+            let (wj, wid) = best[k - 1];
+            if j < wj || (j == wj && id > wid) {
+                continue;
+            }
+        }
+        let pos = best
+            .iter()
+            .position(|&(bj, bid)| j > bj || (j == bj && id < bid))
+            .unwrap_or(best.len());
+        best.insert(pos, (j, id));
+        best.truncate(k);
+    }
+    best.into_iter().map(|(_, id)| id).collect()
+}
+
+/// Top-k ground truth for many queries, parallelised over a pool.
+pub fn topk_ground_truth_batch(
+    pool: &ThreadPool,
+    db: &[Vec<u32>],
+    queries: &[Vec<u32>],
+    k: usize,
+) -> Vec<Vec<u32>> {
+    let tasks: Vec<_> = queries
+        .iter()
+        .map(|q| {
+            let db = &db;
+            let q = &q[..];
+            move || topk_ground_truth(db, q, k)
+        })
+        .collect();
+    pool.scope(tasks)
+}
+
+/// recall@k: the fraction of the true top-k (as returned by
+/// [`topk_ground_truth`]) present in the retrieved candidate set.
+/// `retrieved` must be sorted ascending (the index's merge invariant);
+/// `None` when the truth is empty (no genuine neighbours — skipped
+/// upstream, mirroring [`QueryEval::recall`]).
+pub fn recall_at_k(retrieved: &[u32], truth_topk: &[u32]) -> Option<f64> {
+    debug_assert!(retrieved.windows(2).all(|w| w[0] < w[1]));
+    if truth_topk.is_empty() {
+        return None;
+    }
+    let hits = truth_topk
+        .iter()
+        .filter(|id| retrieved.binary_search(id).is_ok())
+        .count();
+    Some(hits as f64 / truth_topk.len() as f64)
+}
+
 /// Evaluation of one query's retrieved set.
 #[derive(Debug, Clone)]
 pub struct QueryEval {
@@ -173,6 +245,43 @@ mod tests {
         assert_eq!(ground_truth(&db, &q, 0.5), vec![0]);
         assert_eq!(ground_truth(&db, &q, 0.3), vec![0, 1]);
         assert_eq!(ground_truth(&db, &q, 0.0).len(), 3);
+    }
+
+    #[test]
+    fn topk_orders_by_similarity_then_id() {
+        let db = vec![
+            (0..100u32).collect::<Vec<_>>(),     // J = 1.0
+            (0..50u32).collect::<Vec<_>>(),      // J = 0.5
+            (50..150u32).collect::<Vec<_>>(),    // J = 1/3
+            (0..50u32).collect::<Vec<_>>(),      // J = 0.5 (duplicate of id 1)
+            (1000..1100u32).collect::<Vec<_>>(), // J = 0
+        ];
+        let q: Vec<u32> = (0..100).collect();
+        // Ties at J = 0.5 resolve to the smaller id first.
+        assert_eq!(topk_ground_truth(&db, &q, 3), vec![0, 1, 3]);
+        assert_eq!(topk_ground_truth(&db, &q, 2), vec![0, 1]);
+        // Zero-similarity sets never pad the truth.
+        assert_eq!(topk_ground_truth(&db, &q, 10), vec![0, 1, 3, 2]);
+        assert!(topk_ground_truth(&db, &q, 0).is_empty());
+    }
+
+    #[test]
+    fn recall_at_k_counts_hits() {
+        assert_eq!(recall_at_k(&[1, 3, 5], &[3, 5, 9]), Some(2.0 / 3.0));
+        assert_eq!(recall_at_k(&[1, 3, 5], &[7]), Some(0.0));
+        assert_eq!(recall_at_k(&[], &[7]), Some(0.0));
+        assert_eq!(recall_at_k(&[1, 2], &[]), None);
+    }
+
+    #[test]
+    fn parallel_topk_matches_serial() {
+        let db: Vec<Vec<u32>> = (0..40).map(|i| (i * 7..i * 7 + 60).collect()).collect();
+        let queries: Vec<Vec<u32>> = (0..9).map(|i| (i * 15..i * 15 + 60).collect()).collect();
+        let pool = ThreadPool::new(3);
+        let par = topk_ground_truth_batch(&pool, &db, &queries, 5);
+        for (q, expect) in queries.iter().zip(&par) {
+            assert_eq!(&topk_ground_truth(&db, q, 5), expect);
+        }
     }
 
     #[test]

@@ -5,6 +5,8 @@
 //! mixtab bench [--quick] [--only NAME] [--json PATH] [--baseline PATH] [--tolerance F]
 //! mixtab sketch [--spec SPEC | --scheme NAME [--config FILE]] [--set N,N,...|--text STR]
 //! mixtab serve [--config FILE] [--listen ADDR] [--load PATH]
+//! mixtab loadtest [--quick] [--out PATH] [--baseline PATH] [--gate] [workload knobs]
+//! mixtab loadtest --compare A.csv B.csv
 //! mixtab info
 //! ```
 
@@ -86,6 +88,57 @@ fn cli() -> Command {
                     None,
                 ),
         )
+        .subcommand(
+            Command::new("loadtest", "million-set recall/QPS harness against the real TCP coordinator; appends one row per run to an append-only results CSV")
+                .flag("quick", 'q', "CI smoke shape (~50k sets) instead of the full >=1M run")
+                .flag(
+                    "compare",
+                    '\0',
+                    "diff the last runs of two results CSVs (pass them as positionals: A.csv B.csv) and exit",
+                )
+                .flag(
+                    "gate",
+                    '\0',
+                    "exit non-zero when recall@k or QPS regress beyond tolerance vs --baseline's last run",
+                )
+                .opt("sets", '\0', "N", "database sets (overrides the shape default)", None)
+                .opt("queries", '\0', "N", "held-out recall queries", None)
+                .opt(
+                    "k",
+                    '\0',
+                    "N",
+                    "recall cutoff k (must stay below the corpus cluster size)",
+                    None,
+                )
+                .opt("clients", '\0', "N", "concurrent pipelined client connections", None)
+                .opt("window", '\0', "N", "per-connection in-flight window", None)
+                .opt("mix-ops", '\0', "N", "sustained-phase op count (insert/query mix)", None)
+                .opt("seed", 's', "N", "root workload seed", Some("42"))
+                .opt("out", 'o', "PATH", "results CSV the run is appended to", Some("results.csv"))
+                .opt(
+                    "baseline",
+                    '\0',
+                    "PATH",
+                    "results CSV whose last run is the --gate / report baseline",
+                    None,
+                )
+                .opt(
+                    "recall-tolerance",
+                    '\0',
+                    "F",
+                    "allowed absolute recall@k drop before --gate fails",
+                    Some("0.02"),
+                )
+                .opt(
+                    "qps-tolerance",
+                    '\0',
+                    "F",
+                    "allowed fractional QPS loss before --gate fails",
+                    Some("0.5"),
+                )
+                .positional("compare-a", "with --compare: baseline results CSV", false)
+                .positional("compare-b", "with --compare: current results CSV", false),
+        )
         .subcommand(Command::new("info", "print build/artifact information"))
 }
 
@@ -109,6 +162,7 @@ fn main() {
         Some(("bench", sub)) => run_bench(sub),
         Some(("sketch", sub)) => run_sketch(sub),
         Some(("serve", sub)) => run_serve(sub),
+        Some(("loadtest", sub)) => run_loadtest(sub),
         Some(("info", _)) => run_info(),
         _ => {
             println!("{}", cmd.help_text());
@@ -386,6 +440,92 @@ fn run_serve(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn run_loadtest(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
+    use mixtab::loadtest::{self, report, store, LoadtestConfig};
+    if sub.help_requested() {
+        println!("{}", cli().help_text());
+        return Ok(());
+    }
+
+    // Store-only mode: diff two trajectories without running anything.
+    if sub.flag("compare") {
+        let [a, b] = sub.positionals() else {
+            mixtab::bail!(
+                "--compare needs exactly two results CSVs: mixtab loadtest --compare A.csv B.csv"
+            );
+        };
+        let baseline = store::last_run(a)?;
+        let current = store::last_run(b)?;
+        report::print_compare(&baseline, &current, &store::diff(&baseline, &current));
+        return Ok(());
+    }
+    mixtab::ensure!(
+        sub.positionals().is_empty(),
+        "unexpected positional argument (did you mean --compare A.csv B.csv?)"
+    );
+
+    let mut cfg = if sub.flag("quick") {
+        LoadtestConfig::quick()
+    } else {
+        LoadtestConfig::default()
+    };
+    cfg.seed = sub.get_u64("seed")?;
+    if sub.get("sets").is_some() {
+        cfg.sets = sub.get_usize("sets")?;
+    }
+    if sub.get("queries").is_some() {
+        cfg.queries = sub.get_usize("queries")?;
+    }
+    if sub.get("k").is_some() {
+        cfg.k = sub.get_usize("k")?;
+    }
+    if sub.get("clients").is_some() {
+        cfg.clients = sub.get_usize("clients")?;
+    }
+    if sub.get("window").is_some() {
+        cfg.window = sub.get_usize("window")?;
+    }
+    if sub.get("mix-ops").is_some() {
+        cfg.mix_ops = sub.get_usize("mix-ops")?;
+    }
+
+    let record = loadtest::run(&cfg)?;
+    println!();
+    report::print_run(&record);
+
+    let out = sub.get("out").unwrap_or("results.csv");
+    store::append(out, &record)?;
+    println!("\nappended run to {out} ({} total)", store::load(out)?.len());
+
+    if let Some(baseline_path) = sub.get("baseline") {
+        let baseline = store::last_run(baseline_path)?;
+        println!("\nvs baseline {baseline_path} (last run):");
+        report::print_compare(&baseline, &record, &store::diff(&baseline, &record));
+        if sub.flag("gate") {
+            let recall_tol = sub.get_f64("recall-tolerance")?;
+            let qps_tol = sub.get_f64("qps-tolerance")?;
+            let failures = store::gate(&record, &baseline, recall_tol, qps_tol)?;
+            if failures.is_empty() {
+                println!("loadtest gate: PASS (recall tol {recall_tol}, qps tol {qps_tol})");
+            } else {
+                for f in &failures {
+                    eprintln!("loadtest gate: FAIL {f}");
+                }
+                mixtab::bail!(
+                    "{} loadtest metric(s) regressed beyond tolerance vs {baseline_path}",
+                    failures.len()
+                );
+            }
+        }
+    } else {
+        mixtab::ensure!(
+            !sub.flag("gate"),
+            "--gate needs --baseline PATH to gate against"
+        );
+    }
+    Ok(())
 }
 
 fn run_info() -> mixtab::Result<()> {

@@ -99,6 +99,13 @@ impl Summary {
     pub fn latency_quantiles(&self) -> (f64, f64, f64) {
         (self.quantile(0.5), self.quantile(0.9), self.quantile(0.99))
     }
+
+    /// `(p50, p99, p999)` — the tail the `mixtab loadtest` trajectory
+    /// records; p999 is only meaningful with ≳10³ samples (the sustained
+    /// phase guarantees that at every non-toy scale).
+    pub fn tail_quantiles(&self) -> (f64, f64, f64) {
+        (self.quantile(0.5), self.quantile(0.99), self.quantile(0.999))
+    }
 }
 
 #[cfg(test)]
@@ -135,6 +142,10 @@ mod tests {
         assert!((s.quantile(0.5) - 50.5).abs() < 1e-9);
         let (p50, p90, p99) = s.latency_quantiles();
         assert!(p50 < p90 && p90 < p99);
+        let (t50, t99, t999) = s.tail_quantiles();
+        assert_eq!(t50, p50);
+        assert_eq!(t99, p99);
+        assert!(t999 >= t99 && t999 <= 100.0);
     }
 
     #[test]

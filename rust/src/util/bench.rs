@@ -323,6 +323,21 @@ pub struct Regression {
     pub loss: f64,
 }
 
+/// Fractional throughput loss of `current` against `baseline`:
+/// `1 − current/baseline` (1.0 when `current` is 0 or missing). Shared by
+/// [`compare_records`] and the `mixtab loadtest` QPS gate
+/// (`loadtest::store`) so both perf trajectories regress on the same
+/// definition of "X% slower".
+pub fn frac_loss(baseline: f64, current: f64) -> f64 {
+    if baseline <= 0.0 {
+        return 0.0;
+    }
+    if current <= 0.0 {
+        return 1.0;
+    }
+    1.0 - current / baseline
+}
+
 /// Pure comparison behind [`Bench::compare`], exposed for tests and tools.
 ///
 /// The baseline defines the gated set: every baseline case must exist in
@@ -346,7 +361,7 @@ pub fn compare_records(
             .find(|c| c.bench == b.bench && c.case == b.case);
         let (current_keys_per_sec, loss) = match cur {
             None => (0.0, 1.0),
-            Some(c) => (c.keys_per_sec, 1.0 - c.keys_per_sec / b.keys_per_sec),
+            Some(c) => (c.keys_per_sec, frac_loss(b.keys_per_sec, c.keys_per_sec)),
         };
         if loss > tolerance {
             out.push(Regression {
@@ -532,6 +547,14 @@ mod tests {
         assert_eq!(regs[1].case, "gone");
         assert_eq!(regs[1].current_keys_per_sec, 0.0);
         assert_eq!(regs[1].loss, 1.0);
+    }
+
+    #[test]
+    fn frac_loss_definition() {
+        assert_eq!(frac_loss(100.0, 75.0), 0.25);
+        assert_eq!(frac_loss(100.0, 0.0), 1.0);
+        assert_eq!(frac_loss(0.0, 50.0), 0.0); // unguardable baseline
+        assert!(frac_loss(100.0, 200.0) < 0.0); // improvements are negative
     }
 
     #[test]

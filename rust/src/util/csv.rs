@@ -1,9 +1,14 @@
-//! CSV writing for experiment outputs.
+//! CSV reading and writing for experiment and loadtest outputs.
 //!
 //! Every experiment driver emits its raw data as CSV into `results/` so the
-//! paper's figures can be re-plotted with any external tool. Quoting follows
-//! RFC 4180 (quote when a field contains comma, quote, or newline).
+//! paper's figures can be re-plotted with any external tool, and the
+//! `mixtab loadtest` result store (`loadtest::store`) appends its per-run
+//! rows through the same primitives. Quoting follows RFC 4180 (quote when a
+//! field contains comma, quote, or newline); [`parse`] reads the same
+//! dialect back, including escaped quotes and newlines inside quoted
+//! fields.
 
+use crate::util::error::{Error, Result};
 use std::fmt::Write as _;
 use std::fs;
 use std::io;
@@ -65,6 +70,80 @@ impl CsvWriter {
         }
         fs::write(path, self.to_string())
     }
+}
+
+/// Render one record as a CSV line (with trailing newline) — the
+/// append-side primitive for stores that add rows to an existing file
+/// without re-rendering the whole table.
+pub fn format_record<S: AsRef<str>>(fields: impl IntoIterator<Item = S>) -> String {
+    let fields: Vec<String> = fields.into_iter().map(|s| s.as_ref().to_string()).collect();
+    let mut out = String::new();
+    write_record(&mut out, &fields);
+    out
+}
+
+/// Parse RFC 4180 CSV text into records (the header, if any, is the first
+/// record). Handles quoted fields with `""` escapes, commas and newlines
+/// inside quotes, and CRLF line endings; a trailing newline does not
+/// produce an empty record. Errors on an unterminated quoted field and on
+/// a quote opening mid-field (both are always producer bugs, never data).
+pub fn parse(text: &str) -> Result<Vec<Vec<String>>> {
+    let mut records = Vec::new();
+    let mut record: Vec<String> = Vec::new();
+    let mut field = String::new();
+    // Whether the current field was entered as a quoted field, and whether
+    // we are still inside its quotes.
+    let mut quoted = false;
+    let mut in_quotes = false;
+    let mut chars = text.chars().peekable();
+    let mut saw_any = false;
+    while let Some(c) = chars.next() {
+        saw_any = true;
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    field.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                field.push(c);
+            }
+            continue;
+        }
+        match c {
+            '"' if field.is_empty() && !quoted => {
+                quoted = true;
+                in_quotes = true;
+            }
+            '"' => {
+                return Err(Error::msg(format!(
+                    "csv: stray quote after '{field}' (quotes must wrap the whole field)"
+                )))
+            }
+            ',' => {
+                record.push(std::mem::take(&mut field));
+                quoted = false;
+            }
+            '\r' if chars.peek() == Some(&'\n') => {} // CRLF: let '\n' end the record
+            '\n' => {
+                record.push(std::mem::take(&mut field));
+                quoted = false;
+                records.push(std::mem::take(&mut record));
+            }
+            _ => field.push(c),
+        }
+    }
+    if in_quotes {
+        return Err(Error::msg("csv: unterminated quoted field at end of input"));
+    }
+    // Final record without trailing newline.
+    if !field.is_empty() || !record.is_empty() || (quoted && saw_any) {
+        record.push(field);
+        records.push(record);
+    }
+    Ok(records)
 }
 
 fn write_record(out: &mut String, fields: &[String]) {
@@ -138,6 +217,42 @@ mod tests {
         assert_eq!(f(0.0), "0");
         assert_eq!(f(1.5), "1.500000");
         assert!(f(1e-9).contains('e'));
+    }
+
+    #[test]
+    fn parse_plain_and_quoted() {
+        let rows = parse("a,b\n1,2\n").unwrap();
+        assert_eq!(rows, vec![vec!["a", "b"], vec!["1", "2"]]);
+        // Escaped quotes, commas and newlines inside quotes, CRLF endings.
+        let rows = parse("x,y\r\n\"a,b\",\"q\"\"q\"\r\n\"line\nbreak\",plain").unwrap();
+        assert_eq!(rows[1], vec!["a,b", "q\"q"]);
+        assert_eq!(rows[2], vec!["line\nbreak", "plain"]);
+        // Empty fields and a lone quoted-empty record.
+        assert_eq!(parse("a,,c\n").unwrap(), vec![vec!["a", "", "c"]]);
+        assert_eq!(parse("\"\"").unwrap(), vec![vec![""]]);
+        assert!(parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_quotes() {
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("ab\"cd,2\n").is_err());
+    }
+
+    #[test]
+    fn writer_parse_roundtrip() {
+        let mut w = CsvWriter::new(["config", "value"]);
+        w.row(["oph(k=200,hash=mixed_tab)", "a\"quoted\""]);
+        w.row(["multi\nline", "plain"]);
+        let rows = parse(&w.to_string()).unwrap();
+        assert_eq!(rows[0], vec!["config", "value"]);
+        assert_eq!(rows[1], vec!["oph(k=200,hash=mixed_tab)", "a\"quoted\""]);
+        assert_eq!(rows[2], vec!["multi\nline", "plain"]);
+        // format_record is the same dialect write_record uses.
+        assert_eq!(
+            format_record(["oph(k=1,h=m)", "x"]),
+            "\"oph(k=1,h=m)\",x\n"
+        );
     }
 
     #[test]

@@ -1,0 +1,120 @@
+//! The loadtest driver against a live server: the windowed multi-client
+//! engine `mixtab loadtest` (and the coordinator bench) measures with.
+//!
+//! These suites prove the driver's accounting — every op answered exactly
+//! once, `Response::Error` counted rather than dropped, one latency
+//! sample per op — and that the op stream reaches the coordinator as the
+//! pure-function-of-index workload promises.
+
+use crate::{base_cfg, coordinator, seeded_set};
+use mixtab::coordinator::request::Request;
+use mixtab::coordinator::server::Server;
+use mixtab::loadtest::driver::drive;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// 4 clients × mixed insert/query stream: every op is answered, counted,
+/// and latency-sampled, and the server's metrics agree with the op mix.
+#[test]
+fn drive_accounts_for_every_op() {
+    let c = coordinator(base_cfg());
+    let metrics = Arc::clone(&c.metrics);
+    let server = Server::start(c, "127.0.0.1:0").unwrap();
+    let ops = 400usize;
+    let stats = drive(server.addr(), 4, ops, 8, |i| {
+        let set = seeded_set(31, i as u64, 40);
+        if i % 4 == 0 {
+            Request::LshQuery { set, scheme: None }
+        } else {
+            Request::LshInsert {
+                id: i as u32,
+                set,
+                scheme: None,
+            }
+        }
+    })
+    .unwrap();
+    server.stop();
+    assert_eq!(stats.ok, ops as u64, "every op answered cleanly");
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.total(), ops as u64);
+    assert_eq!(
+        stats.latency_us.values().len(),
+        ops,
+        "one latency sample per op"
+    );
+    assert!(stats.wall_secs > 0.0 && stats.qps() > 0.0);
+    assert_eq!(metrics.lsh_queries.load(Ordering::Relaxed), (ops / 4) as u64);
+    assert_eq!(
+        metrics.lsh_inserts.load(Ordering::Relaxed),
+        (ops - ops / 4) as u64
+    );
+}
+
+/// `Response::Error` is an *outcome*, not a wire failure: the driver keeps
+/// the pipeline full and reports errors in the stats instead of bailing.
+#[test]
+fn drive_counts_error_responses() {
+    let server = Server::start(coordinator(base_cfg()), "127.0.0.1:0").unwrap();
+    let ops = 60usize;
+    let stats = drive(server.addr(), 2, ops, 4, |i| {
+        let set = seeded_set(32, i as u64, 20);
+        let scheme = (i % 3 == 0).then(|| "no-such-scheme".to_string());
+        Request::LshQuery { set, scheme }
+    })
+    .unwrap();
+    server.stop();
+    assert_eq!(stats.errors, ops as u64 / 3, "unknown scheme → error per op");
+    assert_eq!(stats.ok, ops as u64 - stats.errors);
+    assert_eq!(stats.total(), ops as u64);
+}
+
+/// More clients than ops: surplus connections exit cleanly and the
+/// accounting still balances.
+#[test]
+fn drive_with_more_clients_than_ops() {
+    let server = Server::start(coordinator(base_cfg()), "127.0.0.1:0").unwrap();
+    let stats = drive(server.addr(), 8, 3, 16, |i| Request::LshInsert {
+        id: i as u32,
+        set: seeded_set(33, i as u64, 10),
+        scheme: None,
+    })
+    .unwrap();
+    server.stop();
+    assert_eq!(stats.ok, 3);
+    assert_eq!(stats.errors, 0);
+}
+
+/// The driver is deterministic in its *workload* (not its timing): two
+/// drives of the same pure op stream leave the server with identical
+/// insert/query counts.
+#[test]
+fn drive_workload_is_reproducible() {
+    let mut counts = Vec::new();
+    for _ in 0..2 {
+        let c = coordinator(base_cfg());
+        let metrics = Arc::clone(&c.metrics);
+        let server = Server::start(c, "127.0.0.1:0").unwrap();
+        let stats = drive(server.addr(), 3, 90, 8, |i| {
+            let set = seeded_set(34, i as u64, 30);
+            if i % 2 == 0 {
+                Request::LshInsert {
+                    id: i as u32,
+                    set,
+                    scheme: None,
+                }
+            } else {
+                Request::LshQuery { set, scheme: None }
+            }
+        })
+        .unwrap();
+        server.stop();
+        assert_eq!(stats.total(), 90);
+        counts.push((
+            metrics.lsh_inserts.load(Ordering::Relaxed),
+            metrics.lsh_queries.load(Ordering::Relaxed),
+        ));
+    }
+    assert_eq!(counts[0], counts[1]);
+    assert_eq!(counts[0], (45, 45));
+}

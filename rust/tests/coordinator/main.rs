@@ -15,6 +15,7 @@
 mod batching;
 mod framing;
 mod limits;
+mod loadtest;
 mod pipeline;
 mod soak;
 

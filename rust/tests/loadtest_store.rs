@@ -1,0 +1,216 @@
+//! Loadtest result-store integration: `results.csv` round-trips through
+//! the filesystem with hostile config strings, append validates the
+//! header, compare/gate semantics match what the CI `loadtest-smoke` job
+//! relies on, and a small end-to-end `loadtest::run` produces a row that
+//! a doctored baseline demonstrably fails — the injected-regression
+//! acceptance check.
+
+use mixtab::loadtest::store::{
+    append, diff, gate, last_run, load, RunRecord, HEADER, LOADTEST_SCHEMA,
+};
+use mixtab::loadtest::{self, LoadtestConfig};
+use std::path::PathBuf;
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mixtab_loadtest_{}_{name}.csv", std::process::id()))
+}
+
+/// A full row with a config string exercising every CSV escape: commas
+/// (real sketch specs contain them), quotes, and a newline.
+fn sample_record() -> RunRecord {
+    RunRecord {
+        schema: LOADTEST_SCHEMA.to_string(),
+        git_sha: "0123456789ab".into(),
+        unix_ts: 1_754_000_000,
+        quick: true,
+        config: "spec=oph(k=64,layout=mod,densify=paper,hash=mixed_tab,seed=42) \
+                 note=\"quoted, with comma\"\nsecond line"
+            .into(),
+        sets: 50_000,
+        docs: 24_996,
+        queries: 32,
+        k: 10,
+        clients: 4,
+        window: 16,
+        mix_ops: 20_000,
+        query_frac: 0.5,
+        load_qps: 81_234.5,
+        mixed_qps: 64_321.25,
+        recall_at_k: 0.6875,
+        p50_us: 143.0,
+        p99_us: 1_220.5,
+        p999_us: 4_810.0,
+        peak_rss_mb: 612.75,
+        server_inserts: 60_021,
+        server_queries: 10_011,
+        server_errors: 0,
+    }
+}
+
+#[test]
+fn append_load_roundtrips_hostile_config_strings() {
+    let path = tmp_path("roundtrip");
+    std::fs::remove_file(&path).ok();
+    let a = sample_record();
+    let mut b = sample_record();
+    b.git_sha = "ba9876543210".into();
+    b.recall_at_k = 0.71875;
+    append(&path, &a).unwrap();
+    append(&path, &b).unwrap();
+    let runs = load(&path).unwrap();
+    assert_eq!(runs, vec![a, b.clone()], "every field survives the file");
+    assert_eq!(last_run(&path).unwrap(), b, "last_run is the newest row");
+    // The raw file keeps exactly one header line at the top.
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(text.starts_with("schema,git_sha,"));
+    assert_eq!(text.matches("schema,git_sha,").count(), 1);
+}
+
+#[test]
+fn append_rejects_foreign_header() {
+    // Appending a v1 row to a file with a different header would corrupt
+    // the trajectory — it must error, not write.
+    let path = tmp_path("foreign");
+    std::fs::write(&path, "some,other,header\n1,2,3\n").unwrap();
+    let err = append(&path, &sample_record()).unwrap_err();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(err.to_string().contains("header does not match"), "{err}");
+    assert_eq!(text, "some,other,header\n1,2,3\n", "file left untouched");
+}
+
+#[test]
+fn compare_semantics_missing_run_and_missing_column() {
+    // A store with only a header has no runs: --compare must error, not
+    // invent a baseline.
+    let path = tmp_path("header_only");
+    let header_line = HEADER.join(",") + "\n";
+    std::fs::write(&path, &header_line).unwrap();
+    let err = last_run(&path).unwrap_err();
+    assert!(err.to_string().contains("no runs"), "{err}");
+    std::fs::remove_file(&path).ok();
+
+    // A row missing a column (truncated header + rows) errors by name.
+    let path = tmp_path("missing_col");
+    append(&path, &sample_record()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let truncated: String = text
+        .replace("schema,git_sha,", "git_sha,")
+        .replacen(&format!("{LOADTEST_SCHEMA},"), "", 1);
+    std::fs::write(&path, truncated).unwrap();
+    let err = load(&path).unwrap_err();
+    std::fs::remove_file(&path).ok();
+    assert!(err.to_string().contains("missing column 'schema'"), "{err}");
+
+    // A missing file errors rather than silently passing a gate.
+    assert!(last_run(tmp_path("nonexistent")).is_err());
+}
+
+#[test]
+fn gate_at_and_over_tolerance_through_files() {
+    let base_path = tmp_path("gate_base");
+    std::fs::remove_file(&base_path).ok();
+    append(&base_path, &sample_record()).unwrap();
+    let baseline = last_run(&base_path).unwrap();
+    std::fs::remove_file(&base_path).ok();
+
+    // Exactly at tolerance on every gated axis: passes. Dyadic recall
+    // values keep the boundary exact in f64 (0.6875 − 0.125 = 0.5625).
+    let mut at = sample_record();
+    at.recall_at_k = baseline.recall_at_k - 0.125;
+    at.load_qps = baseline.load_qps * 0.5;
+    at.mixed_qps = baseline.mixed_qps * 0.5;
+    assert!(gate(&at, &baseline, 0.125, 0.5).unwrap().is_empty());
+
+    // Clearly over on two axes: named failures, in gate order.
+    let mut over = sample_record();
+    over.recall_at_k = baseline.recall_at_k - 0.1875;
+    over.load_qps = baseline.load_qps * 0.25;
+    let fails = gate(&over, &baseline, 0.125, 0.5).unwrap();
+    let names: Vec<&str> = fails.iter().map(|f| f.metric).collect();
+    assert_eq!(names, ["recall_at_k", "load_qps"], "{fails:?}");
+
+    // Latency and RSS are diffed but never gated.
+    let mut slow = sample_record();
+    slow.p99_us = baseline.p99_us * 100.0;
+    slow.peak_rss_mb = baseline.peak_rss_mb * 100.0;
+    assert!(gate(&slow, &baseline, 0.125, 0.5).unwrap().is_empty());
+    assert!(diff(&baseline, &slow).iter().any(|d| d.name == "p99_us" && d.rel_change() > 1.0));
+}
+
+/// End-to-end acceptance: a miniature `loadtest::run` against the real
+/// TCP coordinator yields a schema-valid row that (a) gates cleanly
+/// against itself and (b) demonstrably fails against a baseline with an
+/// injected recall/QPS regression.
+#[test]
+fn mini_run_end_to_end_and_injected_regression_fails_gate() {
+    let cfg = LoadtestConfig {
+        sets: 240,
+        queries: 8,
+        k: 5,
+        clients: 2,
+        window: 8,
+        mix_ops: 120,
+        oracle_workers: 2,
+        quick: true,
+        ..LoadtestConfig::quick()
+    };
+    let record = loadtest::run(&cfg).unwrap();
+
+    // Schema-valid row with identity fields populated.
+    assert_eq!(record.schema, LOADTEST_SCHEMA);
+    assert!(!record.git_sha.is_empty());
+    assert!(record.unix_ts > 0);
+    assert!(record.config.contains("oph(k=64"), "{}", record.config);
+    assert!(record.config.contains("seed=42"), "{}", record.config);
+    assert_eq!(record.sets, 240);
+    assert!((0.0..=1.0).contains(&record.recall_at_k));
+    assert!(record.load_qps > 0.0 && record.mixed_qps > 0.0);
+    assert!(record.p50_us > 0.0 && record.p999_us >= record.p99_us);
+    assert_eq!(record.server_errors, 0);
+    // Server saw the load phase, the mixed phase, and the oracle queries.
+    assert!(record.server_inserts >= record.sets);
+    assert!(record.server_queries >= record.queries);
+
+    // It persists as a loadable row. Floats are stored at 6-decimal
+    // precision (`csv::f`), so compare at store precision: identity
+    // fields exactly, and a second render is byte-identical.
+    let path = tmp_path("e2e");
+    std::fs::remove_file(&path).ok();
+    append(&path, &record).unwrap();
+    let back = last_run(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back.git_sha, record.git_sha);
+    assert_eq!(back.config, record.config);
+    assert_eq!(back.sets, record.sets);
+    assert_eq!(back.to_fields(), record.to_fields());
+
+    // Self-gate is clean at zero tolerance.
+    assert!(gate(&record, &record, 0.0, 0.0).unwrap().is_empty());
+
+    // Injected regression: a baseline claiming better recall and 10× the
+    // throughput must fail the gate on all three gated metrics.
+    let mut doctored = record.clone();
+    doctored.recall_at_k = (record.recall_at_k + 0.5).min(1.5);
+    doctored.load_qps = record.load_qps * 10.0;
+    doctored.mixed_qps = record.mixed_qps * 10.0;
+    let fails = gate(&record, &doctored, 0.02, 0.5).unwrap();
+    let names: Vec<&str> = fails.iter().map(|f| f.metric).collect();
+    assert_eq!(names, ["recall_at_k", "load_qps", "mixed_qps"], "{fails:?}");
+}
+
+#[test]
+fn committed_quick_baseline_is_loadable_and_schema_valid() {
+    // The repo-root floor baseline the CI loadtest-smoke job gates
+    // against must always load and carry gateable (nonzero) floors.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../LOADTEST_baseline_quick.csv");
+    let runs = load(path).expect("committed LOADTEST_baseline_quick.csv");
+    assert!(!runs.is_empty());
+    for r in &runs {
+        assert_eq!(r.schema, LOADTEST_SCHEMA);
+        assert!(r.quick, "baseline rows must be quick-mode");
+        assert!(r.recall_at_k > 0.0, "recall floor must be gateable");
+        assert!(r.load_qps > 0.0 && r.mixed_qps > 0.0, "qps floors gateable");
+    }
+}
