@@ -1,0 +1,105 @@
+//! Reconnecting connection pool for one backend.
+//!
+//! Router workers check a [`PipelinedClient`] out, run one-or-more
+//! round trips, and check it back in on success. Any transport failure
+//! drops the connection on the floor (a timed-out socket may hold a
+//! partial response line — see `PipelinedClient::set_read_timeout`), so
+//! the pool never recycles a connection in an unknown protocol state.
+//! The next checkout reconnects; connect errors surface to the caller
+//! and feed the health tracker like any other transport failure.
+
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::server::PipelinedClient;
+use crate::util::error::{Context, Result};
+use crate::util::sync::lock_unpoisoned;
+use std::net::ToSocketAddrs;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Idle connections kept per backend. Above this, checked-in connections
+/// are simply closed — the pool bounds sockets, not concurrency (that is
+/// the server's `request_workers`).
+const MAX_IDLE: usize = 16;
+
+/// A pool of pipelined connections to one backend address.
+#[derive(Debug)]
+pub struct BackendPool {
+    addr: String,
+    read_timeout: Option<Duration>,
+    idle: Mutex<Vec<PipelinedClient>>,
+}
+
+impl BackendPool {
+    pub fn new(addr: &str, read_timeout: Option<Duration>) -> Self {
+        Self {
+            addr: addr.to_string(),
+            read_timeout,
+            idle: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Take an idle connection or dial a new one (read deadline applied).
+    pub fn checkout(&self) -> Result<PipelinedClient> {
+        if let Some(conn) = lock_unpoisoned(&self.idle).pop() {
+            return Ok(conn);
+        }
+        let sock = self
+            .addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolve backend '{}'", self.addr))?
+            .next()
+            .with_context(|| format!("backend '{}' resolved to no address", self.addr))?;
+        PipelinedClient::connect_with_timeout(sock, self.read_timeout)
+            .with_context(|| format!("connect backend '{}'", self.addr))
+    }
+
+    /// Return a connection that completed its round trips cleanly.
+    pub fn checkin(&self, conn: PipelinedClient) {
+        let mut idle = lock_unpoisoned(&self.idle);
+        if idle.len() < MAX_IDLE {
+            idle.push(conn);
+        }
+    }
+
+    /// One blocking round trip: checkout → send → recv → checkin. Any
+    /// `Err` is a transport failure (the connection is already dropped);
+    /// an application-level problem comes back as `Ok(Response::Error)`.
+    pub fn call(&self, req: &Request) -> Result<Response> {
+        let mut conn = self.checkout()?;
+        let resp = roundtrip(&mut conn, req)?;
+        self.checkin(conn);
+        Ok(resp)
+    }
+}
+
+/// Send one tagged request and flush it; returns the rid to collect.
+/// Split from [`recv_tagged`] so the router can send to every replica
+/// first and only then block on responses — fan-out latency is one round
+/// trip, not one per replica.
+pub fn send_tagged(conn: &mut PipelinedClient, req: &Request) -> Result<u64> {
+    let rid = conn.send(req)?;
+    conn.flush()?;
+    Ok(rid)
+}
+
+/// Wait for the (single in-flight) response to `rid`.
+pub fn recv_tagged(conn: &mut PipelinedClient, rid: u64) -> Result<Response> {
+    let (got, resp) = conn.recv()?;
+    if got != Some(rid) {
+        // One request in flight ⇒ the first response must answer it; a
+        // mismatch means the stream is desynchronized. The caller drops
+        // the connection by construction (we never hand it back).
+        crate::bail!("backend answered rid {got:?} to request {rid} — stream desynchronized");
+    }
+    Ok(resp)
+}
+
+/// Send one tagged request and wait for its (single in-flight) response.
+pub fn roundtrip(conn: &mut PipelinedClient, req: &Request) -> Result<Response> {
+    let rid = send_tagged(conn, req)?;
+    recv_tagged(conn, rid)
+}

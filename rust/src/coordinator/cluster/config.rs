@@ -1,0 +1,371 @@
+//! Router-mode configuration: the `[cluster]` section and `[[backends]]`
+//! entries.
+//!
+//! ```toml
+//! [cluster]
+//! replicas = 2           # distinct backends each insert lands on
+//! error_limit = 5        # consecutive transport errors tripping cooloff
+//! cooloff_ms = 1000      # cooloff window before the half-open probe
+//! read_timeout_ms = 2000 # per-call read deadline on backend connections
+//! shadow_fraction = 0.5  # fraction of reads mirrored (writes always mirror)
+//! shadow_backend = "cand"
+//! shadow_scheme = "murmur"  # optional scheme rewrite on mirrored ops
+//! shadow_queue = 65536   # bounded mirror queue; overflow is counted shed
+//!
+//! [[backends]]
+//! name = "b0"
+//! addr = "127.0.0.1:7101"
+//! weight = 1             # routing-ring slots; 0 = shadow-only backend
+//! schemes = ["default"]  # schemes served (empty / omitted = all)
+//! ```
+
+use crate::util::config::{Config, Table, Value};
+use crate::util::error::{bail, Result};
+use std::time::Duration;
+
+/// Upper bound on per-backend routing weight — a ring with thousands of
+/// slots for one host is a config typo, not a topology.
+pub const MAX_WEIGHT: usize = 64;
+
+/// One `[[backends]]` entry: a remote mixtab server the router can talk to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackendConfig {
+    pub name: String,
+    /// TCP address of the backend's wire front-end.
+    pub addr: String,
+    /// Routing-ring slots this backend occupies. 0 removes it from
+    /// primary routing entirely (legal only for the shadow target).
+    pub weight: usize,
+    /// Scheme names this backend serves; empty means every scheme.
+    pub schemes: Vec<String>,
+}
+
+impl BackendConfig {
+    fn from_table(table: &Table) -> Result<Self> {
+        let name = match table.get("name") {
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => bail!("[[backends]] name must be a string, got {v:?}"),
+            None => bail!("[[backends]] entry is missing 'name'"),
+        };
+        if name.is_empty() {
+            bail!("[[backends]] name must be non-empty");
+        }
+        let addr = match table.get("addr") {
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => bail!("[[backends]] '{name}' addr must be a string, got {v:?}"),
+            None => bail!("[[backends]] '{name}' is missing 'addr'"),
+        };
+        if addr.is_empty() {
+            bail!("[[backends]] '{name}' addr must be non-empty");
+        }
+        let weight = match table.get("weight") {
+            Some(v) => {
+                let Some(n) = v.as_i64().and_then(|n| usize::try_from(n).ok()) else {
+                    bail!("[[backends]] '{name}' weight must be a non-negative integer");
+                };
+                n
+            }
+            None => 1,
+        };
+        if weight > MAX_WEIGHT {
+            bail!("[[backends]] '{name}' weight must be <= {MAX_WEIGHT}, got {weight}");
+        }
+        let schemes = match table.get("schemes") {
+            Some(Value::Arr(items)) => {
+                let mut out = Vec::with_capacity(items.len());
+                for item in items {
+                    match item {
+                        Value::Str(s) if !s.is_empty() => out.push(s.clone()),
+                        other => bail!(
+                            "[[backends]] '{name}' schemes must be non-empty strings, got {other:?}"
+                        ),
+                    }
+                }
+                out
+            }
+            Some(v) => bail!("[[backends]] '{name}' schemes must be an array, got {v:?}"),
+            None => Vec::new(),
+        };
+        for key in table.keys() {
+            if !matches!(key.as_str(), "name" | "addr" | "weight" | "schemes") {
+                bail!("unknown key '{key}' in [[backends]] '{name}'");
+            }
+        }
+        Ok(Self {
+            name,
+            addr,
+            weight,
+            schemes,
+        })
+    }
+
+    /// Whether this backend serves ops for `scheme`.
+    pub fn serves(&self, scheme: &str) -> bool {
+        self.schemes.is_empty() || self.schemes.iter().any(|s| s == scheme)
+    }
+}
+
+/// Router-mode topology + policy: backends, replication, health limits,
+/// and the shadow mirror.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub backends: Vec<BackendConfig>,
+    /// Distinct backends each insert is replicated to (clamped to the
+    /// scheme's ring size at routing time).
+    pub replicas: usize,
+    /// Consecutive transport errors that trip a backend into cooloff.
+    pub error_limit: u32,
+    /// Cooloff window before the half-open probe.
+    pub cooloff_ms: u64,
+    /// Read deadline on backend connections; 0 disables (not recommended:
+    /// a hung backend then blocks its caller until TCP gives up).
+    pub read_timeout_ms: u64,
+    /// Fraction of read ops mirrored to the shadow backend. Writes are
+    /// always mirrored when a shadow is configured, so the shadow's
+    /// corpus stays comparable and result diffs are meaningful.
+    pub shadow_fraction: f64,
+    /// Name of the `[[backends]]` entry receiving mirrored traffic.
+    pub shadow_backend: Option<String>,
+    /// Scheme rewritten onto mirrored ops (A/B across schemes on one
+    /// backend); `None` mirrors the op's own scheme.
+    pub shadow_scheme: Option<String>,
+    /// Bounded mirror queue; overflow sheds (counted, never blocking).
+    pub shadow_queue: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            backends: Vec::new(),
+            replicas: 2,
+            error_limit: 5,
+            cooloff_ms: 1000,
+            read_timeout_ms: 2000,
+            shadow_fraction: 1.0,
+            shadow_backend: None,
+            shadow_scheme: None,
+            shadow_queue: 65536,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Parse from config text. Errors when no `[[backends]]` entry exists:
+    /// router mode without backends serves nothing.
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let d = Self::default();
+        // The natural typo for `[[backends]]` is `[backends]`, which the
+        // parser stores as a plain section — it would otherwise be
+        // silently ignored and the router would start with no targets.
+        if cfg.sections().any(|s| s == "backends") {
+            bail!("[backends] is a plain section — backends use [[backends]] entries");
+        }
+        let mut backends: Vec<BackendConfig> = Vec::new();
+        for table in cfg.tables("backends") {
+            let backend = BackendConfig::from_table(table)?;
+            if backends.iter().any(|b| b.name == backend.name) {
+                bail!("duplicate [[backends]] name '{}'", backend.name);
+            }
+            if backends.iter().any(|b| b.addr == backend.addr) {
+                bail!(
+                    "duplicate [[backends]] addr '{}' ('{}')",
+                    backend.addr,
+                    backend.name
+                );
+            }
+            backends.push(backend);
+        }
+        if backends.is_empty() {
+            bail!("router mode needs at least one [[backends]] entry");
+        }
+
+        let replicas = cfg.usize_or("cluster", "replicas", d.replicas);
+        if replicas == 0 {
+            bail!("[cluster] replicas must be >= 1");
+        }
+        let error_limit = cfg.i64_or("cluster", "error_limit", d.error_limit as i64);
+        if !(1..=u32::MAX as i64).contains(&error_limit) {
+            bail!("[cluster] error_limit must be in 1..={}, got {error_limit}", u32::MAX);
+        }
+        let cooloff_ms = cfg.i64_or("cluster", "cooloff_ms", d.cooloff_ms as i64);
+        if cooloff_ms < 1 {
+            bail!("[cluster] cooloff_ms must be >= 1, got {cooloff_ms}");
+        }
+        let read_timeout_ms = cfg.i64_or("cluster", "read_timeout_ms", d.read_timeout_ms as i64);
+        if read_timeout_ms < 0 {
+            bail!("[cluster] read_timeout_ms must be >= 0, got {read_timeout_ms}");
+        }
+
+        let shadow_backend = match cfg.get("cluster", "shadow_backend") {
+            Some(Value::Str(s)) if !s.is_empty() => Some(s.clone()),
+            Some(v) => bail!("[cluster] shadow_backend must be a non-empty string, got {v:?}"),
+            None => None,
+        };
+        let shadow_fraction = cfg.f64_or("cluster", "shadow_fraction", d.shadow_fraction);
+        if !(0.0..=1.0).contains(&shadow_fraction) || !shadow_fraction.is_finite() {
+            bail!("[cluster] shadow_fraction must be in 0..=1, got {shadow_fraction}");
+        }
+        let shadow_scheme = match cfg.get("cluster", "shadow_scheme") {
+            Some(Value::Str(s)) if !s.is_empty() => Some(s.clone()),
+            Some(v) => bail!("[cluster] shadow_scheme must be a non-empty string, got {v:?}"),
+            None => None,
+        };
+        let shadow_queue = cfg.usize_or("cluster", "shadow_queue", d.shadow_queue);
+        if shadow_queue == 0 {
+            bail!("[cluster] shadow_queue must be >= 1");
+        }
+        // Shadow knobs without a shadow target are silently inert —
+        // surface the dead settings, mirroring the burst/rate guard.
+        if shadow_backend.is_none() {
+            if cfg.get("cluster", "shadow_fraction").is_some() {
+                bail!("[cluster] shadow_fraction has no effect without shadow_backend");
+            }
+            if shadow_scheme.is_some() {
+                bail!("[cluster] shadow_scheme has no effect without shadow_backend");
+            }
+            if cfg.get("cluster", "shadow_queue").is_some() {
+                bail!("[cluster] shadow_queue has no effect without shadow_backend");
+            }
+        }
+        if let Some(name) = &shadow_backend {
+            if !backends.iter().any(|b| &b.name == name) {
+                bail!("[cluster] shadow_backend '{name}' is not a [[backends]] entry");
+            }
+        }
+        // A weight-0 backend takes no primary traffic; unless it is the
+        // shadow target the entry is dead config.
+        for b in &backends {
+            if b.weight == 0 && shadow_backend.as_deref() != Some(b.name.as_str()) {
+                bail!(
+                    "[[backends]] '{}' has weight 0 and is not the shadow_backend — it would never receive traffic",
+                    b.name
+                );
+            }
+        }
+        if !backends.iter().any(|b| b.weight > 0) {
+            bail!("router mode needs at least one backend with weight >= 1");
+        }
+
+        Ok(Self {
+            backends,
+            replicas,
+            error_limit: error_limit as u32,
+            cooloff_ms: cooloff_ms as u64,
+            read_timeout_ms: read_timeout_ms as u64,
+            shadow_fraction,
+            shadow_backend,
+            shadow_scheme,
+            shadow_queue,
+        })
+    }
+
+    /// Per-call read deadline for backend connections (`None` = blocking).
+    pub fn read_timeout(&self) -> Option<Duration> {
+        if self.read_timeout_ms == 0 {
+            None
+        } else {
+            Some(Duration::from_millis(self.read_timeout_ms))
+        }
+    }
+
+    /// Cooloff window as a duration.
+    pub fn cooloff(&self) -> Duration {
+        Duration::from_millis(self.cooloff_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::config::Config;
+
+    fn parse(text: &str) -> Result<ClusterConfig> {
+        ClusterConfig::from_config(&Config::parse(text).unwrap())
+    }
+
+    const TWO_BACKENDS: &str = "[[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:7101\"\n\n[[backends]]\nname = \"b1\"\naddr = \"127.0.0.1:7102\"\n";
+
+    #[test]
+    fn parses_minimal_topology() {
+        let c = parse(TWO_BACKENDS).unwrap();
+        assert_eq!(c.backends.len(), 2);
+        assert_eq!(c.backends[0].name, "b0");
+        assert_eq!(c.backends[0].weight, 1);
+        assert!(c.backends[0].schemes.is_empty());
+        assert!(c.backends[0].serves("default"));
+        assert!(c.backends[0].serves("anything"));
+        assert_eq!(c.replicas, 2);
+        assert_eq!(c.error_limit, 5);
+        assert!(c.shadow_backend.is_none());
+        assert_eq!(c.read_timeout(), Some(Duration::from_millis(2000)));
+    }
+
+    #[test]
+    fn parses_full_topology_with_shadow() {
+        let text = format!(
+            "[cluster]\nreplicas = 1\nerror_limit = 3\ncooloff_ms = 250\nread_timeout_ms = 0\nshadow_fraction = 0.5\nshadow_backend = \"cand\"\nshadow_scheme = \"murmur\"\nshadow_queue = 128\n\n{TWO_BACKENDS}\n[[backends]]\nname = \"cand\"\naddr = \"127.0.0.1:7103\"\nweight = 0\nschemes = [\"default\", \"murmur\"]\n"
+        );
+        let c = parse(&text).unwrap();
+        assert_eq!(c.replicas, 1);
+        assert_eq!(c.error_limit, 3);
+        assert_eq!(c.cooloff(), Duration::from_millis(250));
+        assert_eq!(c.read_timeout(), None);
+        assert_eq!(c.shadow_fraction, 0.5);
+        assert_eq!(c.shadow_backend.as_deref(), Some("cand"));
+        assert_eq!(c.shadow_scheme.as_deref(), Some("murmur"));
+        assert_eq!(c.shadow_queue, 128);
+        let cand = &c.backends[2];
+        assert_eq!(cand.weight, 0);
+        assert!(cand.serves("murmur"));
+        assert!(!cand.serves("other"));
+    }
+
+    #[test]
+    fn rejects_bad_topologies() {
+        for bad in [
+            // No backends at all / plain-section typo.
+            "[cluster]\nreplicas = 2\n",
+            "[backends]\nname = \"b0\"\naddr = \"127.0.0.1:1\"\n",
+            // Missing / malformed fields.
+            "[[backends]]\naddr = \"127.0.0.1:1\"\n",
+            "[[backends]]\nname = \"b0\"\n",
+            "[[backends]]\nname = \"\"\naddr = \"127.0.0.1:1\"\n",
+            "[[backends]]\nname = \"b0\"\naddr = \"\"\n",
+            "[[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:1\"\nweight = -1\n",
+            "[[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:1\"\nweight = 1000\n",
+            "[[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:1\"\nschemes = \"default\"\n",
+            "[[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:1\"\nschemes = [\"\"]\n",
+            "[[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:1\"\nwibble = 1\n",
+            // Duplicates.
+            "[[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:1\"\n[[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:2\"\n",
+            "[[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:1\"\n[[backends]]\nname = \"b1\"\naddr = \"127.0.0.1:1\"\n",
+            // Weight 0 without being the shadow target.
+            "[[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:1\"\nweight = 0\n",
+        ] {
+            assert!(parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_cluster_knobs() {
+        for bad in [
+            "[cluster]\nreplicas = 0\n",
+            "[cluster]\nerror_limit = 0\n",
+            "[cluster]\ncooloff_ms = 0\n",
+            "[cluster]\nread_timeout_ms = -1\n",
+            "[cluster]\nshadow_fraction = 1.5\n",
+            "[cluster]\nshadow_fraction = -0.5\n",
+            "[cluster]\nshadow_backend = \"\"\n",
+            // Unknown shadow target.
+            "[cluster]\nshadow_backend = \"nope\"\n",
+            // Inert shadow knobs without a shadow target.
+            "[cluster]\nshadow_fraction = 0.5\n",
+            "[cluster]\nshadow_scheme = \"x\"\n",
+            "[cluster]\nshadow_queue = 16\n",
+            "[cluster]\nshadow_queue = 0\nshadow_backend = \"b0\"\n",
+        ] {
+            let text = format!("{bad}\n{TWO_BACKENDS}");
+            assert!(parse(&text).is_err(), "accepted: {bad}");
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! Per-backend health: error-limit trip → epoch-tagged cooloff window →
+//! half-open probe → recovery.
+//!
+//! The tracker is a plain state machine over injected clocks — every
+//! time-dependent method takes `now: Instant`, mirroring
+//! `ConnLimiter::admit_at` — so tests drive the full transition graph
+//! deterministically without sleeping. Only *transport* failures
+//! (connect/send/recv/timeout) feed it; an application-level
+//! `Response::Error` means the backend is alive and answering.
+//!
+//! States:
+//!
+//! - **Healthy** — traffic flows. `error_limit` *consecutive* transport
+//!   errors trip the backend into cooloff.
+//! - **Cooloff** — all traffic sheds until the window elapses. Each trip
+//!   increments the backend's `cooloff_trips` counter.
+//! - **Half-open** — the first admission after the window becomes the
+//!   probe; everything else keeps shedding until it resolves. Probe
+//!   success recovers to Healthy and increments the backend's recovery
+//!   `epoch`; probe failure re-trips cooloff immediately.
+
+use std::time::{Duration, Instant};
+
+/// Lifecycle state of one backend (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    Healthy,
+    /// Shedding until the window elapses at `until`.
+    Cooloff { until: Instant },
+    /// One probe is in flight; its outcome decides the next state.
+    HalfOpen,
+}
+
+impl HealthState {
+    /// Stable lowercase label for metrics snapshots.
+    pub fn label(&self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Cooloff { .. } => "cooloff",
+            HealthState::HalfOpen => "half_open",
+        }
+    }
+}
+
+/// The health state machine for one backend.
+#[derive(Debug)]
+pub struct BackendHealth {
+    error_limit: u32,
+    cooloff: Duration,
+    state: HealthState,
+    consecutive_errors: u32,
+    /// Times the error limit tripped the backend into cooloff.
+    cooloff_trips: u64,
+    /// Recovery epoch: bumped on every HalfOpen → Healthy transition, so
+    /// metrics distinguish "never died" (epoch 0) from "died and came
+    /// back" — and *how many times* — without a log scrape.
+    epoch: u64,
+}
+
+impl BackendHealth {
+    pub fn new(error_limit: u32, cooloff: Duration) -> Self {
+        assert!(error_limit >= 1, "error_limit must be >= 1");
+        Self {
+            error_limit,
+            cooloff,
+            state: HealthState::Healthy,
+            consecutive_errors: 0,
+            cooloff_trips: 0,
+            epoch: 0,
+        }
+    }
+
+    /// Whether an op may be sent to this backend at `now`. In cooloff the
+    /// first call after the window elapses transitions to HalfOpen and is
+    /// admitted as the probe; subsequent calls shed until the probe
+    /// resolves via [`on_success`](Self::on_success) /
+    /// [`on_error`](Self::on_error).
+    pub fn admit_at(&mut self, now: Instant) -> bool {
+        match self.state {
+            HealthState::Healthy => true,
+            HealthState::Cooloff { until } => {
+                if now >= until {
+                    self.state = HealthState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+            HealthState::HalfOpen => false,
+        }
+    }
+
+    /// Record a successful round trip at `now`.
+    pub fn on_success(&mut self, _now: Instant) {
+        self.consecutive_errors = 0;
+        if self.state == HealthState::HalfOpen {
+            self.epoch += 1;
+        }
+        self.state = HealthState::Healthy;
+    }
+
+    /// Record a transport failure at `now`. A failed probe re-trips
+    /// cooloff immediately; otherwise the consecutive-error counter
+    /// climbs toward the limit.
+    pub fn on_error(&mut self, now: Instant) {
+        self.consecutive_errors = self.consecutive_errors.saturating_add(1);
+        match self.state {
+            HealthState::HalfOpen => self.trip(now),
+            HealthState::Healthy => {
+                if self.consecutive_errors >= self.error_limit {
+                    self.trip(now);
+                }
+            }
+            // Errors observed while shedding (races from ops admitted just
+            // before the trip) extend nothing: the window is fixed.
+            HealthState::Cooloff { .. } => {}
+        }
+    }
+
+    fn trip(&mut self, now: Instant) {
+        self.state = HealthState::Cooloff {
+            until: now + self.cooloff,
+        };
+        self.cooloff_trips += 1;
+        self.consecutive_errors = 0;
+    }
+
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn cooloff_trips(&self) -> u64 {
+        self.cooloff_trips
+    }
+
+    pub fn consecutive_errors(&self) -> u32 {
+        self.consecutive_errors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stays_healthy_below_the_limit() {
+        let t0 = Instant::now();
+        let mut h = BackendHealth::new(3, Duration::from_millis(100));
+        for _ in 0..2 {
+            h.on_error(t0);
+        }
+        assert!(h.admit_at(t0));
+        assert_eq!(h.state(), HealthState::Healthy);
+        // A success resets the consecutive counter: two more errors still
+        // don't trip.
+        h.on_success(t0);
+        assert_eq!(h.consecutive_errors(), 0);
+        for _ in 0..2 {
+            h.on_error(t0);
+        }
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert_eq!(h.epoch(), 0);
+        assert_eq!(h.cooloff_trips(), 0);
+    }
+
+    #[test]
+    fn single_probe_while_half_open() {
+        let t0 = Instant::now();
+        let mut h = BackendHealth::new(1, Duration::from_millis(50));
+        h.on_error(t0);
+        let after = t0 + Duration::from_millis(50);
+        assert!(h.admit_at(after), "first admission is the probe");
+        assert_eq!(h.state(), HealthState::HalfOpen);
+        assert!(!h.admit_at(after), "no second probe while one is in flight");
+        assert!(!h.admit_at(after + Duration::from_secs(60)));
+    }
+}

@@ -1,0 +1,197 @@
+//! Router-mode metrics: per-backend traffic/health counters plus the
+//! shadow mirror's divergence and latency-delta tracking.
+//!
+//! Same discipline as [`crate::coordinator::metrics`]: the request path
+//! bumps lock-free atomics through `Arc`ed blocks; locks exist only at
+//! snapshot time. Health *state* (healthy/cooloff/half_open, epoch, trip
+//! count) lives in the router's [`super::health::BackendHealth`] machines
+//! and is folded into the snapshot by the router, which is the only
+//! component holding both.
+
+use crate::coordinator::metrics::Metrics;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Counters for one backend's primary (routed) traffic.
+#[derive(Debug)]
+pub struct BackendCounters {
+    pub name: String,
+    /// Ops sent to this backend (including failed attempts).
+    pub requests: AtomicU64,
+    /// Transport failures (connect/send/recv) — the signal feeding the
+    /// health tracker. Application-level `Error` responses don't count.
+    pub errors: AtomicU64,
+    /// Subset of `errors` that were read-deadline expiries.
+    pub timeouts: AtomicU64,
+    /// Ops not sent because the backend was shedding (cooloff/half-open).
+    pub shed: AtomicU64,
+}
+
+impl BackendCounters {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    /// JSON block, with the health fields the router reads off the
+    /// backend's state machine at snapshot time.
+    pub fn snapshot(&self, state: &str, epoch: u64, cooloff_trips: u64) -> Json {
+        Json::obj()
+            .set("requests", self.requests.load(Ordering::Relaxed) as usize)
+            .set("errors", self.errors.load(Ordering::Relaxed) as usize)
+            .set("timeouts", self.timeouts.load(Ordering::Relaxed) as usize)
+            .set("shed", self.shed.load(Ordering::Relaxed) as usize)
+            .set("state", state)
+            .set("epoch", epoch as usize)
+            .set("cooloff_trips", cooloff_trips as usize)
+    }
+}
+
+/// Counters for the shadow mirror.
+#[derive(Debug, Default)]
+pub struct ShadowCounters {
+    /// Ops handed to the mirror thread (writes + sampled reads).
+    pub mirrored: AtomicU64,
+    /// Ops dropped because the mirror queue was full. Divergence numbers
+    /// are only trustworthy while this stays 0 — a shed write leaves the
+    /// shadow's corpus behind the primary's.
+    pub shed: AtomicU64,
+    /// Mirrored ops whose responses were compared against the primary's.
+    pub compared: AtomicU64,
+    /// Comparisons whose shadow response differed from the primary's —
+    /// the paper's hash-family comparison, observed on live traffic.
+    pub divergence: AtomicU64,
+    /// Transport failures talking to the shadow backend (excluded from
+    /// comparison; the primary was never affected).
+    pub errors: AtomicU64,
+    /// Summed primary/shadow latency (µs) over compared ops; the
+    /// snapshot exposes the mean delta.
+    pub primary_lat_us: AtomicU64,
+    pub shadow_lat_us: AtomicU64,
+}
+
+impl ShadowCounters {
+    pub fn snapshot(&self) -> Json {
+        let compared = self.compared.load(Ordering::Relaxed);
+        let p = self.primary_lat_us.load(Ordering::Relaxed);
+        let s = self.shadow_lat_us.load(Ordering::Relaxed);
+        let (mean_p, mean_s) = if compared == 0 {
+            (0.0, 0.0)
+        } else {
+            (p as f64 / compared as f64, s as f64 / compared as f64)
+        };
+        Json::obj()
+            .set("mirrored", self.mirrored.load(Ordering::Relaxed) as usize)
+            .set("shed", self.shed.load(Ordering::Relaxed) as usize)
+            .set("compared", compared as usize)
+            .set("divergence", self.divergence.load(Ordering::Relaxed) as usize)
+            .set("errors", self.errors.load(Ordering::Relaxed) as usize)
+            .set("primary_lat_us_mean", mean_p)
+            .set("shadow_lat_us_mean", mean_s)
+            .set("latency_delta_us_mean", mean_s - mean_p)
+    }
+}
+
+/// All router-mode counters. The router serves these from its `stats`
+/// op (a router owns no indexes, so the plain coordinator snapshot would
+/// be empty noise); top-level `lsh_inserts`/`lsh_queries`/`errors` keys
+/// mirror the single-host snapshot shape so the loadtest's external mode
+/// reads either kind of server.
+#[derive(Debug)]
+pub struct ClusterMetrics {
+    /// Routed op counts, summed across backends (one per client op, not
+    /// per replica).
+    pub inserts: AtomicU64,
+    pub queries: AtomicU64,
+    pub sketches: AtomicU64,
+    pub estimates: AtomicU64,
+    /// Client ops answered with an `Error` response.
+    pub errors: AtomicU64,
+    /// Per-backend blocks, config order.
+    pub backends: Vec<Arc<BackendCounters>>,
+    /// Shared with the shadow mirror thread.
+    pub shadow: Arc<ShadowCounters>,
+}
+
+impl ClusterMetrics {
+    pub fn new(backend_names: &[String]) -> Self {
+        Self {
+            inserts: AtomicU64::new(0),
+            queries: AtomicU64::new(0),
+            sketches: AtomicU64::new(0),
+            estimates: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            backends: backend_names
+                .iter()
+                .map(|n| Arc::new(BackendCounters::new(n)))
+                .collect(),
+            shadow: Arc::new(ShadowCounters::default()),
+        }
+    }
+
+    /// Assemble the `stats` JSON. `health` carries `(state_label, epoch,
+    /// cooloff_trips)` per backend, config order — read by the router
+    /// under its health locks.
+    pub fn snapshot(&self, health: &[(&'static str, u64, u64)]) -> Json {
+        debug_assert_eq!(health.len(), self.backends.len());
+        let mut backends = Json::obj();
+        for (block, (state, epoch, trips)) in self.backends.iter().zip(health) {
+            backends = backends.set(&block.name, block.snapshot(state, *epoch, *trips));
+        }
+        Json::obj()
+            .set("router", true)
+            .set("lsh_inserts", self.inserts.load(Ordering::Relaxed) as usize)
+            .set("lsh_queries", self.queries.load(Ordering::Relaxed) as usize)
+            .set(
+                "sketch_requests",
+                self.sketches.load(Ordering::Relaxed) as usize,
+            )
+            .set("estimates", self.estimates.load(Ordering::Relaxed) as usize)
+            .set("errors", self.errors.load(Ordering::Relaxed) as usize)
+            .set("backends", backends)
+            .set("shadow", self.shadow.snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_shape() {
+        let m = ClusterMetrics::new(&["b0".into(), "b1".into()]);
+        Metrics::inc(&m.inserts);
+        Metrics::add(&m.queries, 3);
+        Metrics::inc(&m.backends[0].requests);
+        Metrics::inc(&m.backends[1].errors);
+        Metrics::inc(&m.backends[1].timeouts);
+        Metrics::add(&m.shadow.mirrored, 4);
+        Metrics::add(&m.shadow.compared, 2);
+        Metrics::inc(&m.shadow.divergence);
+        Metrics::add(&m.shadow.primary_lat_us, 100);
+        Metrics::add(&m.shadow.shadow_lat_us, 300);
+        let s = m.snapshot(&[("healthy", 0, 0), ("cooloff", 2, 3)]);
+        assert_eq!(s.get("router").unwrap().as_bool(), Some(true));
+        assert_eq!(s.get("lsh_inserts").unwrap().as_i64(), Some(1));
+        assert_eq!(s.get("lsh_queries").unwrap().as_i64(), Some(3));
+        let b0 = s.get("backends").unwrap().get("b0").unwrap();
+        assert_eq!(b0.get("requests").unwrap().as_i64(), Some(1));
+        assert_eq!(b0.get("state").unwrap().as_str(), Some("healthy"));
+        let b1 = s.get("backends").unwrap().get("b1").unwrap();
+        assert_eq!(b1.get("errors").unwrap().as_i64(), Some(1));
+        assert_eq!(b1.get("timeouts").unwrap().as_i64(), Some(1));
+        assert_eq!(b1.get("state").unwrap().as_str(), Some("cooloff"));
+        assert_eq!(b1.get("epoch").unwrap().as_i64(), Some(2));
+        assert_eq!(b1.get("cooloff_trips").unwrap().as_i64(), Some(3));
+        let sh = s.get("shadow").unwrap();
+        assert_eq!(sh.get("mirrored").unwrap().as_i64(), Some(4));
+        assert_eq!(sh.get("divergence").unwrap().as_i64(), Some(1));
+        assert_eq!(sh.get("latency_delta_us_mean").unwrap().as_f64(), Some(100.0));
+    }
+}

@@ -1,0 +1,33 @@
+//! Cross-host distribution tier: router mode for the coordinator.
+//!
+//! A `[[backends]]` config section declares remote mixtab servers; the
+//! router serves the same wire protocol as a plain coordinator but owns
+//! no indexes — it routes every op to backends over the existing
+//! pipelined protocol:
+//!
+//! - **Inserts** route deterministically by the same spec-hash-family +
+//!   salt discipline as `ShardedIndex` ([`router::CLUSTER_ROUTE_SALT`]),
+//!   replicated to `replicas` distinct backends.
+//! - **Queries** fan out over every healthy backend serving the op's
+//!   scheme and merge candidates with the sorted-dedup invariant —
+//!   exactly the shard-merge contract, lifted across hosts.
+//! - A per-backend **health tracker** ([`health`]) classifies transport
+//!   failures: an error limit trips an epoch-tagged cooloff window, a
+//!   half-open probe recovers, and routed traffic sheds around dead
+//!   backends without stalling the event loop.
+//! - **Shadow routing** ([`shadow`]) mirrors writes (always) and a
+//!   configurable fraction of reads to a candidate backend, off the
+//!   primary response path, recording result divergence and latency
+//!   deltas — the paper's hash-family comparison run as a live service.
+
+pub mod client;
+pub mod config;
+pub mod health;
+pub mod metrics;
+pub mod router;
+pub mod shadow;
+
+pub use config::{BackendConfig, ClusterConfig};
+pub use health::{BackendHealth, HealthState};
+pub use metrics::ClusterMetrics;
+pub use router::ClusterRouter;

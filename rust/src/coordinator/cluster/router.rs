@@ -1,0 +1,549 @@
+//! The cluster router: a [`Handler`] that owns no indexes and serves the
+//! wire protocol by routing every op to remote backends.
+//!
+//! **Routing discipline.** Inserts route by hashing the id with the
+//! default scheme's spec hash family, seeded `lsh seed ^`
+//! [`CLUSTER_ROUTE_SALT`] — exactly the `ShardedIndex` discipline one
+//! level up, with a distinct salt so cross-host placement is independent
+//! of intra-host shard placement (the same id must not systematically
+//! land in the same-numbered shard of every backend). The hash picks a
+//! slot on a weight-expanded ring; walking the ring collects `replicas`
+//! distinct backends serving the op's scheme.
+//!
+//! **Merge discipline.** Queries fan out to every routable backend
+//! serving the scheme and merge candidates with concat → sort → dedup —
+//! the `ShardedIndex::merge` invariant, which makes the merged result a
+//! pure set union: independent of backend count, visit order, and how
+//! ids were replicated. This is what makes router fan-out over N
+//! backends result-identical to one `ShardedIndex` holding the same
+//! corpus (the cluster e2e proves it).
+//!
+//! **Health.** Every send is gated by the backend's
+//! [`BackendHealth`](super::health::BackendHealth) machine; transport
+//! failures feed it, application-level `Error` responses do not (an
+//! answering backend is alive). Shedding happens in the worker handling
+//! the op — the event loop never blocks on a dead backend.
+
+use super::client::{self, BackendPool};
+use super::config::ClusterConfig;
+use super::health::BackendHealth;
+use super::metrics::ClusterMetrics;
+use super::shadow::ShadowRouter;
+use crate::coordinator::config::{CoordinatorConfig, DEFAULT_SCHEME};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::server::{self, Handler, PipelinedClient};
+use crate::hash::Hasher32;
+use crate::util::error::Result;
+use crate::util::sync::lock_unpoisoned;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Seed salt for cross-host routing. Distinct from `SHARD_ROUTE_SALT` so
+/// backend choice and (inside each backend) shard choice are independent
+/// hash streams of the same family.
+pub const CLUSTER_ROUTE_SALT: u64 = 0xC105_7EED;
+
+/// One configured backend: pool + health machine + counters.
+struct Backend {
+    cfg: super::config::BackendConfig,
+    pool: BackendPool,
+    health: Mutex<BackendHealth>,
+    counters: Arc<super::metrics::BackendCounters>,
+}
+
+/// The router-mode request handler.
+pub struct ClusterRouter {
+    backends: Vec<Backend>,
+    /// Weight-expanded ring: backend index repeated `weight` times,
+    /// config order. Weight-0 (shadow-only) backends never appear.
+    slots: Vec<usize>,
+    replicas: usize,
+    route: Box<dyn Hasher32>,
+    /// Round-robin cursor for ops without an id to hash.
+    rr: AtomicUsize,
+    metrics: ClusterMetrics,
+    shadow: Option<ShadowRouter>,
+}
+
+impl ClusterRouter {
+    /// Build from a parsed topology. `coord` supplies the routing spec
+    /// (hash family + seed — the same values every backend derives its
+    /// own sharding from, so one config file can serve both roles).
+    pub fn new(cluster: ClusterConfig, coord: &CoordinatorConfig) -> Result<ClusterRouter> {
+        let lsh = coord.lsh_spec();
+        let route = lsh.family.build(lsh.seed ^ CLUSTER_ROUTE_SALT);
+        let names: Vec<String> = cluster.backends.iter().map(|b| b.name.clone()).collect();
+        let metrics = ClusterMetrics::new(&names);
+        let mut slots = Vec::new();
+        for (i, b) in cluster.backends.iter().enumerate() {
+            for _ in 0..b.weight {
+                slots.push(i);
+            }
+        }
+        crate::ensure!(!slots.is_empty(), "router needs a routable backend");
+        let shadow = match &cluster.shadow_backend {
+            Some(name) => {
+                let target = cluster
+                    .backends
+                    .iter()
+                    .find(|b| &b.name == name)
+                    .expect("validated by ClusterConfig");
+                Some(ShadowRouter::spawn(
+                    &target.addr,
+                    cluster.shadow_fraction,
+                    cluster.shadow_scheme.clone(),
+                    cluster.shadow_queue,
+                    cluster.read_timeout(),
+                    Arc::clone(&metrics.shadow),
+                ))
+            }
+            None => None,
+        };
+        let backends = cluster
+            .backends
+            .iter()
+            .enumerate()
+            .map(|(i, b)| Backend {
+                cfg: b.clone(),
+                pool: BackendPool::new(&b.addr, cluster.read_timeout()),
+                health: Mutex::new(BackendHealth::new(cluster.error_limit, cluster.cooloff())),
+                counters: Arc::clone(&metrics.backends[i]),
+            })
+            .collect();
+        Ok(ClusterRouter {
+            backends,
+            slots,
+            replicas: cluster.replicas,
+            route,
+            rr: AtomicUsize::new(0),
+            metrics,
+            shadow,
+        })
+    }
+
+    /// The `replicas` distinct routable backends for `id` under `scheme`,
+    /// primary first: hash the id onto the weight ring, then walk it
+    /// collecting distinct backends that serve the scheme. Deterministic
+    /// in `(spec, topology, id)` — a second router over the same config
+    /// routes identically, which is what makes replicas findable.
+    fn replicas_for(&self, scheme: &str, id: u32) -> Vec<usize> {
+        let start = self.route.hash(id) as usize % self.slots.len();
+        let mut out = Vec::new();
+        for off in 0..self.slots.len() {
+            let b = self.slots[(start + off) % self.slots.len()];
+            if !out.contains(&b) && self.backends[b].cfg.serves(scheme) {
+                out.push(b);
+                if out.len() == self.replicas {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Every routable backend serving `scheme`, config order (the query
+    /// fan-out set).
+    fn eligible(&self, scheme: &str) -> Vec<usize> {
+        self.backends
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.cfg.weight > 0 && b.cfg.serves(scheme))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    fn note_success(&self, b: usize) {
+        lock_unpoisoned(&self.backends[b].health).on_success(Instant::now());
+    }
+
+    fn note_transport_error(&self, b: usize, err: &crate::util::error::Error) {
+        let backend = &self.backends[b];
+        Metrics::inc(&backend.counters.errors);
+        if server::is_timeout(err) {
+            Metrics::inc(&backend.counters.timeouts);
+        }
+        lock_unpoisoned(&backend.health).on_error(Instant::now());
+    }
+
+    /// Fan one request out to `targets`: health-gate, send to every
+    /// admitted backend, then collect responses (send-all-then-recv — the
+    /// fan-out costs one round trip, not one per backend). Returns one
+    /// entry per *admitted* backend; shed backends only bump their `shed`
+    /// counter.
+    fn fanout_call(&self, targets: &[usize], req: &Request) -> Vec<(usize, Result<Response>)> {
+        let now = Instant::now();
+        let mut inflight: Vec<(usize, PipelinedClient, u64)> = Vec::new();
+        let mut results: Vec<(usize, Result<Response>)> = Vec::new();
+        for &b in targets {
+            let backend = &self.backends[b];
+            if !lock_unpoisoned(&backend.health).admit_at(now) {
+                Metrics::inc(&backend.counters.shed);
+                continue;
+            }
+            Metrics::inc(&backend.counters.requests);
+            let sent = backend.pool.checkout().and_then(|mut conn| {
+                let rid = client::send_tagged(&mut conn, req)?;
+                Ok((conn, rid))
+            });
+            match sent {
+                Ok((conn, rid)) => inflight.push((b, conn, rid)),
+                Err(e) => {
+                    self.note_transport_error(b, &e);
+                    results.push((b, Err(e)));
+                }
+            }
+        }
+        for (b, mut conn, rid) in inflight {
+            match client::recv_tagged(&mut conn, rid) {
+                Ok(resp) => {
+                    self.backends[b].pool.checkin(conn);
+                    self.note_success(b);
+                    results.push((b, Ok(resp)));
+                }
+                Err(e) => {
+                    self.note_transport_error(b, &e);
+                    results.push((b, Err(e)));
+                }
+            }
+        }
+        results
+    }
+
+    /// Route a single-target op (sketch and friends): try targets
+    /// round-robin, skipping shedding backends and — these ops are pure —
+    /// retrying past transport *and* application errors; the first clean
+    /// answer wins.
+    fn route_one(&self, targets: &[usize], req: &Request) -> Response {
+        if targets.is_empty() {
+            return self.error_resp(format!(
+                "no backend serves scheme '{}'",
+                op_scheme(req)
+            ));
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % targets.len();
+        let now = Instant::now();
+        let mut fallback: Option<Response> = None;
+        for off in 0..targets.len() {
+            let b = targets[(start + off) % targets.len()];
+            let backend = &self.backends[b];
+            if !lock_unpoisoned(&backend.health).admit_at(now) {
+                Metrics::inc(&backend.counters.shed);
+                continue;
+            }
+            Metrics::inc(&backend.counters.requests);
+            match backend.pool.call(req) {
+                Ok(Response::Error { message }) => {
+                    self.note_success(b);
+                    fallback.get_or_insert(Response::Error { message });
+                }
+                Ok(resp) => {
+                    self.note_success(b);
+                    return resp;
+                }
+                Err(e) => self.note_transport_error(b, &e),
+            }
+        }
+        match fallback {
+            Some(resp) => {
+                Metrics::inc(&self.metrics.errors);
+                resp
+            }
+            None => self.error_resp(format!(
+                "no healthy backend for scheme '{}'",
+                op_scheme(req)
+            )),
+        }
+    }
+
+    /// Replicated write: succeed iff any replica acked. A replica in
+    /// cooloff just misses this insert — queries still find the id on the
+    /// surviving replicas, which is the point of replication.
+    fn route_write(&self, id: u32, req: &Request) -> Response {
+        let scheme = op_scheme(req);
+        let targets = self.replicas_for(scheme, id);
+        if targets.is_empty() {
+            return self.error_resp(format!("no backend serves scheme '{scheme}'"));
+        }
+        let mut acked: Option<Response> = None;
+        let mut app_error: Option<Response> = None;
+        let mut transport = 0usize;
+        for (_, result) in self.fanout_call(&targets, req) {
+            match result {
+                Ok(Response::Error { message }) => {
+                    app_error.get_or_insert(Response::Error { message });
+                }
+                Ok(resp) => {
+                    acked.get_or_insert(resp);
+                }
+                Err(_) => transport += 1,
+            }
+        }
+        if let Some(resp) = acked {
+            return resp;
+        }
+        if let Some(resp) = app_error {
+            Metrics::inc(&self.metrics.errors);
+            return resp;
+        }
+        self.error_resp(format!(
+            "write failed on all {} replica(s) ({transport} transport error(s), rest shedding)",
+            targets.len()
+        ))
+    }
+
+    /// Fanned-out read: merge candidate unions over every backend that
+    /// answered; any one healthy backend keeps queries succeeding.
+    fn route_read(&self, req: &Request) -> Response {
+        let scheme = op_scheme(req);
+        let targets = self.eligible(scheme);
+        if targets.is_empty() {
+            return self.error_resp(format!("no backend serves scheme '{scheme}'"));
+        }
+        let mut ids_all: Vec<u32> = Vec::new();
+        let mut answered = 0usize;
+        let mut app_error: Option<Response> = None;
+        for (_, result) in self.fanout_call(&targets, req) {
+            match result {
+                Ok(Response::Candidates { ids }) => {
+                    answered += 1;
+                    ids_all.extend(ids);
+                }
+                Ok(Response::Error { message }) => {
+                    app_error.get_or_insert(Response::Error { message });
+                }
+                // A non-candidates success (protocol drift) — treat like
+                // an app error rather than fold garbage into the merge.
+                Ok(_) => {
+                    app_error.get_or_insert(self.plain_error(
+                        "backend answered a query with a non-candidates response",
+                    ));
+                }
+                Err(_) => {}
+            }
+        }
+        if answered > 0 {
+            // The shard-merge invariant, across hosts: sorted-dedup union
+            // is independent of backend count and replication layout.
+            ids_all.sort_unstable();
+            ids_all.dedup();
+            return Response::Candidates { ids: ids_all };
+        }
+        match app_error {
+            Some(resp) => {
+                Metrics::inc(&self.metrics.errors);
+                resp
+            }
+            None => self.error_resp(format!("query failed on all backends for scheme '{scheme}'")),
+        }
+    }
+
+    fn error_resp(&self, message: String) -> Response {
+        Metrics::inc(&self.metrics.errors);
+        Response::Error { message }
+    }
+
+    /// An error response *without* bumping the error counter (used where
+    /// the caller decides whether it becomes the final answer).
+    fn plain_error(&self, message: &str) -> Response {
+        Response::Error {
+            message: message.to_string(),
+        }
+    }
+
+    /// The router's `stats` payload: cluster counters + per-backend
+    /// health read under the health locks.
+    pub fn stats_json(&self) -> crate::util::json::Json {
+        let health: Vec<(&'static str, u64, u64)> = self
+            .backends
+            .iter()
+            .map(|b| {
+                let h = lock_unpoisoned(&b.health);
+                (h.state().label(), h.epoch(), h.cooloff_trips())
+            })
+            .collect();
+        self.metrics.snapshot(&health)
+    }
+
+    /// Test/introspection handle: the metrics block.
+    pub fn metrics(&self) -> &ClusterMetrics {
+        &self.metrics
+    }
+
+    /// Test/introspection handle: replica routing (exposed so property
+    /// tests can assert determinism and replica-count clamping).
+    pub fn route_of(&self, scheme: &str, id: u32) -> Vec<usize> {
+        self.replicas_for(scheme, id)
+    }
+}
+
+impl Handler for ClusterRouter {
+    fn handle(&self, req: Request) -> Response {
+        let t = Instant::now();
+        match req {
+            Request::Stats => Response::Stats {
+                json: self.stats_json(),
+            },
+            Request::SaveIndex { .. } | Request::LoadIndex { .. } => self.plain_error(
+                "save_index/load_index are not routed — snapshot backends directly",
+            ),
+            req @ (Request::LshInsert { .. } | Request::IndexDoc { .. }) => {
+                Metrics::inc(&self.metrics.inserts);
+                let id = match &req {
+                    Request::LshInsert { id, .. } | Request::IndexDoc { id, .. } => *id,
+                    _ => unreachable!(),
+                };
+                let resp = self.route_write(id, &req);
+                if let Some(shadow) = &self.shadow {
+                    shadow.mirror_write(req, &resp, t.elapsed().as_micros() as u64);
+                }
+                resp
+            }
+            req @ (Request::LshQuery { .. } | Request::QueryDoc { .. }) => {
+                Metrics::inc(&self.metrics.queries);
+                let resp = self.route_read(&req);
+                if let Some(shadow) = &self.shadow {
+                    shadow.mirror_read(req, &resp, t.elapsed().as_micros() as u64);
+                }
+                resp
+            }
+            req @ Request::Estimate { .. } => {
+                Metrics::inc(&self.metrics.estimates);
+                let (a, scheme) = match &req {
+                    Request::Estimate { a, scheme, .. } => {
+                        (*a, scheme.as_deref().unwrap_or(DEFAULT_SCHEME).to_string())
+                    }
+                    _ => unreachable!(),
+                };
+                // Estimates read stored sketches, so only `a`'s replicas
+                // can answer; `route_one` retries past "unknown id" app
+                // errors in case a replica missed one of the two inserts.
+                let targets = self.replicas_for(&scheme, a);
+                let resp = self.route_one(&targets, &req);
+                if let Some(shadow) = &self.shadow {
+                    shadow.mirror_read(req, &resp, t.elapsed().as_micros() as u64);
+                }
+                resp
+            }
+            req @ (Request::Sketch { .. } | Request::OphSketch { .. } | Request::FhTransform { .. }) => {
+                Metrics::inc(&self.metrics.sketches);
+                let targets = self.eligible(op_scheme(&req));
+                let resp = self.route_one(&targets, &req);
+                if let (Some(shadow), Request::Sketch { .. }) = (&self.shadow, &req) {
+                    shadow.mirror_read(req, &resp, t.elapsed().as_micros() as u64);
+                }
+                resp
+            }
+        }
+    }
+}
+
+/// The scheme an op addresses (absent = the default scheme, matching the
+/// registry's resolution).
+fn op_scheme(req: &Request) -> &str {
+    match req {
+        Request::Sketch { scheme, .. }
+        | Request::LshInsert { scheme, .. }
+        | Request::LshQuery { scheme, .. }
+        | Request::Estimate { scheme, .. }
+        | Request::IndexDoc { scheme, .. }
+        | Request::QueryDoc { scheme, .. }
+        | Request::SaveIndex { scheme, .. }
+        | Request::LoadIndex { scheme, .. } => scheme.as_deref().unwrap_or(DEFAULT_SCHEME),
+        Request::FhTransform { .. } | Request::OphSketch { .. } | Request::Stats => DEFAULT_SCHEME,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::config::Config;
+
+    fn router(text: &str) -> ClusterRouter {
+        let cluster = ClusterConfig::from_config(&Config::parse(text).unwrap()).unwrap();
+        ClusterRouter::new(cluster, &CoordinatorConfig::default()).unwrap()
+    }
+
+    const THREE: &str = "[[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:1\"\n\n[[backends]]\nname = \"b1\"\naddr = \"127.0.0.1:2\"\n\n[[backends]]\nname = \"b2\"\naddr = \"127.0.0.1:3\"\n";
+
+    #[test]
+    fn routing_is_deterministic_and_replicated() {
+        let r1 = router(THREE);
+        let r2 = router(THREE);
+        for id in 0..500u32 {
+            let route = r1.route_of(DEFAULT_SCHEME, id);
+            assert_eq!(route, r2.route_of(DEFAULT_SCHEME, id), "id {id}");
+            assert_eq!(route.len(), 2, "replicas honoured for id {id}");
+            assert_ne!(route[0], route[1], "replicas are distinct backends");
+        }
+        // All backends get primary traffic somewhere.
+        let mut primaries = std::collections::HashSet::new();
+        for id in 0..500u32 {
+            primaries.insert(r1.route_of(DEFAULT_SCHEME, id)[0]);
+        }
+        assert_eq!(primaries.len(), 3);
+    }
+
+    #[test]
+    fn replicas_clamp_to_eligible_backends() {
+        // replicas = 5 over 3 backends: every id routes to all 3.
+        let text = format!("[cluster]\nreplicas = 5\n\n{THREE}");
+        let r = router(&text);
+        for id in 0..50u32 {
+            assert_eq!(r.route_of(DEFAULT_SCHEME, id).len(), 3);
+        }
+    }
+
+    #[test]
+    fn scheme_filter_and_weight_shape_routing() {
+        let text = "[cluster]\nreplicas = 1\nshadow_backend = \"cand\"\n\n[[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:1\"\nweight = 3\n\n[[backends]]\nname = \"b1\"\naddr = \"127.0.0.1:2\"\nschemes = [\"fast\"]\n\n[[backends]]\nname = \"cand\"\naddr = \"127.0.0.1:3\"\nweight = 0\n";
+        let r = router(text);
+        // b1 only serves "fast"; default-scheme ids all land on b0.
+        for id in 0..100u32 {
+            assert_eq!(r.route_of(DEFAULT_SCHEME, id), vec![0], "id {id}");
+        }
+        // "fast" ops may land on either routable backend, never the
+        // weight-0 shadow.
+        let mut seen = std::collections::HashSet::new();
+        for id in 0..200u32 {
+            let route = r.route_of("fast", id);
+            assert_eq!(route.len(), 1);
+            assert_ne!(route[0], 2, "weight-0 backend took primary traffic");
+            seen.insert(route[0]);
+        }
+        assert_eq!(seen.len(), 2, "weighted ring still reaches both");
+        // No backend serves an unknown scheme once filters apply.
+        assert!(r.route_of("nope", 7).is_empty());
+        assert!(r.eligible("nope").is_empty());
+    }
+
+    #[test]
+    fn salt_decorrelates_cluster_and_shard_routing() {
+        // Same family+seed, different salts: the cluster route must not
+        // be a function of the shard route. With 2 targets each, the
+        // agreement rate of independent streams is ~1/2 — assert it is
+        // nowhere near 1.
+        let text = "[[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:1\"\n\n[[backends]]\nname = \"b1\"\naddr = \"127.0.0.1:2\"\n";
+        let cluster = ClusterConfig::from_config(&Config::parse(text).unwrap()).unwrap();
+        let cluster = ClusterConfig {
+            replicas: 1,
+            ..cluster
+        };
+        let coord = CoordinatorConfig::default();
+        let r = ClusterRouter::new(cluster, &coord).unwrap();
+        let lsh = coord.lsh_spec();
+        let shard_route = lsh
+            .family
+            .build(lsh.seed ^ crate::lsh::sharded::SHARD_ROUTE_SALT);
+        let agree = (0..2000u32)
+            .filter(|&id| {
+                r.route_of(DEFAULT_SCHEME, id)[0] == (shard_route.hash(id) as usize % 2)
+            })
+            .count();
+        assert!(
+            (600..1400).contains(&agree),
+            "cluster and shard routes look correlated: {agree}/2000 agree"
+        );
+    }
+}

@@ -1,0 +1,228 @@
+//! Shadow routing: mirror live traffic to a candidate backend/scheme and
+//! diff the answers — the paper's hash-family comparison as a service.
+//!
+//! The mirror never blocks the primary response: the router hands the
+//! already-answered op to a bounded queue and a dedicated mirror thread
+//! replays it against the shadow backend, comparing responses and
+//! accumulating latency deltas in [`ShadowCounters`]. A full queue sheds
+//! (counted — divergence numbers are only meaningful while `shed == 0`,
+//! because a shed *write* leaves the shadow's corpus behind).
+//!
+//! **Writes always mirror; reads are sampled.** `shadow_fraction` only
+//! samples read ops: if writes were sampled too, the shadow would hold a
+//! different corpus and every comparison would diverge for reasons that
+//! have nothing to do with the scheme under test. Mirroring all writes
+//! keeps the corpora identical, so a divergence is exactly what the
+//! experiment is after: the two schemes answering differently on the
+//! same data. The FIFO queue preserves the router's submission order,
+//! so a mirrored read replays after the writes it followed.
+//!
+//! Sampling is a deterministic accumulator (mirror read *n* when the
+//! mirrored count falls behind `fraction × seen`), not a coin flip —
+//! tests can predict exactly which ops mirror.
+
+use super::client::BackendPool;
+use super::metrics::ShadowCounters;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{Request, Response};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One mirrored op: the (scheme-rewritten) request plus the primary's
+/// answer and latency for the diff.
+struct MirrorJob {
+    req: Request,
+    primary: Response,
+    primary_us: u64,
+}
+
+/// Deterministic read-sampling accumulator.
+#[derive(Debug, Default)]
+struct Sampler {
+    seen: u64,
+    mirrored: u64,
+}
+
+impl Sampler {
+    /// Admit read #`seen+1` iff the mirrored count has fallen behind the
+    /// target rate. Fraction 0.5 mirrors reads 2, 4, 6, …; fraction 1.0
+    /// mirrors every read; fraction 0.0 none.
+    fn admit(&mut self, fraction: f64) -> bool {
+        self.seen += 1;
+        let target = (self.seen as f64 * fraction).floor() as u64;
+        if self.mirrored < target {
+            self.mirrored += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// The shadow mirror: bounded queue + one replay thread.
+pub struct ShadowRouter {
+    tx: Option<SyncSender<MirrorJob>>,
+    handle: Option<JoinHandle<()>>,
+    fraction: f64,
+    scheme: Option<String>,
+    sampler: Mutex<Sampler>,
+    counters: Arc<ShadowCounters>,
+}
+
+impl ShadowRouter {
+    /// Spawn the mirror thread against `addr`. `scheme` rewrites the
+    /// scheme on every mirrored op (A/B across schemes); `None` keeps
+    /// the op's own scheme (A/B across backends).
+    pub fn spawn(
+        addr: &str,
+        fraction: f64,
+        scheme: Option<String>,
+        queue_cap: usize,
+        read_timeout: Option<Duration>,
+        counters: Arc<ShadowCounters>,
+    ) -> ShadowRouter {
+        let (tx, rx) = sync_channel(queue_cap.max(1));
+        let pool = BackendPool::new(addr, read_timeout);
+        let thread_counters = Arc::clone(&counters);
+        let handle = std::thread::Builder::new()
+            .name("mixtab-shadow".into())
+            .spawn(move || mirror_loop(rx, pool, thread_counters))
+            .expect("spawn shadow mirror thread");
+        ShadowRouter {
+            tx: Some(tx),
+            handle: Some(handle),
+            fraction,
+            scheme,
+            sampler: Mutex::new(Sampler::default()),
+            counters,
+        }
+    }
+
+    /// Mirror a write op (always, unsampled — see module docs).
+    pub fn mirror_write(&self, req: Request, primary: &Response, primary_us: u64) {
+        self.submit(req, primary, primary_us);
+    }
+
+    /// Mirror a read op at the configured fraction.
+    pub fn mirror_read(&self, req: Request, primary: &Response, primary_us: u64) {
+        let admitted = crate::util::sync::lock_unpoisoned(&self.sampler).admit(self.fraction);
+        if admitted {
+            self.submit(req, primary, primary_us);
+        }
+    }
+
+    fn submit(&self, req: Request, primary: &Response, primary_us: u64) {
+        let job = MirrorJob {
+            req: rewrite_scheme(req, self.scheme.as_deref()),
+            primary: primary.clone(),
+            primary_us,
+        };
+        match self.tx.as_ref().expect("mirror running").try_send(job) {
+            Ok(()) => Metrics::inc(&self.counters.mirrored),
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                Metrics::inc(&self.counters.shed);
+            }
+        }
+    }
+}
+
+impl Drop for ShadowRouter {
+    /// Disconnect the queue and join the mirror thread — accepted jobs
+    /// still replay (the loop drains the channel before exiting), so a
+    /// shutdown right after a burst loses nothing it admitted.
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Replay loop: runs until every sender is gone and the queue is drained.
+fn mirror_loop(rx: Receiver<MirrorJob>, pool: BackendPool, counters: Arc<ShadowCounters>) {
+    while let Ok(job) = rx.recv() {
+        let t = Instant::now();
+        match pool.call(&job.req) {
+            Ok(shadow) => {
+                let shadow_us = t.elapsed().as_micros() as u64;
+                Metrics::inc(&counters.compared);
+                Metrics::add(&counters.primary_lat_us, job.primary_us);
+                Metrics::add(&counters.shadow_lat_us, shadow_us);
+                if shadow != job.primary {
+                    Metrics::inc(&counters.divergence);
+                }
+            }
+            Err(_) => {
+                // Transport failure to the shadow: not a divergence (the
+                // schemes never got to disagree), just a mirror error.
+                Metrics::inc(&counters.errors);
+            }
+        }
+    }
+}
+
+/// Rewrite the scheme selector on ops that carry one; other ops pass
+/// through untouched.
+fn rewrite_scheme(req: Request, scheme: Option<&str>) -> Request {
+    let Some(name) = scheme else {
+        return req;
+    };
+    let s = Some(name.to_string());
+    match req {
+        Request::Sketch { set, spec, .. } => Request::Sketch {
+            set,
+            spec,
+            scheme: s,
+        },
+        Request::LshInsert { id, set, .. } => Request::LshInsert { id, set, scheme: s },
+        Request::LshQuery { set, .. } => Request::LshQuery { set, scheme: s },
+        Request::Estimate { a, b, .. } => Request::Estimate { a, b, scheme: s },
+        Request::IndexDoc { id, text, .. } => Request::IndexDoc { id, text, scheme: s },
+        Request::QueryDoc { text, .. } => Request::QueryDoc { text, scheme: s },
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_is_deterministic() {
+        let mut s = Sampler::default();
+        let pattern: Vec<bool> = (0..8).map(|_| s.admit(0.5)).collect();
+        assert_eq!(
+            pattern,
+            vec![false, true, false, true, false, true, false, true],
+            "fraction 0.5 mirrors every second read"
+        );
+        let mut all = Sampler::default();
+        assert!((0..10).all(|_| all.admit(1.0)), "fraction 1.0 mirrors all");
+        let mut none = Sampler::default();
+        assert!((0..10).all(|_| !none.admit(0.0)), "fraction 0.0 mirrors none");
+        // A quarter: 1 in 4, deterministic positions.
+        let mut q = Sampler::default();
+        let n = (0..100).filter(|_| q.admit(0.25)).count();
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn rewrite_scheme_touches_only_scheme_ops() {
+        let q = Request::LshQuery {
+            set: vec![1, 2],
+            scheme: None,
+        };
+        assert_eq!(
+            rewrite_scheme(q.clone(), Some("cand")),
+            Request::LshQuery {
+                set: vec![1, 2],
+                scheme: Some("cand".into()),
+            }
+        );
+        assert_eq!(rewrite_scheme(q.clone(), None), q);
+        assert_eq!(rewrite_scheme(Request::Stats, Some("cand")), Request::Stats);
+    }
+}

@@ -20,6 +20,8 @@
 //!   backpressure, and a global connection cap.
 //! * [`metrics`] — counters (global, per-scheme, per-shard) and latency
 //!   quantiles.
+//! * [`cluster`] — the cross-host tier: router mode (replicated routing
+//!   over remote backends, health-gated fan-out, shadow traffic).
 
 pub mod config;
 pub mod request;
@@ -28,6 +30,7 @@ pub mod registry;
 pub mod service;
 pub mod server;
 pub mod metrics;
+pub mod cluster;
 
 pub use config::{CoordinatorConfig, SchemeConfig};
 pub use registry::{Scheme, SchemeRegistry};

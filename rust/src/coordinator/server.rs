@@ -478,7 +478,8 @@ fn run_guarded(handler: &dyn Handler, req: Request) -> Response {
 }
 
 /// The batchable subset: scheme-routed `sketch` (no ad-hoc spec),
-/// `insert`, `query`. Everything else takes the direct worker path.
+/// `insert`, `query`, and the doc ops (shingled here, before enqueue).
+/// Everything else takes the direct worker path.
 fn to_batch_op(req: Request) -> std::result::Result<(Option<String>, BatchOp), Request> {
     match req {
         Request::Sketch {
@@ -488,6 +489,24 @@ fn to_batch_op(req: Request) -> std::result::Result<(Option<String>, BatchOp), R
         } => Ok((scheme, BatchOp::Sketch { set })),
         Request::LshInsert { id, set, scheme } => Ok((scheme, BatchOp::Insert { id, set })),
         Request::LshQuery { set, scheme } => Ok((scheme, BatchOp::Query { set })),
+        // Doc ops shingle *before* enqueue, so they coalesce into the same
+        // insert/query batches as raw-set ops. Tokenization is pure CPU on
+        // the event-loop-adjacent path; the direct path uses the identical
+        // `DOC_SHINGLE_W` shingler, keeping both lanes bit-identical (the
+        // batching harness asserts this).
+        Request::IndexDoc { id, text, scheme } => Ok((
+            scheme,
+            BatchOp::Insert {
+                id,
+                set: crate::data::shingle::byte_shingles(&text, crate::coordinator::service::DOC_SHINGLE_W),
+            },
+        )),
+        Request::QueryDoc { text, scheme } => Ok((
+            scheme,
+            BatchOp::Query {
+                set: crate::data::shingle::byte_shingles(&text, crate::coordinator::service::DOC_SHINGLE_W),
+            },
+        )),
         other => Err(other),
     }
 }
@@ -911,6 +930,7 @@ pub struct PipelinedClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     next_rid: u64,
+    read_timeout: Option<Duration>,
 }
 
 impl PipelinedClient {
@@ -921,7 +941,33 @@ impl PipelinedClient {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
             next_rid: 0,
+            read_timeout: None,
         })
+    }
+
+    /// Connect with a read deadline already applied (see
+    /// [`Self::set_read_timeout`]).
+    pub fn connect_with_timeout(
+        addr: std::net::SocketAddr,
+        timeout: Option<Duration>,
+    ) -> Result<PipelinedClient> {
+        let mut client = Self::connect(addr)?;
+        client.set_read_timeout(timeout)?;
+        Ok(client)
+    }
+
+    /// Bound how long [`Self::recv`] waits for a response line (`None` =
+    /// block forever, the default). On expiry `recv` returns an error that
+    /// [`is_timeout`] classifies — a hung backend becomes a clean, typed
+    /// failure instead of a caller blocked forever. A timed-out connection
+    /// may hold a partial response line and MUST be dropped, not reused.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.reader
+            .get_ref()
+            .set_read_timeout(timeout)
+            .context("set read timeout")?;
+        self.read_timeout = timeout;
+        Ok(())
     }
 
     /// Queue one tagged request (buffered; flushed by [`Self::recv`] or
@@ -952,12 +998,35 @@ impl PipelinedClient {
     pub fn recv(&mut self) -> Result<(Option<u64>, Response)> {
         self.flush()?;
         let mut line = String::new();
-        let n = self.reader.read_line(&mut line).context("read response")?;
+        let n = match self.reader.read_line(&mut line) {
+            Ok(n) => n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                let waited = self
+                    .read_timeout
+                    .map(|d| format!("{}ms", d.as_millis()))
+                    .unwrap_or_else(|| "deadline".into());
+                return Err(crate::util::error::Error::new(e)
+                    .context(format!("read timeout: no response within {waited}")));
+            }
+            Err(e) => return Err(crate::util::error::Error::new(e).context("read response")),
+        };
         if n == 0 {
             crate::bail!("connection closed by server");
         }
         Response::from_json_line_tagged(line.trim_end())
     }
+}
+
+/// True when `err` is a read-deadline expiry from
+/// [`PipelinedClient::recv`] (a configured timeout fired), as opposed to
+/// a closed connection or a protocol error. The health tracker uses this
+/// to tell "peer is hung" from "peer refused us".
+pub fn is_timeout(err: &crate::util::error::Error) -> bool {
+    err.chain().any(|cause| {
+        cause
+            .downcast_ref::<std::io::Error>()
+            .is_some_and(|io| matches!(io.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut))
+    })
 }
 
 #[cfg(test)]

@@ -37,6 +37,12 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+/// Byte-shingle width for the `index_doc`/`query_doc` wire ops. One
+/// constant shared by the direct path and the pre-enqueue shingling in
+/// the op batcher — the two paths must tokenize identically for the
+/// batched lane to stay bit-identical.
+pub const DOC_SHINGLE_W: usize = 5;
+
 /// The coordinator service.
 ///
 /// Every sketcher in here is built through the [`SketchSpec`] registry
@@ -273,11 +279,11 @@ impl Coordinator {
                 }
             }
             Request::IndexDoc { id, text, scheme } => {
-                let set = crate::data::shingle::byte_shingles(&text, 5);
+                let set = crate::data::shingle::byte_shingles(&text, DOC_SHINGLE_W);
                 self.handle_insert(id, set, scheme.as_deref())
             }
             Request::QueryDoc { text, scheme } => {
-                let set = crate::data::shingle::byte_shingles(&text, 5);
+                let set = crate::data::shingle::byte_shingles(&text, DOC_SHINGLE_W);
                 self.handle_query(&set, scheme.as_deref())
             }
             Request::SaveIndex { path, scheme } => {

@@ -22,6 +22,7 @@
 pub mod corpus;
 pub mod driver;
 pub mod oracle;
+pub mod plot;
 pub mod report;
 pub mod store;
 
@@ -203,6 +204,17 @@ impl LoadtestConfig {
 /// Run one loadtest end to end against an in-process server and return
 /// the finished row (not yet persisted — the CLI decides where it goes).
 pub fn run(cfg: &LoadtestConfig) -> Result<store::RunRecord> {
+    run_at(cfg, None)
+}
+
+/// Like [`run`], but `external` points the phases at an already-running
+/// server (plain or router) instead of spawning one in-process. The
+/// workload, oracle and scoring are identical — this is how the harness
+/// measures a cluster: point it at the router and the row records the
+/// cluster's end-to-end recall/QPS. Server-side counters come from the
+/// target's `stats` op (the router snapshot exposes the same top-level
+/// keys as the single-host one).
+pub fn run_at(cfg: &LoadtestConfig, external: Option<SocketAddr>) -> Result<store::RunRecord> {
     crate::ensure!(cfg.sets >= 1 && cfg.queries >= 1, "empty loadtest corpus");
     crate::ensure!(
         cfg.k < cfg.cluster_size,
@@ -225,10 +237,19 @@ pub fn run(cfg: &LoadtestConfig) -> Result<store::RunRecord> {
         corpus.docs
     );
 
-    let coordinator = Arc::new(Coordinator::new(cfg.coordinator_config()));
-    let metrics = Arc::clone(&coordinator.metrics);
-    let server = Server::start(coordinator, "127.0.0.1:0")?;
-    let addr: SocketAddr = server.addr();
+    let (server, metrics, addr) = match external {
+        Some(addr) => {
+            println!("loadtest: driving external server at {addr}");
+            (None, None, addr)
+        }
+        None => {
+            let coordinator = Arc::new(Coordinator::new(cfg.coordinator_config()));
+            let metrics = Arc::clone(&coordinator.metrics);
+            let server = Server::start(coordinator, "127.0.0.1:0")?;
+            let addr: SocketAddr = server.addr();
+            (Some(server), Some(metrics), addr)
+        }
+    };
 
     // Phase 1: load. Every corpus set inserted under its index as id.
     let sets_ref = &corpus.sets;
@@ -285,7 +306,19 @@ pub fn run(cfg: &LoadtestConfig) -> Result<store::RunRecord> {
         cfg.k, recall.mean_recall, recall.evaluated, recall.skipped
     );
 
-    server.stop();
+    // Server-side counters: straight off the metrics block in-process,
+    // via the wire `stats` op when driving an external server.
+    let (server_inserts, server_queries, server_errors) = match &metrics {
+        Some(m) => (
+            m.lsh_inserts.load(Ordering::Relaxed),
+            m.lsh_queries.load(Ordering::Relaxed),
+            m.errors.load(Ordering::Relaxed),
+        ),
+        None => remote_counters(addr)?,
+    };
+    if let Some(server) = server {
+        server.stop();
+    }
 
     let (p50, p99, p999) = mixed.latency_us.tail_quantiles();
     Ok(store::RunRecord {
@@ -312,8 +345,26 @@ pub fn run(cfg: &LoadtestConfig) -> Result<store::RunRecord> {
         p99_us: p99,
         p999_us: p999,
         peak_rss_mb: report::peak_rss_bytes() as f64 / (1024.0 * 1024.0),
-        server_inserts: metrics.lsh_inserts.load(Ordering::Relaxed),
-        server_queries: metrics.lsh_queries.load(Ordering::Relaxed),
-        server_errors: metrics.errors.load(Ordering::Relaxed),
+        server_inserts,
+        server_queries,
+        server_errors,
     })
+}
+
+/// Fetch `(lsh_inserts, lsh_queries, errors)` from an external server's
+/// `stats` op. Both the single-host snapshot and the router snapshot
+/// expose these as top-level keys; anything absent reads as 0.
+fn remote_counters(addr: SocketAddr) -> Result<(u64, u64, u64)> {
+    let mut conn = crate::coordinator::server::PipelinedClient::connect(addr)?;
+    let resp = crate::coordinator::cluster::client::roundtrip(&mut conn, &Request::Stats)?;
+    let crate::coordinator::request::Response::Stats { json } = resp else {
+        crate::bail!("stats op answered with a non-stats response");
+    };
+    let count = |key: &str| {
+        json.get(key)
+            .and_then(|v| v.as_i64())
+            .map(|n| n.max(0) as u64)
+            .unwrap_or(0)
+    };
+    Ok((count("lsh_inserts"), count("lsh_queries"), count("errors")))
 }

@@ -1,0 +1,273 @@
+//! `mixtab loadtest --plot`: first-party SVG rendering of the results
+//! store — the perf trajectory of record as a picture.
+//!
+//! Two stacked panels over run index (oldest → newest, the store's
+//! order): throughput (load-phase and mixed-phase QPS) on top, recall@k
+//! below on a fixed 0–1 axis so regressions read as absolute drops, not
+//! rescaled wiggles. Pure string assembly — no graphics dependency, and
+//! the output is deterministic in the input rows, so tests can assert on
+//! structure.
+
+use super::store::RunRecord;
+use crate::util::error::{Context, Result};
+
+/// Canvas and panel geometry (pixels).
+const WIDTH: usize = 900;
+const PANEL_H: usize = 200;
+const GAP: usize = 46;
+const MARGIN_L: usize = 72;
+const MARGIN_R: usize = 24;
+const MARGIN_T: usize = 34;
+const MARGIN_B: usize = 40;
+
+const HEIGHT: usize = MARGIN_T + PANEL_H + GAP + PANEL_H + MARGIN_B;
+
+/// Series colours: load QPS, mixed QPS, recall.
+const C_LOAD: &str = "#1f77b4";
+const C_MIXED: &str = "#d62728";
+const C_RECALL: &str = "#2ca02c";
+
+/// One panel's plotting area.
+struct Panel {
+    top: usize,
+    y_min: f64,
+    y_max: f64,
+}
+
+impl Panel {
+    fn x(&self, i: usize, n: usize) -> f64 {
+        let usable = (WIDTH - MARGIN_L - MARGIN_R) as f64;
+        // A single run plots mid-panel rather than dividing by zero.
+        let frac = if n <= 1 {
+            0.5
+        } else {
+            i as f64 / (n - 1) as f64
+        };
+        MARGIN_L as f64 + frac * usable
+    }
+
+    fn y(&self, v: f64) -> f64 {
+        let span = (self.y_max - self.y_min).max(f64::MIN_POSITIVE);
+        let frac = ((v - self.y_min) / span).clamp(0.0, 1.0);
+        self.top as f64 + (1.0 - frac) * PANEL_H as f64
+    }
+}
+
+/// Render the store's rows (oldest first, as [`super::store::load`]
+/// returns them) to a standalone SVG document.
+pub fn render(records: &[RunRecord]) -> Result<String> {
+    crate::ensure!(
+        !records.is_empty(),
+        "nothing to plot: the results store has no rows"
+    );
+    let n = records.len();
+
+    let qps_max = records
+        .iter()
+        .flat_map(|r| [r.load_qps, r.mixed_qps])
+        .fold(0.0f64, f64::max)
+        .max(1.0);
+    let qps = Panel {
+        top: MARGIN_T,
+        y_min: 0.0,
+        y_max: qps_max * 1.08,
+    };
+    let recall = Panel {
+        top: MARGIN_T + PANEL_H + GAP,
+        y_min: 0.0,
+        y_max: 1.0,
+    };
+
+    let mut svg = String::with_capacity(8192);
+    svg.push_str(&format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{WIDTH}\" height=\"{HEIGHT}\" \
+         viewBox=\"0 0 {WIDTH} {HEIGHT}\" font-family=\"monospace\" font-size=\"12\">\n"
+    ));
+    svg.push_str("<rect width=\"100%\" height=\"100%\" fill=\"white\"/>\n");
+
+    panel_frame(&mut svg, &qps, "throughput (ops/s)", &fmt_qps);
+    panel_frame(&mut svg, &recall, "recall@k", &|v| format!("{v:.2}"));
+
+    polyline(&mut svg, &qps, records, n, C_LOAD, |r| r.load_qps);
+    polyline(&mut svg, &qps, records, n, C_MIXED, |r| r.mixed_qps);
+    polyline(&mut svg, &recall, records, n, C_RECALL, |r| r.recall_at_k);
+
+    // X labels: run index, thinned to at most ~12 ticks.
+    let step = (n / 12).max(1);
+    let label_y = recall.top + PANEL_H + 18;
+    for i in (0..n).step_by(step) {
+        let x = qps.x(i, n);
+        svg.push_str(&format!(
+            "<text x=\"{x:.1}\" y=\"{label_y}\" text-anchor=\"middle\" fill=\"#444\">{i}</text>\n"
+        ));
+    }
+    svg.push_str(&format!(
+        "<text x=\"{}\" y=\"{}\" text-anchor=\"middle\" fill=\"#444\">run (oldest \u{2192} newest; \
+         last: {})</text>\n",
+        WIDTH / 2,
+        label_y + 18,
+        records[n - 1].git_sha
+    ));
+
+    // Legend, top-right of the QPS panel.
+    let lx = WIDTH - MARGIN_R - 170;
+    for (j, (color, name)) in [(C_LOAD, "load qps"), (C_MIXED, "mixed qps")]
+        .iter()
+        .enumerate()
+    {
+        let y = MARGIN_T + 14 + j * 16;
+        svg.push_str(&format!(
+            "<rect x=\"{lx}\" y=\"{}\" width=\"10\" height=\"10\" fill=\"{color}\"/>\n\
+             <text x=\"{}\" y=\"{}\" fill=\"#222\">{name}</text>\n",
+            y - 9,
+            lx + 16,
+            y
+        ));
+    }
+
+    svg.push_str("</svg>\n");
+    Ok(svg)
+}
+
+/// Render and write to `path`.
+pub fn write_svg(path: &str, records: &[RunRecord]) -> Result<()> {
+    let svg = render(records)?;
+    std::fs::write(path, svg).with_context(|| format!("write plot '{path}'"))
+}
+
+fn fmt_qps(v: f64) -> String {
+    if v >= 1e6 {
+        format!("{:.1}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.0}k", v / 1e3)
+    } else {
+        format!("{v:.0}")
+    }
+}
+
+/// Panel chrome: title, border, horizontal gridlines with y labels.
+fn panel_frame(svg: &mut String, p: &Panel, title: &str, fmt: &dyn Fn(f64) -> String) {
+    svg.push_str(&format!(
+        "<text x=\"{MARGIN_L}\" y=\"{}\" fill=\"#000\" font-weight=\"bold\">{title}</text>\n",
+        p.top - 8
+    ));
+    svg.push_str(&format!(
+        "<rect x=\"{MARGIN_L}\" y=\"{}\" width=\"{}\" height=\"{PANEL_H}\" fill=\"none\" \
+         stroke=\"#999\"/>\n",
+        p.top,
+        WIDTH - MARGIN_L - MARGIN_R
+    ));
+    for tick in 0..=4 {
+        let v = p.y_min + (p.y_max - p.y_min) * tick as f64 / 4.0;
+        let y = p.y(v);
+        if tick > 0 && tick < 4 {
+            svg.push_str(&format!(
+                "<line x1=\"{MARGIN_L}\" y1=\"{y:.1}\" x2=\"{}\" y2=\"{y:.1}\" \
+                 stroke=\"#e0e0e0\"/>\n",
+                WIDTH - MARGIN_R
+            ));
+        }
+        svg.push_str(&format!(
+            "<text x=\"{}\" y=\"{:.1}\" text-anchor=\"end\" fill=\"#444\">{}</text>\n",
+            MARGIN_L - 6,
+            y + 4.0,
+            fmt(v)
+        ));
+    }
+}
+
+/// One series: a polyline through every run plus a dot per point (a
+/// single-run store still shows its dot).
+fn polyline(
+    svg: &mut String,
+    p: &Panel,
+    records: &[RunRecord],
+    n: usize,
+    color: &str,
+    value: impl Fn(&RunRecord) -> f64,
+) {
+    let points: Vec<String> = records
+        .iter()
+        .enumerate()
+        .map(|(i, r)| format!("{:.1},{:.1}", p.x(i, n), p.y(value(r))))
+        .collect();
+    if n > 1 {
+        svg.push_str(&format!(
+            "<polyline points=\"{}\" fill=\"none\" stroke=\"{color}\" stroke-width=\"1.5\"/>\n",
+            points.join(" ")
+        ));
+    }
+    for pt in &points {
+        let (x, y) = pt.split_once(',').expect("formatted above");
+        svg.push_str(&format!(
+            "<circle cx=\"{x}\" cy=\"{y}\" r=\"2.5\" fill=\"{color}\"/>\n"
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadtest::store;
+
+    fn row(i: u64, load_qps: f64, mixed_qps: f64, recall: f64) -> RunRecord {
+        RunRecord {
+            schema: store::LOADTEST_SCHEMA.to_string(),
+            git_sha: format!("sha{i}"),
+            unix_ts: 1_700_000_000 + i,
+            quick: true,
+            config: "spec=x".into(),
+            sets: 100,
+            docs: 10,
+            queries: 8,
+            k: 5,
+            clients: 2,
+            window: 4,
+            mix_ops: 50,
+            query_frac: 0.5,
+            load_qps,
+            mixed_qps,
+            recall_at_k: recall,
+            p50_us: 10.0,
+            p99_us: 20.0,
+            p999_us: 30.0,
+            peak_rss_mb: 64.0,
+            server_inserts: 100,
+            server_queries: 8,
+            server_errors: 0,
+        }
+    }
+
+    #[test]
+    fn empty_store_is_an_error() {
+        assert!(render(&[]).is_err());
+    }
+
+    #[test]
+    fn renders_trajectory() {
+        let rows: Vec<RunRecord> = (0..5)
+            .map(|i| row(i, 1000.0 + i as f64 * 100.0, 500.0, 0.9))
+            .collect();
+        let svg = render(&rows).unwrap();
+        assert!(svg.starts_with("<svg "));
+        assert!(svg.trim_end().ends_with("</svg>"));
+        assert_eq!(svg.matches("<polyline").count(), 3, "load, mixed, recall");
+        // One dot per run per series.
+        assert_eq!(svg.matches("<circle").count(), 15);
+        assert!(svg.contains("recall@k"));
+        assert!(svg.contains("sha4"), "newest sha labels the x axis");
+    }
+
+    #[test]
+    fn single_run_renders_dots_without_lines() {
+        let svg = render(&[row(0, 2000.0, 900.0, 0.8)]).unwrap();
+        assert_eq!(svg.matches("<polyline").count(), 0);
+        assert_eq!(svg.matches("<circle").count(), 3);
+    }
+
+    #[test]
+    fn deterministic_output() {
+        let rows = vec![row(0, 1.0, 2.0, 0.5), row(1, 3.0, 4.0, 0.6)];
+        assert_eq!(render(&rows).unwrap(), render(&rows).unwrap());
+    }
+}

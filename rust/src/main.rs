@@ -4,9 +4,11 @@
 //! mixtab exp <id|all> [--seed N] [--scale F] [--out DIR] [--data-dir DIR]
 //! mixtab bench [--quick] [--only NAME] [--json PATH] [--baseline PATH] [--tolerance F]
 //! mixtab sketch [--spec SPEC | --scheme NAME [--config FILE]] [--set N,N,...|--text STR]
-//! mixtab serve [--config FILE] [--listen ADDR] [--load PATH]
-//! mixtab loadtest [--quick] [--out PATH] [--baseline PATH] [--gate] [workload knobs]
+//! mixtab serve [--config FILE] [--listen ADDR] [--load PATH] [--router]
+//! mixtab loadtest [--quick] [--out PATH] [--baseline PATH] [--gate] [--addr ADDR] [workload knobs]
 //! mixtab loadtest --compare A.csv B.csv
+//! mixtab loadtest --plot out.svg [--out PATH]
+//! mixtab stats --addr ADDR
 //! mixtab info
 //! ```
 
@@ -86,6 +88,11 @@ fn cli() -> Command {
                     "PATH",
                     "restore the default scheme's LSH index from a snapshot before serving (same provenance checks as the load_index op)",
                     None,
+                )
+                .flag(
+                    "router",
+                    '\0',
+                    "router mode: serve by routing to the config's [[backends]] (replicated inserts, fanned-out queries, health shedding, shadow traffic) instead of local indexes",
                 ),
         )
         .subcommand(
@@ -136,8 +143,26 @@ fn cli() -> Command {
                     "allowed fractional QPS loss before --gate fails",
                     Some("0.5"),
                 )
+                .opt(
+                    "addr",
+                    '\0',
+                    "ADDR",
+                    "drive an already-running server (plain or router) at this address instead of spawning one in-process",
+                    None,
+                )
+                .opt(
+                    "plot",
+                    '\0',
+                    "PATH",
+                    "store-only mode: render --out's run trajectory (QPS + recall@k) to this SVG and exit",
+                    None,
+                )
                 .positional("compare-a", "with --compare: baseline results CSV", false)
                 .positional("compare-b", "with --compare: current results CSV", false),
+        )
+        .subcommand(
+            Command::new("stats", "fetch and print a running server's stats snapshot (works for plain servers and routers)")
+                .opt("addr", '\0', "ADDR", "server address, e.g. 127.0.0.1:7700", None),
         )
         .subcommand(Command::new("info", "print build/artifact information"))
 }
@@ -163,6 +188,7 @@ fn main() {
         Some(("sketch", sub)) => run_sketch(sub),
         Some(("serve", sub)) => run_serve(sub),
         Some(("loadtest", sub)) => run_loadtest(sub),
+        Some(("stats", sub)) => run_stats(sub),
         Some(("info", _)) => run_info(),
         _ => {
             println!("{}", cmd.help_text());
@@ -382,6 +408,9 @@ fn run_serve(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
     if let Some(listen) = sub.get("listen") {
         cfg.listen = listen.to_string();
     }
+    if sub.flag("router") {
+        return run_serve_router(sub, cfg);
+    }
     println!(
         "mixtab serve: listen={} d'={} hash={} pjrt={}",
         cfg.listen,
@@ -442,6 +471,61 @@ fn run_serve(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
     }
 }
 
+/// `mixtab serve --router`: serve the same wire protocol by routing to
+/// the config's `[[backends]]` instead of local indexes.
+fn run_serve_router(
+    sub: &mixtab::util::cli::Parsed,
+    cfg: CoordinatorConfig,
+) -> mixtab::Result<()> {
+    use mixtab::coordinator::cluster::{ClusterConfig, ClusterRouter};
+    let Some(path) = sub.get("config") else {
+        mixtab::bail!("--router needs --config FILE declaring [[backends]]");
+    };
+    mixtab::ensure!(
+        sub.get("load").is_none(),
+        "--load has no effect in router mode (a router owns no indexes)"
+    );
+    let cluster = ClusterConfig::from_config(&mixtab::util::config::Config::load(path)?)?;
+    let lsh = cfg.lsh_spec();
+    println!(
+        "mixtab serve --router: listen={} route_spec={} replicas={}",
+        cfg.listen, lsh, cluster.replicas
+    );
+    for b in &cluster.backends {
+        println!(
+            "backend {}: addr={} weight={} schemes={}",
+            b.name,
+            b.addr,
+            b.weight,
+            if b.schemes.is_empty() {
+                "all".to_string()
+            } else {
+                b.schemes.join(",")
+            }
+        );
+    }
+    println!(
+        "health: error_limit={} cooloff={}ms read_timeout={}ms",
+        cluster.error_limit, cluster.cooloff_ms, cluster.read_timeout_ms
+    );
+    match &cluster.shadow_backend {
+        Some(name) => println!(
+            "shadow: backend={} fraction={} scheme={}",
+            name,
+            cluster.shadow_fraction,
+            cluster.shadow_scheme.as_deref().unwrap_or("(unchanged)")
+        ),
+        None => println!("shadow: off"),
+    }
+    let listen = cfg.listen.clone();
+    let router = Arc::new(ClusterRouter::new(cluster, &cfg)?);
+    let server = Server::start_with_handler(router, cfg, &listen)?;
+    println!("serving on {} — Ctrl-C to stop", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
 fn run_loadtest(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
     use mixtab::loadtest::{self, report, store, LoadtestConfig};
     if sub.help_requested() {
@@ -465,6 +549,18 @@ fn run_loadtest(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
         sub.positionals().is_empty(),
         "unexpected positional argument (did you mean --compare A.csv B.csv?)"
     );
+
+    // Store-only mode: render the trajectory already in --out and exit.
+    if let Some(plot_path) = sub.get("plot") {
+        let out = sub.get("out").unwrap_or("results.csv");
+        let records = store::load(out)?;
+        loadtest::plot::write_svg(plot_path, &records)?;
+        println!(
+            "plotted {} run(s) from {out} to {plot_path}",
+            records.len()
+        );
+        return Ok(());
+    }
 
     let mut cfg = if sub.flag("quick") {
         LoadtestConfig::quick()
@@ -491,7 +587,13 @@ fn run_loadtest(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
         cfg.mix_ops = sub.get_usize("mix-ops")?;
     }
 
-    let record = loadtest::run(&cfg)?;
+    let external = match sub.get("addr") {
+        Some(addr) => Some(addr.parse::<std::net::SocketAddr>().map_err(|_| {
+            mixtab::util::error::Error::msg(format!("bad --addr '{addr}' (want HOST:PORT)"))
+        })?),
+        None => None,
+    };
+    let record = loadtest::run_at(&cfg, external)?;
     println!();
     report::print_run(&record);
 
@@ -525,6 +627,32 @@ fn run_loadtest(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
             "--gate needs --baseline PATH to gate against"
         );
     }
+    Ok(())
+}
+
+/// `mixtab stats`: one `stats` round trip to a running server, printed
+/// as its compact JSON snapshot (router snapshots include per-backend
+/// health and the shadow diff counters — CI greps this).
+fn run_stats(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
+    if sub.help_requested() {
+        println!("{}", cli().help_text());
+        return Ok(());
+    }
+    let Some(addr) = sub.get("addr") else {
+        mixtab::bail!("stats needs --addr HOST:PORT");
+    };
+    let sock: std::net::SocketAddr = addr
+        .parse()
+        .map_err(|_| mixtab::util::error::Error::msg(format!("bad --addr '{addr}'")))?;
+    let mut conn = mixtab::coordinator::server::PipelinedClient::connect(sock)?;
+    let resp = mixtab::coordinator::cluster::client::roundtrip(
+        &mut conn,
+        &mixtab::coordinator::request::Request::Stats,
+    )?;
+    let mixtab::coordinator::request::Response::Stats { json } = resp else {
+        mixtab::bail!("server answered stats with {resp:?}");
+    };
+    println!("{}", mixtab::util::json::to_string(&json));
     Ok(())
 }
 

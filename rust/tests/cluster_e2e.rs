@@ -1,0 +1,443 @@
+//! Multi-process cluster end-to-end: real `mixtab` binaries on
+//! localhost — N backend processes plus a router process — driven over
+//! TCP. Proves the distribution tier's three acceptance properties:
+//!
+//! (a) router fan-out/merge over 2 backends is result-identical to a
+//!     single-process `ShardedIndex` holding the same corpus,
+//! (b) killing one replica mid-run trips its cooloff, queries keep
+//!     succeeding from the survivor, and recovery after a same-port
+//!     restart is epoch-tagged in the router's metrics,
+//! (c) shadow routing at fraction 0.5 never changes primary responses:
+//!     divergence stays 0 against an identical-spec shadow and goes
+//!     positive against a different hash family.
+
+use mixtab::coordinator::config::CoordinatorConfig;
+use mixtab::coordinator::request::{Request, Response};
+use mixtab::coordinator::server::Client;
+use mixtab::coordinator::Coordinator;
+use mixtab::util::json::Json;
+use mixtab::util::rng::Xoshiro256;
+use std::io::{BufRead, BufReader};
+use std::net::{SocketAddr, TcpListener};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// A spawned `mixtab serve` process, killed on drop.
+struct ServerProc {
+    child: Child,
+    addr: SocketAddr,
+}
+
+impl Drop for ServerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl ServerProc {
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn the real binary and block until it prints its readiness line.
+fn spawn_mixtab(args: &[String]) -> ServerProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_mixtab"))
+        .args(args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn mixtab");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read child stdout");
+        assert!(n > 0, "mixtab exited before readiness: {args:?}");
+        if let Some(rest) = line.strip_prefix("serving on ") {
+            break rest
+                .split_whitespace()
+                .next()
+                .expect("addr after 'serving on'")
+                .parse()
+                .expect("parse served addr");
+        }
+    };
+    // Keep draining so the child never blocks on a full stdout pipe.
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+            sink.clear();
+        }
+    });
+    ServerProc { child, addr }
+}
+
+/// Reserve a localhost port (bind-then-drop).
+fn free_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0")
+        .unwrap()
+        .local_addr()
+        .unwrap()
+        .port()
+}
+
+fn temp_dir(test: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mixtab_cluster_e2e_{test}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_cfg(dir: &Path, name: &str, text: &str) -> String {
+    let path = dir.join(name);
+    std::fs::write(&path, text).unwrap();
+    path.display().to_string()
+}
+
+/// Backend service config: small native-path spec, 2-way sharded.
+fn backend_cfg(family: &str) -> String {
+    format!(
+        "[batcher]\nenable_pjrt = false\n\n[fh]\ndim = 32\nhash = \"{family}\"\n\n\
+         [oph]\nk = 40\n\n[lsh]\nk = 4\nl = 6\nshards = 2\n"
+    )
+}
+
+/// In-process reference matching [`backend_cfg`]'s spec exactly.
+fn reference() -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        enable_pjrt: false,
+        fh_dim: 32,
+        oph_k: 40,
+        lsh_k: 4,
+        lsh_l: 6,
+        lsh_shards: 2,
+        ..Default::default()
+    })
+}
+
+fn spawn_backend(dir: &Path, name: &str, port: u16, family: &str) -> ServerProc {
+    let cfg = write_cfg(dir, &format!("{name}.toml"), &backend_cfg(family));
+    spawn_mixtab(&[
+        "serve".into(),
+        "--config".into(),
+        cfg,
+        "--listen".into(),
+        format!("127.0.0.1:{port}"),
+    ])
+}
+
+fn spawn_router(dir: &Path, cfg_text: &str, port: u16) -> ServerProc {
+    let cfg = write_cfg(dir, "router.toml", cfg_text);
+    spawn_mixtab(&[
+        "serve".into(),
+        "--router".into(),
+        "--config".into(),
+        cfg,
+        "--listen".into(),
+        format!("127.0.0.1:{port}"),
+    ])
+}
+
+/// Clustered corpus: `clusters` groups of `members` sets sharing a
+/// per-cluster core (high in-cluster Jaccard, so LSH neighbour sets are
+/// non-trivial and family-sensitive).
+fn clustered_sets(clusters: usize, members: usize, core: usize, unique: usize) -> Vec<Vec<u32>> {
+    let mut out = Vec::new();
+    for c in 0..clusters {
+        let mut core_rng = Xoshiro256::stream(0xE2E0, c as u64);
+        let core_set: Vec<u32> = (0..core).map(|_| core_rng.next_u32() % 1_000_000).collect();
+        for m in 0..members {
+            let mut rng = Xoshiro256::stream(0xE2E1, (c * members + m) as u64);
+            let mut s = core_set.clone();
+            s.extend((0..unique).map(|_| rng.next_u32() % 1_000_000));
+            out.push(s);
+        }
+    }
+    out
+}
+
+fn stats(addr: SocketAddr) -> Json {
+    let mut c = Client::connect(addr).unwrap();
+    let Response::Stats { json } = c.call(&Request::Stats).unwrap() else {
+        panic!("expected stats")
+    };
+    json
+}
+
+fn counter(json: &Json, path: &[&str]) -> i64 {
+    let mut v = json;
+    for key in path {
+        v = v
+            .get(key)
+            .unwrap_or_else(|| panic!("missing stats key {path:?}"));
+    }
+    v.as_i64().unwrap_or_else(|| panic!("non-int stats key {path:?}"))
+}
+
+/// Acceptance (a): the router over two backend processes answers every
+/// query and estimate exactly like one single-process sharded index
+/// holding the same corpus.
+#[test]
+fn router_fanout_matches_single_process_index() {
+    let dir = temp_dir("fanout");
+    let (p0, p1, rp) = (free_port(), free_port(), free_port());
+    let _b0 = spawn_backend(&dir, "b0", p0, "mixed_tab");
+    let _b1 = spawn_backend(&dir, "b1", p1, "mixed_tab");
+    let router_cfg = format!(
+        "{}\n[cluster]\nreplicas = 2\nread_timeout_ms = 5000\n\n\
+         [[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:{p0}\"\n\n\
+         [[backends]]\nname = \"b1\"\naddr = \"127.0.0.1:{p1}\"\n",
+        backend_cfg("mixed_tab")
+    );
+    let router = spawn_router(&dir, &router_cfg, rp);
+
+    let reference = reference();
+    let sets = clustered_sets(30, 6, 30, 10);
+    let mut c = Client::connect(router.addr).unwrap();
+    for (i, set) in sets.iter().enumerate() {
+        let got = c
+            .call(&Request::LshInsert {
+                id: i as u32,
+                set: set.clone(),
+                scheme: None,
+            })
+            .unwrap();
+        assert_eq!(got, Response::Inserted { id: i as u32 }, "insert {i}");
+        reference.handle(Request::LshInsert {
+            id: i as u32,
+            set: set.clone(),
+            scheme: None,
+        });
+    }
+    let mut nonempty = 0;
+    for (i, set) in sets.iter().enumerate().step_by(5) {
+        let got = c
+            .call(&Request::LshQuery {
+                set: set.clone(),
+                scheme: None,
+            })
+            .unwrap();
+        let want = reference.handle(Request::LshQuery {
+            set: set.clone(),
+            scheme: None,
+        });
+        assert_eq!(got, want, "query {i}: cluster != single-process");
+        if let Response::Candidates { ids } = &got {
+            nonempty += usize::from(ids.len() > 1);
+        }
+    }
+    assert!(nonempty > 0, "no query had neighbours — vacuous comparison");
+    for (a, b) in [(0u32, 1u32), (10, 40), (33, 77)] {
+        let got = c.call(&Request::Estimate { a, b, scheme: None }).unwrap();
+        let want = reference.handle(Request::Estimate { a, b, scheme: None });
+        assert_eq!(got, want, "estimate({a},{b})");
+    }
+    // Both backends actually took traffic, through a router snapshot.
+    let s = stats(router.addr);
+    assert_eq!(s.get("router").unwrap().as_bool(), Some(true));
+    assert_eq!(counter(&s, &["lsh_inserts"]), sets.len() as i64);
+    for b in ["b0", "b1"] {
+        assert!(counter(&s, &["backends", b, "requests"]) > 0, "{b} idle");
+        assert_eq!(counter(&s, &["backends", b, "errors"]), 0, "{b} errored");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance (b): killing one replica mid-run trips its breaker while
+/// queries keep answering exactly from the survivor; restarting it and
+/// letting the cooloff lapse recovers it with an epoch tag.
+#[test]
+fn replica_death_cooloff_and_epoch_tagged_recovery() {
+    let dir = temp_dir("cooloff");
+    let (p0, p1, rp) = (free_port(), free_port(), free_port());
+    let mut b0 = spawn_backend(&dir, "b0", p0, "mixed_tab");
+    let _b1 = spawn_backend(&dir, "b1", p1, "mixed_tab");
+    let router_cfg = format!(
+        "{}\n[cluster]\nreplicas = 2\nerror_limit = 3\ncooloff_ms = 300\nread_timeout_ms = 5000\n\n\
+         [[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:{p0}\"\n\n\
+         [[backends]]\nname = \"b1\"\naddr = \"127.0.0.1:{p1}\"\n",
+        backend_cfg("mixed_tab")
+    );
+    let router = spawn_router(&dir, &router_cfg, rp);
+
+    let reference = reference();
+    let sets = clustered_sets(20, 5, 30, 10);
+    let mut c = Client::connect(router.addr).unwrap();
+    for (i, set) in sets.iter().enumerate() {
+        let got = c
+            .call(&Request::LshInsert {
+                id: i as u32,
+                set: set.clone(),
+                scheme: None,
+            })
+            .unwrap();
+        assert_eq!(got, Response::Inserted { id: i as u32 });
+        reference.handle(Request::LshInsert {
+            id: i as u32,
+            set: set.clone(),
+            scheme: None,
+        });
+    }
+
+    // Kill replica b0 mid-run. Full replication means the survivor holds
+    // every id: queries must keep answering *exactly*, while b0's
+    // transport failures trip its breaker.
+    b0.kill();
+    for (i, set) in sets.iter().enumerate().step_by(7) {
+        let got = c
+            .call(&Request::LshQuery {
+                set: set.clone(),
+                scheme: None,
+            })
+            .unwrap();
+        let want = reference.handle(Request::LshQuery {
+            set: set.clone(),
+            scheme: None,
+        });
+        assert_eq!(got, want, "query {i} wrong after replica death");
+    }
+    let s = stats(router.addr);
+    assert!(counter(&s, &["backends", "b0", "errors"]) > 0);
+    assert!(counter(&s, &["backends", "b0", "cooloff_trips"]) >= 1);
+    assert_eq!(counter(&s, &["backends", "b0", "epoch"]), 0);
+    assert_eq!(counter(&s, &["backends", "b1", "errors"]), 0);
+    assert_eq!(
+        s.get("backends").unwrap().get("b1").unwrap().get("state").unwrap().as_str(),
+        Some("healthy")
+    );
+
+    // Same-port restart + cooloff lapse: the next fan-out admits b0's
+    // probe, which succeeds and mints recovery epoch 1.
+    let _b0_again = spawn_backend(&dir, "b0_restarted", p0, "mixed_tab");
+    std::thread::sleep(Duration::from_millis(500));
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let got = c
+            .call(&Request::LshQuery {
+                set: sets[0].clone(),
+                scheme: None,
+            })
+            .unwrap();
+        let want = reference.handle(Request::LshQuery {
+            set: sets[0].clone(),
+            scheme: None,
+        });
+        assert_eq!(got, want, "query wrong during recovery");
+        let s = stats(router.addr);
+        if counter(&s, &["backends", "b0", "epoch"]) == 1 {
+            assert_eq!(
+                s.get("backends").unwrap().get("b0").unwrap().get("state").unwrap().as_str(),
+                Some("healthy")
+            );
+            break;
+        }
+        assert!(Instant::now() < deadline, "b0 never recovered: {s:?}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Drive a shadowed router: insert everything, query every stored set,
+/// then wait for the mirror queue to drain and return the final stats.
+/// Primary responses are asserted identical to the in-process reference
+/// throughout — shadow traffic must never change what the client sees.
+fn drive_shadowed(router_addr: SocketAddr, sets: &[Vec<u32>]) -> Json {
+    let reference = reference();
+    let mut c = Client::connect(router_addr).unwrap();
+    for (i, set) in sets.iter().enumerate() {
+        let got = c
+            .call(&Request::LshInsert {
+                id: i as u32,
+                set: set.clone(),
+                scheme: None,
+            })
+            .unwrap();
+        assert_eq!(got, Response::Inserted { id: i as u32 });
+        reference.handle(Request::LshInsert {
+            id: i as u32,
+            set: set.clone(),
+            scheme: None,
+        });
+    }
+    for set in sets {
+        let got = c
+            .call(&Request::LshQuery {
+                set: set.clone(),
+                scheme: None,
+            })
+            .unwrap();
+        let want = reference.handle(Request::LshQuery {
+            set: set.clone(),
+            scheme: None,
+        });
+        assert_eq!(got, want, "shadow routing changed a primary response");
+    }
+    // All writes mirror; fraction 0.5 mirrors every second read.
+    let expected_mirrored = (sets.len() + sets.len() / 2) as i64;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let s = stats(router_addr);
+        assert_eq!(counter(&s, &["shadow", "shed"]), 0, "mirror queue shed");
+        assert_eq!(counter(&s, &["shadow", "errors"]), 0, "mirror transport errors");
+        assert_eq!(counter(&s, &["shadow", "mirrored"]), expected_mirrored);
+        if counter(&s, &["shadow", "compared"]) == expected_mirrored {
+            return s;
+        }
+        assert!(Instant::now() < deadline, "mirror never drained: {s:?}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+fn shadow_router_cfg(primary: u16, shadow: u16) -> String {
+    format!(
+        "{}\n[cluster]\nreplicas = 1\nshadow_fraction = 0.5\nshadow_backend = \"cand\"\n\
+         read_timeout_ms = 5000\n\n\
+         [[backends]]\nname = \"b0\"\naddr = \"127.0.0.1:{primary}\"\n\n\
+         [[backends]]\nname = \"cand\"\naddr = \"127.0.0.1:{shadow}\"\nweight = 0\n",
+        backend_cfg("mixed_tab")
+    )
+}
+
+/// Acceptance (c), same spec: shadowing half the reads to an
+/// identical-spec backend produces zero divergence — the schemes answer
+/// identically on identical corpora, and the mirror proves it online.
+#[test]
+fn shadow_identical_spec_zero_divergence() {
+    let dir = temp_dir("shadow_same");
+    let (p0, ps, rp) = (free_port(), free_port(), free_port());
+    let _b0 = spawn_backend(&dir, "b0", p0, "mixed_tab");
+    let _cand = spawn_backend(&dir, "cand", ps, "mixed_tab");
+    let router = spawn_router(&dir, &shadow_router_cfg(p0, ps), rp);
+
+    let s = drive_shadowed(router.addr, &clustered_sets(25, 6, 30, 10));
+    assert_eq!(
+        counter(&s, &["shadow", "divergence"]),
+        0,
+        "identical specs must never diverge: {s:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance (c), different family: the same corpus under a different
+/// hash family answers borderline queries differently — the mirror's
+/// divergence counter is the paper's family comparison on live traffic.
+#[test]
+fn shadow_different_family_diverges() {
+    let dir = temp_dir("shadow_diff");
+    let (p0, ps, rp) = (free_port(), free_port(), free_port());
+    let _b0 = spawn_backend(&dir, "b0", p0, "mixed_tab");
+    let _cand = spawn_backend(&dir, "cand", ps, "murmur3");
+    let router = spawn_router(&dir, &shadow_router_cfg(p0, ps), rp);
+
+    let s = drive_shadowed(router.addr, &clustered_sets(25, 6, 30, 10));
+    assert!(
+        counter(&s, &["shadow", "divergence"]) > 0,
+        "different hash families should disagree on some neighbour sets: {s:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -371,3 +371,110 @@ fn batched_across_connections_bit_identical_to_sequential_all_families() {
     bat_server.stop();
     ref_server.stop();
 }
+
+/// Doc ops ride the batcher too: `index_doc`/`query_doc` are shingled
+/// *before* enqueue (`to_batch_op` with the shared `DOC_SHINGLE_W`), so
+/// a batched doc op must be bit-identical to the direct path's
+/// shingle-then-serve — same stored sketches, same candidates. A
+/// tokenizer drift between the two paths fails this exactly.
+#[test]
+fn doc_ops_batched_bit_identical_to_direct() {
+    let mut ref_cfg = five_family_cfg();
+    ref_cfg.op_batch = 0; // direct path shingles inside the service
+    let mut bat_cfg = five_family_cfg();
+    bat_cfg.op_batch = 8;
+    bat_cfg.op_max_delay_us = 2_000;
+    let bat_c = coordinator(bat_cfg);
+    let ref_server = Server::start(coordinator(ref_cfg), "127.0.0.1:0").unwrap();
+    let bat_server = Server::start(Arc::clone(&bat_c), "127.0.0.1:0").unwrap();
+
+    // Overlapping text docs: shared phrases make shingle collisions (and
+    // so candidate hits) certain.
+    let docs: Vec<String> = (0..20)
+        .map(|i| {
+            format!(
+                "the quick brown fox {i} jumps over the lazy dog; \
+                 minwise hashing estimates jaccard similarity {}",
+                i % 4
+            )
+        })
+        .collect();
+
+    // Reference: sequential direct serving.
+    let mut rc = Client::connect(ref_server.addr()).unwrap();
+    for (i, text) in docs.iter().enumerate() {
+        let r = rc
+            .call(&Request::IndexDoc {
+                id: i as u32,
+                text: text.clone(),
+                scheme: None,
+            })
+            .unwrap();
+        assert_eq!(r, Response::Inserted { id: i as u32 });
+    }
+
+    // Subject: 2 pipelined connections interleaving the same docs
+    // through the batcher.
+    let addr = bat_server.addr();
+    let shared = Arc::new(docs.clone());
+    let handles: Vec<_> = (0..2)
+        .map(|conn| {
+            let docs = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                let mut c = PipelinedClient::connect(addr).unwrap();
+                let mut n = 0;
+                for i in (conn..docs.len()).step_by(2) {
+                    c.send(&Request::IndexDoc {
+                        id: i as u32,
+                        text: docs[i].clone(),
+                        scheme: None,
+                    })
+                    .unwrap();
+                    n += 1;
+                }
+                for _ in 0..n {
+                    let (_, resp) = c.recv().unwrap();
+                    assert!(matches!(resp, Response::Inserted { .. }));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("doc insert client");
+    }
+
+    let mut bc = Client::connect(addr).unwrap();
+    let mut any_nonempty = false;
+    for text in docs.iter() {
+        let Response::Candidates { ids: mut a } = bc
+            .call(&Request::QueryDoc {
+                text: text.clone(),
+                scheme: None,
+            })
+            .unwrap()
+        else {
+            panic!("expected candidates")
+        };
+        let Response::Candidates { ids: mut b } = rc
+            .call(&Request::QueryDoc {
+                text: text.clone(),
+                scheme: None,
+            })
+            .unwrap()
+        else {
+            panic!("expected candidates")
+        };
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "doc candidates agree for {text:?}");
+        any_nonempty |= !a.is_empty();
+    }
+    assert!(any_nonempty, "workload produced no collisions — test is vacuous");
+    // The doc ops really took the batched path.
+    assert!(
+        bat_c.metrics.op_batches.load(Ordering::Relaxed) > 0,
+        "op batcher dispatched no batches for doc ops"
+    );
+    bat_server.stop();
+    ref_server.stop();
+}

@@ -1,0 +1,263 @@
+//! Deterministic cluster-tier suites: the health state machine driven by
+//! a fake clock (no sleeps — every transition is an exact timestamp),
+//! and the replica-merge invariant proved against in-process backends:
+//! a router over N backends answers queries identically to one
+//! coordinator holding the same corpus, for any N and replication
+//! factor. Mirrors `sharded_properties.rs` one level up the topology.
+
+use super::{base_cfg, coordinator, seeded_set};
+use mixtab::coordinator::cluster::config::BackendConfig;
+use mixtab::coordinator::cluster::{BackendHealth, ClusterConfig, ClusterRouter, HealthState};
+use mixtab::coordinator::request::{Request, Response};
+use mixtab::coordinator::server::{Handler, Server};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------
+// Health machine, fake clock.
+// ---------------------------------------------------------------------
+
+fn health() -> (BackendHealth, Instant) {
+    // error_limit 3, cooloff 100ms, clock origin t0.
+    (BackendHealth::new(3, Duration::from_millis(100)), Instant::now())
+}
+
+fn at(t0: Instant, ms: u64) -> Instant {
+    t0 + Duration::from_millis(ms)
+}
+
+#[test]
+fn trips_only_on_consecutive_errors() {
+    let (mut h, t0) = health();
+    // Two errors, a success, two more errors: never 3 consecutive.
+    for ms in [1, 2] {
+        h.on_error(at(t0, ms));
+    }
+    h.on_success(at(t0, 3));
+    for ms in [4, 5] {
+        h.on_error(at(t0, ms));
+    }
+    assert_eq!(h.state(), HealthState::Healthy);
+    assert_eq!(h.cooloff_trips(), 0);
+    assert!(h.admit_at(at(t0, 6)));
+    // The third consecutive error trips.
+    h.on_error(at(t0, 7));
+    assert_eq!(
+        h.state(),
+        HealthState::Cooloff {
+            until: at(t0, 107)
+        },
+        "cooloff deadline = trip time + cooloff"
+    );
+    assert_eq!(h.cooloff_trips(), 1);
+}
+
+#[test]
+fn cooloff_sheds_until_deadline_then_probes() {
+    let (mut h, t0) = health();
+    for ms in [1, 2, 3] {
+        h.on_error(at(t0, ms));
+    }
+    // Shedding strictly before the deadline.
+    assert!(!h.admit_at(at(t0, 50)));
+    assert!(!h.admit_at(at(t0, 102)));
+    assert_eq!(h.state(), HealthState::Cooloff { until: at(t0, 103) });
+    // At the deadline: exactly one probe goes through (half-open).
+    assert!(h.admit_at(at(t0, 103)));
+    assert_eq!(h.state(), HealthState::HalfOpen);
+    assert!(!h.admit_at(at(t0, 104)), "second concurrent probe shed");
+}
+
+#[test]
+fn probe_success_recovers_and_bumps_epoch() {
+    let (mut h, t0) = health();
+    assert_eq!(h.epoch(), 0);
+    for ms in [1, 2, 3] {
+        h.on_error(at(t0, ms));
+    }
+    assert!(h.admit_at(at(t0, 200)));
+    h.on_success(at(t0, 201));
+    assert_eq!(h.state(), HealthState::Healthy);
+    assert_eq!(h.epoch(), 1, "recovery is epoch-tagged");
+    assert!(h.admit_at(at(t0, 202)));
+    // An ordinary success does not mint epochs.
+    h.on_success(at(t0, 203));
+    assert_eq!(h.epoch(), 1);
+}
+
+#[test]
+fn probe_failure_retrips_with_fresh_deadline() {
+    let (mut h, t0) = health();
+    for ms in [1, 2, 3] {
+        h.on_error(at(t0, ms));
+    }
+    assert!(h.admit_at(at(t0, 150)));
+    // One failed probe re-trips immediately — no 3-error grace while
+    // half-open.
+    h.on_error(at(t0, 151));
+    assert_eq!(h.state(), HealthState::Cooloff { until: at(t0, 251) });
+    assert_eq!(h.cooloff_trips(), 2);
+    assert_eq!(h.epoch(), 0, "no recovery happened");
+    assert!(!h.admit_at(at(t0, 250)));
+    assert!(h.admit_at(at(t0, 251)));
+}
+
+// ---------------------------------------------------------------------
+// Replica-merge independence over real in-process backends.
+// ---------------------------------------------------------------------
+
+/// Spawn `n` backend servers (each a full coordinator with the harness
+/// base config) and a router over them with the given replication.
+fn cluster_of(n: usize, replicas: usize) -> (Vec<Server>, ClusterRouter) {
+    let servers: Vec<Server> = (0..n)
+        .map(|_| Server::start(coordinator(base_cfg()), "127.0.0.1:0").unwrap())
+        .collect();
+    let cluster = ClusterConfig {
+        backends: servers
+            .iter()
+            .enumerate()
+            .map(|(i, s)| BackendConfig {
+                name: format!("b{i}"),
+                addr: s.addr().to_string(),
+                weight: 1,
+                schemes: Vec::new(),
+            })
+            .collect(),
+        replicas,
+        error_limit: 3,
+        cooloff_ms: 1_000,
+        read_timeout_ms: 5_000,
+        shadow_fraction: 1.0,
+        shadow_backend: None,
+        shadow_scheme: None,
+        shadow_queue: 1024,
+    };
+    let router = ClusterRouter::new(cluster, &base_cfg()).unwrap();
+    (servers, router)
+}
+
+/// The workload: 300 seeded sets inserted under ids 0.., then every 10th
+/// set queried.
+fn corpus() -> Vec<Vec<u32>> {
+    (0..300).map(|i| seeded_set(0xC1u64, i, 30)).collect()
+}
+
+#[test]
+fn router_merge_is_independent_of_backend_count() {
+    // Reference: one coordinator holding everything.
+    let reference = coordinator(base_cfg());
+    let sets = corpus();
+    for (i, set) in sets.iter().enumerate() {
+        let resp = reference.handle(Request::LshInsert {
+            id: i as u32,
+            set: set.clone(),
+            scheme: None,
+        });
+        assert_eq!(resp, Response::Inserted { id: i as u32 });
+    }
+
+    for (n, replicas) in [(2, 2), (3, 2), (3, 3)] {
+        let (servers, router) = cluster_of(n, replicas);
+        for (i, set) in sets.iter().enumerate() {
+            let resp = router.handle(Request::LshInsert {
+                id: i as u32,
+                set: set.clone(),
+                scheme: None,
+            });
+            assert_eq!(resp, Response::Inserted { id: i as u32 }, "insert {i}");
+        }
+        for (i, set) in sets.iter().enumerate().step_by(10) {
+            let got = router.handle(Request::LshQuery {
+                set: set.clone(),
+                scheme: None,
+            });
+            let want = reference.handle(Request::LshQuery {
+                set: set.clone(),
+                scheme: None,
+            });
+            assert_eq!(
+                got, want,
+                "query {i} differs on {n} backends x{replicas} replicas"
+            );
+        }
+        for s in servers {
+            s.stop();
+        }
+    }
+}
+
+#[test]
+fn estimate_served_from_replicas() {
+    let (servers, router) = cluster_of(3, 2);
+    let reference = coordinator(base_cfg());
+    for (i, set) in corpus().iter().enumerate().take(40) {
+        router.handle(Request::LshInsert {
+            id: i as u32,
+            set: set.clone(),
+            scheme: None,
+        });
+        reference.handle(Request::LshInsert {
+            id: i as u32,
+            set: set.clone(),
+            scheme: None,
+        });
+    }
+    // Every stored pair estimates identically through the router: the
+    // stored sketch is spec-determined, not placement-determined.
+    for (a, b) in [(0u32, 1u32), (5, 25), (12, 39)] {
+        let got = router.handle(Request::Estimate { a, b, scheme: None });
+        let want = reference.handle(Request::Estimate { a, b, scheme: None });
+        assert_eq!(got, want, "estimate({a},{b})");
+    }
+    for s in servers {
+        s.stop();
+    }
+}
+
+#[test]
+fn dead_backend_sheds_but_queries_survive() {
+    let (servers, router) = cluster_of(2, 2);
+    let sets = corpus();
+    for (i, set) in sets.iter().enumerate().take(100) {
+        router.handle(Request::LshInsert {
+            id: i as u32,
+            set: set.clone(),
+            scheme: None,
+        });
+    }
+    // Kill one backend: with full replication the survivor holds every
+    // id, so queries keep answering exactly.
+    let mut iter = servers.into_iter();
+    let dead = iter.next().unwrap();
+    dead.stop();
+    let reference = coordinator(base_cfg());
+    for (i, set) in sets.iter().enumerate().take(100) {
+        reference.handle(Request::LshInsert {
+            id: i as u32,
+            set: set.clone(),
+            scheme: None,
+        });
+    }
+    for (i, set) in sets.iter().enumerate().take(100).step_by(10) {
+        let got = router.handle(Request::LshQuery {
+            set: set.clone(),
+            scheme: None,
+        });
+        let want = reference.handle(Request::LshQuery {
+            set: set.clone(),
+            scheme: None,
+        });
+        assert_eq!(got, want, "query {i} after losing a replica");
+    }
+    // The dead backend's transport failures were counted and tripped its
+    // breaker; the survivor stayed healthy.
+    let stats = router.stats_json();
+    let b0 = stats.get("backends").unwrap().get("b0").unwrap();
+    let b1 = stats.get("backends").unwrap().get("b1").unwrap();
+    assert!(b0.get("errors").unwrap().as_i64().unwrap() > 0);
+    assert_eq!(b0.get("state").unwrap().as_str(), Some("cooloff"));
+    assert_eq!(b1.get("state").unwrap().as_str(), Some("healthy"));
+    assert_eq!(b1.get("errors").unwrap().as_i64(), Some(0));
+    for s in iter {
+        s.stop();
+    }
+}

@@ -13,6 +13,7 @@
 //! included.
 
 mod batching;
+mod cluster;
 mod framing;
 mod limits;
 mod loadtest;
