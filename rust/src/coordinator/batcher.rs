@@ -176,6 +176,8 @@ pub enum BatchOp {
     Sketch { set: Vec<u32> },
     Insert { id: u32, set: Vec<u32> },
     Query { set: Vec<u32> },
+    Delete { id: u32 },
+    Update { id: u32, set: Vec<u32> },
 }
 
 /// One queued op plus its completion callback. The callback is invoked

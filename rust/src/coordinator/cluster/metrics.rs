@@ -62,6 +62,11 @@ pub struct ShadowCounters {
     /// are only trustworthy while this stays 0 — a shed write leaves the
     /// shadow's corpus behind the primary's.
     pub shed: AtomicU64,
+    /// Ops dropped because the mirror thread is gone (channel
+    /// disconnected). Distinct from `shed`: a full queue is transient
+    /// backpressure, a dead mirror is permanent — once this moves, every
+    /// later divergence/latency number predates the death.
+    pub mirror_dead: AtomicU64,
     /// Mirrored ops whose responses were compared against the primary's.
     pub compared: AtomicU64,
     /// Comparisons whose shadow response differed from the primary's —
@@ -89,6 +94,10 @@ impl ShadowCounters {
         Json::obj()
             .set("mirrored", self.mirrored.load(Ordering::Relaxed) as usize)
             .set("shed", self.shed.load(Ordering::Relaxed) as usize)
+            .set(
+                "mirror_dead",
+                self.mirror_dead.load(Ordering::Relaxed) as usize,
+            )
             .set("compared", compared as usize)
             .set("divergence", self.divergence.load(Ordering::Relaxed) as usize)
             .set("errors", self.errors.load(Ordering::Relaxed) as usize)
@@ -108,7 +117,11 @@ pub struct ClusterMetrics {
     /// Routed op counts, summed across backends (one per client op, not
     /// per replica).
     pub inserts: AtomicU64,
+    pub deletes: AtomicU64,
+    pub updates: AtomicU64,
     pub queries: AtomicU64,
+    pub topk_queries: AtomicU64,
+    pub compactions: AtomicU64,
     pub sketches: AtomicU64,
     pub estimates: AtomicU64,
     /// Client ops answered with an `Error` response.
@@ -123,7 +136,11 @@ impl ClusterMetrics {
     pub fn new(backend_names: &[String]) -> Self {
         Self {
             inserts: AtomicU64::new(0),
+            deletes: AtomicU64::new(0),
+            updates: AtomicU64::new(0),
             queries: AtomicU64::new(0),
+            topk_queries: AtomicU64::new(0),
+            compactions: AtomicU64::new(0),
             sketches: AtomicU64::new(0),
             estimates: AtomicU64::new(0),
             errors: AtomicU64::new(0),
@@ -147,7 +164,17 @@ impl ClusterMetrics {
         Json::obj()
             .set("router", true)
             .set("lsh_inserts", self.inserts.load(Ordering::Relaxed) as usize)
+            .set("lsh_deletes", self.deletes.load(Ordering::Relaxed) as usize)
+            .set("lsh_updates", self.updates.load(Ordering::Relaxed) as usize)
             .set("lsh_queries", self.queries.load(Ordering::Relaxed) as usize)
+            .set(
+                "topk_queries",
+                self.topk_queries.load(Ordering::Relaxed) as usize,
+            )
+            .set(
+                "compactions",
+                self.compactions.load(Ordering::Relaxed) as usize,
+            )
             .set(
                 "sketch_requests",
                 self.sketches.load(Ordering::Relaxed) as usize,
@@ -168,6 +195,11 @@ mod tests {
         let m = ClusterMetrics::new(&["b0".into(), "b1".into()]);
         Metrics::inc(&m.inserts);
         Metrics::add(&m.queries, 3);
+        Metrics::add(&m.deletes, 2);
+        Metrics::inc(&m.updates);
+        Metrics::inc(&m.topk_queries);
+        Metrics::inc(&m.compactions);
+        Metrics::inc(&m.shadow.mirror_dead);
         Metrics::inc(&m.backends[0].requests);
         Metrics::inc(&m.backends[1].errors);
         Metrics::inc(&m.backends[1].timeouts);
@@ -180,6 +212,10 @@ mod tests {
         assert_eq!(s.get("router").unwrap().as_bool(), Some(true));
         assert_eq!(s.get("lsh_inserts").unwrap().as_i64(), Some(1));
         assert_eq!(s.get("lsh_queries").unwrap().as_i64(), Some(3));
+        assert_eq!(s.get("lsh_deletes").unwrap().as_i64(), Some(2));
+        assert_eq!(s.get("lsh_updates").unwrap().as_i64(), Some(1));
+        assert_eq!(s.get("topk_queries").unwrap().as_i64(), Some(1));
+        assert_eq!(s.get("compactions").unwrap().as_i64(), Some(1));
         let b0 = s.get("backends").unwrap().get("b0").unwrap();
         assert_eq!(b0.get("requests").unwrap().as_i64(), Some(1));
         assert_eq!(b0.get("state").unwrap().as_str(), Some("healthy"));
@@ -191,6 +227,7 @@ mod tests {
         assert_eq!(b1.get("cooloff_trips").unwrap().as_i64(), Some(3));
         let sh = s.get("shadow").unwrap();
         assert_eq!(sh.get("mirrored").unwrap().as_i64(), Some(4));
+        assert_eq!(sh.get("mirror_dead").unwrap().as_i64(), Some(1));
         assert_eq!(sh.get("divergence").unwrap().as_i64(), Some(1));
         assert_eq!(sh.get("latency_delta_us_mean").unwrap().as_f64(), Some(100.0));
     }

@@ -34,7 +34,9 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, Response};
 use crate::coordinator::server::{self, Handler, PipelinedClient};
 use crate::hash::Hasher32;
+use crate::lsh::TopK;
 use crate::util::error::Result;
+use std::collections::HashMap;
 use crate::util::sync::lock_unpoisoned;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -339,6 +341,113 @@ impl ClusterRouter {
         }
     }
 
+    /// Fanned-out top-k: every backend re-ranks its own corpus slice,
+    /// the router merges the per-backend rankings. Replication means the
+    /// same id can arrive from several backends — dedup by id (keeping
+    /// the best score; replicas of one corpus score identically) before
+    /// the final bounded selection, so the merged ranking is independent
+    /// of backend count and replication layout, like the candidate
+    /// union.
+    fn route_topk(&self, k: usize, req: &Request) -> Response {
+        let scheme = op_scheme(req);
+        let targets = self.eligible(scheme);
+        if targets.is_empty() {
+            return self.error_resp(format!("no backend serves scheme '{scheme}'"));
+        }
+        let mut best: HashMap<u32, f64> = HashMap::new();
+        let mut answered = 0usize;
+        let mut app_error: Option<Response> = None;
+        for (_, result) in self.fanout_call(&targets, req) {
+            match result {
+                Ok(Response::TopK { ids, scores }) => {
+                    answered += 1;
+                    for (id, score) in ids.into_iter().zip(scores) {
+                        let slot = best.entry(id).or_insert(f64::NEG_INFINITY);
+                        if score > *slot {
+                            *slot = score;
+                        }
+                    }
+                }
+                Ok(Response::Error { message }) => {
+                    app_error.get_or_insert(Response::Error { message });
+                }
+                Ok(_) => {
+                    app_error.get_or_insert(self.plain_error(
+                        "backend answered a top-k query with a non-topk response",
+                    ));
+                }
+                Err(_) => {}
+            }
+        }
+        if answered > 0 {
+            // TopK's total order (score, then id) makes the selection a
+            // pure function of the deduped multiset — hash-map iteration
+            // order cannot leak into the answer.
+            let mut top = TopK::new(k);
+            for (id, score) in best {
+                top.offer(id, score);
+            }
+            let ranked = top.into_sorted();
+            return Response::TopK {
+                ids: ranked.iter().map(|s| s.id).collect(),
+                scores: ranked.iter().map(|s| s.score).collect(),
+            };
+        }
+        match app_error {
+            Some(resp) => {
+                Metrics::inc(&self.metrics.errors);
+                resp
+            }
+            None => self.error_resp(format!(
+                "top-k query failed on all backends for scheme '{scheme}'"
+            )),
+        }
+    }
+
+    /// Fanned-out compaction: every eligible backend compacts its slice;
+    /// the response sums purged postings cluster-wide. Partial success
+    /// (some backends shedding) still reports the purges that happened —
+    /// a missed backend just compacts on its own threshold later.
+    fn route_compact(&self, req: &Request) -> Response {
+        let scheme = op_scheme(req);
+        let targets = self.eligible(scheme);
+        if targets.is_empty() {
+            return self.error_resp(format!("no backend serves scheme '{scheme}'"));
+        }
+        let mut purged = 0usize;
+        let mut answered = 0usize;
+        let mut app_error: Option<Response> = None;
+        for (_, result) in self.fanout_call(&targets, req) {
+            match result {
+                Ok(Response::Compacted { purged: p }) => {
+                    answered += 1;
+                    purged += p;
+                }
+                Ok(Response::Error { message }) => {
+                    app_error.get_or_insert(Response::Error { message });
+                }
+                Ok(_) => {
+                    app_error.get_or_insert(self.plain_error(
+                        "backend answered a compact with a non-compacted response",
+                    ));
+                }
+                Err(_) => {}
+            }
+        }
+        if answered > 0 {
+            return Response::Compacted { purged };
+        }
+        match app_error {
+            Some(resp) => {
+                Metrics::inc(&self.metrics.errors);
+                resp
+            }
+            None => self.error_resp(format!(
+                "compact failed on all backends for scheme '{scheme}'"
+            )),
+        }
+    }
+
     fn error_resp(&self, message: String) -> Response {
         Metrics::inc(&self.metrics.errors);
         Response::Error { message }
@@ -400,6 +509,55 @@ impl Handler for ClusterRouter {
                 }
                 resp
             }
+            // Mutations route like inserts: same replica set (the hash is
+            // a function of the id), so a delete/update reaches exactly
+            // the backends holding the id. A replica in cooloff misses
+            // the mutation and serves the stale id until it catches up —
+            // the same staleness window replicated inserts already have.
+            req @ Request::LshDelete { .. } => {
+                Metrics::inc(&self.metrics.deletes);
+                let id = match &req {
+                    Request::LshDelete { id, .. } => *id,
+                    _ => unreachable!(),
+                };
+                let resp = self.route_write(id, &req);
+                if let Some(shadow) = &self.shadow {
+                    shadow.mirror_write(req, &resp, t.elapsed().as_micros() as u64);
+                }
+                resp
+            }
+            req @ Request::LshUpdate { .. } => {
+                Metrics::inc(&self.metrics.updates);
+                let id = match &req {
+                    Request::LshUpdate { id, .. } => *id,
+                    _ => unreachable!(),
+                };
+                let resp = self.route_write(id, &req);
+                if let Some(shadow) = &self.shadow {
+                    shadow.mirror_write(req, &resp, t.elapsed().as_micros() as u64);
+                }
+                resp
+            }
+            req @ Request::LshQueryTopK { .. } => {
+                Metrics::inc(&self.metrics.topk_queries);
+                let k = match &req {
+                    Request::LshQueryTopK { k, .. } => *k,
+                    _ => unreachable!(),
+                };
+                let resp = self.route_topk(k, &req);
+                if let Some(shadow) = &self.shadow {
+                    shadow.mirror_read(req, &resp, t.elapsed().as_micros() as u64);
+                }
+                resp
+            }
+            req @ Request::Compact { .. } => {
+                Metrics::inc(&self.metrics.compactions);
+                let resp = self.route_compact(&req);
+                if let Some(shadow) = &self.shadow {
+                    shadow.mirror_write(req, &resp, t.elapsed().as_micros() as u64);
+                }
+                resp
+            }
             req @ (Request::LshQuery { .. } | Request::QueryDoc { .. }) => {
                 Metrics::inc(&self.metrics.queries);
                 let resp = self.route_read(&req);
@@ -445,7 +603,11 @@ fn op_scheme(req: &Request) -> &str {
     match req {
         Request::Sketch { scheme, .. }
         | Request::LshInsert { scheme, .. }
+        | Request::LshDelete { scheme, .. }
+        | Request::LshUpdate { scheme, .. }
         | Request::LshQuery { scheme, .. }
+        | Request::LshQueryTopK { scheme, .. }
+        | Request::Compact { scheme, .. }
         | Request::Estimate { scheme, .. }
         | Request::IndexDoc { scheme, .. }
         | Request::QueryDoc { scheme, .. }

@@ -6,7 +6,11 @@
 //! replays it against the shadow backend, comparing responses and
 //! accumulating latency deltas in [`ShadowCounters`]. A full queue sheds
 //! (counted — divergence numbers are only meaningful while `shed == 0`,
-//! because a shed *write* leaves the shadow's corpus behind).
+//! because a shed *write* leaves the shadow's corpus behind). A
+//! *disconnected* queue means the mirror thread itself died; that is a
+//! separate `mirror_dead` counter plus a one-time warning, because "the
+//! mirror is gone" and "the mirror is briefly behind" call for different
+//! operator responses.
 //!
 //! **Writes always mirror; reads are sampled.** `shadow_fraction` only
 //! samples read ops: if writes were sampled too, the shadow would hold a
@@ -25,7 +29,7 @@ use super::client::BackendPool;
 use super::metrics::ShadowCounters;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, Response};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -70,6 +74,9 @@ pub struct ShadowRouter {
     scheme: Option<String>,
     sampler: Mutex<Sampler>,
     counters: Arc<ShadowCounters>,
+    /// Set once when the mirror thread is first observed gone, so the
+    /// transition logs exactly one line instead of one per dropped op.
+    dead_logged: AtomicBool,
 }
 
 impl ShadowRouter {
@@ -98,6 +105,7 @@ impl ShadowRouter {
             scheme,
             sampler: Mutex::new(Sampler::default()),
             counters,
+            dead_logged: AtomicBool::new(false),
         }
     }
 
@@ -122,8 +130,19 @@ impl ShadowRouter {
         };
         match self.tx.as_ref().expect("mirror running").try_send(job) {
             Ok(()) => Metrics::inc(&self.counters.mirrored),
-            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
-                Metrics::inc(&self.counters.shed);
+            // A full queue is transient backpressure; a disconnected
+            // channel means the mirror thread died (panic) and nothing
+            // will mirror again. Conflating the two under `shed` hid
+            // dead mirrors behind a counter operators read as "briefly
+            // overloaded" — count them apart and log the transition once.
+            Err(TrySendError::Full(_)) => Metrics::inc(&self.counters.shed),
+            Err(TrySendError::Disconnected(_)) => {
+                Metrics::inc(&self.counters.mirror_dead);
+                if !self.dead_logged.swap(true, Ordering::Relaxed) {
+                    crate::util::logging::warn!(
+                        "shadow mirror thread is gone; dropping all mirrored ops from here on"
+                    );
+                }
             }
         }
     }
@@ -178,7 +197,11 @@ fn rewrite_scheme(req: Request, scheme: Option<&str>) -> Request {
             scheme: s,
         },
         Request::LshInsert { id, set, .. } => Request::LshInsert { id, set, scheme: s },
+        Request::LshDelete { id, .. } => Request::LshDelete { id, scheme: s },
+        Request::LshUpdate { id, set, .. } => Request::LshUpdate { id, set, scheme: s },
         Request::LshQuery { set, .. } => Request::LshQuery { set, scheme: s },
+        Request::LshQueryTopK { set, k, .. } => Request::LshQueryTopK { set, k, scheme: s },
+        Request::Compact { .. } => Request::Compact { scheme: s },
         Request::Estimate { a, b, .. } => Request::Estimate { a, b, scheme: s },
         Request::IndexDoc { id, text, .. } => Request::IndexDoc { id, text, scheme: s },
         Request::QueryDoc { text, .. } => Request::QueryDoc { text, scheme: s },
@@ -207,6 +230,53 @@ mod tests {
         let mut q = Sampler::default();
         let n = (0..100).filter(|_| q.admit(0.25)).count();
         assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn dead_mirror_counts_apart_from_backpressure_shed() {
+        // Receiver dropped = the mirror thread is gone. Every submit
+        // lands in `mirror_dead`, never `shed`, and the transition flag
+        // latches after the first drop.
+        let (tx, rx) = sync_channel(4);
+        drop(rx);
+        let counters = Arc::new(ShadowCounters::default());
+        let dead = ShadowRouter {
+            tx: Some(tx),
+            handle: None,
+            fraction: 1.0,
+            scheme: None,
+            sampler: Mutex::new(Sampler::default()),
+            counters: Arc::clone(&counters),
+            dead_logged: AtomicBool::new(false),
+        };
+        let resp = Response::Error {
+            message: "x".into(),
+        };
+        dead.mirror_write(Request::Stats, &resp, 1);
+        dead.mirror_write(Request::Stats, &resp, 1);
+        assert_eq!(counters.mirror_dead.load(Ordering::Relaxed), 2);
+        assert_eq!(counters.shed.load(Ordering::Relaxed), 0);
+        assert!(dead.dead_logged.load(Ordering::Relaxed));
+
+        // Receiver alive but queue full = backpressure. Only `shed`
+        // moves and the dead flag stays clear.
+        let (tx, _rx) = sync_channel(1);
+        let counters = Arc::new(ShadowCounters::default());
+        let full = ShadowRouter {
+            tx: Some(tx),
+            handle: None,
+            fraction: 1.0,
+            scheme: None,
+            sampler: Mutex::new(Sampler::default()),
+            counters: Arc::clone(&counters),
+            dead_logged: AtomicBool::new(false),
+        };
+        full.mirror_write(Request::Stats, &resp, 1);
+        full.mirror_write(Request::Stats, &resp, 1);
+        assert_eq!(counters.mirrored.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.mirror_dead.load(Ordering::Relaxed), 0);
+        assert!(!full.dead_logged.load(Ordering::Relaxed));
     }
 
     #[test]

@@ -19,8 +19,15 @@ pub struct SchemeCounters {
     pub sketches: AtomicU64,
     /// `insert` requests routed to this scheme's index.
     pub inserts: AtomicU64,
+    /// `delete` requests routed to this scheme's index.
+    pub deletes: AtomicU64,
+    /// `update` (delete+insert upsert) requests routed to this scheme's
+    /// index.
+    pub updates: AtomicU64,
     /// `query` requests fanned out over this scheme's index.
     pub queries: AtomicU64,
+    /// `query_topk` requests re-ranked over this scheme's sketch store.
+    pub topk_queries: AtomicU64,
     /// `estimate` requests served from this scheme's sketch store.
     pub estimates: AtomicU64,
     /// Inserts landing in each shard (length = the shard count registered
@@ -38,7 +45,10 @@ impl SchemeCounters {
             name: name.to_string(),
             sketches: AtomicU64::new(0),
             inserts: AtomicU64::new(0),
+            deletes: AtomicU64::new(0),
+            updates: AtomicU64::new(0),
             queries: AtomicU64::new(0),
+            topk_queries: AtomicU64::new(0),
             estimates: AtomicU64::new(0),
             shard_inserts: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
             shard_candidates: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
@@ -60,7 +70,13 @@ impl SchemeCounters {
         Json::obj()
             .set("sketches", self.sketches.load(Ordering::Relaxed) as usize)
             .set("inserts", self.inserts.load(Ordering::Relaxed) as usize)
+            .set("deletes", self.deletes.load(Ordering::Relaxed) as usize)
+            .set("updates", self.updates.load(Ordering::Relaxed) as usize)
             .set("queries", self.queries.load(Ordering::Relaxed) as usize)
+            .set(
+                "topk_queries",
+                self.topk_queries.load(Ordering::Relaxed) as usize,
+            )
             .set("estimates", self.estimates.load(Ordering::Relaxed) as usize)
             .set("shards", Json::Arr(shards))
     }
@@ -79,8 +95,14 @@ pub struct Metrics {
     /// Scheme-aware `Sketch` requests (the spec-driven endpoint).
     pub sketch_requests: AtomicU64,
     pub lsh_inserts: AtomicU64,
+    pub lsh_deletes: AtomicU64,
+    pub lsh_updates: AtomicU64,
     pub lsh_queries: AtomicU64,
+    /// `query_topk` requests (retrieval + sketch-store re-rank).
+    pub topk_queries: AtomicU64,
     pub estimates: AtomicU64,
+    /// Successful `compact` ops (explicit posting-list rewrites).
+    pub compactions: AtomicU64,
     /// Successful `save_index` / `load_index` snapshot operations.
     pub index_saves: AtomicU64,
     pub index_loads: AtomicU64,
@@ -175,8 +197,15 @@ impl Metrics {
                 self.sketch_requests.load(Ordering::Relaxed) as usize,
             )
             .set("lsh_inserts", self.lsh_inserts.load(Ordering::Relaxed) as usize)
+            .set("lsh_deletes", self.lsh_deletes.load(Ordering::Relaxed) as usize)
+            .set("lsh_updates", self.lsh_updates.load(Ordering::Relaxed) as usize)
             .set("lsh_queries", self.lsh_queries.load(Ordering::Relaxed) as usize)
+            .set(
+                "topk_queries",
+                self.topk_queries.load(Ordering::Relaxed) as usize,
+            )
             .set("estimates", self.estimates.load(Ordering::Relaxed) as usize)
+            .set("compactions", self.compactions.load(Ordering::Relaxed) as usize)
             .set("index_saves", self.index_saves.load(Ordering::Relaxed) as usize)
             .set("index_loads", self.index_loads.load(Ordering::Relaxed) as usize)
             .set("errors", self.errors.load(Ordering::Relaxed) as usize)

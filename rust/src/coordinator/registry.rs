@@ -29,16 +29,89 @@
 
 use crate::coordinator::config::{CoordinatorConfig, DEFAULT_SCHEME};
 use crate::coordinator::metrics::{Metrics, SchemeCounters};
+use crate::coordinator::request::{sketch_value_from_json, sketch_value_to_json};
 use crate::lsh::sharded::ShardedIndex;
+use crate::lsh::topk::{Scored, TopK};
 use crate::lsh::LshParams;
 use crate::sketch::sketcher::{DynSketcher, SketchValue};
 use crate::sketch::spec::{SketchScheme, SketchSpec};
 use crate::sketch::Scratch;
-use crate::util::error::{bail, Result};
+use crate::util::error::{bail, Context, Result};
+use crate::util::json::Json;
 use crate::util::sync::{lock_unpoisoned, read_unpoisoned, write_unpoisoned};
 use crate::util::threadpool::ThreadPool;
 use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, RwLock};
+
+/// Header line of the sketch-store sidecar written next to index
+/// snapshots ([`Scheme::save_index`]): `<SKETCHES_SCHEMA> <count>`.
+const SKETCHES_SCHEMA: &str = "mixtab-sketches-v1";
+
+/// The sidecar path for an index snapshot at `base`.
+fn sketches_path(base: &str) -> PathBuf {
+    PathBuf::from(format!("{base}.sketches"))
+}
+
+/// Write the sketch store next to an index snapshot: a header line
+/// (`mixtab-sketches-v1 <count>`), then one `<id> <sketch-json>` line per
+/// id in ascending id order (deterministic output for identical stores).
+/// Atomic like the index files: tmp + flush + `sync_all` + rename.
+fn write_sketch_sidecar(path: &Path, store: &HashMap<u32, SketchValue>) -> Result<()> {
+    let tmp = path.with_extension("sketches.tmp");
+    {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        writeln!(w, "{SKETCHES_SCHEMA} {}", store.len())?;
+        let mut ids: Vec<u32> = store.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let json = sketch_value_to_json(&store[&id]);
+            writeln!(w, "{id} {}", crate::util::json::to_string(&json))?;
+        }
+        w.flush()?;
+        w.get_ref().sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Parse a sidecar written by [`write_sketch_sidecar`]. Strict about the
+/// schema line, the declared count, and duplicate ids — a truncated or
+/// doubled-up file is an error, never a silently smaller store.
+fn read_sketch_sidecar(path: &Path) -> Result<HashMap<u32, SketchValue>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines.next().unwrap_or_default();
+    let (schema, count) = header
+        .split_once(' ')
+        .with_context(|| format!("sidecar header '{header}' is not '<schema> <count>'"))?;
+    if schema != SKETCHES_SCHEMA {
+        bail!("sidecar schema '{schema}' != expected '{SKETCHES_SCHEMA}'");
+    }
+    let count: usize = count
+        .parse()
+        .with_context(|| format!("sidecar count '{count}'"))?;
+    let mut store = HashMap::with_capacity(count);
+    for (i, line) in lines.enumerate() {
+        let (id, json) = line
+            .split_once(' ')
+            .with_context(|| format!("sidecar line {} is not '<id> <json>'", i + 2))?;
+        let id: u32 = id.parse().with_context(|| format!("sidecar id '{id}'"))?;
+        let value = sketch_value_from_json(&Json::parse(json)?)
+            .with_context(|| format!("sidecar sketch for id {id}"))?;
+        if store.insert(id, value).is_some() {
+            bail!("sidecar repeats id {id}");
+        }
+    }
+    if store.len() != count {
+        bail!(
+            "sidecar declares {count} sketches but carries {}",
+            store.len()
+        );
+    }
+    Ok(store)
+}
 
 /// One named scheme: sketcher + optional sharded index + sketch store.
 pub struct Scheme {
@@ -54,11 +127,16 @@ pub struct Scheme {
     /// validates snapshot provenance against it.
     index_spec: Option<(SketchSpec, LshParams)>,
     /// Sketches of inserted sets, keyed by id, produced by **this
-    /// scheme's own sketcher** at insert time. `estimate` reads these; a
-    /// sketch is k coordinates, far smaller than the raw set it replaced
-    /// in the pre-PR5 default-scheme store. Not part of index snapshots
-    /// (documented on [`Self::load_index`]).
+    /// scheme's own sketcher** at insert time. `estimate` and
+    /// `query_topk` read these; a sketch is k coordinates, far smaller
+    /// than the raw set it replaced in the pre-PR5 default-scheme store.
+    /// Persisted alongside index snapshots as a sidecar (documented on
+    /// [`Self::save_index`] / [`Self::load_index`]).
     sketches: Mutex<HashMap<u32, SketchValue>>,
+    /// Reusable sketching scratch for single-op paths (`insert`,
+    /// `update`, `query_topk`) — one allocation per scheme lifetime
+    /// instead of one per op; batch paths carry their own.
+    scratch: Mutex<Scratch>,
     /// Fan-out pool handed to the configured index and to every index
     /// swapped in by [`Self::load_index`].
     pool: Option<Arc<ThreadPool>>,
@@ -87,6 +165,7 @@ impl Scheme {
             index: RwLock::new(index),
             index_spec: index_spec.map(|(ispec, params, _)| (ispec, params)),
             sketches: Mutex::new(HashMap::new()),
+            scratch: Mutex::new(Scratch::new()),
             pool,
             counters,
         }
@@ -127,20 +206,21 @@ impl Scheme {
         self.sketcher.sketch_dyn(set, scratch)
     }
 
-    /// Insert a set into this scheme's index and record the scheme's own
-    /// sketch of it for `estimate`. Errors for index-less (non-OPH)
-    /// schemes. Index and sketch store are updated one after the other
-    /// (not atomically together): a concurrent `estimate` racing an
-    /// `insert` may miss the id, exactly as it would have a moment
-    /// earlier.
-    pub fn insert(&self, id: u32, set: Vec<u32>) -> Result<()> {
+    /// Shared write-through path for [`Self::insert`] and
+    /// [`Self::update`]: upsert the index (any prior postings for the id
+    /// are purged — [`crate::lsh::index::LshIndex::insert_sketch`]) and
+    /// overwrite the stored sketch. Index and sketch store are updated
+    /// one after the other (not atomically together): a concurrent
+    /// `estimate` racing a write may miss the id, exactly as it would
+    /// have a moment earlier. The single-op sketch reuses the scheme's
+    /// hoisted scratch — no per-op allocation on this hot path.
+    fn write_through(&self, id: u32, set: &[u32]) -> Result<()> {
         {
             let guard = read_unpoisoned(&self.index);
             let Some(index) = guard.as_ref() else {
                 return self.no_index();
             };
-            let shard = index.insert(id, &set);
-            Metrics::inc(&self.counters.inserts);
+            let shard = index.insert(id, set);
             // A loaded snapshot may serve more shards than the counter
             // block registered at startup; out-of-range shards simply go
             // uncounted per-shard (the scheme totals stay exact).
@@ -150,9 +230,99 @@ impl Scheme {
         }
         let value = self
             .sketcher
-            .sketch_dyn(&set, &mut Scratch::with_capacity(set.len()));
+            .sketch_dyn(set, &mut lock_unpoisoned(&self.scratch));
         lock_unpoisoned(&self.sketches).insert(id, value);
         Ok(())
+    }
+
+    /// Insert a set into this scheme's index and record the scheme's own
+    /// sketch of it for `estimate`/`query_topk`. Re-inserting an
+    /// existing id is an upsert — old postings never linger. Errors for
+    /// index-less (non-OPH) schemes.
+    pub fn insert(&self, id: u32, set: Vec<u32>) -> Result<()> {
+        self.write_through(id, &set)?;
+        Metrics::inc(&self.counters.inserts);
+        Ok(())
+    }
+
+    /// Update (delete + insert under one shard lock) `id` with new
+    /// content. Functionally the same upsert as [`Self::insert`] — the
+    /// separate op exists so churn workloads are distinguishable in
+    /// metrics and routing.
+    pub fn update(&self, id: u32, set: Vec<u32>) -> Result<()> {
+        self.write_through(id, &set)?;
+        Metrics::inc(&self.counters.updates);
+        Ok(())
+    }
+
+    /// Delete `id`: tombstone it in the index (compaction reclaims the
+    /// postings — [`crate::lsh::sharded::ShardedIndex::delete`]) and drop
+    /// its stored sketch. Returns whether the id was live. Errors for
+    /// index-less schemes.
+    pub fn delete(&self, id: u32) -> Result<bool> {
+        let existed = {
+            let guard = read_unpoisoned(&self.index);
+            let Some(index) = guard.as_ref() else {
+                return self.no_index();
+            };
+            index.delete(id).1
+        };
+        lock_unpoisoned(&self.sketches).remove(&id);
+        Metrics::inc(&self.counters.deletes);
+        Ok(existed)
+    }
+
+    /// Explicitly compact every shard of this scheme's index, purging
+    /// all tombstoned postings. Returns the number of posting entries
+    /// removed. Errors for index-less schemes.
+    pub fn compact(&self) -> Result<usize> {
+        let guard = read_unpoisoned(&self.index);
+        let Some(index) = guard.as_ref() else {
+            return self.no_index();
+        };
+        Ok(index.compact())
+    }
+
+    /// Tombstoned (deleted, not yet compacted) ids in the serving index.
+    pub fn tombstone_count(&self) -> usize {
+        read_unpoisoned(&self.index)
+            .as_ref()
+            .map_or(0, ShardedIndex::tombstone_count)
+    }
+
+    /// Top-k serving: retrieve the LSH candidate set, then re-rank it
+    /// with this scheme's estimator over the stored sketches, keeping
+    /// the k best in a bounded heap ([`TopK`]). Results are (id, score)
+    /// pairs, score descending with ties broken by ascending id.
+    /// Candidates without a stored sketch (possible only for a corpus
+    /// restored from a pre-sidecar snapshot and not re-inserted) are
+    /// skipped — they cannot be scored. Errors for index-less schemes.
+    pub fn query_topk(&self, set: &[u32], k: usize) -> Result<Vec<Scored>> {
+        let candidates = {
+            let guard = read_unpoisoned(&self.index);
+            let Some(index) = guard.as_ref() else {
+                return self.no_index();
+            };
+            let (ids, per_shard) = index.query_fanout(set);
+            for (counter, n) in self.counters.shard_candidates.iter().zip(per_shard) {
+                Metrics::add(counter, n as u64);
+            }
+            ids
+        };
+        let probe = self
+            .sketcher
+            .sketch_dyn(set, &mut lock_unpoisoned(&self.scratch));
+        let mut top = TopK::new(k);
+        {
+            let store = lock_unpoisoned(&self.sketches);
+            for id in candidates {
+                if let Some(stored) = store.get(&id) {
+                    top.offer(id, probe.estimate(stored)?);
+                }
+            }
+        }
+        Metrics::inc(&self.counters.topk_queries);
+        Ok(top.into_sorted())
     }
 
     /// Batched [`Self::sketch`]: one scratch reused across the batch.
@@ -252,14 +422,25 @@ impl Scheme {
         lock_unpoisoned(&self.sketches).len()
     }
 
-    /// Snapshot this scheme's index to a server-side path; returns the
-    /// entry count. Errors (never panics) for index-less schemes.
+    /// Snapshot this scheme's index to a server-side path, plus the
+    /// sketch store as a `<path>.sketches` sidecar so a reload serves
+    /// `estimate`/`query_topk` without re-insertion; returns the entry
+    /// count. Errors (never panics) for index-less schemes. The sketch
+    /// store is captured after the index files are written — a write
+    /// racing the save can appear in the sidecar but not the index
+    /// (it behaves as if inserted just after the snapshot).
     pub fn save_index(&self, path: &str) -> Result<usize> {
-        let guard = read_unpoisoned(&self.index);
-        let Some(index) = guard.as_ref() else {
-            return self.no_index();
+        let n = {
+            let guard = read_unpoisoned(&self.index);
+            let Some(index) = guard.as_ref() else {
+                return self.no_index();
+            };
+            index.save(path)?
         };
-        index.save(path)
+        let side = sketches_path(path);
+        write_sketch_sidecar(&side, &lock_unpoisoned(&self.sketches))
+            .with_context(|| format!("writing sketch sidecar '{}'", side.display()))?;
+        Ok(n)
     }
 
     /// Replace this scheme's index with a snapshot written by
@@ -270,20 +451,32 @@ impl Scheme {
     /// differ (routing is deterministic per count and snapshots are
     /// self-consistent). Returns `(entries, shards)`.
     ///
-    /// The `estimate` sketch store is not part of index snapshots, and a
-    /// successful load **clears** it: the old sketches describe the
-    /// corpus being replaced, and keeping them would let `estimate`
-    /// answer for ids the restored index no longer contains (or now maps
-    /// to different sets). Loaded ids serve `query` immediately and
-    /// `estimate` after re-insertion. (An `insert` racing the swap can
-    /// still slip its sketch in after the clear while its set misses the
-    /// new index — inherent to replace-by-swap; the id simply behaves as
-    /// if inserted just before the load.)
+    /// The sketch store rides along as the `<path>.sketches` sidecar
+    /// ([`Self::save_index`]): when present it **replaces** the live
+    /// store, so restored ids serve `estimate`/`query_topk` immediately.
+    /// A snapshot without a sidecar (written before the sidecar existed,
+    /// or with it deleted) **clears** the store instead: the old sketches
+    /// describe the corpus being replaced, and keeping them would let
+    /// `estimate` answer for ids the restored index no longer contains
+    /// (or now maps to different sets) — such ids serve `query`
+    /// immediately and `estimate` after re-insertion. (An `insert` racing
+    /// the swap can still slip its sketch in after the store swap while
+    /// its set misses the new index — inherent to replace-by-swap; the id
+    /// simply behaves as if inserted just before the load.)
     pub fn load_index(&self, path: &str) -> Result<(usize, usize)> {
         let Some((ispec, params)) = self.index_spec else {
             return self.no_index();
         };
         let mut loaded = ShardedIndex::load(path)?;
+        let side = sketches_path(path);
+        let restored = if side.exists() {
+            Some(
+                read_sketch_sidecar(&side)
+                    .with_context(|| format!("reading sketch sidecar '{}'", side.display()))?,
+            )
+        } else {
+            None
+        };
         // Normalise both specs to the index's structural bin count before
         // comparing: configured specs keep their nominal k (the index
         // overrides it), plain snapshots record k = K·L.
@@ -302,13 +495,19 @@ impl Scheme {
         }
         loaded.set_pool(self.pool.clone());
         let (entries, shards) = (loaded.len(), loaded.n_shards());
-        // Clear the stale sketches under the index write lock so no
+        // Swap the sketch store under the index write lock so no
         // `estimate` can observe the new index paired with the old
         // corpus's sketches. (No other path holds the sketch-store lock
         // while waiting on the index lock, so the nesting cannot
         // deadlock.)
         let mut guard = write_unpoisoned(&self.index);
-        lock_unpoisoned(&self.sketches).clear();
+        {
+            let mut store = lock_unpoisoned(&self.sketches);
+            match restored {
+                Some(map) => *store = map,
+                None => store.clear(),
+            }
+        }
         *guard = Some(loaded);
         Ok((entries, shards))
     }
@@ -549,17 +748,17 @@ mod tests {
         assert!(fast.query(&sets[0]).unwrap().contains(&0));
         assert!(fast.estimate(0, 1).is_ok());
 
-        // A *successful* load clears the sketch store: the replaced
-        // corpus's sketches must not keep serving estimates against the
-        // restored index.
+        // A *successful* load replaces the sketch store with the sidecar
+        // written at save time — estimates keep serving.
+        let before = fast.estimate(0, 1).unwrap();
         let (entries, shards) = fast.load_index(&snap).unwrap();
         assert_eq!((entries, shards), (sets.len(), 3));
-        assert_eq!(fast.sketch_store_len(), 0);
-        assert!(fast.estimate(0, 1).is_err());
+        assert_eq!(fast.sketch_store_len(), sets.len());
+        assert_eq!(fast.estimate(0, 1).unwrap(), before);
         assert!(fast.query(&sets[0]).unwrap().contains(&0));
 
-        // Reload into a *fresh* registry: queries serve, estimate does
-        // not (the sketch store is not part of snapshots).
+        // Reload into a *fresh* registry: queries, estimates and top-k
+        // all serve straight from the snapshot + sidecar pair.
         let metrics2 = Metrics::new();
         let reg2 = SchemeRegistry::from_config(&registry_cfg(), &metrics2, None);
         let fast2 = reg2.get(Some("fast")).unwrap();
@@ -569,7 +768,82 @@ mod tests {
         for (i, s) in sets.iter().enumerate() {
             assert!(fast2.query(s).unwrap().contains(&(i as u32)), "set {i}");
         }
+        assert_eq!(fast2.estimate(0, 1).unwrap(), before);
+        let top = fast2.query_topk(&sets[0], 3).unwrap();
+        assert_eq!(top.first().map(|s| s.id), Some(0));
+
+        // Pre-sidecar snapshots (no `.sketches` file) still load, and
+        // clear the store: queries serve, estimate needs re-insertion.
+        std::fs::remove_file(sketches_path(&snap)).unwrap();
+        let (entries, _) = fast2.load_index(&snap).unwrap();
+        assert_eq!(entries, sets.len());
+        assert_eq!(fast2.sketch_store_len(), 0);
         assert!(fast2.estimate(0, 1).is_err());
+        assert!(fast2.query(&sets[0]).unwrap().contains(&0));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The mutable-corpus surface: delete tombstones + drops the stored
+    /// sketch, update supersedes content, compact reclaims postings, and
+    /// `query_topk` never surfaces a deleted or superseded id.
+    #[test]
+    fn delete_update_compact_and_topk() {
+        let metrics = Metrics::new();
+        let reg = SchemeRegistry::from_config(&registry_cfg(), &metrics, None);
+        let fast = reg.get(Some("fast")).unwrap();
+        let sets: Vec<Vec<u32>> = (0..10u32)
+            .map(|i| (i * 50..i * 50 + 80).collect())
+            .collect();
+        for (i, s) in sets.iter().enumerate() {
+            fast.insert(i as u32, s.clone()).unwrap();
+        }
+
+        // Top-k over the full corpus: the exact-match id ranks first
+        // with score 1.0, and results are score-descending.
+        let top = fast.query_topk(&sets[3], 5).unwrap();
+        assert_eq!(top.first().map(|s| (s.id, s.score)), Some((3, 1.0)));
+        for w in top.windows(2) {
+            assert!(w[0].score >= w[1].score, "{top:?}");
+        }
+
+        // Delete: gone from query, top-k, estimate and the store.
+        assert!(fast.delete(3).unwrap());
+        assert!(!fast.delete(3).unwrap(), "second delete reports not-live");
+        assert!(!fast.query(&sets[3]).unwrap().contains(&3));
+        assert!(fast.query_topk(&sets[3], 5).unwrap().iter().all(|s| s.id != 3));
+        assert!(fast.estimate(3, 4).is_err());
+        assert_eq!(fast.sketch_store_len(), sets.len() - 1);
+        assert_eq!(fast.index_len(), sets.len() - 1);
+
+        // Update supersedes: id 4 now holds set 8's content, so probing
+        // the old content no longer surfaces it anywhere.
+        fast.update(4, sets[8].clone()).unwrap();
+        assert!(!fast.query(&sets[4]).unwrap().contains(&4));
+        assert!(fast.query(&sets[8]).unwrap().contains(&4));
+        assert!(fast.query_topk(&sets[4], 5).unwrap().iter().all(|s| s.id != 4));
+        assert_eq!(fast.estimate(4, 8).unwrap(), 1.0);
+
+        // Explicit compact purges the tombstoned postings and keeps
+        // results identical.
+        assert!(fast.tombstone_count() > 0);
+        assert!(fast.compact().unwrap() > 0);
+        assert_eq!(fast.tombstone_count(), 0);
+        assert!(!fast.query(&sets[3]).unwrap().contains(&3));
+        assert!(fast.query(&sets[8]).unwrap().contains(&4));
+
+        // Index-less schemes error cleanly on every mutable-corpus op.
+        let dense = reg.get(Some("dense")).unwrap();
+        assert!(dense.delete(1).is_err());
+        assert!(dense.update(1, vec![1, 2]).is_err());
+        assert!(dense.compact().is_err());
+        assert!(dense.query_topk(&[1, 2], 3).is_err());
+
+        // Counters tracked the op mix.
+        let s = metrics.snapshot();
+        let c = s.get("schemes").unwrap().get("fast").unwrap();
+        assert_eq!(c.get("inserts").unwrap().as_i64(), Some(10));
+        assert_eq!(c.get("deletes").unwrap().as_i64(), Some(2));
+        assert_eq!(c.get("updates").unwrap().as_i64(), Some(1));
+        assert!(c.get("topk_queries").unwrap().as_i64().unwrap() >= 3);
     }
 }

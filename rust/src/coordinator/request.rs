@@ -43,6 +43,33 @@ pub enum Request {
         set: Vec<u32>,
         scheme: Option<String>,
     },
+    /// Delete a stored id from a scheme's index (tombstone + sketch-store
+    /// drop); reports whether the id was live. Tombstoned postings are
+    /// reclaimed by compaction.
+    LshDelete {
+        id: u32,
+        scheme: Option<String>,
+    },
+    /// Replace a stored id's content (delete + insert as one op). The
+    /// old postings are purged, never left serving stale candidates.
+    LshUpdate {
+        id: u32,
+        set: Vec<u32>,
+        scheme: Option<String>,
+    },
+    /// Top-k serving: LSH candidate retrieval re-ranked by the scheme's
+    /// estimator over stored sketches; returns the k best (id, score)
+    /// pairs, score-descending.
+    LshQueryTopK {
+        set: Vec<u32>,
+        k: usize,
+        scheme: Option<String>,
+    },
+    /// Explicitly compact a scheme's index, purging all tombstoned
+    /// postings; reports how many posting entries were reclaimed.
+    Compact {
+        scheme: Option<String>,
+    },
     /// Similarity estimate between two stored ids, compared from the
     /// sketches the scheme stored at insert time (never re-sketched).
     Estimate {
@@ -104,6 +131,24 @@ pub enum Response {
     },
     Candidates {
         ids: Vec<u32>,
+    },
+    /// A `delete`: whether the id was live when deleted.
+    Deleted {
+        id: u32,
+        existed: bool,
+    },
+    Updated {
+        id: u32,
+    },
+    /// A `query_topk`: parallel arrays, `ids[i]` scored `scores[i]`,
+    /// score-descending (ties broken by ascending id).
+    TopK {
+        ids: Vec<u32>,
+        scores: Vec<f64>,
+    },
+    /// A `compact`: posting entries reclaimed across all shards.
+    Compacted {
+        purged: usize,
     },
     Estimate {
         jaccard: f64,
@@ -317,6 +362,46 @@ impl Request {
                     scheme: opt_str(&j, "scheme")?,
                 }
             }
+            "delete" => {
+                check_keys(&j, op, &["id", "scheme"])?;
+                Request::LshDelete {
+                    id: j
+                        .get("id")
+                        .and_then(Json::as_i64)
+                        .and_then(|x| u32::try_from(x).ok())
+                        .context("missing 'id'")?,
+                    scheme: opt_str(&j, "scheme")?,
+                }
+            }
+            "update" => {
+                check_keys(&j, op, &["id", "set", "scheme"])?;
+                Request::LshUpdate {
+                    id: j
+                        .get("id")
+                        .and_then(Json::as_i64)
+                        .and_then(|x| u32::try_from(x).ok())
+                        .context("missing 'id'")?,
+                    set: arr_u32(&j, "set")?,
+                    scheme: opt_str(&j, "scheme")?,
+                }
+            }
+            "query_topk" => {
+                check_keys(&j, op, &["set", "k", "scheme"])?;
+                Request::LshQueryTopK {
+                    set: arr_u32(&j, "set")?,
+                    k: j
+                        .get("k")
+                        .and_then(Json::as_usize)
+                        .context("missing 'k'")?,
+                    scheme: opt_str(&j, "scheme")?,
+                }
+            }
+            "compact" => {
+                check_keys(&j, op, &["scheme"])?;
+                Request::Compact {
+                    scheme: opt_str(&j, "scheme")?,
+                }
+            }
             "estimate" => {
                 check_keys(&j, op, &["a", "b", "scheme"])?;
                 Request::Estimate {
@@ -438,6 +523,40 @@ impl Request {
                     None => j,
                 }
             }
+            Request::LshDelete { id, scheme } => {
+                let j = Json::obj().set("op", "delete").set("id", *id as usize);
+                match scheme {
+                    Some(s) => j.set("scheme", s.as_str()),
+                    None => j,
+                }
+            }
+            Request::LshUpdate { id, set, scheme } => {
+                let j = Json::obj()
+                    .set("op", "update")
+                    .set("id", *id as usize)
+                    .set("set", set.iter().map(|&x| x as usize).collect::<Vec<_>>());
+                match scheme {
+                    Some(s) => j.set("scheme", s.as_str()),
+                    None => j,
+                }
+            }
+            Request::LshQueryTopK { set, k, scheme } => {
+                let j = Json::obj()
+                    .set("op", "query_topk")
+                    .set("set", set.iter().map(|&x| x as usize).collect::<Vec<_>>())
+                    .set("k", *k);
+                match scheme {
+                    Some(s) => j.set("scheme", s.as_str()),
+                    None => j,
+                }
+            }
+            Request::Compact { scheme } => {
+                let j = Json::obj().set("op", "compact");
+                match scheme {
+                    Some(s) => j.set("scheme", s.as_str()),
+                    None => j,
+                }
+            }
             Request::Estimate { a, b, scheme } => {
                 let j = Json::obj()
                     .set("op", "estimate")
@@ -532,6 +651,27 @@ impl Response {
                 .set("ok", true)
                 .set("type", "candidates")
                 .set("ids", ids.iter().map(|&x| x as usize).collect::<Vec<_>>()),
+            Response::Deleted { id, existed } => Json::obj()
+                .set("ok", true)
+                .set("type", "deleted")
+                .set("id", *id as usize)
+                .set("existed", *existed),
+            Response::Updated { id } => Json::obj()
+                .set("ok", true)
+                .set("type", "updated")
+                .set("id", *id as usize),
+            Response::TopK { ids, scores } => Json::obj()
+                .set("ok", true)
+                .set("type", "topk")
+                .set("ids", ids.iter().map(|&x| x as usize).collect::<Vec<_>>())
+                .set(
+                    "scores",
+                    Json::Arr(scores.iter().map(|&v| Json::Num(v)).collect()),
+                ),
+            Response::Compacted { purged } => Json::obj()
+                .set("ok", true)
+                .set("type", "compacted")
+                .set("purged", *purged),
             Response::Estimate { jaccard } => Json::obj()
                 .set("ok", true)
                 .set("type", "estimate")
@@ -626,6 +766,38 @@ impl Response {
             "candidates" => Response::Candidates {
                 ids: arr_u32(&j, "ids")?,
             },
+            "deleted" => Response::Deleted {
+                id: j
+                    .get("id")
+                    .and_then(Json::as_i64)
+                    .and_then(|x| u32::try_from(x).ok())
+                    .context("id")?,
+                existed: j
+                    .get("existed")
+                    .and_then(Json::as_bool)
+                    .context("existed")?,
+            },
+            "updated" => Response::Updated {
+                id: j
+                    .get("id")
+                    .and_then(Json::as_i64)
+                    .and_then(|x| u32::try_from(x).ok())
+                    .context("id")?,
+            },
+            "topk" => {
+                let ids = arr_u32(&j, "ids")?;
+                let scores = arr_f64(&j, "scores")?;
+                if ids.len() != scores.len() {
+                    bail!("topk ids/scores length mismatch");
+                }
+                Response::TopK { ids, scores }
+            }
+            "compacted" => Response::Compacted {
+                purged: j
+                    .get("purged")
+                    .and_then(Json::as_usize)
+                    .context("purged")?,
+            },
             "estimate" => Response::Estimate {
                 jaccard: j.get("jaccard").and_then(Json::as_f64).context("jaccard")?,
             },
@@ -706,6 +878,38 @@ mod tests {
             },
             Request::LshQuery {
                 set: vec![5],
+                scheme: Some("fast".into()),
+            },
+            Request::LshDelete {
+                id: 6,
+                scheme: None,
+            },
+            Request::LshDelete {
+                id: 7,
+                scheme: Some("fast".into()),
+            },
+            Request::LshUpdate {
+                id: 8,
+                set: vec![9, 10],
+                scheme: None,
+            },
+            Request::LshUpdate {
+                id: 9,
+                set: vec![11],
+                scheme: Some("fast".into()),
+            },
+            Request::LshQueryTopK {
+                set: vec![1, 2],
+                k: 10,
+                scheme: None,
+            },
+            Request::LshQueryTopK {
+                set: vec![3],
+                k: 1,
+                scheme: Some("fast".into()),
+            },
+            Request::Compact { scheme: None },
+            Request::Compact {
                 scheme: Some("fast".into()),
             },
             Request::Estimate {
@@ -793,6 +997,24 @@ mod tests {
             },
             Response::Inserted { id: 9 },
             Response::Candidates { ids: vec![1, 2, 3] },
+            Response::Deleted {
+                id: 4,
+                existed: true,
+            },
+            Response::Deleted {
+                id: 5,
+                existed: false,
+            },
+            Response::Updated { id: 6 },
+            Response::TopK {
+                ids: vec![3, 1, 2],
+                scores: vec![1.0, 0.5, 0.25],
+            },
+            Response::TopK {
+                ids: vec![],
+                scores: vec![],
+            },
+            Response::Compacted { purged: 96 },
             Response::Estimate { jaccard: 0.75 },
             Response::Saved {
                 path: "/tmp/x.mxls".into(),
@@ -822,6 +1044,18 @@ mod tests {
         assert!(Request::from_json_line("not json").is_err());
         // Negative ids rejected.
         assert!(Request::from_json_line("{\"op\":\"insert\",\"id\":-1,\"set\":[]}").is_err());
+        assert!(Request::from_json_line("{\"op\":\"delete\",\"id\":-1}").is_err());
+        assert!(Request::from_json_line("{\"op\":\"update\",\"id\":-1,\"set\":[1]}").is_err());
+        // The mutation ops require their payload fields.
+        assert!(Request::from_json_line("{\"op\":\"delete\"}").is_err());
+        assert!(Request::from_json_line("{\"op\":\"update\",\"id\":1}").is_err());
+        assert!(Request::from_json_line("{\"op\":\"query_topk\",\"set\":[1]}").is_err());
+        assert!(Request::from_json_line("{\"op\":\"query_topk\",\"k\":3}").is_err());
+        // Mismatched topk response arrays are rejected client-side.
+        assert!(Response::from_json_line(
+            "{\"ok\":true,\"type\":\"topk\",\"ids\":[1,2],\"scores\":[0.5]}"
+        )
+        .is_err());
         // Scheme-aware sketch: missing set / unknown scheme rejected.
         assert!(Request::from_json_line("{\"op\":\"sketch\"}").is_err());
         // A non-string spec/scheme is an error, not a fallback to the default.
@@ -881,6 +1115,11 @@ mod tests {
             "{\"op\":\"query_doc\",\"text\":\"t\",\"shceme\":\"x\"}",
             "{\"op\":\"save_index\",\"path\":\"p\",\"wibble\":1}",
             "{\"op\":\"load_index\",\"path\":\"p\",\"wibble\":1}",
+            "{\"op\":\"delete\",\"id\":1,\"set\":[2]}",
+            "{\"op\":\"delete\",\"id\":1,\"shceme\":\"fast\"}",
+            "{\"op\":\"update\",\"id\":1,\"set\":[1],\"k\":3}",
+            "{\"op\":\"query_topk\",\"set\":[1],\"k\":3,\"spec\":\"oph(k=8)\"}",
+            "{\"op\":\"compact\",\"path\":\"p\"}",
             "{\"op\":\"oph\",\"set\":[1],\"scheme\":\"fast\"}",
             "{\"op\":\"stats\",\"scheme\":\"fast\"}",
             "{\"op\":\"fh\",\"indices\":[1],\"values\":[1.0],\"scheme\":\"x\"}",

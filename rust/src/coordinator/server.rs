@@ -20,7 +20,7 @@
 //! The two lanes share one admission path and one outbound queue.
 //!
 //! **Cross-connection batching.** Batchable ops (`sketch` without an
-//! ad-hoc spec, `insert`, `query`) route through an
+//! ad-hoc spec, `insert`, `delete`, `update`, `query`) route through an
 //! [`OpBatcher`](crate::coordinator::batcher::OpBatcher) that coalesces
 //! jobs *across connections* into one registry call per scheme
 //! (fill-or-deadline dispatch). A full batch queue sheds the op to the
@@ -478,8 +478,8 @@ fn run_guarded(handler: &dyn Handler, req: Request) -> Response {
 }
 
 /// The batchable subset: scheme-routed `sketch` (no ad-hoc spec),
-/// `insert`, `query`, and the doc ops (shingled here, before enqueue).
-/// Everything else takes the direct worker path.
+/// `insert`, `delete`, `update`, `query`, and the doc ops (shingled here,
+/// before enqueue). Everything else takes the direct worker path.
 fn to_batch_op(req: Request) -> std::result::Result<(Option<String>, BatchOp), Request> {
     match req {
         Request::Sketch {
@@ -489,6 +489,8 @@ fn to_batch_op(req: Request) -> std::result::Result<(Option<String>, BatchOp), R
         } => Ok((scheme, BatchOp::Sketch { set })),
         Request::LshInsert { id, set, scheme } => Ok((scheme, BatchOp::Insert { id, set })),
         Request::LshQuery { set, scheme } => Ok((scheme, BatchOp::Query { set })),
+        Request::LshDelete { id, scheme } => Ok((scheme, BatchOp::Delete { id })),
+        Request::LshUpdate { id, set, scheme } => Ok((scheme, BatchOp::Update { id, set })),
         // Doc ops shingle *before* enqueue, so they coalesce into the same
         // insert/query batches as raw-set ops. Tokenization is pure CPU on
         // the event-loop-adjacent path; the direct path uses the identical
@@ -520,6 +522,8 @@ fn from_batch_op(scheme: Option<String>, op: BatchOp) -> Request {
         },
         BatchOp::Insert { id, set } => Request::LshInsert { id, set, scheme },
         BatchOp::Query { set } => Request::LshQuery { set, scheme },
+        BatchOp::Delete { id } => Request::LshDelete { id, scheme },
+        BatchOp::Update { id, set } => Request::LshUpdate { id, set, scheme },
     }
 }
 

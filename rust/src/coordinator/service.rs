@@ -6,11 +6,12 @@
 //!   rounding; `rust/tests/runtime_artifacts.rs` enforces it.
 //! * OPH sketches — native sketcher (hashing dominates; batching buys
 //!   nothing for single sets) shared with the LSH index.
-//! * LSH insert/query/estimate/save/load — routed through the
-//!   [`SchemeRegistry`]: one sharded index (shard-level locking, parallel
-//!   fan-out on the shared pool when configured) + sketch store per named
-//!   scheme. Every scheme-aware op resolves its optional `scheme` field
-//!   with the same semantics: absent = default, unknown = wire error.
+//! * LSH insert/delete/update/query/query_topk/compact/estimate/save/load
+//!   — routed through the [`SchemeRegistry`]: one sharded index
+//!   (shard-level locking, parallel fan-out on the shared pool when
+//!   configured) + sketch store per named scheme. Every scheme-aware op
+//!   resolves its optional `scheme` field with the same semantics:
+//!   absent = default, unknown = wire error.
 //!
 //! The service object is `Send + Sync`; the TCP front-end and the examples
 //! call it from many threads. **No wire request may panic a connection
@@ -258,6 +259,14 @@ impl Coordinator {
                 self.handle_insert(id, set, scheme.as_deref())
             }
             Request::LshQuery { set, scheme } => self.handle_query(&set, scheme.as_deref()),
+            Request::LshDelete { id, scheme } => self.handle_delete(id, scheme.as_deref()),
+            Request::LshUpdate { id, set, scheme } => {
+                self.handle_update(id, set, scheme.as_deref())
+            }
+            Request::LshQueryTopK { set, k, scheme } => {
+                self.handle_query_topk(&set, k, scheme.as_deref())
+            }
+            Request::Compact { scheme } => self.handle_compact(scheme.as_deref()),
             Request::Estimate { a, b, scheme } => {
                 // Served from the scheme's stored sketches — sketched
                 // once at insert time by the scheme's own sketcher, never
@@ -433,6 +442,78 @@ impl Coordinator {
         }
     }
 
+    /// Delete a stored id from a scheme's index (tombstone; compaction
+    /// reclaims postings) and its stored sketch. Success-only counter,
+    /// as with [`Self::handle_insert`] — an unknown *id* is still a
+    /// success (`existed: false`), only bad schemes are errors.
+    fn handle_delete(&self, id: u32, scheme: Option<&str>) -> Response {
+        match self.registry.get(scheme).and_then(|s| s.delete(id)) {
+            Ok(existed) => {
+                Metrics::inc(&self.metrics.lsh_deletes);
+                Response::Deleted { id, existed }
+            }
+            Err(e) => {
+                Metrics::inc(&self.metrics.errors);
+                Response::Error {
+                    message: e.to_string(),
+                }
+            }
+        }
+    }
+
+    /// Replace a stored id's content — delete + insert as one op; the old
+    /// postings are purged under the shard lock, never left serving.
+    fn handle_update(&self, id: u32, set: Vec<u32>, scheme: Option<&str>) -> Response {
+        match self.registry.get(scheme).and_then(|s| s.update(id, set)) {
+            Ok(()) => {
+                Metrics::inc(&self.metrics.lsh_updates);
+                Response::Updated { id }
+            }
+            Err(e) => {
+                Metrics::inc(&self.metrics.errors);
+                Response::Error {
+                    message: e.to_string(),
+                }
+            }
+        }
+    }
+
+    /// Top-k serving: LSH candidates re-ranked by the scheme's estimator
+    /// over its stored sketches (bounded heap, deterministic order).
+    fn handle_query_topk(&self, set: &[u32], k: usize, scheme: Option<&str>) -> Response {
+        match self.registry.get(scheme).and_then(|s| s.query_topk(set, k)) {
+            Ok(scored) => {
+                Metrics::inc(&self.metrics.topk_queries);
+                Response::TopK {
+                    ids: scored.iter().map(|s| s.id).collect(),
+                    scores: scored.iter().map(|s| s.score).collect(),
+                }
+            }
+            Err(e) => {
+                Metrics::inc(&self.metrics.errors);
+                Response::Error {
+                    message: e.to_string(),
+                }
+            }
+        }
+    }
+
+    /// Explicitly compact a scheme's index, purging tombstoned postings.
+    fn handle_compact(&self, scheme: Option<&str>) -> Response {
+        match self.registry.get(scheme).and_then(|s| s.compact()) {
+            Ok(purged) => {
+                Metrics::inc(&self.metrics.compactions);
+                Response::Compacted { purged }
+            }
+            Err(e) => {
+                Metrics::inc(&self.metrics.errors);
+                Response::Error {
+                    message: e.to_string(),
+                }
+            }
+        }
+    }
+
     /// Fan-out query over a scheme's sharded index (success-only counter,
     /// as with [`Self::handle_insert`]).
     fn handle_query(&self, set: &[u32], scheme: Option<&str>) -> Response {
@@ -576,18 +657,24 @@ impl Coordinator {
 
 impl OpExecutor for Coordinator {
     /// Execute one cross-connection op batch. Jobs are grouped by scheme,
-    /// and within each scheme all inserts run before all sketches and
-    /// queries — a valid linearization of ops that were submitted
-    /// concurrently (a client needing insert→query ordering must await
-    /// the insert response, which is true against any concurrent server;
-    /// the server's per-connection ordered lane dispatches at most one
-    /// untagged op per connection at a time, so no single connection's
-    /// sequential stream is ever reordered by this grouping). Per-item
-    /// responses and metrics are bit-identical to the direct path.
+    /// and within each scheme all **mutations** (insert/delete/update)
+    /// run before all sketches and queries — a valid linearization of ops
+    /// that were submitted concurrently (a client needing mutation→query
+    /// ordering must await the mutation response, which is true against
+    /// any concurrent server; the server's per-connection ordered lane
+    /// dispatches at most one untagged op per connection at a time, so no
+    /// single connection's sequential stream is ever reordered by this
+    /// grouping). Mutations keep their **arrival order** relative to each
+    /// other: unlike insert-vs-query, reordering a delete past an insert
+    /// of the same id changes the final corpus, so the mutation lane is
+    /// order-preserving, with runs of consecutive inserts coalesced into
+    /// one batched call. Per-item responses and metrics are bit-identical
+    /// to the direct path.
     fn run_ops(&self, jobs: Vec<OpJob>) {
         #[derive(Default)]
         struct Group {
-            inserts: Vec<(usize, (u32, Vec<u32>))>,
+            /// Insert/Delete/Update, arrival order.
+            muts: Vec<(usize, BatchOp)>,
             sketches: Vec<(usize, Vec<u32>)>,
             queries: Vec<(usize, Vec<u32>)>,
         }
@@ -599,7 +686,9 @@ impl OpExecutor for Coordinator {
             dones.push(done);
             let g = groups.entry(scheme).or_default();
             match op {
-                BatchOp::Insert { id, set } => g.inserts.push((slot, (id, set))),
+                BatchOp::Insert { .. } | BatchOp::Delete { .. } | BatchOp::Update { .. } => {
+                    g.muts.push((slot, op))
+                }
                 BatchOp::Sketch { set } => g.sketches.push((slot, set)),
                 BatchOp::Query { set } => g.queries.push((slot, set)),
             }
@@ -607,10 +696,33 @@ impl OpExecutor for Coordinator {
         let mut responses: Vec<Option<Response>> = (0..n).map(|_| None).collect();
         for (scheme, g) in groups {
             let name = scheme.as_deref();
-            if !g.inserts.is_empty() {
-                let (slots, items): (Vec<_>, Vec<_>) = g.inserts.into_iter().unzip();
-                for (slot, resp) in slots.into_iter().zip(self.handle_insert_batch(items, name)) {
-                    responses[slot] = Some(resp);
+            // Mutation lane: arrival order, consecutive inserts batched.
+            let mut pending: Vec<(usize, (u32, Vec<u32>))> = Vec::new();
+            for (slot, op) in g.muts {
+                if let BatchOp::Insert { id, set } = op {
+                    pending.push((slot, (id, set)));
+                    continue;
+                }
+                if !pending.is_empty() {
+                    let (slots, items): (Vec<_>, Vec<_>) = pending.drain(..).unzip();
+                    for (s, resp) in slots.into_iter().zip(self.handle_insert_batch(items, name))
+                    {
+                        responses[s] = Some(resp);
+                    }
+                }
+                responses[slot] = Some(match op {
+                    BatchOp::Delete { id } => self.handle_delete(id, name),
+                    BatchOp::Update { id, set } => self.handle_update(id, set, name),
+                    // Unreachable by the grouping above; keep panic-free.
+                    _ => Response::Error {
+                        message: "internal: non-mutation op in mutation lane".into(),
+                    },
+                });
+            }
+            if !pending.is_empty() {
+                let (slots, items): (Vec<_>, Vec<_>) = pending.into_iter().unzip();
+                for (s, resp) in slots.into_iter().zip(self.handle_insert_batch(items, name)) {
+                    responses[s] = Some(resp);
                 }
             }
             if !g.sketches.is_empty() {
@@ -1149,6 +1261,189 @@ mod tests {
         for key in ["lsh_inserts", "sketch_requests", "lsh_queries", "errors"] {
             assert_eq!(a.get(key).unwrap().as_i64(), b.get(key).unwrap().as_i64(), "{key}");
         }
+    }
+
+    /// The mutable-corpus wire ops: delete, update, compact and
+    /// `query_topk` all serve through `handle`, with tombstone-filtered
+    /// candidates, success-only counters and clean errors.
+    #[test]
+    fn delete_update_topk_wire_ops() {
+        let c = Coordinator::new(native_cfg());
+        let sets: Vec<Vec<u32>> = (0..8u32).map(|i| (i * 60..i * 60 + 90).collect()).collect();
+        for (i, s) in sets.iter().enumerate() {
+            c.handle(Request::LshInsert {
+                id: i as u32,
+                set: s.clone(),
+                scheme: None,
+            });
+        }
+        // Top-k: exact match first at score 1.0.
+        let Response::TopK { ids, scores } = c.handle(Request::LshQueryTopK {
+            set: sets[2].clone(),
+            k: 3,
+            scheme: None,
+        }) else {
+            panic!()
+        };
+        assert_eq!(ids.first(), Some(&2));
+        assert_eq!(scores.first(), Some(&1.0));
+        assert_eq!(ids.len(), scores.len());
+        // Delete: reported live, then not; candidates no longer surface it.
+        let Response::Deleted { id: 2, existed: true } = c.handle(Request::LshDelete {
+            id: 2,
+            scheme: None,
+        }) else {
+            panic!()
+        };
+        let Response::Deleted { existed: false, .. } = c.handle(Request::LshDelete {
+            id: 2,
+            scheme: None,
+        }) else {
+            panic!()
+        };
+        let Response::Candidates { ids } = c.handle(Request::LshQuery {
+            set: sets[2].clone(),
+            scheme: None,
+        }) else {
+            panic!()
+        };
+        assert!(!ids.contains(&2));
+        let Response::TopK { ids, .. } = c.handle(Request::LshQueryTopK {
+            set: sets[2].clone(),
+            k: 8,
+            scheme: None,
+        }) else {
+            panic!()
+        };
+        assert!(!ids.contains(&2));
+        // Update supersedes: id 3 now holds set 7's content.
+        let Response::Updated { id: 3 } = c.handle(Request::LshUpdate {
+            id: 3,
+            set: sets[7].clone(),
+            scheme: None,
+        }) else {
+            panic!()
+        };
+        let Response::Candidates { ids } = c.handle(Request::LshQuery {
+            set: sets[3].clone(),
+            scheme: None,
+        }) else {
+            panic!()
+        };
+        assert!(!ids.contains(&3), "superseded content still serving");
+        let Response::Candidates { ids } = c.handle(Request::LshQuery {
+            set: sets[7].clone(),
+            scheme: None,
+        }) else {
+            panic!()
+        };
+        assert!(ids.contains(&3));
+        // Compact reclaims the tombstoned postings; results unchanged.
+        let Response::Compacted { purged } = c.handle(Request::Compact { scheme: None }) else {
+            panic!()
+        };
+        assert!(purged > 0);
+        let Response::Candidates { ids } = c.handle(Request::LshQuery {
+            set: sets[2].clone(),
+            scheme: None,
+        }) else {
+            panic!()
+        };
+        assert!(!ids.contains(&2));
+        // Unknown schemes error cleanly on every new op.
+        for resp in [
+            c.handle(Request::LshDelete {
+                id: 1,
+                scheme: Some("nope".into()),
+            }),
+            c.handle(Request::LshUpdate {
+                id: 1,
+                set: sets[0].clone(),
+                scheme: Some("nope".into()),
+            }),
+            c.handle(Request::LshQueryTopK {
+                set: sets[0].clone(),
+                k: 2,
+                scheme: Some("nope".into()),
+            }),
+            c.handle(Request::Compact {
+                scheme: Some("nope".into()),
+            }),
+        ] {
+            let Response::Error { message } = resp else {
+                panic!("expected unknown-scheme error")
+            };
+            assert!(message.contains("unknown scheme"), "{message}");
+        }
+        // Coordinator-level counters moved (success-only).
+        let Response::Stats { json } = c.handle(Request::Stats) else {
+            panic!()
+        };
+        assert_eq!(json.get("lsh_deletes").unwrap().as_i64(), Some(2));
+        assert_eq!(json.get("lsh_updates").unwrap().as_i64(), Some(1));
+        assert_eq!(json.get("topk_queries").unwrap().as_i64(), Some(2));
+        assert_eq!(json.get("compactions").unwrap().as_i64(), Some(1));
+    }
+
+    /// The batched mutation lane preserves arrival order: an
+    /// insert→delete ends dead, a delete→insert ends live, and an
+    /// insert→update serves the updated content — all within one batch.
+    #[test]
+    fn run_ops_preserves_mutation_order() {
+        use std::sync::mpsc::channel;
+        let c = Coordinator::new(native_cfg());
+        let set_a: Vec<u32> = (0..80).collect();
+        let set_b: Vec<u32> = (500..580).collect();
+        // Seed id 9 so the delete→insert case starts from a live id.
+        c.handle(Request::LshInsert {
+            id: 9,
+            set: set_a.clone(),
+            scheme: None,
+        });
+        let (tx, rx) = channel();
+        let mut jobs = Vec::new();
+        let mut job = |op: BatchOp| {
+            let tx = tx.clone();
+            jobs.push(OpJob {
+                scheme: None,
+                op,
+                done: Box::new(move |resp| {
+                    let _ = tx.send(resp);
+                }),
+            });
+        };
+        // id 1: insert then delete → dead. id 9: delete then re-insert →
+        // live. id 2: insert then update → set_b content.
+        job(BatchOp::Insert { id: 1, set: set_a.clone() });
+        job(BatchOp::Delete { id: 1 });
+        job(BatchOp::Delete { id: 9 });
+        job(BatchOp::Insert { id: 9, set: set_a.clone() });
+        job(BatchOp::Insert { id: 2, set: set_a.clone() });
+        job(BatchOp::Update { id: 2, set: set_b.clone() });
+        drop(tx);
+        c.run_ops(jobs);
+        let responses: Vec<Response> = rx.into_iter().collect();
+        assert_eq!(responses.len(), 6);
+        assert!(
+            !responses.iter().any(|r| matches!(r, Response::Error { .. })),
+            "{responses:?}"
+        );
+        let Response::Candidates { ids } = c.handle(Request::LshQuery {
+            set: set_a.clone(),
+            scheme: None,
+        }) else {
+            panic!()
+        };
+        assert!(!ids.contains(&1), "insert→delete must end dead");
+        assert!(ids.contains(&9), "delete→insert must end live");
+        assert!(!ids.contains(&2), "insert→update left old content");
+        let Response::Candidates { ids } = c.handle(Request::LshQuery {
+            set: set_b,
+            scheme: None,
+        }) else {
+            panic!()
+        };
+        assert!(ids.contains(&2), "updated content not serving");
     }
 
     #[test]

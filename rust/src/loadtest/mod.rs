@@ -8,9 +8,15 @@
 //!    insert-only **load phase**,
 //! 3. run a sustained **mixed phase** of interleaved inserts and queries
 //!    whose op stream is a pure function of the seed,
-//! 4. score recall@k for held-out queries against a sampled brute-force
-//!    oracle ([`oracle`]) over exactly what the server holds,
-//! 5. append one [`store::RunRecord`] row — git sha, timestamp, full
+//! 4. optionally run **churn cycles** (`churn_cycles > 0`): each cycle
+//!    deletes half the mixed-phase ids, updates the other half with fresh
+//!    sets, compacts, then probes the held-out queries — bailing if any
+//!    deleted id comes back as a candidate or if candidate sets grow
+//!    across cycles (the duplicate-insert posting leak's signature),
+//! 5. score recall@k for held-out queries against a sampled brute-force
+//!    oracle ([`oracle`]) over exactly what the server holds — including
+//!    every churn delete/update,
+//! 6. append one [`store::RunRecord`] row — git sha, timestamp, full
 //!    config, QPS, tail latency, recall, peak RSS — to the append-only
 //!    results CSV ([`store`]), the repo's perf trajectory of record.
 //!
@@ -41,6 +47,16 @@ use std::time::Instant;
 
 /// Stream salt for the mixed-phase op coin flips.
 const MIX_SALT: u64 = 0xA11C_E5ED;
+
+/// Stream salt for churn-cycle replacement sets (offset by the cycle
+/// index, so each cycle's updates carry genuinely new content).
+const CHURN_SALT: u64 = 0x0C4A_B1E5;
+
+/// How much the per-cycle mean candidate-set size may exceed cycle 0's
+/// before the churn phase fails the run. The pre-fix index grew postings
+/// on every delete/re-insert cycle, so this gate is what would have
+/// caught the bug.
+const CHURN_CANDIDATE_GROWTH: f64 = 1.10;
 
 /// All knobs of one loadtest run.
 #[derive(Debug, Clone)]
@@ -77,6 +93,9 @@ pub struct LoadtestConfig {
     pub op_batch: usize,
     /// Server request-worker pool width.
     pub request_workers: usize,
+    /// Churn cycles after the mixed phase (0 = churn off). Each cycle
+    /// deletes/updates every mixed-phase id, compacts, and probes.
+    pub churn_cycles: usize,
     /// Root seed for corpus + op stream.
     pub seed: u64,
     /// Threads for corpus generation and the brute-force oracle.
@@ -106,6 +125,7 @@ impl Default for LoadtestConfig {
             shards: 2,
             op_batch: 32,
             request_workers: 4,
+            churn_cycles: 0,
             seed: 42,
             oracle_workers: default_parallelism(),
             quick: false,
@@ -150,9 +170,14 @@ impl LoadtestConfig {
     /// load-bearing) plus every workload knob that shapes the measurement.
     pub fn config_string(&self) -> String {
         let spec = self.coordinator_config().sketch_spec();
+        let churn = if self.churn_cycles > 0 {
+            format!(" churn={}", self.churn_cycles)
+        } else {
+            String::new()
+        };
         format!(
             "spec={spec} lsh={}x{} shards={} op_batch={} request_workers={} \
-             corpus(cluster={},doc_frac={}) seed={}",
+             corpus(cluster={},doc_frac={}) seed={}{churn}",
             self.lsh_k,
             self.lsh_l,
             self.shards,
@@ -288,16 +313,41 @@ pub fn run_at(cfg: &LoadtestConfig, external: Option<SocketAddr>) -> Result<stor
         crate::util::bench::fmt_rate(mixed.qps())
     );
 
-    // Oracle database = exactly what the server now holds, id-aligned:
-    // the corpus under ids 0..sets, plus each mixed-phase *insert* under
-    // id sets+i (query op slots stay empty — J=0 never enters the truth).
     let docs = corpus.docs;
     let corpus::Corpus { sets: mut db, queries, .. } = corpus;
-    db.reserve(cfg.mix_ops);
-    for i in 0..cfg.mix_ops {
-        match cfg.mixed_op(i) {
-            Request::LshInsert { set, .. } => db.push(set),
-            _ => db.push(Vec::new()),
+
+    // The mutable tail of the corpus: every mixed-phase insert,
+    // regenerated from the pure op stream. Churn cycles mutate this view
+    // in lockstep with the server so the oracle scores exactly what the
+    // server holds at the end.
+    let mut extras: Vec<Extra> = (0..cfg.mix_ops)
+        .filter_map(|i| match cfg.mixed_op(i) {
+            Request::LshInsert { id, set, .. } => Some(Extra {
+                slot: cfg.sets + i,
+                id,
+                set,
+                alive: true,
+            }),
+            _ => None,
+        })
+        .collect();
+
+    // Phase 3 (optional): churn cycles — delete/update/compact/probe.
+    let mean_candidates = if cfg.churn_cycles > 0 {
+        let means = churn_phase(addr, cfg, &mut extras, &queries)?;
+        means.last().copied().unwrap_or(0.0)
+    } else {
+        0.0
+    };
+
+    // Oracle database = exactly what the server now holds, id-aligned:
+    // the corpus under ids 0..sets, plus each *live* mixed-phase insert
+    // under id sets+i (query op slots and churn-deleted ids stay empty —
+    // J=0 never enters the truth).
+    db.resize(cfg.sets + cfg.mix_ops, Vec::new());
+    for e in extras {
+        if e.alive {
+            db[e.slot] = e.set;
         }
     }
     let recall = oracle::measure_recall(addr, &db, &queries, cfg.k, cfg.oracle_workers)?;
@@ -308,11 +358,12 @@ pub fn run_at(cfg: &LoadtestConfig, external: Option<SocketAddr>) -> Result<stor
 
     // Server-side counters: straight off the metrics block in-process,
     // via the wire `stats` op when driving an external server.
-    let (server_inserts, server_queries, server_errors) = match &metrics {
+    let (server_inserts, server_queries, server_errors, server_deletes) = match &metrics {
         Some(m) => (
             m.lsh_inserts.load(Ordering::Relaxed),
             m.lsh_queries.load(Ordering::Relaxed),
             m.errors.load(Ordering::Relaxed),
+            m.lsh_deletes.load(Ordering::Relaxed),
         ),
         None => remote_counters(addr)?,
     };
@@ -348,13 +399,193 @@ pub fn run_at(cfg: &LoadtestConfig, external: Option<SocketAddr>) -> Result<stor
         server_inserts,
         server_queries,
         server_errors,
+        churn_cycles: cfg.churn_cycles as u64,
+        server_deletes,
+        mean_candidates,
     })
 }
 
-/// Fetch `(lsh_inserts, lsh_queries, errors)` from an external server's
-/// `stats` op. Both the single-host snapshot and the router snapshot
-/// expose these as top-level keys; anything absent reads as 0.
-fn remote_counters(addr: SocketAddr) -> Result<(u64, u64, u64)> {
+/// One mixed-phase insert, tracked through churn: where it lives in the
+/// oracle db (`slot`), its wire id, and its current content/liveness.
+struct Extra {
+    slot: usize,
+    id: u32,
+    set: Vec<u32>,
+    alive: bool,
+}
+
+/// The replacement set churn cycle `c` installs for `id`.
+fn churn_set(seed: u64, cycle: usize, id: u32) -> Vec<u32> {
+    corpus::extra_set(seed ^ CHURN_SALT.wrapping_add(cycle as u64), id as u64)
+}
+
+/// Run `cfg.churn_cycles` delete/update/compact/probe cycles against the
+/// live server, mutating `extras` (the oracle's view) in lockstep.
+/// Returns the per-cycle mean candidate-set size over the probe queries.
+///
+/// Each cycle alternates by `(position + cycle) % 2`: half the ids are
+/// deleted, the other half updated with fresh content — so an id deleted
+/// this cycle is re-inserted next cycle, exactly the delete→re-insert
+/// shape that leaked postings before the index became an upsert. Two
+/// in-run gates make the phase self-checking: a probe returning any
+/// deleted id fails the run (stale candidates), and a cycle whose mean
+/// candidate count exceeds cycle 0's by [`CHURN_CANDIDATE_GROWTH`] fails
+/// the run (posting growth).
+fn churn_phase(
+    addr: SocketAddr,
+    cfg: &LoadtestConfig,
+    extras: &mut [Extra],
+    queries: &[Vec<u32>],
+) -> Result<Vec<f64>> {
+    crate::ensure!(
+        !extras.is_empty(),
+        "churn needs mixed-phase inserts to delete/update (raise mix_ops or query_frac < 1)"
+    );
+    let mut means = Vec::with_capacity(cfg.churn_cycles);
+    for c in 0..cfg.churn_cycles {
+        // Every target id is distinct within a cycle, so fanning the
+        // plan across clients/windows cannot reorder anything observable.
+        let plan: Vec<Request> = extras
+            .iter()
+            .enumerate()
+            .map(|(j, e)| {
+                if (j + c) % 2 == 0 {
+                    Request::LshDelete {
+                        id: e.id,
+                        scheme: None,
+                    }
+                } else {
+                    Request::LshUpdate {
+                        id: e.id,
+                        set: churn_set(cfg.seed, c, e.id),
+                        scheme: None,
+                    }
+                }
+            })
+            .collect();
+        let plan_ref = &plan;
+        let stats = driver::drive(addr, cfg.clients, plan.len(), cfg.window, |j| {
+            plan_ref[j].clone()
+        })?;
+        crate::ensure!(
+            stats.errors == 0,
+            "churn cycle {c} saw {} wire errors",
+            stats.errors
+        );
+        println!(
+            "loadtest: churn cycle {c}: {} mutations in {:.1}s ({})",
+            stats.ok,
+            stats.wall_secs,
+            crate::util::bench::fmt_rate(stats.qps())
+        );
+        // Mirror the plan onto the oracle's view.
+        for (j, e) in extras.iter_mut().enumerate() {
+            if (j + c) % 2 == 0 {
+                e.alive = false;
+            } else {
+                e.alive = true;
+                e.set = churn_set(cfg.seed, c, e.id);
+            }
+        }
+        // Explicit compact: every cycle probes a rebuilt index, not a
+        // tombstone backlog, so cycle-to-cycle numbers are comparable.
+        let mut conn = crate::coordinator::server::PipelinedClient::connect(addr)?;
+        let resp = crate::coordinator::cluster::client::roundtrip(
+            &mut conn,
+            &Request::Compact { scheme: None },
+        )?;
+        crate::ensure!(
+            matches!(
+                resp,
+                crate::coordinator::request::Response::Compacted { .. }
+            ),
+            "churn compact answered {resp:?}"
+        );
+        let mean = probe_cycle(&mut conn, cfg, extras, queries, c)?;
+        println!("loadtest: churn cycle {c}: mean candidates {mean:.1}");
+        means.push(mean);
+        crate::ensure!(
+            mean <= means[0] * CHURN_CANDIDATE_GROWTH + 1e-9,
+            "candidate sets grew across churn cycles: cycle 0 mean {:.2}, cycle {c} mean {mean:.2}",
+            means[0]
+        );
+    }
+    Ok(means)
+}
+
+/// Probe one churn cycle: pipeline every held-out query as both a plain
+/// candidate query and a top-k re-rank, verify no deleted id surfaces in
+/// either, and return the mean candidate-set size.
+fn probe_cycle(
+    conn: &mut crate::coordinator::server::PipelinedClient,
+    cfg: &LoadtestConfig,
+    extras: &[Extra],
+    queries: &[Vec<u32>],
+    cycle: usize,
+) -> Result<f64> {
+    use crate::coordinator::request::Response;
+    use crate::util::error::Context as _;
+    let dead: std::collections::HashSet<u32> = extras
+        .iter()
+        .filter(|e| !e.alive)
+        .map(|e| e.id)
+        .collect();
+    for (qi, q) in queries.iter().enumerate() {
+        conn.send_with_rid(
+            &Request::LshQuery {
+                set: q.clone(),
+                scheme: None,
+            },
+            2 * qi as u64,
+        )?;
+        conn.send_with_rid(
+            &Request::LshQueryTopK {
+                set: q.clone(),
+                k: cfg.k,
+                scheme: None,
+            },
+            2 * qi as u64 + 1,
+        )?;
+    }
+    let mut total = 0usize;
+    for _ in 0..queries.len() * 2 {
+        let (rid, resp) = conn.recv()?;
+        let rid = rid.context("untagged churn probe response")?;
+        match resp {
+            Response::Candidates { ids } => {
+                if let Some(stale) = ids.iter().find(|id| dead.contains(id)) {
+                    crate::bail!(
+                        "churn cycle {cycle}: deleted id {stale} returned as a candidate \
+                         (probe rid {rid})"
+                    );
+                }
+                total += ids.len();
+            }
+            Response::TopK { ids, scores } => {
+                crate::ensure!(
+                    ids.len() <= cfg.k && ids.len() == scores.len(),
+                    "churn cycle {cycle}: malformed top-k answer (probe rid {rid})"
+                );
+                crate::ensure!(
+                    scores.windows(2).all(|w| w[0] >= w[1]),
+                    "churn cycle {cycle}: top-k scores not descending (probe rid {rid})"
+                );
+                if let Some(stale) = ids.iter().find(|id| dead.contains(id)) {
+                    crate::bail!("churn cycle {cycle}: deleted id {stale} returned in top-k");
+                }
+            }
+            Response::Error { message } => crate::bail!("churn probe failed: {message}"),
+            other => crate::bail!("unexpected churn probe response: {other:?}"),
+        }
+    }
+    Ok(total as f64 / queries.len() as f64)
+}
+
+/// Fetch `(lsh_inserts, lsh_queries, errors, lsh_deletes)` from an
+/// external server's `stats` op. Both the single-host snapshot and the
+/// router snapshot expose these as top-level keys; anything absent reads
+/// as 0.
+fn remote_counters(addr: SocketAddr) -> Result<(u64, u64, u64, u64)> {
     let mut conn = crate::coordinator::server::PipelinedClient::connect(addr)?;
     let resp = crate::coordinator::cluster::client::roundtrip(&mut conn, &Request::Stats)?;
     let crate::coordinator::request::Response::Stats { json } = resp else {
@@ -366,5 +597,10 @@ fn remote_counters(addr: SocketAddr) -> Result<(u64, u64, u64)> {
             .map(|n| n.max(0) as u64)
             .unwrap_or(0)
     };
-    Ok((count("lsh_inserts"), count("lsh_queries"), count("errors")))
+    Ok((
+        count("lsh_inserts"),
+        count("lsh_queries"),
+        count("errors"),
+        count("lsh_deletes"),
+    ))
 }

@@ -235,6 +235,9 @@ mod tests {
             server_inserts: 100,
             server_queries: 8,
             server_errors: 0,
+            churn_cycles: 0,
+            server_deletes: 0,
+            mean_candidates: 0.0,
         }
     }
 

@@ -52,6 +52,12 @@ pub fn print_run(r: &RunRecord) {
         "  server        {} inserts, {} queries, {} errors",
         r.server_inserts, r.server_queries, r.server_errors
     );
+    if r.churn_cycles > 0 {
+        println!(
+            "  churn         {} cycles, {} server deletes, mean candidates {:.1}",
+            r.churn_cycles, r.server_deletes, r.mean_candidates
+        );
+    }
 }
 
 /// Print a `--compare` diff table between two runs.

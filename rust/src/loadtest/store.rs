@@ -10,7 +10,17 @@
 //! The schema is versioned via the `schema` column ([`LOADTEST_SCHEMA`]);
 //! readers look fields up *by header name*, so reordering or appending
 //! columns in a later version keeps old files loadable, and a missing
-//! column is a hard error rather than a silently-zero metric.
+//! column is a hard error rather than a silently-zero metric. The one
+//! sanctioned exception: columns introduced by v2 (`churn_cycles`,
+//! `server_deletes`, `mean_candidates`) default to zero when decoding a
+//! row that *declares itself* v1 — committed floor baselines predate the
+//! churn tier and must stay loadable and gateable.
+//!
+//! **QPS semantics** (v2, PR 9): `load_qps`/`mixed_qps` divide completed
+//! ops by wall time measured from the *first request sent* to the last
+//! response received ([`super::driver::DriveStats::wall_secs`]).
+//! Connection setup is excluded; rows older than this PR anchored the
+//! clock at connect and so read slightly low for short many-client runs.
 
 use crate::util::csv;
 use crate::util::error::{Context, Result};
@@ -19,11 +29,16 @@ use std::io::Write as _;
 use std::path::Path;
 
 /// Current row-schema identifier, recorded in every row.
-pub const LOADTEST_SCHEMA: &str = "mixtab-loadtest-v1";
+pub const LOADTEST_SCHEMA: &str = "mixtab-loadtest-v2";
+
+/// The pre-churn schema: same columns minus `churn_cycles`,
+/// `server_deletes`, `mean_candidates`. Still decodable (the new fields
+/// default to zero) and still a legal gate baseline.
+pub const LOADTEST_SCHEMA_V1: &str = "mixtab-loadtest-v1";
 
 /// Column names, in file order. `from_fields` looks up by name, not
 /// position — the order here only fixes what new files look like.
-pub const HEADER: [&str; 23] = [
+pub const HEADER: [&str; 26] = [
     "schema",
     "git_sha",
     "unix_ts",
@@ -47,6 +62,9 @@ pub const HEADER: [&str; 23] = [
     "server_inserts",
     "server_queries",
     "server_errors",
+    "churn_cycles",
+    "server_deletes",
+    "mean_candidates",
 ];
 
 /// One loadtest run — a row of the trajectory.
@@ -79,6 +97,15 @@ pub struct RunRecord {
     pub server_inserts: u64,
     pub server_queries: u64,
     pub server_errors: u64,
+    /// Churn cycles run after the mixed phase (0 = churn off; v1 rows
+    /// decode as 0).
+    pub churn_cycles: u64,
+    /// Server-side `lsh_deletes` counter at the end of the run.
+    pub server_deletes: u64,
+    /// Mean candidate-set size over the final churn cycle's probe
+    /// queries (0 when churn is off) — the metric whose growth across
+    /// cycles was the duplicate-insert posting leak.
+    pub mean_candidates: f64,
 }
 
 impl RunRecord {
@@ -108,6 +135,9 @@ impl RunRecord {
             self.server_inserts.to_string(),
             self.server_queries.to_string(),
             self.server_errors.to_string(),
+            self.churn_cycles.to_string(),
+            self.server_deletes.to_string(),
+            csv::f(self.mean_candidates),
         ]
     }
 
@@ -132,8 +162,24 @@ impl RunRecord {
                 .parse()
                 .with_context(|| format!("results csv: bad number in '{name}'"))
         };
+        let schema = get("schema")?.to_string();
+        // v1 rows predate the churn columns; every other schema must
+        // carry them (a *typo'd* column name should error, not zero).
+        let v1 = schema == LOADTEST_SCHEMA_V1;
+        let u_v2 = |name: &str| -> Result<u64> {
+            if v1 && !header.iter().any(|h| h == name) {
+                return Ok(0);
+            }
+            u(name)
+        };
+        let fl_v2 = |name: &str| -> Result<f64> {
+            if v1 && !header.iter().any(|h| h == name) {
+                return Ok(0.0);
+            }
+            fl(name)
+        };
         Ok(RunRecord {
-            schema: get("schema")?.to_string(),
+            schema,
             git_sha: get("git_sha")?.to_string(),
             unix_ts: u("unix_ts")?,
             quick: get("quick")? == "true",
@@ -156,6 +202,9 @@ impl RunRecord {
             server_inserts: u("server_inserts")?,
             server_queries: u("server_queries")?,
             server_errors: u("server_errors")?,
+            churn_cycles: u_v2("churn_cycles")?,
+            server_deletes: u_v2("server_deletes")?,
+            mean_candidates: fl_v2("mean_candidates")?,
         })
     }
 }
@@ -293,8 +342,12 @@ pub fn gate(
     recall_tol: f64,
     qps_tol: f64,
 ) -> Result<Vec<GateFailure>> {
+    // v1 is a legal *baseline* for a v2 run (committed floor files
+    // predate the churn columns); every other mix is incomparable.
+    let comparable = current.schema == baseline.schema
+        || (baseline.schema == LOADTEST_SCHEMA_V1 && current.schema == LOADTEST_SCHEMA);
     crate::ensure!(
-        current.schema == baseline.schema,
+        comparable,
         "gate: schema mismatch (baseline {}, current {})",
         baseline.schema,
         current.schema
@@ -361,6 +414,9 @@ mod tests {
             server_inserts: 60_000,
             server_queries: 10_032,
             server_errors: 0,
+            churn_cycles: 4,
+            server_deletes: 20_000,
+            mean_candidates: 11.5,
         }
     }
 
@@ -380,6 +436,37 @@ mod tests {
         let short: Vec<String> = header[1..].to_vec();
         let err = RunRecord::from_fields(&short, &rev_row).unwrap_err();
         assert!(err.to_string().contains("missing column 'schema'"), "{err}");
+    }
+
+    #[test]
+    fn v1_rows_decode_with_defaulted_churn_columns() {
+        // A v1 file: today's header minus the three churn columns.
+        let v1_header: Vec<String> = HEADER[..23].iter().map(|s| s.to_string()).collect();
+        let mut r = sample(0.8, 10_000.0);
+        r.schema = LOADTEST_SCHEMA_V1.to_string();
+        let v1_row: Vec<String> = r.to_fields()[..23].to_vec();
+        let back = RunRecord::from_fields(&v1_header, &v1_row).unwrap();
+        assert_eq!(back.schema, LOADTEST_SCHEMA_V1);
+        assert_eq!(back.churn_cycles, 0);
+        assert_eq!(back.server_deletes, 0);
+        assert_eq!(back.mean_candidates, 0.0);
+        assert_eq!(back.recall_at_k, 0.8, "shared columns decode unchanged");
+        // A row *claiming* v2 with the columns missing stays a hard error.
+        let mut fake = v1_row.clone();
+        fake[0] = LOADTEST_SCHEMA.to_string();
+        let err = RunRecord::from_fields(&v1_header, &fake).unwrap_err();
+        assert!(err.to_string().contains("churn_cycles"), "{err}");
+    }
+
+    #[test]
+    fn gate_accepts_v1_baseline_for_v2_run() {
+        let mut base = sample(0.75, 10_000.0);
+        base.schema = LOADTEST_SCHEMA_V1.to_string();
+        base.churn_cycles = 0;
+        let cur = sample(0.75, 10_000.0);
+        assert!(gate(&cur, &base, 0.125, 0.2).unwrap().is_empty());
+        // The other direction (v2 baseline, v1 current) is not a thing.
+        assert!(gate(&base, &cur, 0.125, 0.2).is_err());
     }
 
     #[test]

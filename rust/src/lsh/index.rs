@@ -8,7 +8,7 @@
 
 use crate::sketch::oph::{OneHashSketcher, OphSketch};
 use crate::sketch::spec::{SketchScheme, SketchSpec};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// LSH structural parameters (paper sweeps K, L ∈ {8, 10, 12}).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,14 +42,27 @@ fn bucket_key(bins: &[u64]) -> u64 {
     h
 }
 
-/// An LSH index over sets of `u32` ids.
+/// An LSH index over sets of `u32` ids, supporting deletes via
+/// tombstones.
+///
+/// Mutation model (DESIGN.md §3.7): `insert` is an **upsert** — if the id
+/// already holds postings (live or tombstoned), the old entries are
+/// purged first via the recorded per-id bucket keys, so a superseded
+/// sketch can never serve stale candidates. `delete` is O(1) metadata
+/// (tombstone + query-time filter); the physical posting rewrite is
+/// deferred to [`LshIndex::compact`].
 pub struct LshIndex {
     params: LshParams,
     sketcher: OneHashSketcher,
     /// `tables[l]: bucket key → ids`.
     tables: Vec<HashMap<u64, Vec<u32>>>,
-    /// Number of indexed sets.
-    len: usize,
+    /// Per-id bucket keys recorded at insert time (live **and**
+    /// tombstoned ids) — what makes targeted purges O(L) instead of a
+    /// full table scan.
+    keys: HashMap<u32, Vec<u64>>,
+    /// Ids logically deleted; their postings remain until [`Self::compact`]
+    /// and are filtered out of every query.
+    tombstones: HashSet<u32>,
 }
 
 impl LshIndex {
@@ -71,7 +84,8 @@ impl LshIndex {
             params,
             sketcher,
             tables: vec![HashMap::new(); params.l],
-            len: 0,
+            keys: HashMap::new(),
+            tombstones: HashSet::new(),
         }
     }
 
@@ -79,12 +93,29 @@ impl LshIndex {
         self.params
     }
 
+    /// Number of **live** sets (tombstoned ids excluded) — exact at all
+    /// times, including between a delete and the compaction that purges
+    /// its postings.
     pub fn len(&self) -> usize {
-        self.len
+        self.keys.len() - self.tombstones.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.len() == 0
+    }
+
+    /// Ids deleted but not yet physically purged.
+    pub fn tombstone_count(&self) -> usize {
+        self.tombstones.len()
+    }
+
+    /// Tombstoned fraction of all recorded ids (0 for an empty index) —
+    /// the compaction trigger signal.
+    pub fn tombstone_fraction(&self) -> f64 {
+        if self.keys.is_empty() {
+            return 0.0;
+        }
+        self.tombstones.len() as f64 / self.keys.len() as f64
     }
 
     /// Sketch a set with this index's sketcher.
@@ -98,15 +129,77 @@ impl LshIndex {
         self.insert_sketch(id, &s);
     }
 
+    /// The L bucket keys a sketch lands in.
+    fn sketch_keys(&self, s: &OphSketch) -> Vec<u64> {
+        (0..self.params.l)
+            .map(|l| bucket_key(&s.bins[l * self.params.k..(l + 1) * self.params.k]))
+            .collect()
+    }
+
     /// Insert a pre-computed sketch (the coordinator's worker pool sketches
     /// off-thread and inserts here).
+    ///
+    /// This is an **upsert**: re-inserting a live id with identical
+    /// content is a no-op (postings and `len` unchanged), and any prior
+    /// postings under this id — a live id re-inserted with different
+    /// content, or a tombstoned id being resurrected — are purged before
+    /// the new ones land. Duplicate posting entries are therefore
+    /// structurally impossible.
     pub fn insert_sketch(&mut self, id: u32, s: &OphSketch) {
         assert_eq!(s.k(), self.params.sketch_bins());
-        for (l, table) in self.tables.iter_mut().enumerate() {
-            let key = bucket_key(&s.bins[l * self.params.k..(l + 1) * self.params.k]);
+        let new_keys = self.sketch_keys(s);
+        if let Some(old_keys) = self.keys.get(&id) {
+            let resurrected = self.tombstones.remove(&id);
+            if !resurrected && *old_keys == new_keys {
+                return; // idempotent re-insert of identical content
+            }
+            let old_keys = old_keys.clone();
+            self.purge_postings(id, &old_keys);
+        }
+        for (table, &key) in self.tables.iter_mut().zip(&new_keys) {
             table.entry(key).or_default().push(id);
         }
-        self.len += 1;
+        self.keys.insert(id, new_keys);
+    }
+
+    /// Logically delete `id`: O(1) — the id is tombstoned and filtered
+    /// from every query; its posting entries stay until [`Self::compact`].
+    /// Returns whether the id was live.
+    pub fn delete(&mut self, id: u32) -> bool {
+        self.keys.contains_key(&id) && self.tombstones.insert(id)
+    }
+
+    /// Remove `id`'s posting entries from the buckets named by `keys`,
+    /// dropping buckets that become empty (a freshly built index never
+    /// holds an empty bucket, and compaction must match it bit for bit).
+    fn purge_postings(&mut self, id: u32, keys: &[u64]) -> usize {
+        let mut purged = 0;
+        for (table, key) in self.tables.iter_mut().zip(keys) {
+            if let Some(ids) = table.get_mut(key) {
+                let before = ids.len();
+                ids.retain(|&x| x != id);
+                purged += before - ids.len();
+                if ids.is_empty() {
+                    table.remove(key);
+                }
+            }
+        }
+        purged
+    }
+
+    /// Physically purge every tombstoned id's postings and forget its
+    /// keys, leaving the index bit-identical to one freshly built over
+    /// the surviving corpus (in original insertion order). Returns the
+    /// number of posting entries removed.
+    pub fn compact(&mut self) -> usize {
+        let dead: Vec<u32> = self.tombstones.drain().collect();
+        let mut purged = 0;
+        for id in dead {
+            if let Some(keys) = self.keys.remove(&id) {
+                purged += self.purge_postings(id, &keys);
+            }
+        }
+        purged
     }
 
     /// Query: ids colliding with `set` in ≥ 1 table (deduplicated, sorted).
@@ -114,7 +207,8 @@ impl LshIndex {
         self.query_sketch(&self.sketch(set))
     }
 
-    /// Query with a pre-computed sketch.
+    /// Query with a pre-computed sketch. Tombstoned ids are filtered out
+    /// — a deleted id never surfaces, compacted or not.
     pub fn query_sketch(&self, s: &OphSketch) -> Vec<u32> {
         assert_eq!(s.k(), self.params.sketch_bins());
         let mut out: Vec<u32> = Vec::new();
@@ -126,6 +220,9 @@ impl LshIndex {
         }
         out.sort_unstable();
         out.dedup();
+        if !self.tombstones.is_empty() {
+            out.retain(|id| !self.tombstones.contains(id));
+        }
         out
     }
 
@@ -139,13 +236,33 @@ impl LshIndex {
         &self.tables
     }
 
-    /// Replace table contents from a snapshot ([`super::persist`]). The
-    /// caller guarantees the tables were produced by an identically-seeded
-    /// index (same family, seed, K, L) — enforced by the snapshot header.
-    pub fn restore_raw(&mut self, tables: Vec<HashMap<u64, Vec<u32>>>, len: usize) {
+    /// Per-id bucket keys for snapshotting ([`super::persist`]).
+    pub fn keys_raw(&self) -> &HashMap<u32, Vec<u64>> {
+        &self.keys
+    }
+
+    /// Tombstoned ids for snapshotting ([`super::persist`]).
+    pub fn tombstones_raw(&self) -> &HashSet<u32> {
+        &self.tombstones
+    }
+
+    /// Replace contents from a snapshot ([`super::persist`]). The caller
+    /// guarantees the tables were produced by an identically-seeded index
+    /// (same family, seed, K, L) — enforced by the snapshot header — and
+    /// that `keys` records every id's L bucket keys with
+    /// `tombstones ⊆ keys`.
+    pub fn restore_raw(
+        &mut self,
+        tables: Vec<HashMap<u64, Vec<u32>>>,
+        keys: HashMap<u32, Vec<u64>>,
+        tombstones: HashSet<u32>,
+    ) {
         assert_eq!(tables.len(), self.params.l);
+        debug_assert!(keys.values().all(|k| k.len() == self.params.l));
+        debug_assert!(tombstones.iter().all(|id| keys.contains_key(id)));
         self.tables = tables;
-        self.len = len;
+        self.keys = keys;
+        self.tombstones = tombstones;
     }
 
     /// Size of the largest bucket (diagnostics; weak hash functions produce
@@ -273,5 +390,89 @@ mod tests {
         assert_eq!(idx.query_sketch(&sk), vec![42]);
         assert!(idx.bucket_count() >= 1);
         assert!(idx.max_bucket() >= 1);
+    }
+
+    /// Regression for the duplicate-insert posting leak: before the
+    /// upsert fix, re-inserting an id pushed a second copy into every
+    /// bucket and double-counted `len`; re-inserting with *different*
+    /// content left the old sketch's entries serving stale candidates.
+    #[test]
+    fn reinsert_is_idempotent_and_supersedes() {
+        let mut idx = LshIndex::new(LshParams::new(4, 6), &oph_spec(11));
+        let a: Vec<u32> = (0..120).collect();
+        let b: Vec<u32> = (500_000..500_120).collect();
+        idx.insert(7, &a);
+        let tables_once = idx.tables_raw().to_vec();
+
+        // Same id, same content: postings and len must not change.
+        idx.insert(7, &a);
+        assert_eq!(idx.len(), 1, "re-insert double-counted len");
+        assert_eq!(
+            idx.tables_raw(),
+            &tables_once[..],
+            "re-insert duplicated posting entries"
+        );
+
+        // Same id, different content: the old sketch's buckets must stop
+        // serving the id (no superseded candidates), the new ones start.
+        idx.insert(7, &b);
+        assert_eq!(idx.len(), 1);
+        assert!(
+            !idx.query(&a).contains(&7),
+            "superseded content still retrieved"
+        );
+        assert!(idx.query(&b).contains(&7));
+    }
+
+    #[test]
+    fn delete_tombstones_then_compact_purges() {
+        let mut idx = LshIndex::new(LshParams::new(4, 6), &oph_spec(13));
+        let sets: Vec<Vec<u32>> = (0..30u32).map(|i| (i * 40..i * 40 + 35).collect()).collect();
+        for (i, s) in sets.iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        assert!(idx.delete(5));
+        assert!(!idx.delete(5), "double delete reported live");
+        assert!(!idx.delete(999), "deleting an unknown id reported live");
+        assert_eq!(idx.len(), 29);
+        assert_eq!(idx.tombstone_count(), 1);
+        assert!((idx.tombstone_fraction() - 1.0 / 30.0).abs() < 1e-12);
+        assert!(
+            !idx.query(&sets[5]).contains(&5),
+            "tombstoned id surfaced pre-compaction"
+        );
+
+        let purged = idx.compact();
+        assert_eq!(purged, idx.params().l, "one posting entry per table");
+        assert_eq!(idx.tombstone_count(), 0);
+        assert!(!idx.query(&sets[5]).contains(&5));
+
+        // Compaction leaves the index bit-identical to a fresh build over
+        // the survivors in original insertion order.
+        let mut fresh = LshIndex::new(LshParams::new(4, 6), &oph_spec(13));
+        for (i, s) in sets.iter().enumerate() {
+            if i != 5 {
+                fresh.insert(i as u32, s);
+            }
+        }
+        assert_eq!(idx.tables_raw(), fresh.tables_raw());
+        assert_eq!(idx.len(), fresh.len());
+    }
+
+    #[test]
+    fn delete_then_reinsert_resurrects_cleanly() {
+        let mut idx = LshIndex::new(LshParams::new(3, 4), &oph_spec(17));
+        let a: Vec<u32> = (0..90).collect();
+        let b: Vec<u32> = (200_000..200_090).collect();
+        idx.insert(1, &a);
+        idx.delete(1);
+        // Resurrect under different content: the pre-delete postings must
+        // be purged, not merely unfiltered — otherwise queries near the
+        // old content would surface the id again.
+        idx.insert(1, &b);
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx.tombstone_count(), 0);
+        assert!(!idx.query(&a).contains(&1), "pre-delete postings leaked");
+        assert!(idx.query(&b).contains(&1));
     }
 }

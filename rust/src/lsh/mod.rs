@@ -9,13 +9,17 @@
 //! * [`sharded`] — N independently-locked shards behind deterministic
 //!   id→shard routing with fan-out query + merge (the multi-scheme
 //!   coordinator's per-scheme index).
+//! * [`topk`] — bounded top-k selection for the re-rank serving stage
+//!   (`query_topk` over stored sketches).
 
 pub mod index;
 pub mod metrics;
 pub mod persist;
 pub mod angular;
 pub mod sharded;
+pub mod topk;
 
 pub use index::{LshIndex, LshParams};
 pub use metrics::{ground_truth, QueryEval};
 pub use sharded::ShardedIndex;
+pub use topk::{Scored, TopK};

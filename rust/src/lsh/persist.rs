@@ -3,18 +3,25 @@
 //!
 //! The snapshot stores the structural parameters, the hash-family id + seed
 //! (so the reloaded index re-derives the *same* sketcher — sketches are
-//! only comparable under the same hash function), and every table's
-//! buckets.
+//! only comparable under the same hash function), every table's buckets,
+//! and (since v2) the per-id bucket keys plus the tombstone set, so a
+//! mutable corpus round-trips mid-churn without forcing a compaction.
+//!
+//! Version 1 snapshots (insert-only, no keys/tombstones) still load: the
+//! per-id keys are reconstructed from the tables themselves — every id
+//! appears exactly once per table in a clean v1 file, which the loader
+//! verifies against the stored length.
 
 use crate::hash::HashFamily;
 use crate::lsh::index::{LshIndex, LshParams};
 use crate::util::binio::{BinReader, BinWriter};
 use crate::util::error::{bail, format_err, Context, Result};
+use std::collections::{HashMap, HashSet};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 
 const MAGIC: u32 = 0x4D58_4C53; // "MXLS"
-const VERSION: u8 = 1;
+const VERSION: u8 = 2;
 
 /// Serialize an index (with its provenance) to a writer.
 pub fn save_to(index: &LshIndex, family: HashFamily, seed: u64, w: impl Write) -> Result<()> {
@@ -36,6 +43,21 @@ pub fn save_to(index: &LshIndex, family: HashFamily, seed: u64, w: impl Write) -
             w.u32s(ids)?;
         }
     }
+    // v2: per-id bucket keys and tombstones, in sorted-id order so two
+    // saves of the same logical state write identical bytes.
+    let keys = index.keys_raw();
+    let mut ids: Vec<u32> = keys.keys().copied().collect();
+    ids.sort_unstable();
+    w.u64(ids.len() as u64)?;
+    for id in &ids {
+        w.u32(*id)?;
+        for key in &keys[id] {
+            w.u64(*key)?;
+        }
+    }
+    let mut dead: Vec<u32> = index.tombstones_raw().iter().copied().collect();
+    dead.sort_unstable();
+    w.u32s(&dead)?;
     Ok(())
 }
 
@@ -71,7 +93,7 @@ pub fn load_from(r: impl Read) -> Result<(LshIndex, HashFamily, u64)> {
         bail!("not an LSH snapshot (bad magic)");
     }
     let version = r.u8()?;
-    if version != VERSION {
+    if version == 0 || version > VERSION {
         bail!("unsupported snapshot version {version}");
     }
     let fam_id = r.str()?;
@@ -92,7 +114,7 @@ pub fn load_from(r: impl Read) -> Result<(LshIndex, HashFamily, u64)> {
     let mut tables = Vec::with_capacity(n_tables);
     for _ in 0..n_tables {
         let buckets = r.u64()? as usize;
-        let mut table = std::collections::HashMap::with_capacity(buckets);
+        let mut table = HashMap::with_capacity(buckets);
         for _ in 0..buckets {
             let key = r.u64()?;
             let ids = r.u32s()?;
@@ -100,7 +122,53 @@ pub fn load_from(r: impl Read) -> Result<(LshIndex, HashFamily, u64)> {
         }
         tables.push(table);
     }
-    index.restore_raw(tables, len);
+    let (keys, tombstones) = if version >= 2 {
+        let n_ids = r.u64()? as usize;
+        let mut keys: HashMap<u32, Vec<u64>> = HashMap::with_capacity(n_ids);
+        for _ in 0..n_ids {
+            let id = r.u32()?;
+            let mut id_keys = Vec::with_capacity(l);
+            for _ in 0..l {
+                id_keys.push(r.u64()?);
+            }
+            keys.insert(id, id_keys);
+        }
+        let tombstones: HashSet<u32> = r.u32s()?.into_iter().collect();
+        if tombstones.iter().any(|id| !keys.contains_key(id)) {
+            bail!("snapshot tombstones reference unknown ids");
+        }
+        if keys.len() - tombstones.len() != len {
+            bail!(
+                "snapshot live count {} != stored len {len}",
+                keys.len() - tombstones.len()
+            );
+        }
+        (keys, tombstones)
+    } else {
+        // v1 (insert-only): reconstruct each id's bucket keys from the
+        // tables. A clean v1 file holds every id exactly once per table;
+        // a file written by the pre-fix duplicate-insert path does not,
+        // and the length check below rejects it loudly.
+        let mut keys: HashMap<u32, Vec<u64>> = HashMap::with_capacity(len);
+        let mut entries = 0usize;
+        for (li, table) in tables.iter().enumerate() {
+            for (key, ids) in table {
+                entries += ids.len();
+                for &id in ids {
+                    keys.entry(id).or_insert_with(|| vec![0u64; l])[li] = *key;
+                }
+            }
+        }
+        if keys.len() != len || entries != len * l {
+            bail!(
+                "v1 snapshot is inconsistent ({} ids / {entries} entries vs len {len}) — \
+                 likely written after duplicate inserts",
+                keys.len()
+            );
+        }
+        (keys, HashSet::new())
+    };
+    index.restore_raw(tables, keys, tombstones);
     Ok((index, family, seed))
 }
 
@@ -170,6 +238,104 @@ mod tests {
         let (loaded, _, _) = load(&path).unwrap();
         assert_eq!(loaded.len(), 2);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tombstoned_snapshot_roundtrips() {
+        let mut index = LshIndex::new(
+            LshParams::new(4, 5),
+            &SketchSpec::oph(HashFamily::MixedTab, 31, 20),
+        );
+        let sets: Vec<Vec<u32>> = (0..40u32).map(|i| (i * 60..i * 60 + 50).collect()).collect();
+        for (i, s) in sets.iter().enumerate() {
+            index.insert(i as u32, s);
+        }
+        index.delete(3);
+        index.delete(17);
+        let mut buf = Vec::new();
+        save_to(&index, HashFamily::MixedTab, 31, &mut buf).unwrap();
+        let (mut loaded, _, _) = load_from(&buf[..]).unwrap();
+        assert_eq!(loaded.len(), 38);
+        assert_eq!(loaded.tombstone_count(), 2);
+        for s in &sets {
+            assert_eq!(loaded.query(s), index.query(s));
+        }
+        // The restored tombstones still drive compaction correctly.
+        loaded.compact();
+        assert_eq!(loaded.tombstone_count(), 0);
+        assert!(!loaded.query(&sets[3]).contains(&3));
+        assert!(!loaded.query(&sets[17]).contains(&17));
+    }
+
+    /// v1 (insert-only) snapshots load with keys reconstructed from the
+    /// tables, so deletes and upserts work on a corpus restored from a
+    /// pre-v2 file.
+    #[test]
+    fn v1_snapshot_still_loads_and_is_mutable() {
+        let mut index = LshIndex::new(
+            LshParams::new(3, 4),
+            &SketchSpec::oph(HashFamily::Murmur3, 9, 12),
+        );
+        let sets: Vec<Vec<u32>> = (0..12u32).map(|i| (i * 80..i * 80 + 70).collect()).collect();
+        for (i, s) in sets.iter().enumerate() {
+            index.insert(i as u32, s);
+        }
+        // Serialize the v1 layout by hand (header + tables, no trailer).
+        let mut buf = Vec::new();
+        {
+            let mut w = BinWriter::new(&mut buf);
+            w.u32(MAGIC).unwrap();
+            w.u8(1).unwrap();
+            w.str(HashFamily::Murmur3.id()).unwrap();
+            w.u64(9).unwrap();
+            w.u64(3).unwrap();
+            w.u64(4).unwrap();
+            w.u64(index.len() as u64).unwrap();
+            let tables = index.tables_raw();
+            w.u64(tables.len() as u64).unwrap();
+            for table in tables {
+                w.u64(table.len() as u64).unwrap();
+                for (key, ids) in table {
+                    w.u64(*key).unwrap();
+                    w.u32s(ids).unwrap();
+                }
+            }
+        }
+        let (mut loaded, fam, seed) = load_from(&buf[..]).unwrap();
+        assert_eq!((fam, seed), (HashFamily::Murmur3, 9));
+        assert_eq!(loaded.len(), 12);
+        for s in &sets {
+            assert_eq!(loaded.query(s), index.query(s));
+        }
+        // Reconstructed keys make the restored corpus fully mutable.
+        assert!(loaded.delete(4));
+        assert!(!loaded.query(&sets[4]).contains(&4));
+        loaded.insert(5, &(900_000..900_070).collect::<Vec<_>>());
+        assert!(!loaded.query(&sets[5]).contains(&5), "upsert left stale postings");
+        assert_eq!(loaded.len(), 11);
+        // A v1 file whose stored len disagrees with its tables (the
+        // duplicate-insert artifact) is rejected, not silently loaded.
+        let mut bad = Vec::new();
+        {
+            let mut w = BinWriter::new(&mut bad);
+            w.u32(MAGIC).unwrap();
+            w.u8(1).unwrap();
+            w.str(HashFamily::Murmur3.id()).unwrap();
+            w.u64(9).unwrap();
+            w.u64(3).unwrap();
+            w.u64(4).unwrap();
+            w.u64(index.len() as u64 + 1).unwrap();
+            let tables = index.tables_raw();
+            w.u64(tables.len() as u64).unwrap();
+            for table in tables {
+                w.u64(table.len() as u64).unwrap();
+                for (key, ids) in table {
+                    w.u64(*key).unwrap();
+                    w.u32s(ids).unwrap();
+                }
+            }
+        }
+        assert!(load_from(&bad[..]).is_err());
     }
 
     #[test]

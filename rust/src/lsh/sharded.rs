@@ -53,6 +53,15 @@ use std::sync::{Arc, Mutex};
 /// hash stream of the same spec (they share the configured family).
 pub const SHARD_ROUTE_SALT: u64 = 0x5AAD_ED01;
 
+/// Tombstone fraction at which a delete triggers an automatic shard
+/// compaction (checked under the same shard lock the delete took, so the
+/// rewrite races with nothing). 25% bounds both the posting-list bloat a
+/// churning corpus can accumulate and the amortized rewrite cost: each
+/// compaction is O(tombstones · L) targeted bucket edits, paid at most
+/// once per quarter-corpus of deletes. An explicit `compact` op purges
+/// unconditionally.
+pub const COMPACT_TOMBSTONE_FRAC: f64 = 0.25;
+
 /// Magic/version of the multi-shard snapshot manifest. Single-shard
 /// indices are saved in the plain [`persist`] format instead (`MXLS`), so
 /// `n_shards = 1` snapshots stay byte-identical to unsharded ones. The
@@ -180,6 +189,49 @@ impl ShardedIndex {
         let shard = self.shard_of(id);
         lock_unpoisoned(&self.shards[shard]).insert_sketch(id, &sketch);
         shard
+    }
+
+    /// Delete `id` from its routed shard (tombstone + query-time filter —
+    /// see [`LshIndex::delete`]). Returns `(shard, existed)`. If the
+    /// delete pushes the shard's tombstone fraction to
+    /// [`COMPACT_TOMBSTONE_FRAC`] or beyond, the shard is compacted
+    /// before the lock is released.
+    pub fn delete(&self, id: u32) -> (usize, bool) {
+        let shard = self.shard_of(id);
+        let mut guard = lock_unpoisoned(&self.shards[shard]);
+        let existed = guard.delete(id);
+        if existed && guard.tombstone_fraction() >= COMPACT_TOMBSTONE_FRAC {
+            guard.compact();
+        }
+        (shard, existed)
+    }
+
+    /// Update (upsert) `id` with new content: delete + insert under one
+    /// shard lock. [`LshIndex::insert_sketch`] already purges any prior
+    /// postings for the id, so this is exactly the delete+insert
+    /// composition — stale entries from the superseded content are
+    /// physically gone when the lock drops. Returns the shard index.
+    pub fn update(&self, id: u32, set: &[u32]) -> usize {
+        self.insert(id, set)
+    }
+
+    /// Physically purge every shard's tombstones ([`LshIndex::compact`]).
+    /// Returns the total number of posting entries removed. Shards are
+    /// compacted one lock at a time — concurrent inserts/queries on other
+    /// shards proceed.
+    pub fn compact(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| lock_unpoisoned(s).compact())
+            .sum()
+    }
+
+    /// Total tombstoned (deleted, not yet compacted) ids across shards.
+    pub fn tombstone_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| lock_unpoisoned(s).tombstone_count())
+            .sum()
     }
 
     /// Query: sketch once, fan out to every shard, merge to the sorted,
@@ -435,6 +487,58 @@ mod tests {
         expect.sort_unstable();
         expect.dedup();
         assert_eq!(merged, expect);
+    }
+
+    #[test]
+    fn delete_filters_and_auto_compacts() {
+        let idx = ShardedIndex::new(2, LshParams::new(3, 4), &spec(21));
+        let sets = corpus(40);
+        for (i, s) in sets.iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        let (shard, existed) = idx.delete(7);
+        assert!(existed);
+        assert_eq!(shard, idx.shard_of(7));
+        assert!(!idx.delete(7).1, "double delete reported live");
+        assert!(!idx.delete(1000).1);
+        assert_eq!(idx.len(), 39);
+        assert!(!idx.query(&sets[7]).contains(&7));
+        // Deleting a quarter of one shard's ids trips the auto-compaction
+        // threshold: tombstones never exceed COMPACT_TOMBSTONE_FRAC of a
+        // shard's recorded ids once the dust settles.
+        for id in 0..30u32 {
+            idx.delete(id);
+        }
+        for s in idx.shards.iter() {
+            let s = lock_unpoisoned(s);
+            assert!(
+                s.tombstone_fraction() < COMPACT_TOMBSTONE_FRAC,
+                "auto-compaction did not keep tombstones bounded"
+            );
+        }
+        // Explicit compaction purges whatever is left.
+        idx.compact();
+        assert_eq!(idx.tombstone_count(), 0);
+        for id in 0..30u32 {
+            assert!(!idx.query(&sets[id as usize]).contains(&id));
+        }
+    }
+
+    #[test]
+    fn update_supersedes_across_shards() {
+        let idx = ShardedIndex::new(4, LshParams::new(3, 4), &spec(23));
+        let sets = corpus(20);
+        for (i, s) in sets.iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        let replacement: Vec<u32> = (700_000..700_060).collect();
+        idx.update(3, &replacement);
+        assert_eq!(idx.len(), 20);
+        assert!(
+            !idx.query(&sets[3]).contains(&3),
+            "superseded content still retrieved after update"
+        );
+        assert!(idx.query(&replacement).contains(&3));
     }
 
     #[test]

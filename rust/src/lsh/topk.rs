@@ -1,0 +1,182 @@
+//! Bounded top-k selection for re-rank serving (after clann's k-NN
+//! `MaxHeap`: keep the k best seen so far in a size-capped binary heap
+//! whose root is the current worst, so each candidate costs one peek and
+//! at most one push/pop).
+//!
+//! `query_topk` retrieves an LSH candidate set, scores every candidate's
+//! stored sketch against the query sketch, and needs the k highest
+//! scores in deterministic order. Scores are estimator outputs (f64 in
+//! [0, 1]); ties are broken toward the **smaller id** so results are
+//! reproducible across runs, shard counts, and merge orders.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One scored candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scored {
+    pub id: u32,
+    pub score: f64,
+}
+
+impl Eq for Scored {}
+
+impl Ord for Scored {
+    /// Total order: higher score ranks higher; equal scores rank the
+    /// smaller id higher. `f64::total_cmp` keeps the order total even if
+    /// an estimator ever emits NaN (it sorts below every real score).
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.score
+            .total_cmp(&other.score)
+            .then_with(|| other.id.cmp(&self.id))
+    }
+}
+
+impl PartialOrd for Scored {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A bounded top-k accumulator: O(log k) per offered candidate, O(k)
+/// memory regardless of candidate-set size.
+#[derive(Debug)]
+pub struct TopK {
+    k: usize,
+    /// Min-heap (via [`std::cmp::Reverse`]) of the best k seen: the root
+    /// is the *worst* kept entry — the bar a new candidate must clear.
+    heap: BinaryHeap<std::cmp::Reverse<Scored>>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            heap: BinaryHeap::with_capacity(k.saturating_add(1)),
+        }
+    }
+
+    /// Offer a candidate; it is kept iff it beats the current worst of a
+    /// full heap (or the heap has room).
+    pub fn offer(&mut self, id: u32, score: f64) {
+        if self.k == 0 {
+            return;
+        }
+        let entry = Scored { id, score };
+        if self.heap.len() < self.k {
+            self.heap.push(std::cmp::Reverse(entry));
+        } else if self
+            .heap
+            .peek()
+            .is_some_and(|worst| entry > worst.0)
+        {
+            self.heap.pop();
+            self.heap.push(std::cmp::Reverse(entry));
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// The kept candidates, best first (score descending, ties by
+    /// ascending id).
+    pub fn into_sorted(self) -> Vec<Scored> {
+        let mut out: Vec<Scored> = self.heap.into_iter().map(|r| r.0).collect();
+        out.sort_unstable_by(|a, b| b.cmp(a));
+        out
+    }
+
+    /// Merge the contents of another bounded selection into this one
+    /// (the router's cross-backend top-k merge). Duplicate ids must be
+    /// deduplicated by the caller if the sources can overlap.
+    pub fn absorb(&mut self, other: TopK) {
+        for std::cmp::Reverse(s) in other.heap {
+            self.offer(s.id, s.score);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_k_best_in_order() {
+        let mut t = TopK::new(3);
+        for (id, score) in [(1, 0.2), (2, 0.9), (3, 0.5), (4, 0.7), (5, 0.1)] {
+            t.offer(id, score);
+        }
+        let got = t.into_sorted();
+        assert_eq!(
+            got.iter().map(|s| s.id).collect::<Vec<_>>(),
+            vec![2, 4, 3],
+            "{got:?}"
+        );
+        assert!(got[0].score >= got[1].score && got[1].score >= got[2].score);
+    }
+
+    #[test]
+    fn ties_break_toward_smaller_id() {
+        let mut t = TopK::new(2);
+        for id in [9, 3, 7, 1] {
+            t.offer(id, 0.5);
+        }
+        let ids: Vec<u32> = t.into_sorted().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![1, 3]);
+    }
+
+    #[test]
+    fn fewer_candidates_than_k() {
+        let mut t = TopK::new(10);
+        t.offer(4, 0.4);
+        t.offer(2, 0.8);
+        let ids: Vec<u32> = t.into_sorted().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![2, 4]);
+    }
+
+    #[test]
+    fn k_zero_keeps_nothing() {
+        let mut t = TopK::new(0);
+        t.offer(1, 1.0);
+        assert!(t.is_empty());
+        assert!(t.into_sorted().is_empty());
+    }
+
+    #[test]
+    fn absorb_merges_selections() {
+        let mut a = TopK::new(2);
+        a.offer(1, 0.3);
+        a.offer(2, 0.6);
+        let mut b = TopK::new(2);
+        b.offer(3, 0.9);
+        b.offer(4, 0.1);
+        a.absorb(b);
+        let ids: Vec<u32> = a.into_sorted().iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![3, 2]);
+    }
+
+    #[test]
+    fn matches_full_sort_on_random_input() {
+        let mut rng = crate::util::rng::Xoshiro256::new(77);
+        let scored: Vec<Scored> = (0..500u32)
+            .map(|id| Scored {
+                id,
+                // Quantized scores force plenty of ties.
+                score: (rng.next_u32() % 16) as f64 / 16.0,
+            })
+            .collect();
+        let mut t = TopK::new(25);
+        for s in &scored {
+            t.offer(s.id, s.score);
+        }
+        let mut full = scored.clone();
+        full.sort_unstable_by(|a, b| b.cmp(a));
+        full.truncate(25);
+        assert_eq!(t.into_sorted(), full);
+    }
+}

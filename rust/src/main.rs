@@ -5,7 +5,7 @@
 //! mixtab bench [--quick] [--only NAME] [--json PATH] [--baseline PATH] [--tolerance F]
 //! mixtab sketch [--spec SPEC | --scheme NAME [--config FILE]] [--set N,N,...|--text STR]
 //! mixtab serve [--config FILE] [--listen ADDR] [--load PATH] [--router]
-//! mixtab loadtest [--quick] [--out PATH] [--baseline PATH] [--gate] [--addr ADDR] [workload knobs]
+//! mixtab loadtest [--quick] [--churn N] [--out PATH] [--baseline PATH] [--gate] [--addr ADDR] [workload knobs]
 //! mixtab loadtest --compare A.csv B.csv
 //! mixtab loadtest --plot out.svg [--out PATH]
 //! mixtab stats --addr ADDR
@@ -120,6 +120,13 @@ fn cli() -> Command {
                 .opt("clients", '\0', "N", "concurrent pipelined client connections", None)
                 .opt("window", '\0', "N", "per-connection in-flight window", None)
                 .opt("mix-ops", '\0', "N", "sustained-phase op count (insert/query mix)", None)
+                .opt(
+                    "churn",
+                    '\0',
+                    "N",
+                    "churn cycles after the mixed phase: each deletes/updates every mixed-phase id, compacts, and probes for stale candidates (0 = off)",
+                    None,
+                )
                 .opt("seed", 's', "N", "root workload seed", Some("42"))
                 .opt("out", 'o', "PATH", "results CSV the run is appended to", Some("results.csv"))
                 .opt(
@@ -585,6 +592,9 @@ fn run_loadtest(sub: &mixtab::util::cli::Parsed) -> mixtab::Result<()> {
     }
     if sub.get("mix-ops").is_some() {
         cfg.mix_ops = sub.get_usize("mix-ops")?;
+    }
+    if sub.get("churn").is_some() {
+        cfg.churn_cycles = sub.get_usize("churn")?;
     }
 
     let external = match sub.get("addr") {

@@ -7,7 +7,12 @@
 //!   query results and persisted snapshot bytes,
 //! * fan-out query results are independent of the shard count,
 //! * the pool-parallel fan-out is bit-identical to the sequential path
-//!   for N ∈ {1, 2, 4}, including non-default OPH layouts.
+//!   for N ∈ {1, 2, 4}, including non-default OPH layouts,
+//! * the mutable-corpus tier holds for N ∈ {1, 2, 4}: a deleted id never
+//!   comes back from a query, re-inserting a live id is idempotent in
+//!   postings and `len`, compaction is bit-identical to a fresh rebuild
+//!   of the surviving corpus, and tombstoned snapshots round-trip
+//!   through persist.
 
 use mixtab::hash::HashFamily;
 use mixtab::lsh::{persist, LshIndex, LshParams, ShardedIndex};
@@ -227,6 +232,179 @@ fn parallel_fanout_results_independent_of_shard_count() {
             );
         }
     }
+}
+
+/// Every on-disk byte of a snapshot: the `base` file (plain snapshot or
+/// manifest) plus any per-shard files. Equal vectors mean the postings,
+/// keys, and tombstones are physically identical, not merely
+/// query-equivalent.
+fn snapshot_bytes(idx: &ShardedIndex, base: &std::path::Path) -> Vec<Vec<u8>> {
+    idx.save(base).unwrap();
+    let mut out = vec![std::fs::read(base).unwrap()];
+    for i in 0..idx.n_shards() {
+        let p = ShardedIndex::shard_path(base, i);
+        if p.exists() {
+            out.push(std::fs::read(&p).unwrap());
+        }
+    }
+    out
+}
+
+#[test]
+fn deleted_ids_never_returned_at_any_shard_count() {
+    let params = LshParams::new(5, 6);
+    let spec = oph_spec(HashFamily::MixedTab, 3);
+    let sets = corpus(60, 5);
+    for n in [1usize, 2, 4] {
+        let idx = ShardedIndex::new(n, params, &spec);
+        for (i, s) in sets.iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        let mut deleted = 0;
+        for i in (0..sets.len()).step_by(3) {
+            let (shard, existed) = idx.delete(i as u32);
+            assert!(existed, "N={n}: live id {i} reported absent on delete");
+            assert_eq!(shard, idx.shard_of(i as u32));
+            deleted += 1;
+        }
+        assert_eq!(idx.len(), sets.len() - deleted, "N={n}: len after deletes");
+        for (i, s) in sets.iter().enumerate() {
+            let hits = idx.query(s);
+            if i % 3 == 0 {
+                assert!(
+                    !hits.contains(&(i as u32)),
+                    "N={n}: deleted id {i} still returned"
+                );
+            } else {
+                assert!(hits.contains(&(i as u32)), "N={n}: live id {i} lost");
+            }
+        }
+        // Deleting an already-deleted or never-seen id is a clean no-op.
+        assert!(!idx.delete(0).1, "N={n}: double delete reported existed");
+        assert!(!idx.delete(9_999_999).1, "N={n}: unknown id reported existed");
+        assert_eq!(idx.len(), sets.len() - deleted, "N={n}: no-op deletes moved len");
+    }
+}
+
+#[test]
+fn reinsert_of_live_id_idempotent_in_postings_and_len() {
+    // The regression this PR fixes: the pre-upsert index pushed a fresh
+    // posting into every table on re-insert, double-counting `len` and
+    // serving stale buckets forever.
+    let dir = std::env::temp_dir().join("mixtab_sharded_props_reinsert");
+    let _ = std::fs::remove_dir_all(&dir);
+    let params = LshParams::new(5, 6);
+    let spec = oph_spec(HashFamily::MixedTab, 3);
+    let sets = corpus(50, 7);
+    for n in [1usize, 2, 4] {
+        let once = ShardedIndex::new(n, params, &spec);
+        let twice = ShardedIndex::new(n, params, &spec);
+        for (i, s) in sets.iter().enumerate() {
+            once.insert(i as u32, s);
+            twice.insert(i as u32, s);
+        }
+        for (i, s) in sets.iter().enumerate() {
+            twice.insert(i as u32, s);
+        }
+        assert_eq!(twice.len(), once.len(), "N={n}: re-insert double-counted len");
+        for s in &sets {
+            assert_eq!(twice.query(s), once.query(s), "N={n}: query drift");
+        }
+        assert_eq!(
+            snapshot_bytes(&twice, &dir.join(format!("twice_n{n}"))),
+            snapshot_bytes(&once, &dir.join(format!("once_n{n}"))),
+            "N={n}: re-insert left different postings on disk"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn compaction_bit_identical_to_fresh_rebuild() {
+    let dir = std::env::temp_dir().join("mixtab_sharded_props_compact");
+    let _ = std::fs::remove_dir_all(&dir);
+    let params = LshParams::new(5, 6);
+    let spec = oph_spec(HashFamily::MixedTab, 11);
+    let sets = corpus(64, 13);
+    for n in [1usize, 2, 4] {
+        let churned = ShardedIndex::new(n, params, &spec);
+        for (i, s) in sets.iter().enumerate() {
+            churned.insert(i as u32, s);
+        }
+        for i in (0..sets.len()).step_by(2) {
+            churned.delete(i as u32);
+        }
+        churned.compact();
+        assert_eq!(churned.tombstone_count(), 0, "N={n}: compact left tombstones");
+
+        let fresh = ShardedIndex::new(n, params, &spec);
+        for (i, s) in sets.iter().enumerate() {
+            if i % 2 != 0 {
+                fresh.insert(i as u32, s);
+            }
+        }
+        assert_eq!(churned.len(), fresh.len(), "N={n}");
+        assert_eq!(
+            snapshot_bytes(&churned, &dir.join(format!("churned_n{n}"))),
+            snapshot_bytes(&fresh, &dir.join(format!("fresh_n{n}"))),
+            "N={n}: compacted index differs from a fresh rebuild of the survivors"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tombstoned_snapshots_roundtrip_through_persist() {
+    let dir = std::env::temp_dir().join("mixtab_sharded_props_tomb");
+    let _ = std::fs::remove_dir_all(&dir);
+    let params = LshParams::new(4, 6);
+    let spec = oph_spec(HashFamily::MixedTab, 23);
+    let sets = corpus(80, 29);
+    for n in [1usize, 2, 4] {
+        let idx = ShardedIndex::new(n, params, &spec);
+        for (i, s) in sets.iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        // Three deletes out of 80 stay far below the auto-compaction
+        // threshold in every shard, so the tombstones are still pending
+        // at save time — the case the snapshot format must carry.
+        for id in 0..3u32 {
+            assert!(idx.delete(id).1);
+        }
+        assert_eq!(idx.tombstone_count(), 3, "N={n}: expected pending tombstones");
+
+        let base = dir.join(format!("snap_n{n}"));
+        idx.save(&base).unwrap();
+        let loaded = ShardedIndex::load(&base).unwrap();
+        assert_eq!(loaded.tombstone_count(), 3, "N={n}: tombstones lost on reload");
+        assert_eq!(loaded.len(), idx.len(), "N={n}: live count drifted");
+        for (i, s) in sets.iter().enumerate() {
+            assert_eq!(loaded.query(s), idx.query(s), "N={n}: query drift on reload");
+            if i < 3 {
+                assert!(
+                    !loaded.query(s).contains(&(i as u32)),
+                    "N={n}: deleted id {i} resurrected by reload"
+                );
+            }
+        }
+        // The reloaded index compacts to exactly what a fresh rebuild of
+        // the survivors would be — tombstones survived as *data*, not as
+        // baked-in postings.
+        loaded.compact();
+        assert_eq!(loaded.tombstone_count(), 0);
+        let fresh = ShardedIndex::new(n, params, &spec);
+        for (i, s) in sets.iter().enumerate() {
+            if i >= 3 {
+                fresh.insert(i as u32, s);
+            }
+        }
+        assert_eq!(
+            snapshot_bytes(&loaded, &dir.join(format!("reloaded_n{n}"))),
+            snapshot_bytes(&fresh, &dir.join(format!("freshtomb_n{n}"))),
+            "N={n}: reload+compact differs from fresh rebuild"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
