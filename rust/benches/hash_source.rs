@@ -1,0 +1,11 @@
+//! Bench target wrapper: the hash-evaluation layer — unrolled mixed-tab
+//! kernels vs scalar loops, pooled vs independent hash sources at matched
+//! sketch widths. The workload lives in [`mixtab::benchsuite`] so the
+//! `mixtab bench` CLI can run it in-process and gate the JSON records.
+
+use mixtab::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new();
+    mixtab::benchsuite::hash_source(&mut bench);
+}

@@ -1,4 +1,4 @@
-//! The seven `cargo bench` workloads as in-process library functions.
+//! The eight `cargo bench` workloads as in-process library functions.
 //!
 //! Each `rust/benches/*.rs` target is a thin `fn main` wrapper around one
 //! function here, and the `mixtab bench` CLI subcommand runs any subset of
@@ -34,6 +34,7 @@ use std::time::Instant;
 /// the bench-target names and the `--only` values of `mixtab bench`.
 pub const ALL: &[(&str, fn(&mut Bench))] = &[
     ("table1_hash_speed", table1_hash_speed),
+    ("hash_source", hash_source),
     ("sketch_throughput", sketch_throughput),
     ("sketch_dispatch", sketch_dispatch),
     ("lsh_query", lsh_query),
@@ -102,6 +103,104 @@ pub fn table1_hash_speed(bench: &mut Bench) {
         rows.push(m);
     }
     print_table("feature hashing News20-like (d'=128, per doc)", &rows);
+}
+
+/// The hash-evaluation layer in isolation — the unrolled multi-key
+/// mixed-tabulation kernels vs their scalar loops, and pooled vs
+/// independent [`crate::hash::source::HashSource`]s feeding the same
+/// sketch widths. The kernel cases bound what the 4-key unroll buys on
+/// raw throughput (acceptance: slice ≥ scalar on both widths); the
+/// source cases show the O(pool) vs O(coordinates) gap the pool exists
+/// for — simhash bits=96 / pool=256 pays 4 wide hash passes per batch
+/// instead of 96 narrow ones (acceptance: pooled ≥ 2× independent).
+pub fn hash_source(bench: &mut Bench) {
+    let n_keys: usize = if bench.is_quick() { 200_000 } else { 4_000_000 };
+    let reps: usize = if bench.is_quick() { 20 } else { 200 };
+
+    let mut rng = Xoshiro256::new(0x9001);
+    let keys: Vec<u32> = (0..n_keys).map(|_| rng.next_u32()).collect();
+    println!("hash_source: {n_keys} keys, sketch reps={reps}");
+
+    // Unrolled slice kernels vs a per-key loop over the same hashers.
+    let mut rows = Vec::new();
+    let h32 = HashFamily::MixedTab.build(42);
+    let mut out32 = vec![0u32; n_keys];
+    let m = bench.measure("mt32_slice", n_keys as u64, || {
+        h32.hash_slice(&keys, &mut out32);
+        black_box(out32[0])
+    });
+    bench.record("hash_source", &m);
+    rows.push(m);
+    let m = bench.measure("mt32_scalar", n_keys as u64, || {
+        for (k, o) in keys.iter().zip(out32.iter_mut()) {
+            *o = h32.hash(*k);
+        }
+        black_box(out32[0])
+    });
+    bench.record("hash_source", &m);
+    rows.push(m);
+    let h64 = HashFamily::MixedTab.build64(42);
+    let mut out64 = vec![0u64; n_keys];
+    let m = bench.measure("mt64_slice", n_keys as u64, || {
+        h64.hash64_slice(&keys, &mut out64);
+        black_box(out64[0])
+    });
+    bench.record("hash_source", &m);
+    rows.push(m);
+    let m = bench.measure("mt64_scalar", n_keys as u64, || {
+        for (k, o) in keys.iter().zip(out64.iter_mut()) {
+            *o = h64.hash64(*k);
+        }
+        black_box(out64[0])
+    });
+    bench.record("hash_source", &m);
+    rows.push(m);
+    print_table("mixed-tab kernels (per key)", &rows);
+
+    // Pooled vs independent sources at matched sketch widths, through the
+    // same spec-built sketchers the serving path uses.
+    let set: Vec<u32> = (0..2000).map(|_| rng.next_u32()).collect();
+    let v = SparseVector::unit_indicator(&set);
+    let mut scratch = Scratch::new();
+    let mut rows = Vec::new();
+    for (name, spec) in [
+        ("simhash_indep", SketchSpec::simhash(HashFamily::MixedTab, 7, 96)),
+        (
+            "simhash_pooled",
+            SketchSpec::simhash_pooled(HashFamily::MixedTab, 7, 96, 256),
+        ),
+    ] {
+        let sh = spec.build_simhash().expect("simhash spec");
+        let m = bench.measure(name, (reps * set.len()) as u64, || {
+            let mut acc = false;
+            for _ in 0..reps {
+                acc ^= black_box(sh.sketch_with(&v, &mut scratch))[0];
+            }
+            acc
+        });
+        bench.record("hash_source", &m);
+        rows.push(m);
+    }
+    let mh_reps = (reps / 10).max(1); // k=128 narrow passes on the indep path
+    for (name, spec) in [
+        ("minhash_indep", SketchSpec::minhash(HashFamily::MixedTab, 7, 128)),
+        (
+            "minhash_pooled",
+            SketchSpec::minhash_pooled(HashFamily::MixedTab, 7, 128, 256),
+        ),
+    ] {
+        let mh = spec.build_minhash().expect("minhash spec");
+        let m = bench.measure(name, (mh_reps * set.len()) as u64, || {
+            let mut acc = 0u32;
+            for _ in 0..mh_reps {
+                acc ^= black_box(mh.sketch_with(&set, &mut scratch))[0];
+            }
+            acc
+        });
+        bench.record("hash_source", &m);
+        rows.push(m);
+    }
+    print_table("hash sources at matched widths (per element)", &rows);
 }
 
 /// Sketching throughput — OPH vs k×MinHash (the paper's motivating

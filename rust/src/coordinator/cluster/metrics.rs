@@ -121,6 +121,9 @@ pub struct ClusterMetrics {
     pub updates: AtomicU64,
     pub queries: AtomicU64,
     pub topk_queries: AtomicU64,
+    /// `query_topk` responses whose merged result carried fewer than the
+    /// requested k ids (mirrors the single-host `topk_short`).
+    pub topk_short: AtomicU64,
     pub compactions: AtomicU64,
     pub sketches: AtomicU64,
     pub estimates: AtomicU64,
@@ -140,6 +143,7 @@ impl ClusterMetrics {
             updates: AtomicU64::new(0),
             queries: AtomicU64::new(0),
             topk_queries: AtomicU64::new(0),
+            topk_short: AtomicU64::new(0),
             compactions: AtomicU64::new(0),
             sketches: AtomicU64::new(0),
             estimates: AtomicU64::new(0),
@@ -172,6 +176,10 @@ impl ClusterMetrics {
                 self.topk_queries.load(Ordering::Relaxed) as usize,
             )
             .set(
+                "topk_short",
+                self.topk_short.load(Ordering::Relaxed) as usize,
+            )
+            .set(
                 "compactions",
                 self.compactions.load(Ordering::Relaxed) as usize,
             )
@@ -198,6 +206,7 @@ mod tests {
         Metrics::add(&m.deletes, 2);
         Metrics::inc(&m.updates);
         Metrics::inc(&m.topk_queries);
+        Metrics::inc(&m.topk_short);
         Metrics::inc(&m.compactions);
         Metrics::inc(&m.shadow.mirror_dead);
         Metrics::inc(&m.backends[0].requests);
@@ -215,6 +224,7 @@ mod tests {
         assert_eq!(s.get("lsh_deletes").unwrap().as_i64(), Some(2));
         assert_eq!(s.get("lsh_updates").unwrap().as_i64(), Some(1));
         assert_eq!(s.get("topk_queries").unwrap().as_i64(), Some(1));
+        assert_eq!(s.get("topk_short").unwrap().as_i64(), Some(1));
         assert_eq!(s.get("compactions").unwrap().as_i64(), Some(1));
         let b0 = s.get("backends").unwrap().get("b0").unwrap();
         assert_eq!(b0.get("requests").unwrap().as_i64(), Some(1));

@@ -388,6 +388,12 @@ impl ClusterRouter {
                 top.offer(id, score);
             }
             let ranked = top.into_sorted();
+            if ranked.len() < k {
+                // The merged, deduped cluster-wide candidate set fell
+                // short of the requested k — same signal as the
+                // single-host `topk_short`, observed after the merge.
+                Metrics::inc(&self.metrics.topk_short);
+            }
             return Response::TopK {
                 ids: ranked.iter().map(|s| s.id).collect(),
                 scores: ranked.iter().map(|s| s.score).collect(),

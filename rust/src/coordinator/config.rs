@@ -495,6 +495,22 @@ mod tests {
         let c = CoordinatorConfig::from_config(&cfg).unwrap();
         assert_eq!(c.oph_k, 64);
         assert_eq!(c.oph_spec(), SketchSpec::oph(HashFamily::MixedTab, 9, 64));
+
+        // Pooled-source specs ride the same path: `pool=` survives the
+        // config round-trip into the serving spec.
+        let cfg = Config::parse(
+            "[sketch]\nspec = \"simhash(bits=64,pool=256,hash=mixed_tab,seed=3)\"\n",
+        )
+        .unwrap();
+        let c = CoordinatorConfig::from_config(&cfg).unwrap();
+        assert_eq!(
+            c.sketch_spec(),
+            SketchSpec::simhash_pooled(HashFamily::MixedTab, 3, 64, 256)
+        );
+        // ...and a bad pool (not a multiple of 64) is a config error.
+        let cfg =
+            Config::parse("[sketch]\nspec = \"minhash(k=32,pool=100)\"\n").unwrap();
+        assert!(CoordinatorConfig::from_config(&cfg).is_err());
     }
 
     #[test]
@@ -506,7 +522,7 @@ mod tests {
     #[test]
     fn parses_schemes_shards_and_limits() {
         let cfg = Config::parse(
-            "[lsh]\nk = 6\nl = 8\nshards = 4\n\n[limits]\nrequests_per_sec = 200\nburst = 50\nmax_requests_per_conn = 1000\n\n[[schemes]]\nname = \"fast\"\nspec = \"oph(k=64,hash=multiply_shift,seed=7)\"\nshards = 2\n\n[[schemes]]\nname = \"dense\"\nspec = \"minhash(k=32,seed=9)\"\n",
+            "[lsh]\nk = 6\nl = 8\nshards = 4\n\n[limits]\nrequests_per_sec = 200\nburst = 50\nmax_requests_per_conn = 1000\n\n[[schemes]]\nname = \"fast\"\nspec = \"oph(k=64,hash=multiply_shift,seed=7)\"\nshards = 2\n\n[[schemes]]\nname = \"dense\"\nspec = \"minhash(k=32,seed=9)\"\n\n[[schemes]]\nname = \"pooled\"\nspec = \"minhash(k=32,pool=256,seed=9)\"\n",
         )
         .unwrap();
         let c = CoordinatorConfig::from_config(&cfg).unwrap();
@@ -515,7 +531,7 @@ mod tests {
         assert_eq!(c.rate_limit_burst, 50);
         assert_eq!(c.effective_burst(), 50);
         assert_eq!(c.conn_request_budget, 1000);
-        assert_eq!(c.schemes.len(), 2);
+        assert_eq!(c.schemes.len(), 3);
         assert_eq!(c.schemes[0].name, "fast");
         assert_eq!(
             c.schemes[0].spec,
@@ -524,6 +540,10 @@ mod tests {
         assert_eq!(c.schemes[0].shards, 2);
         assert_eq!(c.schemes[1].name, "dense");
         assert_eq!(c.schemes[1].shards, 1);
+        assert_eq!(
+            c.schemes[2].spec,
+            SketchSpec::minhash_pooled(HashFamily::MixedTab, 9, 32, 256)
+        );
         // Burst derivation when unset.
         let c = CoordinatorConfig {
             rate_limit_rps: 2.5,

@@ -28,6 +28,9 @@ pub struct SchemeCounters {
     pub queries: AtomicU64,
     /// `query_topk` requests re-ranked over this scheme's sketch store.
     pub topk_queries: AtomicU64,
+    /// `query_topk` responses returning fewer than the requested k
+    /// results (candidate set smaller than k — a recall smell at scale).
+    pub topk_short: AtomicU64,
     /// `estimate` requests served from this scheme's sketch store.
     pub estimates: AtomicU64,
     /// Inserts landing in each shard (length = the shard count registered
@@ -49,6 +52,7 @@ impl SchemeCounters {
             updates: AtomicU64::new(0),
             queries: AtomicU64::new(0),
             topk_queries: AtomicU64::new(0),
+            topk_short: AtomicU64::new(0),
             estimates: AtomicU64::new(0),
             shard_inserts: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
             shard_candidates: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
@@ -77,6 +81,10 @@ impl SchemeCounters {
                 "topk_queries",
                 self.topk_queries.load(Ordering::Relaxed) as usize,
             )
+            .set(
+                "topk_short",
+                self.topk_short.load(Ordering::Relaxed) as usize,
+            )
             .set("estimates", self.estimates.load(Ordering::Relaxed) as usize)
             .set("shards", Json::Arr(shards))
     }
@@ -100,6 +108,8 @@ pub struct Metrics {
     pub lsh_queries: AtomicU64,
     /// `query_topk` requests (retrieval + sketch-store re-rank).
     pub topk_queries: AtomicU64,
+    /// `query_topk` responses with fewer than the requested k results.
+    pub topk_short: AtomicU64,
     pub estimates: AtomicU64,
     /// Successful `compact` ops (explicit posting-list rewrites).
     pub compactions: AtomicU64,
@@ -204,6 +214,10 @@ impl Metrics {
                 "topk_queries",
                 self.topk_queries.load(Ordering::Relaxed) as usize,
             )
+            .set(
+                "topk_short",
+                self.topk_short.load(Ordering::Relaxed) as usize,
+            )
             .set("estimates", self.estimates.load(Ordering::Relaxed) as usize)
             .set("compactions", self.compactions.load(Ordering::Relaxed) as usize)
             .set("index_saves", self.index_saves.load(Ordering::Relaxed) as usize)
@@ -291,7 +305,11 @@ mod tests {
         Metrics::inc(&m.throttled);
         let s = m.snapshot();
         assert_eq!(s.get("throttled").unwrap().as_i64(), Some(1));
+        Metrics::inc(&block.topk_short);
+        let s = m.snapshot();
         let fast = s.get("schemes").unwrap().get("fast").unwrap();
+        assert_eq!(fast.get("topk_short").unwrap().as_i64(), Some(1));
+        assert_eq!(s.get("topk_short").unwrap().as_i64(), Some(0));
         assert_eq!(fast.get("sketches").unwrap().as_i64(), Some(1));
         assert_eq!(fast.get("inserts").unwrap().as_i64(), Some(1));
         assert_eq!(fast.get("estimates").unwrap().as_i64(), Some(1));

@@ -322,7 +322,24 @@ impl Scheme {
             }
         }
         Metrics::inc(&self.counters.topk_queries);
-        Ok(top.into_sorted())
+        let out = top.into_sorted();
+        if out.len() < k {
+            // Short list: the candidate set (or its scoreable subset)
+            // was smaller than the requested k — surfaced per scheme so
+            // recall starvation shows up in `stats` before it shows up
+            // in application quality.
+            Metrics::inc(&self.counters.topk_short);
+        }
+        Ok(out)
+    }
+
+    /// Threshold compactions completed on the background pool by this
+    /// scheme's serving index ([`ShardedIndex::background_compactions`];
+    /// 0 for index-less schemes).
+    pub fn background_compactions(&self) -> u64 {
+        read_unpoisoned(&self.index)
+            .as_ref()
+            .map_or(0, ShardedIndex::background_compactions)
     }
 
     /// Batched [`Self::sketch`]: one scratch reused across the batch.
@@ -838,6 +855,15 @@ mod tests {
         assert!(dense.compact().is_err());
         assert!(dense.query_topk(&[1, 2], 3).is_err());
 
+        // Requesting more results than the candidate set can yield is a
+        // short top-k response, counted per scheme.
+        let huge = fast.query_topk(&sets[8], 500).unwrap();
+        assert!(huge.len() < 500);
+
+        // No pool attached, so threshold compactions (if any) ran inline.
+        assert_eq!(fast.background_compactions(), 0);
+        assert_eq!(dense.background_compactions(), 0);
+
         // Counters tracked the op mix.
         let s = metrics.snapshot();
         let c = s.get("schemes").unwrap().get("fast").unwrap();
@@ -845,5 +871,6 @@ mod tests {
         assert_eq!(c.get("deletes").unwrap().as_i64(), Some(2));
         assert_eq!(c.get("updates").unwrap().as_i64(), Some(1));
         assert!(c.get("topk_queries").unwrap().as_i64().unwrap() >= 3);
+        assert!(c.get("topk_short").unwrap().as_i64().unwrap() >= 1);
     }
 }

@@ -341,9 +341,31 @@ impl Coordinator {
                 }
             }
             Request::Stats => Response::Stats {
-                json: self.metrics.snapshot(),
+                json: self.stats_snapshot(),
             },
         }
+    }
+
+    /// The metrics snapshot enriched with registry-derived gauges the
+    /// counter blocks can't own: background (threshold-triggered,
+    /// pool-scheduled) compactions are counted by each scheme's *serving
+    /// index*, summed here across schemes — distinct from `compactions`,
+    /// which counts explicit synchronous `compact` ops.
+    fn stats_snapshot(&self) -> crate::util::json::Json {
+        let background: u64 = self
+            .registry
+            .names()
+            .iter()
+            .map(|n| {
+                self.registry
+                    .get(Some(n))
+                    .map(|s| s.background_compactions())
+                    .unwrap_or(0)
+            })
+            .sum();
+        self.metrics
+            .snapshot()
+            .set("compactions_background", background as usize)
     }
 
     /// Bound on [`Self::spec_cache`]; once full, later distinct specs are
@@ -484,6 +506,9 @@ impl Coordinator {
         match self.registry.get(scheme).and_then(|s| s.query_topk(set, k)) {
             Ok(scored) => {
                 Metrics::inc(&self.metrics.topk_queries);
+                if scored.len() < k {
+                    Metrics::inc(&self.metrics.topk_short);
+                }
                 Response::TopK {
                     ids: scored.iter().map(|s| s.id).collect(),
                     scores: scored.iter().map(|s| s.score).collect(),
@@ -1382,7 +1407,12 @@ mod tests {
         assert_eq!(json.get("lsh_deletes").unwrap().as_i64(), Some(2));
         assert_eq!(json.get("lsh_updates").unwrap().as_i64(), Some(1));
         assert_eq!(json.get("topk_queries").unwrap().as_i64(), Some(2));
+        // The k=8 top-k ran against 7 live sketches — a short response.
+        assert!(json.get("topk_short").unwrap().as_i64().unwrap() >= 1);
         assert_eq!(json.get("compactions").unwrap().as_i64(), Some(1));
+        // One delete out of eight ids never crosses the 25% threshold, so
+        // nothing was scheduled on the background pool.
+        assert_eq!(json.get("compactions_background").unwrap().as_i64(), Some(0));
     }
 
     /// The batched mutation lane preserves arrival order: an

@@ -50,9 +50,11 @@ pub mod blake2;
 pub mod tabulation;
 pub mod twisted;
 pub mod quality;
+pub mod source;
 
 pub use blake2::Blake2b;
 pub use city::City64;
+pub use source::{HashSource, IndependentSource, PooledSource};
 pub use multiply_shift::{MultiplyModPrime, MultiplyShift};
 pub use murmur3::Murmur3;
 pub use polyhash::PolyHash;
@@ -99,6 +101,19 @@ pub trait Hasher32: Send + Sync {
 /// practical advantages; other families must evaluate twice.
 pub trait Hasher64: Send + Sync {
     fn hash64(&self, x: u32) -> u64;
+
+    /// Hash a batch of keys; override for a monomorphic inner loop. Must be
+    /// observably equivalent to calling `hash64` per key — the pooled
+    /// [`source::PooledSource`] fills its whole pool through this method
+    /// (one dynamic dispatch per pool word per batch) and its per-key
+    /// reference path relies on the equivalence.
+    fn hash64_slice(&self, keys: &[u32], out: &mut [u64]) {
+        assert_eq!(keys.len(), out.len());
+        for (k, o) in keys.iter().zip(out.iter_mut()) {
+            *o = self.hash64(*k);
+        }
+    }
+
     fn name64(&self) -> &'static str;
 }
 
@@ -321,6 +336,21 @@ mod tests {
         assert_ne!(v >> 32, v & 0xFFFF_FFFF);
         let h2 = HashFamily::Murmur3.build64(3);
         assert_eq!(h2.hash64(123), v);
+    }
+
+    #[test]
+    fn hash64_slice_matches_scalar() {
+        // Covers both the MixedTab64 staged kernel and the PairHasher64
+        // default loop.
+        for fam in [HashFamily::MixedTab, HashFamily::Murmur3] {
+            let h = fam.build64(7);
+            let keys: Vec<u32> = (0u32..101).map(|i| i.wrapping_mul(2654435761)).collect();
+            let mut out = vec![0u64; keys.len()];
+            h.hash64_slice(&keys, &mut out);
+            for (k, o) in keys.iter().zip(&out) {
+                assert_eq!(h.hash64(*k), *o, "{}", fam.id());
+            }
+        }
     }
 
     #[test]

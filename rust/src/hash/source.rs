@@ -1,0 +1,309 @@
+//! One hash-evaluation layer for multi-coordinate sketches.
+//!
+//! `SimHash`/`MinHash` need one 32-bit hash value per key per output
+//! coordinate (K·L bits for angular LSH, k values for MinHash). A
+//! [`HashSource`] abstracts *where those values come from*:
+//!
+//! * [`IndependentSource`] — one seeded hasher per coordinate, today's
+//!   behaviour refactored behind the trait. Bit-identical to the
+//!   pre-refactor sketchers because the sketchers keep deriving the exact
+//!   same per-coordinate hashers and merely hand them over.
+//! * [`PooledSource`] — the Puffinn `hash_source/pool.hpp` pattern: a
+//!   shared pool of `pool_bits` precomputed hash bits per key, filled by
+//!   one batched mixed-tabulation pass ([`crate::hash::Hasher64::
+//!   hash64_slice`], `pool_bits / 64` wide evaluations per key), from
+//!   which each coordinate reads a deterministic 32-bit window. Sketch
+//!   cost becomes O(pool) hash work instead of O(coordinates) — for
+//!   angular LSH with K·L = 100+ bits and `pool=256`, a ~3× cut in hash
+//!   evaluations — at a quantifiable independence cost: windows overlap,
+//!   so coordinates are no longer independent functions. The fig5-style
+//!   recall-parity property test bounds that cost (≤ 0.02 absolute
+//!   recall gap at matched (K, L)).
+//!
+//! The pool is *per batch of keys*, not global state: callers provide a
+//! reusable word buffer (one lives in [`crate::sketch::Scratch`]), the
+//! source fills it once in [`HashSource::begin`], and every
+//! [`HashSource::fill`] call reads windows out of it. Everything is a
+//! pure function of `(family, seed)` — same spec string ⇒ identical pool
+//! contents, sketches, and snapshot bytes across processes.
+
+use super::{HashFamily, Hasher32, Hasher64};
+use crate::util::rng::SplitMix64;
+
+/// Seed salt for the pool's word fillers (one [`Hasher64`] per 64 pool
+/// bits). Distinct from every other salt in the crate so pooled and
+/// independent sketchers never share hash functions by accident.
+const POOL_FILL_SALT: u64 = 0xB175_EED0_0F11_1E55;
+
+/// Seed salt for the per-coordinate window offsets.
+const POOL_OFFSET_SALT: u64 = 0x0FF5_E7D0_0B17_5EED;
+
+/// Where a sketcher's per-coordinate hash values come from.
+///
+/// Contract: for every coordinate `i < outputs()` and key batch `keys`,
+/// `begin(keys, pool)` followed by `fill(i, keys, pool, out)` must leave
+/// `out[j] == hash_one(i, keys[j])` — the batched path and the scalar
+/// reference are interchangeable, which is what the per-key reference
+/// sketch paths (`sketch_per_key`) and their equivalence tests rely on.
+pub trait HashSource: Send + Sync {
+    /// Number of 32-bit values produced per key (the sketch width served).
+    fn outputs(&self) -> usize;
+
+    /// Prepare for a batch of keys: pooled sources hash the whole pool
+    /// into `pool` here (resizing it as needed); independent sources do
+    /// nothing. Call once per batch, before any [`HashSource::fill`].
+    fn begin(&self, keys: &[u32], pool: &mut Vec<u64>);
+
+    /// Write coordinate `i`'s hash value for every key into `out`
+    /// (`out.len() == keys.len()`), reading the pool prepared by
+    /// [`HashSource::begin`] for the same `keys`.
+    fn fill(&self, i: usize, keys: &[u32], pool: &[u64], out: &mut [u32]);
+
+    /// Scalar reference: coordinate `i`'s hash value for one key.
+    fn hash_one(&self, i: usize, key: u32) -> u32;
+}
+
+/// One seeded [`Hasher32`] per output coordinate — the pre-refactor
+/// behaviour. The sketchers construct the hashers themselves (keeping
+/// their seed-derivation loops bit-identical) and wrap them here.
+pub struct IndependentSource {
+    hashers: Vec<Box<dyn Hasher32>>,
+}
+
+impl IndependentSource {
+    pub fn new(hashers: Vec<Box<dyn Hasher32>>) -> Self {
+        Self { hashers }
+    }
+
+    /// The underlying per-coordinate hashers (diagnostics / tests).
+    pub fn hashers(&self) -> &[Box<dyn Hasher32>] {
+        &self.hashers
+    }
+}
+
+impl HashSource for IndependentSource {
+    fn outputs(&self) -> usize {
+        self.hashers.len()
+    }
+
+    fn begin(&self, _keys: &[u32], _pool: &mut Vec<u64>) {}
+
+    fn fill(&self, i: usize, keys: &[u32], _pool: &[u64], out: &mut [u32]) {
+        self.hashers[i].hash_slice(keys, out);
+    }
+
+    fn hash_one(&self, i: usize, key: u32) -> u32 {
+        self.hashers[i].hash(key)
+    }
+}
+
+/// A shared pool of `pool_bits` hash bits per key; each coordinate reads
+/// a fixed 32-bit window at a seed-derived bit offset.
+///
+/// Pool layout in the scratch buffer is **word-major**: word `w`'s values
+/// for all keys are contiguous (`pool[w * n + j]` = word `w` of key `j`),
+/// so [`HashSource::begin`] is `pool_bits / 64` calls to
+/// [`Hasher64::hash64_slice`] — each a monomorphic batched kernel — and
+/// [`HashSource::fill`]'s window extraction walks two contiguous runs.
+pub struct PooledSource {
+    /// One wide hasher per 64 pool bits, seeds drawn from
+    /// `SplitMix64(seed ^ POOL_FILL_SALT)`.
+    fillers: Vec<Box<dyn Hasher64>>,
+    /// Per-coordinate window offsets in `[0, pool_bits - 32]`, drawn from
+    /// `SplitMix64(seed ^ POOL_OFFSET_SALT)`.
+    offsets: Vec<u32>,
+    pool_bits: usize,
+}
+
+impl PooledSource {
+    /// `pool_bits` must be a positive multiple of 64 (whole pool words)
+    /// so every 32-bit window fits; the spec layer validates this before
+    /// construction ([`crate::sketch::SketchSpec`]'s `pool=` parameter).
+    pub fn new(family: HashFamily, seed: u64, outputs: usize, pool_bits: usize) -> Self {
+        assert!(
+            pool_bits >= 64 && pool_bits % 64 == 0,
+            "pool_bits must be a positive multiple of 64, got {pool_bits}"
+        );
+        let words = pool_bits / 64;
+        let mut fill_seeds = SplitMix64::new(seed ^ POOL_FILL_SALT);
+        let fillers = (0..words)
+            .map(|_| family.build64(fill_seeds.next_u64()))
+            .collect();
+        let mut off_seeds = SplitMix64::new(seed ^ POOL_OFFSET_SALT);
+        // Offsets range over [0, pool_bits - 32] so the window's last bit
+        // (offset + 31) stays inside the pool.
+        let offsets = (0..outputs)
+            .map(|_| (off_seeds.next_u64() % (pool_bits as u64 - 31)) as u32)
+            .collect();
+        Self {
+            fillers,
+            offsets,
+            pool_bits,
+        }
+    }
+
+    pub fn pool_bits(&self) -> usize {
+        self.pool_bits
+    }
+
+    /// The coordinate → pool-bit-offset map (tests / diagnostics).
+    pub fn offsets(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// Extract the 32-bit window at bit `off` from key `j`'s pool words
+    /// laid out word-major over `n` keys.
+    #[inline(always)]
+    fn window(&self, pool: &[u64], n: usize, j: usize, off: u32) -> u32 {
+        let w = (off >> 6) as usize;
+        let s = off & 63;
+        let lo = pool[w * n + j] >> s;
+        let v = if s > 32 {
+            lo | (pool[(w + 1) * n + j] << (64 - s))
+        } else {
+            lo
+        };
+        v as u32
+    }
+}
+
+impl HashSource for PooledSource {
+    fn outputs(&self) -> usize {
+        self.offsets.len()
+    }
+
+    fn begin(&self, keys: &[u32], pool: &mut Vec<u64>) {
+        let n = keys.len();
+        pool.clear();
+        pool.resize(self.fillers.len() * n, 0);
+        for (w, filler) in self.fillers.iter().enumerate() {
+            filler.hash64_slice(keys, &mut pool[w * n..(w + 1) * n]);
+        }
+    }
+
+    fn fill(&self, i: usize, keys: &[u32], pool: &[u64], out: &mut [u32]) {
+        let n = keys.len();
+        assert_eq!(out.len(), n);
+        assert_eq!(pool.len(), self.fillers.len() * n, "begin() not called for this batch");
+        let off = self.offsets[i];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.window(pool, n, j, off);
+        }
+    }
+
+    fn hash_one(&self, i: usize, key: u32) -> u32 {
+        let off = self.offsets[i];
+        let w = (off >> 6) as usize;
+        let s = off & 63;
+        let lo = self.fillers[w].hash64(key) >> s;
+        let v = if s > 32 {
+            lo | (self.fillers[w + 1].hash64(key) << (64 - s))
+        } else {
+            lo
+        };
+        v as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize, seed: u64) -> Vec<u32> {
+        let mut g = SplitMix64::new(seed);
+        (0..n).map(|_| g.next_u32()).collect()
+    }
+
+    #[test]
+    fn independent_source_is_the_wrapped_hashers() {
+        let hashers: Vec<Box<dyn Hasher32>> = (0..6u64)
+            .map(|i| HashFamily::MixedTab.build(100 + i))
+            .collect();
+        let reference: Vec<Box<dyn Hasher32>> = (0..6u64)
+            .map(|i| HashFamily::MixedTab.build(100 + i))
+            .collect();
+        let src = IndependentSource::new(hashers);
+        assert_eq!(src.outputs(), 6);
+        let ks = keys(33, 1);
+        let mut pool = Vec::new();
+        src.begin(&ks, &mut pool);
+        let mut out = vec![0u32; ks.len()];
+        for i in 0..src.outputs() {
+            src.fill(i, &ks, &pool, &mut out);
+            for (k, o) in ks.iter().zip(&out) {
+                assert_eq!(*o, reference[i].hash(*k));
+                assert_eq!(*o, src.hash_one(i, *k));
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_fill_matches_scalar_reference() {
+        // The batched window extraction must equal hash_one for every
+        // coordinate and key — including batch lengths around the
+        // hash64_slice unroll width.
+        for family in [HashFamily::MixedTab, HashFamily::Murmur3] {
+            let src = PooledSource::new(family, 42, 24, 256);
+            let mut pool = Vec::new();
+            for n in [1usize, 3, 4, 7, 64] {
+                let ks = keys(n, 9);
+                src.begin(&ks, &mut pool);
+                let mut out = vec![0u32; n];
+                for i in 0..src.outputs() {
+                    src.fill(i, &ks, &pool, &mut out);
+                    for (k, o) in ks.iter().zip(&out) {
+                        assert_eq!(*o, src.hash_one(i, *k), "{} n={n} i={i}", family.id());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_offsets_keep_windows_inside_pool() {
+        for pool_bits in [64usize, 128, 256, 1024] {
+            let src = PooledSource::new(HashFamily::MixedTab, 7, 200, pool_bits);
+            assert_eq!(src.pool_bits(), pool_bits);
+            for &off in src.offsets() {
+                assert!(
+                    (off as usize) + 32 <= pool_bits,
+                    "offset {off} overruns a {pool_bits}-bit pool"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_source_deterministic_and_seed_sensitive() {
+        let a = PooledSource::new(HashFamily::MixedTab, 5, 16, 256);
+        let b = PooledSource::new(HashFamily::MixedTab, 5, 16, 256);
+        let c = PooledSource::new(HashFamily::MixedTab, 6, 16, 256);
+        assert_eq!(a.offsets(), b.offsets());
+        let ks = keys(40, 3);
+        let (mut pa, mut pc) = (Vec::new(), Vec::new());
+        a.begin(&ks, &mut pa);
+        b.begin(&ks, &mut pc);
+        assert_eq!(pa, pc, "same seed must fill identical pools");
+        c.begin(&ks, &mut pc);
+        assert_ne!(pa, pc, "different seed must fill a different pool");
+        let mut differs = 0;
+        for i in 0..a.outputs() {
+            for &k in &ks {
+                assert_eq!(a.hash_one(i, k), b.hash_one(i, k));
+                differs += (a.hash_one(i, k) != c.hash_one(i, k)) as u32;
+            }
+        }
+        assert!(differs > 0);
+    }
+
+    #[test]
+    fn pooled_coordinates_spread_across_the_pool() {
+        // Distinct coordinates should mostly read distinct windows —
+        // otherwise the pool degenerates into one shared function.
+        let src = PooledSource::new(HashFamily::MixedTab, 11, 64, 512);
+        let mut offs: Vec<u32> = src.offsets().to_vec();
+        offs.sort_unstable();
+        offs.dedup();
+        assert!(offs.len() > 32, "only {} distinct offsets of 64", offs.len());
+    }
+}

@@ -134,18 +134,31 @@ impl MixedTab32 {
         Self { t1, t2 }
     }
 
+    /// First stage: XOR of the four T1 lookups (low 32 bits = output
+    /// contribution, high 32 bits = derived characters).
     #[inline(always)]
-    fn eval(&self, x: u32) -> u32 {
-        let mut h: u64 = self.t1[(x & 0xFF) as usize]
+    fn t1_acc(&self, x: u32) -> u64 {
+        self.t1[(x & 0xFF) as usize]
             ^ self.t1[256 + ((x >> 8) & 0xFF) as usize]
             ^ self.t1[512 + ((x >> 16) & 0xFF) as usize]
-            ^ self.t1[768 + (x >> 24) as usize];
+            ^ self.t1[768 + (x >> 24) as usize]
+    }
+
+    /// Second stage: fold the T2 lookups of the derived characters into the
+    /// T1 accumulator and truncate to the 32 output bits.
+    #[inline(always)]
+    fn t2_fold(&self, mut h: u64) -> u32 {
         let drv = (h >> 32) as u32;
         h ^= self.t2[(drv & 0xFF) as usize] as u64;
         h ^= self.t2[256 + ((drv >> 8) & 0xFF) as usize] as u64;
         h ^= self.t2[512 + ((drv >> 16) & 0xFF) as usize] as u64;
         h ^= self.t2[768 + (drv >> 24) as usize] as u64;
         h as u32
+    }
+
+    #[inline(always)]
+    fn eval(&self, x: u32) -> u32 {
+        self.t2_fold(self.t1_acc(x))
     }
 }
 
@@ -157,18 +170,21 @@ impl Hasher32 for MixedTab32 {
 
     fn hash_slice(&self, keys: &[u32], out: &mut [u32]) {
         assert_eq!(keys.len(), out.len());
-        // Process four keys per iteration: the T1→T2 dependency chain is
-        // ~13 cycles deep per key; interleaving four chains keeps the two
-        // L1d load ports busy (§Perf).
+        // Four keys per iteration, *staged*: all four T1 accumulations
+        // issue before any T2 fold, so the four independent T1→T2
+        // dependency chains (~13 cycles deep each) overlap and both L1d
+        // load ports stay busy instead of serialising per key (§Perf).
         let chunks = keys.len() / 4 * 4;
         let mut i = 0;
         while i < chunks {
-            let (a, b, c, d) = (keys[i], keys[i + 1], keys[i + 2], keys[i + 3]);
-            let (ra, rb, rc, rd) = (self.eval(a), self.eval(b), self.eval(c), self.eval(d));
-            out[i] = ra;
-            out[i + 1] = rb;
-            out[i + 2] = rc;
-            out[i + 3] = rd;
+            let h0 = self.t1_acc(keys[i]);
+            let h1 = self.t1_acc(keys[i + 1]);
+            let h2 = self.t1_acc(keys[i + 2]);
+            let h3 = self.t1_acc(keys[i + 3]);
+            out[i] = self.t2_fold(h0);
+            out[i + 1] = self.t2_fold(h1);
+            out[i + 2] = self.t2_fold(h2);
+            out[i + 3] = self.t2_fold(h3);
             i += 4;
         }
         for j in chunks..keys.len() {
@@ -206,21 +222,35 @@ impl MixedTab64 {
         Self { t1_out, t1_drv, t2 }
     }
 
+    /// First stage: the four T1 lookups, returning `(output accumulator,
+    /// derived characters)`.
     #[inline(always)]
-    fn eval(&self, x: u32) -> u64 {
+    fn t1_stage(&self, x: u32) -> (u64, u32) {
         let i0 = (x & 0xFF) as usize;
         let i1 = ((x >> 8) & 0xFF) as usize;
         let i2 = ((x >> 16) & 0xFF) as usize;
         let i3 = (x >> 24) as usize;
-        let mut h = self.t1_out[i0] ^ self.t1_out[256 + i1] ^ self.t1_out[512 + i2]
+        let h = self.t1_out[i0] ^ self.t1_out[256 + i1] ^ self.t1_out[512 + i2]
             ^ self.t1_out[768 + i3];
         let drv =
             self.t1_drv[i0] ^ self.t1_drv[256 + i1] ^ self.t1_drv[512 + i2] ^ self.t1_drv[768 + i3];
+        (h, drv)
+    }
+
+    /// Second stage: fold T2 over the derived characters.
+    #[inline(always)]
+    fn t2_fold(&self, mut h: u64, drv: u32) -> u64 {
         h ^= self.t2[(drv & 0xFF) as usize];
         h ^= self.t2[256 + ((drv >> 8) & 0xFF) as usize];
         h ^= self.t2[512 + ((drv >> 16) & 0xFF) as usize];
         h ^= self.t2[768 + (drv >> 24) as usize];
         h
+    }
+
+    #[inline(always)]
+    fn eval(&self, x: u32) -> u64 {
+        let (h, drv) = self.t1_stage(x);
+        self.t2_fold(h, drv)
     }
 }
 
@@ -228,6 +258,31 @@ impl Hasher64 for MixedTab64 {
     #[inline]
     fn hash64(&self, x: u32) -> u64 {
         self.eval(x)
+    }
+
+    fn hash64_slice(&self, keys: &[u32], out: &mut [u64]) {
+        assert_eq!(keys.len(), out.len());
+        // The pooled-source fill kernel: four keys per iteration with the
+        // T1 stage fully issued before any T2 fold, same rationale as
+        // [`MixedTab32::hash_slice`] — this is the batch that fills a whole
+        // hash pool in one pass, so it is the hottest loop of pooled
+        // sketching.
+        let chunks = keys.len() / 4 * 4;
+        let mut i = 0;
+        while i < chunks {
+            let (h0, d0) = self.t1_stage(keys[i]);
+            let (h1, d1) = self.t1_stage(keys[i + 1]);
+            let (h2, d2) = self.t1_stage(keys[i + 2]);
+            let (h3, d3) = self.t1_stage(keys[i + 3]);
+            out[i] = self.t2_fold(h0, d0);
+            out[i + 1] = self.t2_fold(h1, d1);
+            out[i + 2] = self.t2_fold(h2, d2);
+            out[i + 3] = self.t2_fold(h3, d3);
+            i += 4;
+        }
+        for j in chunks..keys.len() {
+            out[j] = self.eval(keys[j]);
+        }
     }
 
     fn name64(&self) -> &'static str {
@@ -359,6 +414,36 @@ mod tests {
         assert!((avg - 16.0).abs() < 1.0, "half-correlation avg {avg}");
         // And Hasher32 view is the low half.
         assert_eq!(Hasher32::hash(&h, 123), h.hash64(123) as u32);
+    }
+
+    #[test]
+    fn mixedtab64_slice_matches_scalar_at_every_length() {
+        // Guards the staged/unrolled hash64_slice kernel, including the
+        // remainder tail at every length mod 4.
+        let h = MixedTab64::new(&mut SplitMix64::new(17));
+        let mut g = SplitMix64::new(23);
+        for n in 0..=19usize {
+            let keys: Vec<u32> = (0..n).map(|_| g.next_u32()).collect();
+            let mut out = vec![0u64; n];
+            h.hash64_slice(&keys, &mut out);
+            for (k, o) in keys.iter().zip(&out) {
+                assert_eq!(*o, h.hash64(*k), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixedtab32_slice_matches_scalar_at_every_length() {
+        let h = mt32(19);
+        let mut g = SplitMix64::new(29);
+        for n in 0..=19usize {
+            let keys: Vec<u32> = (0..n).map(|_| g.next_u32()).collect();
+            let mut out = vec![0u32; n];
+            h.hash_slice(&keys, &mut out);
+            for (k, o) in keys.iter().zip(&out) {
+                assert_eq!(*o, h.hash(*k), "n={n}");
+            }
+        }
     }
 
     #[test]

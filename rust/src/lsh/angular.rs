@@ -5,10 +5,14 @@
 //! feature hashing for dimensionality reduction first. This index mirrors
 //! [`super::index::LshIndex`] but keys buckets on K SimHash bits per table,
 //! L tables — and, like everything else in this crate, is parameterised by
-//! the basic hash family that generates the ±1 projections.
+//! a [`SketchSpec`], so both the basic hash family generating the ±1
+//! projections *and* the hash-evaluation source (`pool=0` independent
+//! hashers vs `pool=N` shared-pool sampling, see [`crate::hash::source`])
+//! come from configuration. The structural bit count is always K·L; the
+//! spec's own `bits` value is overridden via
+//! [`SketchSpec::with_simhash_bits`].
 
 use crate::data::sparse::SparseVector;
-use crate::hash::HashFamily;
 use crate::sketch::simhash::SimHash;
 use crate::sketch::spec::SketchSpec;
 use std::collections::HashMap;
@@ -21,36 +25,47 @@ pub struct AngularParams {
 }
 
 /// SimHash-based LSH index over sparse vectors.
+///
+/// `insert` is an upsert keyed on id, mirroring [`super::index::LshIndex`]:
+/// re-inserting a live id replaces its old bucket postings instead of
+/// leaking a second copy, and `len` counts distinct ids.
 pub struct AngularIndex {
     params: AngularParams,
     sketcher: SimHash,
     tables: Vec<HashMap<u64, Vec<u32>>>,
-    len: usize,
+    /// id → the L bucket keys its current vector hashed to. Source of
+    /// truth for membership (`len == keys.len()`) and for purging stale
+    /// postings on re-insert.
+    keys: HashMap<u32, Vec<u64>>,
 }
 
 impl AngularIndex {
-    pub fn new(params: AngularParams, family: HashFamily, seed: u64) -> Self {
+    /// Build over a SimHash spec. The spec's bit count is overridden to
+    /// the structural K·L; family, seed, and `pool` are taken from the
+    /// spec. Panics if the spec is not SimHash or params are degenerate.
+    pub fn new(params: AngularParams, spec: &SketchSpec) -> Self {
         assert!(params.k >= 1 && params.k <= 64 && params.l >= 1);
-        let sketcher = SketchSpec::simhash(family, seed, params.k * params.l)
+        let sketcher = spec
+            .with_simhash_bits(params.k * params.l)
             .build_simhash()
-            .expect("simhash spec");
+            .expect("AngularIndex needs a SimHash sketch spec");
         Self {
             params,
             sketcher,
             tables: vec![HashMap::new(); params.l],
-            len: 0,
+            keys: HashMap::new(),
         }
     }
 
     pub fn len(&self) -> usize {
-        self.len
+        self.keys.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.keys.is_empty()
     }
 
-    fn keys(&self, v: &SparseVector) -> Vec<u64> {
+    fn bucket_keys(&self, v: &SparseVector) -> Vec<u64> {
         let bits = self.sketcher.sketch(v);
         (0..self.params.l)
             .map(|l| {
@@ -63,18 +78,41 @@ impl AngularIndex {
             .collect()
     }
 
+    /// Insert or replace `id`. Re-inserting identical content is a no-op;
+    /// changed content purges the old postings first so each live id
+    /// occurs exactly once per table.
     pub fn insert(&mut self, id: u32, v: &SparseVector) {
-        let keys = self.keys(v);
-        for (table, key) in self.tables.iter_mut().zip(keys) {
+        let new_keys = self.bucket_keys(v);
+        if let Some(old_keys) = self.keys.get(&id) {
+            if *old_keys == new_keys {
+                return;
+            }
+            let old_keys = old_keys.clone();
+            self.purge_postings(id, &old_keys);
+        }
+        for (table, &key) in self.tables.iter_mut().zip(&new_keys) {
             table.entry(key).or_default().push(id);
         }
-        self.len += 1;
+        self.keys.insert(id, new_keys);
+    }
+
+    /// Drop `id` from the buckets its old keys point at, removing buckets
+    /// that become empty.
+    fn purge_postings(&mut self, id: u32, old_keys: &[u64]) {
+        for (table, &key) in self.tables.iter_mut().zip(old_keys) {
+            if let Some(ids) = table.get_mut(&key) {
+                ids.retain(|&x| x != id);
+                if ids.is_empty() {
+                    table.remove(&key);
+                }
+            }
+        }
     }
 
     /// Candidates colliding in ≥ 1 table (sorted, deduplicated).
     pub fn query(&self, v: &SparseVector) -> Vec<u32> {
         let mut out = Vec::new();
-        for (table, key) in self.tables.iter().zip(self.keys(v)) {
+        for (table, key) in self.tables.iter().zip(self.bucket_keys(v)) {
             if let Some(ids) = table.get(&key) {
                 out.extend_from_slice(ids);
             }
@@ -88,7 +126,12 @@ impl AngularIndex {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hash::HashFamily;
     use crate::util::rng::Xoshiro256;
+
+    fn spec(seed: u64) -> SketchSpec {
+        SketchSpec::simhash(HashFamily::MixedTab, seed, 1)
+    }
 
     fn randvec(rng: &mut Xoshiro256, dim: u32, nnz: usize) -> SparseVector {
         SparseVector::new(
@@ -100,14 +143,40 @@ mod tests {
     #[test]
     fn self_retrieval() {
         let mut rng = Xoshiro256::new(1);
-        let mut idx = AngularIndex::new(AngularParams { k: 8, l: 8 }, HashFamily::MixedTab, 3);
+        let mut idx = AngularIndex::new(AngularParams { k: 8, l: 8 }, &spec(3));
         let vs: Vec<SparseVector> = (0..25).map(|_| randvec(&mut rng, 5000, 60)).collect();
         for (i, v) in vs.iter().enumerate() {
             idx.insert(i as u32, v);
         }
+        assert_eq!(idx.len(), 25);
         for (i, v) in vs.iter().enumerate() {
             assert!(idx.query(v).contains(&(i as u32)), "vector {i} missed itself");
         }
+    }
+
+    #[test]
+    fn reinsert_is_upsert_not_leak() {
+        // Against the pre-upsert code this fails twice over: len double-counts
+        // and the stale postings keep the old vector retrievable.
+        let mut rng = Xoshiro256::new(2);
+        let mut idx = AngularIndex::new(AngularParams { k: 6, l: 8 }, &spec(7));
+        let a = randvec(&mut rng, 2000, 150);
+        let b = SparseVector::new(a.indices.clone(), a.values.iter().map(|x| -x).collect());
+        idx.insert(0, &a);
+        idx.insert(0, &a); // identical re-insert: no-op
+        idx.insert(0, &b); // changed content: supersedes
+        assert_eq!(idx.len(), 1);
+        for (l, table) in idx.tables.iter().enumerate() {
+            let occurrences: usize = table
+                .values()
+                .map(|ids| ids.iter().filter(|&&id| id == 0).count())
+                .sum();
+            assert_eq!(occurrences, 1, "table {l} posts id 0 {occurrences} times");
+        }
+        // The live content is b's; a (antipodal, every bit flipped) must not
+        // reach id 0 through stale postings.
+        assert!(idx.query(&b).contains(&0));
+        assert!(!idx.query(&a).contains(&0));
     }
 
     #[test]
@@ -122,8 +191,7 @@ mod tests {
         let mut near_hits = 0;
         let mut far_hits = 0;
         for seed in 0..20u64 {
-            let mut idx =
-                AngularIndex::new(AngularParams { k: 10, l: 6 }, HashFamily::MixedTab, seed);
+            let mut idx = AngularIndex::new(AngularParams { k: 10, l: 6 }, &spec(seed));
             idx.insert(0, &near);
             let far = randvec(&mut rng, 2000, 200);
             idx.insert(1, &far);
@@ -142,10 +210,60 @@ mod tests {
         let mut rng = Xoshiro256::new(9);
         let v = randvec(&mut rng, 1000, 100);
         let neg = SparseVector::new(v.indices.clone(), v.values.iter().map(|x| -x).collect());
-        let mut idx = AngularIndex::new(AngularParams { k: 12, l: 4 }, HashFamily::MixedTab, 1);
+        let mut idx = AngularIndex::new(AngularParams { k: 12, l: 4 }, &spec(1));
         idx.insert(0, &neg);
         // With 12 bits per key, an antipodal vector collides with
         // probability ~0 (every bit flips).
         assert!(idx.query(&v).is_empty());
+    }
+
+    /// Fig-5-style recall parity: pooled SimHash bits must buy their O(pool)
+    /// sketch cost without giving up recall. Planted near-duplicates at
+    /// cos ≈ 0.97 with (K=6, L=12) put per-query recall ≈ 1 for independent
+    /// bits (miss ≈ 0.39^12 ≈ 1e-5); the pooled source's correlated bits
+    /// must stay within 0.02 absolute at the same structural parameters.
+    #[test]
+    fn pooled_recall_parity_with_independent_bits() {
+        let params = AngularParams { k: 6, l: 12 };
+        let n: usize = 40;
+        let mut rng = Xoshiro256::new(33);
+        let mut recalls = [0.0f64; 2]; // [independent, pooled]
+        let seeds = 5u64;
+        for seed in 0..seeds {
+            let base: Vec<SparseVector> = (0..n).map(|_| randvec(&mut rng, 4000, 200)).collect();
+            // Queries: base + noise, cos ≈ 1/sqrt(1 + 0.25²) ≈ 0.97.
+            let queries: Vec<SparseVector> = base
+                .iter()
+                .map(|v| {
+                    SparseVector::new(
+                        v.indices.clone(),
+                        v.values.iter().map(|x| x + rng.normal() * 0.25).collect(),
+                    )
+                })
+                .collect();
+            let specs = [
+                SketchSpec::simhash(HashFamily::MixedTab, seed, 1),
+                SketchSpec::simhash_pooled(HashFamily::MixedTab, seed, 1, 256),
+            ];
+            for (r, sp) in recalls.iter_mut().zip(&specs) {
+                let mut idx = AngularIndex::new(params, sp);
+                for (i, v) in base.iter().enumerate() {
+                    idx.insert(i as u32, v);
+                }
+                let hits = queries
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, q)| idx.query(q).contains(&(*i as u32)))
+                    .count();
+                *r += hits as f64 / (n as f64 * seeds as f64);
+            }
+        }
+        let [indep, pooled] = recalls;
+        assert!(indep >= 0.9, "independent recall {indep}");
+        assert!(pooled >= 0.9, "pooled recall {pooled}");
+        assert!(
+            (indep - pooled).abs() <= 0.02,
+            "recall gap: independent {indep} vs pooled {pooled}"
+        );
     }
 }

@@ -19,6 +19,7 @@ pub mod angular;
 pub mod sharded;
 pub mod topk;
 
+pub use angular::{AngularIndex, AngularParams};
 pub use index::{LshIndex, LshParams};
 pub use metrics::{ground_truth, QueryEval};
 pub use sharded::ShardedIndex;

@@ -47,6 +47,7 @@ use crate::util::sync::lock_unpoisoned;
 use crate::util::threadpool::ThreadPool;
 use std::io::{BufReader, BufWriter, Read};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Seed salt separating the id→shard routing hash stream from the sketch
@@ -84,11 +85,19 @@ pub struct ShardedIndex {
     /// sketcher (same spec), so sets are sketched once per operation, not
     /// once per shard.
     sketcher: OneHashSketcher,
-    shards: Vec<Mutex<LshIndex>>,
-    /// Shared worker pool for parallel shard fan-out; `None` (the
-    /// default) keeps queries sequential. Attached by the coordinator
-    /// ([`Self::set_pool`]); never serialized.
+    /// Arc-wrapped so threshold-triggered compactions can run as
+    /// `'static` background jobs on the shared pool while the deleting
+    /// connection moves on.
+    shards: Vec<Arc<Mutex<LshIndex>>>,
+    /// Shared worker pool for parallel shard fan-out and background
+    /// compaction; `None` (the default) keeps queries sequential and
+    /// compacts inline on the deleting thread. Attached by the
+    /// coordinator ([`Self::set_pool`]); never serialized.
     pool: Option<Arc<ThreadPool>>,
+    /// Threshold compactions completed on the pool (not explicit
+    /// `compact` calls, not inline fallbacks) — surfaced in server stats
+    /// as `compactions_background`.
+    bg_compactions: Arc<AtomicU64>,
 }
 
 impl ShardedIndex {
@@ -107,14 +116,16 @@ impl ShardedIndex {
         // LshIndex self-contained (the N=1 equivalence is with a *bare*
         // index, sketcher and all) at a bounded cost: a few KB of tables
         // per shard, once, with shard counts capped at MAX_SHARDS.
-        let shards = (0..n_shards).map(|_| Mutex::new(LshIndex::new(params, spec))).collect();
+        let shards = (0..n_shards)
+            .map(|_| Arc::new(Mutex::new(LshIndex::new(params, spec))))
+            .collect();
         Self::assemble(params, spec, shards)
     }
 
     /// Wire up the routing hasher + shared sketcher around pre-built
     /// shards (construction and [`Self::load`], which already has the
     /// deserialized per-shard indices in hand).
-    fn assemble(params: LshParams, spec: &SketchSpec, shards: Vec<Mutex<LshIndex>>) -> Self {
+    fn assemble(params: LshParams, spec: &SketchSpec, shards: Vec<Arc<Mutex<LshIndex>>>) -> Self {
         let sketcher = spec
             .with_oph_k(params.sketch_bins())
             .build_oph()
@@ -126,6 +137,7 @@ impl ShardedIndex {
             sketcher,
             shards,
             pool: None,
+            bg_compactions: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -192,18 +204,49 @@ impl ShardedIndex {
     }
 
     /// Delete `id` from its routed shard (tombstone + query-time filter —
-    /// see [`LshIndex::delete`]). Returns `(shard, existed)`. If the
-    /// delete pushes the shard's tombstone fraction to
-    /// [`COMPACT_TOMBSTONE_FRAC`] or beyond, the shard is compacted
-    /// before the lock is released.
+    /// see [`LshIndex::delete`]). Returns `(shard, existed)`.
+    ///
+    /// If the delete pushes the shard's tombstone fraction to
+    /// [`COMPACT_TOMBSTONE_FRAC`] or beyond: with a pool attached the
+    /// compaction is scheduled as a background job — the deleting
+    /// connection returns immediately instead of paying the O(tombstones
+    /// · L) rewrite, and the job re-checks the threshold under the shard
+    /// lock (a concurrent compaction may already have cleared the
+    /// backlog, so duplicate triggers coalesce into no-ops). Without a
+    /// pool it compacts inline before the lock is released, exactly as
+    /// before. Background completions are counted in
+    /// [`Self::background_compactions`]. Tombstoned ids are filtered at
+    /// query time either way, so deferral never changes results.
     pub fn delete(&self, id: u32) -> (usize, bool) {
         let shard = self.shard_of(id);
         let mut guard = lock_unpoisoned(&self.shards[shard]);
         let existed = guard.delete(id);
         if existed && guard.tombstone_fraction() >= COMPACT_TOMBSTONE_FRAC {
-            guard.compact();
+            match &self.pool {
+                Some(pool) => {
+                    drop(guard);
+                    let shard_arc = Arc::clone(&self.shards[shard]);
+                    let completed = Arc::clone(&self.bg_compactions);
+                    pool.execute(move || {
+                        let mut g = lock_unpoisoned(&shard_arc);
+                        if g.tombstone_fraction() >= COMPACT_TOMBSTONE_FRAC {
+                            g.compact();
+                            completed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                }
+                None => {
+                    guard.compact();
+                }
+            }
         }
         (shard, existed)
+    }
+
+    /// Threshold compactions completed on the background pool (explicit
+    /// [`Self::compact`] calls and inline no-pool compactions excluded).
+    pub fn background_compactions(&self) -> u64 {
+        self.bg_compactions.load(Ordering::Relaxed)
     }
 
     /// Update (upsert) `id` with new content: delete + insert under one
@@ -389,7 +432,7 @@ impl ShardedIndex {
             let (index, family, seed) = persist::load(base)?;
             let params = index.params();
             let spec = SketchSpec::oph(family, seed, params.sketch_bins());
-            return Ok(Self::assemble(params, &spec, vec![Mutex::new(index)]));
+            return Ok(Self::assemble(params, &spec, vec![Arc::new(Mutex::new(index))]));
         }
         let f = std::fs::File::open(base)?;
         let mut r = BinReader::new(BufReader::new(f));
@@ -424,7 +467,7 @@ impl ShardedIndex {
                     path.display()
                 );
             }
-            shards.push(Mutex::new(index));
+            shards.push(Arc::new(Mutex::new(index)));
         }
         Ok(Self::assemble(params, &spec, shards))
     }
@@ -522,6 +565,39 @@ mod tests {
         for id in 0..30u32 {
             assert!(!idx.query(&sets[id as usize]).contains(&id));
         }
+    }
+
+    #[test]
+    fn background_compaction_on_pool_keeps_tombstones_bounded() {
+        let mut idx = ShardedIndex::new(2, LshParams::new(3, 4), &spec(21));
+        let pool = Arc::new(ThreadPool::new(2));
+        idx.set_pool(Some(Arc::clone(&pool)));
+        let sets = corpus(40);
+        for (i, s) in sets.iter().enumerate() {
+            idx.insert(i as u32, s);
+        }
+        for id in 0..30u32 {
+            idx.delete(id);
+            // Drain after every delete so the threshold dynamics match the
+            // inline path deterministically.
+            pool.wait_idle();
+        }
+        assert!(
+            idx.background_compactions() >= 1,
+            "no compaction ran on the pool"
+        );
+        for s in idx.shards.iter() {
+            let s = lock_unpoisoned(s);
+            assert!(
+                s.tombstone_fraction() < COMPACT_TOMBSTONE_FRAC,
+                "background compaction did not keep tombstones bounded"
+            );
+        }
+        // Deferral never changes visibility: deleted ids stay filtered.
+        for id in 0..30u32 {
+            assert!(!idx.query(&sets[id as usize]).contains(&id));
+        }
+        assert_eq!(idx.len(), 10);
     }
 
     #[test]

@@ -10,16 +10,18 @@
 //! as [`MinHash::sketch_per_key`] for equivalence testing.
 
 use super::scratch::Scratch;
-use crate::hash::{HashFamily, Hasher32};
+use crate::hash::{HashFamily, HashSource, Hasher32, IndependentSource, PooledSource};
 
-/// k independent MinHash repetitions.
+/// k MinHash repetitions drawing from a [`HashSource`].
 ///
 /// Constructed either from injected hashers ([`Self::from_hashers`], used
 /// by tests with stub hashers) or — the configuration path — from a parsed
 /// [`crate::sketch::SketchSpec`] via its `build`/`build_minhash` registry,
-/// which delegates to [`Self::new`].
+/// which delegates to [`Self::new`] (`pool=0`, independent hashers,
+/// bit-identical to the pre-`HashSource` sketcher) or [`Self::pooled`]
+/// (`pool=N`, repetitions sampled from a shared precomputed pool).
 pub struct MinHash {
-    hashers: Vec<Box<dyn Hasher32>>,
+    source: Box<dyn HashSource>,
 }
 
 impl MinHash {
@@ -31,14 +33,27 @@ impl MinHash {
         Self::from_hashers(hashers)
     }
 
+    /// k repetitions sampled from a shared `pool_bits`-bit pool
+    /// ([`PooledSource`]): O(pool) hash work per sketch instead of O(k).
+    pub fn pooled(family: HashFamily, seed: u64, k: usize, pool_bits: usize) -> Self {
+        assert!(k >= 1);
+        Self::from_source(Box::new(PooledSource::new(family, seed, k, pool_bits)))
+    }
+
     /// Build from k explicit hashers (one per repetition).
     pub fn from_hashers(hashers: Vec<Box<dyn Hasher32>>) -> Self {
         assert!(!hashers.is_empty());
-        Self { hashers }
+        Self::from_source(Box::new(IndependentSource::new(hashers)))
+    }
+
+    /// Build from any [`HashSource`] with one output per repetition.
+    pub fn from_source(source: Box<dyn HashSource>) -> Self {
+        assert!(source.outputs() >= 1);
+        Self { source }
     }
 
     pub fn k(&self) -> usize {
-        self.hashers.len()
+        self.source.outputs()
     }
 
     /// Sketch: `S[i] = min_{a ∈ A} h_i(a)`. Empty sets get all-`u32::MAX`.
@@ -49,14 +64,16 @@ impl MinHash {
     }
 
     /// Sketch using a caller-provided [`Scratch`] (hot path): one
-    /// [`Hasher32::hash_slice`] batch per repetition, then a monomorphic
-    /// min-reduction over the buffer. Bit-identical to
+    /// [`HashSource::begin`] per set (the pooled source hashes its whole
+    /// pool here), then per repetition a [`HashSource::fill`] batch and a
+    /// monomorphic min-reduction over the buffer. Bit-identical to
     /// [`Self::sketch_per_key`].
     pub fn sketch_with(&self, set: &[u32], scratch: &mut Scratch) -> Vec<u32> {
-        let mut out = vec![u32::MAX; self.hashers.len()];
-        let hashes = scratch.hashes_mut(set.len());
-        for (o, h) in out.iter_mut().zip(&self.hashers) {
-            h.hash_slice(set, &mut hashes[..]);
+        let mut out = vec![u32::MAX; self.source.outputs()];
+        let (pool, hashes) = scratch.pool_and_hashes_mut(set.len());
+        self.source.begin(set, pool);
+        for (i, o) in out.iter_mut().enumerate() {
+            self.source.fill(i, set, pool, hashes);
             let mut m = u32::MAX;
             for &v in hashes.iter() {
                 m = m.min(v);
@@ -70,13 +87,13 @@ impl MinHash {
     /// element per repetition). Correctness oracle for the batched path; not
     /// for production use.
     pub fn sketch_per_key(&self, set: &[u32]) -> Vec<u32> {
-        let mut out = vec![u32::MAX; self.hashers.len()];
-        for (i, h) in self.hashers.iter().enumerate() {
+        let mut out = vec![u32::MAX; self.source.outputs()];
+        for (i, o) in out.iter_mut().enumerate() {
             let mut m = u32::MAX;
             for &x in set {
-                m = m.min(h.hash(x));
+                m = m.min(self.source.hash_one(i, x));
             }
-            out[i] = m;
+            *o = m;
         }
         out
     }
@@ -84,7 +101,7 @@ impl MinHash {
     /// Estimate Jaccard similarity as the fraction of agreeing coordinates.
     pub fn estimate(&self, a: &[u32], b: &[u32]) -> f64 {
         assert_eq!(a.len(), b.len());
-        assert_eq!(a.len(), self.hashers.len());
+        assert_eq!(a.len(), self.source.outputs());
         let m = a.iter().zip(b).filter(|(x, y)| x == y).count();
         m as f64 / a.len() as f64
     }
@@ -140,5 +157,34 @@ mod tests {
         let mut scratch = crate::sketch::scratch::Scratch::new();
         assert_eq!(mh.sketch_with(&set, &mut scratch), mh.sketch_per_key(&set));
         assert_eq!(mh.sketch_with(&[], &mut scratch), mh.sketch_per_key(&[]));
+    }
+
+    #[test]
+    fn pooled_batched_matches_per_key() {
+        let mh = MinHash::pooled(HashFamily::MixedTab, 11, 64, 256);
+        assert_eq!(mh.k(), 64);
+        let set: Vec<u32> = (0..500u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        let mut scratch = crate::sketch::scratch::Scratch::new();
+        assert_eq!(mh.sketch_with(&set, &mut scratch), mh.sketch_per_key(&set));
+        assert_eq!(mh.sketch_with(&[], &mut scratch), mh.sketch_per_key(&[]));
+    }
+
+    #[test]
+    fn pooled_tracks_true_jaccard_on_random_data() {
+        // Pool windows overlap (coordinates are not independent), but each
+        // coordinate is still a uniform hash, so the estimator stays
+        // unbiased — only the variance grows. Averaged over seeds the
+        // estimate must still track the truth.
+        let a: Vec<u32> = (0..1500).collect();
+        let b: Vec<u32> = (500..2000).collect(); // J = 1000/2000 = 0.5
+        let truth = jaccard_exact(&a, &b);
+        let mut sum = 0.0;
+        let reps = 30;
+        for seed in 0..reps {
+            let mh = MinHash::pooled(HashFamily::MixedTab, seed, 100, 512);
+            sum += mh.estimate(&mh.sketch(&a), &mh.sketch(&b));
+        }
+        let mean = sum / reps as f64;
+        assert!((mean - truth).abs() < 0.05, "mean {mean} truth {truth}");
     }
 }

@@ -41,6 +41,10 @@ pub struct Scratch {
     pub(crate) signs: Vec<u32>,
     /// Dense d'-dimensional output reused by `squared_norm`.
     pub(crate) dense: Vec<f64>,
+    /// Pool-word buffer for [`crate::hash::PooledSource`]-backed sketchers
+    /// (`pool_bits / 64` u64 words per key, word-major). Stays empty for
+    /// independent sources.
+    pub(crate) pool: Vec<u64>,
 }
 
 impl Scratch {
@@ -55,6 +59,7 @@ impl Scratch {
             hashes: Vec::with_capacity(keys),
             signs: Vec::new(),
             dense: Vec::new(),
+            pool: Vec::new(),
         }
     }
 
@@ -63,6 +68,14 @@ impl Scratch {
     pub(crate) fn hashes_mut(&mut self, n: usize) -> &mut [u32] {
         self.hashes.resize(n, 0);
         &mut self.hashes[..n]
+    }
+
+    /// The pool-word buffer plus the primary hash buffer at `n` entries —
+    /// split borrows from distinct fields, so a
+    /// [`crate::hash::HashSource`] can read the pool while writing hashes.
+    pub(crate) fn pool_and_hashes_mut(&mut self, n: usize) -> (&mut Vec<u64>, &mut [u32]) {
+        self.hashes.resize(n, 0);
+        (&mut self.pool, &mut self.hashes[..n])
     }
 
     /// Two independent `n`-entry hash buffers (bin hashes, sign hashes).

@@ -11,16 +11,19 @@
 
 use super::scratch::Scratch;
 use crate::data::sparse::SparseVector;
-use crate::hash::{HashFamily, Hasher32};
+use crate::hash::{HashFamily, HashSource, Hasher32, IndependentSource, PooledSource};
 
-/// k-bit SimHash sketcher.
+/// k-bit SimHash sketcher drawing from a [`HashSource`].
 ///
 /// Constructed either from injected hashers ([`Self::from_hashers`], used
 /// by tests with stub hashers) or — the configuration path — from a parsed
 /// [`crate::sketch::SketchSpec`] via its `build`/`build_simhash` registry,
-/// which delegates to [`Self::new`].
+/// which delegates to [`Self::new`] (`pool=0`, independent hashers,
+/// bit-identical to the pre-`HashSource` sketcher) or [`Self::pooled`]
+/// (`pool=N`, bits sampled from a shared precomputed pool — the angular
+/// LSH case where K·L bits per key would otherwise cost K·L evaluations).
 pub struct SimHash {
-    hashers: Vec<Box<dyn Hasher32>>,
+    source: Box<dyn HashSource>,
 }
 
 impl SimHash {
@@ -32,14 +35,27 @@ impl SimHash {
         Self::from_hashers(hashers)
     }
 
+    /// `bits` output bits sampled from a shared `pool_bits`-bit pool
+    /// ([`PooledSource`]): O(pool) hash work per sketch instead of O(bits).
+    pub fn pooled(family: HashFamily, seed: u64, bits: usize, pool_bits: usize) -> Self {
+        assert!(bits >= 1);
+        Self::from_source(Box::new(PooledSource::new(family, seed, bits, pool_bits)))
+    }
+
     /// Build from explicit hashers (one per output bit).
     pub fn from_hashers(hashers: Vec<Box<dyn Hasher32>>) -> Self {
         assert!(!hashers.is_empty());
-        Self { hashers }
+        Self::from_source(Box::new(IndependentSource::new(hashers)))
+    }
+
+    /// Build from any [`HashSource`] with one output per bit.
+    pub fn from_source(source: Box<dyn HashSource>) -> Self {
+        assert!(source.outputs() >= 1);
+        Self { source }
     }
 
     pub fn bits(&self) -> usize {
-        self.hashers.len()
+        self.source.outputs()
     }
 
     /// Sketch: bit i = sign of the ±1 projection by hasher i. Convenience
@@ -48,15 +64,17 @@ impl SimHash {
         self.sketch_with(v, &mut Scratch::with_capacity(v.indices.len()))
     }
 
-    /// Sketch using a caller-provided [`Scratch`] (hot path): per output
-    /// bit, one [`crate::hash::Hasher32::hash_slice`] batch over the
-    /// non-zero indices, then a monomorphic ±1 accumulation. Bit-identical
-    /// to [`Self::sketch_per_key`].
+    /// Sketch using a caller-provided [`Scratch`] (hot path): one
+    /// [`HashSource::begin`] per vector (the pooled source hashes its
+    /// whole pool here), then per output bit one [`HashSource::fill`]
+    /// batch over the non-zero indices and a monomorphic ±1 accumulation.
+    /// Bit-identical to [`Self::sketch_per_key`].
     pub fn sketch_with(&self, v: &SparseVector, scratch: &mut Scratch) -> Vec<bool> {
-        let hashes = scratch.hashes_mut(v.indices.len());
-        let mut out = Vec::with_capacity(self.hashers.len());
-        for h in &self.hashers {
-            h.hash_slice(&v.indices, &mut hashes[..]);
+        let (pool, hashes) = scratch.pool_and_hashes_mut(v.indices.len());
+        self.source.begin(&v.indices, pool);
+        let mut out = Vec::with_capacity(self.source.outputs());
+        for i in 0..self.source.outputs() {
+            self.source.fill(i, &v.indices, pool, hashes);
             let mut acc = 0.0;
             for (&hv, &val) in hashes.iter().zip(&v.values) {
                 let r = if hv & 1 == 1 { 1.0 } else { -1.0 };
@@ -71,12 +89,11 @@ impl SimHash {
     /// non-zero per bit). Correctness oracle for the batched path; not for
     /// production use.
     pub fn sketch_per_key(&self, v: &SparseVector) -> Vec<bool> {
-        self.hashers
-            .iter()
-            .map(|h| {
+        (0..self.source.outputs())
+            .map(|i| {
                 let mut acc = 0.0;
                 for (&j, &val) in v.indices.iter().zip(&v.values) {
-                    let r = if h.hash(j) & 1 == 1 { 1.0 } else { -1.0 };
+                    let r = if self.source.hash_one(i, j) & 1 == 1 { 1.0 } else { -1.0 };
                     acc += r * val;
                 }
                 acc >= 0.0
@@ -127,6 +144,41 @@ mod tests {
         let sh = SimHash::new(HashFamily::MixedTab, 8, 128);
         let mut scratch = crate::sketch::scratch::Scratch::new();
         assert_eq!(sh.sketch_with(&v, &mut scratch), sh.sketch_per_key(&v));
+    }
+
+    #[test]
+    fn pooled_batched_matches_per_key() {
+        let mut rng = Xoshiro256::new(5);
+        let v = SparseVector::new(
+            (0..300u32).map(|i| i * 5 + 1).collect(),
+            (0..300).map(|_| rng.normal()).collect(),
+        );
+        let sh = SimHash::pooled(HashFamily::MixedTab, 8, 128, 256);
+        assert_eq!(sh.bits(), 128);
+        let mut scratch = crate::sketch::scratch::Scratch::new();
+        assert_eq!(sh.sketch_with(&v, &mut scratch), sh.sketch_per_key(&v));
+    }
+
+    #[test]
+    fn pooled_tracks_cosine_on_random_vectors() {
+        // Pooled bits are correlated (shared pool windows), but each bit is
+        // still an unbiased sign projection, so the angle estimate must
+        // still track the truth averaged over seeds.
+        let mut rng = Xoshiro256::new(17);
+        let idx: Vec<u32> = (0..400).collect();
+        let v1: Vec<f64> = (0..400).map(|_| rng.normal()).collect();
+        let v2: Vec<f64> = v1.iter().map(|x| x + rng.normal() * 0.7).collect();
+        let truth = cosine_sorted(&idx, &v1, &idx, &v2);
+        let a = SparseVector::new(idx.clone(), v1);
+        let b = SparseVector::new(idx, v2);
+        let mut sum = 0.0;
+        let reps = 20;
+        for seed in 0..reps {
+            let sh = SimHash::pooled(HashFamily::MixedTab, seed, 256, 512);
+            sum += sh.estimate_cosine(&sh.sketch(&a), &sh.sketch(&b));
+        }
+        let mean = sum / reps as f64;
+        assert!((mean - truth).abs() < 0.1, "mean {mean} truth {truth}");
     }
 
     #[test]

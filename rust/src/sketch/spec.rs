@@ -17,7 +17,9 @@
 //! ```text
 //! oph(k=200,layout=mod,densify=paper,hash=mixed_tab,seed=42)
 //! minhash(k=128,hash=mixed_tab,seed=7)
+//! minhash(k=128,pool=256,hash=mixed_tab,seed=7)
 //! simhash(bits=64,hash=murmur3,seed=1)
+//! simhash(bits=64,pool=256,hash=mixed_tab,seed=1)
 //! featurehash(dim=128,sign=paired,hash=mixed_tab,seed=42)
 //! bbit(b=2,k=200,layout=mod,densify=paper,hash=mixed_tab,seed=3)
 //! ```
@@ -25,7 +27,16 @@
 //! `hash` (default `mixed_tab`) and `seed` (default `0`) are common to all
 //! schemes; `layout`/`densify`/`sign` are optional with the paper's
 //! defaults; the size parameters (`k`, `bits`, `dim`, `b`) are required.
-//! [`std::fmt::Display`] emits the canonical fully-keyed form and
+//! `pool` (MinHash/SimHash only; default `0`) selects the hash-evaluation
+//! source ([`crate::hash::source`]): absent or `0` = one independent
+//! hasher per coordinate (bit-identical to the pre-pool sketchers);
+//! `pool=N` = coordinates sample 32-bit windows from a shared pool of N
+//! precomputed hash bits per key (N a multiple of 64). `pool` is
+//! spec-level on purpose: it changes the sketch *function*, so it must
+//! ride through canonical strings into persistence manifests and the
+//! `load_index` provenance check like any other parameter.
+//! [`std::fmt::Display`] emits the canonical fully-keyed form (omitting
+//! `pool=` when 0, keeping pre-pool canonical strings stable) and
 //! `parse(display(spec)) == spec` for every spec.
 //!
 //! # Equivalence guarantee
@@ -74,10 +85,12 @@ impl OphParams {
 pub enum SketchScheme {
     /// One Permutation Hashing (§2.1).
     Oph(OphParams),
-    /// Classic k×MinHash baseline.
-    MinHash { k: usize },
-    /// SimHash sign-random-projection bits.
-    SimHash { bits: usize },
+    /// Classic k×MinHash baseline. `pool=0` builds one independent hasher
+    /// per repetition; `pool=N` samples repetitions from a shared N-bit
+    /// precomputed pool ([`crate::hash::PooledSource`]).
+    MinHash { k: usize, pool: usize },
+    /// SimHash sign-random-projection bits, with the same `pool` knob.
+    SimHash { bits: usize, pool: usize },
     /// Feature hashing to `dim` dense dimensions (§2.2).
     FeatureHash { dim: usize, sign: SignMode },
     /// b-bit truncation of a densified OPH sketch (§1.2).
@@ -109,19 +122,29 @@ impl SketchSpec {
         }
     }
 
-    /// k×MinHash spec.
+    /// k×MinHash spec (independent per-repetition hashers).
     pub fn minhash(family: HashFamily, seed: u64, k: usize) -> Self {
+        Self::minhash_pooled(family, seed, k, 0)
+    }
+
+    /// k×MinHash spec with an explicit pool size (0 = independent).
+    pub fn minhash_pooled(family: HashFamily, seed: u64, k: usize, pool: usize) -> Self {
         Self {
-            scheme: SketchScheme::MinHash { k },
+            scheme: SketchScheme::MinHash { k, pool },
             family,
             seed,
         }
     }
 
-    /// SimHash spec.
+    /// SimHash spec (independent per-bit hashers).
     pub fn simhash(family: HashFamily, seed: u64, bits: usize) -> Self {
+        Self::simhash_pooled(family, seed, bits, 0)
+    }
+
+    /// SimHash spec with an explicit pool size (0 = independent).
+    pub fn simhash_pooled(family: HashFamily, seed: u64, bits: usize, pool: usize) -> Self {
         Self {
-            scheme: SketchScheme::SimHash { bits },
+            scheme: SketchScheme::SimHash { bits, pool },
             family,
             seed,
         }
@@ -170,6 +193,18 @@ impl SketchSpec {
         self
     }
 
+    /// Copy of this spec with the SimHash bit count replaced — used by
+    /// [`crate::lsh::AngularIndex`], whose structural (K, L) parameters
+    /// dictate the bit count (K·L sign bits), while the hash family, seed,
+    /// and `pool` stay user-chosen. Panics if the scheme is not SimHash.
+    pub fn with_simhash_bits(mut self, new_bits: usize) -> Self {
+        match &mut self.scheme {
+            SketchScheme::SimHash { bits, .. } => *bits = new_bits,
+            other => panic!("with_simhash_bits on non-SimHash scheme {other:?}"),
+        }
+        self
+    }
+
     /// Parse from the canonical string form (see module docs).
     pub fn parse(s: &str) -> Result<SketchSpec> {
         let s = s.trim();
@@ -209,9 +244,11 @@ impl SketchSpec {
             "oph" => SketchScheme::Oph(take_oph_params(&mut params)?),
             "minhash" | "mh" => SketchScheme::MinHash {
                 k: take_req::<usize>(&mut params, "k")?,
+                pool: take_pool(&mut params)?,
             },
             "simhash" => SketchScheme::SimHash {
                 bits: take_req::<usize>(&mut params, "bits")?,
+                pool: take_pool(&mut params)?,
             },
             "featurehash" | "fh" => SketchScheme::FeatureHash {
                 dim: take_req::<usize>(&mut params, "dim")?,
@@ -261,11 +298,16 @@ impl SketchSpec {
     /// programmatic construction (e.g. `lsh::AngularIndex`) is not capped.
     pub const MAX_HASHERS: usize = 1 << 10;
 
+    /// Max `pool=` bits. A pool costs `pool/64` u64 hashers plus
+    /// `pool/64` words per key of scratch; 64 Ki bits (1024 fillers,
+    /// 8 KiB/key) is already far past any useful pool size.
+    pub const MAX_POOL_BITS: usize = 1 << 16;
+
     fn validate(&self) -> Result<()> {
         let (size, cap) = match self.scheme {
             SketchScheme::Oph(p) | SketchScheme::BBit { inner: p, .. } => (p.k, Self::MAX_COORDS),
-            SketchScheme::MinHash { k } => (k, Self::MAX_HASHERS),
-            SketchScheme::SimHash { bits } => (bits, Self::MAX_HASHERS),
+            SketchScheme::MinHash { k, .. } => (k, Self::MAX_HASHERS),
+            SketchScheme::SimHash { bits, .. } => (bits, Self::MAX_HASHERS),
             SketchScheme::FeatureHash { dim, .. } => (dim, Self::MAX_COORDS),
         };
         if size == 0 {
@@ -273,6 +315,21 @@ impl SketchSpec {
         }
         if size > cap {
             bail!("sketch spec '{self}' exceeds the size cap ({size} > {cap})");
+        }
+        if let SketchScheme::MinHash { pool, .. } | SketchScheme::SimHash { pool, .. } =
+            self.scheme
+        {
+            // pool=0 is the independent source; a real pool must hold whole
+            // u64 filler words and at least one 32-bit window.
+            if pool != 0 && (pool < 64 || pool % 64 != 0) {
+                bail!("sketch spec '{self}' needs pool=0 or a multiple of 64 >= 64, got {pool}");
+            }
+            if pool > Self::MAX_POOL_BITS {
+                bail!(
+                    "sketch spec '{self}' exceeds the pool cap ({pool} > {})",
+                    Self::MAX_POOL_BITS
+                );
+            }
         }
         Ok(())
     }
@@ -306,20 +363,34 @@ impl SketchSpec {
         ))
     }
 
-    /// Typed MinHash construction; errors unless the scheme is [`SketchScheme::MinHash`].
+    /// Typed MinHash construction; errors unless the scheme is
+    /// [`SketchScheme::MinHash`]. `pool=0` delegates to [`MinHash::new`]
+    /// (bit-identical to the pre-pool sketcher), `pool=N` to
+    /// [`MinHash::pooled`].
     pub fn build_minhash(&self) -> Result<MinHash> {
-        let SketchScheme::MinHash { k } = self.scheme else {
+        let SketchScheme::MinHash { k, pool } = self.scheme else {
             bail!("spec '{self}' is not a MinHash spec");
         };
-        Ok(MinHash::new(self.family, self.seed, k))
+        Ok(if pool == 0 {
+            MinHash::new(self.family, self.seed, k)
+        } else {
+            MinHash::pooled(self.family, self.seed, k, pool)
+        })
     }
 
-    /// Typed SimHash construction; errors unless the scheme is [`SketchScheme::SimHash`].
+    /// Typed SimHash construction; errors unless the scheme is
+    /// [`SketchScheme::SimHash`]. `pool=0` delegates to [`SimHash::new`]
+    /// (bit-identical to the pre-pool sketcher), `pool=N` to
+    /// [`SimHash::pooled`].
     pub fn build_simhash(&self) -> Result<SimHash> {
-        let SketchScheme::SimHash { bits } = self.scheme else {
+        let SketchScheme::SimHash { bits, pool } = self.scheme else {
             bail!("spec '{self}' is not a SimHash spec");
         };
-        Ok(SimHash::new(self.family, self.seed, bits))
+        Ok(if pool == 0 {
+            SimHash::new(self.family, self.seed, bits)
+        } else {
+            SimHash::pooled(self.family, self.seed, bits, pool)
+        })
     }
 
     /// Typed feature-hasher construction; errors unless the scheme is
@@ -354,8 +425,14 @@ impl fmt::Display for SketchSpec {
                 p.layout.id(),
                 p.densify.id(),
             ),
-            SketchScheme::MinHash { k } => write!(f, "minhash(k={k},{common})"),
-            SketchScheme::SimHash { bits } => write!(f, "simhash(bits={bits},{common})"),
+            SketchScheme::MinHash { k, pool: 0 } => write!(f, "minhash(k={k},{common})"),
+            SketchScheme::MinHash { k, pool } => {
+                write!(f, "minhash(k={k},pool={pool},{common})")
+            }
+            SketchScheme::SimHash { bits, pool: 0 } => write!(f, "simhash(bits={bits},{common})"),
+            SketchScheme::SimHash { bits, pool } => {
+                write!(f, "simhash(bits={bits},pool={pool},{common})")
+            }
             SketchScheme::FeatureHash { dim, sign } => {
                 write!(f, "featurehash(dim={dim},sign={},{common})", sign.id())
             }
@@ -381,6 +458,13 @@ fn take_req<T: std::str::FromStr>(params: &mut BTreeMap<&str, &str>, key: &str) 
         .remove(key)
         .ok_or_else(|| format_err!("sketch spec is missing required parameter '{key}'"))?;
     parse_int::<T>(value, key)
+}
+
+fn take_pool(params: &mut BTreeMap<&str, &str>) -> Result<usize> {
+    match params.remove("pool") {
+        Some(v) => parse_int::<usize>(v, "pool"),
+        None => Ok(0),
+    }
 }
 
 fn take_oph_params(params: &mut BTreeMap<&str, &str>) -> Result<OphParams> {
@@ -424,7 +508,9 @@ mod tests {
                 },
             ),
             SketchSpec::minhash(HashFamily::Murmur3, 9, 128),
+            SketchSpec::minhash_pooled(HashFamily::MixedTab, 9, 128, 256),
             SketchSpec::simhash(HashFamily::City, 10, 64),
+            SketchSpec::simhash_pooled(HashFamily::MixedTab, 10, 64, 512),
             SketchSpec::feature_hash(HashFamily::MixedTab, 42, 128, SignMode::Paired),
             SketchSpec::feature_hash(HashFamily::Blake2, 3, 32, SignMode::Separate),
             SketchSpec::bbit(HashFamily::MixedTab, 5, 2, 200),
@@ -474,6 +560,10 @@ mod tests {
             "oph(k=100,wibble=3)",          // unknown parameter
             "minhash(bits=4)",              // wrong size key for the scheme
             "simhash(k=4)",                 // ditto
+            "minhash(k=8,pool=100)",        // pool not a multiple of 64
+            "minhash(k=8,pool=32)",         // pool below one filler word
+            "simhash(bits=8,pool=131072)",  // beyond MAX_POOL_BITS
+            "oph(k=100,pool=256)",          // pool is minhash/simhash-only
             "featurehash(dim=64,sign=odd)", // unknown sign mode
             "bbit(b=0,k=100)",              // b out of range
             "bbit(b=9,k=100)",              // b out of range
@@ -521,6 +611,40 @@ mod tests {
     #[should_panic]
     fn with_oph_k_panics_on_non_oph() {
         let _ = SketchSpec::minhash(HashFamily::MixedTab, 1, 8).with_oph_k(30);
+    }
+
+    #[test]
+    fn with_simhash_bits_overrides_bit_count_and_keeps_pool() {
+        let spec = SketchSpec::simhash_pooled(HashFamily::MixedTab, 1, 8, 256).with_simhash_bits(72);
+        assert_eq!(spec.build_simhash().unwrap().bits(), 72);
+        assert_eq!(
+            spec.scheme,
+            SketchScheme::SimHash {
+                bits: 72,
+                pool: 256
+            }
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn with_simhash_bits_panics_on_non_simhash() {
+        let _ = SketchSpec::minhash(HashFamily::MixedTab, 1, 8).with_simhash_bits(30);
+    }
+
+    #[test]
+    fn pooled_specs_roundtrip_with_explicit_pool_key() {
+        let spec = SketchSpec::parse("minhash(k=128,pool=256,hash=mixed_tab,seed=7)").unwrap();
+        assert_eq!(
+            spec,
+            SketchSpec::minhash_pooled(HashFamily::MixedTab, 7, 128, 256)
+        );
+        assert_eq!(spec.to_string(), "minhash(k=128,pool=256,hash=mixed_tab,seed=7)");
+        // pool=0 parses as the independent source and canonicalises with no
+        // pool key — pre-pool canonical strings are stable.
+        let spec = SketchSpec::parse("simhash(bits=64,pool=0,hash=city,seed=10)").unwrap();
+        assert_eq!(spec, SketchSpec::simhash(HashFamily::City, 10, 64));
+        assert_eq!(spec.to_string(), "simhash(bits=64,hash=city,seed=10)");
     }
 
     #[test]

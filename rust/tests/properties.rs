@@ -325,3 +325,57 @@ fn prop_spec_registry_bit_identical_to_direct_construction() {
         );
     }
 }
+
+/// The pooled half of the `HashSource` contract: pooled spec-built
+/// sketchers are bit-identical to direct pooled constructions, the
+/// batched (pool-in-Scratch) path equals the per-key reference, and the
+/// canonical `pool=` string round-trips with identical output. (The
+/// `pool=0`/absent path is pinned by
+/// `prop_spec_registry_bit_identical_to_direct_construction` above: those
+/// sketchers are the pre-refactor constructions behind
+/// `IndependentSource`.)
+#[test]
+fn prop_pooled_sketchers_bit_identical_across_paths() {
+    use mixtab::data::SparseVector;
+    use mixtab::sketch::minhash::MinHash;
+    use mixtab::sketch::simhash::SimHash;
+    use mixtab::sketch::{Scratch, SketchSpec};
+
+    for fam in [
+        HashFamily::MixedTab,
+        HashFamily::Murmur3,
+        HashFamily::MultiplyShift,
+    ] {
+        let seed = 0xFACEu64;
+        let mh_spec = SketchSpec::minhash_pooled(fam, seed, 16, 256);
+        let mh_direct = MinHash::pooled(fam, seed, 16, 256);
+        let mh_built = mh_spec.build_minhash().unwrap();
+        let mh_reparsed = SketchSpec::parse(&mh_spec.to_string())
+            .unwrap()
+            .build_minhash()
+            .unwrap();
+        let sh_spec = SketchSpec::simhash_pooled(fam, seed, 24, 128);
+        let sh_direct = SimHash::pooled(fam, seed, 24, 128);
+        let sh_built = sh_spec.build_simhash().unwrap();
+        let sh_reparsed = SketchSpec::parse(&sh_spec.to_string())
+            .unwrap()
+            .build_simhash()
+            .unwrap();
+        Runner::new(16).run(
+            &format!("pooled spec == direct {}", fam.id()),
+            set_gen(200),
+            |set| {
+                let mut scratch = Scratch::new();
+                let v = SparseVector::unit_indicator(set);
+                let mh_out = mh_direct.sketch_with(set, &mut scratch);
+                let sh_out = sh_direct.sketch_with(&v, &mut scratch);
+                mh_out == mh_direct.sketch_per_key(set)
+                    && mh_built.sketch_with(set, &mut scratch) == mh_out
+                    && mh_reparsed.sketch_with(set, &mut scratch) == mh_out
+                    && sh_out == sh_direct.sketch_per_key(&v)
+                    && sh_built.sketch_with(&v, &mut scratch) == sh_out
+                    && sh_reparsed.sketch_with(&v, &mut scratch) == sh_out
+            },
+        );
+    }
+}

@@ -474,3 +474,108 @@ fn roundtrip_preserves_non_default_oph_params_at_any_shard_count() {
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn pooled_spec_string_fully_determines_pool_and_sketches() {
+    // The pooled source is a pure function of the spec string: two
+    // constructions from the same canonical string (two "processes"
+    // parsing the same config) fill identical pools and emit identical
+    // sketches — no process-local state leaks into the pool.
+    use mixtab::hash::source::{HashSource, PooledSource};
+    let sets = corpus(40, 17);
+    for text in [
+        "minhash(k=64,pool=256,hash=mixed_tab,seed=21)",
+        "simhash(bits=96,pool=512,hash=mixed_tab,seed=22)",
+    ] {
+        let a: SketchSpec = text.parse().unwrap();
+        let b: SketchSpec = a.to_string().parse().unwrap();
+        assert_eq!(a, b, "canonical form must round-trip");
+        match a.scheme {
+            mixtab::sketch::SketchScheme::MinHash { .. } => {
+                let (ma, mb) = (a.build_minhash().unwrap(), b.build_minhash().unwrap());
+                for s in &sets {
+                    assert_eq!(ma.sketch_per_key(s), mb.sketch_per_key(s), "{text}");
+                }
+            }
+            mixtab::sketch::SketchScheme::SimHash { .. } => {
+                let (sa, sb) = (a.build_simhash().unwrap(), b.build_simhash().unwrap());
+                for s in &sets {
+                    let v = mixtab::data::SparseVector::unit_indicator(s);
+                    assert_eq!(sa.sketch_per_key(&v), sb.sketch_per_key(&v), "{text}");
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+    // Pool contents themselves: same (family, seed, width) ⇒ the same
+    // word-for-word pool for any key batch.
+    let pa = PooledSource::new(HashFamily::MixedTab, 21, 64, 256);
+    let pb = PooledSource::new(HashFamily::MixedTab, 21, 64, 256);
+    assert_eq!(pa.offsets(), pb.offsets());
+    let (mut wa, mut wb) = (Vec::new(), Vec::new());
+    for s in sets.iter().take(5) {
+        pa.begin(s, &mut wa);
+        pb.begin(s, &mut wb);
+        assert_eq!(wa, wb, "pool contents diverged across constructions");
+    }
+}
+
+#[test]
+fn pooled_scheme_sidecar_bytes_identical_across_shard_counts() {
+    // A coordinator whose default `[sketch]` spec is pooled stores pooled
+    // sketch values in the `save_index` sidecar. Those bytes must be a
+    // pure function of (spec string, corpus): identical across
+    // independently-built registries ("processes") and across index shard
+    // counts — sharding routes postings, it must never touch sketches.
+    use mixtab::coordinator::config::CoordinatorConfig;
+    use mixtab::coordinator::metrics::Metrics;
+    use mixtab::coordinator::SchemeRegistry;
+    let dir = std::env::temp_dir().join("mixtab_sharded_props_pooled_sidecar");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec: SketchSpec = "minhash(k=32,pool=256,hash=mixed_tab,seed=21)".parse().unwrap();
+    let sets = corpus(30, 23);
+    let mut sidecars: Vec<Vec<u8>> = Vec::new();
+    for n in [1usize, 2, 4] {
+        let cfg = CoordinatorConfig {
+            enable_pjrt: false,
+            sketch: Some(spec),
+            lsh_k: 4,
+            lsh_l: 5,
+            lsh_shards: n,
+            ..Default::default()
+        };
+        let mut index_bytes: Vec<Vec<Vec<u8>>> = Vec::new();
+        for run in 0..2 {
+            let metrics = Metrics::new();
+            let reg = SchemeRegistry::from_config(&cfg, &metrics, None);
+            let scheme = reg.default_scheme();
+            for (i, s) in sets.iter().enumerate() {
+                scheme.insert(i as u32, s.clone()).unwrap();
+            }
+            let base = dir.join(format!("snap_n{n}_r{run}"));
+            let base_str = base.to_str().unwrap().to_string();
+            scheme.save_index(&base_str).unwrap();
+            let mut files = vec![std::fs::read(&base).unwrap()];
+            for i in 0..n {
+                let p = ShardedIndex::shard_path(&base, i);
+                if p.exists() {
+                    files.push(std::fs::read(&p).unwrap());
+                }
+            }
+            index_bytes.push(files);
+            sidecars.push(std::fs::read(format!("{base_str}.sketches")).unwrap());
+        }
+        assert_eq!(
+            index_bytes[0], index_bytes[1],
+            "N={n}: index bytes diverged across registries"
+        );
+    }
+    for w in sidecars.windows(2) {
+        assert_eq!(
+            w[0], w[1],
+            "pooled sidecar bytes diverged across shard counts / registries"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
